@@ -1,0 +1,42 @@
+//! Quickstart: evaluate the harmonic potential (paper Eq. 5.1) of 20 000
+//! random vortices with the adaptive FMM and check it against direct
+//! summation.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use fmm2d::config::FmmConfig;
+use fmm2d::direct;
+use fmm2d::expansion::Kernel;
+use fmm2d::fmm::{evaluate, FmmOptions, PHASE_NAMES};
+use fmm2d::util::rng::Pcg64;
+use fmm2d::util::stats::max_rel_error;
+use fmm2d::workload;
+
+fn main() {
+    let n = 20_000;
+    let mut rng = Pcg64::seed_from_u64(42);
+    let (points, gammas) = workload::uniform_square(n, &mut rng);
+
+    // p = 17 gives a relative tolerance of about 1e-6 (paper §5.1);
+    // N_d = 45 sources per box is the paper's GPU-optimal population.
+    let opts = FmmOptions {
+        cfg: FmmConfig::new(17, 45),
+        kernel: Kernel::Harmonic,
+        symmetric_p2p: true,
+    };
+
+    let out = evaluate(&points, &gammas, &opts);
+    println!("evaluated {n} potentials in {:.1} ms", out.times.total() * 1e3);
+    for (i, name) in PHASE_NAMES.iter().enumerate() {
+        println!("  {name:<8} {:>8.3} ms", out.times.0[i] * 1e3);
+    }
+
+    // verify against O(N²) direct summation
+    let exact = direct::eval_symmetric(Kernel::Harmonic, &points, &gammas);
+    let approx: Vec<f64> = out.potentials.iter().map(|c| c.abs()).collect();
+    let exact_abs: Vec<f64> = exact.iter().map(|c| c.abs()).collect();
+    let err = max_rel_error(&approx, &exact_abs, 1e-12);
+    println!("max relative error vs direct: {err:.2e} (target ≈ 1e-6 at p = 17)");
+    assert!(err < 1e-5);
+    println!("quickstart OK");
+}

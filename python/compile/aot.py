@@ -1,0 +1,161 @@
+"""AOT lowering: JAX model → HLO *text* artifacts + .meta manifests.
+
+HLO text (not `.serialize()`d protos) is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--only NAME]
+Idempotent: artifacts are rewritten only when missing or when this
+package's sources are newer (`make artifacts` relies on that).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import ARTIFACT_CONFIGS, DIRECT_N, PackConfig, make_fmm_fn
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange).
+
+    `print_large_constants=True` is ESSENTIAL: the default printer elides
+    any constant larger than a few elements as `constant({...})`, which the
+    downstream HLO parser silently accepts as zeros — the baked shift
+    structure matrices would vanish and the artifact would compute garbage
+    (found the hard way; pinned by test_hlo_text_contains_constants).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_fmm(cfg: PackConfig, use_pallas: bool) -> str:
+    fn = make_fmm_fn(cfg, use_pallas=use_pallas)
+    lowered = jax.jit(fn).lower(*cfg.example_args())
+    return to_hlo_text(lowered)
+
+
+def lower_direct(n: int) -> str:
+    spec = jax.ShapeDtypeStruct((n,), jax.numpy.float64)
+    lowered = jax.jit(model.direct_eval).lower(spec, spec, spec, spec)
+    return to_hlo_text(lowered)
+
+
+def fmm_meta(name: str, cfg: PackConfig, variant: str = "jnp") -> dict:
+    return {
+        "name": name,
+        "kind": "fmm",
+        # 'jnp': hot spots lowered from the pure-jnp reference — the fast
+        #   execution variant on the CPU PJRT backend (interpret-mode
+        #   Pallas lowers to while-loops the old CPU runtime executes
+        #   slowly; see EXPERIMENTS.md §Perf L2).
+        # 'pallas': hot spots lowered THROUGH the L1 Pallas kernels — the
+        #   TPU-design artifact; numerically identical (pinned by
+        #   runtime_e2e::pallas_variant_matches_jnp_variant).
+        "variant": variant,
+        "levels": cfg.levels,
+        "p": cfg.p,
+        "nmax": cfg.nmax,
+        "kfar": list(cfg.kfar),
+        "knear": cfg.knear,
+        "ksp": cfg.ksp,
+        "nbtot": cfg.nbtot,
+        "inputs": [
+            {"name": n_, "shape": list(shape), "dtype": dt}
+            for (n_, shape, dt) in cfg.input_specs()
+        ],
+        "outputs": [
+            {"name": "pot_re", "shape": [cfg.n_leaves, cfg.nmax], "dtype": "f64"},
+            {"name": "pot_im", "shape": [cfg.n_leaves, cfg.nmax], "dtype": "f64"},
+        ],
+    }
+
+
+def direct_meta(name: str, n: int) -> dict:
+    return {
+        "name": name,
+        "kind": "direct",
+        "n": n,
+        "inputs": [
+            {"name": k, "shape": [n], "dtype": "f64"}
+            for k in ("pos_re", "pos_im", "gam_re", "gam_im")
+        ],
+        "outputs": [
+            {"name": "pot_re", "shape": [n], "dtype": "f64"},
+            {"name": "pot_im", "shape": [n], "dtype": "f64"},
+        ],
+    }
+
+
+def _sources_mtime() -> float:
+    pkg = Path(__file__).parent
+    return max(f.stat().st_mtime for f in pkg.rglob("*.py"))
+
+
+def emit(out_dir: Path, only: str | None = None, force: bool = False) -> int:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    stale_after = _sources_mtime()
+    jobs = []
+    for name, cfg in ARTIFACT_CONFIGS.items():
+        jobs.append((name, "fmm-jnp", cfg))
+        if not name.endswith("_tight"):
+            # the TPU-design (Pallas) variant tracks the wide bucket only —
+            # it exists for layer-parity validation, not fast CPU execution
+            jobs.append((f"{name}_pallas", "fmm-pallas", cfg))
+    jobs.append((f"direct_n{DIRECT_N}", "direct", DIRECT_N))
+    written = 0
+    for name, kind, payload in jobs:
+        if only and name != only:
+            continue
+        hlo_path = out_dir / f"{name}.hlo.txt"
+        meta_path = out_dir / f"{name}.meta.json"
+        if (not force and hlo_path.exists() and meta_path.exists()
+                and hlo_path.stat().st_mtime >= stale_after):
+            print(f"[aot] {name}: up to date")
+            continue
+        print(f"[aot] lowering {name} …", flush=True)
+        if kind == "fmm-jnp":
+            text = lower_fmm(payload, use_pallas=False)
+            meta = fmm_meta(name, payload, "jnp")
+        elif kind == "fmm-pallas":
+            text = lower_fmm(payload, use_pallas=True)
+            meta = fmm_meta(name, payload, "pallas")
+        else:
+            text = lower_direct(payload)
+            meta = direct_meta(name, payload)
+        hlo_path.write_text(text)
+        meta_path.write_text(json.dumps(meta, indent=1))
+        print(f"[aot] wrote {hlo_path} ({len(text) / 1e6:.1f} MB)")
+        written += 1
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=str(Path(__file__).parents[2] / "artifacts"))
+    ap.add_argument("--only", default=None, help="emit a single artifact")
+    ap.add_argument("--force", action="store_true")
+    # tolerated for Makefile compatibility
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = Path(args.out).parent if args.out else Path(args.out_dir)
+    emit(out_dir, args.only, args.force)
+    print("[aot] done", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Complex arithmetic on (re, im) pairs of f64 arrays.
+
+The xla crate's PJRT bridge exchanges plain f64 tensors, so the whole
+compile path represents complex values as explicit (re, im) pairs. These
+helpers keep the L2 model readable; everything is shape-polymorphic.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+Pair = tuple  # (re, im), each a jnp.ndarray
+
+
+def cpair(re, im) -> Pair:
+    return (jnp.asarray(re), jnp.asarray(im))
+
+
+def cadd(a: Pair, b: Pair) -> Pair:
+    return (a[0] + b[0], a[1] + b[1])
+
+
+def csub(a: Pair, b: Pair) -> Pair:
+    return (a[0] - b[0], a[1] - b[1])
+
+
+def cneg(a: Pair) -> Pair:
+    return (-a[0], -a[1])
+
+
+def cmul(a: Pair, b: Pair) -> Pair:
+    return (a[0] * b[0] - a[1] * b[1], a[0] * b[1] + a[1] * b[0])
+
+
+def cscale(a: Pair, s) -> Pair:
+    return (a[0] * s, a[1] * s)
+
+
+def cabs2(a: Pair):
+    return a[0] * a[0] + a[1] * a[1]
+
+
+def cinv(a: Pair, guard=None) -> Pair:
+    """1/a. With `guard`, entries where |a|² == 0 (or guard == 0) yield 0
+    instead of inf — used for masked/padded lanes."""
+    d = cabs2(a)
+    if guard is None:
+        s = 1.0 / d
+    else:
+        ok = (d > 0) & (guard > 0)
+        s = jnp.where(ok, 1.0 / jnp.where(ok, d, 1.0), 0.0)
+    return (a[0] * s, -a[1] * s)
+
+
+def cpowers(a: Pair, n: int) -> Pair:
+    """Stacked powers [a^0, a^1, …, a^n] along a new trailing axis:
+    returns (re, im) each of shape `a.shape + (n+1,)`.
+
+    Cumulative products (n multiplications), mirroring the `powi_table`
+    of the Rust layer so both layers agree bit-for-bit in structure."""
+    re = [jnp.ones_like(a[0])]
+    im = [jnp.zeros_like(a[1])]
+    for _ in range(n):
+        nr = re[-1] * a[0] - im[-1] * a[1]
+        ni = re[-1] * a[1] + im[-1] * a[0]
+        re.append(nr)
+        im.append(ni)
+    return (jnp.stack(re, axis=-1), jnp.stack(im, axis=-1))
+
+
+def cmatmul_const(a: Pair, m) -> Pair:
+    """(complex batch) @ (real constant matrix), the MXU-shaped core:
+    a has shape [..., K], m is [K, L] real; result [..., L]."""
+    return (a[0] @ m, a[1] @ m)

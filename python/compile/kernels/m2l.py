@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: the M2L translation core.
+
+Second-hottest phase of Table 5.1 (11 %). The paper evaluates each M2L
+shift as a triangular recurrence in shared memory (Algorithm 3.6, two
+threads per shift). The TPU re-think (DESIGN.md §Hardware-Adaptation):
+the scaled shift *is* multiplication by a constant structure matrix
+`T[l,k] = C(k+l−1, l)` — pre-scale and post-scale are diagonal. So the
+core becomes a batched `[I, p+1] × [p+1, p+1]` real matmul (4 per complex
+batch), exactly the MXU's shape. `T` is baked into the kernel as a
+compile-time constant, the analogue of the paper keeping the shift
+stencil in registers/shared memory.
+
+The batch dimension I (all M2L interactions of one level) is tiled by
+`TILE_I` rows per grid step; at p = 17 a tile holds 2·128·18 f64 ≈ 37 kB —
+VMEM-trivial, and the matmul is MXU-eligible (the padding from p+1 = 18 to
+the 128-lane MXU tile is what a production TPU kernel would accept at
+this p, amortized across the 4 real matmuls).
+
+`interpret=True` (CPU PJRT cannot run Mosaic); validated against
+`ref.m2l_core_ref` and transitively against the Rust recurrence.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE_I = 128
+
+
+def _kernel(are_ref, aim_ref, tt_ref, ore_ref, oim_ref):
+    # tt is the transposed structure matrix; Pallas requires constants to be
+    # plumbed as inputs, so `m2l_core_pallas` feeds it as a (grid-invariant)
+    # operand — the BlockSpec maps every grid step to the same [p+1, p+1]
+    # block, i.e. it stays resident in VMEM across the batch sweep.
+    tt = tt_ref[...]
+    ore_ref[...] = jnp.dot(are_ref[...], tt, precision="highest")
+    oim_ref[...] = jnp.dot(aim_ref[...], tt, precision="highest")
+
+
+def m2l_core_pallas(ahat_re, ahat_im, p: int):
+    """Apply the constant M2L core to pre-scaled coefficients.
+
+    ahat_*: [I, p+1] (I padded to a multiple of TILE_I internally).
+    Returns (bhat_re, bhat_im): [I, p+1].
+    """
+    i, w = ahat_re.shape
+    assert w == p + 1
+    pad = (-i) % TILE_I
+    if pad:
+        ahat_re = jnp.pad(ahat_re, ((0, pad), (0, 0)))
+        ahat_im = jnp.pad(ahat_im, ((0, pad), (0, 0)))
+    rows = ahat_re.shape[0]
+    tt = jnp.asarray(ref.m2l_structure_matrix(p).T)
+    spec = pl.BlockSpec((TILE_I, p + 1), lambda t: (t, 0))
+    mat_spec = pl.BlockSpec((p + 1, p + 1), lambda t: (0, 0))
+    out_re, out_im = pl.pallas_call(
+        _kernel,
+        grid=(rows // TILE_I,),
+        in_specs=[spec, spec, mat_spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, p + 1), ahat_re.dtype),
+            jax.ShapeDtypeStruct((rows, p + 1), ahat_im.dtype),
+        ],
+        interpret=True,
+    )(ahat_re, ahat_im, tt)
+    return out_re[:i], out_im[:i]

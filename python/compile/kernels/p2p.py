@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: near-field direct evaluation (P2P, Algorithm 3.7).
+
+The P2P phase is the single most expensive part of the algorithm
+(43 % of GPU runtime in Table 5.1), so it is the primary L1 kernel.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's CUDA kernel
+stages source points through a 64-slot *shared-memory cache* per thread
+block, one block per box. Here, the near-field sources of each box are
+pre-gathered by XLA into a padded `[B, S]` layout (S = Knear·nmax) and the
+Pallas grid walks one box tile per step; `BlockSpec` places the box's
+targets `[1, nmax]` and its gathered sources `[1, S]` in VMEM, replacing
+the manual cache, and the `[nmax, S]` pairwise tile is evaluated on the
+VPU in one vectorized sweep — there is no intra-tile synchronization to
+manage at all, which is the part of the CUDA code the paper spends
+Algorithm 3.7 on.
+
+VMEM at the default config (nmax=64, S=16·64=1024): 7 operand rows
+(~60 kB) plus the f64 [64, 1024] pair tile ≈ 3 × 0.5 MB — comfortably
+inside the ~16 MB/core budget; see DESIGN.md §7 for the footprint table.
+
+`interpret=True` everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; correctness is validated against `ref.p2p_ref`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _p2p_kernel(tx_ref, ty_ref, sx_ref, sy_ref, gre_ref, gim_ref, sm_ref,
+                ore_ref, oim_ref):
+    # one grid step = one leaf box
+    tx = tx_ref[...]  # [1, n]
+    ty = ty_ref[...]
+    sx = sx_ref[...]  # [1, S]
+    sy = sy_ref[...]
+    gre = gre_ref[...]
+    gim = gim_ref[...]
+    sm = sm_ref[...]
+
+    n = tx.shape[1]
+    # pairwise tile [n, S]: z_s − z_t
+    dx = sx - tx.reshape(n, 1)
+    dy = sy - ty.reshape(n, 1)
+    den = dx * dx + dy * dy
+    ok = (den > 0) & (sm > 0)
+    w = jnp.where(ok, 1.0 / jnp.where(ok, den, 1.0), 0.0)
+    # Γ · conj(z_s − z_t) / |z_s − z_t|²
+    phi_re = ((gre * dx + gim * dy) * w).sum(axis=1)
+    phi_im = ((gim * dx - gre * dy) * w).sum(axis=1)
+    ore_ref[...] = phi_re.reshape(1, n)
+    oim_ref[...] = phi_im.reshape(1, n)
+
+
+def p2p_pallas(tx, ty, sx, sy, gre, gim, smask):
+    """Near-field potentials.
+
+    tx, ty: targets [B, n]; sx…smask: gathered sources [B, S].
+    Returns (phi_re, phi_im), each [B, n].
+    """
+    b, n = tx.shape
+    s = sx.shape[1]
+    tgt_spec = pl.BlockSpec((1, n), lambda i: (i, 0))
+    src_spec = pl.BlockSpec((1, s), lambda i: (i, 0))
+    return pl.pallas_call(
+        _p2p_kernel,
+        grid=(b,),
+        in_specs=[tgt_spec, tgt_spec, src_spec, src_spec, src_spec, src_spec,
+                  src_spec],
+        out_specs=[tgt_spec, tgt_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), tx.dtype),
+            jax.ShapeDtypeStruct((b, n), tx.dtype),
+        ],
+        interpret=True,
+    )(tx, ty, sx, sy, gre, gim, smask)

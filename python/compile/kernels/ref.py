@@ -1,0 +1,82 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has its reference here, written in the
+most transparent formulation possible; pytest pins kernel == ref across
+shapes and seeds (hypothesis sweeps), and the Rust `expansion::matrices`
+tests pin the same linear maps on the coordinator side.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from math import comb
+
+
+def m2l_structure_matrix(p: int) -> np.ndarray:
+    """The constant M2L core `T[l, k] = C(k+l-1, l)` (column 0 zero —
+    `a_0` is handled outside; the harness kernel is harmonic, a_0 = 0).
+    Must match `fmm2d::expansion::matrices::m2l_matrix`."""
+    t = np.zeros((p + 1, p + 1), dtype=np.float64)
+    for l in range(p + 1):
+        for k in range(1, p + 1):
+            t[l, k] = comb(k + l - 1, l)
+    return t
+
+
+def m2m_structure_matrix(p: int) -> np.ndarray:
+    """`S[l, k] = C(l-1, k-1)` for 1 <= k <= l (else 0)."""
+    s = np.zeros((p + 1, p + 1), dtype=np.float64)
+    for l in range(1, p + 1):
+        for k in range(1, l + 1):
+            s[l, k] = comb(l - 1, k - 1)
+    return s
+
+
+def l2l_structure_matrix(p: int) -> np.ndarray:
+    """`U[l, k] = (-1)^{k-l} C(k, l)` for k >= l (else 0)."""
+    u = np.zeros((p + 1, p + 1), dtype=np.float64)
+    for l in range(p + 1):
+        for k in range(l, p + 1):
+            u[l, k] = ((-1.0) ** (k - l)) * comb(k, l)
+    return u
+
+
+def m2l_core_ref(ahat_re, ahat_im, p: int):
+    """Reference for the M2L core: `b̂ = â @ T^T` on pre-scaled
+    coefficients, shapes [I, p+1] -> [I, p+1]."""
+    t = jnp.asarray(m2l_structure_matrix(p).T)
+    return ahat_re @ t, ahat_im @ t
+
+
+def p2p_ref(tx, ty, sx, sy, gre, gim, smask):
+    """Reference near-field evaluation.
+
+    Shapes: targets [B, n], gathered sources [B, S]; returns [B, n] pair.
+    Contribution of source s at target t: Γ_s / (z_s − z_t); zero-distance
+    pairs (self interactions and padded lanes) contribute 0.
+    """
+    dx = sx[:, None, :] - tx[:, :, None]  # [B, n, S]
+    dy = sy[:, None, :] - ty[:, :, None]
+    den = dx * dx + dy * dy
+    ok = (den > 0) & (smask[:, None, :] > 0)
+    w = jnp.where(ok, 1.0 / jnp.where(ok, den, 1.0), 0.0)
+    gr = gre[:, None, :]
+    gi = gim[:, None, :]
+    # Γ · conj(z_s − z_t) / |z_s − z_t|²
+    phi_re = ((gr * dx + gi * dy) * w).sum(axis=-1)
+    phi_im = ((gi * dx - gr * dy) * w).sum(axis=-1)
+    return phi_re, phi_im
+
+
+def direct_ref(px, py, gre, gim):
+    """O(N²) direct summation at the sources themselves ([N] arrays)."""
+    dx = px[None, :] - px[:, None]
+    dy = py[None, :] - py[:, None]
+    den = dx * dx + dy * dy
+    ok = den > 0
+    w = jnp.where(ok, 1.0 / jnp.where(ok, den, 1.0), 0.0)
+    phi_re = ((gre[None, :] * dx + gim[None, :] * dy) * w).sum(axis=-1)
+    phi_im = ((gim[None, :] * dx - gre[None, :] * dy) * w).sum(axis=-1)
+    return phi_re, phi_im

@@ -1,0 +1,279 @@
+"""L2: the full FMM computational phase as one fused JAX function.
+
+Given the pyramid packed into fixed-shape tensors (positions, strengths,
+masks, per-level centers and padded interaction lists — produced by the
+Rust `packing` module at run time, or by `treepack.py` in tests), this
+computes P2M → M2M↑ → (M2L + P2L) → L2L↓ → (L2P + M2P) → P2P and returns
+the potential at every particle slot.
+
+The static pyramid layout (4^l boxes per level, children of box b at
+4b..4b+4) is what makes a *fixed-shape* formulation possible at all — the
+adaptivity lives entirely in the box geometry and the interaction lists,
+not in the shapes. This mirrors the paper's observation that the
+asymmetric mesh admits "a static layout of memory" (§2), which it needs
+for CUDA and we need for AOT-compiled XLA.
+
+Kernel: harmonic (Eq. 5.1) ⇒ a_0 ≡ 0 throughout; the log-kernel a_0
+paths exist on the Rust side, which owns the general-kernel serial code.
+
+Python here is build-time only: `aot.py` lowers `fmm_eval` to HLO text
+once per configuration; nothing in this package runs at request time.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import cplx, ref
+from .kernels.m2l import m2l_core_pallas
+from .kernels.p2p import p2p_pallas
+
+
+@dataclass(frozen=True)
+class PackConfig:
+    """Static shape configuration of one AOT artifact."""
+
+    levels: int          # pyramid refinement levels L (leaves = 4^L)
+    p: int               # expansion order
+    nmax: int            # particle slots per leaf box
+    kfar: tuple          # M2L list pad per level 1..L
+    knear: int           # near-field list pad (finest level, self included)
+    ksp: int             # P2L/M2P list pad (finest level)
+
+    @property
+    def n_leaves(self) -> int:
+        return 4 ** self.levels
+
+    @property
+    def nbtot(self) -> int:
+        """Total boxes over levels 0..L (centers array length)."""
+        return (4 ** (self.levels + 1) - 1) // 3
+
+    def level_offset(self, l: int) -> int:
+        return (4 ** l - 1) // 3
+
+    def input_specs(self):
+        """Ordered (name, shape, dtype) list — the artifact ABI recorded in
+        the .meta manifest and consumed by the Rust runtime."""
+        nl, nmax = self.n_leaves, self.nmax
+        specs = [
+            ("pos_re", (nl, nmax), "f64"),
+            ("pos_im", (nl, nmax), "f64"),
+            ("gam_re", (nl, nmax), "f64"),
+            ("gam_im", (nl, nmax), "f64"),
+            ("mask", (nl, nmax), "f64"),
+            ("ctr_re", (self.nbtot,), "f64"),
+            ("ctr_im", (self.nbtot,), "f64"),
+        ]
+        for l in range(1, self.levels + 1):
+            specs.append((f"m2l_idx_{l}", (4 ** l, self.kfar[l - 1]), "i32"))
+        specs += [
+            ("near_idx", (nl, self.knear), "i32"),
+            ("p2l_idx", (nl, self.ksp), "i32"),
+            ("m2p_idx", (nl, self.ksp), "i32"),
+        ]
+        return specs
+
+    def example_args(self):
+        """ShapeDtypeStructs for jax.jit(...).lower()."""
+        dt = {"f64": jnp.float64, "i32": jnp.int32}
+        return [
+            jax.ShapeDtypeStruct(shape, dt[dtype])
+            for (_, shape, dtype) in self.input_specs()
+        ]
+
+
+def _gather_safe(idx):
+    """(safe_index, valid_f64) for -1-padded gather lists."""
+    valid = (idx >= 0).astype(jnp.float64)
+    safe = jnp.maximum(idx, 0)
+    return safe, valid
+
+
+def _powers_masked(vec, valid, n):
+    """Powers of a complex pair `vec` masked to 1 where invalid (avoids
+    inf/NaN leaking through 0·inf)."""
+    re = jnp.where(valid > 0, vec[0], 1.0)
+    im = jnp.where(valid > 0, vec[1], 0.0)
+    return cplx.cpowers((re, im), n)
+
+
+def fmm_eval(cfg: PackConfig, *args, use_pallas: bool = True):
+    """The fused FMM computational phase. Returns (pot_re, pot_im),
+    each [4^L, nmax] in the leaf/slot layout of the inputs."""
+    names = [s[0] for s in cfg.input_specs()]
+    a = dict(zip(names, args))
+    L, p, nmax, nl = cfg.levels, cfg.p, cfg.nmax, cfg.n_leaves
+
+    pos = (a["pos_re"], a["pos_im"])
+    gam = (a["gam_re"], a["gam_im"])
+    mask = a["mask"]
+
+    # per-level center pairs
+    ctr = []
+    for l in range(L + 1):
+        off, nb = cfg.level_offset(l), 4 ** l
+        ctr.append((a["ctr_re"][off:off + nb], a["ctr_im"][off:off + nb]))
+
+    s_mat = jnp.asarray(ref.m2m_structure_matrix(p).T)
+    u_mat = jnp.asarray(ref.l2l_structure_matrix(p).T)
+
+    # ---- P2M: leaf multipole expansions --------------------------------
+    # a_j = −Σ_i Γ_i t_i^{j−1},  t = z_i − z_box
+    t = cplx.csub(pos, (ctr[L][0][:, None], ctr[L][1][:, None]))
+    tp = _powers_masked(t, mask, p - 1)          # [nl, nmax, p]
+    gm = (gam[0] * mask, gam[1] * mask)
+    term = cplx.cmul((gm[0][..., None], gm[1][..., None]), tp)
+    coeff_hi = (-term[0].sum(axis=1), -term[1].sum(axis=1))  # a_1..a_p
+    zero_col = jnp.zeros((nl, 1), dtype=jnp.float64)
+    mult = {L: (jnp.concatenate([zero_col, coeff_hi[0]], axis=1),
+                jnp.concatenate([zero_col, coeff_hi[1]], axis=1))}
+
+    # ---- M2M: upward pass ----------------------------------------------
+    for l in range(L, 0, -1):
+        nb = 4 ** l
+        par = jnp.arange(nb) // 4
+        zc = ctr[l]
+        zp = (ctr[l - 1][0][par], ctr[l - 1][1][par])
+        d = cplx.csub(zc, zp)                    # [nb]
+        dinv = cplx.cinv(d)
+        dpow = cplx.cpowers(d, p)                # [nb, p+1]
+        dipow = cplx.cpowers(dinv, p)
+        ahat = cplx.cmul(mult[l], dipow)
+        core = cplx.cmatmul_const(ahat, s_mat)
+        shifted = cplx.cmul(core, dpow)          # [nb, p+1]
+        parent = (shifted[0].reshape(nb // 4, 4, p + 1).sum(axis=1),
+                  shifted[1].reshape(nb // 4, 4, p + 1).sum(axis=1))
+        mult[l - 1] = parent
+
+    # ---- M2L (+ P2L): far field into local expansions -------------------
+    local = {}
+    for l in range(1, L + 1):
+        nb = 4 ** l
+        idx = a[f"m2l_idx_{l}"]
+        safe, valid = _gather_safe(idx)          # [nb, K]
+        asrc = (mult[l][0][safe], mult[l][1][safe])   # [nb, K, p+1]
+        zsrc = (ctr[l][0][safe], ctr[l][1][safe])
+        r = cplx.csub((ctr[l][0][:, None], ctr[l][1][:, None]), zsrc)
+        ripow = _powers_masked(cplx.cinv(r, valid), valid, p)  # r^{-k}
+        ahat = cplx.cmul(asrc, ripow)
+        flat = (ahat[0].reshape(-1, p + 1), ahat[1].reshape(-1, p + 1))
+        if use_pallas:
+            bhat = m2l_core_pallas(flat[0], flat[1], p)
+        else:
+            bhat = ref.m2l_core_ref(flat[0], flat[1], p)
+        bhat = (bhat[0].reshape(nb, -1, p + 1), bhat[1].reshape(nb, -1, p + 1))
+        alt = jnp.asarray([(-1.0) ** j for j in range(p + 1)])
+        scale = ripow[0] * alt, ripow[1] * alt
+        b = cplx.cmul(bhat, scale)
+        w = valid[..., None]
+        local[l] = ((b[0] * w).sum(axis=1), (b[1] * w).sum(axis=1))
+
+    # P2L: particles of strongly-coupled larger boxes → local expansions,
+    # b_l += Σ Γ / t^{l+1},  t = z_src_particle − z_dst_center
+    safe, valid = _gather_safe(a["p2l_idx"])     # [nl, ksp]
+    spos = (pos[0][safe], pos[1][safe])          # [nl, ksp, nmax]
+    sgam = (gam[0][safe], gam[1][safe])
+    smask = mask[safe] * valid[..., None]
+    tt = cplx.csub(spos, (ctr[L][0][:, None, None], ctr[L][1][:, None, None]))
+    tinv = cplx.cinv(tt, smask)
+    tipow = _powers_masked(tinv, smask, p + 1)   # t^{-(l+1)} at slot l+1
+    gmask = (sgam[0] * smask, sgam[1] * smask)
+    contrib = cplx.cmul((gmask[0][..., None], gmask[1][..., None]),
+                        (tipow[0][..., 1:], tipow[1][..., 1:]))
+    p2l_add = (contrib[0].sum(axis=(1, 2)), contrib[1].sum(axis=(1, 2)))
+    local[L] = (local[L][0] + p2l_add[0], local[L][1] + p2l_add[1])
+
+    # ---- L2L: downward pass ---------------------------------------------
+    for l in range(1, L):
+        nb = 4 ** (l + 1)
+        par = jnp.arange(nb) // 4
+        bp = (local[l][0][par], local[l][1][par])
+        zp = (ctr[l][0][par], ctr[l][1][par])
+        r = cplx.csub(zp, ctr[l + 1])            # z_p − z_c
+        rpow = cplx.cpowers(r, p)
+        ripow = cplx.cpowers(cplx.cinv(r), p)
+        bhat = cplx.cmul(bp, rpow)
+        core = cplx.cmatmul_const(bhat, u_mat)
+        add = cplx.cmul(core, ripow)
+        local[l + 1] = (local[l + 1][0] + add[0], local[l + 1][1] + add[1])
+
+    # ---- L2P: evaluate local expansions at the particles ----------------
+    w = cplx.csub(pos, (ctr[L][0][:, None], ctr[L][1][:, None]))
+    acc = (jnp.broadcast_to(local[L][0][:, p][:, None], (nl, nmax)),
+           jnp.broadcast_to(local[L][1][:, p][:, None], (nl, nmax)))
+    for j in range(p - 1, -1, -1):
+        acc = cplx.cmul(acc, w)
+        acc = (acc[0] + local[L][0][:, j][:, None],
+               acc[1] + local[L][1][:, j][:, None])
+    phi = acc
+
+    # M2P: multipoles of strongly-coupled smaller boxes evaluated directly
+    safe, valid = _gather_safe(a["m2p_idx"])     # [nl, ksp]
+    am = (mult[L][0][safe], mult[L][1][safe])    # [nl, ksp, p+1]
+    zsrc = (ctr[L][0][safe], ctr[L][1][safe])
+    t = cplx.csub((pos[0][:, None, :], pos[1][:, None, :]),
+                  (zsrc[0][..., None], zsrc[1][..., None]))  # [nl, ksp, nmax]
+    vmask = valid[..., None] * mask[:, None, :]
+    it = cplx.cinv(t, vmask)
+    macc = (jnp.zeros_like(it[0]), jnp.zeros_like(it[1]))
+    for j in range(p, 0, -1):
+        macc = (macc[0] + am[0][..., j][..., None],
+                macc[1] + am[1][..., j][..., None])
+        macc = cplx.cmul(macc, it)
+    phi = (phi[0] + (macc[0] * vmask).sum(axis=1),
+           phi[1] + (macc[1] * vmask).sum(axis=1))
+
+    # ---- P2P: near field (L1 Pallas kernel) ------------------------------
+    safe, valid = _gather_safe(a["near_idx"])    # [nl, knear]
+    sx = pos[0][safe].reshape(nl, -1)            # [nl, knear·nmax]
+    sy = pos[1][safe].reshape(nl, -1)
+    gre = gam[0][safe].reshape(nl, -1)
+    gim = gam[1][safe].reshape(nl, -1)
+    sm = (mask[safe] * valid[..., None]).reshape(nl, -1)
+    if use_pallas:
+        near = p2p_pallas(pos[0], pos[1], sx, sy, gre, gim, sm)
+    else:
+        near = ref.p2p_ref(pos[0], pos[1], sx, sy, gre, gim, sm)
+    phi = (phi[0] + near[0], phi[1] + near[1])
+
+    return phi[0] * mask, phi[1] * mask
+
+
+def direct_eval(px, py, gre, gim):
+    """O(N²) direct-summation model (the break-even baseline artifact)."""
+    return ref.direct_ref(px, py, gre, gim)
+
+
+def make_fmm_fn(cfg: PackConfig, use_pallas: bool = True):
+    """The jit-able single-config entry point for AOT lowering."""
+    return partial(fmm_eval, cfg, use_pallas=use_pallas)
+
+
+# Named artifact configurations (kept in sync with DESIGN.md §4 and the
+# Rust runtime's expectations; `aot.py` emits one HLO per entry).
+ARTIFACT_CONFIGS = {
+    # Two pad buckets per depth: `_tight` fits near-uniform inputs with
+    # minimal padded work; the wide default absorbs the paper's worst case
+    # (σ=0.1 normal cloud, Fig. 5.8). The Rust runtime picks the smallest
+    # artifact whose pads fit the actual tree (EXPERIMENTS.md §Perf L2).
+    "fmm_l2_p8": PackConfig(levels=2, p=8, nmax=32, kfar=(4, 16), knear=16,
+                            ksp=8),
+    "fmm_l3_p17_tight": PackConfig(levels=3, p=17, nmax=64,
+                                   kfar=(4, 16, 48), knear=20, ksp=10),
+    "fmm_l3_p17": PackConfig(levels=3, p=17, nmax=64, kfar=(8, 24, 64),
+                             knear=32, ksp=40),
+    "fmm_l4_p17_tight": PackConfig(levels=4, p=17, nmax=64,
+                                   kfar=(4, 16, 48, 56), knear=20, ksp=12),
+    "fmm_l4_p17": PackConfig(levels=4, p=17, nmax=64, kfar=(8, 24, 64, 72),
+                             knear=32, ksp=48),
+}
+
+DIRECT_N = 2048

@@ -1,0 +1,203 @@
+"""Test-side pyramid builder + packer (numpy), mirroring the Rust
+`tree`/`connectivity`/`packing` modules.
+
+Used by pytest to exercise the fused model without the Rust coordinator,
+and by `aot.py` smoke checks. The semantics (median splits twice per box,
+eccentricity-guided axis, θ-criterion recursion from parent strong lists,
+finest-level P2L/M2P extraction) match the Rust implementation; exact
+tie-breaking may differ — irrelevant, since both sides feed whatever tree
+they built through the same HLO.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .model import PackConfig
+
+
+def _split_axis(rect):
+    x0, y0, x1, y1 = rect
+    return 0 if (x1 - x0) >= (y1 - y0) else 1
+
+
+def _median_split(pts, order, rect):
+    """Partition `order` (indices into pts) around the median along the
+    rect's major axis. Returns (left, right, rect_left, rect_right)."""
+    ax = _split_axis(rect)
+    coords = pts[order, ax]
+    n = len(order)
+    mid = n // 2
+    part = np.argpartition(coords, mid) if n > 1 else np.arange(n)
+    order = order[part]
+    if n > 1:
+        lo_max = pts[order[:mid], ax].max() if mid else rect[ax]
+        hi_min = pts[order[mid:], ax].min()
+        cut = 0.5 * (lo_max + hi_min)
+    else:
+        cut = coords[0] if n else rect[ax]
+    x0, y0, x1, y1 = rect
+    if ax == 0:
+        ra, rb = (x0, y0, cut, y1), (cut, y0, x1, y1)
+    else:
+        ra, rb = (x0, y0, x1, cut), (x0, cut, x1, y1)
+    return order[:mid], order[mid:], ra, rb
+
+
+class Pyramid:
+    def __init__(self, pts, levels):
+        n = len(pts)
+        assert n >= 4 ** levels, "fewer particles than leaf boxes"
+        self.levels = levels
+        self.rects = [[(pts[:, 0].min(), pts[:, 1].min(),
+                        pts[:, 0].max(), pts[:, 1].max())]]
+        orders = [np.arange(n)]
+        for l in range(levels):
+            next_rects, next_orders = [], []
+            for rect, order in zip(self.rects[l], orders):
+                la, lb, ra, rb = _median_split(pts, order, rect)
+                a0, a1, ra0, ra1 = _median_split(pts, la, ra)
+                b0, b1, rb0, rb1 = _median_split(pts, lb, rb)
+                next_rects += [ra0, ra1, rb0, rb1]
+                next_orders += [a0, a1, b0, b1]
+            self.rects.append(next_rects)
+            orders = next_orders
+        self.leaf_orders = orders  # original indices per leaf
+
+    def centers(self, l):
+        r = np.asarray(self.rects[l])
+        return 0.5 * (r[:, 0] + r[:, 2]), 0.5 * (r[:, 1] + r[:, 3])
+
+    def radii(self, l):
+        r = np.asarray(self.rects[l])
+        return 0.5 * np.hypot(r[:, 2] - r[:, 0], r[:, 3] - r[:, 1])
+
+
+def connectivity(pyr: Pyramid, theta=0.5):
+    """(weak[l] lists for l=1..L, near, p2l, m2p) as python lists."""
+    weak = [None]
+    strong_prev = [[0]]
+    for l in range(1, pyr.levels + 1):
+        nb = 4 ** l
+        cx, cy = pyr.centers(l)
+        rad = pyr.radii(l)
+        weak_l, strong_l = [], []
+        for b in range(nb):
+            wl, sl = [], []
+            for sp in strong_prev[b // 4]:
+                for c in range(4 * sp, 4 * sp + 4):
+                    d = np.hypot(cx[b] - cx[c], cy[b] - cy[c])
+                    big, small = max(rad[b], rad[c]), min(rad[b], rad[c])
+                    if big + theta * small <= theta * d:
+                        wl.append(c)
+                    else:
+                        sl.append(c)
+            weak_l.append(wl)
+            strong_l.append(sl)
+        weak.append(weak_l)
+        strong_prev = strong_l
+
+    nb = 4 ** pyr.levels
+    cx, cy = pyr.centers(pyr.levels)
+    rad = pyr.radii(pyr.levels)
+    near, p2l, m2p = [], [], []
+    for b in range(nb):
+        nl_, pl_, ml_ = [], [], []
+        for s in strong_prev[b]:
+            if s == b:
+                nl_.append(s)
+                continue
+            d = np.hypot(cx[b] - cx[s], cy[b] - cy[s])
+            big, small = max(rad[b], rad[s]), min(rad[b], rad[s])
+            if small + theta * big <= theta * d and rad[s] != rad[b]:
+                (pl_ if rad[s] > rad[b] else ml_).append(s)
+            else:
+                nl_.append(s)
+        near.append(nl_)
+        p2l.append(pl_)
+        m2p.append(ml_)
+    return weak, near, p2l, m2p
+
+
+def required_config(pyr: Pyramid, weak, near, p2l, m2p, p: int) -> PackConfig:
+    """Smallest PackConfig that holds this tree."""
+    kfar = tuple(max(1, max(len(w) for w in weak[l]))
+                 for l in range(1, pyr.levels + 1))
+    return PackConfig(
+        levels=pyr.levels,
+        p=p,
+        nmax=max(len(o) for o in pyr.leaf_orders),
+        kfar=kfar,
+        knear=max(len(x) for x in near),
+        ksp=max(1, max(max((len(x) for x in p2l), default=0),
+                       max((len(x) for x in m2p), default=0))),
+    )
+
+
+def pack(pts, gam, pyr: Pyramid, cfg: PackConfig, weak, near, p2l, m2p):
+    """Produce the model's input arrays (dict keyed by spec name)."""
+    nl, nmax = cfg.n_leaves, cfg.nmax
+    out = {
+        "pos_re": np.zeros((nl, nmax)),
+        "pos_im": np.zeros((nl, nmax)),
+        "gam_re": np.zeros((nl, nmax)),
+        "gam_im": np.zeros((nl, nmax)),
+        "mask": np.zeros((nl, nmax)),
+    }
+    for b, order in enumerate(pyr.leaf_orders):
+        k = len(order)
+        assert k <= nmax, f"box {b}: {k} > nmax={nmax}"
+        out["pos_re"][b, :k] = pts[order, 0]
+        out["pos_im"][b, :k] = pts[order, 1]
+        out["gam_re"][b, :k] = gam[order].real
+        out["gam_im"][b, :k] = gam[order].imag
+        out["mask"][b, :k] = 1.0
+
+    ctr_re = np.zeros(cfg.nbtot)
+    ctr_im = np.zeros(cfg.nbtot)
+    for l in range(cfg.levels + 1):
+        cx, cy = pyr.centers(l)
+        off = cfg.level_offset(l)
+        ctr_re[off:off + 4 ** l] = cx
+        ctr_im[off:off + 4 ** l] = cy
+    out["ctr_re"], out["ctr_im"] = ctr_re, ctr_im
+
+    def pad_lists(lists, k):
+        arr = np.full((len(lists), k), -1, dtype=np.int32)
+        for i, row in enumerate(lists):
+            assert len(row) <= k, f"row {i}: {len(row)} > pad {k}"
+            arr[i, :len(row)] = row
+        return arr
+
+    for l in range(1, cfg.levels + 1):
+        out[f"m2l_idx_{l}"] = pad_lists(weak[l], cfg.kfar[l - 1])
+    out["near_idx"] = pad_lists(near, cfg.knear)
+    out["p2l_idx"] = pad_lists(p2l, cfg.ksp)
+    out["m2p_idx"] = pad_lists(m2p, cfg.ksp)
+    return out
+
+
+def pack_points(pts, gam, levels, p, cfg=None, theta=0.5):
+    """End-to-end: build pyramid + connectivity, pack to `cfg` (or the
+    minimal config). Returns (cfg, args_list, unpack) where `unpack`
+    scatters a [nl, nmax] result back to input order."""
+    pyr = Pyramid(pts, levels)
+    weak, near, p2l, m2p = connectivity(pyr, theta)
+    need = required_config(pyr, weak, near, p2l, m2p, p)
+    if cfg is None:
+        cfg = need
+    else:
+        assert cfg.levels == levels and cfg.nmax >= need.nmax
+        assert all(a >= b for a, b in zip(cfg.kfar, need.kfar)), \
+            f"kfar {need.kfar} exceeds config {cfg.kfar}"
+        assert cfg.knear >= need.knear and cfg.ksp >= need.ksp
+    packed = pack(pts, gam, pyr, cfg, weak, near, p2l, m2p)
+    args = [packed[name] for (name, _, _) in cfg.input_specs()]
+
+    def unpack(grid):
+        res = np.zeros(len(pts), dtype=grid.dtype)
+        for b, order in enumerate(pyr.leaf_orders):
+            res[order] = np.asarray(grid)[b, :len(order)]
+        return res
+
+    return cfg, args, unpack

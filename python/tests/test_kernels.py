@@ -1,0 +1,130 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs the pure-jnp oracle,
+hypothesis-swept over shapes and seeds. This is the CORE correctness
+signal of the compile path."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import ref
+from compile.kernels.m2l import m2l_core_pallas
+from compile.kernels.p2p import p2p_pallas
+
+
+def rand_p2p_case(rng, b, n, s):
+    tx = rng.uniform(size=(b, n))
+    ty = rng.uniform(size=(b, n))
+    sx = rng.uniform(size=(b, s))
+    sy = rng.uniform(size=(b, s))
+    gre = rng.normal(size=(b, s))
+    gim = rng.normal(size=(b, s))
+    sm = (rng.uniform(size=(b, s)) > 0.2).astype(np.float64)
+    return tx, ty, sx, sy, gre, gim, sm
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 6),
+    n=st.sampled_from([1, 7, 16, 32]),
+    k=st.integers(1, 5),
+)
+def test_p2p_pallas_matches_ref(seed, b, n, k):
+    rng = np.random.default_rng(seed)
+    case = rand_p2p_case(rng, b, n, k * n)
+    got = p2p_pallas(*map(jnp.asarray, case))
+    want = ref.p2p_ref(*map(jnp.asarray, case))
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-12, atol=1e-12)
+
+
+def test_p2p_self_exclusion():
+    # a target coinciding with a source contributes nothing (the FMM feeds
+    # each box its own particles through the near list)
+    tx = jnp.asarray([[0.25, 0.75]])
+    ty = jnp.asarray([[0.5, 0.5]])
+    sx, sy = tx, ty  # sources identical to targets
+    gre = jnp.ones((1, 2))
+    gim = jnp.zeros((1, 2))
+    sm = jnp.ones((1, 2))
+    pr, pi = p2p_pallas(tx, ty, sx, sy, gre, gim, sm)
+    # Φ(z0) = 1/(z1−z0) = 1/0.5 = 2, Φ(z1) = −2
+    np.testing.assert_allclose(pr, [[2.0, -2.0]], atol=1e-13)
+    np.testing.assert_allclose(pi, [[0.0, 0.0]], atol=1e-13)
+
+
+def test_p2p_mask_blocks_contributions():
+    rng = np.random.default_rng(0)
+    tx, ty, sx, sy, gre, gim, _ = rand_p2p_case(rng, 2, 8, 24)
+    sm0 = np.zeros((2, 24))
+    pr, pi = p2p_pallas(*map(jnp.asarray, (tx, ty, sx, sy, gre, gim, sm0)))
+    assert float(jnp.abs(pr).max()) == 0.0
+    assert float(jnp.abs(pi).max()) == 0.0
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    i=st.sampled_from([1, 5, 128, 130, 257]),
+    p=st.sampled_from([1, 2, 8, 17, 42]),
+)
+def test_m2l_core_pallas_matches_ref(seed, i, p):
+    rng = np.random.default_rng(seed)
+    are = rng.normal(size=(i, p + 1))
+    aim = rng.normal(size=(i, p + 1))
+    got = m2l_core_pallas(jnp.asarray(are), jnp.asarray(aim), p)
+    want = ref.m2l_core_ref(jnp.asarray(are), jnp.asarray(aim), p)
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-12, atol=1e-12)
+    assert got[0].shape == (i, p + 1)
+
+
+def test_m2l_structure_matrix_values():
+    # T[l,k] = C(k+l-1, l); spot-check against hand values at p=3
+    t = ref.m2l_structure_matrix(3)
+    assert t[0, 1] == 1 and t[0, 2] == 1 and t[0, 3] == 1
+    assert t[1, 1] == 1 and t[1, 2] == 2 and t[1, 3] == 3
+    assert t[2, 2] == 3 and t[2, 3] == 6
+    assert (t[:, 0] == 0).all()
+
+
+def test_structure_matrices_consistency():
+    # M2M and L2L matrices are triangular with Pascal entries
+    s = ref.m2m_structure_matrix(5)
+    u = ref.l2l_structure_matrix(5)
+    assert s[3, 2] == 2  # C(2,1)
+    assert u[1, 3] == 3  # (-1)^2 C(3,1)
+    assert u[0, 1] == -1
+    # strictly triangular structure
+    assert np.allclose(np.triu(s, 1), 0)
+    assert np.allclose(np.tril(u, -1), 0)
+
+
+def test_m2l_end_to_end_vs_taylor():
+    """Full M2L (pre-scale → pallas core → post-scale) against a brute
+    Taylor re-expansion, the same cross-check as the Rust tests."""
+    rng = np.random.default_rng(7)
+    p = 17
+    a = np.zeros(p + 1, complex)
+    a[1:] = rng.normal(size=p) + 1j * rng.normal(size=p)
+    zi, zo = 0.1 + 0.2j, 1.4 - 0.6j
+    r = zo - zi
+    # reference local coefficients (series form)
+    from math import comb
+    b_ref = np.array([
+        (-1.0) ** l / r ** l
+        * sum(comb(k + l - 1, l) * a[k] / r ** k for k in range(1, p + 1))
+        for l in range(p + 1)
+    ])
+    # kernel path
+    ahat = np.array([a[k] / r ** k for k in range(p + 1)])
+    bre, bim = m2l_core_pallas(
+        jnp.asarray(ahat.real)[None, :], jnp.asarray(ahat.imag)[None, :], p
+    )
+    bhat = np.asarray(bre[0]) + 1j * np.asarray(bim[0])
+    b_got = np.array([(-1.0) ** l / r ** l * bhat[l] for l in range(p + 1)])
+    np.testing.assert_allclose(b_got, b_ref, rtol=1e-10)

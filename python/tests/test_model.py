@@ -1,0 +1,129 @@
+"""L2 model correctness: the fused FMM pipeline vs O(N²) direct
+summation, over the paper's three point distributions."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import treepack
+from compile.kernels import ref
+from compile.model import ARTIFACT_CONFIGS, PackConfig, fmm_eval
+
+
+def sample(dist, n, rng):
+    if dist == "uniform":
+        pts = rng.uniform(size=(n, 2))
+    elif dist == "normal":
+        pts = np.empty((n, 2))
+        i = 0
+        while i < n:
+            cand = rng.normal(0.5, 0.1, size=(n, 2))
+            ok = cand[((cand >= 0) & (cand <= 1)).all(axis=1)]
+            take = min(len(ok), n - i)
+            pts[i:i + take] = ok[:take]
+            i += take
+    elif dist == "layer":
+        x = rng.uniform(size=(n, 1))
+        y = np.empty((n, 1))
+        i = 0
+        while i < n:
+            cand = rng.normal(0.5, 0.05, size=(n, 1))
+            ok = cand[(cand[:, 0] >= 0) & (cand[:, 0] <= 1)]
+            take = min(len(ok), n - i)
+            y[i:i + take, 0] = ok[:take, 0]
+            i += take
+        pts = np.hstack([x, y])
+    gam = rng.normal(size=n) + 1j * rng.normal(size=n)
+    return pts, gam
+
+
+def direct_np(pts, gam):
+    z = pts[:, 0] + 1j * pts[:, 1]
+    dz = z[None, :] - z[:, None]  # z_j − z_i
+    with np.errstate(divide="ignore", invalid="ignore"):
+        inv = np.where(dz != 0, 1.0 / np.where(dz != 0, dz, 1.0), 0.0)
+    return (gam[None, :] * inv).sum(axis=1)
+
+
+def run_model(pts, gam, levels, p, use_pallas, cfg=None):
+    cfg, args, unpack = treepack.pack_points(pts, gam, levels, p, cfg=cfg)
+    out_re, out_im = fmm_eval(cfg, *map(jnp.asarray, args),
+                              use_pallas=use_pallas)
+    return unpack(np.asarray(out_re)) + 1j * unpack(np.asarray(out_im))
+
+
+@pytest.mark.parametrize("dist", ["uniform", "normal", "layer"])
+def test_fmm_matches_direct(dist):
+    rng = np.random.default_rng(42)
+    pts, gam = sample(dist, 600, rng)
+    phi = run_model(pts, gam, levels=2, p=17, use_pallas=False)
+    exact = direct_np(pts, gam)
+    err = np.abs(phi - exact).max() / np.abs(exact).max()
+    assert err < 1e-5, f"{dist}: rel err {err:.2e}"
+
+
+def test_fmm_pallas_equals_jnp_path():
+    """The Pallas kernels and the jnp reference produce the same fused
+    pipeline output to near machine precision."""
+    rng = np.random.default_rng(3)
+    pts, gam = sample("uniform", 400, rng)
+    a = run_model(pts, gam, levels=2, p=10, use_pallas=True)
+    b = run_model(pts, gam, levels=2, p=10, use_pallas=False)
+    np.testing.assert_allclose(a, b, rtol=1e-11, atol=1e-11)
+
+
+def test_accuracy_improves_with_p():
+    rng = np.random.default_rng(5)
+    pts, gam = sample("uniform", 500, rng)
+    exact = direct_np(pts, gam)
+    errs = []
+    for p in (4, 8, 16):
+        phi = run_model(pts, gam, levels=2, p=p, use_pallas=False)
+        errs.append(np.abs(phi - exact).max() / np.abs(exact).max())
+    assert errs[1] < errs[0] and errs[2] < errs[1], errs
+    assert errs[2] < 1e-4
+
+
+def test_three_levels_deep_tree():
+    rng = np.random.default_rng(11)
+    pts, gam = sample("normal", 1500, rng)
+    phi = run_model(pts, gam, levels=3, p=17, use_pallas=False)
+    exact = direct_np(pts, gam)
+    err = np.abs(phi - exact).max() / np.abs(exact).max()
+    assert err < 2e-5, f"rel err {err:.2e}"
+
+
+def test_padded_artifact_config_matches_minimal():
+    """Running under a padded named config equals the minimal config:
+    padding slots are inert."""
+    rng = np.random.default_rng(13)
+    pts, gam = sample("uniform", 500, rng)
+    a = run_model(pts, gam, 2, 8, use_pallas=False)
+    b = run_model(pts, gam, 2, 8, use_pallas=False,
+                  cfg=ARTIFACT_CONFIGS["fmm_l2_p8"])
+    np.testing.assert_allclose(a, b, rtol=1e-12, atol=1e-12)
+
+
+def test_direct_ref_matches_numpy():
+    rng = np.random.default_rng(17)
+    pts, gam = sample("uniform", 200, rng)
+    pr, pi = ref.direct_ref(*map(jnp.asarray, (
+        pts[:, 0], pts[:, 1], gam.real, gam.imag)))
+    exact = direct_np(pts, gam)
+    np.testing.assert_allclose(np.asarray(pr) + 1j * np.asarray(pi), exact,
+                               rtol=1e-11, atol=1e-11)
+
+
+def test_input_specs_abi_stable():
+    """The artifact ABI (input order) the Rust runtime hardcodes against."""
+    cfg = ARTIFACT_CONFIGS["fmm_l3_p17"]
+    names = [s[0] for s in cfg.input_specs()]
+    assert names == [
+        "pos_re", "pos_im", "gam_re", "gam_im", "mask", "ctr_re", "ctr_im",
+        "m2l_idx_1", "m2l_idx_2", "m2l_idx_3",
+        "near_idx", "p2l_idx", "m2p_idx",
+    ]
+    assert cfg.nbtot == 1 + 4 + 16 + 64

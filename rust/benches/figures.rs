@@ -1,0 +1,146 @@
+//! Macro-benchmark: regenerate every paper table/figure at the scaled
+//! default size (DESIGN.md §3). This is `fmm2d all` packaged as
+//! `cargo bench`, so `make bench` reproduces the whole evaluation section
+//! in one command; per-figure wall-clock is reported.
+//!
+//! Includes the XLA-path benchmark (runtime executables vs serial CPU on
+//! identical trees) when artifacts are present.
+
+use std::time::Instant;
+
+use fmm2d::config::FmmConfig;
+use fmm2d::connectivity::Connectivity;
+use fmm2d::expansion::Kernel;
+use fmm2d::fmm::{evaluate_on_tree, FmmOptions};
+use fmm2d::harness::{self, HarnessOpts};
+use fmm2d::runtime::Runtime;
+use fmm2d::tree::Pyramid;
+use fmm2d::workload::Distribution;
+
+fn timed<F: FnOnce()>(name: &str, f: F) {
+    let t = Instant::now();
+    f();
+    eprintln!("[{name}: {:.1} s]", t.elapsed().as_secs_f64());
+}
+
+fn xla_bench() {
+    let Ok(mut rt) = Runtime::new(None) else {
+        eprintln!("[xla_bench skipped: no PJRT]");
+        return;
+    };
+    if rt.available().is_empty() {
+        eprintln!("[xla_bench skipped: run `make artifacts`]");
+        return;
+    }
+    println!("# XLA-path benchmark: AOT executable vs serial CPU (same tree)");
+    println!(
+        "{:<18} {:>8} {:>12} {:>12} {:>12} {:>10}",
+        "artifact", "N", "exec[ms]", "serial[ms]", "upload[ms]", "agree"
+    );
+    for (levels, n) in [(2usize, 450usize), (3, 3_000), (4, 12_000)] {
+        let (pts, gs) = harness::workload_for(Distribution::Uniform, n, 7);
+        let pyr = Pyramid::build(&pts, &gs, levels);
+        let con = Connectivity::build(&pyr, 0.5);
+        let Ok(exe) = rt.fmm_artifact_for_tree(&pyr, &con) else { continue };
+        let name = exe.meta.name.clone();
+        // warm-up then measure median of 3
+        let _ = exe.run_fmm(&pyr, &con);
+        let mut execs = Vec::new();
+        let mut uploads = Vec::new();
+        let mut pot = Vec::new();
+        for _ in 0..3 {
+            let (p, stats) = exe.run_fmm(&pyr, &con).expect("artifact run");
+            execs.push(stats.execute_s);
+            uploads.push(stats.upload_s);
+            pot = p;
+        }
+        execs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let opts = FmmOptions {
+            cfg: FmmConfig {
+                p: exe.meta.p,
+                levels_override: Some(levels),
+                ..FmmConfig::default()
+            },
+            kernel: Kernel::Harmonic,
+            symmetric_p2p: true,
+        };
+        let t = Instant::now();
+        let (phi_leaf, _, _) = evaluate_on_tree(&pyr, &con, &opts);
+        let serial_s = t.elapsed().as_secs_f64();
+        let serial = pyr.unpermute(&phi_leaf);
+        let agree = pot
+            .iter()
+            .zip(&serial)
+            .map(|(a, b)| (*a - *b).abs() / b.abs().max(1e-12))
+            .fold(0.0f64, f64::max);
+        println!(
+            "{name:<18} {n:>8} {:>12.1} {:>12.1} {:>12.2} {agree:>10.1e}",
+            execs[1] * 1e3,
+            serial_s * 1e3,
+            uploads[1] * 1e3
+        );
+    }
+}
+
+fn main() {
+    let o = HarnessOpts::default();
+    timed("table5-1", || {
+        let (text, rec) = harness::table5_1(&o);
+        println!("{text}");
+        rec.save("table5_1");
+    });
+    timed("fig5-1", || {
+        let t = harness::fig5_1(&o);
+        println!("{}", t.render());
+        t.save("fig5_1");
+    });
+    timed("fig5-2", || {
+        let t = harness::fig5_2(&o);
+        println!("{}", t.render());
+        t.save("fig5_2");
+    });
+    timed("fig5-3", || {
+        let t = harness::fig5_3(&o);
+        println!("{}", t.render());
+        t.save("fig5_3");
+    });
+    timed("fig5-4", || {
+        let (t, (a, b)) = harness::fig5_4(&o);
+        println!("{}", t.render());
+        println!("linear fit: opt_Nd_gpu ≈ {a:.1} + {b:.2}·p");
+        t.save("fig5_4");
+    });
+    timed("fig5-5", || {
+        let (t, be) = harness::fig5_5(&o);
+        println!("{}", t.render());
+        println!("GPU FMM/direct break-even ≈ N = {be:.0} (paper ≈ 3500)");
+        t.save("fig5_5");
+    });
+    timed("fig5-6", || {
+        let t = harness::fig5_6(&o);
+        println!("{}", t.render());
+        t.save("fig5_6");
+    });
+    timed("fig5-7", || {
+        let t = harness::fig5_7(&o);
+        println!("{}", t.render());
+        t.save("fig5_7");
+    });
+    timed("fig5-8", || {
+        let t = harness::fig5_8(&o);
+        println!("{}", t.render());
+        t.save("fig5_8");
+    });
+    timed("fig5-9", || {
+        let t = harness::fig5_9(&o);
+        println!("{}", t.render());
+        t.save("fig5_9");
+    });
+    timed("validate", || {
+        let t = harness::validate(&o);
+        println!("{}", t.render());
+        t.save("validate");
+    });
+    timed("xla_bench", xla_bench);
+    println!("{}", harness::calibrate(&o));
+}

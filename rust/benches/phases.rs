@@ -1,0 +1,138 @@
+//! Micro-benchmarks of the FMM phases and their substrates (self-built
+//! harness — criterion is unavailable offline).
+//!
+//! Run: `cargo bench --offline` or `cargo bench --offline -- <filter>`.
+
+use fmm2d::bench::{bench, black_box, BenchConfig};
+use fmm2d::complex::C64;
+use fmm2d::config::FmmConfig;
+use fmm2d::connectivity::Connectivity;
+use fmm2d::expansion::shifts::{
+    l2l_with, m2l_unscaled, m2l_with, m2m_scaled_with, ShiftScratch,
+};
+use fmm2d::expansion::{p2m, Coeffs, Kernel};
+use fmm2d::fmm::{evaluate_on_tree, FmmOptions};
+use fmm2d::tree::{PartitionEngine, Pyramid};
+use fmm2d::util::rng::Pcg64;
+use fmm2d::workload;
+
+fn rand_coeffs(r: &mut Pcg64, p: usize) -> Vec<C64> {
+    let mut v: Vec<C64> = (0..=p)
+        .map(|_| C64::new(r.uniform_in(-1.0, 1.0), r.uniform_in(-1.0, 1.0)))
+        .collect();
+    v[0] = C64::new(0.0, 0.0);
+    v
+}
+
+fn main() {
+    // first non-flag argument is a name filter (cargo bench passes
+    // `--bench`, which must be ignored)
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_default();
+    let cfg = BenchConfig::default();
+    let mut results = Vec::new();
+    let mut run = |name: &str, f: &mut dyn FnMut()| {
+        if !filter.is_empty() && !name.contains(&filter) {
+            return;
+        }
+        let r = bench(name, &cfg, f);
+        println!("{}", r.report());
+        results.push(r);
+    };
+
+    let mut rng = Pcg64::seed_from_u64(1);
+
+    // ---- shift operators at the paper's p = 17 and at the p = 42 cliff
+    for p in [17usize, 42] {
+        let a = rand_coeffs(&mut rng, p);
+        let z_i = C64::new(0.1, 0.2);
+        let z_o = C64::new(1.2, -0.5);
+        let mut out = vec![C64::new(0.0, 0.0); p + 1];
+        let mut scratch = ShiftScratch::new();
+        run(&format!("m2l_recurrence_p{p}"), &mut || {
+            out.fill(C64::new(0.0, 0.0));
+            m2l_with(&a, z_i, &mut out, z_o, &mut scratch);
+            black_box(&out);
+        });
+        let mut acc = Coeffs::zero(p);
+        run(&format!("m2l_unscaled_p{p}"), &mut || {
+            acc.clear();
+            m2l_unscaled(&Coeffs(a.clone()), z_i, &mut acc, z_o);
+            black_box(&acc);
+        });
+        let op = fmm2d::expansion::matrices::M2lOperator::new(p);
+        let mut mscratch = fmm2d::expansion::matrices::M2lScratch::default();
+        run(&format!("m2l_matrix_op_p{p}"), &mut || {
+            out.fill(C64::new(0.0, 0.0));
+            op.apply(&a, z_i, &mut out, z_o, &mut mscratch);
+            black_box(&out);
+        });
+        run(&format!("m2m_scaled_p{p}"), &mut || {
+            out.fill(C64::new(0.0, 0.0));
+            m2m_scaled_with(&a, z_i, &mut out, z_o, &mut scratch);
+            black_box(&out);
+        });
+        run(&format!("l2l_p{p}"), &mut || {
+            out.fill(C64::new(0.0, 0.0));
+            l2l_with(&a, z_i, &mut out, z_o, &mut scratch);
+            black_box(&out);
+        });
+    }
+
+    // ---- P2M over a 45-particle box
+    {
+        let (pts, gs) = workload::uniform_square(45, &mut rng);
+        let z0 = C64::new(0.5, 0.5);
+        let mut acc = Coeffs::zero(17);
+        run("p2m_45_particles_p17", &mut || {
+            acc.clear();
+            p2m(Kernel::Harmonic, z0, &pts, &gs, &mut acc);
+            black_box(&acc);
+        });
+    }
+
+    // ---- topological phase at N = 100k
+    {
+        let (pts, gs) = workload::uniform_square(100_000, &mut rng);
+        run("tree_build_cpu_100k_l5", &mut || {
+            black_box(Pyramid::build(&pts, &gs, 5));
+        });
+        run("tree_build_gpumodel_100k_l5", &mut || {
+            black_box(Pyramid::build_with(
+                &pts,
+                &gs,
+                5,
+                PartitionEngine::GpuModel,
+            ));
+        });
+        let pyr = Pyramid::build(&pts, &gs, 5);
+        run("connectivity_100k_l5", &mut || {
+            black_box(Connectivity::build(&pyr, 0.5));
+        });
+    }
+
+    // ---- whole computational phase (fixed tree), symmetric vs directed
+    {
+        let (pts, gs) = workload::uniform_square(50_000, &mut rng);
+        let pyr = Pyramid::build(&pts, &gs, 5);
+        let con = Connectivity::build(&pyr, 0.5);
+        for (name, sym) in [("symmetric", true), ("directed", false)] {
+            let opts = FmmOptions {
+                cfg: FmmConfig {
+                    p: 17,
+                    levels_override: Some(5),
+                    ..FmmConfig::default()
+                },
+                kernel: Kernel::Harmonic,
+                symmetric_p2p: sym,
+            };
+            run(&format!("fmm_compute_50k_{name}"), &mut || {
+                black_box(evaluate_on_tree(&pyr, &con, &opts));
+            });
+        }
+    }
+
+    println!("\n{} benchmarks run", results.len());
+}

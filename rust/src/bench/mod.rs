@@ -1,0 +1,128 @@
+//! Micro/macro benchmark substrate (criterion replacement for the offline
+//! environment): warmup, adaptive repetition targeting a minimum measuring
+//! window, and robust summary statistics.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Warmup iterations (not recorded).
+    pub warmup: usize,
+    /// Recorded samples.
+    pub samples: usize,
+    /// Lower bound on total measured time; iterations per sample are scaled
+    /// so `samples × iters × t_iter ≳ min_time` (seconds).
+    pub min_time: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: 2,
+            samples: 10,
+            min_time: 0.5,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Fast configuration for long-running macro benchmarks.
+    pub fn macro_bench() -> Self {
+        Self {
+            warmup: 1,
+            samples: 3,
+            min_time: 0.0,
+        }
+    }
+}
+
+/// One measured benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per iteration.
+    pub summary: Summary,
+    /// Iterations per recorded sample.
+    pub iters: usize,
+}
+
+impl BenchResult {
+    /// Seconds per iteration (median).
+    pub fn secs(&self) -> f64 {
+        self.summary.median
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>12.6} ms/iter (±{:.1}%, n={} × {})",
+            self.name,
+            self.secs() * 1e3,
+            100.0 * self.summary.rel_spread(),
+            self.summary.n,
+            self.iters
+        )
+    }
+}
+
+/// Measure `f`, returning per-iteration timing statistics.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let mut t_iter = 0.0;
+    for _ in 0..cfg.warmup.max(1) {
+        let t = Instant::now();
+        f();
+        t_iter = t.elapsed().as_secs_f64();
+    }
+    let iters = if cfg.min_time > 0.0 && t_iter > 0.0 {
+        ((cfg.min_time / cfg.samples as f64 / t_iter).ceil() as usize).clamp(1, 1_000_000)
+    } else {
+        1
+    };
+
+    let mut xs = Vec::with_capacity(cfg.samples);
+    for _ in 0..cfg.samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        xs.push(t.elapsed().as_secs_f64() / iters as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        summary: Summary::of(&xs),
+        iters,
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value
+/// (`std::hint::black_box` is stable since 1.66; thin wrapper for clarity).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let cfg = BenchConfig {
+            warmup: 1,
+            samples: 3,
+            min_time: 0.01,
+        };
+        let mut acc = 0u64;
+        let r = bench("spin", &cfg, || {
+            for i in 0..10_000u64 {
+                acc = black_box(acc.wrapping_add(i));
+            }
+        });
+        assert!(r.secs() > 0.0);
+        assert_eq!(r.summary.n, 3);
+        assert!(r.iters >= 1);
+        assert!(r.report().contains("spin"));
+    }
+}

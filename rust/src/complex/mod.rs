@@ -1,0 +1,322 @@
+//! Double-precision complex arithmetic substrate.
+//!
+//! The paper's whole computational phase works in the complex plane
+//! (Eqs. 2.2–2.3); this module provides the `C64` value type used throughout.
+//! Built in-repo because the environment is offline (no `num-complex`), and
+//! because the FMM inner loops benefit from a few bespoke helpers
+//! (`powi_table`, fused multiply-accumulate shapes) that a generic complex
+//! type does not expose.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// A complex number `re + i·im` in double precision.
+#[derive(Clone, Copy, Default, PartialEq)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+/// The additive identity.
+pub const ZERO: C64 = C64 { re: 0.0, im: 0.0 };
+/// The multiplicative identity.
+pub const ONE: C64 = C64 { re: 1.0, im: 0.0 };
+/// The imaginary unit.
+pub const I: C64 = C64 { re: 0.0, im: 1.0 };
+
+impl C64 {
+    #[inline(always)]
+    pub const fn new(re: f64, im: f64) -> Self {
+        Self { re, im }
+    }
+
+    /// Real number embedded in the complex plane.
+    #[inline(always)]
+    pub const fn real(re: f64) -> Self {
+        Self { re, im: 0.0 }
+    }
+
+    /// Squared modulus `|z|²`.
+    #[inline(always)]
+    pub fn norm_sqr(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    /// Modulus `|z|`.
+    #[inline(always)]
+    pub fn abs(self) -> f64 {
+        self.norm_sqr().sqrt()
+    }
+
+    /// Argument in `(-π, π]`.
+    #[inline(always)]
+    pub fn arg(self) -> f64 {
+        self.im.atan2(self.re)
+    }
+
+    /// Complex conjugate.
+    #[inline(always)]
+    pub fn conj(self) -> Self {
+        Self::new(self.re, -self.im)
+    }
+
+    /// Multiplicative inverse `1/z`.
+    ///
+    /// The FMM kernel (Eq. 5.1) is a complex reciprocal, so this is *the*
+    /// innermost operation of the P2P phase. One division by `|z|²`,
+    /// matching what the CUDA implementation does per pairwise interaction.
+    #[inline(always)]
+    pub fn recip(self) -> Self {
+        let s = 1.0 / self.norm_sqr();
+        Self::new(self.re * s, -self.im * s)
+    }
+
+    /// Principal branch of the complex logarithm.
+    #[inline(always)]
+    pub fn ln(self) -> Self {
+        Self::new(0.5 * self.norm_sqr().ln(), self.arg())
+    }
+
+    /// Integer power by binary exponentiation (exact op-count independent of
+    /// the argument; used for the scale factors `r^j` of Algorithms 3.4–3.6).
+    pub fn powi(self, n: i32) -> Self {
+        if n == 0 {
+            return ONE;
+        }
+        if n < 0 {
+            return self.powi(-n).recip();
+        }
+        let mut base = self;
+        let mut acc = ONE;
+        let mut k = n as u32;
+        while k > 1 {
+            if k & 1 == 1 {
+                acc *= base;
+            }
+            base *= base;
+            k >>= 1;
+        }
+        acc * base
+    }
+
+    /// Table of powers `[1, z, z², …, z^n]` (length `n+1`).
+    ///
+    /// The pre/post-scaling passes of the shift operators consume consecutive
+    /// powers; building the table once replaces O(p log p) multiplications by
+    /// O(p) and keeps the hot loops free of `powi` calls.
+    pub fn powi_table(self, n: usize) -> Vec<C64> {
+        let mut t = Vec::with_capacity(n + 1);
+        let mut acc = ONE;
+        t.push(acc);
+        for _ in 0..n {
+            acc *= self;
+            t.push(acc);
+        }
+        t
+    }
+
+    /// Fused multiply-add shape `self + a*b` (single rounding not guaranteed;
+    /// this is a *structural* helper for the inner loops).
+    #[inline(always)]
+    pub fn mul_add(self, a: C64, b: C64) -> Self {
+        self + a * b
+    }
+
+    /// `true` when both components are finite.
+    #[inline(always)]
+    pub fn is_finite(self) -> bool {
+        self.re.is_finite() && self.im.is_finite()
+    }
+
+    /// Scale by a real factor.
+    #[inline(always)]
+    pub fn scale(self, s: f64) -> Self {
+        Self::new(self.re * s, self.im * s)
+    }
+}
+
+impl Add for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn add(self, o: C64) -> C64 {
+        C64::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl Sub for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn sub(self, o: C64) -> C64 {
+        C64::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl Mul for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn mul(self, o: C64) -> C64 {
+        C64::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl Div for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn div(self, o: C64) -> C64 {
+        self * o.recip()
+    }
+}
+
+impl Neg for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn neg(self) -> C64 {
+        C64::new(-self.re, -self.im)
+    }
+}
+
+impl Mul<f64> for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn mul(self, s: f64) -> C64 {
+        self.scale(s)
+    }
+}
+
+impl Div<f64> for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn div(self, s: f64) -> C64 {
+        self.scale(1.0 / s)
+    }
+}
+
+impl AddAssign for C64 {
+    #[inline(always)]
+    fn add_assign(&mut self, o: C64) {
+        *self = *self + o;
+    }
+}
+
+impl SubAssign for C64 {
+    #[inline(always)]
+    fn sub_assign(&mut self, o: C64) {
+        *self = *self - o;
+    }
+}
+
+impl MulAssign for C64 {
+    #[inline(always)]
+    fn mul_assign(&mut self, o: C64) {
+        *self = *self * o;
+    }
+}
+
+impl DivAssign for C64 {
+    #[inline(always)]
+    fn div_assign(&mut self, o: C64) {
+        *self = *self / o;
+    }
+}
+
+impl Sum for C64 {
+    fn sum<I: Iterator<Item = C64>>(iter: I) -> C64 {
+        iter.fold(ZERO, |a, b| a + b)
+    }
+}
+
+impl From<f64> for C64 {
+    fn from(re: f64) -> Self {
+        C64::real(re)
+    }
+}
+
+impl fmt::Debug for C64 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:+.12e}{:+.12e}i", self.re, self.im)
+    }
+}
+
+impl fmt::Display for C64 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{}{}i", self.re, if self.im < 0.0 { "" } else { "+" }, self.im)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: C64, b: C64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn field_axioms_spotcheck() {
+        let a = C64::new(1.5, -2.25);
+        let b = C64::new(-0.75, 3.0);
+        let c = C64::new(0.125, 0.5);
+        assert!(close((a + b) + c, a + (b + c), 1e-15));
+        assert!(close((a * b) * c, a * (b * c), 1e-15));
+        assert!(close(a * (b + c), a * b + a * c, 1e-15));
+        assert!(close(a * ONE, a, 0.0));
+        assert!(close(a + ZERO, a, 0.0));
+    }
+
+    #[test]
+    fn recip_and_div() {
+        let a = C64::new(3.0, -4.0);
+        assert!(close(a * a.recip(), ONE, 1e-15));
+        let b = C64::new(-1.0, 2.0);
+        assert!(close(a / b * b, a, 1e-14));
+    }
+
+    #[test]
+    fn powi_matches_repeated_mul() {
+        let z = C64::new(0.8, -0.6);
+        let mut acc = ONE;
+        for n in 0..20 {
+            assert!(close(z.powi(n), acc, 1e-13), "n={n}");
+            acc *= z;
+        }
+        assert!(close(z.powi(-3), (z * z * z).recip(), 1e-13));
+    }
+
+    #[test]
+    fn powi_table_consistent() {
+        let z = C64::new(-0.3, 1.1);
+        let t = z.powi_table(16);
+        assert_eq!(t.len(), 17);
+        for (n, v) in t.iter().enumerate() {
+            assert!(close(*v, z.powi(n as i32), 1e-12), "n={n}");
+        }
+    }
+
+    #[test]
+    fn ln_inverts_exp_like_values() {
+        // ln(r e^{iφ}) = ln r + iφ on the principal branch
+        let z = C64::new(1.0, 1.0);
+        let l = z.ln();
+        assert!((l.re - 0.5 * 2.0f64.ln()).abs() < 1e-15);
+        assert!((l.im - std::f64::consts::FRAC_PI_4).abs() < 1e-15);
+    }
+
+    #[test]
+    fn conj_arg_norm() {
+        let z = C64::new(3.0, 4.0);
+        assert_eq!(z.abs(), 5.0);
+        assert_eq!(z.conj().im, -4.0);
+        assert!((z.arg() + z.conj().arg()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sum_iterator() {
+        let v = [C64::new(1.0, 2.0), C64::new(-0.5, 0.5), C64::new(2.5, -1.0)];
+        let s: C64 = v.iter().copied().sum();
+        assert!(close(s, C64::new(3.0, 1.5), 1e-15));
+    }
+}

@@ -1,0 +1,128 @@
+//! FMM run configuration: expansion order, box population target, θ, and the
+//! level-selection rule of the paper (Eq. 5.2).
+
+/// Parameters of one FMM evaluation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FmmConfig {
+    /// Number of expansion terms `p` in Eqs. (2.2)–(2.3). The paper uses
+    /// p = 17 for TOL ≈ 1e-6.
+    pub p: usize,
+    /// Desired number of sources per finest-level box, `N_d` (≈45 optimal on
+    /// the paper's GPU; ≈35 on its CPU).
+    pub n_per_box: usize,
+    /// Well-separatedness parameter θ ∈ (0,1); the paper fixes θ = 1/2.
+    pub theta: f64,
+    /// Optional explicit level count; `None` applies Eq. (5.2).
+    pub levels_override: Option<usize>,
+}
+
+impl Default for FmmConfig {
+    fn default() -> Self {
+        Self {
+            p: 17,
+            n_per_box: 45,
+            theta: 0.5,
+            levels_override: None,
+        }
+    }
+}
+
+impl FmmConfig {
+    pub fn new(p: usize, n_per_box: usize) -> Self {
+        Self {
+            p,
+            n_per_box,
+            ..Self::default()
+        }
+    }
+
+    /// Number of levels from Eq. (5.2):
+    /// `N_l = ceil(0.5 * log2(5N / (8 N_d)))`, clamped to ≥ 1 so a tree
+    /// always has at least one refinement (4 leaf boxes).
+    pub fn levels_for(&self, n: usize) -> usize {
+        if let Some(l) = self.levels_override {
+            return l.max(1);
+        }
+        levels_rule(n, self.n_per_box)
+    }
+
+    /// Number of finest-level boxes `4^L`.
+    pub fn leaf_boxes_for(&self, n: usize) -> usize {
+        1usize << (2 * self.levels_for(n))
+    }
+
+    /// The paper's p ↔ TOL relation: `p ~ log TOL / log θ` (§2). Returns the
+    /// smallest p whose geometric bound `θ^p` is below `tol`.
+    pub fn p_for_tolerance(tol: f64, theta: f64) -> usize {
+        assert!(tol > 0.0 && tol < 1.0 && theta > 0.0 && theta < 1.0);
+        (tol.ln() / theta.ln()).ceil() as usize
+    }
+
+    /// Geometric a-priori error estimate `θ^p` for this configuration.
+    pub fn tolerance_estimate(&self) -> f64 {
+        self.theta.powi(self.p as i32)
+    }
+}
+
+/// Eq. (5.2) as a free function.
+pub fn levels_rule(n: usize, n_d: usize) -> usize {
+    assert!(n_d > 0);
+    let arg = 5.0 * n as f64 / (8.0 * n_d as f64);
+    if arg <= 1.0 {
+        return 1;
+    }
+    let l = (0.5 * arg.log2()).ceil() as usize;
+    l.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_rule_matches_paper_example() {
+        // §5.1: with N_d = 45, the rule gives 8 levels for
+        // N ∈ (18·2^16, 72·2^16].
+        let nd = 45;
+        assert_eq!(levels_rule(18 * (1 << 16) + 1, nd), 8);
+        assert_eq!(levels_rule(45 * (1 << 16), nd), 8);
+        assert_eq!(levels_rule(72 * (1 << 16), nd), 8);
+        assert_eq!(levels_rule(72 * (1 << 16) + 1, nd), 9);
+        assert_eq!(levels_rule(18 * (1 << 16), nd), 7);
+    }
+
+    #[test]
+    fn levels_rule_small_inputs() {
+        assert_eq!(levels_rule(1, 45), 1);
+        assert_eq!(levels_rule(100, 45), 1);
+        // 5*1000/(8*45) = 13.9 -> 0.5*log2 = 1.9 -> 2
+        assert_eq!(levels_rule(1000, 45), 2);
+    }
+
+    #[test]
+    fn p_for_tolerance_inverse_of_estimate() {
+        let p = FmmConfig::p_for_tolerance(1e-6, 0.5);
+        assert_eq!(p, 20); // 0.5^20 ≈ 9.5e-7 ≤ 1e-6 < 0.5^19
+        let cfg = FmmConfig { p, ..Default::default() };
+        assert!(cfg.tolerance_estimate() <= 1e-6);
+        let cfg19 = FmmConfig { p: 19, ..Default::default() };
+        assert!(cfg19.tolerance_estimate() > 1e-6);
+    }
+
+    #[test]
+    fn leaf_boxes_power_of_four() {
+        let cfg = FmmConfig::default();
+        let n = 45 * (1 << 16);
+        assert_eq!(cfg.levels_for(n), 8);
+        assert_eq!(cfg.leaf_boxes_for(n), 4usize.pow(8));
+    }
+
+    #[test]
+    fn override_wins() {
+        let cfg = FmmConfig {
+            levels_override: Some(3),
+            ..Default::default()
+        };
+        assert_eq!(cfg.levels_for(10_000_000), 3);
+    }
+}

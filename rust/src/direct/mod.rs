@@ -1,0 +1,150 @@
+//! Direct O(N²) summation baselines (paper §5.3, Fig. 5.5/5.6).
+//!
+//! Two CPU variants, matching §4.2:
+//!
+//! * [`eval_symmetric`] exploits the antisymmetry of the harmonic kernel —
+//!   one complex reciprocal serves the (i,j) and (j,i) contributions,
+//!   "almost a factor of two" as the paper says; this is the variant its
+//!   CPU comparisons use;
+//! * [`eval_plain`] evaluates every ordered pair — the formulation the
+//!   GPU code uses (no f64 atomics on the C2075 ⇒ no scatter-adds).
+//!
+//! [`eval_separate`] covers the `{y_i} ≠ {x_j}` case of Eq. (1.2).
+
+use crate::complex::{C64, ZERO};
+use crate::expansion::Kernel;
+
+/// Direct potential at every source point, all ordered pairs (`j ≠ i`).
+pub fn eval_plain(kernel: Kernel, points: &[C64], gammas: &[C64]) -> Vec<C64> {
+    let n = points.len();
+    let mut phi = vec![ZERO; n];
+    for i in 0..n {
+        let zi = points[i];
+        let mut acc = ZERO;
+        for j in 0..n {
+            if j != i {
+                acc += kernel.eval(zi, points[j], gammas[j]);
+            }
+        }
+        phi[i] = acc;
+    }
+    phi
+}
+
+/// Direct potential at every source point using the pairwise symmetry of
+/// the harmonic kernel: `Γ_j/(z_j−z_i)` and `Γ_i/(z_i−z_j)` share one
+/// reciprocal. Falls back to [`eval_plain`] for the log kernel (whose
+/// imaginary part is not antisymmetric across the branch cut).
+pub fn eval_symmetric(kernel: Kernel, points: &[C64], gammas: &[C64]) -> Vec<C64> {
+    if kernel != Kernel::Harmonic {
+        return eval_plain(kernel, points, gammas);
+    }
+    let n = points.len();
+    let mut phi = vec![ZERO; n];
+    for i in 0..n {
+        let zi = points[i];
+        let gi = gammas[i];
+        let mut acc = phi[i];
+        for j in i + 1..n {
+            // r = 1/(z_j − z_i): contribution Γ_j·r at i and −Γ_i·r at j
+            let r = (points[j] - zi).recip();
+            acc += gammas[j] * r;
+            phi[j] -= gi * r;
+        }
+        phi[i] = acc;
+    }
+    phi
+}
+
+/// Direct potential of `sources` evaluated at separate `targets`
+/// (Eq. 1.2 with disjoint evaluation set; no self-exclusion needed as long
+/// as no target coincides with a source — coincident pairs are skipped).
+pub fn eval_separate(
+    kernel: Kernel,
+    targets: &[C64],
+    sources: &[C64],
+    gammas: &[C64],
+) -> Vec<C64> {
+    targets
+        .iter()
+        .map(|&t| {
+            let mut acc = ZERO;
+            for (&s, &g) in sources.iter().zip(gammas) {
+                if s != t {
+                    acc += kernel.eval(t, s, g);
+                }
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Number of kernel evaluations of the plain direct sum (for the GPU cost
+/// model and the Fig. 5.5 work accounting).
+pub fn pair_count(n: usize) -> usize {
+    n * n.saturating_sub(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use crate::workload;
+
+    #[test]
+    fn symmetric_matches_plain_harmonic() {
+        let mut r = Pcg64::seed_from_u64(1);
+        let (pts, gs) = workload::uniform_square(200, &mut r);
+        let a = eval_plain(Kernel::Harmonic, &pts, &gs);
+        let b = eval_symmetric(Kernel::Harmonic, &pts, &gs);
+        for (x, y) in a.iter().zip(&b) {
+            assert!(
+                (*x - *y).abs() <= 1e-11 * x.abs().max(1.0),
+                "{x:?} vs {y:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn log_kernel_falls_back() {
+        let mut r = Pcg64::seed_from_u64(2);
+        let (pts, gs) = workload::uniform_square(50, &mut r);
+        let a = eval_plain(Kernel::Log, &pts, &gs);
+        let b = eval_symmetric(Kernel::Log, &pts, &gs);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn separate_targets() {
+        let mut r = Pcg64::seed_from_u64(3);
+        let (src, gs) = workload::uniform_square(100, &mut r);
+        let (tgt, _) = workload::uniform_square(37, &mut r);
+        let phi = eval_separate(Kernel::Harmonic, &tgt, &src, &gs);
+        assert_eq!(phi.len(), 37);
+        // spot check one target against a manual sum
+        let t = tgt[5];
+        let manual: C64 = src
+            .iter()
+            .zip(&gs)
+            .map(|(&s, &g)| g * (s - t).recip())
+            .sum();
+        assert!((phi[5] - manual).abs() < 1e-12 * manual.abs().max(1.0));
+    }
+
+    #[test]
+    fn two_body_antisymmetry() {
+        let pts = [C64::new(0.25, 0.5), C64::new(0.75, 0.5)];
+        let gs = [C64::new(1.0, 0.0), C64::new(1.0, 0.0)];
+        let phi = eval_symmetric(Kernel::Harmonic, &pts, &gs);
+        // Γ/(z1−z0) = 1/0.5 = 2 at point 0; −2 at point 1
+        assert!((phi[0] - C64::new(2.0, 0.0)).abs() < 1e-14);
+        assert!((phi[1] - C64::new(-2.0, 0.0)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn pair_count_formula() {
+        assert_eq!(pair_count(0), 0);
+        assert_eq!(pair_count(1), 0);
+        assert_eq!(pair_count(10), 90);
+    }
+}

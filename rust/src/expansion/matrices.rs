@@ -1,0 +1,392 @@
+//! Dense-matrix forms of the shift operators — the TPU/MXU mapping.
+//!
+//! On the GPU the paper evaluates the shift cores as triangular recurrences
+//! in shared memory. On a TPU the natural formulation (DESIGN.md
+//! §Hardware-Adaptation) is: pre-scale (diagonal) → multiply by a *constant*
+//! structure matrix (MXU) → post-scale (diagonal). This module builds those
+//! constant matrices; `python/compile/kernels/m2l.py` bakes the same matrix
+//! into the Pallas kernel, and the tests here pin the two layers to the same
+//! linear map.
+
+use super::Coeffs;
+use crate::complex::{C64, ZERO};
+
+/// Table of binomial coefficients `C(n, k)` up to `n < size`, f64-valued
+/// (exact for the n ranges used here: C(120, 60) < 2^53·2^14 — beyond exact
+/// integers in f64 for p > 26, but the *relative* error stays at machine-ε
+/// because each entry is built by one addition of same-sign numbers).
+pub struct BinomTable {
+    size: usize,
+    c: Vec<f64>,
+}
+
+impl BinomTable {
+    pub fn new(size: usize) -> Self {
+        let mut c = vec![0.0; size * size];
+        for n in 0..size {
+            c[n * size] = 1.0;
+            for k in 1..=n {
+                c[n * size + k] = c[(n - 1) * size + k - 1]
+                    + if k <= n - 1 { c[(n - 1) * size + k] } else { 0.0 };
+            }
+        }
+        Self { size, c }
+    }
+
+    /// `C(n, k)`; zero outside the triangle.
+    #[inline]
+    pub fn c(&self, n: usize, k: usize) -> f64 {
+        if k > n || n >= self.size {
+            0.0
+        } else {
+            self.c[n * self.size + k]
+        }
+    }
+}
+
+/// The constant M2L structure matrix `T[l][k] = C(k+l−1, l)` for
+/// `l = 0..=p`, `k = 0..=p` (column 0 is zero: `a_0` is handled separately).
+/// The scaled M2L map is `b̂ = T â` with `â_k = a_k r^{−k}`,
+/// `b_l = (−1)^l r^{−l} b̂_l`.
+pub fn m2l_matrix(p: usize) -> Vec<Vec<f64>> {
+    let binom = BinomTable::new(2 * p + 1);
+    (0..=p)
+        .map(|l| {
+            (0..=p)
+                .map(|k| if k == 0 { 0.0 } else { binom.c(k + l - 1, l) })
+                .collect()
+        })
+        .collect()
+}
+
+/// The constant M2M structure matrix `S[l][k] = C(l−1, k−1)` (`k ≥ 1`).
+/// Scaled map: `â_k = a_k d^{−k}`, `a'_l = d^l (S â)_l` (plus `a_0` terms).
+pub fn m2m_matrix(p: usize) -> Vec<Vec<f64>> {
+    let binom = BinomTable::new(p + 1);
+    (0..=p)
+        .map(|l| {
+            (0..=p)
+                .map(|k| {
+                    if k == 0 || l == 0 || k > l {
+                        0.0
+                    } else {
+                        binom.c(l - 1, k - 1)
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The constant L2L structure matrix `U[l][k] = (−1)^{k−l} C(k, l)` (k ≥ l).
+/// Scaled map with `r = z_p − z_c`: `b̂_k = b_k r^k`, `b'_l = r^{−l} (U b̂)_l`.
+pub fn l2l_matrix(p: usize) -> Vec<Vec<f64>> {
+    let binom = BinomTable::new(p + 1);
+    (0..=p)
+        .map(|l| {
+            (0..=p)
+                .map(|k| {
+                    if k < l {
+                        0.0
+                    } else {
+                        let s = if (k - l) % 2 == 0 { 1.0 } else { -1.0 };
+                        s * binom.c(k, l)
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Apply M2L through the dense matrix (the data-parallel formulation):
+/// used for cross-validation against the recurrence and as the oracle the
+/// Pallas kernel is tested against.
+pub fn m2l_via_matrix(mat: &[Vec<f64>], multipole: &Coeffs, z_i: C64, local: &mut Coeffs, z_o: C64) {
+    let p = multipole.order();
+    debug_assert_eq!(mat.len(), p + 1);
+    let r = z_o - z_i;
+    let ir = r.recip();
+    // pre-scale
+    let irk = ir.powi_table(p);
+    let ahat: Vec<C64> = (0..=p).map(|k| multipole.0[k] * irk[k]).collect();
+    // constant matrix application (4 real GEMVs in the batched TPU version)
+    let a0 = multipole.0[0];
+    let mut sign = 1.0;
+    for l in 0..=p {
+        let mut acc = ZERO;
+        for k in 1..=p {
+            acc += ahat[k] * mat[l][k];
+        }
+        acc = acc * irk[l] * sign;
+        if a0 != ZERO {
+            if l == 0 {
+                acc += a0 * r.ln();
+            } else {
+                acc -= a0 * sign / l as f64 * irk[l];
+            }
+        }
+        local.0[l] += acc;
+        sign = -sign;
+    }
+}
+
+/// Flatten a structure matrix row-major into f64 (the layout `aot.py` bakes
+/// into the HLO constant; kept in one place so layer parity is testable).
+pub fn flatten_row_major(mat: &[Vec<f64>]) -> Vec<f64> {
+    mat.iter().flat_map(|row| row.iter().copied()).collect()
+}
+
+/// Precomputed M2L operator: the dense-matrix evaluation of the shift.
+///
+/// The triangular recurrence ([`super::shifts::m2l_with`]) has a strictly
+/// sequential inner dependency chain (`c[j] -= c[j-1]`), which defeats
+/// SIMD; this form trades ~2× the flops for fully vectorizable dot
+/// products against the *constant* structure matrix — the CPU analogue of
+/// the MXU mapping, and ~3–4× faster at p = 17 in practice (see
+/// EXPERIMENTS.md §Perf, where this replaced the recurrence in the serial
+/// driver's hot loop).
+#[derive(Clone, Debug)]
+pub struct M2lOperator {
+    p: usize,
+    /// Row-major `T[l][k] = C(k+l−1, l)`, `(p+1)²` entries.
+    t: Vec<f64>,
+}
+
+impl M2lOperator {
+    pub fn new(p: usize) -> Self {
+        Self {
+            p,
+            t: flatten_row_major(&m2l_matrix(p)),
+        }
+    }
+
+    #[inline]
+    pub fn order(&self) -> usize {
+        self.p
+    }
+
+    /// Accumulate the M2L translation of `multipole` (around `z_i`) into
+    /// `local` (around `z_o`). `a_0` must be zero (harmonic kernel) — the
+    /// general-kernel path stays on [`super::shifts::m2l_with`].
+    pub fn apply(
+        &self,
+        multipole: &[C64],
+        z_i: C64,
+        local: &mut [C64],
+        z_o: C64,
+        scratch: &mut M2lScratch,
+    ) {
+        let p = self.p;
+        debug_assert_eq!(multipole.len(), p + 1);
+        debug_assert_eq!(local.len(), p + 1);
+        debug_assert_eq!(multipole[0], ZERO, "matrix path requires a_0 = 0");
+        let r = z_o - z_i;
+        let ir = r.recip();
+
+        // pre-scale into split re/im arrays (SoA ⇒ vectorizable core)
+        scratch.re.resize(p + 1, 0.0);
+        scratch.im.resize(p + 1, 0.0);
+        let mut pw = ir;
+        for k in 1..=p {
+            let v = multipole[k] * pw;
+            scratch.re[k] = v.re;
+            scratch.im[k] = v.im;
+            pw *= ir;
+        }
+
+        // constant-matrix core + post-scale, row by row
+        let mut irl = crate::complex::ONE; // (−1)^l r^{−l}
+        let neg_ir = -ir;
+        for l in 0..=p {
+            let row = &self.t[l * (p + 1)..(l + 1) * (p + 1)];
+            let mut acc_re = 0.0;
+            let mut acc_im = 0.0;
+            // k = 0 contributes 0 (column 0 is zero); keep full-width loop
+            // for the vectorizer
+            for k in 0..=p {
+                acc_re += row[k] * scratch.re[k];
+                acc_im += row[k] * scratch.im[k];
+            }
+            local[l] += C64::new(acc_re, acc_im) * irl;
+            irl *= neg_ir;
+        }
+    }
+}
+
+/// Scratch for [`M2lOperator::apply`].
+#[derive(Clone, Debug, Default)]
+pub struct M2lScratch {
+    re: Vec<f64>,
+    im: Vec<f64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expansion::shifts::{l2l, m2l, m2m_scaled};
+    use crate::util::rng::Pcg64;
+
+    fn rand_coeffs(r: &mut Pcg64, p: usize) -> Coeffs {
+        let mut c = Coeffs(
+            (0..=p)
+                .map(|_| C64::new(r.uniform_in(-1.0, 1.0), r.uniform_in(-1.0, 1.0)))
+                .collect::<Vec<_>>(),
+        );
+        c.0[0] = ZERO;
+        c
+    }
+
+    #[test]
+    fn binom_table_small_values() {
+        let b = BinomTable::new(12);
+        assert_eq!(b.c(0, 0), 1.0);
+        assert_eq!(b.c(5, 2), 10.0);
+        assert_eq!(b.c(10, 5), 252.0);
+        assert_eq!(b.c(3, 5), 0.0);
+        assert_eq!(b.c(11, 0), 1.0);
+    }
+
+    #[test]
+    fn binom_pascal_identity() {
+        let b = BinomTable::new(40);
+        for n in 1..40 {
+            for k in 1..n {
+                assert_eq!(b.c(n, k), b.c(n - 1, k - 1) + b.c(n - 1, k));
+            }
+        }
+    }
+
+    #[test]
+    fn m2l_matrix_matches_recurrence() {
+        let mut r = Pcg64::seed_from_u64(20);
+        for p in [1usize, 5, 17, 42] {
+            let mat = m2l_matrix(p);
+            let m = rand_coeffs(&mut r, p);
+            let z_i = C64::new(0.2, -0.1);
+            let z_o = C64::new(-1.1, 0.9);
+            let mut via_mat = Coeffs::zero(p);
+            let mut via_rec = Coeffs::zero(p);
+            m2l_via_matrix(&mat, &m, z_i, &mut via_mat, z_o);
+            m2l(&m, z_i, &mut via_rec, z_o);
+            for j in 0..=p {
+                let err = (via_mat.0[j] - via_rec.0[j]).abs();
+                assert!(err / via_rec.0[j].abs().max(1.0) < 1e-11, "p={p} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn m2m_matrix_is_the_triangular_core() {
+        // Apply the scaled M2M through the matrix explicitly and compare.
+        let mut r = Pcg64::seed_from_u64(21);
+        let p = 17;
+        let mat = m2m_matrix(p);
+        let c = rand_coeffs(&mut r, p);
+        let z_c = C64::new(0.25, 0.75);
+        let z_p = C64::new(0.5, 0.5);
+        let d = z_c - z_p;
+        let id = d.recip();
+        let idk = id.powi_table(p);
+        let dk = d.powi_table(p);
+        let ahat: Vec<C64> = (0..=p).map(|k| c.0[k] * idk[k]).collect();
+        let mut via_mat = Coeffs::zero(p);
+        for l in 1..=p {
+            let mut acc = ZERO;
+            for k in 1..=l {
+                acc += ahat[k] * mat[l][k];
+            }
+            via_mat.0[l] = acc * dk[l];
+        }
+        let mut via_rec = Coeffs::zero(p);
+        m2m_scaled(&c, z_c, &mut via_rec, z_p);
+        for j in 0..=p {
+            assert!((via_mat.0[j] - via_rec.0[j]).abs() < 1e-11, "j={j}");
+        }
+    }
+
+    #[test]
+    fn l2l_matrix_is_the_triangular_core() {
+        let mut r = Pcg64::seed_from_u64(22);
+        let p = 17;
+        let mat = l2l_matrix(p);
+        let parent = rand_coeffs(&mut r, p);
+        let z_p = C64::new(0.5, 0.5);
+        let z_c = C64::new(0.7, 0.3);
+        let rr = z_p - z_c;
+        let rk = rr.powi_table(p);
+        let irk = rr.recip().powi_table(p);
+        let bhat: Vec<C64> = (0..=p).map(|k| parent.0[k] * rk[k]).collect();
+        let mut via_mat = Coeffs::zero(p);
+        for l in 0..=p {
+            let mut acc = ZERO;
+            for k in l..=p {
+                acc += bhat[k] * mat[l][k];
+            }
+            via_mat.0[l] = acc * irk[l];
+        }
+        let mut via_rec = Coeffs::zero(p);
+        l2l(&parent, z_p, &mut via_rec, z_c);
+        for j in 0..=p {
+            let err = (via_mat.0[j] - via_rec.0[j]).abs();
+            assert!(err / via_rec.0[j].abs().max(1.0) < 1e-11, "j={j}");
+        }
+    }
+
+    #[test]
+    fn flatten_layout() {
+        let m = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        assert_eq!(flatten_row_major(&m), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}
+
+#[cfg(test)]
+mod operator_tests {
+    use super::*;
+    use crate::expansion::shifts::m2l;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn m2l_operator_matches_recurrence() {
+        let mut r = Pcg64::seed_from_u64(30);
+        for p in [1usize, 2, 8, 17, 42] {
+            let op = M2lOperator::new(p);
+            assert_eq!(op.order(), p);
+            let mut m = Coeffs::zero(p);
+            for k in 1..=p {
+                m.0[k] = C64::new(r.uniform_in(-1.0, 1.0), r.uniform_in(-1.0, 1.0));
+            }
+            let z_i = C64::new(0.3, -0.2);
+            let z_o = C64::new(-1.0, 1.1);
+            let mut via_op = Coeffs::zero(p);
+            let mut scratch = M2lScratch::default();
+            op.apply(&m.0, z_i, &mut via_op.0, z_o, &mut scratch);
+            let mut via_rec = Coeffs::zero(p);
+            m2l(&m, z_i, &mut via_rec, z_o);
+            for j in 0..=p {
+                let err = (via_op.0[j] - via_rec.0[j]).abs();
+                assert!(
+                    err / via_rec.0[j].abs().max(1.0) < 1e-11,
+                    "p={p} j={j}: {err:e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn m2l_operator_accumulates() {
+        // repeated apply accumulates (+=), required by the driver loop
+        let p = 5;
+        let op = M2lOperator::new(p);
+        let mut m = Coeffs::zero(p);
+        m.0[1] = C64::new(1.0, 0.0);
+        let mut out = Coeffs::zero(p);
+        let mut scratch = M2lScratch::default();
+        let (z_i, z_o) = (C64::new(0.0, 0.0), C64::new(2.0, 0.0));
+        op.apply(&m.0, z_i, &mut out.0, z_o, &mut scratch);
+        let once = out.clone();
+        op.apply(&m.0, z_i, &mut out.0, z_o, &mut scratch);
+        for j in 0..=p {
+            assert!((out.0[j] - once.0[j] * 2.0).abs() < 1e-14);
+        }
+    }
+}

@@ -1,0 +1,314 @@
+//! Multipole and local expansions (paper Eqs. 2.2–2.3) and the particle-side
+//! operators P2M, P2L, M2P, L2P.
+//!
+//! Conventions (fixed throughout the repo, validated against direct
+//! summation in the tests):
+//!
+//! * a source of strength `Γ` at `z_s` contributes `Γ/(z_s − z)` to the
+//!   potential at `z` for the [`Kernel::Harmonic`] kernel (paper Eq. 5.1,
+//!   the vortex/harmonic kernel, `a_0 = 0`), and `Γ·log(z − z_s)` for
+//!   [`Kernel::Log`] (the extension exercising the `a_0` paths of all shift
+//!   operators; its imaginary part is branch-cut sensitive, so log-kernel
+//!   comparisons are on the real part);
+//! * multipole expansion around `z_0`:
+//!   `M(z) = a_0 log(z−z_0) + Σ_{j≥1} a_j (z−z_0)^{−j}`;
+//! * local expansion around `z_0`: `L(z) = Σ_{j≥0} b_j (z−z_0)^j`.
+//!
+//! The shift operators (M2M/M2L/L2L, Algorithms 3.4–3.6) live in
+//! [`shifts`]; their dense-matrix forms (the TPU/MXU mapping of
+//! DESIGN.md §Hardware-Adaptation) in [`matrices`].
+
+pub mod matrices;
+pub mod shifts;
+
+use crate::complex::{C64, ZERO};
+
+/// Interaction kernel `G` of Eq. (1.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// `G(z, z_j) = Γ_j / (z_j − z)` — the paper's harmonic potential
+    /// (Eq. 5.1). Multipole coefficient `a_0` is identically zero.
+    Harmonic,
+    /// `G(z, z_j) = Γ_j · log(z − z_j)` — logarithmic potential; populates
+    /// `a_0` and exercises every `a_0`-term of the shift operators.
+    Log,
+}
+
+impl Kernel {
+    /// Pairwise direct evaluation: contribution at `z` of a source at `zs`.
+    #[inline(always)]
+    pub fn eval(self, z: C64, zs: C64, gamma: C64) -> C64 {
+        match self {
+            Kernel::Harmonic => gamma * (zs - z).recip(),
+            Kernel::Log => gamma * (z - zs).ln(),
+        }
+    }
+}
+
+/// Coefficients of one expansion (multipole `a_0..a_p` or local `b_0..b_p`);
+/// a thin newtype so multipole/local cannot be mixed accidentally.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Coeffs(pub Vec<C64>);
+
+impl Coeffs {
+    /// Zero expansion of order `p` (holds `p+1` terms).
+    pub fn zero(p: usize) -> Self {
+        Coeffs(vec![ZERO; p + 1])
+    }
+
+    #[inline]
+    pub fn order(&self) -> usize {
+        self.0.len() - 1
+    }
+
+    pub fn add_assign(&mut self, other: &Coeffs) {
+        debug_assert_eq!(self.0.len(), other.0.len());
+        for (a, b) in self.0.iter_mut().zip(&other.0) {
+            *a += *b;
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.0.fill(ZERO);
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.0.iter().all(|c| *c == ZERO)
+    }
+}
+
+/// P2M: accumulate the multipole expansion of `sources`/`gammas` around `z0`
+/// into `acc` (paper §3.3.1).
+///
+/// Harmonic: `a_j += −Γ (z_s−z_0)^{j−1}`, `j ≥ 1`.
+/// Log: `a_0 += Γ`, `a_j += −Γ (z_s−z_0)^j / j`.
+pub fn p2m(kernel: Kernel, z0: C64, sources: &[C64], gammas: &[C64], acc: &mut Coeffs) {
+    let p = acc.order();
+    match kernel {
+        Kernel::Harmonic => {
+            for (&zs, &g) in sources.iter().zip(gammas) {
+                let t = zs - z0;
+                let mut pw = -g; // −Γ t^{j−1} starting at j = 1
+                for j in 1..=p {
+                    acc.0[j] += pw;
+                    pw *= t;
+                }
+            }
+        }
+        Kernel::Log => {
+            for (&zs, &g) in sources.iter().zip(gammas) {
+                let t = zs - z0;
+                acc.0[0] += g;
+                let mut pw = t; // t^j
+                for j in 1..=p {
+                    acc.0[j] += (-g) * pw / j as f64;
+                    pw *= t;
+                }
+            }
+        }
+    }
+}
+
+/// P2L: accumulate the *local* expansion around `z0` of far-away particles
+/// (the finest-level shortcut of §2: sources of a strongly-coupled larger
+/// box shifted directly into the smaller box's local expansion).
+///
+/// Harmonic: `b_l += Γ / (z_s−z_0)^{l+1}`.
+/// Log: `b_0 += Γ log(z_0−z_s)`, `b_l −= Γ / (l (z_s−z_0)^l)`.
+pub fn p2l(kernel: Kernel, z0: C64, sources: &[C64], gammas: &[C64], acc: &mut Coeffs) {
+    let p = acc.order();
+    match kernel {
+        Kernel::Harmonic => {
+            for (&zs, &g) in sources.iter().zip(gammas) {
+                let it = (zs - z0).recip();
+                let mut pw = g * it; // Γ / t^{l+1}
+                for l in 0..=p {
+                    acc.0[l] += pw;
+                    pw *= it;
+                }
+            }
+        }
+        Kernel::Log => {
+            for (&zs, &g) in sources.iter().zip(gammas) {
+                let t = zs - z0;
+                acc.0[0] += g * (-t).ln();
+                let it = t.recip();
+                let mut pw = it; // 1/t^l
+                for l in 1..=p {
+                    acc.0[l] -= g * pw / l as f64;
+                    pw *= it;
+                }
+            }
+        }
+    }
+}
+
+/// L2P: evaluate the local expansion at `z` by Horner's rule (§3.3.4).
+#[inline]
+pub fn l2p(z0: C64, coeffs: &Coeffs, z: C64) -> C64 {
+    let w = z - z0;
+    let mut acc = ZERO;
+    for &b in coeffs.0.iter().rev() {
+        acc = acc * w + b;
+    }
+    acc
+}
+
+/// M2P: evaluate the multipole expansion directly at `z` (§3.3.4's special
+/// case — valid only outside the box radius; Horner in `1/(z−z_0)`).
+#[inline]
+pub fn m2p(z0: C64, coeffs: &Coeffs, z: C64) -> C64 {
+    let t = z - z0;
+    let it = t.recip();
+    // Σ_{j≥1} a_j t^{−j} = it·(a_1 + it·(a_2 + …)), then the a_0 log term.
+    let mut acc = ZERO;
+    for &a in coeffs.0.iter().skip(1).rev() {
+        acc = (acc + a) * it;
+    }
+    if coeffs.0[0] != ZERO {
+        acc += coeffs.0[0] * t.ln();
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_c(r: &mut Pcg64, lo: f64, hi: f64) -> C64 {
+        C64::new(r.uniform_in(lo, hi), r.uniform_in(lo, hi))
+    }
+
+    /// Direct sum of the kernel over sources.
+    fn direct(kernel: Kernel, z: C64, zs: &[C64], g: &[C64]) -> C64 {
+        zs.iter().zip(g).map(|(&s, &q)| kernel.eval(z, s, q)).sum()
+    }
+
+    #[test]
+    fn p2m_converges_to_direct_harmonic() {
+        let mut r = Pcg64::seed_from_u64(1);
+        let z0 = C64::new(0.5, 0.5);
+        // sources inside radius 0.2 of z0; evaluation at distance ≳ 3x
+        let zs: Vec<C64> = (0..20)
+            .map(|_| z0 + rand_c(&mut r, -0.14, 0.14))
+            .collect();
+        let g: Vec<C64> = (0..20).map(|_| rand_c(&mut r, -1.0, 1.0)).collect();
+        let mut m = Coeffs::zero(30);
+        p2m(Kernel::Harmonic, z0, &zs, &g, &mut m);
+        assert_eq!(m.0[0], ZERO, "harmonic kernel must have a_0 = 0");
+        for zeval in [C64::new(1.5, 0.5), C64::new(0.5, -0.7), C64::new(-0.4, 1.4)] {
+            let exact = direct(Kernel::Harmonic, zeval, &zs, &g);
+            let approx = m2p(z0, &m, zeval);
+            assert!(
+                (approx - exact).abs() / exact.abs() < 1e-12,
+                "zeval={zeval:?}: {approx:?} vs {exact:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn p2m_converges_to_direct_log() {
+        let mut r = Pcg64::seed_from_u64(2);
+        let z0 = C64::new(0.0, 0.0);
+        let zs: Vec<C64> = (0..10).map(|_| rand_c(&mut r, -0.1, 0.1)).collect();
+        let g: Vec<C64> = (0..10)
+            .map(|_| C64::real(r.uniform_in(-1.0, 1.0)))
+            .collect();
+        let mut m = Coeffs::zero(40);
+        p2m(Kernel::Log, z0, &zs, &g, &mut m);
+        let zeval = C64::new(1.1, 0.3);
+        let exact = direct(Kernel::Log, zeval, &zs, &g);
+        let approx = m2p(z0, &m, zeval);
+        // log kernel: compare real part (imaginary part is branch sensitive)
+        assert!((approx.re - exact.re).abs() / exact.re.abs().max(1.0) < 1e-12);
+    }
+
+    #[test]
+    fn p2l_converges_to_direct_harmonic() {
+        let mut r = Pcg64::seed_from_u64(3);
+        let z0 = C64::new(0.0, 0.0);
+        // sources far from z0, evaluation near z0
+        let zs: Vec<C64> = (0..15)
+            .map(|_| C64::new(2.0, 1.0) + rand_c(&mut r, -0.2, 0.2))
+            .collect();
+        let g: Vec<C64> = (0..15).map(|_| rand_c(&mut r, -1.0, 1.0)).collect();
+        let mut l = Coeffs::zero(40);
+        p2l(Kernel::Harmonic, z0, &zs, &g, &mut l);
+        for zeval in [C64::new(0.2, -0.1), C64::new(-0.25, 0.2), ZERO] {
+            let exact = direct(Kernel::Harmonic, zeval, &zs, &g);
+            let approx = l2p(z0, &l, zeval);
+            assert!(
+                (approx - exact).abs() / exact.abs() < 1e-11,
+                "{approx:?} vs {exact:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn p2l_converges_to_direct_log() {
+        let mut r = Pcg64::seed_from_u64(4);
+        let z0 = C64::new(0.0, 0.0);
+        let zs: Vec<C64> = (0..8)
+            .map(|_| C64::new(-1.5, 2.0) + rand_c(&mut r, -0.1, 0.1))
+            .collect();
+        let g: Vec<C64> = (0..8)
+            .map(|_| C64::real(r.uniform_in(-1.0, 1.0)))
+            .collect();
+        let mut l = Coeffs::zero(40);
+        p2l(Kernel::Log, z0, &zs, &g, &mut l);
+        let zeval = C64::new(0.15, 0.1);
+        let exact = direct(Kernel::Log, zeval, &zs, &g);
+        let approx = l2p(z0, &l, zeval);
+        assert!((approx.re - exact.re).abs() / exact.re.abs().max(1.0) < 1e-12);
+    }
+
+    #[test]
+    fn truncation_error_decays_like_ratio_pow_p() {
+        // |error| ~ (r_src / d)^p for the multipole expansion: doubling p
+        // should square the error ratio (geometric decay).
+        let mut r = Pcg64::seed_from_u64(5);
+        let z0 = ZERO;
+        let zs: Vec<C64> = (0..10).map(|_| rand_c(&mut r, -0.25, 0.25)).collect();
+        let g: Vec<C64> = (0..10).map(|_| rand_c(&mut r, -1.0, 1.0)).collect();
+        let zeval = C64::new(1.0, 0.4); // ratio ≈ 0.35/1.08 ≈ 0.33
+        let exact = direct(Kernel::Harmonic, zeval, &zs, &g);
+        let mut errs = Vec::new();
+        for p in [5, 10, 20] {
+            let mut m = Coeffs::zero(p);
+            p2m(Kernel::Harmonic, z0, &zs, &g, &mut m);
+            errs.push((m2p(z0, &m, zeval) - exact).abs());
+        }
+        assert!(errs[1] < errs[0] * 1e-1, "{errs:?}");
+        assert!(errs[2] < errs[1] * 1e-2, "{errs:?}");
+    }
+
+    #[test]
+    fn l2p_horner_matches_naive() {
+        let mut r = Pcg64::seed_from_u64(6);
+        let p = 17;
+        let b = Coeffs(
+            (0..=p)
+                .map(|_| rand_c(&mut r, -1.0, 1.0))
+                .collect::<Vec<_>>(),
+        );
+        let z0 = C64::new(0.3, -0.2);
+        let z = C64::new(0.5, 0.1);
+        let w = z - z0;
+        let naive: C64 = (0..=p).map(|j| b.0[j] * w.powi(j as i32)).sum();
+        let horner = l2p(z0, &b, z);
+        assert!((naive - horner).abs() < 1e-13 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn coeffs_utils() {
+        let mut a = Coeffs::zero(3);
+        assert!(a.is_zero());
+        assert_eq!(a.order(), 3);
+        let b = Coeffs(vec![ZERO, C64::real(1.0), ZERO, ZERO]);
+        a.add_assign(&b);
+        assert_eq!(a, b);
+        a.clear();
+        assert!(a.is_zero());
+    }
+}

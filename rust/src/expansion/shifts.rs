@@ -1,0 +1,504 @@
+//! The three translation operators of the FMM computational phase:
+//! M2M (Algorithm 3.4), L2L (Algorithm 3.5) and M2L (Algorithm 3.6).
+//!
+//! Each operator exists in two forms:
+//!
+//! * the **unscaled** form — direct accumulation with explicit powers of the
+//!   shift vector (Algorithm 3.4(a) for M2M; series forms for the others),
+//!   kept as the readable reference;
+//! * the **scaled** form — the paper's pre-scale → *constant triangular
+//!   core of pure additions* → post-scale factorization (Algorithms 3.4(b),
+//!   3.5, 3.6). The triangular cores are what make the operators
+//!   data-parallel-friendly: after the O(p) scaling passes, the O(p²) core
+//!   touches no shift-dependent data at all. On the GPU the paper runs the
+//!   core in shared memory with two threads per shift; on the TPU mapping
+//!   (DESIGN.md §Hardware-Adaptation) the same core becomes a constant
+//!   matrix multiplied on the MXU — see [`super::matrices`].
+//!
+//! **Transcription note on Algorithm 3.6.** The M2L pseudocode as printed in
+//! the paper does not reproduce the M2L linear map under our (or any
+//! sign-flipped) convention — we verified this symbolically by comparing the
+//! map it induces on unit coefficient vectors against the Taylor-series
+//! operator, over all loop-direction/order variants. We therefore derive an
+//! equivalent triangular factorization from scratch: writing the scaled map
+//! as `b(w) = A(1/(1+w))` in generating-function form, Horner evaluation of
+//! `A` interleaves "add `â_k` to `c_0`" steps with divisions by `(1+w)`,
+//! each of which is one in-place alternating-prefix pass
+//! `c_j := c_j − c_{j−1}`. The result has exactly the pre-scale /
+//! add-only-triangular-core / post-scale structure (and operation count)
+//! of the paper's algorithm and is validated against the series form to
+//! machine precision up to p = 60 in the tests below.
+
+use super::Coeffs;
+use crate::complex::{C64, ZERO};
+
+/// Reusable scratch space for the shift operators: the drivers call the
+/// shifts millions of times, so the working vectors must not be allocated
+/// per call (see EXPERIMENTS.md §Perf).
+#[derive(Clone, Debug, Default)]
+pub struct ShiftScratch {
+    buf: Vec<C64>,
+    buf2: Vec<C64>,
+}
+
+impl ShiftScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn zeroed(&mut self, n: usize) -> &mut [C64] {
+        self.buf.clear();
+        self.buf.resize(n, ZERO);
+        &mut self.buf
+    }
+
+    #[inline]
+    fn zeroed_pair(&mut self, n: usize) -> (&mut [C64], &mut [C64]) {
+        self.buf.clear();
+        self.buf.resize(n, ZERO);
+        self.buf2.clear();
+        self.buf2.resize(n, ZERO);
+        (&mut self.buf, &mut self.buf2)
+    }
+}
+
+/// M2M, unscaled (Algorithm 3.4(a) semantics): translate a multipole
+/// expansion from child center `z_c` to parent center `z_p`, *accumulating*
+/// into `parent`.
+///
+/// `a'_l = Σ_{k=1..l} C(l−1,k−1) a_k d^{l−k} − a_0 d^l/l`, `d = z_c − z_p`.
+pub fn m2m_unscaled(child: &Coeffs, z_c: C64, parent: &mut Coeffs, z_p: C64) {
+    let p = child.order();
+    debug_assert_eq!(parent.order(), p);
+    let d = z_c - z_p;
+    // work in a scratch copy: triangular pass of Alg 3.4(a) with the
+    // d-multiplication kept inside the core.
+    let mut a = child.0.clone();
+    for k in (2..=p).rev() {
+        for j in k..=p {
+            let prev = a[j - 1];
+            a[j] += d * prev;
+        }
+    }
+    // a_0 log-term correction and accumulation
+    let a0 = child.0[0];
+    let mut dl = d; // d^l
+    parent.0[0] += a0;
+    for l in 1..=p {
+        parent.0[l] += a[l] - a0 * dl / l as f64;
+        dl *= d;
+    }
+}
+
+/// M2M, scaled (Algorithm 3.4(b)): identical map, factored as
+/// pre-scale (`â_k = a_k/d^k`) → add-only triangular core → post-scale.
+/// Requires `d ≠ 0`; the FMM never shifts by zero (child ≠ parent center
+/// for non-degenerate boxes) — callers with `d = 0` must add coefficients
+/// directly instead.
+pub fn m2m_scaled(child: &Coeffs, z_c: C64, parent: &mut Coeffs, z_p: C64) {
+    m2m_scaled_with(&child.0, z_c, &mut parent.0, z_p, &mut ShiftScratch::new())
+}
+
+/// Slice-based M2M with caller-provided scratch — the driver hot path.
+pub fn m2m_scaled_with(
+    child: &[C64],
+    z_c: C64,
+    parent: &mut [C64],
+    z_p: C64,
+    scratch: &mut ShiftScratch,
+) {
+    let p = child.len() - 1;
+    debug_assert_eq!(parent.len(), p + 1);
+    let d = z_c - z_p;
+    debug_assert!(d.norm_sqr() > 0.0, "m2m_scaled with zero shift");
+    let id = d.recip();
+
+    // pre-scale
+    let a = scratch.zeroed(p + 1);
+    let mut pw = id; // d^{-k}
+    for k in 1..=p {
+        a[k] = child[k] * pw;
+        pw *= id;
+    }
+    // triangular core: pure complex additions (re/im independent — the
+    // property the paper exploits for two threads per shift)
+    for k in (2..=p).rev() {
+        for j in k..=p {
+            let prev = a[j - 1];
+            a[j] += prev;
+        }
+    }
+    // post-scale + a_0 terms
+    let a0 = child[0];
+    parent[0] += a0;
+    let mut dl = d;
+    for l in 1..=p {
+        parent[l] += a[l] * dl - a0 * dl / l as f64;
+        dl *= d;
+    }
+}
+
+/// L2L (Algorithm 3.5): translate a local expansion from parent center `z_p`
+/// to child center `z_c`, accumulating into `child`.
+///
+/// `b'_l = Σ_{k≥l} C(k,l) b_k d^{k−l}`, `d = z_c − z_p`. Scaled form with
+/// `r = z_p − z_c` exactly as printed in the paper (verified against the
+/// series form).
+pub fn l2l(parent: &Coeffs, z_p: C64, child: &mut Coeffs, z_c: C64) {
+    l2l_with(&parent.0, z_p, &mut child.0, z_c, &mut ShiftScratch::new())
+}
+
+/// Slice-based L2L with caller-provided scratch — the driver hot path.
+pub fn l2l_with(parent: &[C64], z_p: C64, child: &mut [C64], z_c: C64, scratch: &mut ShiftScratch) {
+    let p = parent.len() - 1;
+    debug_assert_eq!(child.len(), p + 1);
+    let r = z_p - z_c;
+    if r.norm_sqr() == 0.0 {
+        for (c, q) in child.iter_mut().zip(parent) {
+            *c += *q;
+        }
+        return;
+    }
+    // pre-scale: b̂_k = b_k r^k
+    let b = scratch.zeroed(p + 1);
+    let mut pw = crate::complex::ONE;
+    for k in 0..=p {
+        b[k] = parent[k] * pw;
+        pw *= r;
+    }
+    // triangular core (paper lines 5–9): subtract-only passes
+    for k in 0..=p {
+        for j in (p - k)..p {
+            let next = b[j + 1];
+            b[j] -= next;
+        }
+    }
+    // post-scale: /r^l
+    let ir = r.recip();
+    let mut pw = crate::complex::ONE;
+    for l in 0..=p {
+        child[l] += b[l] * pw;
+        pw *= ir;
+    }
+}
+
+/// L2L, unscaled series form (reference for cross-validation).
+pub fn l2l_unscaled(parent: &Coeffs, z_p: C64, child: &mut Coeffs, z_c: C64) {
+    let p = parent.order();
+    let d = z_c - z_p;
+    let binom = super::matrices::BinomTable::new(p + 1);
+    for l in 0..=p {
+        let mut acc = ZERO;
+        let mut dp = crate::complex::ONE; // d^{k-l}
+        for k in l..=p {
+            acc += parent.0[k] * binom.c(k, l) * dp;
+            dp *= d;
+        }
+        child.0[l] += acc;
+    }
+}
+
+/// M2L (Algorithm 3.6 role): convert the multipole expansion around `z_i`
+/// into a local expansion around `z_o`, accumulating into `local`.
+///
+/// Series: with `r = z_o − z_i`, `â_k = a_k/r^k`,
+/// `b_l = (−1)^l r^{−l} Σ_{k≥1} C(k+l−1, l) â_k  +  a_0-terms`, where the
+/// `a_0` terms are `b_0 += a_0 log r`, `b_l −= a_0 (−1)^l/(l r^l)`.
+///
+/// Implemented via the Horner/alternating-prefix factorization described in
+/// the module docs: O(p) complex multiplications (scaling) + O(p²) complex
+/// additions (core), the same cost signature as the paper's algorithm.
+pub fn m2l(multipole: &Coeffs, z_i: C64, local: &mut Coeffs, z_o: C64) {
+    m2l_with(&multipole.0, z_i, &mut local.0, z_o, &mut ShiftScratch::new())
+}
+
+/// Slice-based M2L with caller-provided scratch — the driver hot path
+/// (the single most executed shift of the whole algorithm, Table 5.1).
+pub fn m2l_with(
+    multipole: &[C64],
+    z_i: C64,
+    local: &mut [C64],
+    z_o: C64,
+    scratch: &mut ShiftScratch,
+) {
+    let p = multipole.len() - 1;
+    debug_assert_eq!(local.len(), p + 1);
+    let r = z_o - z_i;
+    debug_assert!(r.norm_sqr() > 0.0, "m2l with coincident centers");
+    let ir = r.recip();
+
+    let (ahat, c) = scratch.zeroed_pair(p + 1);
+
+    // pre-scale: â_k = a_k / r^k
+    let mut pw = ir;
+    for k in 1..=p {
+        ahat[k] = multipole[k] * pw;
+        pw *= ir;
+    }
+
+    // Horner core: c := (c + â_k e_0) / (1 + w), divisions by (1+w) as
+    // in-place alternating-prefix passes. Add-only triangular core.
+    for k in (1..=p).rev() {
+        c[0] += ahat[k];
+        for j in 1..=p {
+            let prev = c[j - 1];
+            c[j] -= prev;
+        }
+    }
+
+    // post-scale (+ a_0 terms): b_l += c_l / r^l
+    let a0 = multipole[0];
+    let has_a0 = a0 != ZERO;
+    if has_a0 {
+        local[0] += c[0] + a0 * r.ln();
+    } else {
+        local[0] += c[0];
+    }
+    let mut pw = ir; // r^{-l}
+    let mut sign = -1.0; // (−1)^l
+    for l in 1..=p {
+        if has_a0 {
+            local[l] += (c[l] - a0 * sign / l as f64) * pw;
+        } else {
+            local[l] += c[l] * pw;
+        }
+        pw *= ir;
+        sign = -sign;
+    }
+}
+
+/// M2L, unscaled series form (reference for cross-validation; O(p²)
+/// multiplications — the form the paper improves upon).
+pub fn m2l_unscaled(multipole: &Coeffs, z_i: C64, local: &mut Coeffs, z_o: C64) {
+    let p = multipole.order();
+    let r = z_o - z_i;
+    let ir = r.recip();
+    let binom = super::matrices::BinomTable::new(2 * p + 1);
+    let irk = ir.powi_table(p); // r^{-k}
+    let a0 = multipole.0[0];
+    let mut sign_l = 1.0;
+    let mut irl = crate::complex::ONE;
+    for l in 0..=p {
+        let mut acc = ZERO;
+        for k in 1..=p {
+            acc += multipole.0[k] * irk[k] * binom.c(k + l - 1, l);
+        }
+        acc = acc * irl * sign_l;
+        if a0 != ZERO {
+            if l == 0 {
+                acc += a0 * r.ln();
+            } else {
+                acc -= a0 * sign_l / l as f64 * irl;
+            }
+        }
+        local.0[l] += acc;
+        sign_l = -sign_l;
+        irl *= ir;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expansion::{l2p, m2p, p2m, Kernel};
+    use crate::util::rng::Pcg64;
+
+    fn rand_c(r: &mut Pcg64) -> C64 {
+        C64::new(r.uniform_in(-1.0, 1.0), r.uniform_in(-1.0, 1.0))
+    }
+
+    fn rand_coeffs(r: &mut Pcg64, p: usize, a0: bool) -> Coeffs {
+        let mut c = Coeffs((0..=p).map(|_| rand_c(r)).collect());
+        if !a0 {
+            c.0[0] = ZERO;
+        }
+        c
+    }
+
+    #[test]
+    fn m2m_scaled_matches_unscaled() {
+        let mut r = Pcg64::seed_from_u64(10);
+        for p in [1usize, 2, 5, 17, 40, 60] {
+            let child = rand_coeffs(&mut r, p, true);
+            let z_c = C64::new(0.25, 0.25);
+            let z_p = C64::new(0.5, 0.5);
+            let mut out_a = Coeffs::zero(p);
+            let mut out_b = Coeffs::zero(p);
+            m2m_unscaled(&child, z_c, &mut out_a, z_p);
+            m2m_scaled(&child, z_c, &mut out_b, z_p);
+            for j in 0..=p {
+                let err = (out_a.0[j] - out_b.0[j]).abs();
+                let scale = out_a.0[j].abs().max(1.0);
+                assert!(err / scale < 1e-12, "p={p} j={j}: {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn m2m_preserves_far_field() {
+        // P2M at child center, M2M to parent center, evaluate far away:
+        // must equal P2M directly at parent center.
+        let mut r = Pcg64::seed_from_u64(11);
+        let p = 25;
+        let z_c = C64::new(0.25, 0.75);
+        let z_p = C64::new(0.5, 0.5);
+        let zs: Vec<C64> = (0..12).map(|_| z_c + rand_c(&mut r) * 0.1).collect();
+        let g: Vec<C64> = (0..12).map(|_| rand_c(&mut r)).collect();
+
+        for kernel in [Kernel::Harmonic, Kernel::Log] {
+            let mut mc = Coeffs::zero(p);
+            p2m(kernel, z_c, &zs, &g, &mut mc);
+            let mut mp = Coeffs::zero(p);
+            m2m_scaled(&mc, z_c, &mut mp, z_p);
+
+            let mut mp_direct = Coeffs::zero(p);
+            p2m(kernel, z_p, &zs, &g, &mut mp_direct);
+
+            let zeval = C64::new(3.0, -2.0);
+            let via_shift = m2p(z_p, &mp, zeval);
+            let direct = m2p(z_p, &mp_direct, zeval);
+            assert!(
+                (via_shift.re - direct.re).abs() < 1e-10 * direct.re.abs().max(1.0),
+                "{kernel:?}"
+            );
+            assert!(
+                (via_shift.im - direct.im).abs() < 1e-10 * direct.im.abs().max(1.0),
+                "{kernel:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn m2l_matches_series_reference() {
+        let mut r = Pcg64::seed_from_u64(12);
+        for p in [1usize, 2, 3, 8, 17, 42, 60] {
+            let m = rand_coeffs(&mut r, p, true);
+            let z_i = C64::new(0.1, 0.1);
+            let z_o = C64::new(1.3, -0.4);
+            let mut fast = Coeffs::zero(p);
+            let mut slow = Coeffs::zero(p);
+            m2l(&m, z_i, &mut fast, z_o);
+            m2l_unscaled(&m, z_i, &mut slow, z_o);
+            for j in 0..=p {
+                let err = (fast.0[j] - slow.0[j]).abs();
+                let scale = slow.0[j].abs().max(1.0);
+                assert!(err / scale < 1e-11, "p={p} j={j}: {err:e}");
+            }
+        }
+    }
+
+    #[test]
+    fn m2l_converts_field_correctly() {
+        // Multipole of sources near z_i, M2L to z_o (well separated),
+        // evaluate local expansion near z_o: must match direct sum.
+        let mut r = Pcg64::seed_from_u64(13);
+        let p = 30;
+        let z_i = ZERO;
+        let z_o = C64::new(2.0, 1.0);
+        let zs: Vec<C64> = (0..10).map(|_| rand_c(&mut r) * 0.2).collect();
+        let g: Vec<C64> = (0..10).map(|_| rand_c(&mut r)).collect();
+
+        for kernel in [Kernel::Harmonic, Kernel::Log] {
+            let mut m = Coeffs::zero(p);
+            p2m(kernel, z_i, &zs, &g, &mut m);
+            let mut loc = Coeffs::zero(p);
+            m2l(&m, z_i, &mut loc, z_o);
+            let zeval = z_o + C64::new(0.15, -0.2);
+            let approx = l2p(z_o, &loc, zeval);
+            let exact: C64 = zs
+                .iter()
+                .zip(&g)
+                .map(|(&s, &q)| kernel.eval(zeval, s, q))
+                .sum();
+            // real part: valid for both kernels; imaginary only for harmonic
+            assert!(
+                (approx.re - exact.re).abs() < 1e-9 * exact.re.abs().max(1.0),
+                "{kernel:?}: {approx:?} vs {exact:?}"
+            );
+            if kernel == Kernel::Harmonic {
+                assert!((approx.im - exact.im).abs() < 1e-9 * exact.im.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn l2l_matches_unscaled_and_preserves_values() {
+        let mut r = Pcg64::seed_from_u64(14);
+        for p in [1usize, 4, 17, 42] {
+            let parent = rand_coeffs(&mut r, p, true);
+            let z_p = C64::new(0.5, 0.5);
+            let z_c = C64::new(0.3, 0.65);
+            let mut a = Coeffs::zero(p);
+            let mut b = Coeffs::zero(p);
+            l2l(&parent, z_p, &mut a, z_c);
+            l2l_unscaled(&parent, z_p, &mut b, z_c);
+            for j in 0..=p {
+                let err = (a.0[j] - b.0[j]).abs();
+                assert!(err / b.0[j].abs().max(1.0) < 1e-11, "p={p} j={j}");
+            }
+            // L2L of a full-order expansion is exact: same value at a point
+            // (within truncation of the re-expansion, exact for polynomials)
+            let z = C64::new(0.35, 0.6);
+            let v_parent = l2p(z_p, &parent, z);
+            let v_child = l2p(z_c, &a, z);
+            assert!(
+                (v_parent - v_child).abs() < 1e-10 * v_parent.abs().max(1.0),
+                "p={p}"
+            );
+        }
+    }
+
+    #[test]
+    fn l2l_zero_shift_is_identity() {
+        let mut r = Pcg64::seed_from_u64(15);
+        let parent = rand_coeffs(&mut r, 9, true);
+        let z = C64::new(0.1, 0.9);
+        let mut out = Coeffs::zero(9);
+        l2l(&parent, z, &mut out, z);
+        assert_eq!(out, parent);
+    }
+
+    #[test]
+    fn m2m_composition_along_tree_path() {
+        // Shifting child→parent→grandparent must equal child→grandparent.
+        let mut r = Pcg64::seed_from_u64(16);
+        let p = 20;
+        let c = rand_coeffs(&mut r, p, true);
+        let z0 = C64::new(0.1, 0.2);
+        let z1 = C64::new(0.4, 0.3);
+        let z2 = C64::new(0.9, 0.8);
+        let mut via = Coeffs::zero(p);
+        let mut tmp = Coeffs::zero(p);
+        m2m_scaled(&c, z0, &mut tmp, z1);
+        m2m_scaled(&tmp, z1, &mut via, z2);
+        let mut direct = Coeffs::zero(p);
+        m2m_scaled(&c, z0, &mut direct, z2);
+        for j in 0..=p {
+            let err = (via.0[j] - direct.0[j]).abs();
+            assert!(err / direct.0[j].abs().max(1.0) < 1e-10, "j={j}");
+        }
+    }
+
+    #[test]
+    fn operators_are_linear() {
+        let mut r = Pcg64::seed_from_u64(17);
+        let p = 12;
+        let x = rand_coeffs(&mut r, p, false);
+        let y = rand_coeffs(&mut r, p, false);
+        let z_i = ZERO;
+        let z_o = C64::new(1.5, 0.7);
+        let mut xy_sum = Coeffs::zero(p);
+        let mut sum_xy = Coeffs::zero(p);
+        // M2L(x) + M2L(y)
+        m2l(&x, z_i, &mut xy_sum, z_o);
+        m2l(&y, z_i, &mut xy_sum, z_o);
+        // M2L(x + y)
+        let mut both = x.clone();
+        both.add_assign(&y);
+        m2l(&both, z_i, &mut sum_xy, z_o);
+        for j in 0..=p {
+            assert!((xy_sum.0[j] - sum_xy.0[j]).abs() < 1e-11);
+        }
+    }
+}

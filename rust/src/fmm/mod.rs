@@ -1,0 +1,624 @@
+//! The serial CPU FMM driver — the paper's reference implementation
+//! (§4: single-threaded, symmetry-exploiting, scaled shift operators).
+//!
+//! The driver is fully *phase-instrumented*: it reports wall-clock time and
+//! work counts for every phase of Table 5.1 (Sort, Connect, P2M, M2M, M2L,
+//! L2L, L2P, P2P), which the evaluation harness uses directly and the GPU
+//! cost simulator consumes as its workload description.
+
+use std::time::Instant;
+
+use crate::complex::{C64, ZERO};
+use crate::config::FmmConfig;
+use crate::connectivity::Connectivity;
+use crate::expansion::matrices::{M2lOperator, M2lScratch};
+use crate::expansion::shifts::{l2l_with, m2l_with, m2m_scaled_with, ShiftScratch};
+use crate::expansion::{l2p, m2p, p2l, p2m, Kernel};
+use crate::tree::{boxes_at_level, partition::SortStats, Pyramid};
+
+/// Phases of the algorithm, in execution order (Table 5.1 vocabulary).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Sort = 0,
+    Connect = 1,
+    P2M = 2,
+    M2M = 3,
+    M2L = 4,
+    L2L = 5,
+    L2P = 6,
+    P2P = 7,
+}
+
+pub const N_PHASES: usize = 8;
+pub const PHASE_NAMES: [&str; N_PHASES] =
+    ["Sort", "Connect", "P2M", "M2M", "M2L", "L2L", "L2P", "P2P"];
+
+/// Wall-clock seconds per phase.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimes(pub [f64; N_PHASES]);
+
+impl PhaseTimes {
+    #[inline]
+    pub fn get(&self, ph: Phase) -> f64 {
+        self.0[ph as usize]
+    }
+
+    pub fn total(&self) -> f64 {
+        self.0.iter().sum()
+    }
+
+    pub fn add(&mut self, other: &PhaseTimes) {
+        for (a, b) in self.0.iter_mut().zip(&other.0) {
+            *a += *b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for a in self.0.iter_mut() {
+            *a *= s;
+        }
+    }
+}
+
+/// Work counts per phase — the architecture-independent description of one
+/// FMM evaluation, from which `gpusim` predicts GPU time.
+#[derive(Clone, Debug, Default)]
+pub struct WorkCounts {
+    pub n: usize,
+    pub levels: usize,
+    pub p: usize,
+    /// Leaf populations (finest-level box sizes).
+    pub leaf_sizes: Vec<u32>,
+    /// Per level `1..=L`: number of M2L shifts.
+    pub m2l_per_level: Vec<usize>,
+    /// Per level `1..=L`: number of M2M shifts (= boxes at that level).
+    pub m2m_per_level: Vec<usize>,
+    /// Per level `1..=L`: number of L2L shifts into that level.
+    pub l2l_per_level: Vec<usize>,
+    /// P2P: pairwise kernel evaluations actually performed.
+    pub p2p_pairs: usize,
+    /// P2P: per destination box, the total count of source particles
+    /// streamed through the cache (GPU model granularity).
+    pub p2p_src_per_box: Vec<u32>,
+    /// Finest-level shortcut pair counts.
+    pub p2l_pairs: usize,
+    pub m2p_pairs: usize,
+    /// Particle↔expansion conversions.
+    pub p2m_particles: usize,
+    /// θ-criterion evaluations in the connect phase.
+    pub connect_checks: usize,
+    /// Partitioning statistics.
+    pub sort: SortStats,
+}
+
+/// Options of one evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct FmmOptions {
+    pub cfg: FmmConfig,
+    pub kernel: Kernel,
+    /// Use the CPU symmetry trick in the near field (§4.2). The directed
+    /// (GPU-layout) evaluation is used when false.
+    pub symmetric_p2p: bool,
+}
+
+impl Default for FmmOptions {
+    fn default() -> Self {
+        Self {
+            cfg: FmmConfig::default(),
+            kernel: Kernel::Harmonic,
+            symmetric_p2p: true,
+        }
+    }
+}
+
+/// Result of one evaluation.
+#[derive(Clone, Debug)]
+pub struct FmmOutput {
+    /// Potential at every input point, in the caller's original order.
+    pub potentials: Vec<C64>,
+    pub times: PhaseTimes,
+    pub counts: WorkCounts,
+}
+
+/// Coefficient pyramid: per level, a flat `4^l × (p+1)` array.
+pub(crate) struct CoeffPyramid {
+    pub p: usize,
+    pub levels: Vec<Vec<C64>>,
+}
+
+impl CoeffPyramid {
+    fn zeros(levels: usize, p: usize) -> Self {
+        Self {
+            p,
+            levels: (0..=levels)
+                .map(|l| vec![ZERO; boxes_at_level(l) * (p + 1)])
+                .collect(),
+        }
+    }
+
+    #[inline]
+    pub fn of(&self, l: usize, b: usize) -> &[C64] {
+        &self.levels[l][b * (self.p + 1)..(b + 1) * (self.p + 1)]
+    }
+
+    #[inline]
+    fn of_mut(&mut self, l: usize, b: usize) -> &mut [C64] {
+        &mut self.levels[l][b * (self.p + 1)..(b + 1) * (self.p + 1)]
+    }
+}
+
+/// Evaluate Eq. (1.1) at all source points with the adaptive FMM.
+pub fn evaluate(points: &[C64], gammas: &[C64], opts: &FmmOptions) -> FmmOutput {
+    let levels = opts.cfg.levels_for(points.len());
+    let mut times = PhaseTimes::default();
+
+    // ---- Sort: build the pyramid -------------------------------------
+    let t = Instant::now();
+    let pyr = Pyramid::build(points, gammas, levels);
+    times.0[Phase::Sort as usize] = t.elapsed().as_secs_f64();
+
+    // ---- Connect ------------------------------------------------------
+    let t = Instant::now();
+    let con = Connectivity::build(&pyr, opts.cfg.theta);
+    times.0[Phase::Connect as usize] = t.elapsed().as_secs_f64();
+
+    let (phi_leaf, mut times2, counts) = evaluate_on_tree(&pyr, &con, opts);
+    times2.0[Phase::Sort as usize] = times.0[Phase::Sort as usize];
+    times2.0[Phase::Connect as usize] = times.0[Phase::Connect as usize];
+
+    FmmOutput {
+        potentials: pyr.unpermute(&phi_leaf),
+        times: times2,
+        counts,
+    }
+}
+
+/// The computational phase on a prebuilt tree: returns leaf-ordered
+/// potentials plus timings/counts (Sort/Connect slots left zero).
+///
+/// Exposed so the harness can time the computational part against *fixed*
+/// trees — exactly what the paper does ("the sorting was performed on the
+/// CPU to ensure identical multipole trees", §5).
+pub fn evaluate_on_tree(
+    pyr: &Pyramid,
+    con: &Connectivity,
+    opts: &FmmOptions,
+) -> (Vec<C64>, PhaseTimes, WorkCounts) {
+    let p = opts.cfg.p;
+    let levels = pyr.levels;
+    let nl = pyr.n_leaves();
+    let mut times = PhaseTimes::default();
+    let mut counts = WorkCounts {
+        n: pyr.particles.len(),
+        levels,
+        p,
+        leaf_sizes: (0..nl)
+            .map(|b| (pyr.starts[b + 1] - pyr.starts[b]) as u32)
+            .collect(),
+        connect_checks: con.checks,
+        sort: pyr.sort_stats,
+        ..Default::default()
+    };
+
+    // SoA copies of the permuted particles (used by every particle phase)
+    let pos: Vec<C64> = pyr.particles.iter().map(|q| q.pos).collect();
+    let gam: Vec<C64> = pyr.particles.iter().map(|q| q.gamma).collect();
+
+    let mut multipole = CoeffPyramid::zeros(levels, p);
+    let mut local = CoeffPyramid::zeros(levels, p);
+    let mut scratch = ShiftScratch::new();
+
+    // ---- P2M: leaf multipole expansions -------------------------------
+    let t = Instant::now();
+    {
+        let centers = pyr.centers(levels);
+        for b in 0..nl {
+            let (lo, hi) = (pyr.starts[b], pyr.starts[b + 1]);
+            let mut acc = crate::expansion::Coeffs::zero(p);
+            p2m(opts.kernel, centers[b], &pos[lo..hi], &gam[lo..hi], &mut acc);
+            multipole.of_mut(levels, b).copy_from_slice(&acc.0);
+        }
+        counts.p2m_particles = pyr.particles.len();
+    }
+    times.0[Phase::P2M as usize] = t.elapsed().as_secs_f64();
+
+    // ---- M2M: upward pass ---------------------------------------------
+    let t = Instant::now();
+    counts.m2m_per_level = vec![0; levels + 1];
+    for l in (1..=levels).rev() {
+        let (parents, children) = {
+            // split-borrow the two levels
+            let (lo, hi) = multipole.levels.split_at_mut(l);
+            (&mut lo[l - 1], &hi[0])
+        };
+        let child_centers = pyr.centers(l);
+        let parent_centers = pyr.centers(l - 1);
+        for b in 0..boxes_at_level(l) {
+            let zc = child_centers[b];
+            let zp = parent_centers[b >> 2];
+            let child = &children[b * (p + 1)..(b + 1) * (p + 1)];
+            let parent = &mut parents[(b >> 2) * (p + 1)..((b >> 2) + 1) * (p + 1)];
+            if (zc - zp).norm_sqr() == 0.0 {
+                for (pa, ch) in parent.iter_mut().zip(child) {
+                    *pa += *ch;
+                }
+            } else {
+                m2m_scaled_with(child, zc, parent, zp, &mut scratch);
+            }
+            counts.m2m_per_level[l] += 1;
+        }
+    }
+    times.0[Phase::M2M as usize] = t.elapsed().as_secs_f64();
+
+    // ---- M2L: the downward pass's far-field input ----------------------
+    //
+    // Hot path: the harmonic kernel (a_0 = 0) goes through the precomputed
+    // constant-matrix operator (vectorizable dot products — EXPERIMENTS.md
+    // §Perf); the general kernel keeps the paper-style recurrence, whose
+    // a_0 terms the matrix path omits.
+    let t = Instant::now();
+    counts.m2l_per_level = vec![0; levels + 1];
+    let m2l_op = (opts.kernel == Kernel::Harmonic).then(|| M2lOperator::new(p));
+    let mut m2l_scratch = M2lScratch::default();
+    for l in 1..=levels {
+        let centers = pyr.centers(l);
+        let (mults, locs) = (&multipole.levels[l], &mut local.levels[l]);
+        for b in 0..boxes_at_level(l) {
+            let zo = centers[b];
+            let dst = &mut locs[b * (p + 1)..(b + 1) * (p + 1)];
+            for &s in con.weak[l].sources(b) {
+                let su = s as usize;
+                let src = &mults[su * (p + 1)..(su + 1) * (p + 1)];
+                match &m2l_op {
+                    Some(op) => op.apply(src, centers[su], dst, zo, &mut m2l_scratch),
+                    None => m2l_with(src, centers[su], dst, zo, &mut scratch),
+                }
+            }
+            counts.m2l_per_level[l] += con.weak[l].sources(b).len();
+        }
+    }
+    // P2L shortcuts (finest level; timed with M2L — they substitute for it)
+    {
+        let centers = pyr.centers(levels);
+        for b in 0..nl {
+            let dst = local.of_mut(levels, b);
+            let mut acc = crate::expansion::Coeffs(dst.to_vec());
+            for &s in con.p2l.sources(b) {
+                let su = s as usize;
+                let (lo, hi) = (pyr.starts[su], pyr.starts[su + 1]);
+                p2l(opts.kernel, centers[b], &pos[lo..hi], &gam[lo..hi], &mut acc);
+                counts.p2l_pairs += 1;
+            }
+            dst.copy_from_slice(&acc.0);
+        }
+    }
+    times.0[Phase::M2L as usize] = t.elapsed().as_secs_f64();
+
+    // ---- L2L: push local expansions down -------------------------------
+    let t = Instant::now();
+    counts.l2l_per_level = vec![0; levels + 1];
+    for l in 1..levels {
+        let (parents, children) = {
+            let (lo, hi) = local.levels.split_at_mut(l + 1);
+            (&lo[l], &mut hi[0])
+        };
+        let parent_centers = pyr.centers(l);
+        let child_centers = pyr.centers(l + 1);
+        for b in 0..boxes_at_level(l + 1) {
+            let zp = parent_centers[b >> 2];
+            let zc = child_centers[b];
+            let parent = &parents[(b >> 2) * (p + 1)..((b >> 2) + 1) * (p + 1)];
+            let child = &mut children[b * (p + 1)..(b + 1) * (p + 1)];
+            l2l_with(parent, zp, child, zc, &mut scratch);
+            counts.l2l_per_level[l + 1] += 1;
+        }
+    }
+    times.0[Phase::L2L as usize] = t.elapsed().as_secs_f64();
+
+    // ---- L2P (+ M2P): far-field potential at the particles -------------
+    let t = Instant::now();
+    let mut phi = vec![ZERO; pyr.particles.len()];
+    {
+        let centers = pyr.centers(levels);
+        for b in 0..nl {
+            let (lo, hi) = (pyr.starts[b], pyr.starts[b + 1]);
+            let loc = crate::expansion::Coeffs(local.of(levels, b).to_vec());
+            for i in lo..hi {
+                phi[i] = l2p(centers[b], &loc, pos[i]);
+            }
+            for &s in con.m2p.sources(b) {
+                let su = s as usize;
+                let msrc = crate::expansion::Coeffs(multipole.of(levels, su).to_vec());
+                for i in lo..hi {
+                    phi[i] += m2p(centers[su], &msrc, pos[i]);
+                }
+                counts.m2p_pairs += 1;
+            }
+        }
+    }
+    times.0[Phase::L2P as usize] = t.elapsed().as_secs_f64();
+
+    // ---- P2P: near field ------------------------------------------------
+    //
+    // SoA split of positions/strengths: the inner pairwise loops run over
+    // plain f64 slices, which LLVM vectorizes where the access pattern
+    // allows (EXPERIMENTS.md §Perf — the CPU-side counterpart of the
+    // paper's SSE-intrinsics P2P, §4.4).
+    let t = Instant::now();
+    counts.p2p_src_per_box = vec![0; nl];
+    let xs: Vec<f64> = pos.iter().map(|z| z.re).collect();
+    let ys: Vec<f64> = pos.iter().map(|z| z.im).collect();
+    let gre: Vec<f64> = gam.iter().map(|z| z.re).collect();
+    let gim: Vec<f64> = gam.iter().map(|z| z.im).collect();
+    if opts.symmetric_p2p && opts.kernel == Kernel::Harmonic {
+        // CPU formulation (§4.2): each unordered box pair visited once,
+        // shared reciprocal serves both directions.
+        let mut phr: Vec<f64> = vec![0.0; phi.len()];
+        let mut phm: Vec<f64> = vec![0.0; phi.len()];
+        for b in 0..nl {
+            let (blo, bhi) = (pyr.starts[b], pyr.starts[b + 1]);
+            for &s in con.near.sources(b) {
+                let su = s as usize;
+                counts.p2p_src_per_box[b] += (pyr.starts[su + 1] - pyr.starts[su]) as u32;
+                if su < b {
+                    continue; // visited from the other side
+                }
+                let (slo, shi) = (pyr.starts[su], pyr.starts[su + 1]);
+                for i in blo..bhi {
+                    let (xi, yi) = (xs[i], ys[i]);
+                    let (gri, gii) = (gre[i], gim[i]);
+                    let j0 = if su == b { i + 1 } else { slo };
+                    let (mut ar, mut ai) = (0.0f64, 0.0f64);
+                    for j in j0..shi {
+                        // r = 1/(z_j − z_i); Φ_i += Γ_j r; Φ_j −= Γ_i r
+                        let dx = xs[j] - xi;
+                        let dy = ys[j] - yi;
+                        let inv = 1.0 / (dx * dx + dy * dy);
+                        let rr = dx * inv;
+                        let ri = -dy * inv;
+                        ar += gre[j] * rr - gim[j] * ri;
+                        ai += gre[j] * ri + gim[j] * rr;
+                        phr[j] -= gri * rr - gii * ri;
+                        phm[j] -= gri * ri + gii * rr;
+                    }
+                    counts.p2p_pairs += 2 * (shi - j0);
+                    phr[i] += ar;
+                    phm[i] += ai;
+                }
+            }
+        }
+        for (p_, (r, m)) in phi.iter_mut().zip(phr.iter().zip(&phm)) {
+            *p_ += C64::new(*r, *m);
+        }
+    } else {
+        // directed formulation (the GPU layout, §4.3)
+        for b in 0..nl {
+            let (blo, bhi) = (pyr.starts[b], pyr.starts[b + 1]);
+            for &s in con.near.sources(b) {
+                let su = s as usize;
+                let (slo, shi) = (pyr.starts[su], pyr.starts[su + 1]);
+                counts.p2p_src_per_box[b] += (shi - slo) as u32;
+                for i in blo..bhi {
+                    let zi = pos[i];
+                    let mut acc = phi[i];
+                    if su == b {
+                        for j in slo..shi {
+                            if j != i {
+                                acc += opts.kernel.eval(zi, pos[j], gam[j]);
+                                counts.p2p_pairs += 1;
+                            }
+                        }
+                    } else {
+                        for j in slo..shi {
+                            acc += opts.kernel.eval(zi, pos[j], gam[j]);
+                            counts.p2p_pairs += 1;
+                        }
+                    }
+                    phi[i] = acc;
+                }
+            }
+        }
+    }
+    times.0[Phase::P2P as usize] = t.elapsed().as_secs_f64();
+
+    (phi, times, counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::direct;
+    use crate::util::rng::Pcg64;
+    use crate::util::stats::max_rel_error;
+    use crate::workload;
+
+    fn run_case(
+        n: usize,
+        p: usize,
+        levels: Option<usize>,
+        kernel: Kernel,
+        symmetric: bool,
+        dist: workload::Distribution,
+        seed: u64,
+    ) -> (f64, FmmOutput) {
+        let mut r = Pcg64::seed_from_u64(seed);
+        let (pts, mut gs) = dist.generate(n, &mut r);
+        if kernel == Kernel::Log {
+            // the log potential is FMM-reproducible for *real* strengths
+            // only: a complex Γ couples the branch-dependent arg() into the
+            // real part of Γ·log(·)
+            for g in gs.iter_mut() {
+                g.im = 0.0;
+            }
+        }
+        let opts = FmmOptions {
+            cfg: FmmConfig {
+                p,
+                levels_override: levels,
+                ..FmmConfig::default()
+            },
+            kernel,
+            symmetric_p2p: symmetric,
+        };
+        let out = evaluate(&pts, &gs, &opts);
+        let exact = direct::eval_symmetric(kernel, &pts, &gs);
+        // Eq. (5.3): relative max error, on |Φ| for the harmonic kernel
+        let (a, e): (Vec<f64>, Vec<f64>) = if kernel == Kernel::Harmonic {
+            (
+                out.potentials.iter().map(|c| c.abs()).collect(),
+                exact.iter().map(|c| c.abs()).collect(),
+            )
+        } else {
+            (
+                out.potentials.iter().map(|c| c.re).collect(),
+                exact.iter().map(|c| c.re).collect(),
+            )
+        };
+        (max_rel_error(&a, &e, 1e-12), out)
+    }
+
+    #[test]
+    fn matches_direct_uniform_p17() {
+        // p=17 ⇒ TOL ≈ 1e-6 per the paper (§5.1)
+        let (err, _) = run_case(
+            2000,
+            17,
+            Some(2),
+            Kernel::Harmonic,
+            true,
+            workload::Distribution::Uniform,
+            42,
+        );
+        assert!(err < 1e-5, "relative error {err:e} too large for p=17");
+    }
+
+    #[test]
+    fn accuracy_improves_with_p() {
+        let mut prev = f64::INFINITY;
+        for p in [5, 10, 20] {
+            let (err, _) = run_case(
+                1500,
+                p,
+                Some(2),
+                Kernel::Harmonic,
+                true,
+                workload::Distribution::Uniform,
+                7,
+            );
+            assert!(
+                err < prev,
+                "error did not decrease at p={p}: {err:e} !< {prev:e}"
+            );
+            prev = err;
+        }
+        assert!(prev < 1e-6, "p=20 error {prev:e}");
+    }
+
+    #[test]
+    fn directed_p2p_matches_symmetric() {
+        let mut r = Pcg64::seed_from_u64(3);
+        let (pts, gs) = workload::uniform_square(1200, &mut r);
+        let base = FmmOptions {
+            cfg: FmmConfig {
+                p: 17,
+                levels_override: Some(2),
+                ..FmmConfig::default()
+            },
+            ..Default::default()
+        };
+        let sym = evaluate(&pts, &gs, &base);
+        let dir = evaluate(
+            &pts,
+            &gs,
+            &FmmOptions {
+                symmetric_p2p: false,
+                ..base
+            },
+        );
+        for (a, b) in sym.potentials.iter().zip(&dir.potentials) {
+            assert!((*a - *b).abs() < 1e-10 * a.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn nonuniform_distributions_stay_accurate() {
+        for (dist, seed) in [
+            (workload::Distribution::Normal { sigma: 0.1 }, 11),
+            (workload::Distribution::Layer { sigma: 0.05 }, 12),
+        ] {
+            let (err, out) = run_case(3000, 17, Some(3), Kernel::Harmonic, true, dist, seed);
+            assert!(err < 2e-5, "{}: error {err:e}", dist.name());
+            // non-uniform meshes at θ=1/2 and 3+ levels exercise the
+            // adaptive shortcuts
+            assert!(
+                out.counts.p2l_pairs + out.counts.m2p_pairs > 0,
+                "{}: expected P2L/M2P shortcuts",
+                dist.name()
+            );
+        }
+    }
+
+    #[test]
+    fn log_kernel_end_to_end() {
+        let (err, _) = run_case(
+            1000,
+            25,
+            Some(2),
+            Kernel::Log,
+            false,
+            workload::Distribution::Uniform,
+            13,
+        );
+        assert!(err < 1e-6, "log kernel error {err:e}");
+    }
+
+    #[test]
+    fn work_counts_consistent() {
+        let mut r = Pcg64::seed_from_u64(5);
+        let (pts, gs) = workload::uniform_square(4000, &mut r);
+        let opts = FmmOptions {
+            cfg: FmmConfig {
+                p: 10,
+                levels_override: Some(3),
+                ..FmmConfig::default()
+            },
+            ..Default::default()
+        };
+        let out = evaluate(&pts, &gs, &opts);
+        let c = &out.counts;
+        assert_eq!(c.n, 4000);
+        assert_eq!(c.levels, 3);
+        assert_eq!(c.leaf_sizes.iter().map(|&x| x as usize).sum::<usize>(), 4000);
+        assert_eq!(c.p2m_particles, 4000);
+        // M2M: one shift per non-root box
+        assert_eq!(
+            c.m2m_per_level.iter().sum::<usize>(),
+            4 + 16 + 64
+        );
+        // L2L: one shift per box below level 1
+        assert_eq!(c.l2l_per_level.iter().sum::<usize>(), 16 + 64);
+        assert!(c.m2l_per_level.iter().sum::<usize>() > 0);
+        assert!(c.p2p_pairs > 0);
+        assert!(c.connect_checks > 0);
+    }
+
+    #[test]
+    fn times_are_recorded() {
+        let mut r = Pcg64::seed_from_u64(6);
+        let (pts, gs) = workload::uniform_square(2000, &mut r);
+        let out = evaluate(
+            &pts,
+            &gs,
+            &FmmOptions {
+                cfg: FmmConfig {
+                    levels_override: Some(2),
+                    ..FmmConfig::default()
+                },
+                ..Default::default()
+            },
+        );
+        assert!(out.times.total() > 0.0);
+        assert!(out.times.get(Phase::P2P) > 0.0);
+        assert!(out.times.get(Phase::Sort) > 0.0);
+    }
+}

@@ -1,0 +1,209 @@
+//! Planar geometry for the multipole mesh: axis-aligned boxes, radii,
+//! eccentricity and the θ-criterion (paper Eq. 2.1).
+
+use crate::complex::C64;
+
+/// Split axis of a box (the pyramid alternates by eccentricity, §2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Axis {
+    X,
+    Y,
+}
+
+/// An axis-aligned rectangle in the plane.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Rect {
+    pub x0: f64,
+    pub y0: f64,
+    pub x1: f64,
+    pub y1: f64,
+}
+
+impl Rect {
+    pub fn new(x0: f64, y0: f64, x1: f64, y1: f64) -> Self {
+        debug_assert!(x1 >= x0 && y1 >= y0, "degenerate rect");
+        Self { x0, y0, x1, y1 }
+    }
+
+    /// Unit square `[0,1]²` — the domain of all paper experiments.
+    pub fn unit() -> Self {
+        Self::new(0.0, 0.0, 1.0, 1.0)
+    }
+
+    /// Bounding box of a point set (degenerate boxes allowed).
+    pub fn bounding(points: &[C64]) -> Self {
+        let mut r = Rect {
+            x0: f64::INFINITY,
+            y0: f64::INFINITY,
+            x1: f64::NEG_INFINITY,
+            y1: f64::NEG_INFINITY,
+        };
+        for p in points {
+            r.x0 = r.x0.min(p.re);
+            r.x1 = r.x1.max(p.re);
+            r.y0 = r.y0.min(p.im);
+            r.y1 = r.y1.max(p.im);
+        }
+        r
+    }
+
+    #[inline]
+    pub fn width(&self) -> f64 {
+        self.x1 - self.x0
+    }
+
+    #[inline]
+    pub fn height(&self) -> f64 {
+        self.y1 - self.y0
+    }
+
+    /// Center of the box = expansion center `z0` in Eqs. (2.2)–(2.3).
+    #[inline]
+    pub fn center(&self) -> C64 {
+        C64::new(0.5 * (self.x0 + self.x1), 0.5 * (self.y0 + self.y1))
+    }
+
+    /// Box radius: half-diagonal, the `r` of the θ-criterion. Every point of
+    /// the box lies within `radius()` of `center()`, with equality at corners.
+    #[inline]
+    pub fn radius(&self) -> f64 {
+        0.5 * (self.width() * self.width() + self.height() * self.height()).sqrt()
+    }
+
+    /// Split direction guided by eccentricity (§2: "the direction of the
+    /// split is guided by the eccentricity of the box", aiming at
+    /// width ≈ height since the θ-criterion is rotationally invariant).
+    #[inline]
+    pub fn split_axis(&self) -> Axis {
+        if self.width() >= self.height() {
+            Axis::X
+        } else {
+            Axis::Y
+        }
+    }
+
+    /// Cut the rectangle at coordinate `c` along `axis`, returning
+    /// (low side, high side).
+    pub fn split_at(&self, axis: Axis, c: f64) -> (Rect, Rect) {
+        match axis {
+            Axis::X => (
+                Rect::new(self.x0, self.y0, c, self.y1),
+                Rect::new(c, self.y0, self.x1, self.y1),
+            ),
+            Axis::Y => (
+                Rect::new(self.x0, self.y0, self.x1, c),
+                Rect::new(self.x0, c, self.x1, self.y1),
+            ),
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, p: C64) -> bool {
+        p.re >= self.x0 && p.re <= self.x1 && p.im >= self.y0 && p.im <= self.y1
+    }
+
+    /// Eccentricity `max(w,h)/min(w,h)` (∞ for degenerate boxes).
+    pub fn eccentricity(&self) -> f64 {
+        let (w, h) = (self.width(), self.height());
+        let (lo, hi) = if w < h { (w, h) } else { (h, w) };
+        if lo == 0.0 {
+            f64::INFINITY
+        } else {
+            hi / lo
+        }
+    }
+}
+
+/// The θ-criterion, Eq. (2.1): boxes with radii `r1`, `r2` at center
+/// distance `d` are *well separated* iff `R + θ·r ≤ θ·d` where
+/// `R = max(r1,r2)`, `r = min(r1,r2)`.
+///
+/// Guarantees a geometric error decay `~θ^p` for a p-term expansion of the
+/// larger box evaluated inside the smaller (see [7] in the paper).
+#[inline]
+pub fn theta_criterion(r1: f64, r2: f64, d: f64, theta: f64) -> bool {
+    let (big, small) = if r1 >= r2 { (r1, r2) } else { (r2, r1) };
+    big + theta * small <= theta * d
+}
+
+/// The r↔R-interchanged test used at the finest level (§2, noted already in
+/// Carrier–Greengard–Rokhlin): `r + θ·R ≤ θ·d`. When true for a strongly
+/// coupled pair, the *smaller* box's multipole can be evaluated directly in
+/// the larger (M2P) and the larger box's particles shifted into the
+/// smaller's local expansion (P2L).
+#[inline]
+pub fn theta_criterion_interchanged(r1: f64, r2: f64, d: f64, theta: f64) -> bool {
+    let (big, small) = if r1 >= r2 { (r1, r2) } else { (r2, r1) };
+    small + theta * big <= theta * d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rect_basics() {
+        let r = Rect::new(0.0, 0.0, 2.0, 1.0);
+        assert_eq!(r.width(), 2.0);
+        assert_eq!(r.height(), 1.0);
+        assert_eq!(r.center(), C64::new(1.0, 0.5));
+        assert!((r.radius() - 0.5 * 5.0f64.sqrt()).abs() < 1e-15);
+        assert_eq!(r.split_axis(), Axis::X);
+        assert!((r.eccentricity() - 2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn split_covers_parent() {
+        let r = Rect::unit();
+        let (a, b) = r.split_at(Axis::Y, 0.3);
+        assert_eq!(a.y1, 0.3);
+        assert_eq!(b.y0, 0.3);
+        assert_eq!(a.x1, 1.0);
+        assert!(a.contains(C64::new(0.5, 0.1)));
+        assert!(b.contains(C64::new(0.5, 0.9)));
+    }
+
+    #[test]
+    fn bounding_box() {
+        let pts = [C64::new(0.1, 0.7), C64::new(0.9, 0.2), C64::new(0.4, 0.4)];
+        let r = Rect::bounding(&pts);
+        assert_eq!((r.x0, r.y0, r.x1, r.y1), (0.1, 0.2, 0.9, 0.7));
+    }
+
+    #[test]
+    fn theta_criterion_basic() {
+        // equal radii: need d >= r(1+θ)/θ = 3r for θ=1/2
+        let th = 0.5;
+        assert!(theta_criterion(1.0, 1.0, 3.0, th));
+        assert!(!theta_criterion(1.0, 1.0, 2.999, th));
+        // asymmetric: R=2, r=1 -> need d >= (2 + 0.5)/0.5 = 5
+        assert!(theta_criterion(2.0, 1.0, 5.0, th));
+        assert!(!theta_criterion(2.0, 1.0, 4.999, th));
+        // symmetric in arguments
+        assert_eq!(
+            theta_criterion(2.0, 1.0, 4.5, th),
+            theta_criterion(1.0, 2.0, 4.5, th)
+        );
+    }
+
+    #[test]
+    fn interchanged_is_weaker_for_unequal_radii() {
+        let th = 0.5;
+        // R=2, r=1: interchanged needs d >= (1 + 0.5*2)/0.5 = 4 < 5
+        assert!(theta_criterion_interchanged(2.0, 1.0, 4.0, th));
+        assert!(!theta_criterion(2.0, 1.0, 4.0, th));
+        // equal radii: both reduce to the same test
+        assert_eq!(
+            theta_criterion(1.0, 1.0, 2.9, th),
+            theta_criterion_interchanged(1.0, 1.0, 2.9, th)
+        );
+    }
+
+    #[test]
+    fn split_axis_squares_up_boxes() {
+        let tall = Rect::new(0.0, 0.0, 1.0, 3.0);
+        assert_eq!(tall.split_axis(), Axis::Y);
+        let wide = Rect::new(0.0, 0.0, 3.0, 1.0);
+        assert_eq!(wide.split_axis(), Axis::X);
+    }
+}

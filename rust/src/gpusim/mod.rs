@@ -1,0 +1,2 @@
+//! GPU execution-cost simulator (placeholder — filled in by task #8).
+pub mod model;

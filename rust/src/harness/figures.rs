@@ -1,0 +1,563 @@
+//! One entry point per paper table/figure (DESIGN.md §3 maps each to the
+//! paper). All functions print the paper-style series to stdout and save a
+//! JSON record under `results/`.
+
+use crate::config::FmmConfig;
+use crate::expansion::Kernel;
+use crate::fmm::{Phase, PHASE_NAMES};
+use crate::gpusim::model::GpuSim;
+use crate::util::stats::{linear_fit, max_rel_error};
+use crate::workload::Distribution;
+
+use super::report::{render_distribution, SeriesTable};
+use super::runner::{direct_cpu_time, run_pair, workload_for};
+
+/// Global options of a harness invocation.
+#[derive(Clone, Copy, Debug)]
+pub struct HarnessOpts {
+    /// Paper-scale sizes (hours) instead of scaled defaults (minutes).
+    pub full: bool,
+    pub seed: u64,
+    /// Simulate the GTX 480 instead of the Tesla C2075.
+    pub gtx480: bool,
+}
+
+impl Default for HarnessOpts {
+    fn default() -> Self {
+        Self {
+            full: false,
+            seed: 20120424, // the paper's submission year/month, why not
+            gtx480: false,
+        }
+    }
+}
+
+impl HarnessOpts {
+    pub fn sim(&self) -> GpuSim {
+        if self.gtx480 {
+            GpuSim::gtx480()
+        } else {
+            GpuSim::c2075()
+        }
+    }
+}
+
+fn cfg_with(p: usize, n_per_box: usize) -> FmmConfig {
+    FmmConfig {
+        p,
+        n_per_box,
+        ..FmmConfig::default()
+    }
+}
+
+/// Figure 5.1 — speedup of the particle-bound phases as a function of the
+/// number of sources per box N_d (warp/thread-granularity dips).
+pub fn fig5_1(o: &HarnessOpts) -> SeriesTable {
+    let sim = o.sim();
+    let levels = if o.full { 6 } else { 4 };
+    let mut t = SeriesTable::new(
+        "Fig 5.1: speedup of individual parts vs N_d (GPU = cost model)",
+        "N_d",
+        &["P2M", "L2P", "P2P", "total"],
+    );
+    let step = if o.full { 1 } else { 2 };
+    for nd in (4..=96).step_by(step) {
+        let n = nd * (1usize << (2 * levels));
+        let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
+        let cfg = FmmConfig {
+            p: 17,
+            n_per_box: nd,
+            levels_override: Some(levels),
+            ..FmmConfig::default()
+        };
+        let pair = run_pair(&pts, &gs, &cfg, &sim);
+        t.push(
+            nd as f64,
+            vec![
+                pair.speedup(Phase::P2M),
+                pair.speedup(Phase::L2P),
+                pair.speedup(Phase::P2P),
+                pair.total_speedup(),
+            ],
+        );
+    }
+    t
+}
+
+/// Figure 5.2 — normalized total time vs N_d for CPU and GPU; the paper
+/// finds optima near 35 (CPU) and 45 (GPU).
+pub fn fig5_2(o: &HarnessOpts) -> SeriesTable {
+    let sim = o.sim();
+    let n = if o.full { 1_000_000 } else { 60_000 };
+    let mut rows = Vec::new();
+    for nd in (10..=100).step_by(5) {
+        let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
+        let pair = run_pair(&pts, &gs, &cfg_with(17, nd), &sim);
+        rows.push((nd as f64, pair.cpu_total(), pair.gpu_total()));
+    }
+    let min_cpu = rows.iter().map(|r| r.1).fold(f64::INFINITY, f64::min);
+    let min_gpu = rows.iter().map(|r| r.2).fold(f64::INFINITY, f64::min);
+    let mut t = SeriesTable::new(
+        "Fig 5.2: total time vs N_d, normalized per platform (min = 1)",
+        "N_d",
+        &["cpu", "gpu(sim)"],
+    );
+    for (nd, c, g) in rows {
+        t.push(nd, vec![c / min_cpu, g / min_gpu]);
+    }
+    t
+}
+
+/// Table 5.1 — time distribution of the GPU algorithm at N_d = 45.
+pub fn table5_1(o: &HarnessOpts) -> (String, SeriesTable) {
+    let sim = o.sim();
+    let levels = if o.full { 8 } else { 6 };
+    let n = 45 * (1usize << (2 * levels));
+    let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
+    let cfg = FmmConfig {
+        p: 17,
+        n_per_box: 45,
+        levels_override: Some(levels),
+        ..FmmConfig::default()
+    };
+    let pair = run_pair(&pts, &gs, &cfg, &sim);
+    let mut entries: Vec<(&str, f64)> = PHASE_NAMES
+        .iter()
+        .enumerate()
+        .map(|(i, name)| (*name, pair.gpu.0[i]))
+        .collect();
+    entries.push(("Other", pair.gpu_transfer));
+    // order by the paper's table: biggest first
+    entries.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let text = render_distribution(
+        &format!("Table 5.1: GPU time distribution (N = {n}, N_d = 45, p = 17)"),
+        &entries,
+    );
+    let mut t = SeriesTable::new("Table 5.1 record", "phase_idx", &["gpu_s", "cpu_s"]);
+    for (i, _) in PHASE_NAMES.iter().enumerate() {
+        t.push(i as f64, vec![pair.gpu.0[i], pair.cpu.0[i]]);
+    }
+    t.push(-1.0, vec![pair.gpu_transfer, 0.0]);
+    (text, t)
+}
+
+/// Figure 5.3 — speedup of the expansion phases vs the number of multipole
+/// coefficients p (shared-memory occupancy cliff at p = 42).
+pub fn fig5_3(o: &HarnessOpts) -> SeriesTable {
+    let sim = o.sim();
+    let n = if o.full { 1_000_000 } else { 50_000 };
+    let mut t = SeriesTable::new(
+        "Fig 5.3: speedup vs number of coefficients p (M2L cliff at 42)",
+        "p",
+        &["P2M", "M2M", "M2L", "L2L", "L2P", "m2l_blocks"],
+    );
+    let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
+    for p in (4..=60).step_by(2) {
+        let pair = run_pair(&pts, &gs, &cfg_with(p, 45), &sim);
+        t.push(
+            p as f64,
+            vec![
+                pair.speedup(Phase::P2M),
+                pair.speedup(Phase::M2M),
+                pair.speedup(Phase::M2L),
+                pair.speedup(Phase::L2L),
+                pair.speedup(Phase::L2P),
+                sim.m2l_active_blocks(p) as f64,
+            ],
+        );
+    }
+    t
+}
+
+/// Figure 5.4 — optimal N_d as a function of p (≈ linear growth).
+pub fn fig5_4(o: &HarnessOpts) -> (SeriesTable, (f64, f64)) {
+    let sim = o.sim();
+    let n = if o.full { 500_000 } else { 40_000 };
+    let mut t = SeriesTable::new(
+        "Fig 5.4: optimal N_d vs p",
+        "p",
+        &["opt_Nd_gpu", "opt_Nd_cpu"],
+    );
+    let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for p in (8..=48).step_by(8) {
+        let (mut best_gpu, mut best_cpu) = ((f64::INFINITY, 0), (f64::INFINITY, 0));
+        for nd in (15..=120).step_by(5) {
+            let pair = run_pair(&pts, &gs, &cfg_with(p, nd), &sim);
+            if pair.gpu_total() < best_gpu.0 {
+                best_gpu = (pair.gpu_total(), nd);
+            }
+            if pair.cpu_total() < best_cpu.0 {
+                best_cpu = (pair.cpu_total(), nd);
+            }
+        }
+        t.push(p as f64, vec![best_gpu.1 as f64, best_cpu.1 as f64]);
+        xs.push(p as f64);
+        ys.push(best_gpu.1 as f64);
+    }
+    let fit = linear_fit(&xs, &ys);
+    (t, fit)
+}
+
+fn n_sweep(full: bool) -> Vec<usize> {
+    let max_pow = if full { 21 } else { 18 };
+    (7..=max_pow).map(|k| 1usize << k).collect()
+}
+
+/// Figure 5.5 — total time vs N: FMM and direct summation on both
+/// platforms; the paper's GPU break-even vs direct is near N ≈ 3500.
+pub fn fig5_5(o: &HarnessOpts) -> (SeriesTable, f64) {
+    let sim = o.sim();
+    let cap = 20_000; // measured direct up to here, quadratic beyond
+    let mut t = SeriesTable::new(
+        "Fig 5.5: total time vs N (p = 17); direct-CPU extrapolated beyond cap",
+        "N",
+        &["fmm_cpu", "fmm_gpu(sim)", "direct_cpu", "direct_gpu(sim)"],
+    );
+    let mut break_even = f64::NAN;
+    let mut prev: Option<(f64, f64, f64)> = None; // (n, fmm_gpu, dir_gpu)
+    for n in n_sweep(o.full) {
+        let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
+        let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim);
+        let (dir_cpu, _extr) = direct_cpu_time(&pts, &gs, cap);
+        let dir_gpu = sim.direct_time(n);
+        let fmm_gpu = pair.gpu_total();
+        t.push(
+            n as f64,
+            vec![pair.cpu_total(), fmm_gpu, dir_cpu, dir_gpu],
+        );
+        if let Some((pn, pf, pd)) = prev {
+            if break_even.is_nan() && pf > pd && fmm_gpu <= dir_gpu {
+                // log-linear interpolation of the crossover
+                let f = (pf / pd).ln() / ((pf / pd).ln() - (fmm_gpu / dir_gpu).ln());
+                break_even = pn * (n as f64 / pn).powf(f);
+            }
+        }
+        prev = Some((n as f64, fmm_gpu, dir_gpu));
+    }
+    (t, break_even)
+}
+
+/// Figure 5.6 — overall speedup vs N (paper: FMM ≈ 11, direct ≈ 15 at
+/// large N against the symmetric CPU code).
+pub fn fig5_6(o: &HarnessOpts) -> SeriesTable {
+    let sim = o.sim();
+    let cap = 20_000;
+    let mut t = SeriesTable::new(
+        "Fig 5.6: speedup vs N (GPU = cost model / measured CPU)",
+        "N",
+        &["fmm", "direct"],
+    );
+    for n in n_sweep(o.full) {
+        let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
+        let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim);
+        let (dir_cpu, _) = direct_cpu_time(&pts, &gs, cap);
+        t.push(
+            n as f64,
+            vec![
+                pair.cpu_total() / pair.gpu_total(),
+                dir_cpu / sim.direct_time(n),
+            ],
+        );
+    }
+    t
+}
+
+/// Figure 5.7 — per-phase speedup vs N.
+pub fn fig5_7(o: &HarnessOpts) -> SeriesTable {
+    let sim = o.sim();
+    let mut t = SeriesTable::new(
+        "Fig 5.7: speedup of individual parts vs N",
+        "N",
+        &["Sort", "Connect", "P2M", "M2M", "M2L", "L2L", "L2P", "P2P"],
+    );
+    for n in n_sweep(o.full) {
+        let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
+        let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim);
+        t.push(
+            n as f64,
+            (0..8).map(|i| pair.cpu.0[i] / pair.gpu.0[i].max(1e-12)).collect(),
+        );
+    }
+    t
+}
+
+/// Figure 5.8 — total time vs N for the three point distributions.
+pub fn fig5_8(o: &HarnessOpts) -> SeriesTable {
+    let sim = o.sim();
+    let mut t = SeriesTable::new(
+        "Fig 5.8: time vs N for uniform / normal(0.1) / layer(0.1) (cpu, gpu-sim)",
+        "N",
+        &[
+            "uni_cpu", "uni_gpu", "nrm_cpu", "nrm_gpu", "lay_cpu", "lay_gpu",
+        ],
+    );
+    for n in n_sweep(o.full) {
+        let mut ys = Vec::new();
+        for dist in [
+            Distribution::Uniform,
+            Distribution::Normal { sigma: 0.1 },
+            Distribution::Layer { sigma: 0.1 },
+        ] {
+            let (pts, gs) = workload_for(dist, n, o.seed);
+            let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim);
+            ys.push(pair.cpu_total());
+            ys.push(pair.gpu_total());
+        }
+        t.push(n as f64, ys);
+    }
+    t
+}
+
+/// Figure 5.9 — robustness of adaptivity: time under increasingly
+/// non-uniform inputs, normalized to the uniform distribution. The paper
+/// finds the GPU degrades *less* than the CPU (P2P has the highest
+/// speedup, and non-uniformity grows mostly P2P).
+pub fn fig5_9(o: &HarnessOpts) -> SeriesTable {
+    let sim = o.sim();
+    let n = if o.full { 1_000_000 } else { 80_000 };
+    let (pts_u, gs_u) = workload_for(Distribution::Uniform, n, o.seed);
+    let base = run_pair(&pts_u, &gs_u, &cfg_with(17, 45), &sim);
+    let (cpu_u, gpu_u) = (base.cpu_total(), base.gpu_total());
+    let mut t = SeriesTable::new(
+        "Fig 5.9: non-uniform time / uniform time vs sigma",
+        "sigma",
+        &["normal_cpu", "normal_gpu", "layer_cpu", "layer_gpu"],
+    );
+    for sigma in [0.2, 0.15, 0.1, 0.07, 0.05, 0.03, 0.02] {
+        let mut ys = Vec::new();
+        for mk in [
+            Distribution::Normal { sigma },
+            Distribution::Layer { sigma },
+        ] {
+            let (pts, gs) = workload_for(mk, n, o.seed);
+            let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim);
+            ys.push(pair.cpu_total() / cpu_u);
+            ys.push(pair.gpu_total() / gpu_u);
+        }
+        t.push(sigma, ys);
+    }
+    t
+}
+
+/// Accuracy validation (Eq. 5.3): TOL vs p against direct summation; the
+/// paper quotes p = 17 ⇒ TOL ≈ 1e-6.
+pub fn validate(o: &HarnessOpts) -> SeriesTable {
+    let n = 3000;
+    let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
+    let exact = crate::direct::eval_symmetric(Kernel::Harmonic, &pts, &gs);
+    let exact_abs: Vec<f64> = exact.iter().map(|c| c.abs()).collect();
+    let mut t = SeriesTable::new(
+        "Validation: relative max error (Eq. 5.3) vs p; bound ~ theta^p",
+        "p",
+        &["tol_measured", "theta_pow_p"],
+    );
+    for p in (4..=28).step_by(2) {
+        let cfg = FmmConfig {
+            p,
+            levels_override: Some(3),
+            ..FmmConfig::default()
+        };
+        let opts = crate::fmm::FmmOptions {
+            cfg,
+            kernel: Kernel::Harmonic,
+            symmetric_p2p: true,
+        };
+        let out = crate::fmm::evaluate(&pts, &gs, &opts);
+        let approx: Vec<f64> = out.potentials.iter().map(|c| c.abs()).collect();
+        let err = max_rel_error(&approx, &exact_abs, 1e-12);
+        t.push(p as f64, vec![err, cfg.tolerance_estimate()]);
+    }
+    t
+}
+
+/// Ablation: the θ parameter (the paper fixes θ = 1/2 as "performing well
+/// in practice", §2). Sweeps θ and reports the work-mix shift (near-field
+/// vs far-field), total CPU time and accuracy at fixed p — quantifying the
+/// design choice.
+pub fn ablate_theta(o: &HarnessOpts) -> SeriesTable {
+    let n = if o.full { 500_000 } else { 40_000 };
+    let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
+    let exact = if n <= 50_000 {
+        Some(crate::direct::eval_symmetric(Kernel::Harmonic, &pts, &gs))
+    } else {
+        None
+    };
+    let mut t = SeriesTable::new(
+        "Ablation: θ sweep at p = 17 (paper fixes θ = 1/2)",
+        "theta",
+        &["cpu_total_s", "p2p_pairs_M", "m2l_shifts_k", "tol"],
+    );
+    for theta in [0.35, 0.4, 0.45, 0.5, 0.55, 0.6, 0.7, 0.8] {
+        let cfg = FmmConfig {
+            p: 17,
+            n_per_box: 45,
+            theta,
+            levels_override: None,
+        };
+        let opts = crate::fmm::FmmOptions {
+            cfg,
+            kernel: Kernel::Harmonic,
+            symmetric_p2p: true,
+        };
+        let out = crate::fmm::evaluate(&pts, &gs, &opts);
+        let tol = exact
+            .as_ref()
+            .map(|e| {
+                let a: Vec<f64> = out.potentials.iter().map(|c| c.abs()).collect();
+                let ev: Vec<f64> = e.iter().map(|c| c.abs()).collect();
+                max_rel_error(&a, &ev, 1e-12)
+            })
+            .unwrap_or(f64::NAN);
+        t.push(
+            theta,
+            vec![
+                out.times.total(),
+                out.counts.p2p_pairs as f64 / 1e6,
+                out.counts.m2l_per_level.iter().sum::<usize>() as f64 / 1e3,
+                tol,
+            ],
+        );
+    }
+    t
+}
+
+/// Ablation: scaled (Alg 3.4(b)-style) vs unscaled (3.4(a)-style) vs
+/// matrix-operator M2L inner kernels — per-shift cost at several p.
+pub fn ablate_shift_kernels(_o: &HarnessOpts) -> SeriesTable {
+    use crate::bench::{bench, black_box, BenchConfig};
+    use crate::complex::C64;
+    use crate::expansion::matrices::{M2lOperator, M2lScratch};
+    use crate::expansion::shifts::{m2l_unscaled, m2l_with, ShiftScratch};
+    use crate::expansion::Coeffs;
+    use crate::util::rng::Pcg64;
+
+    let cfgb = BenchConfig {
+        warmup: 1,
+        samples: 5,
+        min_time: 0.05,
+    };
+    let mut t = SeriesTable::new(
+        "Ablation: M2L kernel variants, µs per shift",
+        "p",
+        &["recurrence", "unscaled", "matrix_op"],
+    );
+    let mut r = Pcg64::seed_from_u64(2);
+    for p in [8usize, 17, 25, 42] {
+        let mut a = vec![C64::new(0.0, 0.0); p + 1];
+        for k in 1..=p {
+            a[k] = C64::new(r.uniform_in(-1.0, 1.0), r.uniform_in(-1.0, 1.0));
+        }
+        let (z_i, z_o) = (C64::new(0.1, 0.2), C64::new(1.4, -0.3));
+        let mut out = vec![C64::new(0.0, 0.0); p + 1];
+        let mut s = ShiftScratch::new();
+        let rec = bench("rec", &cfgb, || {
+            m2l_with(&a, z_i, &mut out, z_o, &mut s);
+            black_box(&out);
+        });
+        let mut acc = Coeffs::zero(p);
+        let uns = bench("uns", &cfgb, || {
+            m2l_unscaled(&Coeffs(a.clone()), z_i, &mut acc, z_o);
+            black_box(&acc);
+        });
+        let op = M2lOperator::new(p);
+        let mut ms = M2lScratch::default();
+        let mat = bench("mat", &cfgb, || {
+            op.apply(&a, z_i, &mut out, z_o, &mut ms);
+            black_box(&out);
+        });
+        t.push(
+            p as f64,
+            vec![rec.secs() * 1e6, uns.secs() * 1e6, mat.secs() * 1e6],
+        );
+    }
+    t
+}
+
+/// Calibration report: the quantities the cost model is fitted against
+/// (paper's headline ratios) — run after any model change.
+pub fn calibrate(o: &HarnessOpts) -> String {
+    use std::fmt::Write as _;
+    let sim = o.sim();
+    let mut out = String::new();
+    let _ = writeln!(out, "# Calibration vs the paper's headline ratios");
+    // direct N-body speedup at a large N (paper: ~15 vs symmetric CPU)
+    let n = 30_000;
+    let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
+    let (dir_cpu, _) = direct_cpu_time(&pts, &gs, n);
+    let dir_gpu = sim.direct_time(n);
+    let _ = writeln!(
+        out,
+        "direct N-body speedup @N={n}: {:.1} (paper ≈ 15)",
+        dir_cpu / dir_gpu
+    );
+    // FMM total speedup at the Table 5.1 config, scaled
+    let levels = 6;
+    let nf = 45 * (1usize << (2 * levels));
+    let (pts, gs) = workload_for(Distribution::Uniform, nf, o.seed);
+    let cfg = FmmConfig {
+        p: 17,
+        n_per_box: 45,
+        levels_override: Some(levels),
+        ..FmmConfig::default()
+    };
+    let pair = run_pair(&pts, &gs, &cfg, &sim);
+    let _ = writeln!(
+        out,
+        "FMM total speedup @N={nf}: {:.1} (paper ≈ 11)",
+        pair.total_speedup()
+    );
+    let _ = writeln!(out, "GPU phase shares (paper Table 5.1: P2P 43%, Sort 30%, M2L 11%, P2M 5%, L2P 2%, Connect 1%):");
+    let total = pair.gpu_total();
+    for (i, name) in PHASE_NAMES.iter().enumerate() {
+        let _ = writeln!(out, "  {name:<8} {:5.1} %", 100.0 * pair.gpu.0[i] / total);
+    }
+    let _ = writeln!(
+        out,
+        "  {:<8} {:5.1} %",
+        "Other",
+        100.0 * pair.gpu_transfer / total
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> HarnessOpts {
+        HarnessOpts::default()
+    }
+
+    #[test]
+    fn validate_reports_paper_tolerance() {
+        let t = validate(&quick());
+        // find p=18 row (close to the paper's 17): error must be ≤ 1e-5
+        let row = t.rows.iter().find(|(x, _)| *x == 18.0).unwrap();
+        assert!(row.1[0] < 1e-5, "p=18 error {}", row.1[0]);
+        // monotone-ish decay: p=28 much better than p=4
+        let first = t.rows.first().unwrap().1[0];
+        let last = t.rows.last().unwrap().1[0];
+        assert!(last < first * 1e-4);
+    }
+
+    #[test]
+    fn fig5_9_gpu_degrades_less_than_cpu() {
+        // the paper's §5.4 claim, at a reduced size for test time
+        let mut o = quick();
+        o.seed = 5;
+        let sim = o.sim();
+        let n = 20_000;
+        let (pts_u, gs_u) = workload_for(Distribution::Uniform, n, o.seed);
+        let base = run_pair(&pts_u, &gs_u, &cfg_with(17, 45), &sim);
+        let (pts, gs) = workload_for(Distribution::Normal { sigma: 0.05 }, n, o.seed);
+        let hard = run_pair(&pts, &gs, &cfg_with(17, 45), &sim);
+        let cpu_ratio = hard.cpu_total() / base.cpu_total();
+        let gpu_ratio = hard.gpu_total() / base.gpu_total();
+        assert!(
+            gpu_ratio < cpu_ratio * 1.2,
+            "gpu {gpu_ratio:.2} should not degrade much more than cpu {cpu_ratio:.2}"
+        );
+    }
+}

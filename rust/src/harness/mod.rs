@@ -1,0 +1,20 @@
+//! Evaluation harness: regenerates every table and figure of the paper's
+//! §5 (see DESIGN.md §3 for the per-experiment index).
+//!
+//! Each figure has a dedicated entry point invoked by the `fmm2d` CLI
+//! (`fmm2d fig5-1`, `fmm2d table5-1`, …). Experiments run at a scaled-down
+//! default size (so the whole suite completes in minutes on a laptop) and
+//! accept `--full` for paper-scale runs; the *shape* claims (who wins,
+//! crossovers, discontinuities) are size-stable and asserted in
+//! EXPERIMENTS.md against both.
+//!
+//! CPU times are measured from the serial driver; "GPU" times come from the
+//! calibrated cost model ([`crate::gpusim`]) fed with the measured work
+//! counts of the same tree (the substitution documented in DESIGN.md §1).
+
+pub mod figures;
+pub mod report;
+pub mod runner;
+
+pub use figures::*;
+pub use runner::*;

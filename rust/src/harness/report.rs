@@ -1,0 +1,138 @@
+//! Text rendering of harness results (paper-style rows/series) plus JSON
+//! run records for EXPERIMENTS.md provenance.
+
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+/// A column-aligned series table: one x column plus named y series.
+pub struct SeriesTable {
+    pub title: String,
+    pub x_name: String,
+    pub series_names: Vec<String>,
+    pub rows: Vec<(f64, Vec<f64>)>,
+}
+
+impl SeriesTable {
+    pub fn new(title: &str, x_name: &str, series: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            x_name: x_name.to_string(),
+            series_names: series.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, x: f64, ys: Vec<f64>) {
+        assert_eq!(ys.len(), self.series_names.len());
+        self.rows.push((x, ys));
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "# {}", self.title);
+        let _ = write!(out, "{:>12}", self.x_name);
+        for name in &self.series_names {
+            let _ = write!(out, " {name:>14}");
+        }
+        let _ = writeln!(out);
+        for (x, ys) in &self.rows {
+            let _ = write!(out, "{x:>12.4}");
+            for y in ys {
+                let _ = write!(out, " {y:>14.6}");
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+
+    /// JSON record (written under `results/`).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("title", Json::Str(self.title.clone()))
+            .set("x", Json::Str(self.x_name.clone()))
+            .set(
+                "series",
+                Json::Arr(
+                    self.series_names
+                        .iter()
+                        .map(|s| Json::Str(s.clone()))
+                        .collect(),
+                ),
+            )
+            .set(
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|(x, ys)| {
+                            let mut row = vec![Json::Num(*x)];
+                            row.extend(ys.iter().map(|y| Json::Num(*y)));
+                            Json::Arr(row)
+                        })
+                        .collect(),
+                ),
+            );
+        j
+    }
+
+    /// Persist the JSON record to `results/<name>.json`; best-effort (the
+    /// rendering to stdout is the primary output).
+    pub fn save(&self, name: &str) {
+        let _ = std::fs::create_dir_all("results");
+        let path = format!("results/{name}.json");
+        if std::fs::write(&path, self.to_json().to_string()).is_ok() {
+            eprintln!("[saved {path}]");
+        }
+    }
+}
+
+/// Render a percentage-distribution table (Table 5.1 layout).
+pub fn render_distribution(title: &str, entries: &[(&str, f64)]) -> String {
+    let total: f64 = entries.iter().map(|(_, t)| t).sum();
+    let mut out = String::new();
+    let _ = writeln!(out, "# {title}");
+    let _ = writeln!(out, "{:<10} {:>10} {:>8}", "Part", "time [s]", "share");
+    for (name, t) in entries {
+        let pct = 100.0 * t / total;
+        let pct_s = if pct < 1.0 {
+            "< 1 %".to_string()
+        } else {
+            format!("{pct:.0} %")
+        };
+        let _ = writeln!(out, "{name:<10} {t:>10.4} {pct_s:>8}");
+    }
+    let _ = writeln!(out, "{:<10} {total:>10.4} {:>8}", "total", "100 %");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_table_renders_and_serializes() {
+        let mut t = SeriesTable::new("Fig X", "N", &["cpu", "gpu"]);
+        t.push(100.0, vec![1.0, 0.1]);
+        t.push(200.0, vec![2.0, 0.15]);
+        let s = t.render();
+        assert!(s.contains("Fig X"));
+        assert!(s.contains("cpu"));
+        assert!(s.lines().count() >= 4);
+        let j = t.to_json().to_string();
+        assert!(j.contains("\"rows\""));
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("series").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn distribution_table() {
+        let s = render_distribution(
+            "Table 5.1",
+            &[("P2P", 0.43), ("Sort", 0.30), ("L2L", 0.004)],
+        );
+        assert!(s.contains("P2P"));
+        assert!(s.contains("< 1 %"));
+        assert!(s.contains("total"));
+    }
+}

@@ -1,0 +1,154 @@
+//! Shared measurement machinery of the harness.
+
+use std::time::Instant;
+
+use crate::complex::C64;
+use crate::config::FmmConfig;
+use crate::connectivity::Connectivity;
+use crate::expansion::Kernel;
+use crate::fmm::{self, FmmOptions, Phase, PhaseTimes, WorkCounts};
+use crate::gpusim::model::GpuSim;
+use crate::tree::{PartitionEngine, Pyramid};
+use crate::util::rng::Pcg64;
+use crate::workload::Distribution;
+
+/// One measured CPU run paired with the simulated GPU prediction for the
+/// identical tree and work.
+#[derive(Clone, Debug)]
+pub struct RunPair {
+    pub n: usize,
+    pub levels: usize,
+    /// Measured serial CPU phase times (symmetric P2P, one-sided lists).
+    pub cpu: PhaseTimes,
+    /// Simulated GPU phase times (directed lists, Algorithms 3.1–3.7).
+    pub gpu: PhaseTimes,
+    /// Simulated host↔device transfer time ("Other" of Table 5.1).
+    pub gpu_transfer: f64,
+    pub counts: WorkCounts,
+    /// Potentials (original order) of the CPU run, for error checks.
+    pub potentials: Vec<C64>,
+}
+
+impl RunPair {
+    pub fn cpu_total(&self) -> f64 {
+        self.cpu.total()
+    }
+
+    pub fn gpu_total(&self) -> f64 {
+        self.gpu.total() + self.gpu_transfer
+    }
+
+    pub fn speedup(&self, ph: Phase) -> f64 {
+        self.cpu.get(ph) / self.gpu.get(ph).max(1e-12)
+    }
+
+    pub fn total_speedup(&self) -> f64 {
+        self.cpu_total() / self.gpu_total().max(1e-12)
+    }
+}
+
+/// Measure one configuration: CPU wall-clock per phase + GPU prediction.
+pub fn run_pair(points: &[C64], gammas: &[C64], cfg: &FmmConfig, sim: &GpuSim) -> RunPair {
+    let levels = cfg.levels_for(points.len());
+
+    // CPU topological phase (measured with the CPU engine)
+    let t = Instant::now();
+    let pyr = Pyramid::build(points, gammas, levels);
+    let t_sort_cpu = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    let con = Connectivity::build(&pyr, cfg.theta);
+    let t_connect_cpu = t.elapsed().as_secs_f64();
+
+    // CPU computational phase (paper's serial code: symmetric P2P)
+    let opts = FmmOptions {
+        cfg: *cfg,
+        kernel: Kernel::Harmonic,
+        symmetric_p2p: true,
+    };
+    let (phi_leaf, mut cpu, mut counts) = fmm::evaluate_on_tree(&pyr, &con, &opts);
+    cpu.0[Phase::Sort as usize] = t_sort_cpu;
+    cpu.0[Phase::Connect as usize] = t_connect_cpu;
+
+    // GPU sort statistics come from the functional model of Algorithm 3.2
+    // (identical splits, CUDA-shaped work counters)
+    let pyr_gpu = Pyramid::build_with(points, gammas, levels, PartitionEngine::GpuModel);
+    counts.sort = pyr_gpu.sort_stats;
+    // the GPU P2P is directed (§4.2): its pair count is Σ_b n_b·src_b − n,
+    // already captured by p2p_src_per_box/leaf_sizes which the model uses
+
+    let gpu = sim.phase_times(&counts);
+    let gpu_transfer = sim.transfer_time(&counts);
+
+    RunPair {
+        n: points.len(),
+        levels,
+        cpu,
+        gpu,
+        gpu_transfer,
+        counts,
+        potentials: pyr.unpermute(&phi_leaf),
+    }
+}
+
+/// Deterministic workload for experiment `seed`.
+pub fn workload_for(dist: Distribution, n: usize, seed: u64) -> (Vec<C64>, Vec<C64>) {
+    let mut r = Pcg64::seed_from_u64(seed);
+    dist.generate(n, &mut r)
+}
+
+/// Measured direct CPU evaluation time (symmetric kernel, as the paper's
+/// comparisons use). For `n > cap`, measures at `cap` and extrapolates
+/// quadratically — the paper measures the full range on its testbed; the
+/// extrapolation is exact in the O(N²) regime and flagged in the output.
+pub fn direct_cpu_time(points: &[C64], gammas: &[C64], cap: usize) -> (f64, bool) {
+    let n = points.len();
+    if n <= cap {
+        let t = Instant::now();
+        let phi = crate::direct::eval_symmetric(Kernel::Harmonic, points, gammas);
+        std::hint::black_box(&phi);
+        (t.elapsed().as_secs_f64(), false)
+    } else {
+        let t = Instant::now();
+        let phi =
+            crate::direct::eval_symmetric(Kernel::Harmonic, &points[..cap], &gammas[..cap]);
+        std::hint::black_box(&phi);
+        let t_cap = t.elapsed().as_secs_f64();
+        let scale = (n as f64 / cap as f64).powi(2);
+        (t_cap * scale, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_pair_produces_consistent_record() {
+        let (pts, gs) = workload_for(Distribution::Uniform, 3000, 1);
+        let cfg = FmmConfig {
+            p: 10,
+            levels_override: Some(3),
+            ..FmmConfig::default()
+        };
+        let pair = run_pair(&pts, &gs, &cfg, &GpuSim::c2075());
+        assert_eq!(pair.n, 3000);
+        assert_eq!(pair.levels, 3);
+        assert!(pair.cpu_total() > 0.0);
+        assert!(pair.gpu_total() > 0.0);
+        assert!(pair.counts.sort.scattered > 0, "gpu sort stats attached");
+        assert_eq!(pair.potentials.len(), 3000);
+    }
+
+    #[test]
+    fn direct_time_extrapolation_flags() {
+        let (pts, gs) = workload_for(Distribution::Uniform, 4000, 2);
+        let (_, extrapolated) = direct_cpu_time(&pts, &gs, 8000);
+        assert!(!extrapolated);
+        let (t_big, extrapolated) = direct_cpu_time(&pts, &gs, 1000);
+        assert!(extrapolated);
+        let (t_small, _) = direct_cpu_time(&pts[..1000], &gs[..1000], 8000);
+        // extrapolated 4k estimate ≈ 16× the measured 1k time (loose bound:
+        // the two 1k measurements are separate samples and can jitter)
+        assert!(t_big > 4.0 * t_small, "{t_big} vs {t_small}");
+    }
+}

@@ -1,0 +1,39 @@
+//! # fmm2d — adaptive fast multipole methods, three-layer Rust + JAX + Pallas
+//!
+//! Reproduction of Goude & Engblom, *Adaptive fast multipole methods on the
+//! GPU* (2012). The crate contains:
+//!
+//! * the **topological phase** of the paper — asymmetric-adaptive pyramid
+//!   construction by median splits ([`tree`]) and θ-criterion connectivity
+//!   ([`connectivity`]);
+//! * the **computational phase** — multipole/local expansion operators
+//!   ([`expansion`]), a serial CPU driver ([`fmm`]) and the O(N²) baseline
+//!   ([`direct`]);
+//! * the **data-parallel path** — packing of the pyramid into fixed-shape
+//!   tensors ([`packing`]) executed through AOT-compiled XLA artifacts via
+//!   PJRT ([`runtime`]);
+//! * a **GPU execution-cost simulator** ([`gpusim`]) standing in for the
+//!   paper's Tesla C2075 / GTX 480 testbed;
+//! * the **evaluation harness** regenerating every table and figure of the
+//!   paper ([`harness`], [`bench`], [`workload`]).
+//!
+//! See `DESIGN.md` for the full inventory and the per-experiment index.
+
+pub mod bench;
+pub mod complex;
+pub mod config;
+pub mod connectivity;
+pub mod direct;
+pub mod expansion;
+pub mod fmm;
+pub mod geometry;
+pub mod gpusim;
+pub mod harness;
+pub mod packing;
+pub mod runtime;
+pub mod tree;
+pub mod util;
+pub mod workload;
+
+pub use complex::C64;
+pub use config::FmmConfig;

@@ -1,0 +1,286 @@
+//! `fmm2d` — CLI of the adaptive-FMM reproduction.
+//!
+//! Subcommands regenerate every table/figure of the paper (§5), validate
+//! accuracy, run one-off evaluations through either engine (serial CPU or
+//! the AOT-compiled XLA path), and report the GPU-model calibration.
+
+use anyhow::{bail, Result};
+use fmm2d::config::FmmConfig;
+use fmm2d::connectivity::Connectivity;
+use fmm2d::expansion::Kernel;
+use fmm2d::fmm::{self, FmmOptions, PHASE_NAMES};
+use fmm2d::harness::{self, HarnessOpts};
+use fmm2d::runtime::Runtime;
+use fmm2d::tree::Pyramid;
+use fmm2d::util::cli::Args;
+use fmm2d::util::stats::max_rel_error;
+use fmm2d::workload::Distribution;
+
+const USAGE: &str = "\
+fmm2d — adaptive fast multipole methods (Goude & Engblom 2012 reproduction)
+
+USAGE: fmm2d <command> [options]
+
+Experiment regeneration (DESIGN.md §3; all accept --full --seed S --gtx480):
+  table5-1      GPU time distribution
+  fig5-1        per-phase speedup vs N_d
+  fig5-2        normalized total time vs N_d (optima ~35 CPU / ~45 GPU)
+  fig5-3        speedup vs p (M2L occupancy cliff at 42)
+  fig5-4        optimal N_d vs p
+  fig5-5        time vs N, FMM vs direct (break-even)
+  fig5-6        overall speedup vs N
+  fig5-7        per-phase speedup vs N
+  fig5-8        three distributions, time vs N
+  fig5-9        robustness of adaptivity vs sigma
+  all           run every experiment above in sequence
+
+Validation & tools:
+  validate      TOL vs p against direct summation (Eq. 5.3)
+  ablate-theta  θ sweep: work mix / time / accuracy (design-choice ablation)
+  ablate-shifts M2L kernel variants: recurrence vs unscaled vs matrix
+  calibrate     cost-model calibration vs the paper's headline ratios
+  run           one evaluation: --n --p --nd --dist uniform|normal|layer
+                [--sigma S] [--engine serial|xla] [--check] [--log-kernel]
+  artifacts     list available AOT artifacts
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    match dispatch(&cmd, &argv[1..]) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn harness_opts(args: &Args) -> Result<HarnessOpts> {
+    Ok(HarnessOpts {
+        full: args.flag("full"),
+        seed: args.get_or("seed", HarnessOpts::default().seed)?,
+        gtx480: args.flag("gtx480"),
+    })
+}
+
+fn run_figure(name: &str, o: &HarnessOpts) {
+    match name {
+        "table5-1" => {
+            let (text, record) = harness::table5_1(o);
+            println!("{text}");
+            record.save("table5_1");
+        }
+        "fig5-1" => {
+            let t = harness::fig5_1(o);
+            println!("{}", t.render());
+            t.save("fig5_1");
+        }
+        "fig5-2" => {
+            let t = harness::fig5_2(o);
+            println!("{}", t.render());
+            t.save("fig5_2");
+        }
+        "fig5-3" => {
+            let t = harness::fig5_3(o);
+            println!("{}", t.render());
+            t.save("fig5_3");
+        }
+        "fig5-4" => {
+            let (t, (a, b)) = harness::fig5_4(o);
+            println!("{}", t.render());
+            println!("linear fit: opt_Nd_gpu ≈ {a:.1} + {b:.2}·p (paper: ~linear growth)");
+            t.save("fig5_4");
+        }
+        "fig5-5" => {
+            let (t, be) = harness::fig5_5(o);
+            println!("{}", t.render());
+            println!("GPU FMM/direct break-even ≈ N = {be:.0} (paper: ≈ 3500)");
+            t.save("fig5_5");
+        }
+        "fig5-6" => {
+            let t = harness::fig5_6(o);
+            println!("{}", t.render());
+            t.save("fig5_6");
+        }
+        "fig5-7" => {
+            let t = harness::fig5_7(o);
+            println!("{}", t.render());
+            t.save("fig5_7");
+        }
+        "fig5-8" => {
+            let t = harness::fig5_8(o);
+            println!("{}", t.render());
+            t.save("fig5_8");
+        }
+        "fig5-9" => {
+            let t = harness::fig5_9(o);
+            println!("{}", t.render());
+            t.save("fig5_9");
+        }
+        _ => unreachable!(),
+    }
+}
+
+fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest)?;
+    match cmd {
+        "table5-1" | "fig5-1" | "fig5-2" | "fig5-3" | "fig5-4" | "fig5-5" | "fig5-6"
+        | "fig5-7" | "fig5-8" | "fig5-9" => {
+            args.check_known(&["full", "seed", "gtx480"])?;
+            run_figure(cmd, &harness_opts(&args)?);
+        }
+        "all" => {
+            args.check_known(&["full", "seed", "gtx480"])?;
+            let o = harness_opts(&args)?;
+            for name in [
+                "table5-1", "fig5-1", "fig5-2", "fig5-3", "fig5-4", "fig5-5", "fig5-6",
+                "fig5-7", "fig5-8", "fig5-9",
+            ] {
+                eprintln!("=== {name} ===");
+                run_figure(name, &o);
+            }
+        }
+        "validate" => {
+            args.check_known(&["full", "seed", "gtx480"])?;
+            let t = harness::validate(&harness_opts(&args)?);
+            println!("{}", t.render());
+            t.save("validate");
+        }
+        "ablate-theta" => {
+            args.check_known(&["full", "seed", "gtx480"])?;
+            let t = harness::ablate_theta(&harness_opts(&args)?);
+            println!("{}", t.render());
+            t.save("ablate_theta");
+        }
+        "ablate-shifts" => {
+            args.check_known(&["full", "seed", "gtx480"])?;
+            let t = harness::ablate_shift_kernels(&harness_opts(&args)?);
+            println!("{}", t.render());
+            t.save("ablate_shifts");
+        }
+        "calibrate" => {
+            args.check_known(&["full", "seed", "gtx480"])?;
+            println!("{}", harness::calibrate(&harness_opts(&args)?));
+        }
+        "run" => cmd_run(&args)?,
+        "artifacts" => {
+            let rt = Runtime::new(None)?;
+            println!("artifact dir: {}", rt.artifact_dir().display());
+            for name in rt.available() {
+                println!("  {name}");
+            }
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => bail!("unknown command '{other}'; see `fmm2d help`"),
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "n", "p", "nd", "dist", "sigma", "engine", "check", "seed", "log-kernel", "levels",
+    ])?;
+    let n: usize = args.get_or("n", 10_000)?;
+    let p: usize = args.get_or("p", 17)?;
+    let nd: usize = args.get_or("nd", 45)?;
+    let seed: u64 = args.get_or("seed", 1)?;
+    let sigma: f64 = args.get_or("sigma", 0.1)?;
+    let dist = match args.get("dist").unwrap_or("uniform") {
+        "uniform" => Distribution::Uniform,
+        "normal" => Distribution::Normal { sigma },
+        "layer" => Distribution::Layer { sigma },
+        other => bail!("unknown --dist {other}"),
+    };
+    let kernel = if args.flag("log-kernel") {
+        Kernel::Log
+    } else {
+        Kernel::Harmonic
+    };
+    let engine = args.get("engine").unwrap_or("serial").to_string();
+
+    let (pts, mut gs) = harness::workload_for(dist, n, seed);
+    if kernel == Kernel::Log {
+        for g in gs.iter_mut() {
+            g.im = 0.0; // log kernel: real strengths (see fmm tests)
+        }
+    }
+    let mut cfg = FmmConfig {
+        p,
+        n_per_box: nd,
+        ..FmmConfig::default()
+    };
+    if let Some(l) = args.get("levels") {
+        cfg.levels_override = Some(l.parse()?);
+    }
+    let levels = cfg.levels_for(n);
+    println!(
+        "n={n} p={p} N_d={nd} levels={levels} dist={} kernel={kernel:?} engine={engine}",
+        dist.name()
+    );
+
+    let potentials = match engine.as_str() {
+        "serial" => {
+            let opts = FmmOptions {
+                cfg,
+                kernel,
+                symmetric_p2p: true,
+            };
+            let out = fmm::evaluate(&pts, &gs, &opts);
+            println!("{:<8} {:>12} ", "phase", "seconds");
+            for (i, name) in PHASE_NAMES.iter().enumerate() {
+                println!("{name:<8} {:>12.6}", out.times.0[i]);
+            }
+            println!("{:<8} {:>12.6}", "total", out.times.total());
+            out.potentials
+        }
+        "xla" => {
+            if kernel != Kernel::Harmonic {
+                bail!("the XLA artifacts are compiled for the harmonic kernel");
+            }
+            let mut rt = Runtime::new(None)?;
+            let pyr = Pyramid::build(&pts, &gs, levels);
+            let con = Connectivity::build(&pyr, cfg.theta);
+            let exe = rt.fmm_artifact_for_tree(&pyr, &con)?;
+            if exe.meta.p != p {
+                eprintln!(
+                    "note: artifact {} uses p={} (compiled-in); --p {p} ignored",
+                    exe.meta.name, exe.meta.p
+                );
+            }
+            let (pot, stats) = exe.run_fmm(&pyr, &con)?;
+            println!("artifact: {} (platform {})", exe.meta.name, rt.platform());
+            println!("upload   {:>12.6}", stats.upload_s);
+            println!("execute  {:>12.6}", stats.execute_s);
+            println!("download {:>12.6}", stats.download_s);
+            println!("total    {:>12.6}", stats.total());
+            pot
+        }
+        other => bail!("unknown --engine {other} (serial|xla)"),
+    };
+
+    if args.flag("check") {
+        if n > 30_000 {
+            bail!("--check is O(N²); use n ≤ 30000");
+        }
+        let exact = fmm2d::direct::eval_symmetric(kernel, &pts, &gs);
+        let (a, e): (Vec<f64>, Vec<f64>) = if kernel == Kernel::Harmonic {
+            (
+                potentials.iter().map(|c| c.abs()).collect(),
+                exact.iter().map(|c| c.abs()).collect(),
+            )
+        } else {
+            (
+                potentials.iter().map(|c| c.re).collect(),
+                exact.iter().map(|c| c.re).collect(),
+            )
+        };
+        let err = max_rel_error(&a, &e, 1e-12);
+        println!("max relative error vs direct (Eq. 5.3): {err:.3e}");
+    }
+    Ok(())
+}

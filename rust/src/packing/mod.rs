@@ -1,0 +1,473 @@
+//! Packing of the adaptive pyramid into the fixed-shape tensors consumed by
+//! the AOT-compiled XLA artifacts.
+//!
+//! The artifact ABI is defined by `python/compile/model.py::PackConfig`
+//! (input order, shapes, `-1`-padded gather lists) and recorded in each
+//! artifact's `.meta.json`; this module is the Rust mirror. The static
+//! pyramid layout (4^l boxes/level, contiguous children) is what makes a
+//! fixed-shape ABI possible — adaptivity lives in the *values* (centers,
+//! lists), never the shapes.
+
+use crate::complex::C64;
+use crate::connectivity::Connectivity;
+use crate::tree::{boxes_at_level, Pyramid};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Element type of one artifact input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F64,
+    I32,
+}
+
+/// One artifact input declaration (from `.meta.json`).
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String, // "fmm" | "direct"
+    pub levels: usize,
+    pub p: usize,
+    pub nmax: usize,
+    pub kfar: Vec<usize>,
+    pub knear: usize,
+    pub ksp: usize,
+    pub nbtot: usize,
+    /// `direct` artifacts: number of points.
+    pub n_direct: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+fn specs_of(j: &Json, key: &str) -> Result<Vec<TensorSpec>> {
+    let arr = j
+        .get(key)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("meta: missing '{key}'"))?;
+    arr.iter()
+        .map(|e| {
+            let name = e.req_str("name")?.to_string();
+            let shape = e
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("meta: shape")?
+                .iter()
+                .map(|d| d.as_usize().context("meta: dim"))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = match e.req_str("dtype")? {
+                "f64" => DType::F64,
+                "i32" => DType::I32,
+                other => bail!("meta: unsupported dtype {other}"),
+            };
+            Ok(TensorSpec { name, shape, dtype })
+        })
+        .collect()
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parsing .meta.json")?;
+        let kind = j.req_str("kind")?.to_string();
+        let (levels, p, nmax, kfar, knear, ksp, nbtot, n_direct);
+        if kind == "fmm" {
+            levels = j.req_usize("levels")?;
+            p = j.req_usize("p")?;
+            nmax = j.req_usize("nmax")?;
+            kfar = j
+                .get("kfar")
+                .and_then(Json::as_arr)
+                .context("meta: kfar")?
+                .iter()
+                .map(|d| d.as_usize().context("meta: kfar entry"))
+                .collect::<Result<Vec<_>>>()?;
+            knear = j.req_usize("knear")?;
+            ksp = j.req_usize("ksp")?;
+            nbtot = j.req_usize("nbtot")?;
+            n_direct = 0;
+        } else {
+            levels = 0;
+            p = 0;
+            nmax = 0;
+            kfar = vec![];
+            knear = 0;
+            ksp = 0;
+            nbtot = 0;
+            n_direct = j.req_usize("n")?;
+        }
+        Ok(ArtifactMeta {
+            name: j.req_str("name")?.to_string(),
+            kind,
+            levels,
+            p,
+            nmax,
+            kfar,
+            knear,
+            ksp,
+            nbtot,
+            n_direct,
+            inputs: specs_of(&j, "inputs")?,
+            outputs: specs_of(&j, "outputs")?,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        boxes_at_level(self.levels)
+    }
+}
+
+/// `(4^l − 1)/3`: offset of level `l` in the flattened center arrays.
+pub fn level_offset(l: usize) -> usize {
+    (boxes_at_level(l) - 1) / 3
+}
+
+/// One packed tensor, in artifact input order.
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    F64(Vec<f64>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F64(_, s) | Tensor::I32(_, s) => s,
+        }
+    }
+}
+
+/// The packed inputs of one FMM artifact invocation plus the bookkeeping
+/// needed to unpack the result.
+#[derive(Clone, Debug)]
+pub struct PackedFmm {
+    pub tensors: Vec<Tensor>,
+    pub nmax: usize,
+    pub n_leaves: usize,
+}
+
+/// Pad requirements of a tree (compared against the artifact pads so
+/// mismatches fail with an actionable message).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PadRequirements {
+    pub levels: usize,
+    pub nmax: usize,
+    pub kfar: Vec<usize>,
+    pub knear: usize,
+    pub ksp: usize,
+}
+
+/// Measure the pads a pyramid + connectivity actually need.
+pub fn required_pads(pyr: &Pyramid, con: &Connectivity) -> PadRequirements {
+    PadRequirements {
+        levels: pyr.levels,
+        nmax: pyr.max_leaf_len(),
+        kfar: (1..=pyr.levels)
+            .map(|l| con.weak[l].max_degree().max(1))
+            .collect(),
+        knear: con.near.max_degree(),
+        ksp: con.p2l.max_degree().max(con.m2p.max_degree()).max(1),
+    }
+}
+
+fn pad_adjacency(
+    adj: &crate::connectivity::AdjList,
+    nb: usize,
+    k: usize,
+    what: &str,
+) -> Result<Tensor> {
+    let mut data = vec![-1i32; nb * k];
+    for b in 0..nb {
+        let src = adj.sources(b);
+        if src.len() > k {
+            bail!(
+                "{what}: box {b} needs {} entries but the artifact pads to {k}; \
+                 re-emit the artifact with a larger pad (see aot.py)",
+                src.len()
+            );
+        }
+        for (i, &s) in src.iter().enumerate() {
+            data[b * k + i] = s as i32;
+        }
+    }
+    Ok(Tensor::I32(data, vec![nb, k]))
+}
+
+/// Pack a pyramid + connectivity into the tensor list of `meta`.
+pub fn pack_fmm(pyr: &Pyramid, con: &Connectivity, meta: &ArtifactMeta) -> Result<PackedFmm> {
+    if meta.kind != "fmm" {
+        bail!("artifact {} is not an fmm artifact", meta.name);
+    }
+    let need = required_pads(pyr, con);
+    if need.levels != meta.levels {
+        bail!(
+            "tree has {} levels but artifact {} was compiled for {}",
+            need.levels,
+            meta.name,
+            meta.levels
+        );
+    }
+    if need.nmax > meta.nmax {
+        bail!(
+            "largest leaf box holds {} particles but artifact pads nmax={}",
+            need.nmax,
+            meta.nmax
+        );
+    }
+    if need.knear > meta.knear || need.ksp > meta.ksp {
+        bail!(
+            "near/shortcut lists ({}/{}) exceed artifact pads ({}/{})",
+            need.knear,
+            need.ksp,
+            meta.knear,
+            meta.ksp
+        );
+    }
+    for (l, (&have, &want)) in meta.kfar.iter().zip(&need.kfar).enumerate() {
+        if want > have {
+            bail!(
+                "M2L list at level {} needs pad {} but artifact has {}",
+                l + 1,
+                want,
+                have
+            );
+        }
+    }
+
+    let (nl, nmax) = (meta.n_leaves(), meta.nmax);
+    let mut pos_re = vec![0.0; nl * nmax];
+    let mut pos_im = vec![0.0; nl * nmax];
+    let mut gam_re = vec![0.0; nl * nmax];
+    let mut gam_im = vec![0.0; nl * nmax];
+    let mut mask = vec![0.0; nl * nmax];
+    for b in 0..nl {
+        for (i, q) in pyr.leaf(b).iter().enumerate() {
+            let at = b * nmax + i;
+            pos_re[at] = q.pos.re;
+            pos_im[at] = q.pos.im;
+            gam_re[at] = q.gamma.re;
+            gam_im[at] = q.gamma.im;
+            mask[at] = 1.0;
+        }
+    }
+
+    let mut ctr_re = vec![0.0; meta.nbtot];
+    let mut ctr_im = vec![0.0; meta.nbtot];
+    for l in 0..=meta.levels {
+        let off = level_offset(l);
+        for (b, r) in pyr.rects[l].iter().enumerate() {
+            let c = r.center();
+            ctr_re[off + b] = c.re;
+            ctr_im[off + b] = c.im;
+        }
+    }
+
+    let grid = vec![nl, nmax];
+    let mut tensors = vec![
+        Tensor::F64(pos_re, grid.clone()),
+        Tensor::F64(pos_im, grid.clone()),
+        Tensor::F64(gam_re, grid.clone()),
+        Tensor::F64(gam_im, grid.clone()),
+        Tensor::F64(mask, grid.clone()),
+        Tensor::F64(ctr_re, vec![meta.nbtot]),
+        Tensor::F64(ctr_im, vec![meta.nbtot]),
+    ];
+    for l in 1..=meta.levels {
+        tensors.push(pad_adjacency(
+            &con.weak[l],
+            boxes_at_level(l),
+            meta.kfar[l - 1],
+            "m2l",
+        )?);
+    }
+    tensors.push(pad_adjacency(&con.near, nl, meta.knear, "near")?);
+    tensors.push(pad_adjacency(&con.p2l, nl, meta.ksp, "p2l")?);
+    tensors.push(pad_adjacency(&con.m2p, nl, meta.ksp, "m2p")?);
+
+    // cross-check against the manifest's declared shapes
+    if tensors.len() != meta.inputs.len() {
+        bail!(
+            "packed {} tensors but artifact declares {} inputs",
+            tensors.len(),
+            meta.inputs.len()
+        );
+    }
+    for (t, s) in tensors.iter().zip(&meta.inputs) {
+        if t.shape() != s.shape.as_slice() {
+            bail!(
+                "input '{}': packed shape {:?} != declared {:?}",
+                s.name,
+                t.shape(),
+                s.shape
+            );
+        }
+    }
+
+    Ok(PackedFmm {
+        tensors,
+        nmax,
+        n_leaves: nl,
+    })
+}
+
+/// Scatter the `[4^L, nmax]` potential grids back to the caller's original
+/// particle order.
+pub fn unpack_potentials(pyr: &Pyramid, nmax: usize, pot_re: &[f64], pot_im: &[f64]) -> Vec<C64> {
+    let mut leaf_ordered = Vec::with_capacity(pyr.particles.len());
+    for b in 0..pyr.n_leaves() {
+        let len = pyr.starts[b + 1] - pyr.starts[b];
+        for i in 0..len {
+            leaf_ordered.push(C64::new(pot_re[b * nmax + i], pot_im[b * nmax + i]));
+        }
+    }
+    pyr.unpermute(&leaf_ordered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use crate::workload;
+
+    fn meta_for(levels: usize, p: usize, nmax: usize, kfar: &[usize], knear: usize, ksp: usize) -> ArtifactMeta {
+        // build via the same JSON path aot.py uses
+        let mut inputs = vec![
+            ("pos_re", vec![boxes_at_level(levels), nmax]),
+            ("pos_im", vec![boxes_at_level(levels), nmax]),
+            ("gam_re", vec![boxes_at_level(levels), nmax]),
+            ("gam_im", vec![boxes_at_level(levels), nmax]),
+            ("mask", vec![boxes_at_level(levels), nmax]),
+            ("ctr_re", vec![(boxes_at_level(levels + 1) - 1) / 3]),
+            ("ctr_im", vec![(boxes_at_level(levels + 1) - 1) / 3]),
+        ];
+        let names: Vec<String> = (1..=levels).map(|l| format!("m2l_idx_{l}")).collect();
+        for (l, n) in names.iter().enumerate() {
+            inputs.push((
+                Box::leak(n.clone().into_boxed_str()),
+                vec![boxes_at_level(l + 1), kfar[l]],
+            ));
+        }
+        inputs.push(("near_idx", vec![boxes_at_level(levels), knear]));
+        inputs.push(("p2l_idx", vec![boxes_at_level(levels), ksp]));
+        inputs.push(("m2p_idx", vec![boxes_at_level(levels), ksp]));
+        let specs: Vec<String> = inputs
+            .iter()
+            .map(|(n, s)| {
+                let dt = if n.contains("idx") { "i32" } else { "f64" };
+                format!(
+                    "{{\"name\":\"{n}\",\"shape\":[{}],\"dtype\":\"{dt}\"}}",
+                    s.iter()
+                        .map(|d| d.to_string())
+                        .collect::<Vec<_>>()
+                        .join(",")
+                )
+            })
+            .collect();
+        let kfar_s = kfar
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        let text = format!(
+            "{{\"name\":\"test\",\"kind\":\"fmm\",\"levels\":{levels},\"p\":{p},\
+             \"nmax\":{nmax},\"kfar\":[{kfar_s}],\"knear\":{knear},\"ksp\":{ksp},\
+             \"nbtot\":{},\"inputs\":[{}],\"outputs\":[]}}",
+            (boxes_at_level(levels + 1) - 1) / 3,
+            specs.join(",")
+        );
+        ArtifactMeta::parse(&text).unwrap()
+    }
+
+    fn tree(n: usize, levels: usize, seed: u64) -> (Pyramid, Connectivity) {
+        let mut r = Pcg64::seed_from_u64(seed);
+        let (pts, gs) = workload::uniform_square(n, &mut r);
+        let pyr = Pyramid::build(&pts, &gs, levels);
+        let con = Connectivity::build(&pyr, 0.5);
+        (pyr, con)
+    }
+
+    #[test]
+    fn pack_shapes_and_masks() {
+        let (pyr, con) = tree(500, 2, 1);
+        let need = required_pads(&pyr, &con);
+        let meta = meta_for(2, 8, need.nmax + 2, &need.kfar, need.knear, need.ksp);
+        let packed = pack_fmm(&pyr, &con, &meta).unwrap();
+        assert_eq!(packed.tensors.len(), meta.inputs.len());
+        // mask counts the particles exactly
+        if let Tensor::F64(mask, _) = &packed.tensors[4] {
+            let total: f64 = mask.iter().sum();
+            assert_eq!(total as usize, 500);
+        } else {
+            panic!("mask tensor has wrong dtype");
+        }
+        // near list entries are within range or -1
+        if let Tensor::I32(idx, _) = packed.tensors.last().unwrap() {
+            assert!(idx.iter().all(|&v| v >= -1 && (v as i64) < 16));
+        } else {
+            panic!("m2p tensor has wrong dtype");
+        }
+    }
+
+    #[test]
+    fn pack_rejects_insufficient_pads() {
+        let (pyr, con) = tree(800, 2, 2);
+        let need = required_pads(&pyr, &con);
+        let meta = meta_for(2, 8, need.nmax.saturating_sub(5), &need.kfar, need.knear, need.ksp);
+        let err = pack_fmm(&pyr, &con, &meta).unwrap_err().to_string();
+        assert!(err.contains("nmax"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn pack_rejects_level_mismatch() {
+        let (pyr, con) = tree(500, 2, 3);
+        let need = required_pads(&pyr, &con);
+        let meta = meta_for(3, 8, 64, &[need.kfar[0], need.kfar[1], 64], 32, 8);
+        let err = pack_fmm(&pyr, &con, &meta).unwrap_err().to_string();
+        assert!(err.contains("levels"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn unpack_roundtrip() {
+        let (pyr, _) = tree(300, 2, 4);
+        let nmax = pyr.max_leaf_len();
+        // fabricate a grid whose value encodes the original index
+        let nl = pyr.n_leaves();
+        let mut pot_re = vec![0.0; nl * nmax];
+        for b in 0..nl {
+            for (i, q) in pyr.leaf(b).iter().enumerate() {
+                pot_re[b * nmax + i] = q.orig as f64;
+            }
+        }
+        let pot_im = vec![0.0; nl * nmax];
+        let out = unpack_potentials(&pyr, nmax, &pot_re, &pot_im);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(v.re, i as f64);
+        }
+    }
+
+    #[test]
+    fn level_offset_formula() {
+        assert_eq!(level_offset(0), 0);
+        assert_eq!(level_offset(1), 1);
+        assert_eq!(level_offset(2), 5);
+        assert_eq!(level_offset(3), 21);
+    }
+}

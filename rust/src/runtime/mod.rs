@@ -1,0 +1,275 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them from
+//! the Rust request path (Python is never invoked here).
+//!
+//! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (the crate's xla_extension 0.5.1
+//! rejects jax ≥ 0.5's 64-bit-id serialized protos).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::complex::C64;
+use crate::connectivity::Connectivity;
+use crate::packing::{self, ArtifactMeta, PackedFmm, Tensor};
+use crate::tree::Pyramid;
+
+/// Timing breakdown of one runtime invocation (the "total time includes the
+/// time to copy data" accounting of §5).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunStats {
+    /// Host→device marshalling (Literal construction).
+    pub upload_s: f64,
+    /// Executable run time.
+    pub execute_s: f64,
+    /// Device→host copy + unpacking.
+    pub download_s: f64,
+}
+
+impl RunStats {
+    pub fn total(&self) -> f64 {
+        self.upload_s + self.execute_s + self.download_s
+    }
+}
+
+/// A compiled artifact with its manifest.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client plus a compile cache keyed by artifact
+/// name. Compilation happens once per process; the request path only
+/// executes.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, std::rc::Rc<Executable>>,
+}
+
+impl Runtime {
+    /// Create a runtime over the artifact directory (default
+    /// `$FMM2D_ARTIFACTS` or `./artifacts`).
+    pub fn new(dir: Option<&Path>) -> Result<Self> {
+        let dir = match dir {
+            Some(d) => d.to_path_buf(),
+            None => std::env::var("FMM2D_ARTIFACTS")
+                .map(PathBuf::from)
+                .unwrap_or_else(|_| PathBuf::from("artifacts")),
+        };
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            dir,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Names of all artifacts present in the directory.
+    pub fn available(&self) -> Vec<String> {
+        let mut names: Vec<String> = std::fs::read_dir(&self.dir)
+            .into_iter()
+            .flatten()
+            .flatten()
+            .filter_map(|e| {
+                let name = e.file_name().into_string().ok()?;
+                name.strip_suffix(".hlo.txt").map(str::to_string)
+            })
+            .collect();
+        names.sort();
+        names
+    }
+
+    /// Load + compile (cached) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let hlo = self.dir.join(format!("{name}.hlo.txt"));
+        let meta_path = self.dir.join(format!("{name}.meta.json"));
+        if !hlo.exists() {
+            bail!(
+                "artifact '{name}' not found in {} — run `make artifacts`",
+                self.dir.display()
+            );
+        }
+        let meta = ArtifactMeta::load(&meta_path)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().context("artifact path not UTF-8")?,
+        )
+        .with_context(|| format!("parsing HLO text of {name}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let entry = std::rc::Rc::new(Executable { meta, exe });
+        self.cache.insert(name.to_string(), entry.clone());
+        Ok(entry)
+    }
+
+    /// Pick the FMM artifact compiled for exactly `levels` levels,
+    /// preferring the fast `jnp` execution variant over the TPU-design
+    /// `pallas` variant (identical numerics; see aot.py).
+    pub fn fmm_artifact_for_levels(&mut self, levels: usize) -> Result<std::rc::Rc<Executable>> {
+        let mut fallback = None;
+        for name in self.available() {
+            if let Ok(e) = self.load(&name) {
+                if e.meta.kind == "fmm" && e.meta.levels == levels {
+                    if !name.ends_with("_pallas") {
+                        return Ok(e);
+                    }
+                    fallback = Some(e);
+                }
+            }
+        }
+        fallback.ok_or_else(|| {
+            anyhow::anyhow!("no FMM artifact for {levels} levels; emit one via aot.py")
+        })
+    }
+
+    /// Pick the *smallest* FMM artifact whose pads fit this tree (pad
+    /// buckets, see aot.py): padded work — P2P above all — scales with the
+    /// pad sizes, so tight-bucket artifacts execute several times faster on
+    /// near-uniform inputs than the worst-case bucket.
+    pub fn fmm_artifact_for_tree(
+        &mut self,
+        pyr: &Pyramid,
+        con: &Connectivity,
+    ) -> Result<std::rc::Rc<Executable>> {
+        let need = packing::required_pads(pyr, con);
+        let mut best: Option<(usize, std::rc::Rc<Executable>)> = None;
+        for name in self.available() {
+            if name.ends_with("_pallas") {
+                continue;
+            }
+            let Ok(e) = self.load(&name) else { continue };
+            let m = &e.meta;
+            let fits = m.kind == "fmm"
+                && m.levels == need.levels
+                && m.nmax >= need.nmax
+                && m.knear >= need.knear
+                && m.ksp >= need.ksp
+                && m.kfar.len() == need.kfar.len()
+                && m.kfar.iter().zip(&need.kfar).all(|(h, w)| h >= w);
+            if !fits {
+                continue;
+            }
+            // padded-work proxy: the P2P pair tile dominates, then the
+            // shortcut gathers, then M2L
+            let score = m.knear * m.nmax * m.nmax
+                + 2 * m.ksp * m.nmax * m.nmax
+                + m.kfar.iter().sum::<usize>() * (m.p + 1);
+            if best.as_ref().map(|(s, _)| score < *s).unwrap_or(true) {
+                best = Some((score, e));
+            }
+        }
+        best.map(|(_, e)| e).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no FMM artifact fits this tree (levels {}, nmax {}, knear {}, ksp {}); \
+                 emit a wider bucket via aot.py",
+                need.levels,
+                need.nmax,
+                need.knear,
+                need.ksp
+            )
+        })
+    }
+}
+
+fn literal_of(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(match t {
+        Tensor::F64(data, _) => xla::Literal::vec1(data).reshape(&dims)?,
+        Tensor::I32(data, _) => xla::Literal::vec1(data).reshape(&dims)?,
+    })
+}
+
+impl Executable {
+    /// Execute with packed tensors; returns the flat f64 outputs in
+    /// manifest order plus timing stats.
+    pub fn run_raw(&self, tensors: &[Tensor]) -> Result<(Vec<Vec<f64>>, RunStats)> {
+        let mut stats = RunStats::default();
+        let t = Instant::now();
+        let literals: Vec<xla::Literal> = tensors
+            .iter()
+            .map(literal_of)
+            .collect::<Result<Vec<_>>>()?;
+        stats.upload_s = t.elapsed().as_secs_f64();
+
+        let t = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let root = result[0][0].to_literal_sync()?;
+        stats.execute_s = t.elapsed().as_secs_f64();
+
+        let t = Instant::now();
+        // lowered with return_tuple=True → a tuple of outputs
+        let parts = root.to_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "artifact {} returned {} outputs, manifest declares {}",
+                self.meta.name,
+                parts.len(),
+                self.meta.outputs.len()
+            );
+        }
+        let outs = parts
+            .into_iter()
+            .map(|l| l.to_vec::<f64>().context("reading f64 output"))
+            .collect::<Result<Vec<_>>>()?;
+        stats.download_s = t.elapsed().as_secs_f64();
+        Ok((outs, stats))
+    }
+
+    /// Full FMM invocation: pack a tree, execute, unpack to original order.
+    pub fn run_fmm(
+        &self,
+        pyr: &Pyramid,
+        con: &Connectivity,
+    ) -> Result<(Vec<C64>, RunStats)> {
+        let packed: PackedFmm = packing::pack_fmm(pyr, con, &self.meta)?;
+        let (outs, stats) = self.run_raw(&packed.tensors)?;
+        let pot = packing::unpack_potentials(pyr, packed.nmax, &outs[0], &outs[1]);
+        Ok((pot, stats))
+    }
+
+    /// Direct-summation artifact invocation on `n = meta.n_direct` points.
+    pub fn run_direct(&self, points: &[C64], gammas: &[C64]) -> Result<(Vec<C64>, RunStats)> {
+        if self.meta.kind != "direct" {
+            bail!("artifact {} is not a direct-eval artifact", self.meta.name);
+        }
+        let n = self.meta.n_direct;
+        if points.len() != n {
+            bail!(
+                "direct artifact {} is compiled for n={n}, got {}",
+                self.meta.name,
+                points.len()
+            );
+        }
+        let shape = vec![n];
+        let tensors = vec![
+            Tensor::F64(points.iter().map(|z| z.re).collect(), shape.clone()),
+            Tensor::F64(points.iter().map(|z| z.im).collect(), shape.clone()),
+            Tensor::F64(gammas.iter().map(|z| z.re).collect(), shape.clone()),
+            Tensor::F64(gammas.iter().map(|z| z.im).collect(), shape),
+        ];
+        let (outs, stats) = self.run_raw(&tensors)?;
+        let pot = outs[0]
+            .iter()
+            .zip(&outs[1])
+            .map(|(&re, &im)| C64::new(re, im))
+            .collect();
+        Ok((pot, stats))
+    }
+}

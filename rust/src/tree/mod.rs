@@ -1,0 +1,349 @@
+//! The asymmetric-adaptive pyramid (paper §2 and §3.2).
+//!
+//! Boxes are split *twice in succession* close to the median of the particle
+//! positions, so level `l` always holds exactly `4^l` boxes with (near)
+//! equal population — a balanced *pyramid* rather than a general tree. The
+//! split direction follows the eccentricity of the box (the θ-criterion is
+//! rotationally invariant, so square-ish boxes minimize interactions).
+//!
+//! The output arranges particles so that every leaf box owns a contiguous
+//! slice — the static memory layout that both the serial driver and the
+//! data-parallel packing rely on.
+
+pub mod partition;
+
+use crate::complex::C64;
+use crate::geometry::Rect;
+use partition::{median_split, median_split_gpu_model, SortStats};
+
+/// Which partitioning engine builds the pyramid: the serial quickselect
+/// (paper §4.1) or the functional model of the CUDA scheme (Algorithms
+/// 3.1/3.2) whose [`SortStats`] feed the GPU cost simulator. Both produce
+/// identical median splits.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PartitionEngine {
+    #[default]
+    Cpu,
+    GpuModel,
+}
+
+/// Index arithmetic of the pyramid: boxes of level `l` are numbered
+/// `0..4^l`; the children of box `b` are `4b..4b+4` at the next level.
+#[inline]
+pub fn boxes_at_level(l: usize) -> usize {
+    1usize << (2 * l)
+}
+
+/// Parent of box `b` (at level `l ≥ 1`).
+#[inline]
+pub fn parent_of(b: usize) -> usize {
+    b >> 2
+}
+
+/// First child of box `b`.
+#[inline]
+pub fn first_child_of(b: usize) -> usize {
+    b << 2
+}
+
+/// One particle record carried through the partitioning permutation.
+#[derive(Clone, Copy, Debug)]
+pub struct Particle {
+    pub pos: C64,
+    pub gamma: C64,
+    /// Index into the caller's original arrays.
+    pub orig: u32,
+}
+
+/// The fully built pyramid.
+#[derive(Clone, Debug)]
+pub struct Pyramid {
+    /// Number of refinement levels `L` (leaf level). Level 0 is the root.
+    pub levels: usize,
+    /// Box rectangles per level: `rects[l]` has `4^l` entries.
+    pub rects: Vec<Vec<Rect>>,
+    /// Particles permuted to leaf order (leaf `b` owns
+    /// `starts[b]..starts[b+1]`).
+    pub particles: Vec<Particle>,
+    /// Leaf slice offsets, length `4^L + 1`.
+    pub starts: Vec<usize>,
+    /// Statistics of the partitioning phase (fed to the GPU cost model).
+    pub sort_stats: SortStats,
+}
+
+impl Pyramid {
+    /// Build the pyramid over `points`/`gammas` with `levels ≥ 1`
+    /// refinements. Points may lie anywhere; the root box is their bounding
+    /// box (the paper rejects samples into the unit square before calling —
+    /// see [`crate::workload`]).
+    pub fn build(points: &[C64], gammas: &[C64], levels: usize) -> Self {
+        Self::build_with(points, gammas, levels, PartitionEngine::Cpu)
+    }
+
+    /// [`Pyramid::build`] with an explicit partitioning engine.
+    pub fn build_with(
+        points: &[C64],
+        gammas: &[C64],
+        levels: usize,
+        engine: PartitionEngine,
+    ) -> Self {
+        assert_eq!(points.len(), gammas.len());
+        assert!(levels >= 1, "pyramid needs at least one refinement level");
+        assert!(
+            points.len() >= boxes_at_level(levels),
+            "fewer particles ({}) than leaf boxes ({}); lower the level count",
+            points.len(),
+            boxes_at_level(levels)
+        );
+        let mut particles: Vec<Particle> = points
+            .iter()
+            .zip(gammas)
+            .enumerate()
+            .map(|(i, (&pos, &gamma))| Particle {
+                pos,
+                gamma,
+                orig: i as u32,
+            })
+            .collect();
+
+        let root = Rect::bounding(points);
+        let mut rects: Vec<Vec<Rect>> = vec![vec![root]];
+        let mut stats = SortStats::default();
+
+        // ranges of the current level's boxes into `particles`
+        let mut starts: Vec<usize> = vec![0, particles.len()];
+        for l in 0..levels {
+            let nb = boxes_at_level(l);
+            let mut next_rects = Vec::with_capacity(nb * 4);
+            let mut next_starts = Vec::with_capacity(nb * 4 + 1);
+            next_starts.push(0);
+            for b in 0..nb {
+                let (lo, hi) = (starts[b], starts[b + 1]);
+                let rect = rects[l][b];
+                let quads = split_box_in_four(&mut particles[lo..hi], rect, engine, &mut stats);
+                for (qrect, qlen) in quads {
+                    next_rects.push(qrect);
+                    next_starts.push(next_starts.last().unwrap() + qlen);
+                }
+            }
+            debug_assert_eq!(*next_starts.last().unwrap(), particles.len());
+            rects.push(next_rects);
+            starts = next_starts;
+        }
+
+        Pyramid {
+            levels,
+            rects,
+            particles,
+            starts,
+            sort_stats: stats,
+        }
+    }
+
+    /// Number of leaf boxes `4^L`.
+    #[inline]
+    pub fn n_leaves(&self) -> usize {
+        boxes_at_level(self.levels)
+    }
+
+    /// Particles of leaf box `b`.
+    #[inline]
+    pub fn leaf(&self, b: usize) -> &[Particle] {
+        &self.particles[self.starts[b]..self.starts[b + 1]]
+    }
+
+    /// Largest leaf population (the `nmax` of the static packing).
+    pub fn max_leaf_len(&self) -> usize {
+        (0..self.n_leaves())
+            .map(|b| self.starts[b + 1] - self.starts[b])
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Centers of the boxes at level `l`.
+    pub fn centers(&self, l: usize) -> Vec<C64> {
+        self.rects[l].iter().map(|r| r.center()).collect()
+    }
+
+    /// Scatter a leaf-ordered per-particle vector back to original order.
+    pub fn unpermute(&self, leaf_ordered: &[C64]) -> Vec<C64> {
+        debug_assert_eq!(leaf_ordered.len(), self.particles.len());
+        let mut out = vec![C64::new(0.0, 0.0); leaf_ordered.len()];
+        for (p, &v) in self.particles.iter().zip(leaf_ordered) {
+            out[p.orig as usize] = v;
+        }
+        out
+    }
+}
+
+/// Split one box's particles into four quadrant boxes: one median split
+/// along the box's major axis, then one median split of each half along the
+/// half's own major axis ("all boxes are split twice in succession", §2).
+/// Returns the four (rect, count) pairs in order.
+fn split_box_in_four(
+    part: &mut [Particle],
+    rect: Rect,
+    engine: PartitionEngine,
+    stats: &mut SortStats,
+) -> [(Rect, usize); 4] {
+    let split = match engine {
+        PartitionEngine::Cpu => median_split,
+        PartitionEngine::GpuModel => median_split_gpu_model,
+    };
+    let axis0 = rect.split_axis();
+    let (cut0, mid) = split(part, axis0, stats);
+    let (ra, rb) = rect.split_at(axis0, cut0);
+
+    let (pa, pb) = part.split_at_mut(mid);
+    let axis_a = ra.split_axis();
+    let (cut_a, mid_a) = split(pa, axis_a, stats);
+    let (ra0, ra1) = ra.split_at(axis_a, cut_a);
+
+    let axis_b = rb.split_axis();
+    let (cut_b, mid_b) = split(pb, axis_b, stats);
+    let (rb0, rb1) = rb.split_at(axis_b, cut_b);
+
+    [
+        (ra0, mid_a),
+        (ra1, pa.len() - mid_a),
+        (rb0, mid_b),
+        (rb1, pb.len() - mid_b),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use crate::workload;
+
+    fn uniform(n: usize, seed: u64) -> (Vec<C64>, Vec<C64>) {
+        let mut r = Pcg64::seed_from_u64(seed);
+        workload::uniform_square(n, &mut r)
+    }
+
+    #[test]
+    fn pyramid_shape() {
+        let (pts, gs) = uniform(1000, 1);
+        let t = Pyramid::build(&pts, &gs, 3);
+        assert_eq!(t.n_leaves(), 64);
+        assert_eq!(t.rects[0].len(), 1);
+        assert_eq!(t.rects[1].len(), 4);
+        assert_eq!(t.rects[3].len(), 64);
+        assert_eq!(t.starts.len(), 65);
+        assert_eq!(t.starts[64], 1000);
+    }
+
+    #[test]
+    fn leaves_are_balanced() {
+        // median splits: every leaf within ±1 of every other after each
+        // halving => leaf sizes in {floor, ceil} of repeated halving.
+        let (pts, gs) = uniform(1003, 2);
+        let t = Pyramid::build(&pts, &gs, 3);
+        let sizes: Vec<usize> = (0..64).map(|b| t.leaf(b).len()).collect();
+        let (lo, hi) = (
+            *sizes.iter().min().unwrap(),
+            *sizes.iter().max().unwrap(),
+        );
+        assert!(hi - lo <= 2, "sizes spread too wide: lo={lo} hi={hi}");
+        assert_eq!(sizes.iter().sum::<usize>(), 1003);
+    }
+
+    #[test]
+    fn particles_inside_their_leaf_rect() {
+        let (pts, gs) = uniform(2000, 3);
+        let t = Pyramid::build(&pts, &gs, 3);
+        for b in 0..t.n_leaves() {
+            let r = t.rects[3][b];
+            for p in t.leaf(b) {
+                assert!(
+                    r.contains(p.pos),
+                    "particle {:?} outside leaf rect {r:?}",
+                    p.pos
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn permutation_is_bijective() {
+        let (pts, gs) = uniform(777, 4);
+        let t = Pyramid::build(&pts, &gs, 2);
+        let mut seen = vec![false; 777];
+        for p in &t.particles {
+            assert!(!seen[p.orig as usize], "duplicate orig index");
+            seen[p.orig as usize] = true;
+            // and the payload moved with the index
+            assert_eq!(p.pos, pts[p.orig as usize]);
+            assert_eq!(p.gamma, gs[p.orig as usize]);
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn unpermute_roundtrip() {
+        let (pts, gs) = uniform(512, 5);
+        let t = Pyramid::build(&pts, &gs, 2);
+        let leaf_vals: Vec<C64> = t.particles.iter().map(|p| p.pos).collect();
+        let back = t.unpermute(&leaf_vals);
+        assert_eq!(back, pts);
+    }
+
+    #[test]
+    fn child_rects_tile_parent() {
+        let (pts, gs) = uniform(4096, 6);
+        let t = Pyramid::build(&pts, &gs, 3);
+        for l in 0..3 {
+            for b in 0..boxes_at_level(l) {
+                let parent = t.rects[l][b];
+                let kids = &t.rects[l + 1][4 * b..4 * b + 4];
+                let area: f64 = kids
+                    .iter()
+                    .map(|k| k.width() * k.height())
+                    .sum();
+                let parea = parent.width() * parent.height();
+                assert!(
+                    (area - parea).abs() < 1e-12 * parea.max(1e-300),
+                    "level {l} box {b}"
+                );
+                for k in kids {
+                    assert!(k.x0 >= parent.x0 - 1e-15 && k.x1 <= parent.x1 + 1e-15);
+                    assert!(k.y0 >= parent.y0 - 1e-15 && k.y1 <= parent.y1 + 1e-15);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn index_arithmetic() {
+        assert_eq!(boxes_at_level(0), 1);
+        assert_eq!(boxes_at_level(4), 256);
+        assert_eq!(parent_of(7), 1);
+        assert_eq!(first_child_of(3), 12);
+        for b in 0..64 {
+            assert_eq!(parent_of(first_child_of(b)), b);
+        }
+    }
+
+    #[test]
+    fn nonuniform_normal_distribution_builds() {
+        let mut r = Pcg64::seed_from_u64(7);
+        let (pts, gs) = workload::normal_cloud(3000, 0.1, &mut r);
+        let t = Pyramid::build(&pts, &gs, 4);
+        assert_eq!(t.starts[t.n_leaves()], 3000);
+        let sizes: Vec<usize> = (0..t.n_leaves()).map(|b| t.leaf(b).len()).collect();
+        let (lo, hi) = (
+            *sizes.iter().min().unwrap(),
+            *sizes.iter().max().unwrap(),
+        );
+        // adaptivity: populations stay balanced even for clustered input
+        assert!(hi - lo <= 3, "lo={lo} hi={hi}");
+    }
+
+    #[test]
+    #[should_panic(expected = "fewer particles")]
+    fn too_few_particles_panics() {
+        let (pts, gs) = uniform(10, 8);
+        Pyramid::build(&pts, &gs, 3);
+    }
+}

@@ -1,0 +1,405 @@
+//! Median partitioning — the "sorting" half of the topological phase
+//! (paper §3.2, Algorithms 3.1/3.2, and the CPU variant of §4.1).
+//!
+//! Two interchangeable engines produce identical splits (same median
+//! position; both place the lower half left of the upper half):
+//!
+//! * [`median_split`] — the serial engine: quickselect with
+//!   *median-of-three* pivoting, in place, as the paper's CPU code does;
+//! * [`median_split_gpu_model`] — a faithful *functional model* of the GPU
+//!   engine of Algorithms 3.1/3.2: pivot chosen by sorting a 32-element
+//!   sample and interpolating toward the global median, two-pass
+//!   count-then-scatter splits (temporary buffer, like the CUDA code), loop
+//!   until ≤ 32 elements remain, then a final small sort. It records the
+//!   pass/element counters the GPU cost simulator consumes. (The real CUDA
+//!   kernel is non-deterministic across blocks; the model is sequential and
+//!   deterministic, which the paper itself needs for its comparisons —
+//!   §5: "the sorting was performed on the CPU to ensure identical trees".)
+
+use super::Particle;
+use crate::geometry::Axis;
+
+/// Work counters of the partitioning phase, consumed by `gpusim`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SortStats {
+    /// Number of `median_split` invocations (boxes × 3 per level — one
+    /// parent split + two half splits).
+    pub splits: usize,
+    /// Total elements inspected across all partition passes.
+    pub elements_visited: usize,
+    /// Total partition passes (quickselect rounds / GPU split kernels).
+    pub passes: usize,
+    /// Elements moved through the two-pass scatter (GPU model only).
+    pub scattered: usize,
+}
+
+#[inline]
+fn coord(p: &Particle, axis: Axis) -> f64 {
+    match axis {
+        Axis::X => p.pos.re,
+        Axis::Y => p.pos.im,
+    }
+}
+
+/// Partition `part` around its median coordinate along `axis`.
+///
+/// On return, `part[..mid]` all have coordinate ≤ every element of
+/// `part[mid..]` (with `mid = len/2`), and the returned cut coordinate
+/// separates the two groups geometrically (midway between the bounding
+/// coordinates of the halves). Returns `(cut, mid)`.
+///
+/// Degenerate inputs (empty/single-element) return a trivial split.
+pub fn median_split(part: &mut [Particle], axis: Axis, stats: &mut SortStats) -> (f64, usize) {
+    stats.splits += 1;
+    let n = part.len();
+    if n <= 1 {
+        let c = part.first().map(|p| coord(p, axis)).unwrap_or(0.0);
+        return (c, n / 2);
+    }
+    let mid = n / 2;
+    quickselect(part, mid, axis, stats);
+    let cut = cut_between(part, mid, axis);
+    (cut, mid)
+}
+
+/// Geometric cut coordinate: midway between the max of the lower half and
+/// the min of the upper half (so both child rectangles contain their
+/// particles strictly).
+fn cut_between(part: &[Particle], mid: usize, axis: Axis) -> f64 {
+    let lo_max = part[..mid]
+        .iter()
+        .map(|p| coord(p, axis))
+        .fold(f64::NEG_INFINITY, f64::max);
+    let hi_min = part[mid..]
+        .iter()
+        .map(|p| coord(p, axis))
+        .fold(f64::INFINITY, f64::min);
+    if lo_max.is_finite() && hi_min.is_finite() {
+        0.5 * (lo_max + hi_min)
+    } else if hi_min.is_finite() {
+        hi_min
+    } else {
+        lo_max
+    }
+}
+
+/// In-place quickselect: after the call, `part[k]` is the k-th order
+/// statistic along `axis` and the slice is partitioned around it.
+/// Median-of-three pivoting as in the paper's CPU code (§4.1, citing
+/// Sedgewick). Falls back to insertion-style scan for tiny ranges.
+fn quickselect(part: &mut [Particle], k: usize, axis: Axis, stats: &mut SortStats) {
+    let (mut lo, mut hi) = (0usize, part.len());
+    // invariant: the k-th element lies in part[lo..hi]
+    while hi - lo > 8 {
+        stats.passes += 1;
+        stats.elements_visited += hi - lo;
+        let pivot = median_of_three(part, lo, hi, axis);
+        // Hoare-style partition around the pivot *value*
+        let (mut i, mut j) = (lo, hi - 1);
+        loop {
+            while coord(&part[i], axis) < pivot {
+                i += 1;
+            }
+            while coord(&part[j], axis) > pivot {
+                j -= 1;
+            }
+            if i >= j {
+                break;
+            }
+            part.swap(i, j);
+            i += 1;
+            if j == 0 {
+                break;
+            }
+            j -= 1;
+        }
+        // elements equal to the pivot may straddle; j is the last index of
+        // the lower region
+        let split = j + 1;
+        if k < split {
+            hi = split;
+        } else if split > lo {
+            lo = split;
+        } else {
+            // no progress (all elements equal / adversarial): scan directly
+            break;
+        }
+    }
+    // small range: selection sort the remainder (≤ 8 elements typical)
+    stats.elements_visited += (hi - lo) * (hi - lo);
+    let sub = &mut part[lo..hi];
+    for i in 0..sub.len() {
+        let mut min = i;
+        for j in i + 1..sub.len() {
+            if coord(&sub[j], axis) < coord(&sub[min], axis) {
+                min = j;
+            }
+        }
+        sub.swap(i, min);
+    }
+}
+
+fn median_of_three(part: &[Particle], lo: usize, hi: usize, axis: Axis) -> f64 {
+    let a = coord(&part[lo], axis);
+    let b = coord(&part[(lo + hi) / 2], axis);
+    let c = coord(&part[hi - 1], axis);
+    // median of a, b, c
+    a.max(b).min(a.max(c)).min(b.max(c))
+}
+
+/// Functional model of the GPU partitioning (Algorithms 3.1/3.2).
+///
+/// Behaviourally: same contract as [`median_split`]. Operationally it
+/// mirrors the CUDA scheme — pivot from a sorted 32-sample with
+/// rank interpolation, two-pass count+scatter through a temporary buffer,
+/// keep the half containing the median, switch to the direct small-array
+/// path at ≤ `SINGLE_LIMIT` elements — and tallies `SortStats` accordingly.
+pub fn median_split_gpu_model(
+    part: &mut [Particle],
+    axis: Axis,
+    stats: &mut SortStats,
+) -> (f64, usize) {
+    const SAMPLE: usize = 32;
+    stats.splits += 1;
+    let n = part.len();
+    if n <= 1 {
+        let c = part.first().map(|p| coord(p, axis)).unwrap_or(0.0);
+        return (c, n / 2);
+    }
+    let mid = n / 2;
+
+    // the active window [lo, hi) known to contain the median
+    let (mut lo, mut hi) = (0usize, n);
+    let mut scratch: Vec<Particle> = Vec::with_capacity(n);
+    while hi - lo > SAMPLE {
+        stats.passes += 1;
+        stats.elements_visited += hi - lo;
+
+        // --- determine_pivot_32: sort a strided 32-sample, then pick the
+        // sample element whose *relative rank* matches the rank of the
+        // median within the active window (line 2 of Algorithm 3.1).
+        let len = hi - lo;
+        let mut sample: Vec<f64> = (0..SAMPLE)
+            .map(|i| coord(&part[lo + i * len / SAMPLE], axis))
+            .collect();
+        sample.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let target_rank = (mid - lo) as f64 / len as f64;
+        let idx = ((target_rank * SAMPLE as f64) as usize).min(SAMPLE - 1);
+        let pivot = sample[idx];
+
+        // --- split_around_pivot: two-pass count + scatter via scratch
+        scratch.clear();
+        let mut below = 0usize;
+        for p in &part[lo..hi] {
+            if coord(p, axis) < pivot {
+                below += 1;
+            }
+        }
+        // scatter pass: stable placement below/above the pivot
+        scratch.resize(len, part[lo]);
+        let (mut bi, mut ai) = (0usize, below);
+        for p in &part[lo..hi] {
+            if coord(p, axis) < pivot {
+                scratch[bi] = *p;
+                bi += 1;
+            } else {
+                scratch[ai] = *p;
+                ai += 1;
+            }
+        }
+        part[lo..hi].copy_from_slice(&scratch);
+        stats.scattered += len;
+
+        // --- keep_part_containing_median
+        let split = lo + below;
+        if mid < split {
+            hi = split;
+        } else if split > lo {
+            lo = split;
+        } else {
+            // pivot was the minimum: shrink by the (empty) lower part is
+            // impossible, so fall through to the small path to guarantee
+            // progress (matches the CUDA code's bad-pivot handling)
+            break;
+        }
+    }
+
+    // --- determine_median_32 / split_on_single_block: small direct select
+    stats.elements_visited += (hi - lo) * (hi - lo);
+    let sub = &mut part[lo..hi];
+    sub.sort_by(|a, b| coord(a, axis).partial_cmp(&coord(b, axis)).unwrap());
+
+    let cut = cut_between(part, mid, axis);
+    (cut, mid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::complex::C64;
+    use crate::util::prop;
+    use crate::util::rng::Pcg64;
+
+    fn mk(vals: &[(f64, f64)]) -> Vec<Particle> {
+        vals.iter()
+            .enumerate()
+            .map(|(i, &(x, y))| Particle {
+                pos: C64::new(x, y),
+                gamma: C64::new(1.0, 0.0),
+                orig: i as u32,
+            })
+            .collect()
+    }
+
+    fn random_parts(r: &mut Pcg64, n: usize) -> Vec<Particle> {
+        (0..n)
+            .map(|i| Particle {
+                pos: C64::new(r.uniform(), r.uniform()),
+                gamma: C64::new(1.0, 0.0),
+                orig: i as u32,
+            })
+            .collect()
+    }
+
+    fn check_split(part: &[Particle], mid: usize, cut: f64, axis: Axis) {
+        let lo_max = part[..mid]
+            .iter()
+            .map(|p| coord(p, axis))
+            .fold(f64::NEG_INFINITY, f64::max);
+        let hi_min = part[mid..]
+            .iter()
+            .map(|p| coord(p, axis))
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            lo_max <= hi_min,
+            "halves overlap: lo_max={lo_max} hi_min={hi_min}"
+        );
+        assert!(cut >= lo_max && cut <= hi_min, "cut outside gap");
+    }
+
+    #[test]
+    fn median_split_basic() {
+        let mut p = mk(&[(0.9, 0.0), (0.1, 0.0), (0.5, 0.0), (0.3, 0.0), (0.7, 0.0)]);
+        let mut st = SortStats::default();
+        let (cut, mid) = median_split(&mut p, Axis::X, &mut st);
+        assert_eq!(mid, 2);
+        check_split(&p, mid, cut, Axis::X);
+    }
+
+    #[test]
+    fn median_split_property_random() {
+        prop::forall(
+            prop::Config::default(),
+            |r| {
+                let n = 2 + r.below(500) as usize;
+                random_parts(r, n)
+            },
+            |parts| {
+                for axis in [Axis::X, Axis::Y] {
+                    let mut p = parts.clone();
+                    let mut st = SortStats::default();
+                    let (cut, mid) = median_split(&mut p, axis, &mut st);
+                    if mid != p.len() / 2 {
+                        return Err(format!("mid {} != {}", mid, p.len() / 2));
+                    }
+                    let lo_max = p[..mid]
+                        .iter()
+                        .map(|q| coord(q, axis))
+                        .fold(f64::NEG_INFINITY, f64::max);
+                    let hi_min = p[mid..]
+                        .iter()
+                        .map(|q| coord(q, axis))
+                        .fold(f64::INFINITY, f64::min);
+                    if lo_max > hi_min {
+                        return Err(format!("overlap {lo_max} > {hi_min}"));
+                    }
+                    if !(cut >= lo_max && cut <= hi_min) {
+                        return Err("cut outside gap".into());
+                    }
+                    // permutation check
+                    let mut seen: Vec<bool> = vec![false; p.len()];
+                    for q in p.iter() {
+                        if seen[q.orig as usize] {
+                            return Err("duplicated element".into());
+                        }
+                        seen[q.orig as usize] = true;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn gpu_model_agrees_with_cpu_on_median_position() {
+        prop::forall(
+            prop::Config { cases: 40, ..Default::default() },
+            |r| {
+                let n = 40 + r.below(3000) as usize;
+                random_parts(r, n)
+            },
+            |parts| {
+                let mut a = parts.clone();
+                let mut b = parts.clone();
+                let mut st = SortStats::default();
+                let (_, ma) = median_split(&mut a, Axis::X, &mut st);
+                let (_, mb) = median_split_gpu_model(&mut b, Axis::X, &mut st);
+                if ma != mb {
+                    return Err(format!("mid mismatch {ma} vs {mb}"));
+                }
+                // the *sets* in each half must agree (order may differ)
+                let key = |p: &Particle| (p.pos.re * 1e9) as i64;
+                let mut la: Vec<i64> = a[..ma].iter().map(key).collect();
+                let mut lb: Vec<i64> = b[..mb].iter().map(key).collect();
+                la.sort_unstable();
+                lb.sort_unstable();
+                if la != lb {
+                    return Err("half contents differ".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn duplicates_handled() {
+        let mut p = mk(&[(0.5, 0.0); 64]);
+        let mut st = SortStats::default();
+        let (_, mid) = median_split(&mut p, Axis::X, &mut st);
+        assert_eq!(mid, 32);
+        let mut q = mk(&[(0.5, 0.0); 64]);
+        let (_, mid2) = median_split_gpu_model(&mut q, Axis::X, &mut st);
+        assert_eq!(mid2, 32);
+    }
+
+    #[test]
+    fn tiny_inputs() {
+        let mut st = SortStats::default();
+        let mut empty: Vec<Particle> = vec![];
+        let (_, m0) = median_split(&mut empty, Axis::X, &mut st);
+        assert_eq!(m0, 0);
+        let mut one = mk(&[(0.3, 0.1)]);
+        let (_, m1) = median_split(&mut one, Axis::Y, &mut st);
+        assert_eq!(m1, 0);
+        let mut two = mk(&[(0.9, 0.0), (0.1, 0.0)]);
+        let (cut, m2) = median_split(&mut two, Axis::X, &mut st);
+        assert_eq!(m2, 1);
+        assert_eq!(two[0].pos.re, 0.1);
+        assert!((0.1..=0.9).contains(&cut));
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut r = Pcg64::seed_from_u64(9);
+        let mut p = random_parts(&mut r, 10_000);
+        let mut st = SortStats::default();
+        median_split(&mut p, Axis::X, &mut st);
+        assert_eq!(st.splits, 1);
+        assert!(st.passes > 0);
+        assert!(st.elements_visited >= 10_000);
+        let mut q = random_parts(&mut r, 10_000);
+        let mut st2 = SortStats::default();
+        median_split_gpu_model(&mut q, Axis::X, &mut st2);
+        assert!(st2.scattered >= 10_000);
+    }
+}

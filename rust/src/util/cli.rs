@@ -1,0 +1,141 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Grammar: `fmm2d <subcommand> [--key value]... [--flag]...`.
+//! Subcommands register the options they understand; unknown options are an
+//! error so typos fail fast instead of silently using defaults.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one subcommand invocation.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program and subcommand names).
+    /// `--key value` and `--key=value` are both accepted; a `--key` followed
+    /// by another option or nothing is a boolean flag.
+    pub fn parse(argv: &[String]) -> anyhow::Result<Self> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.opts.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(stripped.to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Typed option with default.
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{name} {s}: {e}")),
+        }
+    }
+
+    /// Required typed option.
+    pub fn req<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let s = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))?;
+        s.parse::<T>()
+            .map_err(|e| anyhow::anyhow!("--{name} {s}: {e}"))
+    }
+
+    /// Error out if any provided `--option` is not in `known` (flags included).
+    pub fn check_known(&self, known: &[&str]) -> anyhow::Result<()> {
+        for k in self.opts.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                anyhow::bail!("unknown option --{k}; known: {}", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        // note: positionals go before flags — "--flag value" is read as an
+        // option under the simple grammar
+        let a = Args::parse(&sv(&["pos1", "--n", "1000", "--p=17", "--verbose"])).unwrap();
+        assert_eq!(a.get("n"), Some("1000"));
+        assert_eq!(a.get("p"), Some("17"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn typed_access() {
+        let a = Args::parse(&sv(&["--n", "4096"])).unwrap();
+        assert_eq!(a.get_or("n", 0usize).unwrap(), 4096);
+        assert_eq!(a.get_or("m", 7usize).unwrap(), 7);
+        assert!(a.req::<usize>("m").is_err());
+        assert!(a.get_or("n", 0.0f64).is_ok());
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        let a = Args::parse(&sv(&["--oops", "1"])).unwrap();
+        assert!(a.check_known(&["n", "p"]).is_err());
+        let b = Args::parse(&sv(&["--n", "1"])).unwrap();
+        assert!(b.check_known(&["n"]).is_ok());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(&sv(&["--n", "5", "--fast"])).unwrap();
+        assert!(a.flag("fast"));
+        assert_eq!(a.get_or("n", 0u32).unwrap(), 5);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // "--shift -3" parses as flag+positional under the simple grammar,
+        // so numeric negatives must use the = form; verify that works.
+        let a = Args::parse(&sv(&["--shift=-3"])).unwrap();
+        assert_eq!(a.get_or("shift", 0i32).unwrap(), -3);
+    }
+}

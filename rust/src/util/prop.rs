@@ -1,0 +1,102 @@
+//! Property-based testing substrate (proptest is unavailable offline).
+//!
+//! A deliberately small harness: seeded case generation from [`rng::Pcg64`],
+//! many cases per property, and on failure a report of the seed and case
+//! index so the exact case can be replayed deterministically. No shrinking —
+//! generators here produce already-small cases by construction.
+
+use super::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Honor FMM2D_PROP_CASES so CI can crank coverage up without edits.
+        let cases = std::env::var("FMM2D_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Self {
+            cases,
+            seed: 0xF44_2D00,
+        }
+    }
+}
+
+/// Run `prop` on `cases` inputs drawn by `gen`. Panics with seed/case info on
+/// the first failure (returning `Err(msg)` from the property).
+pub fn forall<T, G, P>(cfg: Config, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Pcg64::seed_from_u64(cfg.seed.wrapping_add(case as u64));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed}): {msg}\ninput: {input:#?}",
+                seed = cfg.seed.wrapping_add(case as u64)
+            );
+        }
+    }
+}
+
+/// Assert two floats are close under combined absolute/relative tolerance.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol {tol}, diff {})", (a - b).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(
+            Config { cases: 32, seed: 1 },
+            |r| r.uniform(),
+            |x| {
+                if (0.0..1.0).contains(x) {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(
+            Config { cases: 8, seed: 2 },
+            |r| r.below(10),
+            |x| {
+                if *x < 5 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-10).is_ok());
+        assert!(close(1.0, 1.1, 1e-3).is_err());
+        assert!(close(1e9, 1e9 + 1.0, 1e-8).is_ok()); // relative scaling
+    }
+}

@@ -1,0 +1,121 @@
+//! Timing statistics for the benchmark substrate.
+//!
+//! The paper reports that measured times showed "a surprisingly small spread";
+//! we report median/mean/stddev/min so EXPERIMENTS.md can make the same
+//! observation quantitatively.
+
+/// Summary statistics over a sample of measurements (seconds, counts, …).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub sd: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+}
+
+impl Summary {
+    /// Compute summary statistics of a sample. Empty samples yield zeros.
+    pub fn of(xs: &[f64]) -> Self {
+        if xs.is_empty() {
+            return Self::default();
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        };
+        Self {
+            n,
+            mean,
+            sd: var.sqrt(),
+            min: s[0],
+            max: s[n - 1],
+            median,
+        }
+    }
+
+    /// Relative spread `sd / mean` (0 when mean is 0).
+    pub fn rel_spread(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.sd / self.mean
+        }
+    }
+}
+
+/// Maximum relative error `max |a-b| / max(|b|, floor)` between two fields —
+/// the paper's tolerance metric, Eq. (5.3), with an absolute floor to avoid
+/// division by ~0 at isolated near-cancellation points.
+pub fn max_rel_error(approx: &[f64], exact: &[f64], floor: f64) -> f64 {
+    assert_eq!(approx.len(), exact.len());
+    approx
+        .iter()
+        .zip(exact)
+        .map(|(a, e)| (a - e).abs() / e.abs().max(floor))
+        .fold(0.0, f64::max)
+}
+
+/// Simple ordinary-least-squares fit `y ≈ a + b·x`; returns `(a, b)`.
+/// Used to check the paper's "optimal N_d grows ≈linearly with p" (Fig. 5.4).
+pub fn linear_fit(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    let sx: f64 = x.iter().sum();
+    let sy: f64 = y.iter().sum();
+    let sxx: f64 = x.iter().map(|v| v * v).sum();
+    let sxy: f64 = x.iter().zip(y).map(|(a, b)| a * b).sum();
+    let b = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    let a = (sy - b * sx) / n;
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-15);
+        assert!((s.median - 2.5).abs() < 1e-15);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.sd - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_odd_median_and_empty() {
+        let s = Summary::of(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.median, 2.0);
+        let e = Summary::of(&[]);
+        assert_eq!(e.n, 0);
+    }
+
+    #[test]
+    fn rel_error_metric() {
+        let e = max_rel_error(&[1.0, 2.0, 3.0], &[1.0, 2.0, 3.003], 1e-30);
+        assert!((e - 0.003 / 3.003).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_fit_recovers_line() {
+        let x: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 + 0.5 * v).collect();
+        let (a, b) = linear_fit(&x, &y);
+        assert!((a - 3.0).abs() < 1e-10);
+        assert!((b - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,133 @@
+//! Workload generators for the paper's experiments (§5, Fig. 5.8):
+//! (i) uniform in the unit square, (ii) normal clouds N(0, σ²) and
+//! (iii) the 'layer' distribution (uniform x, normal y) — all rejected to
+//! fit exactly within the unit square, as the paper does.
+
+use crate::complex::C64;
+use crate::util::rng::Pcg64;
+
+/// Distribution of source points.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Distribution {
+    /// Homogeneous in `[0,1]²` — the paper's §5.1–5.3 default.
+    Uniform,
+    /// Isotropic normal centered in the square with standard deviation σ,
+    /// rejection-sampled into `[0,1]²` (paper uses σ² = 1/100 in Fig. 5.8).
+    Normal { sigma: f64 },
+    /// 'Layer': x uniform, y normal with standard deviation σ,
+    /// rejection-sampled into the square.
+    Layer { sigma: f64 },
+}
+
+impl Distribution {
+    pub fn name(&self) -> String {
+        match self {
+            Distribution::Uniform => "uniform".into(),
+            Distribution::Normal { sigma } => format!("normal(sigma={sigma})"),
+            Distribution::Layer { sigma } => format!("layer(sigma={sigma})"),
+        }
+    }
+
+    /// Sample one point inside the unit square.
+    pub fn sample(&self, r: &mut Pcg64) -> C64 {
+        match *self {
+            Distribution::Uniform => C64::new(r.uniform(), r.uniform()),
+            Distribution::Normal { sigma } => loop {
+                let x = r.normal_with(0.5, sigma);
+                let y = r.normal_with(0.5, sigma);
+                if (0.0..=1.0).contains(&x) && (0.0..=1.0).contains(&y) {
+                    return C64::new(x, y);
+                }
+            },
+            Distribution::Layer { sigma } => {
+                let x = r.uniform();
+                loop {
+                    let y = r.normal_with(0.5, sigma);
+                    if (0.0..=1.0).contains(&y) {
+                        return C64::new(x, y);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Sample `n` points plus unit-magnitude random complex strengths
+    /// (vortex-sheet-like circulations; strengths in `[-1,1]` real and
+    /// imaginary as in the distributed reference scripts).
+    pub fn generate(&self, n: usize, r: &mut Pcg64) -> (Vec<C64>, Vec<C64>) {
+        let pts = (0..n).map(|_| self.sample(r)).collect();
+        let gs = (0..n)
+            .map(|_| C64::new(r.uniform_in(-1.0, 1.0), r.uniform_in(-1.0, 1.0)))
+            .collect();
+        (pts, gs)
+    }
+}
+
+/// Uniform points + strengths in the unit square.
+pub fn uniform_square(n: usize, r: &mut Pcg64) -> (Vec<C64>, Vec<C64>) {
+    Distribution::Uniform.generate(n, r)
+}
+
+/// Normal cloud (σ standard deviation), rejected into the unit square.
+pub fn normal_cloud(n: usize, sigma: f64, r: &mut Pcg64) -> (Vec<C64>, Vec<C64>) {
+    Distribution::Normal { sigma }.generate(n, r)
+}
+
+/// Layer distribution (uniform x, N(0.5, σ²) y).
+pub fn layer(n: usize, sigma: f64, r: &mut Pcg64) -> (Vec<C64>, Vec<C64>) {
+    Distribution::Layer { sigma }.generate(n, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_distributions_stay_in_unit_square() {
+        let mut r = Pcg64::seed_from_u64(1);
+        for dist in [
+            Distribution::Uniform,
+            Distribution::Normal { sigma: 0.1 },
+            Distribution::Layer { sigma: 0.05 },
+        ] {
+            let (pts, gs) = dist.generate(5000, &mut r);
+            assert_eq!(pts.len(), 5000);
+            assert_eq!(gs.len(), 5000);
+            for p in &pts {
+                assert!((0.0..=1.0).contains(&p.re), "{} x={}", dist.name(), p.re);
+                assert!((0.0..=1.0).contains(&p.im), "{} y={}", dist.name(), p.im);
+            }
+        }
+    }
+
+    #[test]
+    fn normal_cloud_is_concentrated() {
+        let mut r = Pcg64::seed_from_u64(2);
+        let (pts, _) = normal_cloud(20_000, 0.1, &mut r);
+        let inside_2sigma = pts
+            .iter()
+            .filter(|p| (p.re - 0.5).abs() < 0.2 && (p.im - 0.5).abs() < 0.2)
+            .count();
+        // ~0.954² ≈ 91% of samples within ±2σ in both coordinates
+        assert!(inside_2sigma as f64 > 0.85 * 20_000.0);
+    }
+
+    #[test]
+    fn layer_spreads_x_but_not_y() {
+        let mut r = Pcg64::seed_from_u64(3);
+        let (pts, _) = layer(20_000, 0.05, &mut r);
+        let x_spread = pts.iter().filter(|p| p.re < 0.25).count();
+        let y_spread = pts.iter().filter(|p| (p.im - 0.5).abs() > 0.25).count();
+        assert!(x_spread as f64 > 0.2 * 20_000.0, "x should be uniform");
+        assert!((y_spread as f64) < 0.01 * 20_000.0, "y should be tight");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Pcg64::seed_from_u64(9);
+        let mut b = Pcg64::seed_from_u64(9);
+        let (pa, _) = uniform_square(100, &mut a);
+        let (pb, _) = uniform_square(100, &mut b);
+        assert_eq!(pa, pb);
+    }
+}

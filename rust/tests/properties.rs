@@ -1,0 +1,273 @@
+//! Property-based tests over the whole coordinator (seeded generators via
+//! `util::prop`; set FMM2D_PROP_CASES to widen coverage in CI).
+
+use fmm2d::complex::C64;
+use fmm2d::config::FmmConfig;
+use fmm2d::connectivity::{is_symmetric, Connectivity};
+use fmm2d::direct;
+use fmm2d::expansion::shifts::{l2l, m2l, m2m_scaled};
+use fmm2d::expansion::{l2p, m2p, p2m, Coeffs, Kernel};
+use fmm2d::fmm::{evaluate, FmmOptions};
+use fmm2d::geometry::theta_criterion;
+use fmm2d::tree::{boxes_at_level, Pyramid};
+use fmm2d::util::prop::{self, Config};
+use fmm2d::util::rng::Pcg64;
+use fmm2d::workload::Distribution;
+
+fn random_cloud(r: &mut Pcg64) -> (Vec<C64>, Vec<C64>, usize) {
+    let dist = match r.below(3) {
+        0 => Distribution::Uniform,
+        1 => Distribution::Normal {
+            sigma: 0.02 + 0.2 * r.uniform(),
+        },
+        _ => Distribution::Layer {
+            sigma: 0.02 + 0.1 * r.uniform(),
+        },
+    };
+    let levels = 1 + r.below(3) as usize;
+    let n = boxes_at_level(levels) * (2 + r.below(40) as usize);
+    let (pts, gs) = dist.generate(n, r);
+    (pts, gs, levels)
+}
+
+#[test]
+fn prop_tree_partitions_particles() {
+    prop::forall(
+        Config { cases: 24, ..Default::default() },
+        |r| random_cloud(r),
+        |(pts, gs, levels)| {
+            let pyr = Pyramid::build(pts, gs, *levels);
+            // every particle in exactly one leaf, inside its rect
+            let mut seen = vec![false; pts.len()];
+            for b in 0..pyr.n_leaves() {
+                let rect = pyr.rects[*levels][b];
+                for q in pyr.leaf(b) {
+                    if seen[q.orig as usize] {
+                        return Err(format!("particle {} twice", q.orig));
+                    }
+                    seen[q.orig as usize] = true;
+                    if !rect.contains(q.pos) {
+                        return Err(format!("particle {} outside rect", q.orig));
+                    }
+                }
+            }
+            if !seen.iter().all(|&s| s) {
+                return Err("lost particles".into());
+            }
+            // balance: sizes within the repeated-halving envelope
+            let sizes: Vec<usize> = (0..pyr.n_leaves()).map(|b| pyr.leaf(b).len()).collect();
+            let (lo, hi) = (
+                *sizes.iter().min().unwrap(),
+                *sizes.iter().max().unwrap(),
+            );
+            if hi - lo > 2 * *levels {
+                return Err(format!("unbalanced: {lo}..{hi}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_connectivity_invariants() {
+    prop::forall(
+        Config { cases: 16, ..Default::default() },
+        |r| random_cloud(r),
+        |(pts, gs, levels)| {
+            let pyr = Pyramid::build(pts, gs, *levels);
+            let con = Connectivity::build(&pyr, 0.5);
+            // P2P symmetry
+            if !is_symmetric(&con.near) {
+                return Err("near field not symmetric".into());
+            }
+            // self in near list
+            for b in 0..pyr.n_leaves() {
+                if !con.near.sources(b).contains(&(b as u32)) {
+                    return Err(format!("box {b} missing self"));
+                }
+            }
+            // θ-criterion for all weak pairs at all levels
+            for l in 1..=*levels {
+                for b in 0..boxes_at_level(l) {
+                    for &s in con.weak[l].sources(b) {
+                        let (ra, rs) = (
+                            pyr.rects[l][b].radius(),
+                            pyr.rects[l][s as usize].radius(),
+                        );
+                        let d = (pyr.rects[l][b].center()
+                            - pyr.rects[l][s as usize].center())
+                        .abs();
+                        if !theta_criterion(ra, rs, d, 0.5) {
+                            return Err(format!("weak pair ({b},{s})@{l} violates θ"));
+                        }
+                    }
+                }
+            }
+            // P2L/M2P duality
+            let mut p2l: Vec<(u32, u32)> = (0..pyr.n_leaves())
+                .flat_map(|b| {
+                    con.p2l.sources(b).iter().map(move |&s| (b as u32, s))
+                })
+                .collect();
+            let mut m2p: Vec<(u32, u32)> = (0..pyr.n_leaves())
+                .flat_map(|b| {
+                    con.m2p.sources(b).iter().map(move |&s| (s, b as u32))
+                })
+                .collect();
+            p2l.sort_unstable();
+            m2p.sort_unstable();
+            if p2l != m2p {
+                return Err("P2L/M2P not dual".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fmm_error_within_geometric_bound() {
+    // Eq. (5.3) error stays under a comfortable multiple of θ^p across
+    // random clouds, orders and depths.
+    prop::forall(
+        Config { cases: 10, ..Default::default() },
+        |r| {
+            let (pts, gs, levels) = random_cloud(r);
+            let p = 6 + r.below(18) as usize;
+            (pts, gs, levels, p)
+        },
+        |(pts, gs, levels, p)| {
+            let opts = FmmOptions {
+                cfg: FmmConfig {
+                    p: *p,
+                    levels_override: Some(*levels),
+                    ..FmmConfig::default()
+                },
+                ..Default::default()
+            };
+            let out = evaluate(pts, gs, &opts);
+            let exact = direct::eval_symmetric(Kernel::Harmonic, pts, gs);
+            let scale = exact.iter().map(|z| z.abs()).fold(0.0, f64::max);
+            let err = out
+                .potentials
+                .iter()
+                .zip(&exact)
+                .map(|(a, e)| (*a - *e).abs())
+                .fold(0.0f64, f64::max)
+                / scale;
+            let bound = 60.0 * 0.5f64.powi(*p as i32);
+            if err > bound {
+                return Err(format!("err {err:e} > bound {bound:e} (p={p})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_translation_identities() {
+    // M2M path-independence, M2L+L2L commutation with evaluation, and
+    // M2P consistency with the shifted expansion — on random coefficients.
+    prop::forall(
+        Config { cases: 40, ..Default::default() },
+        |r| {
+            let p = 10 + r.below(22) as usize;
+            let coeffs: Vec<C64> = std::iter::once(C64::new(0.0, 0.0))
+                .chain((0..p).map(|_| {
+                    C64::new(r.uniform_in(-1.0, 1.0), r.uniform_in(-1.0, 1.0))
+                }))
+                .collect();
+            // well-separated geometry: source centers near origin,
+            // evaluation disk far away (ratio ≤ ~0.15 ⇒ truncation error
+            // of the re-expansions ≲ 0.15^p)
+            let z0 = C64::new(r.uniform_in(-0.2, 0.2), r.uniform_in(-0.2, 0.2));
+            let z1 = C64::new(r.uniform_in(-0.3, 0.3), r.uniform_in(-0.3, 0.3));
+            let zt = C64::new(4.0 + r.uniform(), 3.0 + r.uniform());
+            (p, coeffs, z0, z1, zt)
+        },
+        |(p, coeffs, z0, z1, zt)| {
+            // shifted expansions are p-term truncations: tolerance follows
+            // the geometric bound with generous headroom
+            let tol = (4.0 * 0.3f64.powi(*p as i32)).max(1e-10);
+            let m0 = Coeffs(coeffs.clone());
+            // (a) M2M then evaluate == evaluate original (far away)
+            let mut m1 = Coeffs::zero(*p);
+            if (*z0 - *z1).norm_sqr() > 0.0 {
+                m2m_scaled(&m0, *z0, &mut m1, *z1);
+                let direct_val = m2p(*z0, &m0, *zt);
+                let shifted_val = m2p(*z1, &m1, *zt);
+                prop::close(direct_val.re, shifted_val.re, tol)?;
+                prop::close(direct_val.im, shifted_val.im, tol)?;
+            }
+            // (b) M2L then L2P == M2P at the local center
+            let zl = *zt;
+            let mut loc = Coeffs::zero(*p);
+            m2l(&m0, *z0, &mut loc, zl);
+            let at_center = l2p(zl, &loc, zl);
+            let reference = m2p(*z0, &m0, zl);
+            prop::close(at_center.re, reference.re, tol)?;
+            prop::close(at_center.im, reference.im, tol)?;
+            // (c) L2L preserves values inside the disk
+            let zc = zl + C64::new(0.05, -0.03);
+            let mut loc2 = Coeffs::zero(*p);
+            l2l(&loc, zl, &mut loc2, zc);
+            let a = l2p(zl, &loc, zc);
+            let b = l2p(zc, &loc2, zc);
+            prop::close(a.re, b.re, 1e-8)?;
+            prop::close(a.im, b.im, 1e-8)?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_p2m_m2p_roundtrip_random_sources() {
+    prop::forall(
+        Config { cases: 30, ..Default::default() },
+        |r| {
+            let n = 1 + r.below(30) as usize;
+            let pts: Vec<C64> = (0..n)
+                .map(|_| C64::new(r.uniform_in(-0.2, 0.2), r.uniform_in(-0.2, 0.2)))
+                .collect();
+            let gs: Vec<C64> = (0..n)
+                .map(|_| C64::new(r.uniform_in(-1.0, 1.0), r.uniform_in(-1.0, 1.0)))
+                .collect();
+            let zt = C64::new(
+                2.0 + 2.0 * r.uniform(),
+                -2.0 - 2.0 * r.uniform(),
+            );
+            (pts, gs, zt)
+        },
+        |(pts, gs, zt)| {
+            let mut m = Coeffs::zero(40);
+            p2m(Kernel::Harmonic, C64::new(0.0, 0.0), pts, gs, &mut m);
+            let approx = m2p(C64::new(0.0, 0.0), &m, *zt);
+            let exact: C64 = pts
+                .iter()
+                .zip(gs)
+                .map(|(&s, &g)| g * (s - *zt).recip())
+                .sum();
+            prop::close(approx.re, exact.re, 1e-9)?;
+            prop::close(approx.im, exact.im, 1e-9)
+        },
+    );
+}
+
+#[test]
+fn prop_direct_symmetric_equals_plain() {
+    prop::forall(
+        Config { cases: 20, ..Default::default() },
+        |r| {
+            let n = 2 + r.below(200) as usize;
+            Distribution::Uniform.generate(n, r)
+        },
+        |(pts, gs)| {
+            let a = direct::eval_plain(Kernel::Harmonic, pts, gs);
+            let b = direct::eval_symmetric(Kernel::Harmonic, pts, gs);
+            for (x, y) in a.iter().zip(&b) {
+                prop::close(x.re, y.re, 1e-10)?;
+                prop::close(x.im, y.im, 1e-10)?;
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,161 @@
+//! End-to-end over the PJRT runtime: the three layers composed.
+//!
+//! Rust builds the adaptive tree (topological phase), packs it, executes
+//! the AOT-compiled fused FMM artifact (whose hot spots are the Pallas
+//! kernels), and the result is checked against both direct summation and
+//! the serial Rust FMM — "identical accuracy from the two codes" is the
+//! paper's own headline property (§4.5).
+//!
+//! Requires `make artifacts` (skipped with a notice when absent, so plain
+//! `cargo test` works in a fresh checkout).
+
+use fmm2d::complex::C64;
+use fmm2d::config::FmmConfig;
+use fmm2d::connectivity::Connectivity;
+use fmm2d::direct;
+use fmm2d::expansion::Kernel;
+use fmm2d::fmm::{self, FmmOptions};
+use fmm2d::runtime::Runtime;
+use fmm2d::tree::Pyramid;
+use fmm2d::util::rng::Pcg64;
+use fmm2d::util::stats::max_rel_error;
+use fmm2d::workload;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let rt = Runtime::new(None).expect("PJRT CPU client");
+    if rt.available().is_empty() {
+        eprintln!(
+            "SKIP: no artifacts in {} — run `make artifacts`",
+            rt.artifact_dir().display()
+        );
+        return None;
+    }
+    Some(rt)
+}
+
+fn rel_err(a: &[C64], b: &[C64]) -> f64 {
+    let av: Vec<f64> = a.iter().map(|z| z.abs()).collect();
+    let bv: Vec<f64> = b.iter().map(|z| z.abs()).collect();
+    max_rel_error(&av, &bv, 1e-12)
+}
+
+#[test]
+fn fmm_artifact_matches_direct_and_serial() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut r = Pcg64::seed_from_u64(2024);
+    let (pts, gs) = workload::uniform_square(3000, &mut r);
+
+    // topological phase in Rust (L3)
+    let pyr = Pyramid::build(&pts, &gs, 3);
+    let con = Connectivity::build(&pyr, 0.5);
+
+    // computational phase through PJRT (L2 + L1)
+    let exe = rt.load("fmm_l3_p17").expect("artifact fmm_l3_p17");
+    let (pot, stats) = exe.run_fmm(&pyr, &con).expect("artifact execution");
+    assert!(stats.execute_s > 0.0);
+
+    // against direct summation: p=17 ⇒ TOL ≈ 1e-6 (paper §5.1)
+    let exact = direct::eval_symmetric(Kernel::Harmonic, &pts, &gs);
+    let err = rel_err(&pot, &exact);
+    assert!(err < 1e-5, "XLA path vs direct: {err:e}");
+
+    // against the serial CPU driver: same algorithm, same tree
+    let opts = FmmOptions {
+        cfg: FmmConfig {
+            p: 17,
+            levels_override: Some(3),
+            ..FmmConfig::default()
+        },
+        ..Default::default()
+    };
+    let (phi_leaf, _, _) = fmm::evaluate_on_tree(&pyr, &con, &opts);
+    let serial = pyr.unpermute(&phi_leaf);
+    let agree = rel_err(&pot, &serial);
+    assert!(agree < 1e-9, "XLA vs serial Rust disagree: {agree:e}");
+}
+
+#[test]
+fn fmm_artifact_nonuniform_distribution() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut r = Pcg64::seed_from_u64(7);
+    let (pts, gs) = workload::normal_cloud(2500, 0.1, &mut r);
+    let pyr = Pyramid::build(&pts, &gs, 3);
+    let con = Connectivity::build(&pyr, 0.5);
+    // adaptive shortcut lists exercised on clustered input
+    let exe = rt.load("fmm_l3_p17").unwrap();
+    let (pot, _) = exe.run_fmm(&pyr, &con).expect("artifact execution");
+    let exact = direct::eval_symmetric(Kernel::Harmonic, &pts, &gs);
+    let err = rel_err(&pot, &exact);
+    assert!(err < 2e-5, "normal cloud: {err:e}");
+}
+
+#[test]
+fn small_artifact_l2_p8() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut r = Pcg64::seed_from_u64(11);
+    let (pts, gs) = workload::uniform_square(400, &mut r);
+    let pyr = Pyramid::build(&pts, &gs, 2);
+    let con = Connectivity::build(&pyr, 0.5);
+    let exe = rt.load("fmm_l2_p8").unwrap();
+    let (pot, _) = exe.run_fmm(&pyr, &con).unwrap();
+    let exact = direct::eval_symmetric(Kernel::Harmonic, &pts, &gs);
+    // p=8 ⇒ θ^8 ≈ 4e-3 geometric bound; observed much better on uniform
+    let err = rel_err(&pot, &exact);
+    assert!(err < 1e-2, "p=8: {err:e}");
+}
+
+#[test]
+fn direct_artifact_matches_cpu() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let exe = rt.load("direct_n2048").unwrap();
+    let n = exe.meta.n_direct;
+    let mut r = Pcg64::seed_from_u64(3);
+    let (pts, gs) = workload::uniform_square(n, &mut r);
+    let (pot, _) = exe.run_direct(&pts, &gs).unwrap();
+    let exact = direct::eval_symmetric(Kernel::Harmonic, &pts, &gs);
+    let err = rel_err(&pot, &exact);
+    assert!(err < 1e-10, "direct artifact: {err:e}");
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = rt.load("fmm_l2_p8").unwrap();
+    let b = rt.load("fmm_l2_p8").unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b), "second load must hit the cache");
+}
+
+#[test]
+fn pad_overflow_reports_actionable_error() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // 2-level tree fed to the 3-level artifact: must fail with a clear error
+    let mut r = Pcg64::seed_from_u64(5);
+    let (pts, gs) = workload::uniform_square(500, &mut r);
+    let pyr = Pyramid::build(&pts, &gs, 2);
+    let con = Connectivity::build(&pyr, 0.5);
+    let exe = rt.load("fmm_l3_p17").unwrap();
+    let err = exe.run_fmm(&pyr, &con).unwrap_err().to_string();
+    assert!(err.contains("levels"), "got: {err}");
+}
+
+#[test]
+fn pallas_variant_matches_jnp_variant() {
+    // the TPU-design artifact (hot spots through the L1 Pallas kernels)
+    // and the fast jnp-lowered artifact are numerically identical
+    let Some(mut rt) = runtime_or_skip() else { return };
+    if !rt.available().contains(&"fmm_l2_p8_pallas".to_string()) {
+        eprintln!("SKIP: pallas variant not emitted");
+        return;
+    }
+    let mut r = Pcg64::seed_from_u64(31);
+    let (pts, gs) = workload::uniform_square(420, &mut r);
+    let pyr = Pyramid::build(&pts, &gs, 2);
+    let con = Connectivity::build(&pyr, 0.5);
+    let a = rt.load("fmm_l2_p8").unwrap();
+    let b = rt.load("fmm_l2_p8_pallas").unwrap();
+    let (pa, _) = a.run_fmm(&pyr, &con).unwrap();
+    let (pb, _) = b.run_fmm(&pyr, &con).unwrap();
+    for (x, y) in pa.iter().zip(&pb) {
+        assert!((*x - *y).abs() < 1e-11 * x.abs().max(1.0));
+    }
+}
