@@ -8,14 +8,7 @@
 
 use std::time::Instant;
 
-use fmm2d::config::FmmConfig;
-use fmm2d::connectivity::Connectivity;
-use fmm2d::expansion::Kernel;
-use fmm2d::fmm::{evaluate_on_tree, FmmOptions};
 use fmm2d::harness::{self, HarnessOpts};
-use fmm2d::runtime::Runtime;
-use fmm2d::tree::Pyramid;
-use fmm2d::workload::Distribution;
 
 fn timed<F: FnOnce()>(name: &str, f: F) {
     let t = Instant::now();
@@ -23,7 +16,21 @@ fn timed<F: FnOnce()>(name: &str, f: F) {
     eprintln!("[{name}: {:.1} s]", t.elapsed().as_secs_f64());
 }
 
+#[cfg(not(feature = "pjrt"))]
 fn xla_bench() {
+    eprintln!("[xla_bench skipped: built without the `pjrt` feature]");
+}
+
+#[cfg(feature = "pjrt")]
+fn xla_bench() {
+    use fmm2d::config::FmmConfig;
+    use fmm2d::connectivity::Connectivity;
+    use fmm2d::expansion::Kernel;
+    use fmm2d::fmm::{evaluate_on_tree, FmmOptions};
+    use fmm2d::runtime::Runtime;
+    use fmm2d::tree::Pyramid;
+    use fmm2d::workload::Distribution;
+
     let Ok(mut rt) = Runtime::new(None) else {
         eprintln!("[xla_bench skipped: no PJRT]");
         return;
@@ -63,6 +70,7 @@ fn xla_bench() {
             },
             kernel: Kernel::Harmonic,
             symmetric_p2p: true,
+            threads: Some(1),
         };
         let t = Instant::now();
         let (phi_leaf, _, _) = evaluate_on_tree(&pyr, &con, &opts);

@@ -113,24 +113,35 @@ fn main() {
         });
     }
 
-    // ---- whole computational phase (fixed tree), symmetric vs directed
+    // ---- whole computational phase (fixed tree): symmetric vs directed,
+    // serial engine vs the multithreaded engine at every power-of-two
+    // thread count up to the machine's parallelism
     {
         let (pts, gs) = workload::uniform_square(50_000, &mut rng);
         let pyr = Pyramid::build(&pts, &gs, 5);
         let con = Connectivity::build(&pyr, 0.5);
+        let max_t = fmm2d::util::threadpool::available_threads();
+        let mut thread_counts = vec![1usize];
+        while *thread_counts.last().unwrap() * 2 <= max_t {
+            thread_counts.push(thread_counts.last().unwrap() * 2);
+        }
         for (name, sym) in [("symmetric", true), ("directed", false)] {
-            let opts = FmmOptions {
-                cfg: FmmConfig {
-                    p: 17,
-                    levels_override: Some(5),
-                    ..FmmConfig::default()
-                },
-                kernel: Kernel::Harmonic,
-                symmetric_p2p: sym,
-            };
-            run(&format!("fmm_compute_50k_{name}"), &mut || {
-                black_box(evaluate_on_tree(&pyr, &con, &opts));
-            });
+            for &t in &thread_counts {
+                let opts = FmmOptions {
+                    cfg: FmmConfig {
+                        p: 17,
+                        levels_override: Some(5),
+                        ..FmmConfig::default()
+                    },
+                    kernel: Kernel::Harmonic,
+                    symmetric_p2p: sym,
+                    threads: Some(t),
+                };
+                let engine = if t == 1 { "serial" } else { "parallel" };
+                run(&format!("fmm_compute_50k_{name}_{engine}_t{t}"), &mut || {
+                    black_box(evaluate_on_tree(&pyr, &con, &opts));
+                });
+            }
         }
     }
 

@@ -48,6 +48,7 @@ fn main() {
             cfg,
             kernel: Kernel::Harmonic,
             symmetric_p2p: true,
+            threads: None,
         };
         let t = std::time::Instant::now();
         let (_, _, _) = evaluate_on_tree(&pyr, &con, &opts);

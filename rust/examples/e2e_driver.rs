@@ -9,23 +9,36 @@
 //! have *identical accuracy* (§4.5), and the run is recorded in
 //! EXPERIMENTS.md §End-to-end.
 //!
-//! Run: `make artifacts && cargo run --release --example e2e_driver`
+//! Needs a build with the `pjrt` feature (a stub main explains otherwise).
+//!
+//! Run: `make artifacts && cargo run --release --features pjrt --example e2e_driver`
 
-use fmm2d::complex::C64;
-use fmm2d::config::FmmConfig;
-use fmm2d::connectivity::Connectivity;
-use fmm2d::expansion::Kernel;
-use fmm2d::fmm::{evaluate_on_tree, FmmOptions};
-use fmm2d::runtime::Runtime;
-use fmm2d::tree::Pyramid;
-use fmm2d::util::rng::Pcg64;
-use fmm2d::util::stats::Summary;
-use fmm2d::workload;
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!(
+        "e2e_driver drives the PJRT runtime, which is disabled in this build; \
+         rebuild with `cargo run --release --features pjrt --example e2e_driver`"
+    );
+    std::process::exit(2);
+}
 
-fn main() -> anyhow::Result<()> {
+#[cfg(feature = "pjrt")]
+fn main() -> fmm2d::util::error::Result<()> {
+    use fmm2d::complex::C64;
+    use fmm2d::config::FmmConfig;
+    use fmm2d::connectivity::Connectivity;
+    use fmm2d::ensure;
+    use fmm2d::expansion::Kernel;
+    use fmm2d::fmm::{evaluate_on_tree, FmmOptions};
+    use fmm2d::runtime::Runtime;
+    use fmm2d::tree::Pyramid;
+    use fmm2d::util::rng::Pcg64;
+    use fmm2d::util::stats::Summary;
+    use fmm2d::workload;
+
     let mut rt = Runtime::new(None)?;
     if rt.available().is_empty() {
-        anyhow::bail!("no artifacts found — run `make artifacts` first");
+        fmm2d::bail!("no artifacts found — run `make artifacts` first");
     }
     println!("platform: {} | artifacts: {:?}", rt.platform(), rt.available());
 
@@ -51,6 +64,7 @@ fn main() -> anyhow::Result<()> {
         },
         kernel: Kernel::Harmonic,
         symmetric_p2p: true,
+        threads: Some(1),
     };
 
     let steps = 5;
@@ -81,7 +95,7 @@ fn main() -> anyhow::Result<()> {
             stats.execute_s * 1e3,
             stats.total() * 1e3
         );
-        anyhow::ensure!(agree < 1e-9, "layers disagree at step {step}");
+        ensure!(agree < 1e-9, "layers disagree at step {step}");
 
         // advance the vortex system with the XLA-computed field
         let scale = dt / (2.0 * std::f64::consts::PI);

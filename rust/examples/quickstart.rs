@@ -23,6 +23,9 @@ fn main() {
         cfg: FmmConfig::new(17, 45),
         kernel: Kernel::Harmonic,
         symmetric_p2p: true,
+        // the multithreaded engine with all available cores (Some(1) would
+        // select the paper's serial reference driver)
+        threads: None,
     };
 
     let out = evaluate(&points, &gammas, &opts);

@@ -21,6 +21,7 @@ fn measured_tol(kernel: Kernel, p: usize, pts: &[fmm2d::C64], gs: &[fmm2d::C64])
         },
         kernel,
         symmetric_p2p: true,
+        threads: None,
     };
     let out = evaluate(pts, gs, &opts);
     let exact = direct::eval_symmetric(kernel, pts, gs);

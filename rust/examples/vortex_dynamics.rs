@@ -58,6 +58,7 @@ fn main() {
         cfg: FmmConfig::new(17, 45),
         kernel: Kernel::Harmonic,
         symmetric_p2p: true,
+        threads: None,
     };
 
     let gamma0 = total_circulation(&gammas);

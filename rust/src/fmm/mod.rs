@@ -1,10 +1,16 @@
-//! The serial CPU FMM driver — the paper's reference implementation
-//! (§4: single-threaded, symmetry-exploiting, scaled shift operators).
+//! The CPU FMM drivers: the paper's serial reference implementation
+//! (§4: single-threaded, symmetry-exploiting, scaled shift operators) and
+//! the multithreaded execution engine ([`parallel`]) that shards every
+//! computational phase over scoped worker threads.
 //!
-//! The driver is fully *phase-instrumented*: it reports wall-clock time and
-//! work counts for every phase of Table 5.1 (Sort, Connect, P2M, M2M, M2L,
-//! L2L, L2P, P2P), which the evaluation harness uses directly and the GPU
-//! cost simulator consumes as its workload description.
+//! Both drivers are fully *phase-instrumented*: they report wall-clock time
+//! and work counts for every phase of Table 5.1 (Sort, Connect, P2M, M2M,
+//! M2L, L2L, L2P, P2P), which the evaluation harness uses directly and the
+//! GPU cost simulator consumes as its workload description. The two
+//! engines produce *identical* [`WorkCounts`] — only the wall-clock
+//! differs.
+
+pub mod parallel;
 
 use std::time::Instant;
 
@@ -99,6 +105,10 @@ pub struct FmmOptions {
     /// Use the CPU symmetry trick in the near field (§4.2). The directed
     /// (GPU-layout) evaluation is used when false.
     pub symmetric_p2p: bool,
+    /// Worker threads for the computational phase: `Some(1)` forces the
+    /// serial reference driver, `Some(t)` uses `t` workers, `None` (the
+    /// default) uses the machine's available parallelism.
+    pub threads: Option<usize>,
 }
 
 impl Default for FmmOptions {
@@ -107,7 +117,17 @@ impl Default for FmmOptions {
             cfg: FmmConfig::default(),
             kernel: Kernel::Harmonic,
             symmetric_p2p: true,
+            threads: None,
         }
+    }
+}
+
+impl FmmOptions {
+    /// Resolved worker-thread count (≥ 1).
+    pub fn effective_threads(&self) -> usize {
+        self.threads
+            .unwrap_or_else(crate::util::threadpool::available_threads)
+            .max(1)
     }
 }
 
@@ -179,7 +199,23 @@ pub fn evaluate(points: &[C64], gammas: &[C64], opts: &FmmOptions) -> FmmOutput 
 /// Exposed so the harness can time the computational part against *fixed*
 /// trees — exactly what the paper does ("the sorting was performed on the
 /// CPU to ensure identical multipole trees", §5).
+///
+/// Dispatches between the serial reference driver and the multithreaded
+/// engine according to [`FmmOptions::effective_threads`].
 pub fn evaluate_on_tree(
+    pyr: &Pyramid,
+    con: &Connectivity,
+    opts: &FmmOptions,
+) -> (Vec<C64>, PhaseTimes, WorkCounts) {
+    let nt = opts.effective_threads().min(pyr.n_leaves());
+    if nt > 1 {
+        return parallel::evaluate_on_tree_parallel(pyr, con, opts, nt);
+    }
+    evaluate_on_tree_serial(pyr, con, opts)
+}
+
+/// The serial reference driver (the paper's single-threaded CPU code, §4).
+pub fn evaluate_on_tree_serial(
     pyr: &Pyramid,
     con: &Connectivity,
     opts: &FmmOptions,
@@ -359,6 +395,13 @@ pub fn evaluate_on_tree(
             let (blo, bhi) = (pyr.starts[b], pyr.starts[b + 1]);
             for &s in con.near.sources(b) {
                 let su = s as usize;
+                // Counted for every source — including the `su < b` pairs
+                // skipped below — because `p2p_src_per_box` carries the
+                // *directed* semantics (sources streamed per destination
+                // box) that the GPU cost model reads: the directed path
+                // visits every (b, su) entry of the symmetric `near` lists,
+                // so the count must be formulation-independent (asserted in
+                // `work_counts_consistent`).
                 counts.p2p_src_per_box[b] += (pyr.starts[su + 1] - pyr.starts[su]) as u32;
                 if su < b {
                     continue; // visited from the other side
@@ -459,6 +502,7 @@ mod tests {
             },
             kernel,
             symmetric_p2p: symmetric,
+            threads: None,
         };
         let out = evaluate(&pts, &gs, &opts);
         let exact = direct::eval_symmetric(kernel, &pts, &gs);
@@ -600,6 +644,30 @@ mod tests {
         assert!(c.m2l_per_level.iter().sum::<usize>() > 0);
         assert!(c.p2p_pairs > 0);
         assert!(c.connect_checks > 0);
+
+        // Regression: the symmetric (CPU, §4.2) and directed (GPU layout,
+        // §4.3) P2P formulations must report identical work counts — the
+        // gpusim cost model reads `p2p_src_per_box` with directed
+        // semantics regardless of which CPU path measured the tree.
+        let dir = evaluate(
+            &pts,
+            &gs,
+            &FmmOptions {
+                symmetric_p2p: false,
+                ..opts
+            },
+        );
+        assert_eq!(c.p2p_src_per_box, dir.counts.p2p_src_per_box);
+        assert_eq!(c.p2p_pairs, dir.counts.p2p_pairs);
+        // and both agree with the closed form Σ_b n_b·src_b − N
+        let closed: usize = c
+            .leaf_sizes
+            .iter()
+            .zip(&c.p2p_src_per_box)
+            .map(|(&n_b, &src)| n_b as usize * src as usize)
+            .sum::<usize>()
+            - c.n;
+        assert_eq!(c.p2p_pairs, closed);
     }
 
     #[test]

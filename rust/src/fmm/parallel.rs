@@ -1,0 +1,477 @@
+//! The multithreaded FMM execution engine.
+//!
+//! Every computational phase of the serial driver
+//! ([`super::evaluate_on_tree_serial`]) is sharded over
+//! `std::thread::scope` workers with **writer-side ownership**: each thread
+//! owns a disjoint contiguous slice of the *destination* boxes (P2M/L2P/P2P
+//! over leaf ranges, M2M/M2L/L2L over box ranges per level), matching the
+//! paper's directed no-write-conflict list layout (§4.3), so the engine
+//! needs no locks or atomics. The only cross-thread reduction is the
+//! symmetric P2P path (§4.2), whose scattered `Φ_j −= Γ_i r` updates go to
+//! per-thread full-length accumulators merged in thread order — the run is
+//! deterministic for a fixed thread count.
+//!
+//! Work counts are *identical* to the serial engine (asserted by
+//! `tests/parallel_parity.rs`): every count is derived from the same tree
+//! and connectivity structure, so `gpusim` consumes the same
+//! [`WorkCounts`] no matter which engine measured the tree. Destination
+//! ranges are balanced by per-box work estimates
+//! ([`weighted_ranges`]) because the symmetric P2P load is triangular and
+//! the M2L in-degree varies on adaptive meshes.
+
+use std::time::Instant;
+
+use super::{CoeffPyramid, FmmOptions, Phase, PhaseTimes, WorkCounts};
+use crate::complex::{C64, ZERO};
+use crate::connectivity::Connectivity;
+use crate::expansion::matrices::{M2lOperator, M2lScratch};
+use crate::expansion::shifts::{l2l_with, m2l_with, m2m_scaled_with, ShiftScratch};
+use crate::expansion::{l2p, m2p, p2l, p2m, Coeffs, Kernel};
+use crate::tree::{boxes_at_level, Pyramid};
+use crate::util::threadpool::{ranges, scoped_chunks_mut, split_lengths_mut, weighted_ranges};
+
+/// The computational phase on a prebuilt tree, executed by `nt ≥ 1` worker
+/// threads. Returns leaf-ordered potentials plus timings/counts
+/// (Sort/Connect slots left zero), exactly like the serial driver.
+pub fn evaluate_on_tree_parallel(
+    pyr: &Pyramid,
+    con: &Connectivity,
+    opts: &FmmOptions,
+    nt: usize,
+) -> (Vec<C64>, PhaseTimes, WorkCounts) {
+    let p = opts.cfg.p;
+    let stride = p + 1;
+    let levels = pyr.levels;
+    let nl = pyr.n_leaves();
+    let n = pyr.particles.len();
+    let nt = nt.clamp(1, nl);
+    let mut times = PhaseTimes::default();
+    let mut counts = WorkCounts {
+        n,
+        levels,
+        p,
+        leaf_sizes: (0..nl)
+            .map(|b| (pyr.starts[b + 1] - pyr.starts[b]) as u32)
+            .collect(),
+        connect_checks: con.checks,
+        sort: pyr.sort_stats,
+        ..Default::default()
+    };
+
+    // SoA copies of the permuted particles, shared read-only by all workers
+    let pos_v: Vec<C64> = pyr.particles.iter().map(|q| q.pos).collect();
+    let gam_v: Vec<C64> = pyr.particles.iter().map(|q| q.gamma).collect();
+    let pos: &[C64] = &pos_v;
+    let gam: &[C64] = &gam_v;
+
+    let mut multipole = CoeffPyramid::zeros(levels, p);
+    let mut local = CoeffPyramid::zeros(levels, p);
+
+    // ---- P2M: leaf multipole expansions, sharded over leaf ranges ------
+    let t = Instant::now();
+    {
+        let centers = pyr.centers(levels);
+        let rs = ranges(nl, nt);
+        scoped_chunks_mut(&mut multipole.levels[levels], stride, &rs, |r, chunk| {
+            let mut acc = Coeffs::zero(p);
+            for (k, b) in (r.start..r.end).enumerate() {
+                let (lo, hi) = (pyr.starts[b], pyr.starts[b + 1]);
+                acc.clear();
+                p2m(opts.kernel, centers[b], &pos[lo..hi], &gam[lo..hi], &mut acc);
+                chunk[k * stride..(k + 1) * stride].copy_from_slice(&acc.0);
+            }
+        });
+        counts.p2m_particles = n;
+    }
+    times.0[Phase::P2M as usize] = t.elapsed().as_secs_f64();
+
+    // ---- M2M: upward pass, sharded over *parent* ranges per level ------
+    //
+    // A thread owns a parent box together with its four (contiguous)
+    // children, so the accumulation order into each parent matches the
+    // serial driver exactly.
+    let t = Instant::now();
+    counts.m2m_per_level = vec![0; levels + 1];
+    for l in (1..=levels).rev() {
+        counts.m2m_per_level[l] = boxes_at_level(l);
+        let (parents, children) = {
+            // split-borrow the two levels
+            let (lo, hi) = multipole.levels.split_at_mut(l);
+            (&mut lo[l - 1], &hi[0])
+        };
+        let children: &[C64] = children;
+        let child_centers = pyr.centers(l);
+        let parent_centers = pyr.centers(l - 1);
+        let rs = ranges(boxes_at_level(l - 1), nt);
+        scoped_chunks_mut(parents, stride, &rs, |r, chunk| {
+            let mut scratch = ShiftScratch::new();
+            for (k, bp) in (r.start..r.end).enumerate() {
+                let zp = parent_centers[bp];
+                let parent = &mut chunk[k * stride..(k + 1) * stride];
+                for bc in 4 * bp..4 * bp + 4 {
+                    let zc = child_centers[bc];
+                    let child = &children[bc * stride..(bc + 1) * stride];
+                    if (zc - zp).norm_sqr() == 0.0 {
+                        for (pa, ch) in parent.iter_mut().zip(child) {
+                            *pa += *ch;
+                        }
+                    } else {
+                        m2m_scaled_with(child, zc, parent, zp, &mut scratch);
+                    }
+                }
+            }
+        });
+    }
+    times.0[Phase::M2M as usize] = t.elapsed().as_secs_f64();
+
+    // ---- M2L (+ P2L): sharded over destination-box ranges per level ----
+    let t = Instant::now();
+    counts.m2l_per_level = vec![0; levels + 1];
+    let m2l_op = (opts.kernel == Kernel::Harmonic).then(|| M2lOperator::new(p));
+    for l in 1..=levels {
+        counts.m2l_per_level[l] = con.weak[l].len();
+        let nb = boxes_at_level(l);
+        let centers = pyr.centers(l);
+        let (mults, locs) = (&multipole.levels[l], &mut local.levels[l]);
+        let mults: &[C64] = mults;
+        // balance by per-destination in-degree (varies on adaptive meshes)
+        let w: Vec<u64> = (0..nb)
+            .map(|b| con.weak[l].sources(b).len() as u64)
+            .collect();
+        let rs = weighted_ranges(&w, nt);
+        scoped_chunks_mut(locs, stride, &rs, |r, chunk| {
+            let mut scratch = ShiftScratch::new();
+            let mut m2l_scratch = M2lScratch::default();
+            for (k, b) in (r.start..r.end).enumerate() {
+                let zo = centers[b];
+                let dst = &mut chunk[k * stride..(k + 1) * stride];
+                for &s in con.weak[l].sources(b) {
+                    let su = s as usize;
+                    let src = &mults[su * stride..(su + 1) * stride];
+                    match &m2l_op {
+                        Some(op) => op.apply(src, centers[su], dst, zo, &mut m2l_scratch),
+                        None => m2l_with(src, centers[su], dst, zo, &mut scratch),
+                    }
+                }
+            }
+        });
+    }
+    // P2L shortcuts (finest level; timed with M2L — they substitute for it)
+    {
+        counts.p2l_pairs = con.p2l.len();
+        let centers = pyr.centers(levels);
+        let rs = ranges(nl, nt);
+        scoped_chunks_mut(&mut local.levels[levels], stride, &rs, |r, chunk| {
+            for (k, b) in (r.start..r.end).enumerate() {
+                if con.p2l.sources(b).is_empty() {
+                    continue;
+                }
+                let dst = &mut chunk[k * stride..(k + 1) * stride];
+                let mut acc = Coeffs(dst.to_vec());
+                for &s in con.p2l.sources(b) {
+                    let su = s as usize;
+                    let (lo, hi) = (pyr.starts[su], pyr.starts[su + 1]);
+                    p2l(opts.kernel, centers[b], &pos[lo..hi], &gam[lo..hi], &mut acc);
+                }
+                dst.copy_from_slice(&acc.0);
+            }
+        });
+    }
+    times.0[Phase::M2L as usize] = t.elapsed().as_secs_f64();
+
+    // ---- L2L: push local expansions down, sharded over child ranges ----
+    let t = Instant::now();
+    counts.l2l_per_level = vec![0; levels + 1];
+    for l in 1..levels {
+        counts.l2l_per_level[l + 1] = boxes_at_level(l + 1);
+        let (parents, children) = {
+            let (lo, hi) = local.levels.split_at_mut(l + 1);
+            (&lo[l], &mut hi[0])
+        };
+        let parents: &[C64] = parents;
+        let parent_centers = pyr.centers(l);
+        let child_centers = pyr.centers(l + 1);
+        let rs = ranges(boxes_at_level(l + 1), nt);
+        scoped_chunks_mut(children, stride, &rs, |r, chunk| {
+            let mut scratch = ShiftScratch::new();
+            for (k, b) in (r.start..r.end).enumerate() {
+                let zp = parent_centers[b >> 2];
+                let zc = child_centers[b];
+                let parent = &parents[(b >> 2) * stride..((b >> 2) + 1) * stride];
+                let child = &mut chunk[k * stride..(k + 1) * stride];
+                l2l_with(parent, zp, child, zc, &mut scratch);
+            }
+        });
+    }
+    times.0[Phase::L2L as usize] = t.elapsed().as_secs_f64();
+
+    // ---- L2P (+ M2P): sharded over leaf ranges; each worker owns the
+    // contiguous particle slice of its boxes --------------------------
+    let t = Instant::now();
+    counts.m2p_pairs = con.m2p.len();
+    let mut phi = vec![ZERO; n];
+    {
+        let centers_v = pyr.centers(levels);
+        let centers: &[C64] = &centers_v;
+        let mlev: &[C64] = &multipole.levels[levels];
+        let llev: &[C64] = &local.levels[levels];
+        let w: Vec<u64> = (0..nl)
+            .map(|b| {
+                let nb = (pyr.starts[b + 1] - pyr.starts[b]) as u64;
+                nb * (1 + con.m2p.sources(b).len() as u64)
+            })
+            .collect();
+        let rs = weighted_ranges(&w, nt);
+        let lens: Vec<usize> = rs
+            .iter()
+            .map(|r| pyr.starts[r.end] - pyr.starts[r.start])
+            .collect();
+        let chunks = split_lengths_mut(&mut phi, &lens);
+        std::thread::scope(|s| {
+            for (r, chunk) in rs.iter().zip(chunks) {
+                let r = r.clone();
+                s.spawn(move || {
+                    let base = pyr.starts[r.start];
+                    for b in r.start..r.end {
+                        let (lo, hi) = (pyr.starts[b], pyr.starts[b + 1]);
+                        let loc = Coeffs(llev[b * stride..(b + 1) * stride].to_vec());
+                        for i in lo..hi {
+                            chunk[i - base] = l2p(centers[b], &loc, pos[i]);
+                        }
+                        for &src in con.m2p.sources(b) {
+                            let su = src as usize;
+                            let msrc = Coeffs(mlev[su * stride..(su + 1) * stride].to_vec());
+                            for i in lo..hi {
+                                chunk[i - base] += m2p(centers[su], &msrc, pos[i]);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+    }
+    times.0[Phase::L2P as usize] = t.elapsed().as_secs_f64();
+
+    // ---- P2P: near field -----------------------------------------------
+    //
+    // Work counts are derived from the list structure up front (identical
+    // for both formulations and to the serial driver — see
+    // `work_counts_consistent`): per destination box the streamed source
+    // total, and in closed form Σ_b n_b·src_b − N ordered pairs.
+    let t = Instant::now();
+    counts.p2p_src_per_box = (0..nl)
+        .map(|b| {
+            con.near
+                .sources(b)
+                .iter()
+                .map(|&s| (pyr.starts[s as usize + 1] - pyr.starts[s as usize]) as u32)
+                .sum()
+        })
+        .collect();
+    counts.p2p_pairs = counts
+        .leaf_sizes
+        .iter()
+        .zip(&counts.p2p_src_per_box)
+        .map(|(&nb, &src)| nb as usize * src as usize)
+        .sum::<usize>()
+        - n;
+    let xs_v: Vec<f64> = pos.iter().map(|z| z.re).collect();
+    let ys_v: Vec<f64> = pos.iter().map(|z| z.im).collect();
+    let gre_v: Vec<f64> = gam.iter().map(|z| z.re).collect();
+    let gim_v: Vec<f64> = gam.iter().map(|z| z.im).collect();
+    let (xs, ys, gre, gim): (&[f64], &[f64], &[f64], &[f64]) = (&xs_v, &ys_v, &gre_v, &gim_v);
+    if opts.symmetric_p2p && opts.kernel == Kernel::Harmonic {
+        // CPU formulation (§4.2): each unordered box pair visited once by
+        // the thread owning the lower-numbered box; the scattered Φ_j
+        // updates go to per-thread accumulators merged in thread order.
+        // The owner of box b does all pairs with sources ≥ b — a
+        // triangular load, so ranges are balanced by pair weight.
+        let w: Vec<u64> = (0..nl)
+            .map(|b| {
+                let nb = (pyr.starts[b + 1] - pyr.starts[b]) as u64;
+                let srcs: u64 = con
+                    .near
+                    .sources(b)
+                    .iter()
+                    .filter(|&&s| s as usize >= b)
+                    .map(|&s| (pyr.starts[s as usize + 1] - pyr.starts[s as usize]) as u64)
+                    .sum();
+                nb * srcs
+            })
+            .collect();
+        let rs = weighted_ranges(&w, nt);
+        let mut partials: Vec<(Vec<f64>, Vec<f64>)> = Vec::with_capacity(rs.len());
+        std::thread::scope(|s| {
+            let handles: Vec<_> = rs
+                .iter()
+                .map(|r| {
+                    let r = r.clone();
+                    s.spawn(move || {
+                        let mut phr = vec![0.0f64; n];
+                        let mut phm = vec![0.0f64; n];
+                        for b in r.start..r.end {
+                            let (blo, bhi) = (pyr.starts[b], pyr.starts[b + 1]);
+                            for &src in con.near.sources(b) {
+                                let su = src as usize;
+                                if su < b {
+                                    continue; // owned by the other side
+                                }
+                                let (slo, shi) = (pyr.starts[su], pyr.starts[su + 1]);
+                                for i in blo..bhi {
+                                    let (xi, yi) = (xs[i], ys[i]);
+                                    let (gri, gii) = (gre[i], gim[i]);
+                                    let j0 = if su == b { i + 1 } else { slo };
+                                    let (mut ar, mut ai) = (0.0f64, 0.0f64);
+                                    for j in j0..shi {
+                                        // r = 1/(z_j − z_i); Φ_i += Γ_j r;
+                                        // Φ_j −= Γ_i r
+                                        let dx = xs[j] - xi;
+                                        let dy = ys[j] - yi;
+                                        let inv = 1.0 / (dx * dx + dy * dy);
+                                        let rr = dx * inv;
+                                        let ri = -dy * inv;
+                                        ar += gre[j] * rr - gim[j] * ri;
+                                        ai += gre[j] * ri + gim[j] * rr;
+                                        phr[j] -= gri * rr - gii * ri;
+                                        phm[j] -= gri * ri + gii * rr;
+                                    }
+                                    phr[i] += ar;
+                                    phm[i] += ai;
+                                }
+                            }
+                        }
+                        (phr, phm)
+                    })
+                })
+                .collect();
+            for h in handles {
+                partials.push(h.join().expect("P2P worker panicked"));
+            }
+        });
+        // Merge sharded over particle ranges; every worker folds the
+        // per-thread accumulators for its slice in thread order, so the
+        // result is independent of merge parallelism. (The accumulators
+        // cost O(threads × N) transient memory — the price of the
+        // lock-free symmetric formulation; the directed path below has no
+        // reduction at all and is the better choice when memory-bound.)
+        let partials: &[(Vec<f64>, Vec<f64>)] = &partials;
+        let merge_rs = ranges(n, nt);
+        let merge_lens: Vec<usize> = merge_rs.iter().map(|r| r.end - r.start).collect();
+        let chunks = split_lengths_mut(&mut phi, &merge_lens);
+        std::thread::scope(|s| {
+            for (r, chunk) in merge_rs.iter().zip(chunks) {
+                let r = r.clone();
+                s.spawn(move || {
+                    for (phr, phm) in partials {
+                        for (k, i) in (r.start..r.end).enumerate() {
+                            chunk[k] += C64::new(phr[i], phm[i]);
+                        }
+                    }
+                });
+            }
+        });
+    } else {
+        // directed formulation (the GPU layout, §4.3): pure writer-side
+        // sharding over destination boxes, no reduction at all.
+        let w: Vec<u64> = (0..nl)
+            .map(|b| counts.leaf_sizes[b] as u64 * counts.p2p_src_per_box[b] as u64)
+            .collect();
+        let rs = weighted_ranges(&w, nt);
+        let lens: Vec<usize> = rs
+            .iter()
+            .map(|r| pyr.starts[r.end] - pyr.starts[r.start])
+            .collect();
+        let chunks = split_lengths_mut(&mut phi, &lens);
+        std::thread::scope(|s| {
+            for (r, chunk) in rs.iter().zip(chunks) {
+                let r = r.clone();
+                s.spawn(move || {
+                    let base = pyr.starts[r.start];
+                    for b in r.start..r.end {
+                        let (blo, bhi) = (pyr.starts[b], pyr.starts[b + 1]);
+                        for &src in con.near.sources(b) {
+                            let su = src as usize;
+                            let (slo, shi) = (pyr.starts[su], pyr.starts[su + 1]);
+                            for i in blo..bhi {
+                                let zi = pos[i];
+                                let mut acc = chunk[i - base];
+                                if su == b {
+                                    for j in slo..shi {
+                                        if j != i {
+                                            acc += opts.kernel.eval(zi, pos[j], gam[j]);
+                                        }
+                                    }
+                                } else {
+                                    for j in slo..shi {
+                                        acc += opts.kernel.eval(zi, pos[j], gam[j]);
+                                    }
+                                }
+                                chunk[i - base] = acc;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+    }
+    times.0[Phase::P2P as usize] = t.elapsed().as_secs_f64();
+
+    (phi, times, counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FmmConfig;
+    use crate::util::rng::Pcg64;
+    use crate::workload;
+
+    #[test]
+    fn parallel_matches_serial_on_a_small_tree() {
+        let mut r = Pcg64::seed_from_u64(17);
+        let (pts, gs) = workload::uniform_square(1500, &mut r);
+        let pyr = Pyramid::build(&pts, &gs, 2);
+        let con = Connectivity::build(&pyr, 0.5);
+        let opts = FmmOptions {
+            cfg: FmmConfig {
+                p: 12,
+                levels_override: Some(2),
+                ..FmmConfig::default()
+            },
+            ..Default::default()
+        };
+        let (serial, _, cs) = super::super::evaluate_on_tree_serial(&pyr, &con, &opts);
+        let (par, _, cp) = evaluate_on_tree_parallel(&pyr, &con, &opts, 3);
+        for (a, b) in serial.iter().zip(&par) {
+            assert!((*a - *b).abs() <= 1e-12 * a.abs().max(1.0));
+        }
+        assert_eq!(cs.p2p_pairs, cp.p2p_pairs);
+        assert_eq!(cs.p2p_src_per_box, cp.p2p_src_per_box);
+        assert_eq!(cs.m2l_per_level, cp.m2l_per_level);
+    }
+
+    #[test]
+    fn one_thread_degenerates_gracefully() {
+        let mut r = Pcg64::seed_from_u64(23);
+        let (pts, gs) = workload::uniform_square(600, &mut r);
+        let pyr = Pyramid::build(&pts, &gs, 2);
+        let con = Connectivity::build(&pyr, 0.5);
+        let opts = FmmOptions {
+            cfg: FmmConfig {
+                p: 8,
+                levels_override: Some(2),
+                ..FmmConfig::default()
+            },
+            symmetric_p2p: false,
+            ..Default::default()
+        };
+        let (serial, _, _) = super::super::evaluate_on_tree_serial(&pyr, &con, &opts);
+        // directed P2P + per-box phases are bitwise-deterministic shards
+        let (par, _, _) = evaluate_on_tree_parallel(&pyr, &con, &opts, 1);
+        assert_eq!(serial.len(), par.len());
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.re, b.re);
+            assert_eq!(a.im, b.im);
+        }
+    }
+}

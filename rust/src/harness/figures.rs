@@ -20,6 +20,10 @@ pub struct HarnessOpts {
     pub seed: u64,
     /// Simulate the GTX 480 instead of the Tesla C2075.
     pub gtx480: bool,
+    /// CPU engine for the measured side: `Some(1)` (default) keeps the
+    /// paper-faithful serial baseline; `Some(t)`/`None` regenerate every
+    /// figure with the multithreaded engine (`--threads` on the CLI).
+    pub threads: Option<usize>,
 }
 
 impl Default for HarnessOpts {
@@ -28,6 +32,7 @@ impl Default for HarnessOpts {
             full: false,
             seed: 20120424, // the paper's submission year/month, why not
             gtx480: false,
+            threads: Some(1),
         }
     }
 }
@@ -70,7 +75,7 @@ pub fn fig5_1(o: &HarnessOpts) -> SeriesTable {
             levels_override: Some(levels),
             ..FmmConfig::default()
         };
-        let pair = run_pair(&pts, &gs, &cfg, &sim);
+        let pair = run_pair(&pts, &gs, &cfg, &sim, o.threads);
         t.push(
             nd as f64,
             vec![
@@ -92,7 +97,7 @@ pub fn fig5_2(o: &HarnessOpts) -> SeriesTable {
     let mut rows = Vec::new();
     for nd in (10..=100).step_by(5) {
         let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
-        let pair = run_pair(&pts, &gs, &cfg_with(17, nd), &sim);
+        let pair = run_pair(&pts, &gs, &cfg_with(17, nd), &sim, o.threads);
         rows.push((nd as f64, pair.cpu_total(), pair.gpu_total()));
     }
     let min_cpu = rows.iter().map(|r| r.1).fold(f64::INFINITY, f64::min);
@@ -120,7 +125,7 @@ pub fn table5_1(o: &HarnessOpts) -> (String, SeriesTable) {
         levels_override: Some(levels),
         ..FmmConfig::default()
     };
-    let pair = run_pair(&pts, &gs, &cfg, &sim);
+    let pair = run_pair(&pts, &gs, &cfg, &sim, o.threads);
     let mut entries: Vec<(&str, f64)> = PHASE_NAMES
         .iter()
         .enumerate()
@@ -153,7 +158,7 @@ pub fn fig5_3(o: &HarnessOpts) -> SeriesTable {
     );
     let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
     for p in (4..=60).step_by(2) {
-        let pair = run_pair(&pts, &gs, &cfg_with(p, 45), &sim);
+        let pair = run_pair(&pts, &gs, &cfg_with(p, 45), &sim, o.threads);
         t.push(
             p as f64,
             vec![
@@ -184,7 +189,7 @@ pub fn fig5_4(o: &HarnessOpts) -> (SeriesTable, (f64, f64)) {
     for p in (8..=48).step_by(8) {
         let (mut best_gpu, mut best_cpu) = ((f64::INFINITY, 0), (f64::INFINITY, 0));
         for nd in (15..=120).step_by(5) {
-            let pair = run_pair(&pts, &gs, &cfg_with(p, nd), &sim);
+            let pair = run_pair(&pts, &gs, &cfg_with(p, nd), &sim, o.threads);
             if pair.gpu_total() < best_gpu.0 {
                 best_gpu = (pair.gpu_total(), nd);
             }
@@ -219,7 +224,7 @@ pub fn fig5_5(o: &HarnessOpts) -> (SeriesTable, f64) {
     let mut prev: Option<(f64, f64, f64)> = None; // (n, fmm_gpu, dir_gpu)
     for n in n_sweep(o.full) {
         let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
-        let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim);
+        let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim, o.threads);
         let (dir_cpu, _extr) = direct_cpu_time(&pts, &gs, cap);
         let dir_gpu = sim.direct_time(n);
         let fmm_gpu = pair.gpu_total();
@@ -251,7 +256,7 @@ pub fn fig5_6(o: &HarnessOpts) -> SeriesTable {
     );
     for n in n_sweep(o.full) {
         let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
-        let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim);
+        let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim, o.threads);
         let (dir_cpu, _) = direct_cpu_time(&pts, &gs, cap);
         t.push(
             n as f64,
@@ -274,7 +279,7 @@ pub fn fig5_7(o: &HarnessOpts) -> SeriesTable {
     );
     for n in n_sweep(o.full) {
         let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
-        let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim);
+        let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim, o.threads);
         t.push(
             n as f64,
             (0..8).map(|i| pair.cpu.0[i] / pair.gpu.0[i].max(1e-12)).collect(),
@@ -301,7 +306,7 @@ pub fn fig5_8(o: &HarnessOpts) -> SeriesTable {
             Distribution::Layer { sigma: 0.1 },
         ] {
             let (pts, gs) = workload_for(dist, n, o.seed);
-            let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim);
+            let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim, o.threads);
             ys.push(pair.cpu_total());
             ys.push(pair.gpu_total());
         }
@@ -318,7 +323,7 @@ pub fn fig5_9(o: &HarnessOpts) -> SeriesTable {
     let sim = o.sim();
     let n = if o.full { 1_000_000 } else { 80_000 };
     let (pts_u, gs_u) = workload_for(Distribution::Uniform, n, o.seed);
-    let base = run_pair(&pts_u, &gs_u, &cfg_with(17, 45), &sim);
+    let base = run_pair(&pts_u, &gs_u, &cfg_with(17, 45), &sim, o.threads);
     let (cpu_u, gpu_u) = (base.cpu_total(), base.gpu_total());
     let mut t = SeriesTable::new(
         "Fig 5.9: non-uniform time / uniform time vs sigma",
@@ -332,7 +337,7 @@ pub fn fig5_9(o: &HarnessOpts) -> SeriesTable {
             Distribution::Layer { sigma },
         ] {
             let (pts, gs) = workload_for(mk, n, o.seed);
-            let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim);
+            let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim, o.threads);
             ys.push(pair.cpu_total() / cpu_u);
             ys.push(pair.gpu_total() / gpu_u);
         }
@@ -363,6 +368,7 @@ pub fn validate(o: &HarnessOpts) -> SeriesTable {
             cfg,
             kernel: Kernel::Harmonic,
             symmetric_p2p: true,
+            threads: o.threads,
         };
         let out = crate::fmm::evaluate(&pts, &gs, &opts);
         let approx: Vec<f64> = out.potentials.iter().map(|c| c.abs()).collect();
@@ -400,6 +406,7 @@ pub fn ablate_theta(o: &HarnessOpts) -> SeriesTable {
             cfg,
             kernel: Kernel::Harmonic,
             symmetric_p2p: true,
+            threads: o.threads,
         };
         let out = crate::fmm::evaluate(&pts, &gs, &opts);
         let tol = exact
@@ -502,7 +509,7 @@ pub fn calibrate(o: &HarnessOpts) -> String {
         levels_override: Some(levels),
         ..FmmConfig::default()
     };
-    let pair = run_pair(&pts, &gs, &cfg, &sim);
+    let pair = run_pair(&pts, &gs, &cfg, &sim, o.threads);
     let _ = writeln!(
         out,
         "FMM total speedup @N={nf}: {:.1} (paper ≈ 11)",
@@ -550,9 +557,9 @@ mod tests {
         let sim = o.sim();
         let n = 20_000;
         let (pts_u, gs_u) = workload_for(Distribution::Uniform, n, o.seed);
-        let base = run_pair(&pts_u, &gs_u, &cfg_with(17, 45), &sim);
+        let base = run_pair(&pts_u, &gs_u, &cfg_with(17, 45), &sim, o.threads);
         let (pts, gs) = workload_for(Distribution::Normal { sigma: 0.05 }, n, o.seed);
-        let hard = run_pair(&pts, &gs, &cfg_with(17, 45), &sim);
+        let hard = run_pair(&pts, &gs, &cfg_with(17, 45), &sim, o.threads);
         let cpu_ratio = hard.cpu_total() / base.cpu_total();
         let gpu_ratio = hard.gpu_total() / base.gpu_total();
         assert!(

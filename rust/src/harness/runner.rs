@@ -48,7 +48,18 @@ impl RunPair {
 }
 
 /// Measure one configuration: CPU wall-clock per phase + GPU prediction.
-pub fn run_pair(points: &[C64], gammas: &[C64], cfg: &FmmConfig, sim: &GpuSim) -> RunPair {
+///
+/// `threads` selects the CPU engine: `Some(1)` (the harness default) is the
+/// paper's serial reference driver, `Some(t)`/`None` run the multithreaded
+/// engine ([`crate::fmm::parallel`]) with `t`/all cores — the work counts
+/// fed to the GPU model are identical either way.
+pub fn run_pair(
+    points: &[C64],
+    gammas: &[C64],
+    cfg: &FmmConfig,
+    sim: &GpuSim,
+    threads: Option<usize>,
+) -> RunPair {
     let levels = cfg.levels_for(points.len());
 
     // CPU topological phase (measured with the CPU engine)
@@ -59,11 +70,12 @@ pub fn run_pair(points: &[C64], gammas: &[C64], cfg: &FmmConfig, sim: &GpuSim) -
     let con = Connectivity::build(&pyr, cfg.theta);
     let t_connect_cpu = t.elapsed().as_secs_f64();
 
-    // CPU computational phase (paper's serial code: symmetric P2P)
+    // CPU computational phase (symmetric P2P; engine per `threads`)
     let opts = FmmOptions {
         cfg: *cfg,
         kernel: Kernel::Harmonic,
         symmetric_p2p: true,
+        threads,
     };
     let (phi_leaf, mut cpu, mut counts) = fmm::evaluate_on_tree(&pyr, &con, &opts);
     cpu.0[Phase::Sort as usize] = t_sort_cpu;
@@ -130,13 +142,34 @@ mod tests {
             levels_override: Some(3),
             ..FmmConfig::default()
         };
-        let pair = run_pair(&pts, &gs, &cfg, &GpuSim::c2075());
+        let pair = run_pair(&pts, &gs, &cfg, &GpuSim::c2075(), Some(1));
         assert_eq!(pair.n, 3000);
         assert_eq!(pair.levels, 3);
         assert!(pair.cpu_total() > 0.0);
         assert!(pair.gpu_total() > 0.0);
         assert!(pair.counts.sort.scattered > 0, "gpu sort stats attached");
         assert_eq!(pair.potentials.len(), 3000);
+    }
+
+    #[test]
+    fn run_pair_parallel_engine_matches_serial_counts() {
+        let (pts, gs) = workload_for(Distribution::Uniform, 3000, 1);
+        let cfg = FmmConfig {
+            p: 10,
+            levels_override: Some(3),
+            ..FmmConfig::default()
+        };
+        let sim = GpuSim::c2075();
+        let serial = run_pair(&pts, &gs, &cfg, &sim, Some(1));
+        let par = run_pair(&pts, &gs, &cfg, &sim, Some(4));
+        // identical work description ⇒ identical GPU prediction
+        assert_eq!(serial.counts.p2p_pairs, par.counts.p2p_pairs);
+        assert_eq!(serial.counts.p2p_src_per_box, par.counts.p2p_src_per_box);
+        assert_eq!(serial.counts.m2l_per_level, par.counts.m2l_per_level);
+        assert!((serial.gpu_total() - par.gpu_total()).abs() < 1e-12);
+        for (a, b) in serial.potentials.iter().zip(&par.potentials) {
+            assert!((*a - *b).abs() <= 1e-12 * a.abs().max(1.0));
+        }
     }
 
     #[test]

@@ -11,13 +11,21 @@
 //!   ([`direct`]);
 //! * the **data-parallel path** — packing of the pyramid into fixed-shape
 //!   tensors ([`packing`]) executed through AOT-compiled XLA artifacts via
-//!   PJRT ([`runtime`]);
+//!   PJRT (`runtime`, behind the non-default `pjrt` cargo feature: the
+//!   default build carries no native dependencies);
+//! * the **multithreaded CPU engine** — every computational phase sharded
+//!   over `std::thread::scope` workers with writer-side (no-lock)
+//!   destination ownership ([`fmm::parallel`]);
 //! * a **GPU execution-cost simulator** ([`gpusim`]) standing in for the
 //!   paper's Tesla C2075 / GTX 480 testbed;
 //! * the **evaluation harness** regenerating every table and figure of the
 //!   paper ([`harness`], [`bench`], [`workload`]).
 //!
 //! See `DESIGN.md` for the full inventory and the per-experiment index.
+
+// Index-driven `for b in 0..nb` loops mirror the paper's box arithmetic and
+// are used pervasively throughout the crate.
+#![allow(clippy::needless_range_loop)]
 
 pub mod bench;
 pub mod complex;
@@ -30,6 +38,7 @@ pub mod geometry;
 pub mod gpusim;
 pub mod harness;
 pub mod packing;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod tree;
 pub mod util;

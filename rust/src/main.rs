@@ -1,18 +1,17 @@
 //! `fmm2d` — CLI of the adaptive-FMM reproduction.
 //!
 //! Subcommands regenerate every table/figure of the paper (§5), validate
-//! accuracy, run one-off evaluations through either engine (serial CPU or
-//! the AOT-compiled XLA path), and report the GPU-model calibration.
+//! accuracy, run one-off evaluations through any engine (serial CPU,
+//! multithreaded CPU, or the AOT-compiled XLA path behind the `pjrt`
+//! feature), and report the GPU-model calibration.
 
-use anyhow::{bail, Result};
+use fmm2d::bail;
 use fmm2d::config::FmmConfig;
-use fmm2d::connectivity::Connectivity;
 use fmm2d::expansion::Kernel;
 use fmm2d::fmm::{self, FmmOptions, PHASE_NAMES};
 use fmm2d::harness::{self, HarnessOpts};
-use fmm2d::runtime::Runtime;
-use fmm2d::tree::Pyramid;
 use fmm2d::util::cli::Args;
+use fmm2d::util::error::Result;
 use fmm2d::util::stats::max_rel_error;
 use fmm2d::workload::Distribution;
 
@@ -21,7 +20,9 @@ fmm2d — adaptive fast multipole methods (Goude & Engblom 2012 reproduction)
 
 USAGE: fmm2d <command> [options]
 
-Experiment regeneration (DESIGN.md §3; all accept --full --seed S --gtx480):
+Experiment regeneration (DESIGN.md §3; all accept --full --seed S --gtx480
+--threads T — T=1 (default) is the paper's serial CPU baseline, T>1 or
+--threads 0 (all cores) regenerates with the multithreaded engine):
   table5-1      GPU time distribution
   fig5-1        per-phase speedup vs N_d
   fig5-2        normalized total time vs N_d (optima ~35 CPU / ~45 GPU)
@@ -40,8 +41,13 @@ Validation & tools:
   ablate-shifts M2L kernel variants: recurrence vs unscaled vs matrix
   calibrate     cost-model calibration vs the paper's headline ratios
   run           one evaluation: --n --p --nd --dist uniform|normal|layer
-                [--sigma S] [--engine serial|xla] [--check] [--log-kernel]
-  artifacts     list available AOT artifacts
+                [--sigma S] [--engine serial|parallel|xla] [--threads T]
+                [--check] [--log-kernel]
+  artifacts     list available AOT artifacts (needs --features pjrt)
+
+The default engine is `parallel` with all available cores; --threads T caps
+the worker count (T=1 falls back to the serial reference driver). The xla
+engine and `artifacts` need a binary built with `--features pjrt`.
 ";
 
 fn main() {
@@ -60,11 +66,24 @@ fn main() {
     }
 }
 
+/// `--threads T` → engine thread count: `T = 0` means "all cores" (`None`),
+/// absent means `default`.
+fn threads_arg(args: &Args, default: Option<usize>) -> Result<Option<usize>> {
+    Ok(match args.get("threads") {
+        None => default,
+        Some(s) => match s.parse::<usize>().map_err(|e| fmm2d::anyhow!("--threads {s}: {e}"))? {
+            0 => None,
+            t => Some(t),
+        },
+    })
+}
+
 fn harness_opts(args: &Args) -> Result<HarnessOpts> {
     Ok(HarnessOpts {
         full: args.flag("full"),
         seed: args.get_or("seed", HarnessOpts::default().seed)?,
         gtx480: args.flag("gtx480"),
+        threads: threads_arg(args, HarnessOpts::default().threads)?,
     })
 }
 
@@ -131,11 +150,11 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
     match cmd {
         "table5-1" | "fig5-1" | "fig5-2" | "fig5-3" | "fig5-4" | "fig5-5" | "fig5-6"
         | "fig5-7" | "fig5-8" | "fig5-9" => {
-            args.check_known(&["full", "seed", "gtx480"])?;
+            args.check_known(&["full", "seed", "gtx480", "threads"])?;
             run_figure(cmd, &harness_opts(&args)?);
         }
         "all" => {
-            args.check_known(&["full", "seed", "gtx480"])?;
+            args.check_known(&["full", "seed", "gtx480", "threads"])?;
             let o = harness_opts(&args)?;
             for name in [
                 "table5-1", "fig5-1", "fig5-2", "fig5-3", "fig5-4", "fig5-5", "fig5-6",
@@ -146,44 +165,57 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             }
         }
         "validate" => {
-            args.check_known(&["full", "seed", "gtx480"])?;
+            args.check_known(&["full", "seed", "gtx480", "threads"])?;
             let t = harness::validate(&harness_opts(&args)?);
             println!("{}", t.render());
             t.save("validate");
         }
         "ablate-theta" => {
-            args.check_known(&["full", "seed", "gtx480"])?;
+            args.check_known(&["full", "seed", "gtx480", "threads"])?;
             let t = harness::ablate_theta(&harness_opts(&args)?);
             println!("{}", t.render());
             t.save("ablate_theta");
         }
         "ablate-shifts" => {
-            args.check_known(&["full", "seed", "gtx480"])?;
+            args.check_known(&["full", "seed", "gtx480", "threads"])?;
             let t = harness::ablate_shift_kernels(&harness_opts(&args)?);
             println!("{}", t.render());
             t.save("ablate_shifts");
         }
         "calibrate" => {
-            args.check_known(&["full", "seed", "gtx480"])?;
+            args.check_known(&["full", "seed", "gtx480", "threads"])?;
             println!("{}", harness::calibrate(&harness_opts(&args)?));
         }
         "run" => cmd_run(&args)?,
-        "artifacts" => {
-            let rt = Runtime::new(None)?;
-            println!("artifact dir: {}", rt.artifact_dir().display());
-            for name in rt.available() {
-                println!("  {name}");
-            }
-        }
+        "artifacts" => cmd_artifacts()?,
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => bail!("unknown command '{other}'; see `fmm2d help`"),
     }
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
+fn cmd_artifacts() -> Result<()> {
+    let rt = fmm2d::runtime::Runtime::new(None)?;
+    println!("artifact dir: {}", rt.artifact_dir().display());
+    for name in rt.available() {
+        println!("  {name}");
+    }
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_artifacts() -> Result<()> {
+    bail!(
+        "the `artifacts` command needs the PJRT runtime, which is disabled \
+         in this build; rebuild with `cargo build --release --features pjrt`"
+    );
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     args.check_known(&[
         "n", "p", "nd", "dist", "sigma", "engine", "check", "seed", "log-kernel", "levels",
+        "threads",
     ])?;
     let n: usize = args.get_or("n", 10_000)?;
     let p: usize = args.get_or("p", 17)?;
@@ -201,7 +233,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     } else {
         Kernel::Harmonic
     };
-    let engine = args.get("engine").unwrap_or("serial").to_string();
+    let engine = args.get("engine").unwrap_or("parallel").to_string();
+    let threads = match engine.as_str() {
+        // --engine serial forces the reference driver; otherwise --threads T
+        // caps the workers (default: all cores)
+        "serial" => Some(1),
+        _ => threads_arg(args, None)?,
+    };
 
     let (pts, mut gs) = harness::workload_for(dist, n, seed);
     if kernel == Kernel::Log {
@@ -218,18 +256,21 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.levels_override = Some(l.parse()?);
     }
     let levels = cfg.levels_for(n);
+    let opts = FmmOptions {
+        cfg,
+        kernel,
+        symmetric_p2p: true,
+        threads,
+    };
     println!(
-        "n={n} p={p} N_d={nd} levels={levels} dist={} kernel={kernel:?} engine={engine}",
-        dist.name()
+        "n={n} p={p} N_d={nd} levels={levels} dist={} kernel={kernel:?} engine={engine} \
+         threads={}",
+        dist.name(),
+        opts.effective_threads(),
     );
 
     let potentials = match engine.as_str() {
-        "serial" => {
-            let opts = FmmOptions {
-                cfg,
-                kernel,
-                symmetric_p2p: true,
-            };
+        "serial" | "parallel" => {
             let out = fmm::evaluate(&pts, &gs, &opts);
             println!("{:<8} {:>12} ", "phase", "seconds");
             for (i, name) in PHASE_NAMES.iter().enumerate() {
@@ -238,29 +279,8 @@ fn cmd_run(args: &Args) -> Result<()> {
             println!("{:<8} {:>12.6}", "total", out.times.total());
             out.potentials
         }
-        "xla" => {
-            if kernel != Kernel::Harmonic {
-                bail!("the XLA artifacts are compiled for the harmonic kernel");
-            }
-            let mut rt = Runtime::new(None)?;
-            let pyr = Pyramid::build(&pts, &gs, levels);
-            let con = Connectivity::build(&pyr, cfg.theta);
-            let exe = rt.fmm_artifact_for_tree(&pyr, &con)?;
-            if exe.meta.p != p {
-                eprintln!(
-                    "note: artifact {} uses p={} (compiled-in); --p {p} ignored",
-                    exe.meta.name, exe.meta.p
-                );
-            }
-            let (pot, stats) = exe.run_fmm(&pyr, &con)?;
-            println!("artifact: {} (platform {})", exe.meta.name, rt.platform());
-            println!("upload   {:>12.6}", stats.upload_s);
-            println!("execute  {:>12.6}", stats.execute_s);
-            println!("download {:>12.6}", stats.download_s);
-            println!("total    {:>12.6}", stats.total());
-            pot
-        }
-        other => bail!("unknown --engine {other} (serial|xla)"),
+        "xla" => run_xla_engine(&pts, &gs, &cfg, levels, p, kernel)?,
+        other => bail!("unknown --engine {other} (serial|parallel|xla)"),
     };
 
     if args.flag("check") {
@@ -283,4 +303,54 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!("max relative error vs direct (Eq. 5.3): {err:.3e}");
     }
     Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn run_xla_engine(
+    pts: &[fmm2d::C64],
+    gs: &[fmm2d::C64],
+    cfg: &FmmConfig,
+    levels: usize,
+    p: usize,
+    kernel: Kernel,
+) -> Result<Vec<fmm2d::C64>> {
+    use fmm2d::connectivity::Connectivity;
+    use fmm2d::runtime::Runtime;
+    use fmm2d::tree::Pyramid;
+
+    if kernel != Kernel::Harmonic {
+        bail!("the XLA artifacts are compiled for the harmonic kernel");
+    }
+    let mut rt = Runtime::new(None)?;
+    let pyr = Pyramid::build(pts, gs, levels);
+    let con = Connectivity::build(&pyr, cfg.theta);
+    let exe = rt.fmm_artifact_for_tree(&pyr, &con)?;
+    if exe.meta.p != p {
+        eprintln!(
+            "note: artifact {} uses p={} (compiled-in); --p {p} ignored",
+            exe.meta.name, exe.meta.p
+        );
+    }
+    let (pot, stats) = exe.run_fmm(&pyr, &con)?;
+    println!("artifact: {} (platform {})", exe.meta.name, rt.platform());
+    println!("upload   {:>12.6}", stats.upload_s);
+    println!("execute  {:>12.6}", stats.execute_s);
+    println!("download {:>12.6}", stats.download_s);
+    println!("total    {:>12.6}", stats.total());
+    Ok(pot)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_xla_engine(
+    _pts: &[fmm2d::C64],
+    _gs: &[fmm2d::C64],
+    _cfg: &FmmConfig,
+    _levels: usize,
+    _p: usize,
+    _kernel: Kernel,
+) -> Result<Vec<fmm2d::C64>> {
+    bail!(
+        "--engine xla needs the PJRT runtime, which is disabled in this \
+         build; rebuild with `cargo build --release --features pjrt`"
+    );
 }

@@ -12,7 +12,8 @@ use crate::complex::C64;
 use crate::connectivity::Connectivity;
 use crate::tree::{boxes_at_level, Pyramid};
 use crate::util::json::Json;
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 /// Element type of one artifact input.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -10,7 +10,8 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 use crate::complex::C64;
 use crate::connectivity::Connectivity;
@@ -135,7 +136,7 @@ impl Runtime {
             }
         }
         fallback.ok_or_else(|| {
-            anyhow::anyhow!("no FMM artifact for {levels} levels; emit one via aot.py")
+            crate::anyhow!("no FMM artifact for {levels} levels; emit one via aot.py")
         })
     }
 
@@ -176,7 +177,7 @@ impl Runtime {
             }
         }
         best.map(|(_, e)| e).ok_or_else(|| {
-            anyhow::anyhow!(
+            crate::anyhow!(
                 "no FMM artifact fits this tree (levels {}, nmax {}, knear {}, ksp {}); \
                  emit a wider bucket via aot.py",
                 need.levels,

@@ -18,7 +18,7 @@ impl Args {
     /// Parse `argv` (without the program and subcommand names).
     /// `--key value` and `--key=value` are both accepted; a `--key` followed
     /// by another option or nothing is a boolean flag.
-    pub fn parse(argv: &[String]) -> anyhow::Result<Self> {
+    pub fn parse(argv: &[String]) -> crate::util::error::Result<Self> {
         let mut a = Args::default();
         let mut i = 0;
         while i < argv.len() {
@@ -53,7 +53,7 @@ impl Args {
     }
 
     /// Typed option with default.
-    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T>
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> crate::util::error::Result<T>
     where
         T::Err: std::fmt::Display,
     {
@@ -61,27 +61,27 @@ impl Args {
             None => Ok(default),
             Some(s) => s
                 .parse::<T>()
-                .map_err(|e| anyhow::anyhow!("--{name} {s}: {e}")),
+                .map_err(|e| crate::anyhow!("--{name} {s}: {e}")),
         }
     }
 
     /// Required typed option.
-    pub fn req<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<T>
+    pub fn req<T: std::str::FromStr>(&self, name: &str) -> crate::util::error::Result<T>
     where
         T::Err: std::fmt::Display,
     {
         let s = self
             .get(name)
-            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))?;
+            .ok_or_else(|| crate::anyhow!("missing required option --{name}"))?;
         s.parse::<T>()
-            .map_err(|e| anyhow::anyhow!("--{name} {s}: {e}"))
+            .map_err(|e| crate::anyhow!("--{name} {s}: {e}"))
     }
 
     /// Error out if any provided `--option` is not in `known` (flags included).
-    pub fn check_known(&self, known: &[&str]) -> anyhow::Result<()> {
+    pub fn check_known(&self, known: &[&str]) -> crate::util::error::Result<()> {
         for k in self.opts.keys().chain(self.flags.iter()) {
             if !known.contains(&k.as_str()) {
-                anyhow::bail!("unknown option --{k}; known: {}", known.join(", "));
+                crate::bail!("unknown option --{k}; known: {}", known.join(", "));
             }
         }
         Ok(())

@@ -1,0 +1,179 @@
+//! Minimal error-handling substrate (the build environment is offline, so
+//! `anyhow` is replaced by a local equivalent with the same ergonomics).
+//!
+//! Provides [`Error`] — a chain of human-readable messages, outermost
+//! context first — the [`Result`] alias, the [`Context`] extension trait for
+//! `Result`/`Option`, and the [`anyhow!`](crate::anyhow) /
+//! [`bail!`](crate::bail) / [`ensure!`](crate::ensure) macros exported at
+//! the crate root.
+//!
+//! `Display` prints the outermost message; the alternate form (`{:#}`)
+//! prints the whole chain separated by `": "`, mirroring anyhow's
+//! formatting that `main.rs` relies on for error reports.
+
+use std::fmt;
+
+/// An error: a chain of messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Error from a single message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error {
+            chain: vec![m.to_string()],
+        }
+    }
+
+    /// Prepend a context message (the `.context()` layering).
+    pub fn push_context(mut self, c: impl fmt::Display) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The messages, outermost first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// Like anyhow, `Error` deliberately does NOT implement `std::error::Error`,
+// which keeps this blanket conversion (and thereby `?` on any std error)
+// coherent.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context()` / `.with_context()` for results and options.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().push_context(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_fail() -> Result<usize> {
+        let n = "not-a-number".parse::<usize>().context("parsing the knob")?;
+        Ok(n)
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e = parse_fail().unwrap_err();
+        assert_eq!(e.chain().len(), 2);
+        assert_eq!(format!("{e}"), "parsing the knob");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("parsing the knob: "), "got: {full}");
+        assert!(full.contains("invalid digit"), "got: {full}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+        assert_eq!(Some(3u32).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too large: {x}");
+            if x == 7 {
+                crate::bail!("seven is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(12).unwrap_err().to_string(), "x too large: 12");
+        assert_eq!(f(7).unwrap_err().to_string(), "seven is right out");
+        let e = crate::anyhow!("plain {}", 1);
+        assert_eq!(e.to_string(), "plain 1");
+    }
+}

@@ -69,17 +69,17 @@ impl Json {
     }
 
     /// Fetch `key` as usize or fail loudly with context.
-    pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
+    pub fn req_usize(&self, key: &str) -> crate::util::error::Result<usize> {
         self.get(key)
             .and_then(Json::as_usize)
-            .ok_or_else(|| anyhow::anyhow!("missing/invalid integer field '{key}'"))
+            .ok_or_else(|| crate::anyhow!("missing/invalid integer field '{key}'"))
     }
 
     /// Fetch `key` as str or fail loudly with context.
-    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+    pub fn req_str(&self, key: &str) -> crate::util::error::Result<&str> {
         self.get(key)
             .and_then(Json::as_str)
-            .ok_or_else(|| anyhow::anyhow!("missing/invalid string field '{key}'"))
+            .ok_or_else(|| crate::anyhow!("missing/invalid string field '{key}'"))
     }
 
     /// Serialize (compact).
@@ -143,7 +143,7 @@ impl Json {
     }
 
     /// Parse a JSON document.
-    pub fn parse(s: &str) -> anyhow::Result<Json> {
+    pub fn parse(s: &str) -> crate::util::error::Result<Json> {
         let mut p = Parser {
             b: s.as_bytes(),
             i: 0,
@@ -152,7 +152,7 @@ impl Json {
         let v = p.value()?;
         p.ws();
         if p.i != p.b.len() {
-            anyhow::bail!("trailing garbage at byte {}", p.i);
+            crate::bail!("trailing garbage at byte {}", p.i);
         }
         Ok(v)
     }
@@ -174,12 +174,12 @@ impl<'a> Parser<'a> {
         self.b.get(self.i).copied()
     }
 
-    fn eat(&mut self, c: u8) -> anyhow::Result<()> {
+    fn eat(&mut self, c: u8) -> crate::util::error::Result<()> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
         } else {
-            anyhow::bail!(
+            crate::bail!(
                 "expected '{}' at byte {} (found {:?})",
                 c as char,
                 self.i,
@@ -188,16 +188,16 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn lit(&mut self, s: &str, v: Json) -> anyhow::Result<Json> {
+    fn lit(&mut self, s: &str, v: Json) -> crate::util::error::Result<Json> {
         if self.b[self.i..].starts_with(s.as_bytes()) {
             self.i += s.len();
             Ok(v)
         } else {
-            anyhow::bail!("invalid literal at byte {}", self.i)
+            crate::bail!("invalid literal at byte {}", self.i)
         }
     }
 
-    fn value(&mut self) -> anyhow::Result<Json> {
+    fn value(&mut self) -> crate::util::error::Result<Json> {
         match self.peek() {
             Some(b'{') => self.object(),
             Some(b'[') => self.array(),
@@ -206,11 +206,11 @@ impl<'a> Parser<'a> {
             Some(b'f') => self.lit("false", Json::Bool(false)),
             Some(b'n') => self.lit("null", Json::Null),
             Some(_) => self.number(),
-            None => anyhow::bail!("unexpected end of input"),
+            None => crate::bail!("unexpected end of input"),
         }
     }
 
-    fn object(&mut self) -> anyhow::Result<Json> {
+    fn object(&mut self) -> crate::util::error::Result<Json> {
         self.eat(b'{')?;
         let mut m = BTreeMap::new();
         self.ws();
@@ -233,12 +233,12 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Obj(m));
                 }
-                _ => anyhow::bail!("expected ',' or '}}' at byte {}", self.i),
+                _ => crate::bail!("expected ',' or '}}' at byte {}", self.i),
             }
         }
     }
 
-    fn array(&mut self) -> anyhow::Result<Json> {
+    fn array(&mut self) -> crate::util::error::Result<Json> {
         self.eat(b'[')?;
         let mut v = Vec::new();
         self.ws();
@@ -256,17 +256,17 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Arr(v));
                 }
-                _ => anyhow::bail!("expected ',' or ']' at byte {}", self.i),
+                _ => crate::bail!("expected ',' or ']' at byte {}", self.i),
             }
         }
     }
 
-    fn string(&mut self) -> anyhow::Result<String> {
+    fn string(&mut self) -> crate::util::error::Result<String> {
         self.eat(b'"')?;
         let mut s = String::new();
         loop {
             match self.peek() {
-                None => anyhow::bail!("unterminated string"),
+                None => crate::bail!("unterminated string"),
                 Some(b'"') => {
                     self.i += 1;
                     return Ok(s);
@@ -288,7 +288,7 @@ impl<'a> Parser<'a> {
                             s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                             self.i += 4;
                         }
-                        _ => anyhow::bail!("bad escape at byte {}", self.i),
+                        _ => crate::bail!("bad escape at byte {}", self.i),
                     }
                     self.i += 1;
                 }
@@ -305,7 +305,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn number(&mut self) -> anyhow::Result<Json> {
+    fn number(&mut self) -> crate::util::error::Result<Json> {
         let start = self.i;
         while self
             .peek()

@@ -1,9 +1,12 @@
 //! Small self-contained substrates that would normally come from crates.io
 //! (the build environment is offline): deterministic RNG, minimal JSON,
-//! statistics, a CLI argument parser and a property-testing helper.
+//! statistics, a CLI argument parser, an error-context substrate, scoped
+//! threading helpers and a property-testing helper.
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,191 @@
+//! Chunking and scoped-thread helpers for the multithreaded execution
+//! engine ([`crate::fmm::parallel`]).
+//!
+//! Built on `std::thread::scope` only — the offline environment has no
+//! rayon. The engine parallelizes by *writer-side sharding*: every phase
+//! partitions its destination boxes into contiguous ranges and each thread
+//! owns a disjoint `&mut` slice of the destination data, matching the
+//! paper's directed no-write-conflict list layout (§4.3), so no locks or
+//! atomics are needed anywhere.
+
+use std::ops::Range;
+
+/// Number of worker threads when the caller does not specify one.
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Split `0..n` into at most `chunks` contiguous, near-equal ranges (the
+/// leading `n % chunks` ranges are one longer). Returns fewer ranges when
+/// `n < chunks`; never returns an empty range.
+pub fn ranges(n: usize, chunks: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let chunks = chunks.clamp(1, n);
+    let base = n / chunks;
+    let extra = n % chunks;
+    let mut out = Vec::with_capacity(chunks);
+    let mut start = 0;
+    for i in 0..chunks {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// Split `0..weights.len()` into at most `chunks` contiguous ranges of
+/// near-equal total weight (greedy prefix partitioning). Balances
+/// triangular or list-driven workloads — P2P above all, whose symmetric
+/// formulation gives box `b` all pairs with sources `≥ b` — across threads.
+pub fn weighted_ranges(weights: &[u64], chunks: usize) -> Vec<Range<usize>> {
+    let n = weights.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let chunks = chunks.clamp(1, n);
+    let mut remaining: u64 = weights.iter().sum();
+    let mut out = Vec::with_capacity(chunks);
+    let mut start = 0usize;
+    for c in 0..chunks {
+        let chunks_left = chunks - c;
+        if chunks_left == 1 {
+            out.push(start..n);
+            start = n;
+            break;
+        }
+        // leave at least one item for every remaining chunk
+        let max_end = n - (chunks_left - 1);
+        let target = remaining / chunks_left as u64;
+        let mut end = start + 1;
+        let mut acc = weights[start];
+        while end < max_end && acc + weights[end] / 2 <= target {
+            acc += weights[end];
+            end += 1;
+        }
+        remaining -= acc;
+        out.push(start..end);
+        start = end;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// Split `data` into consecutive disjoint mutable slices of the given
+/// lengths (which must sum to exactly `data.len()`).
+pub fn split_lengths_mut<'a, T>(mut data: &'a mut [T], lens: &[usize]) -> Vec<&'a mut [T]> {
+    debug_assert_eq!(lens.iter().sum::<usize>(), data.len());
+    let mut out = Vec::with_capacity(lens.len());
+    for &len in lens {
+        let rest = std::mem::take(&mut data);
+        let (head, tail) = rest.split_at_mut(len);
+        out.push(head);
+        data = tail;
+    }
+    out
+}
+
+/// Run `f(range, chunk)` on one scoped thread per range, where `chunk` is
+/// the disjoint destination slice `data[range.start*stride ..
+/// range.end*stride]` — the writer-side sharding primitive. `ranges` must
+/// tile `0..data.len()/stride`.
+pub fn scoped_chunks_mut<T, F>(data: &mut [T], stride: usize, ranges: &[Range<usize>], f: F)
+where
+    T: Send,
+    F: Fn(Range<usize>, &mut [T]) + Sync,
+{
+    let lens: Vec<usize> = ranges.iter().map(|r| (r.end - r.start) * stride).collect();
+    let chunks = split_lengths_mut(data, &lens);
+    std::thread::scope(|s| {
+        for (r, chunk) in ranges.iter().zip(chunks) {
+            let r = r.clone();
+            let f = &f;
+            s.spawn(move || f(r, chunk));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_tile_without_gaps() {
+        for (n, c) in [(10, 3), (4, 8), (1, 1), (100, 7), (8, 8)] {
+            let rs = ranges(n, c);
+            assert!(rs.len() <= c);
+            assert_eq!(rs[0].start, 0);
+            assert_eq!(rs.last().unwrap().end, n);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+            assert!(rs.iter().all(|r| !r.is_empty()));
+            // near-equal: lengths differ by at most one
+            let lens: Vec<usize> = rs.iter().map(|r| r.end - r.start).collect();
+            let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(hi - lo <= 1, "{lens:?}");
+        }
+        assert!(ranges(0, 4).is_empty());
+    }
+
+    #[test]
+    fn weighted_ranges_balance_triangular_load() {
+        // triangular weights, as in the symmetric P2P (box b owns pairs ≥ b)
+        let n = 64;
+        let w: Vec<u64> = (0..n).map(|b| (n - b) as u64).collect();
+        let rs = weighted_ranges(&w, 4);
+        assert_eq!(rs.len(), 4);
+        assert_eq!(rs[0].start, 0);
+        assert_eq!(rs.last().unwrap().end, n);
+        for win in rs.windows(2) {
+            assert_eq!(win[0].end, win[1].start);
+        }
+        let total: u64 = w.iter().sum();
+        for r in &rs {
+            let chunk: u64 = w[r.start..r.end].iter().sum();
+            // every chunk within 2x of the ideal quarter share
+            assert!(chunk * 4 <= total * 2, "chunk {chunk} of {total} in {r:?}");
+        }
+    }
+
+    #[test]
+    fn weighted_ranges_degenerate_inputs() {
+        assert!(weighted_ranges(&[], 4).is_empty());
+        let rs = weighted_ranges(&[0, 0, 0], 8);
+        assert_eq!(rs.last().unwrap().end, 3);
+        let rs1 = weighted_ranges(&[5, 5], 1);
+        assert_eq!(rs1, vec![0..2]);
+    }
+
+    #[test]
+    fn split_lengths_mut_partitions() {
+        let mut v: Vec<u32> = (0..10).collect();
+        let parts = split_lengths_mut(&mut v, &[3, 0, 4, 3]);
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts[0], &[0, 1, 2]);
+        assert_eq!(parts[2], &[3, 4, 5, 6]);
+        assert_eq!(parts[3], &[7, 8, 9]);
+    }
+
+    #[test]
+    fn scoped_chunks_write_disjoint_slices() {
+        let n = 37;
+        let stride = 3;
+        let mut data = vec![0usize; n * stride];
+        let rs = ranges(n, 5);
+        scoped_chunks_mut(&mut data, stride, &rs, |r, chunk| {
+            for (k, b) in (r.start..r.end).enumerate() {
+                for j in 0..stride {
+                    chunk[k * stride + j] = b * stride + j + 1;
+                }
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i + 1);
+        }
+    }
+}

@@ -168,12 +168,9 @@ fn synth_meta(need: &fmm2d::packing::PadRequirements, p: usize) -> ArtifactMeta 
 #[test]
 fn gpusim_pipeline_over_real_counts() {
     let (pts, gs) = workload_for(Distribution::Uniform, 20_000, 9);
-    let pair = run_pair(
-        &pts,
-        &gs,
-        &FmmConfig::default(),
-        &GpuSim::c2075(),
-    );
+    // serial CPU baseline (the speedup claims below are vs the paper's
+    // single-threaded reference driver)
+    let pair = run_pair(&pts, &gs, &FmmConfig::default(), &GpuSim::c2075(), Some(1));
     // simulated GPU beats the measured CPU on every heavy phase at this N
     assert!(pair.speedup(Phase::P2P) > 1.0);
     assert!(pair.speedup(Phase::M2L) > 1.0);

@@ -1,0 +1,150 @@
+//! Parity of the multithreaded execution engine against the serial
+//! reference driver: potentials to ≤ 1e-12 relative error, and *identical*
+//! `WorkCounts` (the architecture-independent work description that the
+//! GPU cost model consumes), across distributions × kernels × thread
+//! counts.
+
+use fmm2d::config::FmmConfig;
+use fmm2d::connectivity::Connectivity;
+use fmm2d::expansion::Kernel;
+use fmm2d::fmm::{
+    evaluate_on_tree_serial, parallel::evaluate_on_tree_parallel, FmmOptions, Phase, WorkCounts,
+};
+use fmm2d::tree::Pyramid;
+use fmm2d::util::rng::Pcg64;
+use fmm2d::workload::Distribution;
+
+fn assert_counts_identical(a: &WorkCounts, b: &WorkCounts, what: &str) {
+    assert_eq!(a.n, b.n, "{what}: n");
+    assert_eq!(a.levels, b.levels, "{what}: levels");
+    assert_eq!(a.p, b.p, "{what}: p");
+    assert_eq!(a.leaf_sizes, b.leaf_sizes, "{what}: leaf_sizes");
+    assert_eq!(a.m2l_per_level, b.m2l_per_level, "{what}: m2l_per_level");
+    assert_eq!(a.m2m_per_level, b.m2m_per_level, "{what}: m2m_per_level");
+    assert_eq!(a.l2l_per_level, b.l2l_per_level, "{what}: l2l_per_level");
+    assert_eq!(a.p2p_pairs, b.p2p_pairs, "{what}: p2p_pairs");
+    assert_eq!(
+        a.p2p_src_per_box, b.p2p_src_per_box,
+        "{what}: p2p_src_per_box"
+    );
+    assert_eq!(a.p2l_pairs, b.p2l_pairs, "{what}: p2l_pairs");
+    assert_eq!(a.m2p_pairs, b.m2p_pairs, "{what}: m2p_pairs");
+    assert_eq!(a.p2m_particles, b.p2m_particles, "{what}: p2m_particles");
+    assert_eq!(a.connect_checks, b.connect_checks, "{what}: connect_checks");
+}
+
+#[test]
+fn parallel_engine_matches_serial_across_the_grid() {
+    let dists = [
+        Distribution::Uniform,
+        Distribution::Normal { sigma: 0.1 },
+        Distribution::Layer { sigma: 0.05 },
+    ];
+    for (di, dist) in dists.iter().enumerate() {
+        for kernel in [Kernel::Harmonic, Kernel::Log] {
+            let mut r = Pcg64::seed_from_u64(100 + di as u64);
+            let (pts, mut gs) = dist.generate(2500, &mut r);
+            if kernel == Kernel::Log {
+                // log potential: real strengths (see fmm tests)
+                for g in gs.iter_mut() {
+                    g.im = 0.0;
+                }
+            }
+            let pyr = Pyramid::build(&pts, &gs, 3);
+            let con = Connectivity::build(&pyr, 0.5);
+            let opts = FmmOptions {
+                cfg: FmmConfig {
+                    p: 14,
+                    levels_override: Some(3),
+                    ..FmmConfig::default()
+                },
+                kernel,
+                // the symmetric fast path only applies to Harmonic; the
+                // engine falls back to the directed formulation for Log
+                symmetric_p2p: true,
+                threads: Some(1),
+            };
+            let what = format!("{} × {:?}", dist.name(), kernel);
+            let (serial, st, sc) = evaluate_on_tree_serial(&pyr, &con, &opts);
+            assert!(st.total() > 0.0, "{what}: serial times empty");
+            for nt in [1usize, 2, 4] {
+                let (par, pt, pc) = evaluate_on_tree_parallel(&pyr, &con, &opts, nt);
+                assert_eq!(par.len(), serial.len());
+                for (i, (a, b)) in serial.iter().zip(&par).enumerate() {
+                    assert!(
+                        (*a - *b).abs() <= 1e-12 * a.abs().max(1.0),
+                        "{what} t={nt}: potential {i} diverged: {a:?} vs {b:?}"
+                    );
+                }
+                assert_counts_identical(&sc, &pc, &format!("{what} t={nt}"));
+                // PhaseTimes: same instrumentation shape — all computational
+                // phases recorded, Sort/Connect slots left for the caller
+                assert!(pt.total() > 0.0, "{what} t={nt}: no time recorded");
+                assert!(pt.get(Phase::P2P) > 0.0, "{what} t={nt}: P2P not timed");
+                assert!(pt.get(Phase::M2L) > 0.0, "{what} t={nt}: M2L not timed");
+                assert_eq!(pt.get(Phase::Sort), 0.0, "{what} t={nt}: Sort slot");
+                assert_eq!(pt.get(Phase::Connect), 0.0, "{what} t={nt}: Connect slot");
+            }
+        }
+    }
+}
+
+#[test]
+fn dispatch_selects_engine_by_thread_count() {
+    // evaluate_on_tree with threads=Some(1) must be the serial driver
+    // bit-for-bit; with threads=Some(4) it must agree to parity tolerance.
+    let mut r = Pcg64::seed_from_u64(9);
+    let (pts, gs) = Distribution::Uniform.generate(2000, &mut r);
+    let pyr = Pyramid::build(&pts, &gs, 2);
+    let con = Connectivity::build(&pyr, 0.5);
+    let base = FmmOptions {
+        cfg: FmmConfig {
+            p: 17,
+            levels_override: Some(2),
+            ..FmmConfig::default()
+        },
+        ..Default::default()
+    };
+    let one = FmmOptions {
+        threads: Some(1),
+        ..base
+    };
+    let four = FmmOptions {
+        threads: Some(4),
+        ..base
+    };
+    let (serial, _, _) = evaluate_on_tree_serial(&pyr, &con, &one);
+    let (via_dispatch, _, _) = fmm2d::fmm::evaluate_on_tree(&pyr, &con, &one);
+    for (a, b) in serial.iter().zip(&via_dispatch) {
+        assert_eq!(a.re, b.re);
+        assert_eq!(a.im, b.im);
+    }
+    let (par, _, _) = fmm2d::fmm::evaluate_on_tree(&pyr, &con, &four);
+    for (a, b) in serial.iter().zip(&par) {
+        assert!((*a - *b).abs() <= 1e-12 * a.abs().max(1.0));
+    }
+}
+
+#[test]
+fn full_evaluate_parity_in_original_order() {
+    // end-to-end `evaluate` (sort + connect + compute + unpermute): the
+    // user-facing results agree between engines in the caller's order.
+    let mut r = Pcg64::seed_from_u64(77);
+    let (pts, gs) = Distribution::Normal { sigma: 0.08 }.generate(3000, &mut r);
+    let mk = |threads| FmmOptions {
+        cfg: FmmConfig {
+            p: 17,
+            levels_override: Some(3),
+            ..FmmConfig::default()
+        },
+        threads,
+        ..Default::default()
+    };
+    let serial = fmm2d::fmm::evaluate(&pts, &gs, &mk(Some(1)));
+    let par = fmm2d::fmm::evaluate(&pts, &gs, &mk(Some(3)));
+    for (a, b) in serial.potentials.iter().zip(&par.potentials) {
+        assert!((*a - *b).abs() <= 1e-12 * a.abs().max(1.0));
+    }
+    assert_eq!(serial.counts.p2p_pairs, par.counts.p2p_pairs);
+    assert!(par.times.get(Phase::Sort) > 0.0);
+}

@@ -7,7 +7,10 @@
 //! paper's own headline property (§4.5).
 //!
 //! Requires `make artifacts` (skipped with a notice when absent, so plain
-//! `cargo test` works in a fresh checkout).
+//! `cargo test` works in a fresh checkout) and a build with the `pjrt`
+//! feature (the whole file is compiled out otherwise).
+
+#![cfg(feature = "pjrt")]
 
 use fmm2d::complex::C64;
 use fmm2d::config::FmmConfig;
