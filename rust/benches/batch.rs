@@ -1,0 +1,98 @@
+//! Batched vs sequential execution of many small FMM problems
+//! (self-built harness — criterion is unavailable offline).
+//!
+//! The acceptance claim of the batch subsystem: on the parallel CPU
+//! engine, dispatching K small problems as a batch (one pooled worker
+//! scope per group) is at least as fast as evaluating them one after
+//! another (per-problem, per-phase thread spawn).
+//!
+//! Run: `cargo bench --bench batch --offline`.
+
+use fmm2d::batch::{self, BatchEngine, BatchOptions, BatchProblem};
+use fmm2d::bench::{bench, black_box, BenchConfig};
+use fmm2d::config::FmmConfig;
+use fmm2d::expansion::Kernel;
+use fmm2d::fmm::{self, FmmOptions};
+use fmm2d::util::rng::Pcg64;
+use fmm2d::workload;
+
+fn main() {
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_default();
+    let cfg = BenchConfig::macro_bench();
+    let mut results = Vec::new();
+    let mut run = |name: &str, f: &mut dyn FnMut()| {
+        if !filter.is_empty() && !name.contains(&filter) {
+            return;
+        }
+        let r = bench(name, &cfg, f);
+        println!("{}", r.report());
+        results.push(r);
+    };
+
+    let mut rng = Pcg64::seed_from_u64(1);
+    let k = 32usize;
+    let n = 2000usize;
+    let problems: Vec<BatchProblem> = (0..k)
+        .map(|_| {
+            let (points, gammas) = workload::uniform_square(n, &mut rng);
+            BatchProblem { points, gammas }
+        })
+        .collect();
+    let fmm_opts = FmmOptions {
+        cfg: FmmConfig::default(),
+        kernel: Kernel::Harmonic,
+        symmetric_p2p: true,
+        threads: None,
+    };
+
+    // sequential baseline: per-problem evaluations through each engine
+    run(&format!("sequential_serial_{k}x{n}"), &mut || {
+        for pr in &problems {
+            black_box(fmm::evaluate(
+                &pr.points,
+                &pr.gammas,
+                &FmmOptions {
+                    threads: Some(1),
+                    ..fmm_opts
+                },
+            ));
+        }
+    });
+    run(&format!("sequential_parallel_{k}x{n}"), &mut || {
+        for pr in &problems {
+            black_box(fmm::evaluate(&pr.points, &pr.gammas, &fmm_opts));
+        }
+    });
+
+    // batched dispatches
+    for (name, engine) in [
+        ("batch_serial", BatchEngine::Serial),
+        ("batch_parallel", BatchEngine::Parallel),
+    ] {
+        let opts = BatchOptions {
+            fmm: fmm_opts,
+            engine,
+            max_group: 0,
+        };
+        run(&format!("{name}_{k}x{n}"), &mut || {
+            black_box(batch::run(&problems, &opts).expect("CPU batch engines cannot fail"));
+        });
+    }
+
+    // grouped-width sensitivity on the parallel engine
+    for max_group in [4usize, 16] {
+        let opts = BatchOptions {
+            fmm: fmm_opts,
+            engine: BatchEngine::Parallel,
+            max_group,
+        };
+        run(&format!("batch_parallel_{k}x{n}_g{max_group}"), &mut || {
+            black_box(batch::run(&problems, &opts).expect("CPU batch engines cannot fail"));
+        });
+    }
+
+    println!("\n{} benchmarks run", results.len());
+}

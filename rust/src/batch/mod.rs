@@ -1,0 +1,55 @@
+//! Packed-tensor batch execution: evaluate many small FMM problems in
+//! grouped, fixed-shape dispatches.
+//!
+//! The paper's asymmetric adaptive discretization keeps every tensor
+//! *shape* a function of `(levels, p, pads)` alone — adaptivity lives in
+//! the values, never the shapes ([`crate::packing`]). Batching exploits
+//! exactly that property: problems whose shapes agree can share one
+//! dispatch, with per-problem variation absorbed by the same `-1`-padded
+//! gather lists and zero-masked particle slots that single-problem packing
+//! already uses. Amortizing the per-dispatch overhead (kernel launches on
+//! the GPU, thread spawns on the CPU) across many small problems is the
+//! regime where the paper's GPU code wins, and what turns this engine
+//! from a one-shot evaluator into a throughput server core.
+//!
+//! Three layers:
+//!
+//! * [`BatchPlan::group`] groups problems by [`ProblemShape`] — `(levels,
+//!   p)` must agree exactly, `nmax` pads up to the widest member — and
+//!   splits classes at the configured `--batch-size`;
+//! * [`run`] builds the trees, plans, and dispatches every group through
+//!   the selected [`BatchEngine`]: the pooled multithreaded CPU engine
+//!   ([`crate::fmm::parallel::evaluate_trees_pooled`] — one scoped worker
+//!   pool per group instead of per-problem spawn) or one batched XLA
+//!   execution per group (`pjrt` feature);
+//! * per-problem potentials come back in each caller's original particle
+//!   order, with aggregated [`WorkCounts`](crate::fmm::WorkCounts) (for
+//!   the GPU cost model's batched-dispatch accounting) and [`BatchStats`].
+//!
+//! Invariants: potentials of a batched run match sequential per-problem
+//! runs to ≤ 1e-12 relative error on the CPU engines
+//! (`tests/batch_parity.rs`; the XLA path reduces in padded fixed-shape
+//! order and may deviate up to ~1e-9, the bound `runtime_e2e` and the
+//! CLI `--check` hold it to); grouping never reorders results
+//! (`potentials[i]` always answers problem `i`); each group is dispatched
+//! exactly once.
+//!
+//! ```
+//! use fmm2d::batch::{BatchPlan, ProblemShape};
+//! // same (levels, p) ⇒ one shared dispatch, padded to the widest member
+//! let shapes = [
+//!     ProblemShape { levels: 2, p: 17, nmax: 40 },
+//!     ProblemShape { levels: 3, p: 17, nmax: 52 },
+//!     ProblemShape { levels: 2, p: 17, nmax: 47 },
+//! ];
+//! let plan = BatchPlan::group(&shapes, 0);
+//! assert_eq!(plan.n_groups(), 2);
+//! assert_eq!(plan.groups[0].members, vec![0, 2]);
+//! assert_eq!(plan.groups[0].nmax, 47);
+//! ```
+
+pub mod plan;
+pub mod runner;
+
+pub use plan::{BatchGroup, BatchPlan, GroupKey, ProblemShape};
+pub use runner::{run, BatchEngine, BatchOptions, BatchOutput, BatchProblem, BatchStats};

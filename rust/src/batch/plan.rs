@@ -1,0 +1,179 @@
+//! Grouping of many FMM problems into shape-compatible dispatch groups.
+//!
+//! The planner never looks at particle data — only at [`ProblemShape`]s.
+//! Two problems can share one fixed-shape dispatch iff their `(levels, p)`
+//! agree: those two numbers fix every tensor shape of the packed ABI
+//! (`4^L` leaves, `(4^{L+1}−1)/3` centers, the per-level list tables, the
+//! `p+1` coefficient stride). The remaining per-problem variation — leaf
+//! populations, list degrees — is absorbed by pads: the group's `nmax` is
+//! the maximum over its members, and the `-1`-padded gather lists of
+//! [`crate::packing`] make the extra slots inert.
+
+use std::collections::BTreeMap;
+
+/// Shape summary of one FMM problem — everything the planner needs to
+/// decide dispatch compatibility, nothing about the actual particles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProblemShape {
+    /// Refinement levels `L` of the problem's pyramid.
+    pub levels: usize,
+    /// Expansion order `p`.
+    pub p: usize,
+    /// Largest leaf population — the problem's minimum `nmax` pad.
+    pub nmax: usize,
+}
+
+/// The part of a [`ProblemShape`] that must agree exactly for two problems
+/// to share a dispatch (`nmax` merely pads up within a group).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct GroupKey {
+    pub levels: usize,
+    pub p: usize,
+}
+
+/// One dispatch group: problems that execute together in one fixed-shape
+/// invocation.
+#[derive(Clone, Debug)]
+pub struct BatchGroup {
+    pub key: GroupKey,
+    /// Indices into the caller's problem list, in submission order.
+    pub members: Vec<usize>,
+    /// Leaf-capacity pad of the group: the maximum member `nmax`.
+    pub nmax: usize,
+}
+
+impl BatchGroup {
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+}
+
+/// The full grouping of a batch: every problem appears in exactly one
+/// group; groups are ordered by key (levels, then p), members by
+/// submission order.
+#[derive(Clone, Debug, Default)]
+pub struct BatchPlan {
+    pub groups: Vec<BatchGroup>,
+}
+
+impl BatchPlan {
+    /// Group problems by compatible artifact shape. `max_group` caps the
+    /// members per group (`0` = unbounded): oversized shape classes are
+    /// split into consecutive chunks, each of which dispatches separately.
+    ///
+    /// ```
+    /// use fmm2d::batch::{BatchPlan, ProblemShape};
+    /// let shapes = [
+    ///     ProblemShape { levels: 2, p: 17, nmax: 40 },
+    ///     ProblemShape { levels: 3, p: 17, nmax: 52 },
+    ///     ProblemShape { levels: 2, p: 17, nmax: 47 },
+    /// ];
+    /// let plan = BatchPlan::group(&shapes, 0);
+    /// assert_eq!(plan.n_groups(), 2);
+    /// // same-shape problems share one dispatch, padded to the widest
+    /// assert_eq!(plan.groups[0].members, vec![0, 2]);
+    /// assert_eq!(plan.groups[0].nmax, 47);
+    /// assert_eq!(plan.groups[1].members, vec![1]);
+    /// ```
+    pub fn group(shapes: &[ProblemShape], max_group: usize) -> BatchPlan {
+        let mut by_key: BTreeMap<GroupKey, Vec<usize>> = BTreeMap::new();
+        for (i, s) in shapes.iter().enumerate() {
+            by_key
+                .entry(GroupKey {
+                    levels: s.levels,
+                    p: s.p,
+                })
+                .or_default()
+                .push(i);
+        }
+        let mut groups = Vec::new();
+        for (key, members) in by_key {
+            let cap = if max_group == 0 {
+                members.len()
+            } else {
+                max_group
+            };
+            for chunk in members.chunks(cap.max(1)) {
+                groups.push(BatchGroup {
+                    key,
+                    members: chunk.to_vec(),
+                    nmax: chunk.iter().map(|&i| shapes[i].nmax).max().unwrap_or(0),
+                });
+            }
+        }
+        BatchPlan { groups }
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn n_problems(&self) -> usize {
+        self.groups.iter().map(|g| g.members.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape(levels: usize, p: usize, nmax: usize) -> ProblemShape {
+        ProblemShape { levels, p, nmax }
+    }
+
+    #[test]
+    fn groups_cover_every_problem_once() {
+        let shapes = [
+            shape(2, 17, 40),
+            shape(3, 17, 50),
+            shape(2, 17, 45),
+            shape(2, 10, 45),
+            shape(3, 17, 48),
+        ];
+        let plan = BatchPlan::group(&shapes, 0);
+        assert_eq!(plan.n_problems(), shapes.len());
+        let mut seen = vec![false; shapes.len()];
+        for g in &plan.groups {
+            for &i in &g.members {
+                assert!(!seen[i], "problem {i} appears twice");
+                seen[i] = true;
+                assert_eq!(shapes[i].levels, g.key.levels);
+                assert_eq!(shapes[i].p, g.key.p);
+                assert!(shapes[i].nmax <= g.nmax, "member wider than group pad");
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        // (levels=2,p=10), (levels=2,p=17), (levels=3,p=17)
+        assert_eq!(plan.n_groups(), 3);
+    }
+
+    #[test]
+    fn max_group_splits_oversized_classes() {
+        let shapes = vec![shape(2, 17, 40); 5];
+        let plan = BatchPlan::group(&shapes, 2);
+        assert_eq!(plan.n_groups(), 3); // 2 + 2 + 1
+        assert_eq!(plan.n_problems(), 5);
+        assert_eq!(plan.groups[0].members, vec![0, 1]);
+        assert_eq!(plan.groups[2].members, vec![4]);
+    }
+
+    #[test]
+    fn empty_input_empty_plan() {
+        let plan = BatchPlan::group(&[], 4);
+        assert_eq!(plan.n_groups(), 0);
+        assert_eq!(plan.n_problems(), 0);
+    }
+
+    #[test]
+    fn group_pad_is_max_member_nmax() {
+        let shapes = [shape(2, 8, 31), shape(2, 8, 64), shape(2, 8, 12)];
+        let plan = BatchPlan::group(&shapes, 0);
+        assert_eq!(plan.n_groups(), 1);
+        assert_eq!(plan.groups[0].nmax, 64);
+        assert_eq!(plan.groups[0].len(), 3);
+    }
+}

@@ -1,0 +1,320 @@
+//! Execution of a planned batch: build trees, dispatch groups, unpack.
+//!
+//! The runner owns the whole request path of a batch evaluation. The
+//! topological phase (Sort + Connect) stays on the CPU per problem — the
+//! same substitution the paper itself makes to guarantee identical trees —
+//! and everything downstream is dispatched **per group**: one pooled CPU
+//! execution or one batched XLA invocation per
+//! [`BatchGroup`](super::plan::BatchGroup), never one per problem.
+
+use std::time::Instant;
+
+use crate::complex::C64;
+use crate::connectivity::Connectivity;
+use crate::fmm::{self, FmmOptions, Phase, PhaseTimes, WorkCounts};
+use crate::tree::Pyramid;
+use crate::util::error::Result;
+
+use super::plan::{BatchPlan, ProblemShape};
+
+/// One FMM problem of a batch: source points plus strengths.
+#[derive(Clone, Debug)]
+pub struct BatchProblem {
+    pub points: Vec<C64>,
+    pub gammas: Vec<C64>,
+}
+
+/// Which backend executes the grouped dispatches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchEngine {
+    /// The serial reference driver, one problem after another (baseline).
+    Serial,
+    /// Batch-size-aware CPU dispatch: groups with at least as many members
+    /// as workers stream through one shared scoped pool
+    /// ([`fmm::parallel::evaluate_trees_pooled`]); smaller groups fall
+    /// back to the per-problem multithreaded engine so a lone large
+    /// problem still uses every core.
+    Parallel,
+    /// The XLA/PJRT runtime: one batched `run_raw` per group (needs the
+    /// `pjrt` feature and artifacts compiled with a batch dimension).
+    Xla,
+}
+
+/// Options of one batch run.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchOptions {
+    /// Per-problem FMM options (p, N_d, θ, kernel, threads).
+    pub fmm: FmmOptions,
+    pub engine: BatchEngine,
+    /// Maximum problems per dispatch group (`0` = unbounded; the CLI's
+    /// `--batch-size`).
+    pub max_group: usize,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        Self {
+            fmm: FmmOptions::default(),
+            engine: BatchEngine::Parallel,
+            max_group: 0,
+        }
+    }
+}
+
+/// Aggregated accounting of one batch run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchStats {
+    pub n_problems: usize,
+    pub n_groups: usize,
+    /// Execution dispatches issued (one per group).
+    pub dispatches: usize,
+    /// Wall-clock per phase summed across all problems.
+    pub times: PhaseTimes,
+    /// Wall-clock of the whole batch run (build + dispatch + unpack).
+    pub wall_s: f64,
+    /// XLA engine only: aggregated runtime timings (zero on CPU engines).
+    pub upload_s: f64,
+    pub execute_s: f64,
+    pub download_s: f64,
+}
+
+/// Result of one batch run.
+#[derive(Clone, Debug)]
+pub struct BatchOutput {
+    /// Per problem, the potential at every input point in the caller's
+    /// original order — `potentials[i]` always answers `problems[i]`.
+    pub potentials: Vec<Vec<C64>>,
+    /// Work counts aggregated over the whole batch
+    /// ([`WorkCounts::absorb`]).
+    pub counts: WorkCounts,
+    pub stats: BatchStats,
+}
+
+/// Evaluate a batch of problems in grouped, shape-compatible dispatches.
+///
+/// Per-problem potentials match sequential per-problem runs to ≤ 1e-12
+/// relative error on the CPU engines (`tests/batch_parity.rs`); the XLA
+/// engine's padded reduction order deviates up to ~1e-9.
+pub fn run(problems: &[BatchProblem], opts: &BatchOptions) -> Result<BatchOutput> {
+    if cfg!(not(feature = "pjrt")) && opts.engine == BatchEngine::Xla {
+        crate::bail!(
+            "BatchEngine::Xla needs the PJRT runtime, which is disabled in \
+             this build; rebuild with `cargo build --release --features pjrt`"
+        );
+    }
+    let wall = Instant::now();
+    let mut stats = BatchStats {
+        n_problems: problems.len(),
+        ..Default::default()
+    };
+    let mut potentials: Vec<Vec<C64>> = vec![Vec::new(); problems.len()];
+    let mut counts = WorkCounts::default();
+    let mut times_per_problem: Vec<PhaseTimes> = vec![PhaseTimes::default(); problems.len()];
+
+    // ---- topological phase, per problem (kept on the CPU — the paper's
+    // own substitution for guaranteeing identical trees) ----------------
+    let mut trees: Vec<(Pyramid, Connectivity)> = Vec::with_capacity(problems.len());
+    for (i, pr) in problems.iter().enumerate() {
+        let levels = opts.fmm.cfg.levels_for(pr.points.len());
+        let t = Instant::now();
+        let pyr = Pyramid::build(&pr.points, &pr.gammas, levels);
+        times_per_problem[i].0[Phase::Sort as usize] = t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let con = Connectivity::build(&pyr, opts.fmm.cfg.theta);
+        times_per_problem[i].0[Phase::Connect as usize] = t.elapsed().as_secs_f64();
+        trees.push((pyr, con));
+    }
+
+    // ---- plan: group by compatible artifact shape ----------------------
+    let shapes: Vec<ProblemShape> = trees
+        .iter()
+        .map(|(pyr, _)| ProblemShape {
+            levels: pyr.levels,
+            p: opts.fmm.cfg.p,
+            nmax: pyr.max_leaf_len(),
+        })
+        .collect();
+    let plan = BatchPlan::group(&shapes, opts.max_group);
+    stats.n_groups = plan.n_groups();
+
+    // ---- dispatch: one execution per group -----------------------------
+    match opts.engine {
+        BatchEngine::Serial | BatchEngine::Parallel => {
+            for group in &plan.groups {
+                let members: Vec<(&Pyramid, &Connectivity)> = group
+                    .members
+                    .iter()
+                    .map(|&i| (&trees[i].0, &trees[i].1))
+                    .collect();
+                let results = dispatch_cpu(&members, opts);
+                stats.dispatches += 1;
+                for (&i, (phi_leaf, t, c)) in group.members.iter().zip(results) {
+                    potentials[i] = trees[i].0.unpermute(&phi_leaf);
+                    times_per_problem[i].add(&t);
+                    counts.absorb(&c);
+                }
+            }
+        }
+        BatchEngine::Xla => {
+            run_xla(&trees, &plan, &mut potentials, &mut counts, &mut stats)?
+        }
+    }
+
+    for t in &times_per_problem {
+        stats.times.add(t);
+    }
+    stats.wall_s = wall.elapsed().as_secs_f64();
+    Ok(BatchOutput {
+        potentials,
+        counts,
+        stats,
+    })
+}
+
+/// CPU dispatch of one group (see [`BatchEngine`] for the selection rule).
+fn dispatch_cpu(
+    members: &[(&Pyramid, &Connectivity)],
+    opts: &BatchOptions,
+) -> Vec<(Vec<C64>, PhaseTimes, WorkCounts)> {
+    match opts.engine {
+        BatchEngine::Serial => members
+            .iter()
+            .map(|&(pyr, con)| fmm::evaluate_on_tree_serial(pyr, con, &opts.fmm))
+            .collect(),
+        BatchEngine::Parallel => {
+            let nt = opts.fmm.effective_threads();
+            if members.len() >= nt.max(2) {
+                fmm::parallel::evaluate_trees_pooled(members, &opts.fmm, nt)
+            } else {
+                members
+                    .iter()
+                    .map(|&(pyr, con)| fmm::evaluate_on_tree(pyr, con, &opts.fmm))
+                    .collect()
+            }
+        }
+        BatchEngine::Xla => unreachable!("XLA dispatch is handled by run_xla"),
+    }
+}
+
+/// XLA dispatch of the whole batch: one compiled artifact and one batched
+/// `run_raw` per group. Phase times cannot be instrumented inside the
+/// artifact, so per-problem counts come from [`fmm::structural_counts`]
+/// and timing lands in the upload/execute/download stats.
+#[cfg(feature = "pjrt")]
+fn run_xla(
+    trees: &[(Pyramid, Connectivity)],
+    plan: &BatchPlan,
+    potentials: &mut [Vec<C64>],
+    counts: &mut WorkCounts,
+    stats: &mut BatchStats,
+) -> Result<()> {
+    let mut rt = crate::runtime::Runtime::new(None)?;
+    for group in &plan.groups {
+        let members: Vec<(&Pyramid, &Connectivity)> = group
+            .members
+            .iter()
+            .map(|&i| (&trees[i].0, &trees[i].1))
+            .collect();
+        let exe = rt.fmm_artifact_for_group(&members)?;
+        let (pots, rs) = exe.run_fmm_group(&members)?;
+        stats.dispatches += 1;
+        stats.upload_s += rs.upload_s;
+        stats.execute_s += rs.execute_s;
+        stats.download_s += rs.download_s;
+        for (&i, phi) in group.members.iter().zip(pots) {
+            potentials[i] = phi;
+            counts.absorb(&fmm::structural_counts(&trees[i].0, &trees[i].1, exe.meta.p));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_xla(
+    _trees: &[(Pyramid, Connectivity)],
+    _plan: &BatchPlan,
+    _potentials: &mut [Vec<C64>],
+    _counts: &mut WorkCounts,
+    _stats: &mut BatchStats,
+) -> Result<()> {
+    crate::bail!(
+        "BatchEngine::Xla needs the PJRT runtime, which is disabled in this \
+         build; rebuild with `cargo build --release --features pjrt`"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FmmConfig;
+    use crate::util::rng::Pcg64;
+    use crate::workload;
+
+    fn problems_of(sizes: &[usize], seed: u64) -> Vec<BatchProblem> {
+        let mut r = Pcg64::seed_from_u64(seed);
+        sizes
+            .iter()
+            .map(|&n| {
+                let (points, gammas) = workload::uniform_square(n, &mut r);
+                BatchProblem { points, gammas }
+            })
+            .collect()
+    }
+
+    fn opts_with(engine: BatchEngine, max_group: usize) -> BatchOptions {
+        BatchOptions {
+            fmm: FmmOptions {
+                cfg: FmmConfig {
+                    p: 10,
+                    ..FmmConfig::default()
+                },
+                threads: Some(2),
+                ..FmmOptions::default()
+            },
+            engine,
+            max_group,
+        }
+    }
+
+    #[test]
+    fn heterogeneous_sizes_form_multiple_groups() {
+        // N_d = 45 ⇒ Eq. (5.2) gives 2 levels for the small sizes and 3
+        // for the large ones: two shape classes, two groups
+        let problems = problems_of(&[600, 2200, 700, 2400], 1);
+        let out = run(&problems, &opts_with(BatchEngine::Parallel, 0)).unwrap();
+        assert_eq!(out.stats.n_problems, 4);
+        assert_eq!(out.stats.n_groups, 2);
+        assert_eq!(out.stats.dispatches, 2);
+        assert_eq!(out.counts.n, 600 + 2200 + 700 + 2400);
+        for (pr, phi) in problems.iter().zip(&out.potentials) {
+            assert_eq!(pr.points.len(), phi.len());
+        }
+    }
+
+    #[test]
+    fn max_group_bounds_dispatch_width() {
+        let problems = problems_of(&[600, 650, 700, 750, 800], 2);
+        let out = run(&problems, &opts_with(BatchEngine::Serial, 2)).unwrap();
+        // one shape class of 5, split 2+2+1
+        assert_eq!(out.stats.n_groups, 3);
+        assert_eq!(out.stats.dispatches, 3);
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let out = run(&[], &opts_with(BatchEngine::Parallel, 0)).unwrap();
+        assert_eq!(out.stats.n_problems, 0);
+        assert_eq!(out.stats.dispatches, 0);
+        assert!(out.potentials.is_empty());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn xla_engine_explains_missing_feature() {
+        let problems = problems_of(&[600], 3);
+        let err = run(&problems, &opts_with(BatchEngine::Xla, 0))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("pjrt"), "unexpected error: {err}");
+    }
+}

@@ -97,6 +97,97 @@ pub struct WorkCounts {
     pub sort: SortStats,
 }
 
+fn add_aligned(dst: &mut Vec<usize>, src: &[usize]) {
+    if dst.len() < src.len() {
+        dst.resize(src.len(), 0);
+    }
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += *s;
+    }
+}
+
+impl WorkCounts {
+    /// Fold another problem's counts into this one (batch aggregation,
+    /// [`crate::batch`]): scalars add, per-leaf vectors concatenate (the
+    /// group's boxes all dispatch together), per-level vectors add
+    /// element-wise aligned at the root, and `levels`/`p` take the
+    /// maximum over the batch.
+    pub fn absorb(&mut self, other: &WorkCounts) {
+        self.n += other.n;
+        self.levels = self.levels.max(other.levels);
+        self.p = self.p.max(other.p);
+        self.leaf_sizes.extend_from_slice(&other.leaf_sizes);
+        self.p2p_src_per_box.extend_from_slice(&other.p2p_src_per_box);
+        add_aligned(&mut self.m2l_per_level, &other.m2l_per_level);
+        add_aligned(&mut self.m2m_per_level, &other.m2m_per_level);
+        add_aligned(&mut self.l2l_per_level, &other.l2l_per_level);
+        self.p2p_pairs += other.p2p_pairs;
+        self.p2l_pairs += other.p2l_pairs;
+        self.m2p_pairs += other.m2p_pairs;
+        self.p2m_particles += other.p2m_particles;
+        self.connect_checks += other.connect_checks;
+        self.sort.splits += other.sort.splits;
+        self.sort.elements_visited += other.sort.elements_visited;
+        self.sort.passes += other.sort.passes;
+        self.sort.scattered += other.sort.scattered;
+    }
+}
+
+/// Work counts derived from the tree + connectivity structure alone,
+/// without running any engine. Identical to what the CPU drivers measure
+/// on the same tree (asserted in `structural_counts_match_measured`); used
+/// by execution paths that cannot instrument phases, like the batched XLA
+/// dispatch ([`crate::batch`]).
+pub fn structural_counts(pyr: &Pyramid, con: &Connectivity, p: usize) -> WorkCounts {
+    let levels = pyr.levels;
+    let nl = pyr.n_leaves();
+    let n = pyr.particles.len();
+    let leaf_sizes: Vec<u32> = (0..nl)
+        .map(|b| (pyr.starts[b + 1] - pyr.starts[b]) as u32)
+        .collect();
+    let p2p_src_per_box: Vec<u32> = (0..nl)
+        .map(|b| {
+            con.near
+                .sources(b)
+                .iter()
+                .map(|&s| (pyr.starts[s as usize + 1] - pyr.starts[s as usize]) as u32)
+                .sum()
+        })
+        .collect();
+    let p2p_pairs = leaf_sizes
+        .iter()
+        .zip(&p2p_src_per_box)
+        .map(|(&nb, &src)| nb as usize * src as usize)
+        .sum::<usize>()
+        - n;
+    let mut m2l_per_level = vec![0; levels + 1];
+    let mut m2m_per_level = vec![0; levels + 1];
+    let mut l2l_per_level = vec![0; levels + 1];
+    for l in 1..=levels {
+        m2l_per_level[l] = con.weak[l].len();
+        m2m_per_level[l] = boxes_at_level(l);
+        if l >= 2 {
+            l2l_per_level[l] = boxes_at_level(l);
+        }
+    }
+    WorkCounts {
+        n,
+        levels,
+        p,
+        leaf_sizes,
+        m2l_per_level,
+        m2m_per_level,
+        l2l_per_level,
+        p2p_pairs,
+        p2p_src_per_box,
+        p2l_pairs: con.p2l.len(),
+        m2p_pairs: con.m2p.len(),
+        p2m_particles: n,
+        connect_checks: con.checks,
+        sort: pyr.sort_stats,
+    }
+}
+
 /// Options of one evaluation.
 #[derive(Clone, Copy, Debug)]
 pub struct FmmOptions {
@@ -668,6 +759,62 @@ mod tests {
             .sum::<usize>()
             - c.n;
         assert_eq!(c.p2p_pairs, closed);
+    }
+
+    #[test]
+    fn structural_counts_match_measured() {
+        let mut r = Pcg64::seed_from_u64(8);
+        let (pts, gs) = workload::uniform_square(3000, &mut r);
+        let pyr = Pyramid::build(&pts, &gs, 3);
+        let con = Connectivity::build(&pyr, 0.5);
+        let opts = FmmOptions {
+            cfg: FmmConfig {
+                p: 9,
+                levels_override: Some(3),
+                ..FmmConfig::default()
+            },
+            ..Default::default()
+        };
+        let (_, _, measured) = evaluate_on_tree_serial(&pyr, &con, &opts);
+        let s = structural_counts(&pyr, &con, 9);
+        assert_eq!(s.n, measured.n);
+        assert_eq!(s.levels, measured.levels);
+        assert_eq!(s.p, measured.p);
+        assert_eq!(s.leaf_sizes, measured.leaf_sizes);
+        assert_eq!(s.m2l_per_level, measured.m2l_per_level);
+        assert_eq!(s.m2m_per_level, measured.m2m_per_level);
+        assert_eq!(s.l2l_per_level, measured.l2l_per_level);
+        assert_eq!(s.p2p_pairs, measured.p2p_pairs);
+        assert_eq!(s.p2p_src_per_box, measured.p2p_src_per_box);
+        assert_eq!(s.p2l_pairs, measured.p2l_pairs);
+        assert_eq!(s.m2p_pairs, measured.m2p_pairs);
+        assert_eq!(s.p2m_particles, measured.p2m_particles);
+        assert_eq!(s.connect_checks, measured.connect_checks);
+    }
+
+    #[test]
+    fn absorb_aggregates_counts() {
+        let mut r = Pcg64::seed_from_u64(9);
+        let (pa, ga) = workload::uniform_square(1000, &mut r);
+        let (pb, gb) = workload::uniform_square(2500, &mut r);
+        let pyr_a = Pyramid::build(&pa, &ga, 2);
+        let con_a = Connectivity::build(&pyr_a, 0.5);
+        let pyr_b = Pyramid::build(&pb, &gb, 3);
+        let con_b = Connectivity::build(&pyr_b, 0.5);
+        let a = structural_counts(&pyr_a, &con_a, 8);
+        let b = structural_counts(&pyr_b, &con_b, 12);
+        let mut agg = WorkCounts::default();
+        agg.absorb(&a);
+        agg.absorb(&b);
+        assert_eq!(agg.n, 3500);
+        assert_eq!(agg.levels, 3);
+        assert_eq!(agg.p, 12);
+        assert_eq!(agg.leaf_sizes.len(), 16 + 64);
+        assert_eq!(agg.p2p_pairs, a.p2p_pairs + b.p2p_pairs);
+        assert_eq!(agg.p2m_particles, 3500);
+        assert_eq!(agg.m2m_per_level.len(), 4);
+        assert_eq!(agg.m2m_per_level[1], 4 + 4);
+        assert_eq!(agg.m2m_per_level[3], 64);
     }
 
     #[test]

@@ -18,6 +18,16 @@
 //! ranges are balanced by per-box work estimates
 //! ([`weighted_ranges`]) because the symmetric P2P load is triangular and
 //! the M2L in-degree varies on adaptive meshes.
+//!
+//! Besides the per-problem engine above, this module provides the batch
+//! entry point [`evaluate_trees_pooled`]: one scoped worker pool shared by
+//! a whole group of problems, each worker claiming problems off an atomic
+//! queue and running the serial driver on its claims. For many small
+//! problems this amortizes thread-spawn across the batch (the per-problem
+//! engine spawns a fresh scope per *phase*) and keeps per-problem results
+//! bitwise-identical to the serial reference driver — the CPU counterpart
+//! of amortizing GPU launch overhead across a packed-tensor batch
+//! ([`crate::batch`]).
 
 use std::time::Instant;
 
@@ -46,17 +56,12 @@ pub fn evaluate_on_tree_parallel(
     let n = pyr.particles.len();
     let nt = nt.clamp(1, nl);
     let mut times = PhaseTimes::default();
-    let mut counts = WorkCounts {
-        n,
-        levels,
-        p,
-        leaf_sizes: (0..nl)
-            .map(|b| (pyr.starts[b + 1] - pyr.starts[b]) as u32)
-            .collect(),
-        connect_checks: con.checks,
-        sort: pyr.sort_stats,
-        ..Default::default()
-    };
+    // Every work count is a pure function of the tree + connectivity, so
+    // this engine takes them wholesale from `structural_counts` instead of
+    // re-deriving them per phase (identical to the serial driver's measured
+    // values — asserted by `structural_counts_match_measured` and
+    // `tests/parallel_parity.rs`).
+    let counts = super::structural_counts(pyr, con, p);
 
     // SoA copies of the permuted particles, shared read-only by all workers
     let pos_v: Vec<C64> = pyr.particles.iter().map(|q| q.pos).collect();
@@ -81,7 +86,6 @@ pub fn evaluate_on_tree_parallel(
                 chunk[k * stride..(k + 1) * stride].copy_from_slice(&acc.0);
             }
         });
-        counts.p2m_particles = n;
     }
     times.0[Phase::P2M as usize] = t.elapsed().as_secs_f64();
 
@@ -91,9 +95,7 @@ pub fn evaluate_on_tree_parallel(
     // children, so the accumulation order into each parent matches the
     // serial driver exactly.
     let t = Instant::now();
-    counts.m2m_per_level = vec![0; levels + 1];
     for l in (1..=levels).rev() {
-        counts.m2m_per_level[l] = boxes_at_level(l);
         let (parents, children) = {
             // split-borrow the two levels
             let (lo, hi) = multipole.levels.split_at_mut(l);
@@ -126,10 +128,8 @@ pub fn evaluate_on_tree_parallel(
 
     // ---- M2L (+ P2L): sharded over destination-box ranges per level ----
     let t = Instant::now();
-    counts.m2l_per_level = vec![0; levels + 1];
     let m2l_op = (opts.kernel == Kernel::Harmonic).then(|| M2lOperator::new(p));
     for l in 1..=levels {
-        counts.m2l_per_level[l] = con.weak[l].len();
         let nb = boxes_at_level(l);
         let centers = pyr.centers(l);
         let (mults, locs) = (&multipole.levels[l], &mut local.levels[l]);
@@ -158,7 +158,6 @@ pub fn evaluate_on_tree_parallel(
     }
     // P2L shortcuts (finest level; timed with M2L — they substitute for it)
     {
-        counts.p2l_pairs = con.p2l.len();
         let centers = pyr.centers(levels);
         let rs = ranges(nl, nt);
         scoped_chunks_mut(&mut local.levels[levels], stride, &rs, |r, chunk| {
@@ -181,9 +180,7 @@ pub fn evaluate_on_tree_parallel(
 
     // ---- L2L: push local expansions down, sharded over child ranges ----
     let t = Instant::now();
-    counts.l2l_per_level = vec![0; levels + 1];
     for l in 1..levels {
-        counts.l2l_per_level[l + 1] = boxes_at_level(l + 1);
         let (parents, children) = {
             let (lo, hi) = local.levels.split_at_mut(l + 1);
             (&lo[l], &mut hi[0])
@@ -208,7 +205,6 @@ pub fn evaluate_on_tree_parallel(
     // ---- L2P (+ M2P): sharded over leaf ranges; each worker owns the
     // contiguous particle slice of its boxes --------------------------
     let t = Instant::now();
-    counts.m2p_pairs = con.m2p.len();
     let mut phi = vec![ZERO; n];
     {
         let centers_v = pyr.centers(levels);
@@ -254,27 +250,10 @@ pub fn evaluate_on_tree_parallel(
 
     // ---- P2P: near field -----------------------------------------------
     //
-    // Work counts are derived from the list structure up front (identical
-    // for both formulations and to the serial driver — see
-    // `work_counts_consistent`): per destination box the streamed source
-    // total, and in closed form Σ_b n_b·src_b − N ordered pairs.
+    // Work counts (`p2p_src_per_box`, the closed-form Σ_b n_b·src_b − N
+    // pair total) come from `structural_counts` above — identical for both
+    // formulations and to the serial driver (`work_counts_consistent`).
     let t = Instant::now();
-    counts.p2p_src_per_box = (0..nl)
-        .map(|b| {
-            con.near
-                .sources(b)
-                .iter()
-                .map(|&s| (pyr.starts[s as usize + 1] - pyr.starts[s as usize]) as u32)
-                .sum()
-        })
-        .collect();
-    counts.p2p_pairs = counts
-        .leaf_sizes
-        .iter()
-        .zip(&counts.p2p_src_per_box)
-        .map(|(&nb, &src)| nb as usize * src as usize)
-        .sum::<usize>()
-        - n;
     let xs_v: Vec<f64> = pos.iter().map(|z| z.re).collect();
     let ys_v: Vec<f64> = pos.iter().map(|z| z.im).collect();
     let gre_v: Vec<f64> = gam.iter().map(|z| z.re).collect();
@@ -419,6 +398,56 @@ pub fn evaluate_on_tree_parallel(
     (phi, times, counts)
 }
 
+/// Evaluate many prebuilt trees through **one** scoped worker pool: `nt`
+/// workers claim problems from a shared atomic queue and run the serial
+/// driver ([`super::evaluate_on_tree_serial`]) on each claim, so the
+/// thread-spawn cost is paid once per batch group instead of once per
+/// phase per problem. Per-problem results (potentials, times, counts) are
+/// bitwise-identical to the serial driver; result order matches input
+/// order regardless of which worker ran which problem.
+pub fn evaluate_trees_pooled(
+    problems: &[(&Pyramid, &Connectivity)],
+    opts: &FmmOptions,
+    nt: usize,
+) -> Vec<(Vec<C64>, PhaseTimes, WorkCounts)> {
+    if problems.is_empty() {
+        return Vec::new();
+    }
+    let nt = nt.clamp(1, problems.len());
+    if nt == 1 {
+        return problems
+            .iter()
+            .map(|&(pyr, con)| super::evaluate_on_tree_serial(pyr, con, opts))
+            .collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut collected = Vec::with_capacity(problems.len());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..nt)
+            .map(|_| {
+                let next = &next;
+                s.spawn(move || {
+                    let mut mine = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= problems.len() {
+                            break;
+                        }
+                        let (pyr, con) = problems[i];
+                        mine.push((i, super::evaluate_on_tree_serial(pyr, con, opts)));
+                    }
+                    mine
+                })
+            })
+            .collect();
+        for h in handles {
+            collected.extend(h.join().expect("pooled batch worker panicked"));
+        }
+    });
+    collected.sort_by_key(|(i, _)| *i);
+    collected.into_iter().map(|(_, r)| r).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -448,6 +477,43 @@ mod tests {
         assert_eq!(cs.p2p_pairs, cp.p2p_pairs);
         assert_eq!(cs.p2p_src_per_box, cp.p2p_src_per_box);
         assert_eq!(cs.m2l_per_level, cp.m2l_per_level);
+    }
+
+    #[test]
+    fn pooled_batch_is_bitwise_serial_in_input_order() {
+        let mut r = Pcg64::seed_from_u64(31);
+        let opts = FmmOptions {
+            cfg: FmmConfig {
+                p: 9,
+                levels_override: Some(2),
+                ..FmmConfig::default()
+            },
+            ..Default::default()
+        };
+        // heterogeneous sizes so workers finish out of order
+        let trees: Vec<(Pyramid, Connectivity)> = [500usize, 1500, 700, 1100, 600]
+            .iter()
+            .map(|&n| {
+                let (pts, gs) = workload::uniform_square(n, &mut r);
+                let pyr = Pyramid::build(&pts, &gs, 2);
+                let con = Connectivity::build(&pyr, 0.5);
+                (pyr, con)
+            })
+            .collect();
+        let refs: Vec<(&Pyramid, &Connectivity)> =
+            trees.iter().map(|(p, c)| (p, c)).collect();
+        let pooled = evaluate_trees_pooled(&refs, &opts, 3);
+        assert_eq!(pooled.len(), trees.len());
+        for ((pyr, con), (phi, _, counts)) in trees.iter().zip(&pooled) {
+            let (serial, _, cs) = super::super::evaluate_on_tree_serial(pyr, con, &opts);
+            assert_eq!(serial.len(), phi.len());
+            for (a, b) in serial.iter().zip(phi) {
+                assert_eq!(a.re, b.re);
+                assert_eq!(a.im, b.im);
+            }
+            assert_eq!(cs.p2p_pairs, counts.p2p_pairs);
+            assert_eq!(cs.n, counts.n);
+        }
     }
 
     #[test]

@@ -1,2 +1,6 @@
-//! GPU execution-cost simulator (placeholder — filled in by task #8).
+//! GPU execution-cost simulator standing in for the paper's Tesla C2075 /
+//! GTX 480 testbed: [`model`] predicts per-phase GPU times from measured
+//! [`crate::fmm::WorkCounts`], including the batched-dispatch accounting
+//! ([`model::GpuSim::batched_total_time`]) that charges one kernel launch
+//! per phase per batch *group* instead of per problem.
 pub mod model;

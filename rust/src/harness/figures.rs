@@ -2,9 +2,10 @@
 //! paper). All functions print the paper-style series to stdout and save a
 //! JSON record under `results/`.
 
+use crate::batch::{self, BatchOptions, BatchProblem};
 use crate::config::FmmConfig;
 use crate::expansion::Kernel;
-use crate::fmm::{Phase, PHASE_NAMES};
+use crate::fmm::{self, FmmOptions, Phase, PHASE_NAMES};
 use crate::gpusim::model::GpuSim;
 use crate::util::stats::{linear_fit, max_rel_error};
 use crate::workload::Distribution;
@@ -477,6 +478,64 @@ pub fn ablate_shift_kernels(_o: &HarnessOpts) -> SeriesTable {
         t.push(
             p as f64,
             vec![rec.secs() * 1e6, uns.secs() * 1e6, mat.secs() * 1e6],
+        );
+    }
+    t
+}
+
+/// Batched vs sequential throughput on the CPU engines (the `batch-bench`
+/// CLI command): K small problems dispatched through [`batch::run`]
+/// (grouped, pooled workers) against the same problems evaluated one
+/// after another through the per-problem multithreaded engine.
+pub fn batch_throughput(o: &HarnessOpts) -> SeriesTable {
+    let counts: &[usize] = if o.full { &[8, 32, 128, 512] } else { &[8, 32, 96] };
+    let n = if o.full { 4000 } else { 2000 };
+    let mut t = SeriesTable::new(
+        "Batched vs sequential throughput (K problems, parallel CPU engine)",
+        "K",
+        &["seq_s", "batch_s", "seq_prob_per_s", "batch_prob_per_s", "speedup"],
+    );
+    let fmm_opts = FmmOptions {
+        cfg: FmmConfig::default(),
+        kernel: Kernel::Harmonic,
+        symmetric_p2p: true,
+        threads: o.threads,
+    };
+    for &k in counts {
+        let problems: Vec<BatchProblem> = (0..k)
+            .map(|i| {
+                let (points, gammas) =
+                    workload_for(Distribution::Uniform, n, o.seed.wrapping_add(i as u64));
+                BatchProblem { points, gammas }
+            })
+            .collect();
+        // sequential: one full per-problem evaluation after another
+        let t0 = std::time::Instant::now();
+        for pr in &problems {
+            std::hint::black_box(fmm::evaluate(&pr.points, &pr.gammas, &fmm_opts));
+        }
+        let seq = t0.elapsed().as_secs_f64();
+        // batched: grouped dispatches through the pooled engine
+        let t0 = std::time::Instant::now();
+        let out = batch::run(
+            &problems,
+            &BatchOptions {
+                fmm: fmm_opts,
+                ..Default::default()
+            },
+        )
+        .expect("CPU batch engines cannot fail");
+        std::hint::black_box(&out);
+        let bat = t0.elapsed().as_secs_f64();
+        t.push(
+            k as f64,
+            vec![
+                seq,
+                bat,
+                k as f64 / seq.max(1e-12),
+                k as f64 / bat.max(1e-12),
+                seq / bat.max(1e-12),
+            ],
         );
     }
     t

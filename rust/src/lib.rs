@@ -16,6 +16,9 @@
 //! * the **multithreaded CPU engine** — every computational phase sharded
 //!   over `std::thread::scope` workers with writer-side (no-lock)
 //!   destination ownership ([`fmm::parallel`]);
+//! * the **batch execution subsystem** — many small FMM problems grouped
+//!   by compatible artifact shape and dispatched together, one pooled CPU
+//!   execution or one batched XLA invocation per group ([`batch`]);
 //! * a **GPU execution-cost simulator** ([`gpusim`]) standing in for the
 //!   paper's Tesla C2075 / GTX 480 testbed;
 //! * the **evaluation harness** regenerating every table and figure of the
@@ -27,6 +30,7 @@
 // are used pervasively throughout the crate.
 #![allow(clippy::needless_range_loop)]
 
+pub mod batch;
 pub mod bench;
 pub mod complex;
 pub mod config;

@@ -43,6 +43,13 @@ Validation & tools:
   run           one evaluation: --n --p --nd --dist uniform|normal|layer
                 [--sigma S] [--engine serial|parallel|xla] [--threads T]
                 [--check] [--log-kernel]
+  batch         evaluate --count K problems of --n points each in grouped
+                fixed-shape dispatches: [--nmin A --nmax B] (size spread —
+                heterogeneous shapes form multiple groups) [--batch-size G]
+                [--engine serial|parallel|xla] [--p --nd --dist --sigma
+                --seed --threads] [--check] (parity vs sequential runs)
+  batch-bench   batched vs sequential throughput table (--full --seed
+                --threads)
   artifacts     list available AOT artifacts (needs --features pjrt)
 
 The default engine is `parallel` with all available cores; --threads T caps
@@ -187,6 +194,20 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             println!("{}", harness::calibrate(&harness_opts(&args)?));
         }
         "run" => cmd_run(&args)?,
+        "batch" => cmd_batch(&args)?,
+        "batch-bench" => {
+            args.check_known(&["full", "seed", "gtx480", "threads"])?;
+            // unlike the figure harness (serial-baseline default), a
+            // throughput comparison defaults to all cores; an explicit
+            // --threads (including --threads 1) is honored as given
+            let mut o = harness_opts(&args)?;
+            if args.get("threads").is_none() {
+                o.threads = None;
+            }
+            let t = harness::batch_throughput(&o);
+            println!("{}", t.render());
+            t.save("batch_throughput");
+        }
         "artifacts" => cmd_artifacts()?,
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => bail!("unknown command '{other}'; see `fmm2d help`"),
@@ -233,7 +254,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     } else {
         Kernel::Harmonic
     };
-    let engine = args.get("engine").unwrap_or("parallel").to_string();
+    let engine = args.get_choice("engine", &["serial", "parallel", "xla"], "parallel")?;
     let threads = match engine.as_str() {
         // --engine serial forces the reference driver; otherwise --threads T
         // caps the workers (default: all cores)
@@ -280,7 +301,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             out.potentials
         }
         "xla" => run_xla_engine(&pts, &gs, &cfg, levels, p, kernel)?,
-        other => bail!("unknown --engine {other} (serial|parallel|xla)"),
+        other => unreachable!("get_choice admitted --engine {other}"),
     };
 
     if args.flag("check") {
@@ -301,6 +322,144 @@ fn cmd_run(args: &Args) -> Result<()> {
         };
         let err = max_rel_error(&a, &e, 1e-12);
         println!("max relative error vs direct (Eq. 5.3): {err:.3e}");
+    }
+    Ok(())
+}
+
+fn cmd_batch(args: &Args) -> Result<()> {
+    use fmm2d::batch::{self, BatchEngine, BatchOptions, BatchProblem};
+
+    args.check_known(&[
+        "count",
+        "n",
+        "nmin",
+        "nmax",
+        "batch-size",
+        "engine",
+        "p",
+        "nd",
+        "dist",
+        "sigma",
+        "seed",
+        "threads",
+        "check",
+    ])?;
+    let count: usize = args.get_or("count", 64)?;
+    let n: usize = args.get_or("n", 2000)?;
+    let nmin: usize = args.get_or("nmin", n)?;
+    let nmax: usize = args.get_or("nmax", n)?;
+    if count == 0 {
+        bail!("--count must be at least 1");
+    }
+    if nmin > nmax {
+        bail!("--nmin {nmin} exceeds --nmax {nmax}");
+    }
+    let p: usize = args.get_or("p", 17)?;
+    let nd: usize = args.get_or("nd", 45)?;
+    let seed: u64 = args.get_or("seed", 1)?;
+    let sigma: f64 = args.get_or("sigma", 0.1)?;
+    let dist = match args
+        .get_choice("dist", &["uniform", "normal", "layer"], "uniform")?
+        .as_str()
+    {
+        "normal" => Distribution::Normal { sigma },
+        "layer" => Distribution::Layer { sigma },
+        _ => Distribution::Uniform,
+    };
+    let engine = match args
+        .get_choice("engine", &["serial", "parallel", "xla"], "parallel")?
+        .as_str()
+    {
+        "serial" => BatchEngine::Serial,
+        "xla" => BatchEngine::Xla,
+        _ => BatchEngine::Parallel,
+    };
+    let threads = threads_arg(args, None)?;
+
+    // deterministic linear size spread over [nmin, nmax]
+    let problem_size = |i: usize| {
+        if count == 1 {
+            nmax
+        } else {
+            nmin + i * (nmax - nmin) / (count - 1)
+        }
+    };
+    let problems: Vec<BatchProblem> = (0..count)
+        .map(|i| {
+            let (points, gammas) =
+                harness::workload_for(dist, problem_size(i), seed.wrapping_add(i as u64));
+            BatchProblem { points, gammas }
+        })
+        .collect();
+
+    let opts = BatchOptions {
+        fmm: FmmOptions {
+            cfg: FmmConfig {
+                p,
+                n_per_box: nd,
+                ..FmmConfig::default()
+            },
+            kernel: Kernel::Harmonic,
+            symmetric_p2p: true,
+            threads,
+        },
+        engine,
+        max_group: args.get_or("batch-size", 0)?,
+    };
+    let out = batch::run(&problems, &opts)?;
+    let s = &out.stats;
+    println!(
+        "problems={} groups={} dispatches={} total_points={} engine={engine:?} threads={}",
+        s.n_problems,
+        s.n_groups,
+        s.dispatches,
+        out.counts.n,
+        opts.fmm.effective_threads(),
+    );
+    println!("{:<8} {:>12}", "phase", "seconds");
+    for (i, name) in PHASE_NAMES.iter().enumerate() {
+        println!("{name:<8} {:>12.6}", s.times.0[i]);
+    }
+    println!("{:<8} {:>12.6}", "wall", s.wall_s);
+    println!(
+        "throughput: {:.1} problems/s, {:.3e} points/s",
+        s.n_problems as f64 / s.wall_s.max(1e-12),
+        out.counts.n as f64 / s.wall_s.max(1e-12),
+    );
+    if engine == BatchEngine::Xla {
+        println!(
+            "xla: upload {:.6} execute {:.6} download {:.6}",
+            s.upload_s, s.execute_s, s.download_s
+        );
+    }
+
+    if args.flag("check") {
+        if nmax > 30_000 {
+            bail!("--check runs a sequential FMM per problem; use --nmax ≤ 30000");
+        }
+        // the CPU engines reduce in the serial driver's order (parity to
+        // 1e-12); the XLA artifacts reduce in padded fixed-shape order and
+        // legitimately deviate more (runtime_e2e accepts 1e-9 on this path)
+        let tol = if engine == BatchEngine::Xla { 1e-9 } else { 1e-12 };
+        let mut worst = 0.0f64;
+        for (i, pr) in problems.iter().enumerate() {
+            let seq = fmm::evaluate(
+                &pr.points,
+                &pr.gammas,
+                &FmmOptions {
+                    threads: Some(1),
+                    ..opts.fmm
+                },
+            );
+            for (a, b) in out.potentials[i].iter().zip(&seq.potentials) {
+                let d = (*a - *b).abs() / a.abs().max(1.0);
+                worst = worst.max(d);
+            }
+        }
+        println!("max relative deviation vs sequential per-problem runs: {worst:.3e}");
+        if worst > tol {
+            bail!("batch parity check failed: {worst:.3e} > {tol:.0e}");
+        }
     }
     Ok(())
 }

@@ -7,6 +7,18 @@
 //! pyramid layout (4^l boxes/level, contiguous children) is what makes a
 //! fixed-shape ABI possible — adaptivity lives in the *values* (centers,
 //! lists), never the shapes.
+//!
+//! The same property extends to **multi-problem batching**
+//! ([`pack_fmm_batch`]): because every input shape is a function of
+//! `(levels, p, pads)` alone, problems that agree on those numbers stack
+//! along a new leading `batch` axis into one padded tensor layout and
+//! execute in a single dispatch. Unused batch slots are *empty problems* —
+//! all-zero particle grids (mask 0) and all-`-1` gather lists — so a
+//! partially filled batch is numerically inert in the pad slots. Batched
+//! artifacts record their slot count in the manifest's `batch` field
+//! (`0`/absent = single-problem artifact); unpacking slices one problem's
+//! `[4^L, nmax]` grids out of the stacked output
+//! ([`unpack_potentials_slot`]).
 
 use crate::complex::C64;
 use crate::connectivity::Connectivity;
@@ -50,6 +62,12 @@ pub struct ArtifactMeta {
     pub nbtot: usize,
     /// `direct` artifacts: number of points.
     pub n_direct: usize,
+    /// Leading batch dimension of a batched artifact: the number of
+    /// problem slots stacked per dispatch (`0` = single-problem artifact,
+    /// the default when `.meta.json` has no `batch` field). The manifest's
+    /// `inputs`/`outputs` keep the *per-problem* shapes; the executable
+    /// consumes `[batch] + shape` ([`pack_fmm_batch`]).
+    pub batch: usize,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
 }
@@ -120,6 +138,7 @@ impl ArtifactMeta {
             ksp,
             nbtot,
             n_direct,
+            batch: j.get("batch").and_then(Json::as_usize).unwrap_or(0),
             inputs: specs_of(&j, "inputs")?,
             outputs: specs_of(&j, "outputs")?,
         })
@@ -174,6 +193,24 @@ pub struct PadRequirements {
     pub kfar: Vec<usize>,
     pub knear: usize,
     pub ksp: usize,
+}
+
+impl PadRequirements {
+    /// Widen to cover `other` as well — the pad envelope of a batch group.
+    /// Levels must match: the batch planner only groups problems with
+    /// identical level counts.
+    pub fn merge(&mut self, other: &PadRequirements) {
+        debug_assert_eq!(
+            self.levels, other.levels,
+            "pad merge across different level counts"
+        );
+        self.nmax = self.nmax.max(other.nmax);
+        for (a, b) in self.kfar.iter_mut().zip(&other.kfar) {
+            *a = (*a).max(*b);
+        }
+        self.knear = self.knear.max(other.knear);
+        self.ksp = self.ksp.max(other.ksp);
+    }
 }
 
 /// Measure the pads a pyramid + connectivity actually need.
@@ -329,6 +366,110 @@ pub fn pack_fmm(pyr: &Pyramid, con: &Connectivity, meta: &ArtifactMeta) -> Resul
     })
 }
 
+/// The packed inputs of one **batched** FMM dispatch: every input of the
+/// single-problem ABI stacked along a new leading axis of length `batch`.
+#[derive(Clone, Debug)]
+pub struct PackedFmmBatch {
+    pub tensors: Vec<Tensor>,
+    pub nmax: usize,
+    pub n_leaves: usize,
+    /// Slots in the stacked layout (≥ the number of real problems; the
+    /// tail slots are empty pad problems).
+    pub batch: usize,
+}
+
+/// Pack a shape-compatible group of problems into the stacked tensor
+/// layout of a batched artifact (`meta.batch ≥ problems.len()` slots).
+///
+/// Each problem is packed against the same per-problem shapes as
+/// [`pack_fmm`] (so all single-problem pad validation applies per member),
+/// then input `k` of every problem is concatenated along a new leading
+/// axis of length `meta.batch`. Unused slots are filled with *empty
+/// problems* — zeros for `f64` inputs (in particular an all-zero mask, so
+/// the slot contributes nothing) and `-1` for the gather lists (which
+/// gather nothing). A pad slot's outputs are garbage by construction and
+/// are never unpacked.
+pub fn pack_fmm_batch(
+    problems: &[(&Pyramid, &Connectivity)],
+    meta: &ArtifactMeta,
+) -> Result<PackedFmmBatch> {
+    if meta.kind != "fmm" {
+        bail!("artifact {} is not an fmm artifact", meta.name);
+    }
+    if meta.batch == 0 {
+        bail!(
+            "artifact {} has no batch dimension; re-emit a batched artifact \
+             (meta.json field 'batch') via aot.py",
+            meta.name
+        );
+    }
+    if problems.is_empty() {
+        bail!("pack_fmm_batch: empty problem group");
+    }
+    if problems.len() > meta.batch {
+        bail!(
+            "group of {} problems exceeds the {} batch slots of artifact {}",
+            problems.len(),
+            meta.batch,
+            meta.name
+        );
+    }
+    // Preallocate the stacked buffers as empty pad problems (f64 zeros,
+    // i32 -1), then pack each member directly into its slot — only one
+    // per-problem pack is alive at a time, so peak transient memory is the
+    // dispatch payload plus a single problem, not twice the payload.
+    let mut tensors: Vec<Tensor> = meta
+        .inputs
+        .iter()
+        .map(|spec| {
+            let numel = spec.numel();
+            let mut shape = Vec::with_capacity(spec.shape.len() + 1);
+            shape.push(meta.batch);
+            shape.extend_from_slice(&spec.shape);
+            match spec.dtype {
+                DType::F64 => Tensor::F64(vec![0.0; meta.batch * numel], shape),
+                DType::I32 => Tensor::I32(vec![-1; meta.batch * numel], shape),
+            }
+        })
+        .collect();
+    for (slot, &(pyr, con)) in problems.iter().enumerate() {
+        let pack = pack_fmm(pyr, con, meta)?;
+        for (dst, src) in tensors.iter_mut().zip(&pack.tensors) {
+            match (dst, src) {
+                (Tensor::F64(d, _), Tensor::F64(s, _)) => {
+                    d[slot * s.len()..(slot + 1) * s.len()].copy_from_slice(s);
+                }
+                (Tensor::I32(d, _), Tensor::I32(s, _)) => {
+                    d[slot * s.len()..(slot + 1) * s.len()].copy_from_slice(s);
+                }
+                _ => bail!("input dtype mismatch between manifest and packed tensors"),
+            }
+        }
+    }
+
+    Ok(PackedFmmBatch {
+        tensors,
+        nmax: meta.nmax,
+        n_leaves: meta.n_leaves(),
+        batch: meta.batch,
+    })
+}
+
+/// Scatter slot `slot` of the stacked `[batch, 4^L, nmax]` potential grids
+/// back to that problem's original particle order.
+pub fn unpack_potentials_slot(
+    pyr: &Pyramid,
+    nmax: usize,
+    n_leaves: usize,
+    slot: usize,
+    pot_re: &[f64],
+    pot_im: &[f64],
+) -> Vec<C64> {
+    let stride = n_leaves * nmax;
+    let off = slot * stride;
+    unpack_potentials(pyr, nmax, &pot_re[off..off + stride], &pot_im[off..off + stride])
+}
+
 /// Scatter the `[4^L, nmax]` potential grids back to the caller's original
 /// particle order.
 pub fn unpack_potentials(pyr: &Pyramid, nmax: usize, pot_re: &[f64], pot_im: &[f64]) -> Vec<C64> {
@@ -349,6 +490,10 @@ mod tests {
     use crate::workload;
 
     fn meta_for(levels: usize, p: usize, nmax: usize, kfar: &[usize], knear: usize, ksp: usize) -> ArtifactMeta {
+        meta_for_batched(levels, p, nmax, kfar, knear, ksp, 0)
+    }
+
+    fn meta_for_batched(levels: usize, p: usize, nmax: usize, kfar: &[usize], knear: usize, ksp: usize, batch: usize) -> ArtifactMeta {
         // build via the same JSON path aot.py uses
         let mut inputs = vec![
             ("pos_re", vec![boxes_at_level(levels), nmax]),
@@ -390,7 +535,7 @@ mod tests {
         let text = format!(
             "{{\"name\":\"test\",\"kind\":\"fmm\",\"levels\":{levels},\"p\":{p},\
              \"nmax\":{nmax},\"kfar\":[{kfar_s}],\"knear\":{knear},\"ksp\":{ksp},\
-             \"nbtot\":{},\"inputs\":[{}],\"outputs\":[]}}",
+             \"batch\":{batch},\"nbtot\":{},\"inputs\":[{}],\"outputs\":[]}}",
             (boxes_at_level(levels + 1) - 1) / 3,
             specs.join(",")
         );
@@ -461,6 +606,95 @@ mod tests {
         let out = unpack_potentials(&pyr, nmax, &pot_re, &pot_im);
         for (i, v) in out.iter().enumerate() {
             assert_eq!(v.re, i as f64);
+        }
+    }
+
+    #[test]
+    fn batch_pack_stacks_and_pads_empty_slots() {
+        let (pyr_a, con_a) = tree(500, 2, 10);
+        let (pyr_b, con_b) = tree(700, 2, 11);
+        let mut need = required_pads(&pyr_a, &con_a);
+        need.merge(&required_pads(&pyr_b, &con_b));
+        let meta = meta_for_batched(2, 8, need.nmax, &need.kfar, need.knear, need.ksp, 3);
+        let problems = [(&pyr_a, &con_a), (&pyr_b, &con_b)];
+        let packed = pack_fmm_batch(&problems, &meta).unwrap();
+        assert_eq!(packed.batch, 3);
+        assert_eq!(packed.tensors.len(), meta.inputs.len());
+        // every tensor gained a leading batch axis
+        for (t, s) in packed.tensors.iter().zip(&meta.inputs) {
+            assert_eq!(t.shape()[0], 3);
+            assert_eq!(&t.shape()[1..], s.shape.as_slice());
+        }
+        // the stacked mask counts both problems' particles, pad slot empty
+        if let Tensor::F64(mask, _) = &packed.tensors[4] {
+            let per_slot = packed.n_leaves * packed.nmax;
+            let a: f64 = mask[..per_slot].iter().sum();
+            let b: f64 = mask[per_slot..2 * per_slot].iter().sum();
+            let pad: f64 = mask[2 * per_slot..].iter().sum();
+            assert_eq!(a as usize, 500);
+            assert_eq!(b as usize, 700);
+            assert_eq!(pad, 0.0);
+        } else {
+            panic!("mask tensor has wrong dtype");
+        }
+        // pad-slot gather lists gather nothing
+        if let Tensor::I32(idx, _) = packed.tensors.last().unwrap() {
+            let per_slot = idx.len() / 3;
+            assert!(idx[2 * per_slot..].iter().all(|&v| v == -1));
+        } else {
+            panic!("m2p tensor has wrong dtype");
+        }
+    }
+
+    #[test]
+    fn batch_pack_rejects_unbatched_and_overfull() {
+        let (pyr, con) = tree(500, 2, 12);
+        let need = required_pads(&pyr, &con);
+        let single = meta_for(2, 8, need.nmax, &need.kfar, need.knear, need.ksp);
+        let problems = [(&pyr, &con)];
+        let err = pack_fmm_batch(&problems, &single).unwrap_err().to_string();
+        assert!(err.contains("batch"), "unexpected error: {err}");
+
+        let one_slot =
+            meta_for_batched(2, 8, need.nmax, &need.kfar, need.knear, need.ksp, 1);
+        let two = [(&pyr, &con), (&pyr, &con)];
+        let err = pack_fmm_batch(&two, &one_slot).unwrap_err().to_string();
+        assert!(err.contains("slots"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn batch_unpack_slices_one_slot() {
+        let (pyr, _) = tree(300, 2, 13);
+        let nmax = pyr.max_leaf_len();
+        let nl = pyr.n_leaves();
+        let stride = nl * nmax;
+        // slot 0 is garbage, slot 1 encodes original indices
+        let mut pot_re = vec![-7.0; 2 * stride];
+        for b in 0..nl {
+            for (i, q) in pyr.leaf(b).iter().enumerate() {
+                pot_re[stride + b * nmax + i] = q.orig as f64;
+            }
+        }
+        let pot_im = vec![0.0; 2 * stride];
+        let out = unpack_potentials_slot(&pyr, nmax, nl, 1, &pot_re, &pot_im);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(v.re, i as f64);
+        }
+    }
+
+    #[test]
+    fn pad_requirements_merge_is_envelope() {
+        let (pyr_a, con_a) = tree(500, 2, 14);
+        let (pyr_b, con_b) = tree(900, 2, 15);
+        let a = required_pads(&pyr_a, &con_a);
+        let b = required_pads(&pyr_b, &con_b);
+        let mut m = a.clone();
+        m.merge(&b);
+        assert_eq!(m.nmax, a.nmax.max(b.nmax));
+        assert_eq!(m.knear, a.knear.max(b.knear));
+        assert_eq!(m.ksp, a.ksp.max(b.ksp));
+        for ((ma, aa), bb) in m.kfar.iter().zip(&a.kfar).zip(&b.kfar) {
+            assert_eq!(*ma, (*aa).max(*bb));
         }
     }
 

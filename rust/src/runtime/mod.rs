@@ -5,6 +5,17 @@
 //! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
 //! HLO *text* is the interchange format (the crate's xla_extension 0.5.1
 //! rejects jax ≥ 0.5's 64-bit-id serialized protos).
+//!
+//! Two execute paths share one compile cache:
+//!
+//! * **single-problem** ([`Executable::run_fmm`]): one packed tree per
+//!   `execute` call;
+//! * **batched** ([`Executable::run_fmm_group`]): a whole shape-compatible
+//!   group of trees stacked along the leading `batch` axis of a batched
+//!   artifact ([`crate::packing::pack_fmm_batch`]) and executed in ONE
+//!   `run_raw` — the dispatch-amortization path that the batch subsystem
+//!   ([`crate::batch`]) routes through. Artifact selection widens the pad
+//!   requirements over every group member ([`Runtime::fmm_artifact_for_group`]).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -33,6 +44,13 @@ pub struct RunStats {
 impl RunStats {
     pub fn total(&self) -> f64 {
         self.upload_s + self.execute_s + self.download_s
+    }
+
+    /// Accumulate another invocation's stats (batch aggregation).
+    pub fn add(&mut self, other: &RunStats) {
+        self.upload_s += other.upload_s;
+        self.execute_s += other.execute_s;
+        self.download_s += other.download_s;
     }
 }
 
@@ -150,6 +168,35 @@ impl Runtime {
         con: &Connectivity,
     ) -> Result<std::rc::Rc<Executable>> {
         let need = packing::required_pads(pyr, con);
+        self.fmm_artifact_for_pads(&need, 0)
+    }
+
+    /// Smallest-fitting **batched** artifact for a whole dispatch group:
+    /// the pad requirements are widened over every member
+    /// ([`packing::PadRequirements::merge`]) and the artifact must carry
+    /// at least `problems.len()` batch slots.
+    pub fn fmm_artifact_for_group(
+        &mut self,
+        problems: &[(&Pyramid, &Connectivity)],
+    ) -> Result<std::rc::Rc<Executable>> {
+        if problems.is_empty() {
+            bail!("fmm_artifact_for_group: empty problem group");
+        }
+        let mut need = packing::required_pads(problems[0].0, problems[0].1);
+        for &(pyr, con) in &problems[1..] {
+            need.merge(&packing::required_pads(pyr, con));
+        }
+        self.fmm_artifact_for_pads(&need, problems.len())
+    }
+
+    /// Shared selection core: smallest padded-work artifact satisfying the
+    /// pad envelope, with `min_batch` batch slots (`0` = single-problem
+    /// artifacts only).
+    fn fmm_artifact_for_pads(
+        &mut self,
+        need: &packing::PadRequirements,
+        min_batch: usize,
+    ) -> Result<std::rc::Rc<Executable>> {
         let mut best: Option<(usize, std::rc::Rc<Executable>)> = None;
         for name in self.available() {
             if name.ends_with("_pallas") {
@@ -163,27 +210,34 @@ impl Runtime {
                 && m.knear >= need.knear
                 && m.ksp >= need.ksp
                 && m.kfar.len() == need.kfar.len()
-                && m.kfar.iter().zip(&need.kfar).all(|(h, w)| h >= w);
+                && m.kfar.iter().zip(&need.kfar).all(|(h, w)| h >= w)
+                && (if min_batch == 0 {
+                    m.batch == 0
+                } else {
+                    m.batch >= min_batch
+                });
             if !fits {
                 continue;
             }
             // padded-work proxy: the P2P pair tile dominates, then the
-            // shortcut gathers, then M2L
-            let score = m.knear * m.nmax * m.nmax
+            // shortcut gathers, then M2L (batched artifacts scale by slots)
+            let score = (m.knear * m.nmax * m.nmax
                 + 2 * m.ksp * m.nmax * m.nmax
-                + m.kfar.iter().sum::<usize>() * (m.p + 1);
+                + m.kfar.iter().sum::<usize>() * (m.p + 1))
+                * m.batch.max(1);
             if best.as_ref().map(|(s, _)| score < *s).unwrap_or(true) {
                 best = Some((score, e));
             }
         }
         best.map(|(_, e)| e).ok_or_else(|| {
             crate::anyhow!(
-                "no FMM artifact fits this tree (levels {}, nmax {}, knear {}, ksp {}); \
-                 emit a wider bucket via aot.py",
+                "no FMM artifact fits (levels {}, nmax {}, knear {}, ksp {}, \
+                 batch ≥ {}); emit a wider bucket via aot.py",
                 need.levels,
                 need.nmax,
                 need.knear,
-                need.ksp
+                need.ksp,
+                min_batch
             )
         })
     }
@@ -243,6 +297,35 @@ impl Executable {
         let (outs, stats) = self.run_raw(&packed.tensors)?;
         let pot = packing::unpack_potentials(pyr, packed.nmax, &outs[0], &outs[1]);
         Ok((pot, stats))
+    }
+
+    /// Batched FMM invocation: pack every tree of a shape-compatible group
+    /// into the stacked `[batch, ...]` tensor layout and execute a
+    /// **single** `run_raw` for the whole group — the per-dispatch
+    /// overhead (upload, launch, sync, download) is paid once per group
+    /// instead of once per problem. Returns per-problem potentials in the
+    /// group's member order, each in its caller's original particle order.
+    pub fn run_fmm_group(
+        &self,
+        problems: &[(&Pyramid, &Connectivity)],
+    ) -> Result<(Vec<Vec<C64>>, RunStats)> {
+        let packed = packing::pack_fmm_batch(problems, &self.meta)?;
+        let (outs, stats) = self.run_raw(&packed.tensors)?;
+        let pots = problems
+            .iter()
+            .enumerate()
+            .map(|(slot, &(pyr, _))| {
+                packing::unpack_potentials_slot(
+                    pyr,
+                    packed.nmax,
+                    packed.n_leaves,
+                    slot,
+                    &outs[0],
+                    &outs[1],
+                )
+            })
+            .collect();
+        Ok((pots, stats))
     }
 
     /// Direct-summation artifact invocation on `n = meta.n_direct` points.

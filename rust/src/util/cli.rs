@@ -77,6 +77,27 @@ impl Args {
             .map_err(|e| crate::anyhow!("--{name} {s}: {e}"))
     }
 
+    /// Enumerated-string option: returns `default` when absent, errors
+    /// when the given value is not one of `choices` (typos fail fast with
+    /// the valid alternatives listed).
+    pub fn get_choice(
+        &self,
+        name: &str,
+        choices: &[&str],
+        default: &str,
+    ) -> crate::util::error::Result<String> {
+        debug_assert!(choices.contains(&default));
+        let v = self.get(name).unwrap_or(default);
+        if choices.contains(&v) {
+            Ok(v.to_string())
+        } else {
+            Err(crate::anyhow!(
+                "--{name} {v}: expected one of {}",
+                choices.join("|")
+            ))
+        }
+    }
+
     /// Error out if any provided `--option` is not in `known` (flags included).
     pub fn check_known(&self, known: &[&str]) -> crate::util::error::Result<()> {
         for k in self.opts.keys().chain(self.flags.iter()) {
@@ -122,6 +143,26 @@ mod tests {
         assert!(a.check_known(&["n", "p"]).is_err());
         let b = Args::parse(&sv(&["--n", "1"])).unwrap();
         assert!(b.check_known(&["n"]).is_ok());
+    }
+
+    #[test]
+    fn choice_options() {
+        let a = Args::parse(&sv(&["--engine", "serial"])).unwrap();
+        assert_eq!(
+            a.get_choice("engine", &["serial", "parallel"], "parallel")
+                .unwrap(),
+            "serial"
+        );
+        assert_eq!(
+            a.get_choice("dist", &["uniform", "normal"], "uniform").unwrap(),
+            "uniform"
+        );
+        let b = Args::parse(&sv(&["--engine", "warp-drive"])).unwrap();
+        let err = b
+            .get_choice("engine", &["serial", "parallel"], "parallel")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("serial|parallel"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,169 @@
+//! Batch execution parity: potentials from batched runs must match
+//! sequential per-problem runs to ≤ 1e-12 relative error, across mixed
+//! problem sizes, both CPU engines, and shape-heterogeneous batches that
+//! force multiple dispatch groups.
+
+use fmm2d::batch::{self, BatchEngine, BatchOptions, BatchProblem};
+use fmm2d::config::FmmConfig;
+use fmm2d::fmm::{self, FmmOptions};
+use fmm2d::util::rng::Pcg64;
+use fmm2d::workload;
+
+fn problems_of(sizes: &[usize], seed: u64) -> Vec<BatchProblem> {
+    let mut r = Pcg64::seed_from_u64(seed);
+    sizes
+        .iter()
+        .map(|&n| {
+            let (points, gammas) = workload::uniform_square(n, &mut r);
+            BatchProblem { points, gammas }
+        })
+        .collect()
+}
+
+fn fmm_opts(p: usize, threads: Option<usize>) -> FmmOptions {
+    FmmOptions {
+        cfg: FmmConfig {
+            p,
+            ..FmmConfig::default()
+        },
+        threads,
+        ..FmmOptions::default()
+    }
+}
+
+/// Assert per-problem parity of a batched run against sequential
+/// single-problem serial-driver evaluations.
+fn assert_parity(problems: &[BatchProblem], opts: &BatchOptions) -> batch::BatchOutput {
+    let out = batch::run(problems, opts).expect("CPU batch engines cannot fail");
+    assert_eq!(out.potentials.len(), problems.len());
+    for (i, pr) in problems.iter().enumerate() {
+        let seq = fmm::evaluate(
+            &pr.points,
+            &pr.gammas,
+            &FmmOptions {
+                threads: Some(1),
+                ..opts.fmm
+            },
+        );
+        assert_eq!(out.potentials[i].len(), pr.points.len());
+        for (a, b) in out.potentials[i].iter().zip(&seq.potentials) {
+            assert!(
+                (*a - *b).abs() <= 1e-12 * a.abs().max(1.0),
+                "problem {i}: batched {a:?} vs sequential {b:?}"
+            );
+        }
+    }
+    out
+}
+
+// N_d = 45 ⇒ Eq. (5.2): sizes ≤ ~1100 build 2-level trees, the larger
+// ones 3-level trees — a mixed batch always spans two shape classes.
+const MIXED_SIZES: [usize; 6] = [600, 2200, 700, 2400, 650, 3000];
+
+#[test]
+fn parallel_engine_parity_on_heterogeneous_batch() {
+    let problems = problems_of(&MIXED_SIZES, 1);
+    let out = assert_parity(
+        &problems,
+        &BatchOptions {
+            fmm: fmm_opts(12, Some(3)),
+            engine: BatchEngine::Parallel,
+            max_group: 0,
+        },
+    );
+    assert!(
+        out.stats.n_groups >= 2,
+        "mixed sizes must form multiple groups, got {}",
+        out.stats.n_groups
+    );
+    assert_eq!(out.stats.dispatches, out.stats.n_groups);
+    assert_eq!(out.counts.n, MIXED_SIZES.iter().sum::<usize>());
+}
+
+#[test]
+fn serial_engine_parity_on_heterogeneous_batch() {
+    let problems = problems_of(&MIXED_SIZES, 2);
+    let out = assert_parity(
+        &problems,
+        &BatchOptions {
+            fmm: fmm_opts(10, Some(1)),
+            engine: BatchEngine::Serial,
+            max_group: 0,
+        },
+    );
+    assert!(out.stats.n_groups >= 2);
+}
+
+#[test]
+fn parity_survives_group_splitting() {
+    // --batch-size 2 forces the planner to split shape classes; results
+    // must be identical regardless of dispatch width
+    let problems = problems_of(&MIXED_SIZES, 3);
+    let narrow = assert_parity(
+        &problems,
+        &BatchOptions {
+            fmm: fmm_opts(10, Some(2)),
+            engine: BatchEngine::Parallel,
+            max_group: 2,
+        },
+    );
+    let wide = batch::run(
+        &problems,
+        &BatchOptions {
+            fmm: fmm_opts(10, Some(2)),
+            engine: BatchEngine::Parallel,
+            max_group: 0,
+        },
+    )
+    .unwrap();
+    assert!(narrow.stats.n_groups > wide.stats.n_groups);
+    for (a, b) in narrow.potentials.iter().zip(&wide.potentials) {
+        for (x, y) in a.iter().zip(b) {
+            assert!((*x - *y).abs() <= 1e-12 * x.abs().max(1.0));
+        }
+    }
+}
+
+#[test]
+fn aggregated_counts_are_the_sum_of_members() {
+    let problems = problems_of(&[800, 900, 2400], 4);
+    let out = batch::run(
+        &problems,
+        &BatchOptions {
+            fmm: fmm_opts(10, Some(2)),
+            engine: BatchEngine::Parallel,
+            max_group: 0,
+        },
+    )
+    .unwrap();
+    let mut n = 0;
+    let mut p2p = 0;
+    for pr in &problems {
+        let seq = fmm::evaluate(&pr.points, &pr.gammas, &fmm_opts(10, Some(1)));
+        n += seq.counts.n;
+        p2p += seq.counts.p2p_pairs;
+    }
+    assert_eq!(out.counts.n, n);
+    assert_eq!(out.counts.p2p_pairs, p2p);
+    assert_eq!(out.counts.p2m_particles, n);
+    // per-leaf vectors concatenate across the batch
+    assert_eq!(
+        out.counts.leaf_sizes.iter().map(|&x| x as usize).sum::<usize>(),
+        n
+    );
+}
+
+#[test]
+fn directed_p2p_batches_identically() {
+    // the directed (GPU-layout) near-field path through the batch engine
+    let problems = problems_of(&[700, 2300], 5);
+    let opts = BatchOptions {
+        fmm: FmmOptions {
+            symmetric_p2p: false,
+            ..fmm_opts(10, Some(2))
+        },
+        engine: BatchEngine::Parallel,
+        max_group: 0,
+    };
+    assert_parity(&problems, &opts);
+}

@@ -162,3 +162,31 @@ fn pallas_variant_matches_jnp_variant() {
         assert!((*x - *y).abs() < 1e-11 * x.abs().max(1.0));
     }
 }
+
+#[test]
+fn batched_group_matches_single_runs() {
+    // batched dispatch path: needs an artifact emitted with a `batch`
+    // manifest field (skipped gracefully until aot.py emits one)
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut r = Pcg64::seed_from_u64(41);
+    let (pa, ga) = workload::uniform_square(500, &mut r);
+    let (pb, gb) = workload::uniform_square(700, &mut r);
+    let pyr_a = Pyramid::build(&pa, &ga, 2);
+    let con_a = Connectivity::build(&pyr_a, 0.5);
+    let pyr_b = Pyramid::build(&pb, &gb, 2);
+    let con_b = Connectivity::build(&pyr_b, 0.5);
+    let group: Vec<(&Pyramid, &Connectivity)> = vec![(&pyr_a, &con_a), (&pyr_b, &con_b)];
+    let Ok(exe) = rt.fmm_artifact_for_group(&group) else {
+        eprintln!("SKIP: no batched artifact available — emit one via aot.py");
+        return;
+    };
+    let (pots, stats) = exe.run_fmm_group(&group).expect("batched execution");
+    assert_eq!(pots.len(), 2);
+    assert!(stats.execute_s > 0.0);
+    for ((pyr, con), pot) in group.iter().zip(&pots) {
+        let single = rt.fmm_artifact_for_tree(pyr, con).unwrap();
+        let (expect, _) = single.run_fmm(pyr, con).unwrap();
+        let err = rel_err(pot, &expect);
+        assert!(err < 1e-11, "batched vs single-problem run: {err:e}");
+    }
+}
