@@ -49,14 +49,40 @@ def lower_fmm(cfg: PackConfig, use_pallas: bool) -> str:
     return to_hlo_text(lowered)
 
 
+#: Problem slots per batched artifact. The Rust batch planner issues one
+#: dispatch per shape-compatible group (`rust/src/batch/`); a narrower
+#: group is padded with empty problems (zero masks, -1 gather lists) that
+#: are numerically inert. A group *wider* than this is NOT auto-split —
+#: artifact selection errors, so cap the group with `--batch-size 8` or
+#: emit a wider bucket here (see DESIGN.md §4).
+BATCH_SLOTS = 8
+
+
+def lower_fmm_batched(cfg: PackConfig, batch: int, use_pallas: bool) -> str:
+    """Lower the single-problem model vmapped over a leading `batch` axis.
+
+    Every input/output of the per-problem ABI gains one leading axis of
+    length `batch` — exactly the stacked layout `packing::pack_fmm_batch`
+    produces on the Rust side. The manifest keeps the *per-problem* shapes
+    and records the slot count in the `batch` field (the ABI contract of
+    `rust/src/packing/ArtifactMeta`)."""
+    fn = make_fmm_fn(cfg, use_pallas=use_pallas)
+    args = [
+        jax.ShapeDtypeStruct((batch,) + tuple(spec.shape), spec.dtype)
+        for spec in cfg.example_args()
+    ]
+    lowered = jax.jit(jax.vmap(fn)).lower(*args)
+    return to_hlo_text(lowered)
+
+
 def lower_direct(n: int) -> str:
     spec = jax.ShapeDtypeStruct((n,), jax.numpy.float64)
     lowered = jax.jit(model.direct_eval).lower(spec, spec, spec, spec)
     return to_hlo_text(lowered)
 
 
-def fmm_meta(name: str, cfg: PackConfig, variant: str = "jnp") -> dict:
-    return {
+def fmm_meta(name: str, cfg: PackConfig, variant: str = "jnp", batch: int = 0) -> dict:
+    meta = {
         "name": name,
         "kind": "fmm",
         # 'jnp': hot spots lowered from the pure-jnp reference — the fast
@@ -83,6 +109,11 @@ def fmm_meta(name: str, cfg: PackConfig, variant: str = "jnp") -> dict:
             {"name": "pot_im", "shape": [cfg.n_leaves, cfg.nmax], "dtype": "f64"},
         ],
     }
+    if batch:
+        # grouped artifact: per-problem shapes above, `batch` slots stacked
+        # along a leading axis (consumed by runtime::run_fmm_group)
+        meta["batch"] = batch
+    return meta
 
 
 def direct_meta(name: str, n: int) -> dict:
@@ -116,6 +147,10 @@ def emit(out_dir: Path, only: str | None = None, force: bool = False) -> int:
             # the TPU-design (Pallas) variant tracks the wide bucket only —
             # it exists for layer-parity validation, not fast CPU execution
             jobs.append((f"{name}_pallas", "fmm-pallas", cfg))
+            # grouped artifact for the batch subsystem: same wide bucket,
+            # BATCH_SLOTS problems stacked along a leading axis, manifest
+            # field "batch" (the Rust side already consumes it)
+            jobs.append((f"{name}_b{BATCH_SLOTS}", "fmm-batch", cfg))
     jobs.append((f"direct_n{DIRECT_N}", "direct", DIRECT_N))
     written = 0
     for name, kind, payload in jobs:
@@ -134,6 +169,9 @@ def emit(out_dir: Path, only: str | None = None, force: bool = False) -> int:
         elif kind == "fmm-pallas":
             text = lower_fmm(payload, use_pallas=True)
             meta = fmm_meta(name, payload, "pallas")
+        elif kind == "fmm-batch":
+            text = lower_fmm_batched(payload, BATCH_SLOTS, use_pallas=False)
+            meta = fmm_meta(name, payload, "jnp", batch=BATCH_SLOTS)
         else:
             text = lower_direct(payload)
             meta = direct_meta(name, payload)

@@ -1,0 +1,39 @@
+"""AOT emitter contracts: manifest shape of batched (grouped) artifacts.
+
+The Rust runtime consumes the `batch` manifest field
+(`rust/src/packing/ArtifactMeta`): per-problem `inputs`/`outputs` shapes
+plus a leading slot axis on the executable. These tests pin that ABI
+without paying for a full HLO lowering of every config.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import aot
+from compile.model import ARTIFACT_CONFIGS
+
+
+def test_single_problem_meta_has_no_batch_field():
+    cfg = ARTIFACT_CONFIGS["fmm_l2_p8"]
+    meta = aot.fmm_meta("fmm_l2_p8", cfg, "jnp")
+    assert "batch" not in meta
+
+
+def test_batched_meta_keeps_per_problem_shapes():
+    cfg = ARTIFACT_CONFIGS["fmm_l2_p8"]
+    meta = aot.fmm_meta("fmm_l2_p8_b8", cfg, "jnp", batch=aot.BATCH_SLOTS)
+    assert meta["batch"] == aot.BATCH_SLOTS
+    # the manifest records *per-problem* shapes; the slot axis lives only
+    # on the executable (pack_fmm_batch prepends it)
+    by_name = {s["name"]: s["shape"] for s in meta["inputs"]}
+    assert by_name["pos_re"] == [cfg.n_leaves, cfg.nmax]
+    assert by_name["near_idx"] == [cfg.n_leaves, cfg.knear]
+    assert meta["outputs"][0]["shape"] == [cfg.n_leaves, cfg.nmax]
+
+
+def test_batched_lowering_carries_leading_slot_axis():
+    cfg = ARTIFACT_CONFIGS["fmm_l2_p8"]
+    text = aot.lower_fmm_batched(cfg, aot.BATCH_SLOTS, use_pallas=False)
+    # the vmapped executable consumes [batch] + per-problem shape
+    assert f"f64[{aot.BATCH_SLOTS},{cfg.n_leaves},{cfg.nmax}]" in text

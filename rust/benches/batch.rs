@@ -46,36 +46,45 @@ fn main() {
         kernel: Kernel::Harmonic,
         symmetric_p2p: true,
         threads: None,
+        topo_threads: None,
     };
 
     // sequential baseline: per-problem evaluations through each engine
     run(&format!("sequential_serial_{k}x{n}"), &mut || {
         for pr in &problems {
-            black_box(fmm::evaluate(
-                &pr.points,
-                &pr.gammas,
-                &FmmOptions {
-                    threads: Some(1),
-                    ..fmm_opts
-                },
-            ));
+            black_box(
+                fmm::evaluate(
+                    &pr.points,
+                    &pr.gammas,
+                    &FmmOptions {
+                        threads: Some(1),
+                        ..fmm_opts
+                    },
+                )
+                .expect("bench problems are valid"),
+            );
         }
     });
     run(&format!("sequential_parallel_{k}x{n}"), &mut || {
         for pr in &problems {
-            black_box(fmm::evaluate(&pr.points, &pr.gammas, &fmm_opts));
+            black_box(
+                fmm::evaluate(&pr.points, &pr.gammas, &fmm_opts)
+                    .expect("bench problems are valid"),
+            );
         }
     });
 
     // batched dispatches
-    for (name, engine) in [
-        ("batch_serial", BatchEngine::Serial),
-        ("batch_parallel", BatchEngine::Parallel),
+    for (name, engine, overlap) in [
+        ("batch_serial", BatchEngine::Serial, true),
+        ("batch_parallel_seqprologue", BatchEngine::Parallel, false),
+        ("batch_parallel", BatchEngine::Parallel, true),
     ] {
         let opts = BatchOptions {
             fmm: fmm_opts,
             engine,
             max_group: 0,
+            overlap,
         };
         run(&format!("{name}_{k}x{n}"), &mut || {
             black_box(batch::run(&problems, &opts).expect("CPU batch engines cannot fail"));
@@ -88,6 +97,7 @@ fn main() {
             fmm: fmm_opts,
             engine: BatchEngine::Parallel,
             max_group,
+            overlap: true,
         };
         run(&format!("batch_parallel_{k}x{n}_g{max_group}"), &mut || {
             black_box(batch::run(&problems, &opts).expect("CPU batch engines cannot fail"));

@@ -46,7 +46,7 @@ fn xla_bench() {
     );
     for (levels, n) in [(2usize, 450usize), (3, 3_000), (4, 12_000)] {
         let (pts, gs) = harness::workload_for(Distribution::Uniform, n, 7);
-        let pyr = Pyramid::build(&pts, &gs, levels);
+        let pyr = Pyramid::build(&pts, &gs, levels).expect("bench sizes are valid");
         let con = Connectivity::build(&pyr, 0.5);
         let Ok(exe) = rt.fmm_artifact_for_tree(&pyr, &con) else { continue };
         let name = exe.meta.name.clone();
@@ -71,6 +71,7 @@ fn xla_bench() {
             kernel: Kernel::Harmonic,
             symmetric_p2p: true,
             threads: Some(1),
+            topo_threads: None,
         };
         let t = Instant::now();
         let (phi_leaf, _, _) = evaluate_on_tree(&pyr, &con, &opts);

@@ -93,24 +93,48 @@ fn main() {
         });
     }
 
-    // ---- topological phase at N = 100k
+    // ---- topological phase at N = 100k: serial engines, the GPU
+    // functional model, and the parallel topology engine per thread count
     {
         let (pts, gs) = workload::uniform_square(100_000, &mut rng);
         run("tree_build_cpu_100k_l5", &mut || {
-            black_box(Pyramid::build(&pts, &gs, 5));
+            black_box(Pyramid::build(&pts, &gs, 5).unwrap());
         });
         run("tree_build_gpumodel_100k_l5", &mut || {
-            black_box(Pyramid::build_with(
-                &pts,
-                &gs,
-                5,
-                PartitionEngine::GpuModel,
-            ));
+            black_box(
+                Pyramid::build_with(&pts, &gs, 5, PartitionEngine::GpuModel).unwrap(),
+            );
         });
-        let pyr = Pyramid::build(&pts, &gs, 5);
+        let pyr = Pyramid::build(&pts, &gs, 5).unwrap();
         run("connectivity_100k_l5", &mut || {
             black_box(Connectivity::build(&pyr, 0.5));
         });
+        let max_t = fmm2d::util::threadpool::available_threads();
+        let mut thread_counts = vec![2usize];
+        while *thread_counts.last().unwrap() * 2 <= max_t {
+            thread_counts.push(thread_counts.last().unwrap() * 2);
+        }
+        for &t in &thread_counts {
+            run(&format!("tree_build_parallel_100k_l5_t{t}"), &mut || {
+                black_box(
+                    Pyramid::build_threaded(&pts, &gs, 5, PartitionEngine::Cpu, t).unwrap(),
+                );
+            });
+            run(&format!("connectivity_parallel_100k_l5_t{t}"), &mut || {
+                black_box(Connectivity::build_threaded(&pyr, 0.5, t));
+            });
+            run(&format!("topology_build_100k_l5_t{t}"), &mut || {
+                black_box(
+                    fmm2d::topology::build(
+                        &pts,
+                        &gs,
+                        5,
+                        &fmm2d::topology::TopologyOptions::parallel(0.5, t),
+                    )
+                    .unwrap(),
+                );
+            });
+        }
     }
 
     // ---- whole computational phase (fixed tree): symmetric vs directed,
@@ -118,7 +142,7 @@ fn main() {
     // thread count up to the machine's parallelism
     {
         let (pts, gs) = workload::uniform_square(50_000, &mut rng);
-        let pyr = Pyramid::build(&pts, &gs, 5);
+        let pyr = Pyramid::build(&pts, &gs, 5).unwrap();
         let con = Connectivity::build(&pyr, 0.5);
         let max_t = fmm2d::util::threadpool::available_threads();
         let mut thread_counts = vec![1usize];
@@ -136,6 +160,7 @@ fn main() {
                     kernel: Kernel::Harmonic,
                     symmetric_p2p: sym,
                     threads: Some(t),
+                    topo_threads: None,
                 };
                 let engine = if t == 1 { "serial" } else { "parallel" };
                 run(&format!("fmm_compute_50k_{name}_{engine}_t{t}"), &mut || {

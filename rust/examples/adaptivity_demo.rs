@@ -5,10 +5,9 @@
 //! Run: `cargo run --release --example adaptivity_demo`
 
 use fmm2d::config::FmmConfig;
-use fmm2d::connectivity::Connectivity;
 use fmm2d::expansion::Kernel;
 use fmm2d::fmm::{evaluate_on_tree, FmmOptions};
-use fmm2d::tree::Pyramid;
+use fmm2d::topology::{self, TopologyOptions};
 use fmm2d::util::rng::Pcg64;
 use fmm2d::workload::Distribution;
 
@@ -32,8 +31,10 @@ fn main() {
     ] {
         let mut rng = Pcg64::seed_from_u64(1);
         let (pts, gs) = dist.generate(n, &mut rng);
-        let pyr = Pyramid::build(&pts, &gs, levels);
-        let con = Connectivity::build(&pyr, cfg.theta);
+        // the unified topology layer (parallel engine, all cores)
+        let topo = topology::build(&pts, &gs, levels, &TopologyOptions::default())
+            .expect("demo workloads satisfy the pyramid invariants");
+        let (pyr, con) = (&topo.pyramid, &topo.connectivity);
 
         // mesh diagnostics: average in-degrees and box eccentricity
         let nl = pyr.n_leaves() as f64;
@@ -49,9 +50,10 @@ fn main() {
             kernel: Kernel::Harmonic,
             symmetric_p2p: true,
             threads: None,
+            topo_threads: None,
         };
         let t = std::time::Instant::now();
-        let (_, _, _) = evaluate_on_tree(&pyr, &con, &opts);
+        let (_, _, _) = evaluate_on_tree(pyr, con, &opts);
         let ms = t.elapsed().as_secs_f64() * 1e3;
         if dist == Distribution::Uniform {
             uniform_time = ms;

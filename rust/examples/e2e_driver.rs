@@ -48,7 +48,7 @@ fn main() -> fmm2d::util::error::Result<()> {
     let mut rng = Pcg64::seed_from_u64(99);
     let (mut points, gammas) = workload::normal_cloud(n, 0.12, &mut rng);
     // bucketed executable selection: the smallest artifact whose pads fit
-    let pyr0 = Pyramid::build(&points, &gammas, levels);
+    let pyr0 = Pyramid::build(&points, &gammas, levels)?;
     let con0 = Connectivity::build(&pyr0, 0.5);
     let exe = rt.fmm_artifact_for_tree(&pyr0, &con0)?;
     println!(
@@ -65,6 +65,7 @@ fn main() -> fmm2d::util::error::Result<()> {
         kernel: Kernel::Harmonic,
         symmetric_p2p: true,
         threads: Some(1),
+        topo_threads: None,
     };
 
     let steps = 5;
@@ -74,7 +75,7 @@ fn main() -> fmm2d::util::error::Result<()> {
     println!("step   exec[ms]   total[ms]   |xla − serial|/|serial|");
     for step in 0..steps {
         // L3: topological phase
-        let pyr = Pyramid::build(&points, &gammas, levels);
+        let pyr = Pyramid::build(&points, &gammas, levels)?;
         let con = Connectivity::build(&pyr, opts.cfg.theta);
 
         // L2+L1 through PJRT

@@ -24,11 +24,13 @@ fn main() {
         kernel: Kernel::Harmonic,
         symmetric_p2p: true,
         // the multithreaded engine with all available cores (Some(1) would
-        // select the paper's serial reference driver)
+        // select the paper's serial reference driver); the topological
+        // phase follows suit through the parallel topology engine
         threads: None,
+        topo_threads: None,
     };
 
-    let out = evaluate(&points, &gammas, &opts);
+    let out = evaluate(&points, &gammas, &opts).expect("valid workload");
     println!("evaluated {n} potentials in {:.1} ms", out.times.total() * 1e3);
     for (i, name) in PHASE_NAMES.iter().enumerate() {
         println!("  {name:<8} {:>8.3} ms", out.times.0[i] * 1e3);

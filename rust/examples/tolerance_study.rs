@@ -22,8 +22,9 @@ fn measured_tol(kernel: Kernel, p: usize, pts: &[fmm2d::C64], gs: &[fmm2d::C64])
         kernel,
         symmetric_p2p: true,
         threads: None,
+        topo_threads: None,
     };
-    let out = evaluate(pts, gs, &opts);
+    let out = evaluate(pts, gs, &opts).expect("valid workload");
     let exact = direct::eval_symmetric(kernel, pts, gs);
     match kernel {
         Kernel::Harmonic => {

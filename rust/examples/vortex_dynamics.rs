@@ -17,7 +17,7 @@ use fmm2d::fmm::{evaluate, FmmOptions};
 use fmm2d::util::rng::Pcg64;
 
 fn induced_velocities(points: &[C64], gammas: &[C64], opts: &FmmOptions) -> Vec<C64> {
-    let out = evaluate(points, gammas, opts);
+    let out = evaluate(points, gammas, opts).expect("valid vortex workload");
     let scale = 1.0 / (2.0 * std::f64::consts::PI);
     out.potentials
         .iter()
@@ -59,6 +59,7 @@ fn main() {
         kernel: Kernel::Harmonic,
         symmetric_p2p: true,
         threads: None,
+        topo_threads: None,
     };
 
     let gamma0 = total_circulation(&gammas);

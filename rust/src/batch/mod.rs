@@ -17,11 +17,16 @@
 //! * [`BatchPlan::group`] groups problems by [`ProblemShape`] — `(levels,
 //!   p)` must agree exactly, `nmax` pads up to the widest member — and
 //!   splits classes at the configured `--batch-size`;
-//! * [`run`] builds the trees, plans, and dispatches every group through
-//!   the selected [`BatchEngine`]: the pooled multithreaded CPU engine
+//! * [`run`] plans, builds the trees through the unified topology layer
+//!   ([`crate::topology`]), and dispatches every group through the
+//!   selected [`BatchEngine`]: the pooled multithreaded CPU engine
 //!   ([`crate::fmm::parallel::evaluate_trees_pooled`] — one scoped worker
 //!   pool per group instead of per-problem spawn) or one batched XLA
-//!   execution per group (`pjrt` feature);
+//!   execution per group (`pjrt` feature). On the pooled engine the
+//!   topology prologue **overlaps** group execution by default
+//!   ([`BatchOptions::overlap`]): producer workers build the next group's
+//!   trees while the current group computes, so the last serial stage of
+//!   the batch path is off the critical path;
 //! * per-problem potentials come back in each caller's original particle
 //!   order, with aggregated [`WorkCounts`](crate::fmm::WorkCounts) (for
 //!   the GPU cost model's batched-dispatch accounting) and [`BatchStats`].

@@ -19,7 +19,11 @@ pub struct ProblemShape {
     pub levels: usize,
     /// Expansion order `p`.
     pub p: usize,
-    /// Largest leaf population — the problem's minimum `nmax` pad.
+    /// Largest leaf population — the problem's minimum `nmax` pad. Does
+    /// not affect grouping; [`crate::batch::run`] plans *before* any tree
+    /// exists (passing 0 here) and derives real pads from the built trees
+    /// at dispatch time, so only callers that plan from built trees carry
+    /// a meaningful value.
     pub nmax: usize,
 }
 
@@ -38,7 +42,9 @@ pub struct BatchGroup {
     pub key: GroupKey,
     /// Indices into the caller's problem list, in submission order.
     pub members: Vec<usize>,
-    /// Leaf-capacity pad of the group: the maximum member `nmax`.
+    /// Leaf-capacity pad of the group: the maximum member `nmax` (0 when
+    /// the shapes were planned before the trees existed — see
+    /// [`ProblemShape::nmax`]; dispatch derives real pads from the trees).
     pub nmax: usize,
 }
 

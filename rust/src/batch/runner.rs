@@ -6,12 +6,25 @@
 //! and everything downstream is dispatched **per group**: one pooled CPU
 //! execution or one batched XLA invocation per
 //! [`BatchGroup`](super::plan::BatchGroup), never one per problem.
+//!
+//! On the pooled CPU engine the prologue is **overlapped**
+//! ([`BatchOptions::overlap`], the default): the plan is computed up front
+//! — grouping only needs `(levels, p)`, and `levels` is a pure function of
+//! the point count (Eq. 5.2) — and a small pool of *producer* workers
+//! builds each problem's topology ([`crate::topology::build`]) in dispatch
+//! order while the group runner executes the computational phases of the
+//! groups whose trees are already complete. The per-problem results are
+//! unchanged (same trees, same reduction order); only the wall-clock
+//! interleaving differs.
 
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
 use std::time::Instant;
 
 use crate::complex::C64;
 use crate::connectivity::Connectivity;
 use crate::fmm::{self, FmmOptions, Phase, PhaseTimes, WorkCounts};
+use crate::topology::{self, TopologyOptions};
 use crate::tree::Pyramid;
 use crate::util::error::Result;
 
@@ -49,6 +62,11 @@ pub struct BatchOptions {
     /// Maximum problems per dispatch group (`0` = unbounded; the CLI's
     /// `--batch-size`).
     pub max_group: usize,
+    /// Overlap the topology prologue with group execution on the
+    /// [`BatchEngine::Parallel`] path (default `true`; the CLI's
+    /// `--no-overlap` disables it for A/B timing). The `Serial` engine
+    /// always runs the fully sequential prologue — it is the baseline.
+    pub overlap: bool,
 }
 
 impl Default for BatchOptions {
@@ -57,6 +75,7 @@ impl Default for BatchOptions {
             fmm: FmmOptions::default(),
             engine: BatchEngine::Parallel,
             max_group: 0,
+            overlap: true,
         }
     }
 }
@@ -111,52 +130,63 @@ pub fn run(problems: &[BatchProblem], opts: &BatchOptions) -> Result<BatchOutput
     let mut counts = WorkCounts::default();
     let mut times_per_problem: Vec<PhaseTimes> = vec![PhaseTimes::default(); problems.len()];
 
-    // ---- topological phase, per problem (kept on the CPU — the paper's
-    // own substitution for guaranteeing identical trees) ----------------
-    let mut trees: Vec<(Pyramid, Connectivity)> = Vec::with_capacity(problems.len());
-    for (i, pr) in problems.iter().enumerate() {
-        let levels = opts.fmm.cfg.levels_for(pr.points.len());
-        let t = Instant::now();
-        let pyr = Pyramid::build(&pr.points, &pr.gammas, levels);
-        times_per_problem[i].0[Phase::Sort as usize] = t.elapsed().as_secs_f64();
-        let t = Instant::now();
-        let con = Connectivity::build(&pyr, opts.fmm.cfg.theta);
-        times_per_problem[i].0[Phase::Connect as usize] = t.elapsed().as_secs_f64();
-        trees.push((pyr, con));
-    }
-
-    // ---- plan: group by compatible artifact shape ----------------------
-    let shapes: Vec<ProblemShape> = trees
+    // ---- plan first: grouping only needs (levels, p), and `levels` is a
+    // pure function of the point count (Eq. 5.2) — so the plan exists
+    // before any tree does, which is what lets the prologue overlap group
+    // execution. (Group `nmax` pads are refined from the actual trees at
+    // dispatch time; the planner is given 0.)
+    let shapes: Vec<ProblemShape> = problems
         .iter()
-        .map(|(pyr, _)| ProblemShape {
-            levels: pyr.levels,
+        .map(|pr| ProblemShape {
+            levels: opts.fmm.cfg.levels_for(pr.points.len()),
             p: opts.fmm.cfg.p,
-            nmax: pyr.max_leaf_len(),
+            nmax: 0,
         })
         .collect();
     let plan = BatchPlan::group(&shapes, opts.max_group);
     stats.n_groups = plan.n_groups();
 
-    // ---- dispatch: one execution per group -----------------------------
-    match opts.engine {
-        BatchEngine::Serial | BatchEngine::Parallel => {
-            for group in &plan.groups {
-                let members: Vec<(&Pyramid, &Connectivity)> = group
-                    .members
-                    .iter()
-                    .map(|&i| (&trees[i].0, &trees[i].1))
-                    .collect();
-                let results = dispatch_cpu(&members, opts);
-                stats.dispatches += 1;
-                for (&i, (phi_leaf, t, c)) in group.members.iter().zip(results) {
-                    potentials[i] = trees[i].0.unpermute(&phi_leaf);
-                    times_per_problem[i].add(&t);
-                    counts.absorb(&c);
+    // ---- topological phase + dispatch ---------------------------------
+    if opts.engine == BatchEngine::Parallel && opts.overlap && problems.len() > 1 {
+        run_overlapped(
+            problems,
+            &plan,
+            opts,
+            &mut potentials,
+            &mut counts,
+            &mut stats,
+            &mut times_per_problem,
+        )?;
+    } else {
+        // sequential prologue (the PR-2 shape): every topology is built —
+        // each with the full per-problem topology engine — before the
+        // first dispatch
+        let mut trees: Vec<(Pyramid, Connectivity)> = Vec::with_capacity(problems.len());
+        for (i, pr) in problems.iter().enumerate() {
+            let (tree, t) = build_problem_topology(pr, &opts.fmm, topo_threads_for(opts))?;
+            times_per_problem[i] = t;
+            trees.push(tree);
+        }
+        match opts.engine {
+            BatchEngine::Serial | BatchEngine::Parallel => {
+                for group in &plan.groups {
+                    let members: Vec<(&Pyramid, &Connectivity)> = group
+                        .members
+                        .iter()
+                        .map(|&i| (&trees[i].0, &trees[i].1))
+                        .collect();
+                    let results = dispatch_cpu(&members, opts);
+                    stats.dispatches += 1;
+                    for (&i, (phi_leaf, t, c)) in group.members.iter().zip(results) {
+                        potentials[i] = trees[i].0.unpermute(&phi_leaf);
+                        times_per_problem[i].add(&t);
+                        counts.absorb(&c);
+                    }
                 }
             }
-        }
-        BatchEngine::Xla => {
-            run_xla(&trees, &plan, &mut potentials, &mut counts, &mut stats)?
+            BatchEngine::Xla => {
+                run_xla(&trees, &plan, &mut potentials, &mut counts, &mut stats)?
+            }
         }
     }
 
@@ -169,6 +199,171 @@ pub fn run(problems: &[BatchProblem], opts: &BatchOptions) -> Result<BatchOutput
         counts,
         stats,
     })
+}
+
+/// Topology workers per problem on the sequential-prologue path: the
+/// serial batch engine keeps the fully serial baseline; the others follow
+/// the per-problem FMM options.
+fn topo_threads_for(opts: &BatchOptions) -> usize {
+    match opts.engine {
+        BatchEngine::Serial => 1,
+        _ => opts.fmm.effective_topo_threads(),
+    }
+}
+
+/// Build one problem's topology and return it with the Sort/Connect
+/// wall-clock recorded in the problem's [`PhaseTimes`] slots.
+fn build_problem_topology(
+    pr: &BatchProblem,
+    fmm_opts: &FmmOptions,
+    threads: usize,
+) -> Result<((Pyramid, Connectivity), PhaseTimes)> {
+    let levels = fmm_opts.cfg.levels_for(pr.points.len());
+    let topo = topology::build(
+        &pr.points,
+        &pr.gammas,
+        levels,
+        &TopologyOptions::parallel(fmm_opts.cfg.theta, threads),
+    )?;
+    let mut t = PhaseTimes::default();
+    t.0[Phase::Sort as usize] = topo.sort_s;
+    t.0[Phase::Connect as usize] = topo.connect_s;
+    Ok(((topo.pyramid, topo.connectivity), t))
+}
+
+/// The overlapped prologue of the pooled CPU path: producer workers claim
+/// problems off an atomic queue *in dispatch order* and build their
+/// topologies — the worker budget splits across producers, so a long
+/// batch of small problems builds one per producer while a short batch of
+/// large ones gets the parallel topology engine per problem — feeding the
+/// group runner through a bounded channel. The consumer dispatches each
+/// group as soon as its members' trees are complete, so group `g`'s
+/// computational phase overlaps group `g+1`'s topology construction.
+///
+/// Memory: every dispatched group's trees are dropped before the next
+/// group starts, and the bounded channel throttles producers whenever the
+/// consumer is busy *computing* — the common steady state, where peak
+/// residency is the current group plus the read-ahead window. While the
+/// consumer is instead blocked waiting on one slow tree it must keep
+/// draining the channel (the producer building that tree could otherwise
+/// deadlock on a full channel), so the worst case — one pathologically
+/// slow member early in a huge batch — degrades toward the sequential
+/// prologue's residency (every tree at once), never beyond it.
+#[allow(clippy::too_many_arguments)]
+fn run_overlapped(
+    problems: &[BatchProblem],
+    plan: &BatchPlan,
+    opts: &BatchOptions,
+    potentials: &mut [Vec<C64>],
+    counts: &mut WorkCounts,
+    stats: &mut BatchStats,
+    times_per_problem: &mut [PhaseTimes],
+) -> Result<()> {
+    type Built = ((Pyramid, Connectivity), PhaseTimes);
+
+    let order: Vec<usize> = plan
+        .groups
+        .iter()
+        .flat_map(|g| g.members.iter().copied())
+        .collect();
+    // split the topology worker budget (--topo-threads, defaulting to
+    // --threads) across producers: many small problems get one builder
+    // each; a short batch of large problems gets few producers that each
+    // run the parallel topology engine, so neither end regresses vs the
+    // sequential prologue
+    let topo_budget = opts.fmm.effective_topo_threads();
+    let producers = topo_budget.clamp(1, order.len().max(1));
+    let threads_per_problem = (topo_budget / producers).max(1);
+    let next = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
+    // bounded: producers block once they are 2×producers trees ahead of
+    // the consumer, which also bounds peak memory on huge batches
+    let (tx, rx) = mpsc::sync_channel::<(usize, Result<Built>)>(2 * producers);
+    let mut trees: Vec<Option<(Pyramid, Connectivity)>> =
+        (0..problems.len()).map(|_| None).collect();
+    let mut first_err = None;
+
+    std::thread::scope(|s| {
+        for _ in 0..producers {
+            let tx = tx.clone();
+            let (next, stop, order, fmm_opts) = (&next, &stop, &order, &opts.fmm);
+            s.spawn(move || loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let k = next.fetch_add(1, Ordering::Relaxed);
+                if k >= order.len() {
+                    break;
+                }
+                let i = order[k];
+                let built =
+                    build_problem_topology(&problems[i], fmm_opts, threads_per_problem);
+                if tx.send((i, built)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+
+        'groups: for group in &plan.groups {
+            // wait for this group's trees; later groups keep building
+            for &i in &group.members {
+                while trees[i].is_none() {
+                    match rx.recv() {
+                        Ok((j, Ok((tree, t)))) => {
+                            times_per_problem[j] = t;
+                            trees[j] = Some(tree);
+                        }
+                        Ok((_, Err(e))) => {
+                            stop.store(true, Ordering::Relaxed);
+                            first_err = Some(e);
+                            break 'groups;
+                        }
+                        Err(_) => {
+                            // every sender gone without delivering `i` —
+                            // defensive only: a producer *panic* re-raises
+                            // from thread::scope at scope exit (the caller
+                            // sees the panic, not this Err), so this arm
+                            // guards against queue/ordering bugs, not a
+                            // user-visible failure mode
+                            first_err =
+                                Some(crate::anyhow!("topology producers exited early"));
+                            break 'groups;
+                        }
+                    }
+                }
+            }
+            let members: Vec<(&Pyramid, &Connectivity)> = group
+                .members
+                .iter()
+                .map(|&i| {
+                    let (pyr, con) = trees[i].as_ref().expect("tree built above");
+                    (pyr, con)
+                })
+                .collect();
+            let results = dispatch_cpu(&members, opts);
+            stats.dispatches += 1;
+            for (&i, (phi_leaf, t, c)) in group.members.iter().zip(results) {
+                let (pyr, _) = trees[i].as_ref().expect("tree built above");
+                potentials[i] = pyr.unpermute(&phi_leaf);
+                times_per_problem[i].add(&t);
+                counts.absorb(&c);
+            }
+            // the group is answered: free its trees before the next one
+            for &i in &group.members {
+                trees[i] = None;
+            }
+        }
+        // blocking drain: unblocks any producer waiting on the bounded
+        // channel (each then observes `stop`, or the exhausted queue, and
+        // exits, dropping its sender); returns once all senders are gone
+        for _ in rx.iter() {}
+    });
+
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
 }
 
 /// CPU dispatch of one group (see [`BatchEngine`] for the selection rule).
@@ -273,6 +468,7 @@ mod tests {
             },
             engine,
             max_group,
+            overlap: true,
         }
     }
 
@@ -298,6 +494,47 @@ mod tests {
         // one shape class of 5, split 2+2+1
         assert_eq!(out.stats.n_groups, 3);
         assert_eq!(out.stats.dispatches, 3);
+    }
+
+    #[test]
+    fn overlapped_and_sequential_prologues_agree() {
+        let problems = problems_of(&[600, 2200, 700, 2400, 800], 7);
+        let overlapped = run(&problems, &opts_with(BatchEngine::Parallel, 0)).unwrap();
+        let sequential = run(
+            &problems,
+            &BatchOptions {
+                overlap: false,
+                ..opts_with(BatchEngine::Parallel, 0)
+            },
+        )
+        .unwrap();
+        assert_eq!(overlapped.stats.n_groups, sequential.stats.n_groups);
+        assert_eq!(overlapped.stats.dispatches, sequential.stats.dispatches);
+        assert_eq!(overlapped.counts.n, sequential.counts.n);
+        assert_eq!(overlapped.counts.p2p_pairs, sequential.counts.p2p_pairs);
+        for (a, b) in overlapped.potentials.iter().zip(&sequential.potentials) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                // identical trees + identical per-problem reduction order
+                assert_eq!(x.re, y.re);
+                assert_eq!(x.im, y.im);
+            }
+        }
+    }
+
+    #[test]
+    fn overlapped_prologue_surfaces_topology_errors() {
+        // 10 points cannot fill a 3-level pyramid: the producer's error
+        // must come back as a clean Result, not a panic or a hang
+        let mut problems = problems_of(&[600, 650], 8);
+        problems.push(BatchProblem {
+            points: problems[0].points[..10].to_vec(),
+            gammas: problems[0].gammas[..10].to_vec(),
+        });
+        let mut opts = opts_with(BatchEngine::Parallel, 0);
+        opts.fmm.cfg.levels_override = Some(3);
+        let err = run(&problems, &opts).unwrap_err().to_string();
+        assert!(err.contains("fewer particles"), "got: {err}");
     }
 
     #[test]

@@ -16,9 +16,22 @@
 //! of large trees is in the tens of millions of entries, and `Vec<Vec<_>>`
 //! overhead dominated profile traces in early versions (see EXPERIMENTS.md
 //! §Perf).
+//!
+//! The build runs serially ([`Connectivity::build`]) or sharded over scoped
+//! worker threads ([`Connectivity::build_threaded`]): per level, the
+//! destination boxes are classified in a two-pass count-then-fill CSR
+//! scheme — pass 1 classifies each worker's contiguous destination range
+//! into thread-local buffers with per-box degrees (computable
+//! independently per box from the previous level's strong list), an
+//! exclusive scan over the degrees fixes the global offsets, and pass 2
+//! fills the disjoint `data` slices lock-free. Both paths produce
+//! byte-identical [`AdjList`]s (`tests/topology_parity.rs`);
+//! [`crate::topology`] selects between them.
 
 use crate::geometry::{theta_criterion, theta_criterion_interchanged, Rect};
 use crate::tree::{boxes_at_level, first_child_of, Pyramid};
+use crate::util::threadpool::{ranges, scoped_map, split_lengths_mut};
+use std::ops::Range;
 
 /// Directed adjacency for one interaction kind at one level, CSR layout:
 /// sources of destination box `b` are `data[offsets[b]..offsets[b+1]]`.
@@ -200,6 +213,95 @@ impl Connectivity {
         }
     }
 
+    /// [`Connectivity::build`] sharded over `threads` scoped workers.
+    ///
+    /// Per level, the destination boxes are partitioned into contiguous
+    /// ranges; pass 1 classifies every range into thread-local CSR
+    /// fragments (per-box degrees + concatenated source lists — degrees
+    /// are computable independently per box because every box only reads
+    /// the *previous* level's strong list), an exclusive scan over the
+    /// degrees fixes the global offsets, and pass 2 copies the fragments
+    /// into their disjoint `data` slices lock-free. Classification order
+    /// within each box matches the serial loop, and fragments concatenate
+    /// in box order, so the resulting [`AdjList`]s are byte-identical to
+    /// [`Connectivity::build`] for every thread count
+    /// (`tests/topology_parity.rs`). `threads ≤ 1` falls back to the
+    /// serial path.
+    pub fn build_threaded(pyr: &Pyramid, theta: f64, threads: usize) -> Self {
+        // oversized requests clamp to the machine (see Pyramid::build_threaded)
+        let threads = threads.min(crate::util::threadpool::available_threads().max(1));
+        if threads <= 1 {
+            return Self::build(pyr, theta);
+        }
+        let levels = pyr.levels;
+        let mut checks = 0usize;
+
+        let mut weak: Vec<AdjList> = Vec::with_capacity(levels + 1);
+        weak.push(AdjList::with_boxes(1)); // root level: no weak pairs
+
+        let mut strong_prev = AdjList {
+            offsets: vec![0, 1],
+            data: vec![0],
+        };
+
+        for l in 1..=levels {
+            let nb = boxes_at_level(l);
+            let rects: &[Rect] = &pyr.rects[l];
+            let workers = threads.min(nb);
+            let shards: Vec<LevelShard> = if workers > 1 {
+                let strong_prev = &strong_prev;
+                scoped_map(ranges(nb, workers), |r| {
+                    classify_level_range(r, rects, strong_prev, theta)
+                })
+            } else {
+                vec![classify_level_range(0..nb, rects, &strong_prev, theta)]
+            };
+            checks += shards.iter().map(|sh| sh.checks).sum::<usize>();
+            let mut weak_frags = Vec::with_capacity(shards.len());
+            let mut strong_frags = Vec::with_capacity(shards.len());
+            for sh in shards {
+                weak_frags.push((sh.weak_deg, sh.weak));
+                strong_frags.push((sh.strong_deg, sh.strong));
+            }
+            weak.push(assemble_csr(nb, weak_frags, workers > 1));
+            strong_prev = assemble_csr(nb, strong_frags, workers > 1);
+        }
+
+        // Finest level: near/P2L/M2P split, same count-then-fill scheme.
+        let nb = boxes_at_level(levels);
+        let rects: &[Rect] = &pyr.rects[levels];
+        let workers = threads.min(nb);
+        let shards: Vec<FinestShard> = if workers > 1 {
+            let strong_prev = &strong_prev;
+            scoped_map(ranges(nb, workers), |r| {
+                classify_finest_range(r, rects, strong_prev, theta)
+            })
+        } else {
+            vec![classify_finest_range(0..nb, rects, &strong_prev, theta)]
+        };
+        checks += shards.iter().map(|sh| sh.checks).sum::<usize>();
+        let mut near_frags = Vec::with_capacity(shards.len());
+        let mut p2l_frags = Vec::with_capacity(shards.len());
+        let mut m2p_frags = Vec::with_capacity(shards.len());
+        for sh in shards {
+            near_frags.push((sh.near_deg, sh.near));
+            p2l_frags.push((sh.p2l_deg, sh.p2l));
+            m2p_frags.push((sh.m2p_deg, sh.m2p));
+        }
+        let near = assemble_csr(nb, near_frags, workers > 1);
+        let p2l = assemble_csr(nb, p2l_frags, workers > 1);
+        let m2p = assemble_csr(nb, m2p_frags, workers > 1);
+
+        Connectivity {
+            theta,
+            weak,
+            near,
+            p2l,
+            m2p,
+            checks,
+        }
+    }
+
     /// Total M2L interactions across all levels.
     pub fn total_weak(&self) -> usize {
         self.weak.iter().map(|w| w.len()).sum()
@@ -209,6 +311,146 @@ impl Connectivity {
     pub fn total_near(&self) -> usize {
         self.near.len()
     }
+}
+
+/// One worker's pass-1 output over a contiguous destination range of an
+/// interior level: thread-local CSR fragments (per-box degrees plus the
+/// concatenated sources, in box order) for the weak and strong lists.
+struct LevelShard {
+    weak_deg: Vec<u32>,
+    weak: Vec<u32>,
+    strong_deg: Vec<u32>,
+    strong: Vec<u32>,
+    checks: usize,
+}
+
+fn classify_level_range(
+    r: Range<usize>,
+    rects: &[Rect],
+    strong_prev: &AdjList,
+    theta: f64,
+) -> LevelShard {
+    let n = r.end - r.start;
+    let mut sh = LevelShard {
+        weak_deg: Vec::with_capacity(n),
+        weak: Vec::new(),
+        strong_deg: Vec::with_capacity(n),
+        strong: Vec::new(),
+        checks: 0,
+    };
+    for b in r {
+        let parent = b >> 2;
+        let (w0, s0) = (sh.weak.len(), sh.strong.len());
+        for &sp in strong_prev.sources(parent) {
+            let c0 = first_child_of(sp as usize);
+            for c in c0..c0 + 4 {
+                sh.checks += 1;
+                if well_separated(&rects[b], &rects[c], theta) {
+                    sh.weak.push(c as u32);
+                } else {
+                    sh.strong.push(c as u32);
+                }
+            }
+        }
+        sh.weak_deg.push((sh.weak.len() - w0) as u32);
+        sh.strong_deg.push((sh.strong.len() - s0) as u32);
+    }
+    sh
+}
+
+/// One worker's pass-1 output over a contiguous destination range of the
+/// finest level: near-field (P2P) plus the P2L/M2P shortcut lists.
+struct FinestShard {
+    near_deg: Vec<u32>,
+    near: Vec<u32>,
+    p2l_deg: Vec<u32>,
+    p2l: Vec<u32>,
+    m2p_deg: Vec<u32>,
+    m2p: Vec<u32>,
+    checks: usize,
+}
+
+fn classify_finest_range(
+    r: Range<usize>,
+    rects: &[Rect],
+    strong_prev: &AdjList,
+    theta: f64,
+) -> FinestShard {
+    let n = r.end - r.start;
+    let mut sh = FinestShard {
+        near_deg: Vec::with_capacity(n),
+        near: Vec::new(),
+        p2l_deg: Vec::with_capacity(n),
+        p2l: Vec::new(),
+        m2p_deg: Vec::with_capacity(n),
+        m2p: Vec::new(),
+        checks: 0,
+    };
+    for b in r {
+        let (n0, p0, m0) = (sh.near.len(), sh.p2l.len(), sh.m2p.len());
+        for &s in strong_prev.sources(b) {
+            let su = s as usize;
+            if su == b {
+                sh.near.push(s);
+                continue;
+            }
+            let (rb, rs) = (rects[b].radius(), rects[su].radius());
+            let d = (rects[b].center() - rects[su].center()).abs();
+            sh.checks += 1;
+            if theta_criterion_interchanged(rb, rs, d, theta) {
+                if rs > rb {
+                    sh.p2l.push(s);
+                } else if rs < rb {
+                    sh.m2p.push(s);
+                } else {
+                    sh.near.push(s);
+                }
+            } else {
+                sh.near.push(s);
+            }
+        }
+        sh.near_deg.push((sh.near.len() - n0) as u32);
+        sh.p2l_deg.push((sh.p2l.len() - p0) as u32);
+        sh.m2p_deg.push((sh.m2p.len() - m0) as u32);
+    }
+    sh
+}
+
+/// Below this many total entries the pass-2 fill runs serially: a scoped
+/// thread costs more to spawn/join than it saves on a small memcpy, and
+/// shallow levels have only a few dozen entries per fragment.
+const PARALLEL_FILL_MIN: usize = 1 << 16;
+
+/// Pass 2 of the count-then-fill build: an exclusive scan over the per-box
+/// degrees (in fragment = box order) fixes the offsets, then each worker's
+/// fragment is copied into its disjoint slice of the global `data` array —
+/// lock-free, since the fragments tile the array contiguously. Lists below
+/// [`PARALLEL_FILL_MIN`] entries copy serially regardless.
+fn assemble_csr(nb: usize, fragments: Vec<(Vec<u32>, Vec<u32>)>, parallel_fill: bool) -> AdjList {
+    let mut offsets = Vec::with_capacity(nb + 1);
+    offsets.push(0u32);
+    let mut acc = 0u32;
+    for (deg, _) in &fragments {
+        for &d in deg {
+            acc += d;
+            offsets.push(acc);
+        }
+    }
+    debug_assert_eq!(offsets.len(), nb + 1);
+    let mut data = vec![0u32; acc as usize];
+    let lens: Vec<usize> = fragments.iter().map(|(_, d)| d.len()).collect();
+    let slices = split_lengths_mut(&mut data, &lens);
+    if parallel_fill && acc as usize >= PARALLEL_FILL_MIN {
+        scoped_map(
+            slices.into_iter().zip(&fragments).collect(),
+            |(dst, (_, src)): (&mut [u32], &(Vec<u32>, Vec<u32>))| dst.copy_from_slice(src),
+        );
+    } else {
+        for (dst, (_, src)) in slices.into_iter().zip(&fragments) {
+            dst.copy_from_slice(src);
+        }
+    }
+    AdjList { offsets, data }
 }
 
 /// Undirected view of a directed adjacency: used by tests/CPU symmetry.
@@ -232,7 +474,7 @@ mod tests {
     fn build(n: usize, levels: usize, seed: u64) -> (Pyramid, Connectivity) {
         let mut r = Pcg64::seed_from_u64(seed);
         let (pts, gs) = workload::uniform_square(n, &mut r);
-        let pyr = Pyramid::build(&pts, &gs, levels);
+        let pyr = Pyramid::build(&pts, &gs, levels).unwrap();
         let con = Connectivity::build(&pyr, 0.5);
         (pyr, con)
     }
@@ -299,7 +541,7 @@ mod tests {
         // smaller's multipole is evaluated in the larger.
         let mut r = Pcg64::seed_from_u64(4);
         let (pts, gs) = workload::normal_cloud(4000, 0.1, &mut r);
-        let pyr = Pyramid::build(&pts, &gs, 4);
+        let pyr = Pyramid::build(&pts, &gs, 4).unwrap();
         let con = Connectivity::build(&pyr, 0.5);
         let mut p2l_pairs: Vec<(u32, u32)> = Vec::new();
         for b in 0..pyr.n_leaves() {
@@ -332,7 +574,7 @@ mod tests {
         // count may well *increase*).
         let mut r = Pcg64::seed_from_u64(5);
         let (pts, gs) = workload::uniform_square(2000, &mut r);
-        let pyr = Pyramid::build(&pts, &gs, 3);
+        let pyr = Pyramid::build(&pts, &gs, 3).unwrap();
         let loose = Connectivity::build(&pyr, 0.8);
         let tight = Connectivity::build(&pyr, 0.3);
         assert!(
@@ -361,6 +603,30 @@ mod tests {
         assert!(max_deg <= 80, "weak lists exploded: {max_deg}");
         // near field of an interior box on a uniform mesh: ≤ ~a dozen
         assert!(con.near.max_degree() <= 24, "{}", con.near.max_degree());
+    }
+
+    #[test]
+    fn threaded_build_is_byte_identical_to_serial() {
+        let mut r = Pcg64::seed_from_u64(8);
+        let (pts, gs) = workload::normal_cloud(3000, 0.08, &mut r);
+        let pyr = Pyramid::build(&pts, &gs, 3).unwrap();
+        let serial = Connectivity::build(&pyr, 0.5);
+        for nt in [2usize, 3, 7, 1000] {
+            let par = Connectivity::build_threaded(&pyr, 0.5, nt);
+            assert_eq!(serial.checks, par.checks, "t={nt}");
+            for l in 0..=pyr.levels {
+                assert_eq!(serial.weak[l].offsets, par.weak[l].offsets, "t={nt} l={l}");
+                assert_eq!(serial.weak[l].data, par.weak[l].data, "t={nt} l={l}");
+            }
+            for (name, a, b) in [
+                ("near", &serial.near, &par.near),
+                ("p2l", &serial.p2l, &par.p2l),
+                ("m2p", &serial.m2p, &par.m2p),
+            ] {
+                assert_eq!(a.offsets, b.offsets, "t={nt} {name}");
+                assert_eq!(a.data, b.data, "t={nt} {name}");
+            }
+        }
     }
 
     #[test]

@@ -126,10 +126,7 @@ impl WorkCounts {
         self.m2p_pairs += other.m2p_pairs;
         self.p2m_particles += other.p2m_particles;
         self.connect_checks += other.connect_checks;
-        self.sort.splits += other.sort.splits;
-        self.sort.elements_visited += other.sort.elements_visited;
-        self.sort.passes += other.sort.passes;
-        self.sort.scattered += other.sort.scattered;
+        self.sort.merge(&other.sort);
     }
 }
 
@@ -200,6 +197,12 @@ pub struct FmmOptions {
     /// serial reference driver, `Some(t)` uses `t` workers, `None` (the
     /// default) uses the machine's available parallelism.
     pub threads: Option<usize>,
+    /// Worker threads for the topological phase (Sort + Connect,
+    /// [`crate::topology`]): `Some(1)` forces the serial build, `Some(t)`
+    /// uses `t` workers, `None` (the default) follows `threads` — so
+    /// `--threads` accelerates the whole evaluation, not just the
+    /// computational phase. Both engines build bit-identical topologies.
+    pub topo_threads: Option<usize>,
 }
 
 impl Default for FmmOptions {
@@ -209,6 +212,7 @@ impl Default for FmmOptions {
             kernel: Kernel::Harmonic,
             symmetric_p2p: true,
             threads: None,
+            topo_threads: None,
         }
     }
 }
@@ -219,6 +223,20 @@ impl FmmOptions {
         self.threads
             .unwrap_or_else(crate::util::threadpool::available_threads)
             .max(1)
+    }
+
+    /// Resolved topology worker count (≥ 1): `topo_threads` if set,
+    /// otherwise the computational `threads` setting.
+    pub fn effective_topo_threads(&self) -> usize {
+        match self.topo_threads {
+            Some(t) => t.max(1),
+            None => self.effective_threads(),
+        }
+    }
+
+    /// The topology build configuration implied by these options.
+    pub fn topology_options(&self) -> crate::topology::TopologyOptions {
+        crate::topology::TopologyOptions::parallel(self.cfg.theta, self.effective_topo_threads())
     }
 }
 
@@ -259,29 +277,29 @@ impl CoeffPyramid {
 }
 
 /// Evaluate Eq. (1.1) at all source points with the adaptive FMM.
-pub fn evaluate(points: &[C64], gammas: &[C64], opts: &FmmOptions) -> FmmOutput {
+///
+/// The topological phase (Sort + Connect) goes through the unified
+/// [`crate::topology`] build layer with the engine selected by
+/// [`FmmOptions::effective_topo_threads`]; errors on inputs that cannot
+/// form a pyramid (e.g. an explicit `levels_override` that exceeds the
+/// particle count) instead of panicking.
+pub fn evaluate(
+    points: &[C64],
+    gammas: &[C64],
+    opts: &FmmOptions,
+) -> crate::util::error::Result<FmmOutput> {
     let levels = opts.cfg.levels_for(points.len());
-    let mut times = PhaseTimes::default();
+    let topo = crate::topology::build(points, gammas, levels, &opts.topology_options())?;
 
-    // ---- Sort: build the pyramid -------------------------------------
-    let t = Instant::now();
-    let pyr = Pyramid::build(points, gammas, levels);
-    times.0[Phase::Sort as usize] = t.elapsed().as_secs_f64();
+    let (phi_leaf, mut times, counts) = evaluate_on_tree(&topo.pyramid, &topo.connectivity, opts);
+    times.0[Phase::Sort as usize] = topo.sort_s;
+    times.0[Phase::Connect as usize] = topo.connect_s;
 
-    // ---- Connect ------------------------------------------------------
-    let t = Instant::now();
-    let con = Connectivity::build(&pyr, opts.cfg.theta);
-    times.0[Phase::Connect as usize] = t.elapsed().as_secs_f64();
-
-    let (phi_leaf, mut times2, counts) = evaluate_on_tree(&pyr, &con, opts);
-    times2.0[Phase::Sort as usize] = times.0[Phase::Sort as usize];
-    times2.0[Phase::Connect as usize] = times.0[Phase::Connect as usize];
-
-    FmmOutput {
-        potentials: pyr.unpermute(&phi_leaf),
-        times: times2,
+    Ok(FmmOutput {
+        potentials: topo.pyramid.unpermute(&phi_leaf),
+        times,
         counts,
-    }
+    })
 }
 
 /// The computational phase on a prebuilt tree: returns leaf-ordered
@@ -594,8 +612,9 @@ mod tests {
             kernel,
             symmetric_p2p: symmetric,
             threads: None,
+            topo_threads: None,
         };
-        let out = evaluate(&pts, &gs, &opts);
+        let out = evaluate(&pts, &gs, &opts).unwrap();
         let exact = direct::eval_symmetric(kernel, &pts, &gs);
         // Eq. (5.3): relative max error, on |Φ| for the harmonic kernel
         let (a, e): (Vec<f64>, Vec<f64>) = if kernel == Kernel::Harmonic {
@@ -661,7 +680,7 @@ mod tests {
             },
             ..Default::default()
         };
-        let sym = evaluate(&pts, &gs, &base);
+        let sym = evaluate(&pts, &gs, &base).unwrap();
         let dir = evaluate(
             &pts,
             &gs,
@@ -669,7 +688,8 @@ mod tests {
                 symmetric_p2p: false,
                 ..base
             },
-        );
+        )
+        .unwrap();
         for (a, b) in sym.potentials.iter().zip(&dir.potentials) {
             assert!((*a - *b).abs() < 1e-10 * a.abs().max(1.0));
         }
@@ -719,7 +739,7 @@ mod tests {
             },
             ..Default::default()
         };
-        let out = evaluate(&pts, &gs, &opts);
+        let out = evaluate(&pts, &gs, &opts).unwrap();
         let c = &out.counts;
         assert_eq!(c.n, 4000);
         assert_eq!(c.levels, 3);
@@ -747,7 +767,8 @@ mod tests {
                 symmetric_p2p: false,
                 ..opts
             },
-        );
+        )
+        .unwrap();
         assert_eq!(c.p2p_src_per_box, dir.counts.p2p_src_per_box);
         assert_eq!(c.p2p_pairs, dir.counts.p2p_pairs);
         // and both agree with the closed form Σ_b n_b·src_b − N
@@ -765,7 +786,7 @@ mod tests {
     fn structural_counts_match_measured() {
         let mut r = Pcg64::seed_from_u64(8);
         let (pts, gs) = workload::uniform_square(3000, &mut r);
-        let pyr = Pyramid::build(&pts, &gs, 3);
+        let pyr = Pyramid::build(&pts, &gs, 3).unwrap();
         let con = Connectivity::build(&pyr, 0.5);
         let opts = FmmOptions {
             cfg: FmmConfig {
@@ -797,9 +818,9 @@ mod tests {
         let mut r = Pcg64::seed_from_u64(9);
         let (pa, ga) = workload::uniform_square(1000, &mut r);
         let (pb, gb) = workload::uniform_square(2500, &mut r);
-        let pyr_a = Pyramid::build(&pa, &ga, 2);
+        let pyr_a = Pyramid::build(&pa, &ga, 2).unwrap();
         let con_a = Connectivity::build(&pyr_a, 0.5);
-        let pyr_b = Pyramid::build(&pb, &gb, 3);
+        let pyr_b = Pyramid::build(&pb, &gb, 3).unwrap();
         let con_b = Connectivity::build(&pyr_b, 0.5);
         let a = structural_counts(&pyr_a, &con_a, 8);
         let b = structural_counts(&pyr_b, &con_b, 12);
@@ -831,7 +852,8 @@ mod tests {
                 },
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         assert!(out.times.total() > 0.0);
         assert!(out.times.get(Phase::P2P) > 0.0);
         assert!(out.times.get(Phase::Sort) > 0.0);

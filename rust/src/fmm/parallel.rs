@@ -459,7 +459,7 @@ mod tests {
     fn parallel_matches_serial_on_a_small_tree() {
         let mut r = Pcg64::seed_from_u64(17);
         let (pts, gs) = workload::uniform_square(1500, &mut r);
-        let pyr = Pyramid::build(&pts, &gs, 2);
+        let pyr = Pyramid::build(&pts, &gs, 2).unwrap();
         let con = Connectivity::build(&pyr, 0.5);
         let opts = FmmOptions {
             cfg: FmmConfig {
@@ -495,7 +495,7 @@ mod tests {
             .iter()
             .map(|&n| {
                 let (pts, gs) = workload::uniform_square(n, &mut r);
-                let pyr = Pyramid::build(&pts, &gs, 2);
+                let pyr = Pyramid::build(&pts, &gs, 2).unwrap();
                 let con = Connectivity::build(&pyr, 0.5);
                 (pyr, con)
             })
@@ -520,7 +520,7 @@ mod tests {
     fn one_thread_degenerates_gracefully() {
         let mut r = Pcg64::seed_from_u64(23);
         let (pts, gs) = workload::uniform_square(600, &mut r);
-        let pyr = Pyramid::build(&pts, &gs, 2);
+        let pyr = Pyramid::build(&pts, &gs, 2).unwrap();
         let con = Connectivity::build(&pyr, 0.5);
         let opts = FmmOptions {
             cfg: FmmConfig {

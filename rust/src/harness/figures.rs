@@ -370,8 +370,10 @@ pub fn validate(o: &HarnessOpts) -> SeriesTable {
             kernel: Kernel::Harmonic,
             symmetric_p2p: true,
             threads: o.threads,
+            topo_threads: None,
         };
-        let out = crate::fmm::evaluate(&pts, &gs, &opts);
+        let out = crate::fmm::evaluate(&pts, &gs, &opts)
+            .expect("harness workloads satisfy the pyramid invariants");
         let approx: Vec<f64> = out.potentials.iter().map(|c| c.abs()).collect();
         let err = max_rel_error(&approx, &exact_abs, 1e-12);
         t.push(p as f64, vec![err, cfg.tolerance_estimate()]);
@@ -408,8 +410,10 @@ pub fn ablate_theta(o: &HarnessOpts) -> SeriesTable {
             kernel: Kernel::Harmonic,
             symmetric_p2p: true,
             threads: o.threads,
+            topo_threads: None,
         };
-        let out = crate::fmm::evaluate(&pts, &gs, &opts);
+        let out = crate::fmm::evaluate(&pts, &gs, &opts)
+            .expect("harness workloads satisfy the pyramid invariants");
         let tol = exact
             .as_ref()
             .map(|e| {
@@ -486,20 +490,32 @@ pub fn ablate_shift_kernels(_o: &HarnessOpts) -> SeriesTable {
 /// Batched vs sequential throughput on the CPU engines (the `batch-bench`
 /// CLI command): K small problems dispatched through [`batch::run`]
 /// (grouped, pooled workers) against the same problems evaluated one
-/// after another through the per-problem multithreaded engine.
+/// after another through the per-problem multithreaded engine. The batch
+/// is run twice — with the sequential prologue (PR-2 shape: every
+/// topology built before the first dispatch) and with the overlapped
+/// prologue (topology producers feeding the group runner) — so the gain
+/// of overlapping the last serial stage is visible per K.
 pub fn batch_throughput(o: &HarnessOpts) -> SeriesTable {
     let counts: &[usize] = if o.full { &[8, 32, 128, 512] } else { &[8, 32, 96] };
     let n = if o.full { 4000 } else { 2000 };
     let mut t = SeriesTable::new(
         "Batched vs sequential throughput (K problems, parallel CPU engine)",
         "K",
-        &["seq_s", "batch_s", "seq_prob_per_s", "batch_prob_per_s", "speedup"],
+        &[
+            "seq_s",
+            "batch_seqprologue_s",
+            "batch_overlap_s",
+            "overlap_prob_per_s",
+            "speedup_vs_seq",
+            "overlap_gain",
+        ],
     );
     let fmm_opts = FmmOptions {
         cfg: FmmConfig::default(),
         kernel: Kernel::Harmonic,
         symmetric_p2p: true,
         threads: o.threads,
+        topo_threads: None,
     };
     for &k in counts {
         let problems: Vec<BatchProblem> = (0..k)
@@ -509,13 +525,43 @@ pub fn batch_throughput(o: &HarnessOpts) -> SeriesTable {
                 BatchProblem { points, gammas }
             })
             .collect();
+        // warmup (untimed): touch every problem once so page faults,
+        // allocator growth and cache state don't bias whichever variant
+        // happens to run first
+        std::hint::black_box(
+            batch::run(
+                &problems,
+                &BatchOptions {
+                    fmm: fmm_opts,
+                    overlap: false,
+                    ..Default::default()
+                },
+            )
+            .expect("CPU batch engines cannot fail"),
+        );
         // sequential: one full per-problem evaluation after another
         let t0 = std::time::Instant::now();
         for pr in &problems {
-            std::hint::black_box(fmm::evaluate(&pr.points, &pr.gammas, &fmm_opts));
+            std::hint::black_box(
+                fmm::evaluate(&pr.points, &pr.gammas, &fmm_opts)
+                    .expect("harness workloads satisfy the pyramid invariants"),
+            );
         }
         let seq = t0.elapsed().as_secs_f64();
-        // batched: grouped dispatches through the pooled engine
+        // batched, sequential prologue (all trees before the first dispatch)
+        let t0 = std::time::Instant::now();
+        let out = batch::run(
+            &problems,
+            &BatchOptions {
+                fmm: fmm_opts,
+                overlap: false,
+                ..Default::default()
+            },
+        )
+        .expect("CPU batch engines cannot fail");
+        std::hint::black_box(&out);
+        let bat_seq = t0.elapsed().as_secs_f64();
+        // batched, overlapped prologue (the default)
         let t0 = std::time::Instant::now();
         let out = batch::run(
             &problems,
@@ -531,10 +577,77 @@ pub fn batch_throughput(o: &HarnessOpts) -> SeriesTable {
             k as f64,
             vec![
                 seq,
+                bat_seq,
                 bat,
-                k as f64 / seq.max(1e-12),
                 k as f64 / bat.max(1e-12),
                 seq / bat.max(1e-12),
+                bat_seq / bat.max(1e-12),
+            ],
+        );
+    }
+    t
+}
+
+/// The `topo-bench` CLI command: wall-clock of the topological phase —
+/// Sort and Connect, serial vs the parallel topology engine — against the
+/// computational phase per N, so the phase split (and what `--threads`
+/// buys on the prologue) is visible in BENCH output.
+pub fn topo_bench(o: &HarnessOpts) -> SeriesTable {
+    use crate::topology::{self, TopologyOptions};
+
+    let threads = o
+        .threads
+        .unwrap_or_else(crate::util::threadpool::available_threads)
+        .max(1);
+    let mut t = SeriesTable::new(
+        &format!(
+            "Topology pipeline: Sort/Connect serial vs parallel ({threads} workers) vs compute"
+        ),
+        "N",
+        &[
+            "sort_serial_s",
+            "sort_par_s",
+            "connect_serial_s",
+            "connect_par_s",
+            "compute_s",
+            "topo_share_serial",
+        ],
+    );
+    let max_pow = if o.full { 21 } else { 18 };
+    for n in (10..=max_pow).map(|k| 1usize << k) {
+        let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
+        let cfg = cfg_with(17, 45);
+        let levels = cfg.levels_for(n);
+        let serial = topology::build(&pts, &gs, levels, &TopologyOptions::serial(cfg.theta))
+            .expect("harness workloads satisfy the pyramid invariants");
+        let par = topology::build(
+            &pts,
+            &gs,
+            levels,
+            &TopologyOptions::parallel(cfg.theta, threads),
+        )
+        .expect("harness workloads satisfy the pyramid invariants");
+        let opts = FmmOptions {
+            cfg,
+            kernel: Kernel::Harmonic,
+            symmetric_p2p: true,
+            threads: o.threads,
+            topo_threads: None,
+        };
+        let t0 = std::time::Instant::now();
+        let (phi, _, _) = fmm::evaluate_on_tree(&serial.pyramid, &serial.connectivity, &opts);
+        std::hint::black_box(&phi);
+        let compute = t0.elapsed().as_secs_f64();
+        let topo_serial = serial.sort_s + serial.connect_s;
+        t.push(
+            n as f64,
+            vec![
+                serial.sort_s,
+                par.sort_s,
+                serial.connect_s,
+                par.connect_s,
+                compute,
+                topo_serial / (topo_serial + compute).max(1e-12),
             ],
         );
     }
@@ -585,6 +698,22 @@ pub fn calibrate(o: &HarnessOpts) -> String {
         "Other",
         100.0 * pair.gpu_transfer / total
     );
+    // measured CPU wall-clock per phase next to the model's prediction:
+    // the Sort/Connect rows used to be model-only, which left the
+    // topology half of the cost model uncalibratable against reality
+    let _ = writeln!(
+        out,
+        "measured CPU wall-clock vs cost-model prediction per phase (s):"
+    );
+    for (i, name) in PHASE_NAMES.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "  {name:<8} measured {:>10.6} | model {:>10.6} | cpu/model {:>6.1}",
+            pair.cpu.0[i],
+            pair.gpu.0[i],
+            pair.cpu.0[i] / pair.gpu.0[i].max(1e-12)
+        );
+    }
     out
 }
 

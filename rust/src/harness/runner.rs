@@ -4,10 +4,10 @@ use std::time::Instant;
 
 use crate::complex::C64;
 use crate::config::FmmConfig;
-use crate::connectivity::Connectivity;
 use crate::expansion::Kernel;
 use crate::fmm::{self, FmmOptions, Phase, PhaseTimes, WorkCounts};
 use crate::gpusim::model::GpuSim;
+use crate::topology;
 use crate::tree::{PartitionEngine, Pyramid};
 use crate::util::rng::Pcg64;
 use crate::workload::Distribution;
@@ -62,28 +62,29 @@ pub fn run_pair(
 ) -> RunPair {
     let levels = cfg.levels_for(points.len());
 
-    // CPU topological phase (measured with the CPU engine)
-    let t = Instant::now();
-    let pyr = Pyramid::build(points, gammas, levels);
-    let t_sort_cpu = t.elapsed().as_secs_f64();
-    let t = Instant::now();
-    let con = Connectivity::build(&pyr, cfg.theta);
-    let t_connect_cpu = t.elapsed().as_secs_f64();
-
-    // CPU computational phase (symmetric P2P; engine per `threads`)
+    // CPU topological phase (measured; the topology engine follows
+    // `threads`, so the serial harness baseline stays paper-faithful while
+    // `--threads` accelerates Sort/Connect along with the compute)
     let opts = FmmOptions {
         cfg: *cfg,
         kernel: Kernel::Harmonic,
         symmetric_p2p: true,
         threads,
+        topo_threads: None,
     };
+    let topo = topology::build(points, gammas, levels, &opts.topology_options())
+        .expect("harness workloads satisfy the pyramid invariants");
+    let (pyr, con) = (topo.pyramid, topo.connectivity);
+
+    // CPU computational phase (symmetric P2P; engine per `threads`)
     let (phi_leaf, mut cpu, mut counts) = fmm::evaluate_on_tree(&pyr, &con, &opts);
-    cpu.0[Phase::Sort as usize] = t_sort_cpu;
-    cpu.0[Phase::Connect as usize] = t_connect_cpu;
+    cpu.0[Phase::Sort as usize] = topo.sort_s;
+    cpu.0[Phase::Connect as usize] = topo.connect_s;
 
     // GPU sort statistics come from the functional model of Algorithm 3.2
     // (identical splits, CUDA-shaped work counters)
-    let pyr_gpu = Pyramid::build_with(points, gammas, levels, PartitionEngine::GpuModel);
+    let pyr_gpu = Pyramid::build_with(points, gammas, levels, PartitionEngine::GpuModel)
+        .expect("harness workloads satisfy the pyramid invariants");
     counts.sort = pyr_gpu.sort_stats;
     // the GPU P2P is directed (§4.2): its pair count is Σ_b n_b·src_b − n,
     // already captured by p2p_src_per_box/leaf_sizes which the model uses

@@ -5,7 +5,8 @@
 //!
 //! * the **topological phase** of the paper — asymmetric-adaptive pyramid
 //!   construction by median splits ([`tree`]) and θ-criterion connectivity
-//!   ([`connectivity`]);
+//!   ([`connectivity`]), unified behind the engine-selectable build layer
+//!   [`topology`] (serial reference or multicore, bit-identical outputs);
 //! * the **computational phase** — multipole/local expansion operators
 //!   ([`expansion`]), a serial CPU driver ([`fmm`]) and the O(N²) baseline
 //!   ([`direct`]);
@@ -44,6 +45,7 @@ pub mod harness;
 pub mod packing;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod topology;
 pub mod tree;
 pub mod util;
 pub mod workload;

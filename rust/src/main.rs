@@ -42,19 +42,26 @@ Validation & tools:
   calibrate     cost-model calibration vs the paper's headline ratios
   run           one evaluation: --n --p --nd --dist uniform|normal|layer
                 [--sigma S] [--engine serial|parallel|xla] [--threads T]
-                [--check] [--log-kernel]
+                [--topo-threads T] [--check] [--log-kernel]
   batch         evaluate --count K problems of --n points each in grouped
                 fixed-shape dispatches: [--nmin A --nmax B] (size spread —
                 heterogeneous shapes form multiple groups) [--batch-size G]
                 [--engine serial|parallel|xla] [--p --nd --dist --sigma
-                --seed --threads] [--check] (parity vs sequential runs)
-  batch-bench   batched vs sequential throughput table (--full --seed
-                --threads)
+                --seed --threads --topo-threads] [--no-overlap: build all
+                topologies before dispatching instead of overlapping them
+                with group execution] [--check] (parity vs sequential runs)
+  batch-bench   batched vs sequential throughput table, incl. overlapped
+                vs sequential topology prologue (--full --seed --threads)
+  topo-bench    Sort/Connect serial vs parallel vs compute per N (--full
+                --seed --threads)
   artifacts     list available AOT artifacts (needs --features pjrt)
 
 The default engine is `parallel` with all available cores; --threads T caps
-the worker count (T=1 falls back to the serial reference driver). The xla
-engine and `artifacts` need a binary built with `--features pjrt`.
+the worker count (T=1 falls back to the serial reference driver). The
+topological phase (Sort/Connect) follows --threads through the parallel
+topology engine; --topo-threads T overrides it independently (T=1 serial
+build, T=0 all cores). The xla engine and `artifacts` need a binary built
+with `--features pjrt`.
 ";
 
 fn main() {
@@ -80,6 +87,21 @@ fn threads_arg(args: &Args, default: Option<usize>) -> Result<Option<usize>> {
         None => default,
         Some(s) => match s.parse::<usize>().map_err(|e| fmm2d::anyhow!("--threads {s}: {e}"))? {
             0 => None,
+            t => Some(t),
+        },
+    })
+}
+
+/// `--topo-threads T` → Sort/Connect worker count: `T = 0` means "all
+/// cores", absent means "follow --threads" (`None`).
+fn topo_threads_arg(args: &Args) -> Result<Option<usize>> {
+    Ok(match args.get("topo-threads") {
+        None => None,
+        Some(s) => match s
+            .parse::<usize>()
+            .map_err(|e| fmm2d::anyhow!("--topo-threads {s}: {e}"))?
+        {
+            0 => Some(fmm2d::util::threadpool::available_threads()),
             t => Some(t),
         },
     })
@@ -208,6 +230,18 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             println!("{}", t.render());
             t.save("batch_throughput");
         }
+        "topo-bench" => {
+            args.check_known(&["full", "seed", "gtx480", "threads"])?;
+            // like batch-bench: a throughput comparison defaults to all
+            // cores; an explicit --threads is honored as given
+            let mut o = harness_opts(&args)?;
+            if args.get("threads").is_none() {
+                o.threads = None;
+            }
+            let t = harness::topo_bench(&o);
+            println!("{}", t.render());
+            t.save("topo_bench");
+        }
         "artifacts" => cmd_artifacts()?,
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => bail!("unknown command '{other}'; see `fmm2d help`"),
@@ -236,7 +270,7 @@ fn cmd_artifacts() -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     args.check_known(&[
         "n", "p", "nd", "dist", "sigma", "engine", "check", "seed", "log-kernel", "levels",
-        "threads",
+        "threads", "topo-threads",
     ])?;
     let n: usize = args.get_or("n", 10_000)?;
     let p: usize = args.get_or("p", 17)?;
@@ -261,6 +295,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         "serial" => Some(1),
         _ => threads_arg(args, None)?,
     };
+    // topology workers follow the engine unless --topo-threads overrides
+    let topo_threads = topo_threads_arg(args)?;
 
     let (pts, mut gs) = harness::workload_for(dist, n, seed);
     if kernel == Kernel::Log {
@@ -282,6 +318,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         kernel,
         symmetric_p2p: true,
         threads,
+        topo_threads,
     };
     println!(
         "n={n} p={p} N_d={nd} levels={levels} dist={} kernel={kernel:?} engine={engine} \
@@ -292,7 +329,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 
     let potentials = match engine.as_str() {
         "serial" | "parallel" => {
-            let out = fmm::evaluate(&pts, &gs, &opts);
+            let out = fmm::evaluate(&pts, &gs, &opts)?;
             println!("{:<8} {:>12} ", "phase", "seconds");
             for (i, name) in PHASE_NAMES.iter().enumerate() {
                 println!("{name:<8} {:>12.6}", out.times.0[i]);
@@ -300,7 +337,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             println!("{:<8} {:>12.6}", "total", out.times.total());
             out.potentials
         }
-        "xla" => run_xla_engine(&pts, &gs, &cfg, levels, p, kernel)?,
+        "xla" => run_xla_engine(&pts, &gs, &opts, levels, p)?,
         other => unreachable!("get_choice admitted --engine {other}"),
     };
 
@@ -342,6 +379,8 @@ fn cmd_batch(args: &Args) -> Result<()> {
         "sigma",
         "seed",
         "threads",
+        "topo-threads",
+        "no-overlap",
         "check",
     ])?;
     let count: usize = args.get_or("count", 64)?;
@@ -375,6 +414,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
         _ => BatchEngine::Parallel,
     };
     let threads = threads_arg(args, None)?;
+    let topo_threads = topo_threads_arg(args)?;
 
     // deterministic linear size spread over [nmin, nmax]
     let problem_size = |i: usize| {
@@ -402,9 +442,11 @@ fn cmd_batch(args: &Args) -> Result<()> {
             kernel: Kernel::Harmonic,
             symmetric_p2p: true,
             threads,
+            topo_threads,
         },
         engine,
         max_group: args.get_or("batch-size", 0)?,
+        overlap: !args.flag("no-overlap"),
     };
     let out = batch::run(&problems, &opts)?;
     let s = &out.stats;
@@ -450,7 +492,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
                     threads: Some(1),
                     ..opts.fmm
                 },
-            );
+            )?;
             for (a, b) in out.potentials[i].iter().zip(&seq.potentials) {
                 let d = (*a - *b).abs() / a.abs().max(1.0);
                 worst = worst.max(d);
@@ -468,21 +510,21 @@ fn cmd_batch(args: &Args) -> Result<()> {
 fn run_xla_engine(
     pts: &[fmm2d::C64],
     gs: &[fmm2d::C64],
-    cfg: &FmmConfig,
+    opts: &FmmOptions,
     levels: usize,
     p: usize,
-    kernel: Kernel,
 ) -> Result<Vec<fmm2d::C64>> {
-    use fmm2d::connectivity::Connectivity;
     use fmm2d::runtime::Runtime;
-    use fmm2d::tree::Pyramid;
+    use fmm2d::topology;
 
-    if kernel != Kernel::Harmonic {
+    if opts.kernel != Kernel::Harmonic {
         bail!("the XLA artifacts are compiled for the harmonic kernel");
     }
     let mut rt = Runtime::new(None)?;
-    let pyr = Pyramid::build(pts, gs, levels);
-    let con = Connectivity::build(&pyr, cfg.theta);
+    // the topological phase honors --threads/--topo-threads like the CPU
+    // engines (the artifact only runs the computational phase)
+    let topo = topology::build(pts, gs, levels, &opts.topology_options())?;
+    let (pyr, con) = (topo.pyramid, topo.connectivity);
     let exe = rt.fmm_artifact_for_tree(&pyr, &con)?;
     if exe.meta.p != p {
         eprintln!(
@@ -503,10 +545,9 @@ fn run_xla_engine(
 fn run_xla_engine(
     _pts: &[fmm2d::C64],
     _gs: &[fmm2d::C64],
-    _cfg: &FmmConfig,
+    _opts: &FmmOptions,
     _levels: usize,
     _p: usize,
-    _kernel: Kernel,
 ) -> Result<Vec<fmm2d::C64>> {
     bail!(
         "--engine xla needs the PJRT runtime, which is disabled in this \

@@ -545,7 +545,7 @@ mod tests {
     fn tree(n: usize, levels: usize, seed: u64) -> (Pyramid, Connectivity) {
         let mut r = Pcg64::seed_from_u64(seed);
         let (pts, gs) = workload::uniform_square(n, &mut r);
-        let pyr = Pyramid::build(&pts, &gs, levels);
+        let pyr = Pyramid::build(&pts, &gs, levels).unwrap();
         let con = Connectivity::build(&pyr, 0.5);
         (pyr, con)
     }

@@ -1,0 +1,187 @@
+//! The unified **topology build layer**: one entry point for the whole
+//! topological phase of the algorithm — Sort (pyramid partitioning,
+//! [`crate::tree`]) followed by Connect (θ-classification,
+//! [`crate::connectivity`]) — with an engine selector.
+//!
+//! The paper's headline claim is that *all* steps run on the GPU,
+//! "including the initial phase which assembles the topological
+//! information" (§3.2, §4.1–4.3). On the CPU side of this reproduction the
+//! equivalent requirement is that the topological phase must scale with
+//! `--threads` like the computational phase does — otherwise it is the
+//! serial prologue that bounds end-to-end and batch throughput. This
+//! module owns that choice:
+//!
+//! * [`TopologyEngine::Serial`] — the reference path: serial quickselect
+//!   partitioning and the serial CSR classification (the paper's CPU code,
+//!   §4.1/§4.3);
+//! * [`TopologyEngine::Parallel`] — both halves sharded over scoped worker
+//!   threads ([`Pyramid::build_threaded`],
+//!   [`Connectivity::build_threaded`]), bit-identical to the serial path
+//!   (`tests/topology_parity.rs`);
+//! * the existing [`PartitionEngine`] selects the partitioning *model*
+//!   (CPU quickselect vs. the functional model of the CUDA two-pass
+//!   scatter sort whose [`crate::tree::partition::SortStats`] feed the GPU
+//!   cost simulator) orthogonally to the execution engine.
+//!
+//! [`build`] also measures the wall-clock of each half, so callers (the
+//! drivers, the batch runner, the harness) report Sort/Connect timings
+//! from one place instead of re-instrumenting the two calls at every call
+//! site.
+
+use std::time::Instant;
+
+use crate::complex::C64;
+use crate::connectivity::Connectivity;
+use crate::tree::{PartitionEngine, Pyramid};
+use crate::util::error::Result;
+
+/// Execution engine of the topological phase.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TopologyEngine {
+    /// The serial reference path (the paper's single-threaded CPU code).
+    Serial,
+    /// Sort and Connect sharded over scoped worker threads; output
+    /// bit-identical to `Serial`.
+    #[default]
+    Parallel,
+}
+
+/// Options of one topology build.
+#[derive(Clone, Copy, Debug)]
+pub struct TopologyOptions {
+    /// Well-separatedness parameter θ of the Connect classification.
+    pub theta: f64,
+    pub engine: TopologyEngine,
+    /// Partitioning model of the Sort half (CPU quickselect or the GPU
+    /// functional model feeding the cost simulator).
+    pub partition: PartitionEngine,
+    /// Worker threads for [`TopologyEngine::Parallel`]: `None` uses all
+    /// available cores. Ignored by `Serial`.
+    pub threads: Option<usize>,
+}
+
+impl Default for TopologyOptions {
+    fn default() -> Self {
+        Self {
+            theta: 0.5,
+            engine: TopologyEngine::Parallel,
+            partition: PartitionEngine::Cpu,
+            threads: None,
+        }
+    }
+}
+
+impl TopologyOptions {
+    /// The serial reference configuration at the given θ.
+    pub fn serial(theta: f64) -> Self {
+        Self {
+            theta,
+            engine: TopologyEngine::Serial,
+            ..Self::default()
+        }
+    }
+
+    /// The parallel configuration at the given θ with an explicit worker
+    /// count (`t ≤ 1` degenerates to the serial path).
+    pub fn parallel(theta: f64, threads: usize) -> Self {
+        Self {
+            theta,
+            engine: if threads > 1 {
+                TopologyEngine::Parallel
+            } else {
+                TopologyEngine::Serial
+            },
+            threads: Some(threads.max(1)),
+            ..Self::default()
+        }
+    }
+
+    /// Resolved worker count (≥ 1): 1 for `Serial`, otherwise `threads`
+    /// or the machine's available parallelism.
+    pub fn effective_threads(&self) -> usize {
+        match self.engine {
+            TopologyEngine::Serial => 1,
+            TopologyEngine::Parallel => self
+                .threads
+                .unwrap_or_else(crate::util::threadpool::available_threads)
+                .max(1),
+        }
+    }
+}
+
+/// A fully built topology: the pyramid, its connectivity, and the measured
+/// wall-clock of each half (the Sort and Connect rows of Table 5.1).
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub pyramid: Pyramid,
+    pub connectivity: Connectivity,
+    /// Measured wall-clock of the Sort half (seconds).
+    pub sort_s: f64,
+    /// Measured wall-clock of the Connect half (seconds).
+    pub connect_s: f64,
+}
+
+/// Build the full topology of one problem: Sort then Connect through the
+/// selected engine. Errors (instead of panicking) on inputs that cannot
+/// form a pyramid — mismatched array lengths, `levels == 0`, fewer
+/// particles than leaf boxes — so CLI callers surface clean messages.
+pub fn build(
+    points: &[C64],
+    gammas: &[C64],
+    levels: usize,
+    opts: &TopologyOptions,
+) -> Result<Topology> {
+    let nt = opts.effective_threads();
+    let t = Instant::now();
+    let pyramid = Pyramid::build_threaded(points, gammas, levels, opts.partition, nt)?;
+    let sort_s = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    let connectivity = Connectivity::build_threaded(&pyramid, opts.theta, nt);
+    let connect_s = t.elapsed().as_secs_f64();
+    Ok(Topology {
+        pyramid,
+        connectivity,
+        sort_s,
+        connect_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use crate::workload;
+
+    #[test]
+    fn engines_agree_and_times_are_recorded() {
+        let mut r = Pcg64::seed_from_u64(5);
+        let (pts, gs) = workload::uniform_square(2000, &mut r);
+        let serial = build(&pts, &gs, 3, &TopologyOptions::serial(0.5)).unwrap();
+        let par = build(&pts, &gs, 3, &TopologyOptions::parallel(0.5, 4)).unwrap();
+        assert_eq!(serial.pyramid.starts, par.pyramid.starts);
+        assert_eq!(serial.connectivity.checks, par.connectivity.checks);
+        assert_eq!(serial.connectivity.near.data, par.connectivity.near.data);
+        assert!(serial.sort_s > 0.0 && serial.connect_s > 0.0);
+        assert!(par.sort_s > 0.0 && par.connect_s > 0.0);
+    }
+
+    #[test]
+    fn invalid_input_surfaces_an_error() {
+        let (pts, gs) = {
+            let mut r = Pcg64::seed_from_u64(6);
+            workload::uniform_square(10, &mut r)
+        };
+        let err = build(&pts, &gs, 4, &TopologyOptions::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fewer particles"), "got: {err}");
+    }
+
+    #[test]
+    fn effective_threads_resolution() {
+        assert_eq!(TopologyOptions::serial(0.5).effective_threads(), 1);
+        assert_eq!(TopologyOptions::parallel(0.5, 3).effective_threads(), 3);
+        assert_eq!(TopologyOptions::parallel(0.5, 0).effective_threads(), 1);
+        assert!(TopologyOptions::default().effective_threads() >= 1);
+    }
+}

@@ -9,11 +9,22 @@
 //! The output arranges particles so that every leaf box owns a contiguous
 //! slice — the static memory layout that both the serial driver and the
 //! data-parallel packing rely on.
+//!
+//! The build itself runs serially ([`Pyramid::build`] /
+//! [`Pyramid::build_with`]) or sharded over scoped worker threads
+//! ([`Pyramid::build_threaded`]): within a level every box owns a disjoint
+//! `particles[lo..hi]` slice, so the per-box `split_box_in_four` calls
+//! fan out with the same writer-side-ownership discipline as
+//! [`crate::fmm::parallel`], and per-thread [`SortStats`] merge in worker
+//! order. Both paths produce bit-identical pyramids
+//! (`tests/topology_parity.rs`); [`crate::topology`] selects between them.
 
 pub mod partition;
 
 use crate::complex::C64;
 use crate::geometry::Rect;
+use crate::util::error::Result;
+use crate::util::threadpool::{ranges, scoped_map, split_lengths_mut};
 use partition::{median_split, median_split_gpu_model, SortStats};
 
 /// Which partitioning engine builds the pyramid: the serial quickselect
@@ -76,7 +87,11 @@ impl Pyramid {
     /// refinements. Points may lie anywhere; the root box is their bounding
     /// box (the paper rejects samples into the unit square before calling —
     /// see [`crate::workload`]).
-    pub fn build(points: &[C64], gammas: &[C64], levels: usize) -> Self {
+    ///
+    /// Errors (instead of panicking) when the inputs cannot form a pyramid:
+    /// mismatched array lengths, `levels == 0`, or fewer particles than
+    /// leaf boxes.
+    pub fn build(points: &[C64], gammas: &[C64], levels: usize) -> Result<Self> {
         Self::build_with(points, gammas, levels, PartitionEngine::Cpu)
     }
 
@@ -86,27 +101,8 @@ impl Pyramid {
         gammas: &[C64],
         levels: usize,
         engine: PartitionEngine,
-    ) -> Self {
-        assert_eq!(points.len(), gammas.len());
-        assert!(levels >= 1, "pyramid needs at least one refinement level");
-        assert!(
-            points.len() >= boxes_at_level(levels),
-            "fewer particles ({}) than leaf boxes ({}); lower the level count",
-            points.len(),
-            boxes_at_level(levels)
-        );
-        let mut particles: Vec<Particle> = points
-            .iter()
-            .zip(gammas)
-            .enumerate()
-            .map(|(i, (&pos, &gamma))| Particle {
-                pos,
-                gamma,
-                orig: i as u32,
-            })
-            .collect();
-
-        let root = Rect::bounding(points);
+    ) -> Result<Self> {
+        let (mut particles, root) = Self::validated_particles(points, gammas, levels)?;
         let mut rects: Vec<Vec<Rect>> = vec![vec![root]];
         let mut stats = SortStats::default();
 
@@ -131,13 +127,126 @@ impl Pyramid {
             starts = next_starts;
         }
 
-        Pyramid {
+        Ok(Pyramid {
             levels,
             rects,
             particles,
             starts,
             sort_stats: stats,
+        })
+    }
+
+    /// [`Pyramid::build_with`] sharded over `threads` scoped workers.
+    ///
+    /// Per level, the boxes are split into contiguous ranges and each
+    /// worker owns the disjoint particle slice of its boxes (the same
+    /// writer-side ownership as [`crate::fmm::parallel`] — no locks). The
+    /// per-box splits are independent and deterministic, and per-thread
+    /// [`SortStats`] merge in worker order, so the result is bit-identical
+    /// to the serial build for every thread count
+    /// (`tests/topology_parity.rs`). `threads ≤ 1` falls back to the
+    /// serial path.
+    pub fn build_threaded(
+        points: &[C64],
+        gammas: &[C64],
+        levels: usize,
+        engine: PartitionEngine,
+        threads: usize,
+    ) -> Result<Self> {
+        if threads <= 1 {
+            return Self::build_with(points, gammas, levels, engine);
         }
+        // oversized requests (thread counts are caller input) clamp to the
+        // machine: more workers than cores only adds spawn/join overhead
+        let threads = threads.min(crate::util::threadpool::available_threads().max(1));
+        if threads <= 1 {
+            return Self::build_with(points, gammas, levels, engine);
+        }
+        let (mut particles, root) = Self::validated_particles(points, gammas, levels)?;
+        let mut rects: Vec<Vec<Rect>> = vec![vec![root]];
+        let mut stats = SortStats::default();
+
+        let mut starts: Vec<usize> = vec![0, particles.len()];
+        for l in 0..levels {
+            let nb = boxes_at_level(l);
+            let workers = threads.min(nb);
+            let level_rects: &[Rect] = &rects[l];
+            let starts_ref: &[usize] = &starts;
+            let parts: Vec<(Vec<(Rect, usize)>, SortStats)> = if workers > 1 {
+                let rs = ranges(nb, workers);
+                let lens: Vec<usize> = rs
+                    .iter()
+                    .map(|r| starts_ref[r.end] - starts_ref[r.start])
+                    .collect();
+                let chunks = split_lengths_mut(&mut particles, &lens);
+                scoped_map(rs.into_iter().zip(chunks).collect(), |(r, chunk)| {
+                    split_box_range(r, chunk, starts_ref, level_rects, engine)
+                })
+            } else {
+                vec![split_box_range(
+                    0..nb,
+                    &mut particles,
+                    starts_ref,
+                    level_rects,
+                    engine,
+                )]
+            };
+
+            let mut next_rects = Vec::with_capacity(nb * 4);
+            let mut next_starts = Vec::with_capacity(nb * 4 + 1);
+            next_starts.push(0usize);
+            for (quads, st) in parts {
+                for (qrect, qlen) in quads {
+                    next_rects.push(qrect);
+                    next_starts.push(next_starts.last().unwrap() + qlen);
+                }
+                stats.merge(&st);
+            }
+            debug_assert_eq!(*next_starts.last().unwrap(), particles.len());
+            rects.push(next_rects);
+            starts = next_starts;
+        }
+
+        Ok(Pyramid {
+            levels,
+            rects,
+            particles,
+            starts,
+            sort_stats: stats,
+        })
+    }
+
+    /// Shared input validation of the build entry points: returns the
+    /// permutation-carrying particle records and the root bounding box.
+    fn validated_particles(
+        points: &[C64],
+        gammas: &[C64],
+        levels: usize,
+    ) -> Result<(Vec<Particle>, Rect)> {
+        crate::ensure!(
+            points.len() == gammas.len(),
+            "points ({}) and strengths ({}) differ in length",
+            points.len(),
+            gammas.len()
+        );
+        crate::ensure!(levels >= 1, "pyramid needs at least one refinement level");
+        crate::ensure!(
+            points.len() >= boxes_at_level(levels),
+            "fewer particles ({}) than leaf boxes ({}); lower the level count",
+            points.len(),
+            boxes_at_level(levels)
+        );
+        let particles = points
+            .iter()
+            .zip(gammas)
+            .enumerate()
+            .map(|(i, (&pos, &gamma))| Particle {
+                pos,
+                gamma,
+                orig: i as u32,
+            })
+            .collect();
+        Ok((particles, Rect::bounding(points)))
     }
 
     /// Number of leaf boxes `4^L`.
@@ -211,6 +320,26 @@ fn split_box_in_four(
     ]
 }
 
+/// Split every box of `r` (whose particles tile `chunk` contiguously) in
+/// four, returning the child `(rect, count)` quads in box order plus this
+/// worker's partitioning statistics — the per-thread unit of the parallel
+/// build.
+fn split_box_range(
+    r: std::ops::Range<usize>,
+    chunk: &mut [Particle],
+    starts: &[usize],
+    rects: &[Rect],
+    engine: PartitionEngine,
+) -> (Vec<(Rect, usize)>, SortStats) {
+    let lens: Vec<usize> = (r.start..r.end).map(|b| starts[b + 1] - starts[b]).collect();
+    let mut stats = SortStats::default();
+    let mut quads = Vec::with_capacity(lens.len() * 4);
+    for (sub, b) in split_lengths_mut(chunk, &lens).into_iter().zip(r) {
+        quads.extend_from_slice(&split_box_in_four(sub, rects[b], engine, &mut stats));
+    }
+    (quads, stats)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,7 +354,7 @@ mod tests {
     #[test]
     fn pyramid_shape() {
         let (pts, gs) = uniform(1000, 1);
-        let t = Pyramid::build(&pts, &gs, 3);
+        let t = Pyramid::build(&pts, &gs, 3).unwrap();
         assert_eq!(t.n_leaves(), 64);
         assert_eq!(t.rects[0].len(), 1);
         assert_eq!(t.rects[1].len(), 4);
@@ -239,7 +368,7 @@ mod tests {
         // median splits: every leaf within ±1 of every other after each
         // halving => leaf sizes in {floor, ceil} of repeated halving.
         let (pts, gs) = uniform(1003, 2);
-        let t = Pyramid::build(&pts, &gs, 3);
+        let t = Pyramid::build(&pts, &gs, 3).unwrap();
         let sizes: Vec<usize> = (0..64).map(|b| t.leaf(b).len()).collect();
         let (lo, hi) = (
             *sizes.iter().min().unwrap(),
@@ -252,7 +381,7 @@ mod tests {
     #[test]
     fn particles_inside_their_leaf_rect() {
         let (pts, gs) = uniform(2000, 3);
-        let t = Pyramid::build(&pts, &gs, 3);
+        let t = Pyramid::build(&pts, &gs, 3).unwrap();
         for b in 0..t.n_leaves() {
             let r = t.rects[3][b];
             for p in t.leaf(b) {
@@ -268,7 +397,7 @@ mod tests {
     #[test]
     fn permutation_is_bijective() {
         let (pts, gs) = uniform(777, 4);
-        let t = Pyramid::build(&pts, &gs, 2);
+        let t = Pyramid::build(&pts, &gs, 2).unwrap();
         let mut seen = vec![false; 777];
         for p in &t.particles {
             assert!(!seen[p.orig as usize], "duplicate orig index");
@@ -283,7 +412,7 @@ mod tests {
     #[test]
     fn unpermute_roundtrip() {
         let (pts, gs) = uniform(512, 5);
-        let t = Pyramid::build(&pts, &gs, 2);
+        let t = Pyramid::build(&pts, &gs, 2).unwrap();
         let leaf_vals: Vec<C64> = t.particles.iter().map(|p| p.pos).collect();
         let back = t.unpermute(&leaf_vals);
         assert_eq!(back, pts);
@@ -292,7 +421,7 @@ mod tests {
     #[test]
     fn child_rects_tile_parent() {
         let (pts, gs) = uniform(4096, 6);
-        let t = Pyramid::build(&pts, &gs, 3);
+        let t = Pyramid::build(&pts, &gs, 3).unwrap();
         for l in 0..3 {
             for b in 0..boxes_at_level(l) {
                 let parent = t.rects[l][b];
@@ -329,7 +458,7 @@ mod tests {
     fn nonuniform_normal_distribution_builds() {
         let mut r = Pcg64::seed_from_u64(7);
         let (pts, gs) = workload::normal_cloud(3000, 0.1, &mut r);
-        let t = Pyramid::build(&pts, &gs, 4);
+        let t = Pyramid::build(&pts, &gs, 4).unwrap();
         assert_eq!(t.starts[t.n_leaves()], 3000);
         let sizes: Vec<usize> = (0..t.n_leaves()).map(|b| t.leaf(b).len()).collect();
         let (lo, hi) = (
@@ -341,9 +470,45 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "fewer particles")]
-    fn too_few_particles_panics() {
+    fn invalid_inputs_error_instead_of_panicking() {
         let (pts, gs) = uniform(10, 8);
-        Pyramid::build(&pts, &gs, 3);
+        let err = Pyramid::build(&pts, &gs, 3).unwrap_err().to_string();
+        assert!(err.contains("fewer particles"), "got: {err}");
+        let err = Pyramid::build(&pts, &gs, 0).unwrap_err().to_string();
+        assert!(err.contains("refinement level"), "got: {err}");
+        let err = Pyramid::build(&pts, &gs[..9], 1).unwrap_err().to_string();
+        assert!(err.contains("differ in length"), "got: {err}");
+    }
+
+    #[test]
+    fn threaded_build_is_bit_identical_to_serial() {
+        let mut r = Pcg64::seed_from_u64(12);
+        let (pts, gs) = workload::normal_cloud(2000, 0.08, &mut r);
+        for engine in [PartitionEngine::Cpu, PartitionEngine::GpuModel] {
+            let serial = Pyramid::build_with(&pts, &gs, 3, engine).unwrap();
+            for nt in [2usize, 3, 8, 999] {
+                let par = Pyramid::build_threaded(&pts, &gs, 3, engine, nt).unwrap();
+                assert_eq!(serial.starts, par.starts, "{engine:?} t={nt}");
+                for (a, b) in serial.particles.iter().zip(&par.particles) {
+                    assert_eq!(a.orig, b.orig, "{engine:?} t={nt}");
+                    assert_eq!(a.pos, b.pos);
+                }
+                for l in 0..=3 {
+                    for (ra, rb) in serial.rects[l].iter().zip(&par.rects[l]) {
+                        assert_eq!(ra.x0, rb.x0);
+                        assert_eq!(ra.x1, rb.x1);
+                        assert_eq!(ra.y0, rb.y0);
+                        assert_eq!(ra.y1, rb.y1);
+                    }
+                }
+                assert_eq!(serial.sort_stats.splits, par.sort_stats.splits);
+                assert_eq!(
+                    serial.sort_stats.elements_visited,
+                    par.sort_stats.elements_visited
+                );
+                assert_eq!(serial.sort_stats.passes, par.sort_stats.passes);
+                assert_eq!(serial.sort_stats.scattered, par.sort_stats.scattered);
+            }
+        }
     }
 }

@@ -33,6 +33,19 @@ pub struct SortStats {
     pub scattered: usize,
 }
 
+impl SortStats {
+    /// Fold another accumulator into this one. Every field is a plain sum,
+    /// so merging per-thread partials in worker order reproduces the serial
+    /// totals exactly — the property the parallel pyramid build
+    /// ([`crate::tree::Pyramid::build_threaded`]) relies on.
+    pub fn merge(&mut self, other: &SortStats) {
+        self.splits += other.splits;
+        self.elements_visited += other.elements_visited;
+        self.passes += other.passes;
+        self.scattered += other.scattered;
+    }
+}
+
 #[inline]
 fn coord(p: &Particle, axis: Axis) -> f64 {
     match axis {
@@ -386,6 +399,27 @@ mod tests {
         assert_eq!(m2, 1);
         assert_eq!(two[0].pos.re, 0.1);
         assert!((0.1..=0.9).contains(&cut));
+    }
+
+    #[test]
+    fn merge_is_fieldwise_sum() {
+        let a = SortStats {
+            splits: 3,
+            elements_visited: 100,
+            passes: 7,
+            scattered: 40,
+        };
+        let mut b = SortStats {
+            splits: 1,
+            elements_visited: 11,
+            passes: 2,
+            scattered: 5,
+        };
+        b.merge(&a);
+        assert_eq!(b.splits, 4);
+        assert_eq!(b.elements_visited, 111);
+        assert_eq!(b.passes, 9);
+        assert_eq!(b.scattered, 45);
     }
 
     #[test]

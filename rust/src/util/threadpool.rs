@@ -89,6 +89,32 @@ pub fn split_lengths_mut<'a, T>(mut data: &'a mut [T], lens: &[usize]) -> Vec<&'
     out
 }
 
+/// Fan `items` out over one scoped worker thread each and collect the
+/// results in item order — the spawn/join scaffolding shared by the
+/// parallel topology builds ([`crate::tree`], [`crate::connectivity`]).
+/// Callers pass at most ~one item per core; an item typically carries a
+/// box range (plus, for writers, its disjoint `&mut` destination slice).
+pub fn scoped_map<I, T, F>(items: Vec<I>, f: F) -> Vec<T>
+where
+    I: Send,
+    T: Send,
+    F: Fn(I) -> T + Sync,
+{
+    std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .into_iter()
+            .map(|item| {
+                let f = &f;
+                s.spawn(move || f(item))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("scoped worker panicked"))
+            .collect()
+    })
+}
+
 /// Run `f(range, chunk)` on one scoped thread per range, where `chunk` is
 /// the disjoint destination slice `data[range.start*stride ..
 /// range.end*stride]` — the writer-side sharding primitive. `ranges` must
@@ -169,6 +195,15 @@ mod tests {
         assert_eq!(parts[0], &[0, 1, 2]);
         assert_eq!(parts[2], &[3, 4, 5, 6]);
         assert_eq!(parts[3], &[7, 8, 9]);
+    }
+
+    #[test]
+    fn scoped_map_preserves_item_order() {
+        let items: Vec<usize> = (0..9).collect();
+        let out = scoped_map(items, |i| i * i);
+        assert_eq!(out, vec![0, 1, 4, 9, 16, 25, 36, 49, 64]);
+        let empty: Vec<usize> = Vec::new();
+        assert!(scoped_map(empty, |i: usize| i).is_empty());
     }
 
     #[test]

@@ -44,7 +44,8 @@ fn assert_parity(problems: &[BatchProblem], opts: &BatchOptions) -> batch::Batch
                 threads: Some(1),
                 ..opts.fmm
             },
-        );
+        )
+        .unwrap();
         assert_eq!(out.potentials[i].len(), pr.points.len());
         for (a, b) in out.potentials[i].iter().zip(&seq.potentials) {
             assert!(
@@ -69,6 +70,7 @@ fn parallel_engine_parity_on_heterogeneous_batch() {
             fmm: fmm_opts(12, Some(3)),
             engine: BatchEngine::Parallel,
             max_group: 0,
+            overlap: true,
         },
     );
     assert!(
@@ -89,6 +91,7 @@ fn serial_engine_parity_on_heterogeneous_batch() {
             fmm: fmm_opts(10, Some(1)),
             engine: BatchEngine::Serial,
             max_group: 0,
+            overlap: true,
         },
     );
     assert!(out.stats.n_groups >= 2);
@@ -105,6 +108,7 @@ fn parity_survives_group_splitting() {
             fmm: fmm_opts(10, Some(2)),
             engine: BatchEngine::Parallel,
             max_group: 2,
+            overlap: true,
         },
     );
     let wide = batch::run(
@@ -113,6 +117,7 @@ fn parity_survives_group_splitting() {
             fmm: fmm_opts(10, Some(2)),
             engine: BatchEngine::Parallel,
             max_group: 0,
+            overlap: true,
         },
     )
     .unwrap();
@@ -133,13 +138,14 @@ fn aggregated_counts_are_the_sum_of_members() {
             fmm: fmm_opts(10, Some(2)),
             engine: BatchEngine::Parallel,
             max_group: 0,
+            overlap: true,
         },
     )
     .unwrap();
     let mut n = 0;
     let mut p2p = 0;
     for pr in &problems {
-        let seq = fmm::evaluate(&pr.points, &pr.gammas, &fmm_opts(10, Some(1)));
+        let seq = fmm::evaluate(&pr.points, &pr.gammas, &fmm_opts(10, Some(1))).unwrap();
         n += seq.counts.n;
         p2p += seq.counts.p2p_pairs;
     }
@@ -164,6 +170,7 @@ fn directed_p2p_batches_identically() {
         },
         engine: BatchEngine::Parallel,
         max_group: 0,
+        overlap: true,
     };
     assert_parity(&problems, &opts);
 }

@@ -31,7 +31,7 @@ fn fmm_matches_direct_across_distributions_and_sizes() {
         (Distribution::Layer { sigma: 0.05 }, 5_000, 2e-5),
     ] {
         let (pts, gs) = workload_for(dist, n, 42);
-        let out = evaluate(&pts, &gs, &FmmOptions::default());
+        let out = evaluate(&pts, &gs, &FmmOptions::default()).unwrap();
         let exact = direct::eval_symmetric(Kernel::Harmonic, &pts, &gs);
         let err = rel_err_abs(&out.potentials, &exact);
         assert!(err < tol, "{} n={n}: {err:e}", dist.name());
@@ -42,7 +42,7 @@ fn fmm_matches_direct_across_distributions_and_sizes() {
 fn level_rule_consistency_with_explicit_levels() {
     // Eq. (5.2) levels vs explicitly overridden levels: same answer
     let (pts, gs) = workload_for(Distribution::Uniform, 6_000, 1);
-    let auto = evaluate(&pts, &gs, &FmmOptions::default());
+    let auto = evaluate(&pts, &gs, &FmmOptions::default()).unwrap();
     let cfg = FmmConfig {
         levels_override: Some(FmmConfig::default().levels_for(6_000)),
         ..FmmConfig::default()
@@ -54,7 +54,8 @@ fn level_rule_consistency_with_explicit_levels() {
             cfg,
             ..FmmOptions::default()
         },
-    );
+    )
+    .unwrap();
     for (a, b) in auto.potentials.iter().zip(&manual.potentials) {
         assert!((*a - *b).abs() < 1e-12 * a.abs().max(1.0));
     }
@@ -63,8 +64,8 @@ fn level_rule_consistency_with_explicit_levels() {
 #[test]
 fn both_partition_engines_yield_identical_trees() {
     let (pts, gs) = workload_for(Distribution::Normal { sigma: 0.1 }, 4_000, 3);
-    let a = Pyramid::build_with(&pts, &gs, 3, PartitionEngine::Cpu);
-    let b = Pyramid::build_with(&pts, &gs, 3, PartitionEngine::GpuModel);
+    let a = Pyramid::build_with(&pts, &gs, 3, PartitionEngine::Cpu).unwrap();
+    let b = Pyramid::build_with(&pts, &gs, 3, PartitionEngine::GpuModel).unwrap();
     // identical leaf populations and rect geometry (the paper required CPU
     // sorting for its comparisons because the CUDA sort was
     // non-deterministic; our functional model is deterministic by design)
@@ -93,7 +94,7 @@ fn both_partition_engines_yield_identical_trees() {
 #[test]
 fn packing_roundtrip_preserves_every_particle() {
     let (pts, gs) = workload_for(Distribution::Layer { sigma: 0.08 }, 2_000, 5);
-    let pyr = Pyramid::build(&pts, &gs, 3);
+    let pyr = Pyramid::build(&pts, &gs, 3).unwrap();
     let con = Connectivity::build(&pyr, 0.5);
     let need = required_pads(&pyr, &con);
     // synthesize a matching meta via the JSON path (as aot.py would emit)
@@ -202,8 +203,8 @@ fn workcounts_scale_as_theory_predicts() {
     };
     let (pts1, gs1) = workload_for(Distribution::Uniform, 20_000, 13);
     let (pts2, gs2) = workload_for(Distribution::Uniform, 80_000, 13);
-    let o1 = evaluate(&pts1, &gs1, &FmmOptions { cfg, ..Default::default() });
-    let o2 = evaluate(&pts2, &gs2, &FmmOptions { cfg, ..Default::default() });
+    let o1 = evaluate(&pts1, &gs1, &FmmOptions { cfg, ..Default::default() }).unwrap();
+    let o2 = evaluate(&pts2, &gs2, &FmmOptions { cfg, ..Default::default() }).unwrap();
     let m2l1: usize = o1.counts.m2l_per_level.iter().sum();
     let m2l2: usize = o2.counts.m2l_per_level.iter().sum();
     let ratio = m2l2 as f64 / m2l1 as f64;
@@ -233,7 +234,7 @@ fn empty_shortcut_lists_on_very_uniform_grids() {
         }
     }
     let gs = vec![C64::new(1.0, 0.0); pts.len()];
-    let pyr = Pyramid::build(&pts, &gs, 3);
+    let pyr = Pyramid::build(&pts, &gs, 3).unwrap();
     let con = Connectivity::build(&pyr, 0.5);
     assert_eq!(con.p2l.len(), 0, "regular grid should need no P2L");
     assert_eq!(con.m2p.len(), 0);

@@ -50,7 +50,7 @@ fn parallel_engine_matches_serial_across_the_grid() {
                     g.im = 0.0;
                 }
             }
-            let pyr = Pyramid::build(&pts, &gs, 3);
+            let pyr = Pyramid::build(&pts, &gs, 3).unwrap();
             let con = Connectivity::build(&pyr, 0.5);
             let opts = FmmOptions {
                 cfg: FmmConfig {
@@ -63,6 +63,7 @@ fn parallel_engine_matches_serial_across_the_grid() {
                 // engine falls back to the directed formulation for Log
                 symmetric_p2p: true,
                 threads: Some(1),
+                topo_threads: None,
             };
             let what = format!("{} × {:?}", dist.name(), kernel);
             let (serial, st, sc) = evaluate_on_tree_serial(&pyr, &con, &opts);
@@ -95,7 +96,7 @@ fn dispatch_selects_engine_by_thread_count() {
     // bit-for-bit; with threads=Some(4) it must agree to parity tolerance.
     let mut r = Pcg64::seed_from_u64(9);
     let (pts, gs) = Distribution::Uniform.generate(2000, &mut r);
-    let pyr = Pyramid::build(&pts, &gs, 2);
+    let pyr = Pyramid::build(&pts, &gs, 2).unwrap();
     let con = Connectivity::build(&pyr, 0.5);
     let base = FmmOptions {
         cfg: FmmConfig {
@@ -140,8 +141,8 @@ fn full_evaluate_parity_in_original_order() {
         threads,
         ..Default::default()
     };
-    let serial = fmm2d::fmm::evaluate(&pts, &gs, &mk(Some(1)));
-    let par = fmm2d::fmm::evaluate(&pts, &gs, &mk(Some(3)));
+    let serial = fmm2d::fmm::evaluate(&pts, &gs, &mk(Some(1))).unwrap();
+    let par = fmm2d::fmm::evaluate(&pts, &gs, &mk(Some(3))).unwrap();
     for (a, b) in serial.potentials.iter().zip(&par.potentials) {
         assert!((*a - *b).abs() <= 1e-12 * a.abs().max(1.0));
     }

@@ -36,7 +36,7 @@ fn prop_tree_partitions_particles() {
         Config { cases: 24, ..Default::default() },
         |r| random_cloud(r),
         |(pts, gs, levels)| {
-            let pyr = Pyramid::build(pts, gs, *levels);
+            let pyr = Pyramid::build(pts, gs, *levels).unwrap();
             // every particle in exactly one leaf, inside its rect
             let mut seen = vec![false; pts.len()];
             for b in 0..pyr.n_leaves() {
@@ -74,7 +74,7 @@ fn prop_connectivity_invariants() {
         Config { cases: 16, ..Default::default() },
         |r| random_cloud(r),
         |(pts, gs, levels)| {
-            let pyr = Pyramid::build(pts, gs, *levels);
+            let pyr = Pyramid::build(pts, gs, *levels).unwrap();
             let con = Connectivity::build(&pyr, 0.5);
             // P2P symmetry
             if !is_symmetric(&con.near) {
@@ -144,7 +144,7 @@ fn prop_fmm_error_within_geometric_bound() {
                 },
                 ..Default::default()
             };
-            let out = evaluate(pts, gs, &opts);
+            let out = evaluate(pts, gs, &opts).unwrap();
             let exact = direct::eval_symmetric(Kernel::Harmonic, pts, gs);
             let scale = exact.iter().map(|z| z.abs()).fold(0.0, f64::max);
             let err = out

@@ -49,7 +49,7 @@ fn fmm_artifact_matches_direct_and_serial() {
     let (pts, gs) = workload::uniform_square(3000, &mut r);
 
     // topological phase in Rust (L3)
-    let pyr = Pyramid::build(&pts, &gs, 3);
+    let pyr = Pyramid::build(&pts, &gs, 3).unwrap();
     let con = Connectivity::build(&pyr, 0.5);
 
     // computational phase through PJRT (L2 + L1)
@@ -82,7 +82,7 @@ fn fmm_artifact_nonuniform_distribution() {
     let Some(mut rt) = runtime_or_skip() else { return };
     let mut r = Pcg64::seed_from_u64(7);
     let (pts, gs) = workload::normal_cloud(2500, 0.1, &mut r);
-    let pyr = Pyramid::build(&pts, &gs, 3);
+    let pyr = Pyramid::build(&pts, &gs, 3).unwrap();
     let con = Connectivity::build(&pyr, 0.5);
     // adaptive shortcut lists exercised on clustered input
     let exe = rt.load("fmm_l3_p17").unwrap();
@@ -97,7 +97,7 @@ fn small_artifact_l2_p8() {
     let Some(mut rt) = runtime_or_skip() else { return };
     let mut r = Pcg64::seed_from_u64(11);
     let (pts, gs) = workload::uniform_square(400, &mut r);
-    let pyr = Pyramid::build(&pts, &gs, 2);
+    let pyr = Pyramid::build(&pts, &gs, 2).unwrap();
     let con = Connectivity::build(&pyr, 0.5);
     let exe = rt.load("fmm_l2_p8").unwrap();
     let (pot, _) = exe.run_fmm(&pyr, &con).unwrap();
@@ -134,7 +134,7 @@ fn pad_overflow_reports_actionable_error() {
     // 2-level tree fed to the 3-level artifact: must fail with a clear error
     let mut r = Pcg64::seed_from_u64(5);
     let (pts, gs) = workload::uniform_square(500, &mut r);
-    let pyr = Pyramid::build(&pts, &gs, 2);
+    let pyr = Pyramid::build(&pts, &gs, 2).unwrap();
     let con = Connectivity::build(&pyr, 0.5);
     let exe = rt.load("fmm_l3_p17").unwrap();
     let err = exe.run_fmm(&pyr, &con).unwrap_err().to_string();
@@ -152,7 +152,7 @@ fn pallas_variant_matches_jnp_variant() {
     }
     let mut r = Pcg64::seed_from_u64(31);
     let (pts, gs) = workload::uniform_square(420, &mut r);
-    let pyr = Pyramid::build(&pts, &gs, 2);
+    let pyr = Pyramid::build(&pts, &gs, 2).unwrap();
     let con = Connectivity::build(&pyr, 0.5);
     let a = rt.load("fmm_l2_p8").unwrap();
     let b = rt.load("fmm_l2_p8_pallas").unwrap();
@@ -171,9 +171,9 @@ fn batched_group_matches_single_runs() {
     let mut r = Pcg64::seed_from_u64(41);
     let (pa, ga) = workload::uniform_square(500, &mut r);
     let (pb, gb) = workload::uniform_square(700, &mut r);
-    let pyr_a = Pyramid::build(&pa, &ga, 2);
+    let pyr_a = Pyramid::build(&pa, &ga, 2).unwrap();
     let con_a = Connectivity::build(&pyr_a, 0.5);
-    let pyr_b = Pyramid::build(&pb, &gb, 2);
+    let pyr_b = Pyramid::build(&pb, &gb, 2).unwrap();
     let con_b = Connectivity::build(&pyr_b, 0.5);
     let group: Vec<(&Pyramid, &Connectivity)> = vec![(&pyr_a, &con_a), (&pyr_b, &con_b)];
     let Ok(exe) = rt.fmm_artifact_for_group(&group) else {

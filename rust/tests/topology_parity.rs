@@ -1,0 +1,144 @@
+//! Parity of the parallel topology pipeline against the serial reference
+//! path: the Sort half ([`Pyramid::build_threaded`]) must produce
+//! bit-identical pyramids (`starts`, `rects`, particle permutation,
+//! `SortStats`) and the Connect half ([`Connectivity::build_threaded`])
+//! byte-identical CSR lists (`offsets`, `data`, `checks`) — across
+//! distributions, levels, θ values, partition engines, and thread counts
+//! including 1, 2, odd, and more threads than boxes.
+
+use fmm2d::connectivity::Connectivity;
+use fmm2d::topology::{self, TopologyOptions};
+use fmm2d::tree::{PartitionEngine, Pyramid};
+use fmm2d::util::rng::Pcg64;
+use fmm2d::workload::Distribution;
+
+/// 1, 2, an odd count, and far more threads than level-1 (and often leaf)
+/// boxes — the degenerate fan-outs the sharding must survive.
+const THREAD_COUNTS: [usize; 5] = [1, 2, 3, 7, 4096];
+
+fn assert_pyramids_identical(a: &Pyramid, b: &Pyramid, what: &str) {
+    assert_eq!(a.levels, b.levels, "{what}: levels");
+    assert_eq!(a.starts, b.starts, "{what}: starts");
+    for l in 0..=a.levels {
+        for (i, (ra, rb)) in a.rects[l].iter().zip(&b.rects[l]).enumerate() {
+            assert_eq!(ra.x0, rb.x0, "{what}: rect l={l} b={i} x0");
+            assert_eq!(ra.x1, rb.x1, "{what}: rect l={l} b={i} x1");
+            assert_eq!(ra.y0, rb.y0, "{what}: rect l={l} b={i} y0");
+            assert_eq!(ra.y1, rb.y1, "{what}: rect l={l} b={i} y1");
+        }
+    }
+    for (i, (pa, pb)) in a.particles.iter().zip(&b.particles).enumerate() {
+        assert_eq!(pa.orig, pb.orig, "{what}: particle {i} permutation");
+        assert_eq!(pa.pos, pb.pos, "{what}: particle {i} pos");
+        assert_eq!(pa.gamma, pb.gamma, "{what}: particle {i} gamma");
+    }
+    assert_eq!(a.sort_stats.splits, b.sort_stats.splits, "{what}: splits");
+    assert_eq!(
+        a.sort_stats.elements_visited, b.sort_stats.elements_visited,
+        "{what}: elements_visited"
+    );
+    assert_eq!(a.sort_stats.passes, b.sort_stats.passes, "{what}: passes");
+    assert_eq!(
+        a.sort_stats.scattered, b.sort_stats.scattered,
+        "{what}: scattered"
+    );
+}
+
+fn assert_connectivity_identical(a: &Connectivity, b: &Connectivity, what: &str) {
+    assert_eq!(a.checks, b.checks, "{what}: checks");
+    assert_eq!(a.weak.len(), b.weak.len(), "{what}: weak levels");
+    for (l, (wa, wb)) in a.weak.iter().zip(&b.weak).enumerate() {
+        assert_eq!(wa.offsets, wb.offsets, "{what}: weak offsets l={l}");
+        assert_eq!(wa.data, wb.data, "{what}: weak data l={l}");
+    }
+    for (name, la, lb) in [
+        ("near", &a.near, &b.near),
+        ("p2l", &a.p2l, &b.p2l),
+        ("m2p", &a.m2p, &b.m2p),
+    ] {
+        assert_eq!(la.offsets, lb.offsets, "{what}: {name} offsets");
+        assert_eq!(la.data, lb.data, "{what}: {name} data");
+    }
+}
+
+#[test]
+fn sort_and_connect_parity_across_the_grid() {
+    let dists = [
+        Distribution::Uniform,
+        Distribution::Normal { sigma: 0.08 },
+        Distribution::Layer { sigma: 0.05 },
+    ];
+    for (di, dist) in dists.iter().enumerate() {
+        for levels in [1usize, 2, 3] {
+            let mut r = Pcg64::seed_from_u64(400 + di as u64);
+            let (pts, gs) = dist.generate(2500, &mut r);
+            for engine in [PartitionEngine::Cpu, PartitionEngine::GpuModel] {
+                let serial = Pyramid::build_with(&pts, &gs, levels, engine).unwrap();
+                for nt in THREAD_COUNTS {
+                    let what =
+                        format!("{} L={levels} {engine:?} t={nt}", dist.name());
+                    let par =
+                        Pyramid::build_threaded(&pts, &gs, levels, engine, nt).unwrap();
+                    assert_pyramids_identical(&serial, &par, &what);
+                }
+            }
+            for theta in [0.3f64, 0.5, 0.8] {
+                let pyr = Pyramid::build(&pts, &gs, levels).unwrap();
+                let serial = Connectivity::build(&pyr, theta);
+                for nt in THREAD_COUNTS {
+                    let what = format!("{} L={levels} θ={theta} t={nt}", dist.name());
+                    let par = Connectivity::build_threaded(&pyr, theta, nt);
+                    assert_connectivity_identical(&serial, &par, &what);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn unified_topology_layer_parity() {
+    // the topology::build entry point: Serial and Parallel engines agree
+    // on everything downstream consumes, at several worker counts
+    let mut r = Pcg64::seed_from_u64(900);
+    let (pts, gs) = Distribution::Normal { sigma: 0.1 }.generate(4000, &mut r);
+    let serial = topology::build(&pts, &gs, 4, &TopologyOptions::serial(0.5)).unwrap();
+    for nt in [2usize, 5, 64] {
+        let par =
+            topology::build(&pts, &gs, 4, &TopologyOptions::parallel(0.5, nt)).unwrap();
+        assert_pyramids_identical(&serial.pyramid, &par.pyramid, &format!("topo t={nt}"));
+        assert_connectivity_identical(
+            &serial.connectivity,
+            &par.connectivity,
+            &format!("topo t={nt}"),
+        );
+    }
+}
+
+#[test]
+fn gpu_model_stats_survive_the_parallel_build() {
+    // the GPU-model partition engine's scatter counters feed the cost
+    // simulator; the parallel fan-out must not change them
+    let mut r = Pcg64::seed_from_u64(901);
+    let (pts, gs) = Distribution::Uniform.generate(20_000, &mut r);
+    let serial = Pyramid::build_with(&pts, &gs, 4, PartitionEngine::GpuModel).unwrap();
+    let par =
+        Pyramid::build_threaded(&pts, &gs, 4, PartitionEngine::GpuModel, 6).unwrap();
+    assert!(serial.sort_stats.scattered > 0);
+    assert_eq!(serial.sort_stats.scattered, par.sort_stats.scattered);
+}
+
+#[test]
+fn topology_errors_are_results_not_panics() {
+    let mut r = Pcg64::seed_from_u64(902);
+    let (pts, gs) = Distribution::Uniform.generate(20, &mut r);
+    for nt in [1usize, 4] {
+        let err = Pyramid::build_threaded(&pts, &gs, 3, PartitionEngine::Cpu, nt)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fewer particles"), "t={nt}: {err}");
+    }
+    let err = topology::build(&pts, &gs, 0, &TopologyOptions::default())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("refinement level"), "{err}");
+}
