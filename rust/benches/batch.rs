@@ -47,6 +47,7 @@ fn main() {
         symmetric_p2p: true,
         threads: None,
         topo_threads: None,
+        ..FmmOptions::default()
     };
 
     // sequential baseline: per-problem evaluations through each engine
@@ -58,7 +59,7 @@ fn main() {
                     &pr.gammas,
                     &FmmOptions {
                         threads: Some(1),
-                        ..fmm_opts
+                        ..fmm_opts.clone()
                     },
                 )
                 .expect("bench problems are valid"),
@@ -81,7 +82,7 @@ fn main() {
         ("batch_parallel", BatchEngine::Parallel, true),
     ] {
         let opts = BatchOptions {
-            fmm: fmm_opts,
+            fmm: fmm_opts.clone(),
             engine,
             max_group: 0,
             overlap,
@@ -94,7 +95,7 @@ fn main() {
     // grouped-width sensitivity on the parallel engine
     for max_group in [4usize, 16] {
         let opts = BatchOptions {
-            fmm: fmm_opts,
+            fmm: fmm_opts.clone(),
             engine: BatchEngine::Parallel,
             max_group,
             overlap: true,

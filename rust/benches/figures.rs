@@ -72,6 +72,7 @@ fn xla_bench() {
             symmetric_p2p: true,
             threads: Some(1),
             topo_threads: None,
+            ..FmmOptions::default()
         };
         let t = Instant::now();
         let (phi_leaf, _, _) = evaluate_on_tree(&pyr, &con, &opts);

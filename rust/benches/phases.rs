@@ -161,10 +161,26 @@ fn main() {
                     symmetric_p2p: sym,
                     threads: Some(t),
                     topo_threads: None,
+                    ..FmmOptions::default()
                 };
-                let engine = if t == 1 { "serial" } else { "parallel" };
-                run(&format!("fmm_compute_50k_{name}_{engine}_t{t}"), &mut || {
-                    black_box(evaluate_on_tree(&pyr, &con, &opts));
+                if t == 1 {
+                    run(&format!("fmm_compute_50k_{name}_serial_t1"), &mut || {
+                        black_box(evaluate_on_tree(&pyr, &con, &opts));
+                    });
+                    continue;
+                }
+                // the persistent-pool engine (the production dispatch) vs
+                // the scoped spawn-per-phase reference, same worker count
+                let pool = fmm2d::util::pool::WorkerPool::new(t, false);
+                run(&format!("fmm_compute_50k_{name}_pool_t{t}"), &mut || {
+                    black_box(fmm2d::fmm::parallel::evaluate_on_tree_pool(
+                        &pyr, &con, &opts, &pool,
+                    ));
+                });
+                run(&format!("fmm_compute_50k_{name}_scoped_t{t}"), &mut || {
+                    black_box(fmm2d::fmm::parallel::evaluate_on_tree_parallel(
+                        &pyr, &con, &opts, t,
+                    ));
                 });
             }
         }

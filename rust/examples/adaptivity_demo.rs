@@ -51,6 +51,7 @@ fn main() {
             symmetric_p2p: true,
             threads: None,
             topo_threads: None,
+            ..FmmOptions::default()
         };
         let t = std::time::Instant::now();
         let (_, _, _) = evaluate_on_tree(pyr, con, &opts);

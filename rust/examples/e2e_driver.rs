@@ -66,6 +66,7 @@ fn main() -> fmm2d::util::error::Result<()> {
         symmetric_p2p: true,
         threads: Some(1),
         topo_threads: None,
+        ..FmmOptions::default()
     };
 
     let steps = 5;

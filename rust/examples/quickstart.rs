@@ -28,6 +28,7 @@ fn main() {
         // phase follows suit through the parallel topology engine
         threads: None,
         topo_threads: None,
+        ..FmmOptions::default()
     };
 
     let out = evaluate(&points, &gammas, &opts).expect("valid workload");

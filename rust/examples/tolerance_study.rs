@@ -23,6 +23,7 @@ fn measured_tol(kernel: Kernel, p: usize, pts: &[fmm2d::C64], gs: &[fmm2d::C64])
         symmetric_p2p: true,
         threads: None,
         topo_threads: None,
+        ..FmmOptions::default()
     };
     let out = evaluate(pts, gs, &opts).expect("valid workload");
     let exact = direct::eval_symmetric(kernel, pts, gs);

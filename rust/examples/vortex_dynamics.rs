@@ -60,6 +60,7 @@ fn main() {
         symmetric_p2p: true,
         threads: None,
         topo_threads: None,
+        ..FmmOptions::default()
     };
 
     let gamma0 = total_circulation(&gammas);

@@ -27,6 +27,7 @@ use crate::fmm::{self, FmmOptions, Phase, PhaseTimes, WorkCounts};
 use crate::topology::{self, TopologyOptions};
 use crate::tree::Pyramid;
 use crate::util::error::Result;
+use crate::util::pool::{note_spawn, WorkerPool};
 
 use super::plan::{BatchPlan, ProblemShape};
 
@@ -42,11 +43,12 @@ pub struct BatchProblem {
 pub enum BatchEngine {
     /// The serial reference driver, one problem after another (baseline).
     Serial,
-    /// Batch-size-aware CPU dispatch: groups with at least as many members
-    /// as workers stream through one shared scoped pool
-    /// ([`fmm::parallel::evaluate_trees_pooled`]); smaller groups fall
-    /// back to the per-problem multithreaded engine so a lone large
-    /// problem still uses every core.
+    /// Batch-size-aware CPU dispatch on the shared persistent worker pool:
+    /// groups with at least as many members as workers stream through one
+    /// problem-claiming dispatch
+    /// ([`fmm::parallel::evaluate_trees_on_pool`]); smaller groups fall
+    /// back to the per-problem pooled engine so a lone large problem still
+    /// uses every core. Either way, the batch spawns no threads per group.
     Parallel,
     /// The XLA/PJRT runtime: one batched `run_raw` per group (needs the
     /// `pjrt` feature and artifacts compiled with a batch dimension).
@@ -54,7 +56,7 @@ pub enum BatchEngine {
 }
 
 /// Options of one batch run.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct BatchOptions {
     /// Per-problem FMM options (p, N_d, θ, kernel, threads).
     pub fmm: FmmOptions,
@@ -146,12 +148,25 @@ pub fn run(problems: &[BatchProblem], opts: &BatchOptions) -> Result<BatchOutput
     let plan = BatchPlan::group(&shapes, opts.max_group);
     stats.n_groups = plan.n_groups();
 
+    // One persistent pool serves the whole batch — every group dispatch
+    // (and, on the sequential prologue, every topology build) fans out on
+    // it, so the batch performs no per-group thread spawns. A fully
+    // single-threaded configuration never touches (or lazily builds) it.
+    let wants_pool = opts.engine == BatchEngine::Parallel
+        && opts
+            .fmm
+            .effective_threads()
+            .max(opts.fmm.effective_topo_threads())
+            > 1;
+    let pool = wants_pool.then(|| opts.fmm.shared_pool());
+
     // ---- topological phase + dispatch ---------------------------------
     if opts.engine == BatchEngine::Parallel && opts.overlap && problems.len() > 1 {
         run_overlapped(
             problems,
             &plan,
             opts,
+            pool.as_deref(),
             &mut potentials,
             &mut counts,
             &mut stats,
@@ -163,7 +178,8 @@ pub fn run(problems: &[BatchProblem], opts: &BatchOptions) -> Result<BatchOutput
         // first dispatch
         let mut trees: Vec<(Pyramid, Connectivity)> = Vec::with_capacity(problems.len());
         for (i, pr) in problems.iter().enumerate() {
-            let (tree, t) = build_problem_topology(pr, &opts.fmm, topo_threads_for(opts))?;
+            let (tree, t) =
+                build_problem_topology(pr, &opts.fmm, topo_threads_for(opts), pool.clone())?;
             times_per_problem[i] = t;
             trees.push(tree);
         }
@@ -175,7 +191,7 @@ pub fn run(problems: &[BatchProblem], opts: &BatchOptions) -> Result<BatchOutput
                         .iter()
                         .map(|&i| (&trees[i].0, &trees[i].1))
                         .collect();
-                    let results = dispatch_cpu(&members, opts);
+                    let results = dispatch_cpu(&members, opts, pool.as_deref());
                     stats.dispatches += 1;
                     for (&i, (phi_leaf, t, c)) in group.members.iter().zip(results) {
                         potentials[i] = trees[i].0.unpermute(&phi_leaf);
@@ -212,19 +228,20 @@ fn topo_threads_for(opts: &BatchOptions) -> usize {
 }
 
 /// Build one problem's topology and return it with the Sort/Connect
-/// wall-clock recorded in the problem's [`PhaseTimes`] slots.
+/// wall-clock recorded in the problem's [`PhaseTimes`] slots. With a
+/// `pool`, the parallel build fans out on it (spawn-free); the overlapped
+/// prologue's producers pass `None` — they run concurrently with group
+/// compute and must not contend for the compute pool.
 fn build_problem_topology(
     pr: &BatchProblem,
     fmm_opts: &FmmOptions,
     threads: usize,
+    pool: Option<std::sync::Arc<WorkerPool>>,
 ) -> Result<((Pyramid, Connectivity), PhaseTimes)> {
     let levels = fmm_opts.cfg.levels_for(pr.points.len());
-    let topo = topology::build(
-        &pr.points,
-        &pr.gammas,
-        levels,
-        &TopologyOptions::parallel(fmm_opts.cfg.theta, threads),
-    )?;
+    let mut topo_opts = TopologyOptions::parallel(fmm_opts.cfg.theta, threads);
+    topo_opts.pool = pool;
+    let topo = topology::build(&pr.points, &pr.gammas, levels, &topo_opts)?;
     let mut t = PhaseTimes::default();
     t.0[Phase::Sort as usize] = topo.sort_s;
     t.0[Phase::Connect as usize] = topo.connect_s;
@@ -254,6 +271,7 @@ fn run_overlapped(
     problems: &[BatchProblem],
     plan: &BatchPlan,
     opts: &BatchOptions,
+    pool: Option<&WorkerPool>,
     potentials: &mut [Vec<C64>],
     counts: &mut WorkCounts,
     stats: &mut BatchStats,
@@ -287,6 +305,7 @@ fn run_overlapped(
         for _ in 0..producers {
             let tx = tx.clone();
             let (next, stop, order, fmm_opts) = (&next, &stop, &order, &opts.fmm);
+            note_spawn();
             s.spawn(move || loop {
                 if stop.load(Ordering::Relaxed) {
                     break;
@@ -296,8 +315,10 @@ fn run_overlapped(
                     break;
                 }
                 let i = order[k];
+                // producers build without the pool: they overlap the
+                // consumer's group compute, which owns the pool's workers
                 let built =
-                    build_problem_topology(&problems[i], fmm_opts, threads_per_problem);
+                    build_problem_topology(&problems[i], fmm_opts, threads_per_problem, None);
                 if tx.send((i, built)).is_err() {
                     break;
                 }
@@ -341,7 +362,7 @@ fn run_overlapped(
                     (pyr, con)
                 })
                 .collect();
-            let results = dispatch_cpu(&members, opts);
+            let results = dispatch_cpu(&members, opts, pool);
             stats.dispatches += 1;
             for (&i, (phi_leaf, t, c)) in group.members.iter().zip(results) {
                 let (pyr, _) = trees[i].as_ref().expect("tree built above");
@@ -367,9 +388,14 @@ fn run_overlapped(
 }
 
 /// CPU dispatch of one group (see [`BatchEngine`] for the selection rule).
+/// On the `Parallel` engine every fan-out runs on the shared persistent
+/// `pool` — wide groups as one problem-claiming dispatch
+/// ([`fmm::parallel::evaluate_trees_on_pool`]), narrow ones through the
+/// per-problem pooled engine — so a batch performs no per-group spawns.
 fn dispatch_cpu(
     members: &[(&Pyramid, &Connectivity)],
     opts: &BatchOptions,
+    pool: Option<&WorkerPool>,
 ) -> Vec<(Vec<C64>, PhaseTimes, WorkCounts)> {
     match opts.engine {
         BatchEngine::Serial => members
@@ -379,7 +405,14 @@ fn dispatch_cpu(
         BatchEngine::Parallel => {
             let nt = opts.fmm.effective_threads();
             if members.len() >= nt.max(2) {
-                fmm::parallel::evaluate_trees_pooled(members, &opts.fmm, nt)
+                match pool {
+                    // nt == 1 degenerates to the serial loop inside the
+                    // scoped variant — no fan-out at all
+                    Some(p) if nt > 1 => {
+                        fmm::parallel::evaluate_trees_on_pool(members, &opts.fmm, p)
+                    }
+                    _ => fmm::parallel::evaluate_trees_pooled(members, &opts.fmm, nt),
+                }
             } else {
                 members
                     .iter()

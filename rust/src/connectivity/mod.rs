@@ -17,8 +17,9 @@
 //! overhead dominated profile traces in early versions (see EXPERIMENTS.md
 //! §Perf).
 //!
-//! The build runs serially ([`Connectivity::build`]) or sharded over scoped
-//! worker threads ([`Connectivity::build_threaded`]): per level, the
+//! The build runs serially ([`Connectivity::build`]) or sharded over
+//! worker threads — scoped spawns ([`Connectivity::build_threaded`]) or
+//! the persistent pool ([`Connectivity::build_on_pool`]): per level, the
 //! destination boxes are classified in a two-pass count-then-fill CSR
 //! scheme — pass 1 classifies each worker's contiguous destination range
 //! into thread-local buffers with per-box degrees (computable
@@ -30,6 +31,7 @@
 
 use crate::geometry::{theta_criterion, theta_criterion_interchanged, Rect};
 use crate::tree::{boxes_at_level, first_child_of, Pyramid};
+use crate::util::pool::WorkerPool;
 use crate::util::threadpool::{ranges, scoped_map, split_lengths_mut};
 use std::ops::Range;
 
@@ -228,6 +230,22 @@ impl Connectivity {
     /// (`tests/topology_parity.rs`). `threads ≤ 1` falls back to the
     /// serial path.
     pub fn build_threaded(pyr: &Pyramid, theta: f64, threads: usize) -> Self {
+        Self::build_parallel(pyr, theta, threads, None)
+    }
+
+    /// [`Connectivity::build_threaded`] executing its fan-outs on a
+    /// persistent [`WorkerPool`] instead of scoped spawns — byte-identical
+    /// output, zero thread spawns.
+    pub fn build_on_pool(pyr: &Pyramid, theta: f64, threads: usize, pool: &WorkerPool) -> Self {
+        Self::build_parallel(pyr, theta, threads.min(pool.n_workers()), Some(pool))
+    }
+
+    fn build_parallel(
+        pyr: &Pyramid,
+        theta: f64,
+        threads: usize,
+        pool: Option<&WorkerPool>,
+    ) -> Self {
         // oversized requests clamp to the machine (see Pyramid::build_threaded)
         let threads = threads.min(crate::util::threadpool::available_threads().max(1));
         if threads <= 1 {
@@ -250,9 +268,15 @@ impl Connectivity {
             let workers = threads.min(nb);
             let shards: Vec<LevelShard> = if workers > 1 {
                 let strong_prev = &strong_prev;
-                scoped_map(ranges(nb, workers), |r| {
-                    classify_level_range(r, rects, strong_prev, theta)
-                })
+                let items = ranges(nb, workers);
+                match pool {
+                    Some(p) => p.map_items(items, |r| {
+                        classify_level_range(r, rects, strong_prev, theta)
+                    }),
+                    None => scoped_map(items, |r| {
+                        classify_level_range(r, rects, strong_prev, theta)
+                    }),
+                }
             } else {
                 vec![classify_level_range(0..nb, rects, &strong_prev, theta)]
             };
@@ -263,8 +287,8 @@ impl Connectivity {
                 weak_frags.push((sh.weak_deg, sh.weak));
                 strong_frags.push((sh.strong_deg, sh.strong));
             }
-            weak.push(assemble_csr(nb, weak_frags, workers > 1));
-            strong_prev = assemble_csr(nb, strong_frags, workers > 1);
+            weak.push(assemble_csr(nb, weak_frags, workers > 1, pool));
+            strong_prev = assemble_csr(nb, strong_frags, workers > 1, pool);
         }
 
         // Finest level: near/P2L/M2P split, same count-then-fill scheme.
@@ -273,9 +297,15 @@ impl Connectivity {
         let workers = threads.min(nb);
         let shards: Vec<FinestShard> = if workers > 1 {
             let strong_prev = &strong_prev;
-            scoped_map(ranges(nb, workers), |r| {
-                classify_finest_range(r, rects, strong_prev, theta)
-            })
+            let items = ranges(nb, workers);
+            match pool {
+                Some(p) => p.map_items(items, |r| {
+                    classify_finest_range(r, rects, strong_prev, theta)
+                }),
+                None => scoped_map(items, |r| {
+                    classify_finest_range(r, rects, strong_prev, theta)
+                }),
+            }
         } else {
             vec![classify_finest_range(0..nb, rects, &strong_prev, theta)]
         };
@@ -288,9 +318,9 @@ impl Connectivity {
             p2l_frags.push((sh.p2l_deg, sh.p2l));
             m2p_frags.push((sh.m2p_deg, sh.m2p));
         }
-        let near = assemble_csr(nb, near_frags, workers > 1);
-        let p2l = assemble_csr(nb, p2l_frags, workers > 1);
-        let m2p = assemble_csr(nb, m2p_frags, workers > 1);
+        let near = assemble_csr(nb, near_frags, workers > 1, pool);
+        let p2l = assemble_csr(nb, p2l_frags, workers > 1, pool);
+        let m2p = assemble_csr(nb, m2p_frags, workers > 1, pool);
 
         Connectivity {
             theta,
@@ -425,8 +455,14 @@ const PARALLEL_FILL_MIN: usize = 1 << 16;
 /// degrees (in fragment = box order) fixes the offsets, then each worker's
 /// fragment is copied into its disjoint slice of the global `data` array —
 /// lock-free, since the fragments tile the array contiguously. Lists below
-/// [`PARALLEL_FILL_MIN`] entries copy serially regardless.
-fn assemble_csr(nb: usize, fragments: Vec<(Vec<u32>, Vec<u32>)>, parallel_fill: bool) -> AdjList {
+/// [`PARALLEL_FILL_MIN`] entries copy serially regardless; the parallel
+/// fill runs on the pool when one is supplied, on scoped spawns otherwise.
+fn assemble_csr(
+    nb: usize,
+    fragments: Vec<(Vec<u32>, Vec<u32>)>,
+    parallel_fill: bool,
+    pool: Option<&WorkerPool>,
+) -> AdjList {
     let mut offsets = Vec::with_capacity(nb + 1);
     offsets.push(0u32);
     let mut acc = 0u32;
@@ -441,10 +477,16 @@ fn assemble_csr(nb: usize, fragments: Vec<(Vec<u32>, Vec<u32>)>, parallel_fill: 
     let lens: Vec<usize> = fragments.iter().map(|(_, d)| d.len()).collect();
     let slices = split_lengths_mut(&mut data, &lens);
     if parallel_fill && acc as usize >= PARALLEL_FILL_MIN {
-        scoped_map(
-            slices.into_iter().zip(&fragments).collect(),
-            |(dst, (_, src)): (&mut [u32], &(Vec<u32>, Vec<u32>))| dst.copy_from_slice(src),
-        );
+        type FillItem<'a> = (&'a mut [u32], &'a (Vec<u32>, Vec<u32>));
+        let items: Vec<FillItem> = slices.into_iter().zip(&fragments).collect();
+        match pool {
+            Some(p) => {
+                p.map_items(items, |(dst, (_, src)): FillItem| dst.copy_from_slice(src));
+            }
+            None => {
+                scoped_map(items, |(dst, (_, src)): FillItem| dst.copy_from_slice(src));
+            }
+        }
     } else {
         for (dst, (_, src)) in slices.into_iter().zip(&fragments) {
             dst.copy_from_slice(src);
@@ -627,6 +669,24 @@ mod tests {
                 assert_eq!(a.data, b.data, "t={nt} {name}");
             }
         }
+    }
+
+    #[test]
+    fn pool_build_is_byte_identical_to_serial() {
+        let mut r = Pcg64::seed_from_u64(9);
+        let (pts, gs) = workload::normal_cloud(2000, 0.1, &mut r);
+        let pyr = Pyramid::build(&pts, &gs, 3).unwrap();
+        let serial = Connectivity::build(&pyr, 0.5);
+        let pool = crate::util::pool::WorkerPool::new(3, false);
+        let pooled = Connectivity::build_on_pool(&pyr, 0.5, 3, &pool);
+        assert_eq!(serial.checks, pooled.checks);
+        for l in 0..=pyr.levels {
+            assert_eq!(serial.weak[l].offsets, pooled.weak[l].offsets);
+            assert_eq!(serial.weak[l].data, pooled.weak[l].data);
+        }
+        assert_eq!(serial.near.data, pooled.near.data);
+        assert_eq!(serial.p2l.data, pooled.p2l.data);
+        assert_eq!(serial.m2p.data, pooled.m2p.data);
     }
 
     #[test]

@@ -83,14 +83,20 @@ impl Coeffs {
 /// Harmonic: `a_j += −Γ (z_s−z_0)^{j−1}`, `j ≥ 1`.
 /// Log: `a_0 += Γ`, `a_j += −Γ (z_s−z_0)^j / j`.
 pub fn p2m(kernel: Kernel, z0: C64, sources: &[C64], gammas: &[C64], acc: &mut Coeffs) {
-    let p = acc.order();
+    p2m_slice(kernel, z0, sources, gammas, &mut acc.0);
+}
+
+/// Slice form of [`p2m`] — the drivers accumulate straight into the box's
+/// coefficient storage instead of building a `Coeffs` temporary per box.
+pub fn p2m_slice(kernel: Kernel, z0: C64, sources: &[C64], gammas: &[C64], acc: &mut [C64]) {
+    let p = acc.len() - 1;
     match kernel {
         Kernel::Harmonic => {
             for (&zs, &g) in sources.iter().zip(gammas) {
                 let t = zs - z0;
                 let mut pw = -g; // −Γ t^{j−1} starting at j = 1
                 for j in 1..=p {
-                    acc.0[j] += pw;
+                    acc[j] += pw;
                     pw *= t;
                 }
             }
@@ -98,10 +104,10 @@ pub fn p2m(kernel: Kernel, z0: C64, sources: &[C64], gammas: &[C64], acc: &mut C
         Kernel::Log => {
             for (&zs, &g) in sources.iter().zip(gammas) {
                 let t = zs - z0;
-                acc.0[0] += g;
+                acc[0] += g;
                 let mut pw = t; // t^j
                 for j in 1..=p {
-                    acc.0[j] += (-g) * pw / j as f64;
+                    acc[j] += (-g) * pw / j as f64;
                     pw *= t;
                 }
             }
@@ -116,14 +122,20 @@ pub fn p2m(kernel: Kernel, z0: C64, sources: &[C64], gammas: &[C64], acc: &mut C
 /// Harmonic: `b_l += Γ / (z_s−z_0)^{l+1}`.
 /// Log: `b_0 += Γ log(z_0−z_s)`, `b_l −= Γ / (l (z_s−z_0)^l)`.
 pub fn p2l(kernel: Kernel, z0: C64, sources: &[C64], gammas: &[C64], acc: &mut Coeffs) {
-    let p = acc.order();
+    p2l_slice(kernel, z0, sources, gammas, &mut acc.0);
+}
+
+/// Slice form of [`p2l`] — accumulates straight into the destination box's
+/// local-expansion storage (no per-box copy-out/copy-back).
+pub fn p2l_slice(kernel: Kernel, z0: C64, sources: &[C64], gammas: &[C64], acc: &mut [C64]) {
+    let p = acc.len() - 1;
     match kernel {
         Kernel::Harmonic => {
             for (&zs, &g) in sources.iter().zip(gammas) {
                 let it = (zs - z0).recip();
                 let mut pw = g * it; // Γ / t^{l+1}
                 for l in 0..=p {
-                    acc.0[l] += pw;
+                    acc[l] += pw;
                     pw *= it;
                 }
             }
@@ -131,11 +143,11 @@ pub fn p2l(kernel: Kernel, z0: C64, sources: &[C64], gammas: &[C64], acc: &mut C
         Kernel::Log => {
             for (&zs, &g) in sources.iter().zip(gammas) {
                 let t = zs - z0;
-                acc.0[0] += g * (-t).ln();
+                acc[0] += g * (-t).ln();
                 let it = t.recip();
                 let mut pw = it; // 1/t^l
                 for l in 1..=p {
-                    acc.0[l] -= g * pw / l as f64;
+                    acc[l] -= g * pw / l as f64;
                     pw *= it;
                 }
             }
@@ -146,9 +158,17 @@ pub fn p2l(kernel: Kernel, z0: C64, sources: &[C64], gammas: &[C64], acc: &mut C
 /// L2P: evaluate the local expansion at `z` by Horner's rule (§3.3.4).
 #[inline]
 pub fn l2p(z0: C64, coeffs: &Coeffs, z: C64) -> C64 {
+    l2p_slice(z0, &coeffs.0, z)
+}
+
+/// Slice form of [`l2p`] — evaluates directly from the coefficient pyramid
+/// storage (the drivers used to copy every box's coefficients into a
+/// `Coeffs` temporary per box before evaluating).
+#[inline]
+pub fn l2p_slice(z0: C64, coeffs: &[C64], z: C64) -> C64 {
     let w = z - z0;
     let mut acc = ZERO;
-    for &b in coeffs.0.iter().rev() {
+    for &b in coeffs.iter().rev() {
         acc = acc * w + b;
     }
     acc
@@ -158,15 +178,21 @@ pub fn l2p(z0: C64, coeffs: &Coeffs, z: C64) -> C64 {
 /// case — valid only outside the box radius; Horner in `1/(z−z_0)`).
 #[inline]
 pub fn m2p(z0: C64, coeffs: &Coeffs, z: C64) -> C64 {
+    m2p_slice(z0, &coeffs.0, z)
+}
+
+/// Slice form of [`m2p`] (see [`l2p_slice`]).
+#[inline]
+pub fn m2p_slice(z0: C64, coeffs: &[C64], z: C64) -> C64 {
     let t = z - z0;
     let it = t.recip();
     // Σ_{j≥1} a_j t^{−j} = it·(a_1 + it·(a_2 + …)), then the a_0 log term.
     let mut acc = ZERO;
-    for &a in coeffs.0.iter().skip(1).rev() {
+    for &a in coeffs.iter().skip(1).rev() {
         acc = (acc + a) * it;
     }
-    if coeffs.0[0] != ZERO {
-        acc += coeffs.0[0] * t.ln();
+    if coeffs[0] != ZERO {
+        acc += coeffs[0] * t.ln();
     }
     acc
 }

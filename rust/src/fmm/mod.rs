@@ -1,7 +1,9 @@
 //! The CPU FMM drivers: the paper's serial reference implementation
 //! (§4: single-threaded, symmetry-exploiting, scaled shift operators) and
 //! the multithreaded execution engine ([`parallel`]) that shards every
-//! computational phase over scoped worker threads.
+//! computational phase over the persistent worker pool
+//! ([`crate::util::pool`]; the scoped spawn-per-phase variant is kept as
+//! the benchmark reference).
 //!
 //! Both drivers are fully *phase-instrumented*: they report wall-clock time
 //! and work counts for every phase of Table 5.1 (Sort, Connect, P2M, M2M,
@@ -19,7 +21,7 @@ use crate::config::FmmConfig;
 use crate::connectivity::Connectivity;
 use crate::expansion::matrices::{M2lOperator, M2lScratch};
 use crate::expansion::shifts::{l2l_with, m2l_with, m2m_scaled_with, ShiftScratch};
-use crate::expansion::{l2p, m2p, p2l, p2m, Kernel};
+use crate::expansion::{l2p_slice, m2p_slice, p2l_slice, p2m_slice, Kernel};
 use crate::tree::{boxes_at_level, partition::SortStats, Pyramid};
 
 /// Phases of the algorithm, in execution order (Table 5.1 vocabulary).
@@ -186,7 +188,7 @@ pub fn structural_counts(pyr: &Pyramid, con: &Connectivity, p: usize) -> WorkCou
 }
 
 /// Options of one evaluation.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct FmmOptions {
     pub cfg: FmmConfig,
     pub kernel: Kernel,
@@ -203,6 +205,16 @@ pub struct FmmOptions {
     /// `--threads` accelerates the whole evaluation, not just the
     /// computational phase. Both engines build bit-identical topologies.
     pub topo_threads: Option<usize>,
+    /// Best-effort core pinning (worker *i* → core *i*, `--pin`): consulted
+    /// when `pool` is `None` to pick the pinned flavor of the process-wide
+    /// shared pool ([`crate::util::pool::global`]).
+    pub pin: bool,
+    /// The persistent worker pool executing this evaluation
+    /// ([`crate::util::pool::WorkerPool`]). `None` (the default) resolves
+    /// to the process-wide shared pool, so after the first evaluation no
+    /// code path spawns threads. Own a pool explicitly to isolate
+    /// workloads or control its size/pinning/lifetime.
+    pub pool: Option<std::sync::Arc<crate::util::pool::WorkerPool>>,
 }
 
 impl Default for FmmOptions {
@@ -213,6 +225,8 @@ impl Default for FmmOptions {
             symmetric_p2p: true,
             threads: None,
             topo_threads: None,
+            pin: false,
+            pool: None,
         }
     }
 }
@@ -234,9 +248,26 @@ impl FmmOptions {
         }
     }
 
-    /// The topology build configuration implied by these options.
+    /// The worker pool these options select: the explicit [`Self::pool`]
+    /// if set, otherwise the process-wide shared pool (pinned flavor per
+    /// [`Self::pin`]).
+    pub fn shared_pool(&self) -> std::sync::Arc<crate::util::pool::WorkerPool> {
+        match &self.pool {
+            Some(p) => std::sync::Arc::clone(p),
+            None => crate::util::pool::global(self.pin),
+        }
+    }
+
+    /// The topology build configuration implied by these options. Carries
+    /// the resolved pool whenever the topology engine is parallel, so the
+    /// Sort/Connect prologue spawns no threads either.
     pub fn topology_options(&self) -> crate::topology::TopologyOptions {
-        crate::topology::TopologyOptions::parallel(self.cfg.theta, self.effective_topo_threads())
+        let nt = self.effective_topo_threads();
+        let mut topo = crate::topology::TopologyOptions::parallel(self.cfg.theta, nt);
+        if nt > 1 {
+            topo.pool = Some(self.shared_pool());
+        }
+        topo
     }
 }
 
@@ -309,8 +340,13 @@ pub fn evaluate(
 /// trees — exactly what the paper does ("the sorting was performed on the
 /// CPU to ensure identical multipole trees", §5).
 ///
-/// Dispatches between the serial reference driver and the multithreaded
-/// engine according to [`FmmOptions::effective_threads`].
+/// Dispatches between the serial reference driver and the pooled
+/// multithreaded engine according to [`FmmOptions::effective_threads`];
+/// multicore runs execute on the persistent worker pool resolved by
+/// [`FmmOptions::shared_pool`] (zero thread spawns once the pool exists).
+/// The scoped spawn-per-phase engine remains available directly as
+/// [`parallel::evaluate_on_tree_parallel`] — it is the `pool-bench`
+/// comparison baseline, not a dispatch target.
 pub fn evaluate_on_tree(
     pyr: &Pyramid,
     con: &Connectivity,
@@ -318,7 +354,8 @@ pub fn evaluate_on_tree(
 ) -> (Vec<C64>, PhaseTimes, WorkCounts) {
     let nt = opts.effective_threads().min(pyr.n_leaves());
     if nt > 1 {
-        return parallel::evaluate_on_tree_parallel(pyr, con, opts, nt);
+        let pool = opts.shared_pool();
+        return parallel::evaluate_on_tree_pool(pyr, con, opts, &pool);
     }
     evaluate_on_tree_serial(pyr, con, opts)
 }
@@ -359,9 +396,15 @@ pub fn evaluate_on_tree_serial(
         let centers = pyr.centers(levels);
         for b in 0..nl {
             let (lo, hi) = (pyr.starts[b], pyr.starts[b + 1]);
-            let mut acc = crate::expansion::Coeffs::zero(p);
-            p2m(opts.kernel, centers[b], &pos[lo..hi], &gam[lo..hi], &mut acc);
-            multipole.of_mut(levels, b).copy_from_slice(&acc.0);
+            // accumulate straight into the (zeroed) pyramid storage — no
+            // per-box Coeffs temporary
+            p2m_slice(
+                opts.kernel,
+                centers[b],
+                &pos[lo..hi],
+                &gam[lo..hi],
+                multipole.of_mut(levels, b),
+            );
         }
         counts.p2m_particles = pyr.particles.len();
     }
@@ -427,14 +470,15 @@ pub fn evaluate_on_tree_serial(
         let centers = pyr.centers(levels);
         for b in 0..nl {
             let dst = local.of_mut(levels, b);
-            let mut acc = crate::expansion::Coeffs(dst.to_vec());
             for &s in con.p2l.sources(b) {
                 let su = s as usize;
                 let (lo, hi) = (pyr.starts[su], pyr.starts[su + 1]);
-                p2l(opts.kernel, centers[b], &pos[lo..hi], &gam[lo..hi], &mut acc);
+                // accumulate in place — p2l only adds to the coefficients,
+                // so the copy-out/copy-back through a Coeffs temporary the
+                // driver used to do was pure allocation churn
+                p2l_slice(opts.kernel, centers[b], &pos[lo..hi], &gam[lo..hi], dst);
                 counts.p2l_pairs += 1;
             }
-            dst.copy_from_slice(&acc.0);
         }
     }
     times.0[Phase::M2L as usize] = t.elapsed().as_secs_f64();
@@ -467,15 +511,17 @@ pub fn evaluate_on_tree_serial(
         let centers = pyr.centers(levels);
         for b in 0..nl {
             let (lo, hi) = (pyr.starts[b], pyr.starts[b + 1]);
-            let loc = crate::expansion::Coeffs(local.of(levels, b).to_vec());
+            // evaluate straight from the pyramid storage — the driver used
+            // to copy every box's coefficients into a Coeffs per box
+            let loc = local.of(levels, b);
             for i in lo..hi {
-                phi[i] = l2p(centers[b], &loc, pos[i]);
+                phi[i] = l2p_slice(centers[b], loc, pos[i]);
             }
             for &s in con.m2p.sources(b) {
                 let su = s as usize;
-                let msrc = crate::expansion::Coeffs(multipole.of(levels, su).to_vec());
+                let msrc = multipole.of(levels, su);
                 for i in lo..hi {
-                    phi[i] += m2p(centers[su], &msrc, pos[i]);
+                    phi[i] += m2p_slice(centers[su], msrc, pos[i]);
                 }
                 counts.m2p_pairs += 1;
             }
@@ -612,7 +658,7 @@ mod tests {
             kernel,
             symmetric_p2p: symmetric,
             threads: None,
-            topo_threads: None,
+            ..FmmOptions::default()
         };
         let out = evaluate(&pts, &gs, &opts).unwrap();
         let exact = direct::eval_symmetric(kernel, &pts, &gs);

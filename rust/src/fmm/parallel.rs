@@ -1,34 +1,46 @@
 //! The multithreaded FMM execution engine.
 //!
 //! Every computational phase of the serial driver
-//! ([`super::evaluate_on_tree_serial`]) is sharded over
-//! `std::thread::scope` workers with **writer-side ownership**: each thread
-//! owns a disjoint contiguous slice of the *destination* boxes (P2M/L2P/P2P
-//! over leaf ranges, M2M/M2L/L2L over box ranges per level), matching the
-//! paper's directed no-write-conflict list layout (§4.3), so the engine
-//! needs no locks or atomics. The only cross-thread reduction is the
-//! symmetric P2P path (§4.2), whose scattered `Φ_j −= Γ_i r` updates go to
-//! per-thread full-length accumulators merged in thread order — the run is
-//! deterministic for a fixed thread count.
+//! ([`super::evaluate_on_tree_serial`]) is sharded over worker threads with
+//! **writer-side ownership**: each worker owns a disjoint contiguous slice
+//! of the *destination* boxes (P2M/L2P/P2P over leaf ranges, M2M/M2L/L2L
+//! over box ranges per level), matching the paper's directed
+//! no-write-conflict list layout (§4.3), so the engine needs no locks or
+//! atomics in any kernel. The only cross-thread reduction is the symmetric
+//! P2P path (§4.2), whose scattered `Φ_j −= Γ_i r` updates go to per-task
+//! full-length accumulators merged in task order — the run is
+//! deterministic for a fixed worker count.
+//!
+//! The engine exists in two variants with identical sharding and
+//! arithmetic:
+//!
+//! * **Pooled** ([`evaluate_on_tree_pool`]) — the production path: every
+//!   phase is a fan-out on a persistent [`WorkerPool`], so a full
+//!   evaluation performs **zero thread spawns** (asserted by
+//!   `tests/zero_spawn.rs`); per-worker `ShiftScratch`/`M2lScratch` and
+//!   the pool-owned P2P accumulators are allocated once per pool, not once
+//!   per phase.
+//! * **Scoped** ([`evaluate_on_tree_parallel`]) — the historical
+//!   spawn-per-phase engine over `std::thread::scope`, kept as the
+//!   dispatch-overhead baseline that `pool-bench` compares against.
 //!
 //! Work counts are *identical* to the serial engine (asserted by
-//! `tests/parallel_parity.rs`): every count is derived from the same tree
-//! and connectivity structure, so `gpusim` consumes the same
-//! [`WorkCounts`] no matter which engine measured the tree. Destination
-//! ranges are balanced by per-box work estimates
+//! `tests/parallel_parity.rs` and `tests/pool_parity.rs`): every count is
+//! derived from the same tree and connectivity structure, so `gpusim`
+//! consumes the same [`WorkCounts`] no matter which engine measured the
+//! tree. Destination ranges are balanced by per-box work estimates
 //! ([`weighted_ranges`]) because the symmetric P2P load is triangular and
 //! the M2L in-degree varies on adaptive meshes.
 //!
-//! Besides the per-problem engine above, this module provides the batch
-//! entry point [`evaluate_trees_pooled`]: one scoped worker pool shared by
-//! a whole group of problems, each worker claiming problems off an atomic
-//! queue and running the serial driver on its claims. For many small
-//! problems this amortizes thread-spawn across the batch (the per-problem
-//! engine spawns a fresh scope per *phase*) and keeps per-problem results
-//! bitwise-identical to the serial reference driver — the CPU counterpart
-//! of amortizing GPU launch overhead across a packed-tensor batch
-//! ([`crate::batch`]).
+//! Besides the per-problem engines above, this module provides the batch
+//! entry points [`evaluate_trees_on_pool`] (pool workers claim whole
+//! problems off a shared queue — the production path of
+//! [`crate::batch`]) and the scoped [`evaluate_trees_pooled`] reference.
+//! Per-problem results stay bitwise-identical to the serial driver — the
+//! CPU counterpart of amortizing GPU launch overhead across a
+//! packed-tensor batch.
 
+use std::ops::Range;
 use std::time::Instant;
 
 use super::{CoeffPyramid, FmmOptions, Phase, PhaseTimes, WorkCounts};
@@ -36,13 +48,520 @@ use crate::complex::{C64, ZERO};
 use crate::connectivity::Connectivity;
 use crate::expansion::matrices::{M2lOperator, M2lScratch};
 use crate::expansion::shifts::{l2l_with, m2l_with, m2m_scaled_with, ShiftScratch};
-use crate::expansion::{l2p, m2p, p2l, p2m, Coeffs, Kernel};
+use crate::expansion::{l2p_slice, m2p_slice, p2l_slice, p2m_slice, Kernel};
 use crate::tree::{boxes_at_level, Pyramid};
+use crate::util::pool::{note_spawn, Accum, WorkerPool};
 use crate::util::threadpool::{ranges, scoped_chunks_mut, split_lengths_mut, weighted_ranges};
 
-/// The computational phase on a prebuilt tree, executed by `nt ≥ 1` worker
-/// threads. Returns leaf-ordered potentials plus timings/counts
-/// (Sort/Connect slots left zero), exactly like the serial driver.
+/// Per-destination-box M2L weights (in-degree varies on adaptive meshes).
+fn m2l_weights(con: &Connectivity, l: usize, nb: usize) -> Vec<u64> {
+    (0..nb)
+        .map(|b| con.weak[l].sources(b).len() as u64)
+        .collect()
+}
+
+/// Per-leaf L2P weights: particles × (own expansion + M2P sources).
+fn l2p_weights(pyr: &Pyramid, con: &Connectivity, nl: usize) -> Vec<u64> {
+    (0..nl)
+        .map(|b| {
+            let nb = (pyr.starts[b + 1] - pyr.starts[b]) as u64;
+            nb * (1 + con.m2p.sources(b).len() as u64)
+        })
+        .collect()
+}
+
+/// Per-leaf symmetric-P2P pair weights (box `b` owns all pairs with
+/// sources `≥ b` — a triangular load).
+fn p2p_symmetric_weights(pyr: &Pyramid, con: &Connectivity, nl: usize) -> Vec<u64> {
+    (0..nl)
+        .map(|b| {
+            let nb = (pyr.starts[b + 1] - pyr.starts[b]) as u64;
+            let srcs: u64 = con
+                .near
+                .sources(b)
+                .iter()
+                .filter(|&&s| s as usize >= b)
+                .map(|&s| (pyr.starts[s as usize + 1] - pyr.starts[s as usize]) as u64)
+                .sum();
+            nb * srcs
+        })
+        .collect()
+}
+
+/// The P2M inner loop of one leaf range (shared by the scoped and pooled
+/// engines so their arithmetic is identical — as are all `*_range`
+/// kernels below: each engine only supplies its own fan-out and scratch).
+#[allow(clippy::too_many_arguments)] // internal kernel plumbing, not API
+fn p2m_range(
+    r: Range<usize>,
+    chunk: &mut [C64],
+    pyr: &Pyramid,
+    centers: &[C64],
+    pos: &[C64],
+    gam: &[C64],
+    kernel: Kernel,
+    stride: usize,
+) {
+    for (k, b) in r.enumerate() {
+        let (lo, hi) = (pyr.starts[b], pyr.starts[b + 1]);
+        p2m_slice(
+            kernel,
+            centers[b],
+            &pos[lo..hi],
+            &gam[lo..hi],
+            &mut chunk[k * stride..(k + 1) * stride],
+        );
+    }
+}
+
+/// The M2M inner loop of one *parent* range: a task owns a parent box
+/// together with its four (contiguous) children, so the accumulation
+/// order into each parent matches the serial driver exactly.
+fn m2m_range(
+    r: Range<usize>,
+    chunk: &mut [C64],
+    children: &[C64],
+    child_centers: &[C64],
+    parent_centers: &[C64],
+    stride: usize,
+    scratch: &mut ShiftScratch,
+) {
+    for (k, bp) in r.enumerate() {
+        let zp = parent_centers[bp];
+        let parent = &mut chunk[k * stride..(k + 1) * stride];
+        for bc in 4 * bp..4 * bp + 4 {
+            let zc = child_centers[bc];
+            let child = &children[bc * stride..(bc + 1) * stride];
+            if (zc - zp).norm_sqr() == 0.0 {
+                for (pa, ch) in parent.iter_mut().zip(child) {
+                    *pa += *ch;
+                }
+            } else {
+                m2m_scaled_with(child, zc, parent, zp, scratch);
+            }
+        }
+    }
+}
+
+/// The M2L inner loop of one destination range at level `l`.
+#[allow(clippy::too_many_arguments)] // internal kernel plumbing, not API
+fn m2l_range(
+    r: Range<usize>,
+    chunk: &mut [C64],
+    con: &Connectivity,
+    l: usize,
+    centers: &[C64],
+    mults: &[C64],
+    stride: usize,
+    m2l_op: Option<&M2lOperator>,
+    shift: &mut ShiftScratch,
+    m2l_scratch: &mut M2lScratch,
+) {
+    for (k, b) in r.enumerate() {
+        let zo = centers[b];
+        let dst = &mut chunk[k * stride..(k + 1) * stride];
+        for &s in con.weak[l].sources(b) {
+            let su = s as usize;
+            let src = &mults[su * stride..(su + 1) * stride];
+            match m2l_op {
+                Some(op) => op.apply(src, centers[su], dst, zo, m2l_scratch),
+                None => m2l_with(src, centers[su], dst, zo, shift),
+            }
+        }
+    }
+}
+
+/// The P2L-shortcut inner loop of one finest-level range.
+#[allow(clippy::too_many_arguments)] // internal kernel plumbing, not API
+fn p2l_shortcut_range(
+    r: Range<usize>,
+    chunk: &mut [C64],
+    pyr: &Pyramid,
+    con: &Connectivity,
+    centers: &[C64],
+    pos: &[C64],
+    gam: &[C64],
+    kernel: Kernel,
+    stride: usize,
+) {
+    for (k, b) in r.enumerate() {
+        if con.p2l.sources(b).is_empty() {
+            continue;
+        }
+        let dst = &mut chunk[k * stride..(k + 1) * stride];
+        for &s in con.p2l.sources(b) {
+            let su = s as usize;
+            let (lo, hi) = (pyr.starts[su], pyr.starts[su + 1]);
+            p2l_slice(kernel, centers[b], &pos[lo..hi], &gam[lo..hi], dst);
+        }
+    }
+}
+
+/// The L2L inner loop of one *child* range.
+fn l2l_range(
+    r: Range<usize>,
+    chunk: &mut [C64],
+    parents: &[C64],
+    parent_centers: &[C64],
+    child_centers: &[C64],
+    stride: usize,
+    scratch: &mut ShiftScratch,
+) {
+    for (k, b) in r.enumerate() {
+        let zp = parent_centers[b >> 2];
+        let zc = child_centers[b];
+        let parent = &parents[(b >> 2) * stride..((b >> 2) + 1) * stride];
+        let child = &mut chunk[k * stride..(k + 1) * stride];
+        l2l_with(parent, zp, child, zc, scratch);
+    }
+}
+
+/// The symmetric-P2P inner loop of one destination range, accumulating
+/// into `phr`/`phm` (shared by the scoped and pooled engines so their
+/// arithmetic is identical).
+#[allow(clippy::too_many_arguments)]
+fn p2p_symmetric_range(
+    r: Range<usize>,
+    pyr: &Pyramid,
+    con: &Connectivity,
+    xs: &[f64],
+    ys: &[f64],
+    gre: &[f64],
+    gim: &[f64],
+    phr: &mut [f64],
+    phm: &mut [f64],
+) {
+    for b in r {
+        let (blo, bhi) = (pyr.starts[b], pyr.starts[b + 1]);
+        for &src in con.near.sources(b) {
+            let su = src as usize;
+            if su < b {
+                continue; // owned by the other side
+            }
+            let (slo, shi) = (pyr.starts[su], pyr.starts[su + 1]);
+            for i in blo..bhi {
+                let (xi, yi) = (xs[i], ys[i]);
+                let (gri, gii) = (gre[i], gim[i]);
+                let j0 = if su == b { i + 1 } else { slo };
+                let (mut ar, mut ai) = (0.0f64, 0.0f64);
+                for j in j0..shi {
+                    // r = 1/(z_j − z_i); Φ_i += Γ_j r; Φ_j −= Γ_i r
+                    let dx = xs[j] - xi;
+                    let dy = ys[j] - yi;
+                    let inv = 1.0 / (dx * dx + dy * dy);
+                    let rr = dx * inv;
+                    let ri = -dy * inv;
+                    ar += gre[j] * rr - gim[j] * ri;
+                    ai += gre[j] * ri + gim[j] * rr;
+                    phr[j] -= gri * rr - gii * ri;
+                    phm[j] -= gri * ri + gii * rr;
+                }
+                phr[i] += ar;
+                phm[i] += ai;
+            }
+        }
+    }
+}
+
+/// The directed-P2P inner loop of one destination range (GPU layout,
+/// §4.3): pure writer-side sharding, no reduction at all.
+fn p2p_directed_range(
+    r: Range<usize>,
+    chunk: &mut [C64],
+    pyr: &Pyramid,
+    con: &Connectivity,
+    pos: &[C64],
+    gam: &[C64],
+    kernel: Kernel,
+) {
+    let base = pyr.starts[r.start];
+    for b in r {
+        let (blo, bhi) = (pyr.starts[b], pyr.starts[b + 1]);
+        for &src in con.near.sources(b) {
+            let su = src as usize;
+            let (slo, shi) = (pyr.starts[su], pyr.starts[su + 1]);
+            for i in blo..bhi {
+                let zi = pos[i];
+                let mut acc = chunk[i - base];
+                if su == b {
+                    for j in slo..shi {
+                        if j != i {
+                            acc += kernel.eval(zi, pos[j], gam[j]);
+                        }
+                    }
+                } else {
+                    for j in slo..shi {
+                        acc += kernel.eval(zi, pos[j], gam[j]);
+                    }
+                }
+                chunk[i - base] = acc;
+            }
+        }
+    }
+}
+
+/// The L2P (+ M2P) inner loop of one leaf range (shared by both engines).
+#[allow(clippy::too_many_arguments)] // internal kernel plumbing, not API
+fn l2p_range(
+    r: Range<usize>,
+    chunk: &mut [C64],
+    pyr: &Pyramid,
+    con: &Connectivity,
+    centers: &[C64],
+    mlev: &[C64],
+    llev: &[C64],
+    pos: &[C64],
+    stride: usize,
+) {
+    let base = pyr.starts[r.start];
+    for b in r {
+        let (lo, hi) = (pyr.starts[b], pyr.starts[b + 1]);
+        let loc = &llev[b * stride..(b + 1) * stride];
+        for i in lo..hi {
+            chunk[i - base] = l2p_slice(centers[b], loc, pos[i]);
+        }
+        for &src in con.m2p.sources(b) {
+            let su = src as usize;
+            let msrc = &mlev[su * stride..(su + 1) * stride];
+            for i in lo..hi {
+                chunk[i - base] += m2p_slice(centers[su], msrc, pos[i]);
+            }
+        }
+    }
+}
+
+/// The computational phase on a prebuilt tree, executed through the
+/// **persistent worker pool**: every phase is one pool fan-out — zero
+/// thread spawns — with per-worker scratch and pool-owned symmetric-P2P
+/// accumulators reused across phases, problems and batches. Returns
+/// leaf-ordered potentials plus timings/counts (Sort/Connect slots left
+/// zero), exactly like the serial driver; results are bitwise-identical
+/// to the scoped engine at the same worker count.
+pub fn evaluate_on_tree_pool(
+    pyr: &Pyramid,
+    con: &Connectivity,
+    opts: &FmmOptions,
+    pool: &WorkerPool,
+) -> (Vec<C64>, PhaseTimes, WorkCounts) {
+    let p = opts.cfg.p;
+    let stride = p + 1;
+    let levels = pyr.levels;
+    let nl = pyr.n_leaves();
+    let n = pyr.particles.len();
+    let nt = opts
+        .effective_threads()
+        .min(pool.n_workers())
+        .clamp(1, nl);
+    let mut times = PhaseTimes::default();
+    // identical to the serial driver's measured values — see the scoped
+    // engine below and `structural_counts_match_measured`
+    let counts = super::structural_counts(pyr, con, p);
+
+    // SoA copies of the permuted particles, shared read-only by all workers
+    let pos_v: Vec<C64> = pyr.particles.iter().map(|q| q.pos).collect();
+    let gam_v: Vec<C64> = pyr.particles.iter().map(|q| q.gamma).collect();
+    let pos: &[C64] = &pos_v;
+    let gam: &[C64] = &gam_v;
+
+    let mut multipole = CoeffPyramid::zeros(levels, p);
+    let mut local = CoeffPyramid::zeros(levels, p);
+
+    // ---- P2M: leaf multipole expansions, sharded over leaf ranges ------
+    let t = Instant::now();
+    {
+        let centers = pyr.centers(levels);
+        let rs = ranges(nl, nt);
+        pool.run_chunks_mut(&mut multipole.levels[levels], stride, &rs, |r, chunk, _ws| {
+            p2m_range(r, chunk, pyr, &centers, pos, gam, opts.kernel, stride);
+        });
+    }
+    times.0[Phase::P2M as usize] = t.elapsed().as_secs_f64();
+
+    // ---- M2M: upward pass, sharded over *parent* ranges per level ------
+    let t = Instant::now();
+    for l in (1..=levels).rev() {
+        let (parents, children) = {
+            // split-borrow the two levels
+            let (lo, hi) = multipole.levels.split_at_mut(l);
+            (&mut lo[l - 1], &hi[0])
+        };
+        let children: &[C64] = children;
+        let child_centers = pyr.centers(l);
+        let parent_centers = pyr.centers(l - 1);
+        let rs = ranges(boxes_at_level(l - 1), nt);
+        pool.run_chunks_mut(parents, stride, &rs, |r, chunk, ws| {
+            m2m_range(
+                r,
+                chunk,
+                children,
+                &child_centers,
+                &parent_centers,
+                stride,
+                &mut ws.shift,
+            );
+        });
+    }
+    times.0[Phase::M2M as usize] = t.elapsed().as_secs_f64();
+
+    // ---- M2L (+ P2L): sharded over destination-box ranges per level ----
+    let t = Instant::now();
+    let m2l_op = (opts.kernel == Kernel::Harmonic).then(|| M2lOperator::new(p));
+    for l in 1..=levels {
+        let nb = boxes_at_level(l);
+        let centers = pyr.centers(l);
+        let (mults, locs) = (&multipole.levels[l], &mut local.levels[l]);
+        let mults: &[C64] = mults;
+        let rs = weighted_ranges(&m2l_weights(con, l, nb), nt);
+        pool.run_chunks_mut(locs, stride, &rs, |r, chunk, ws| {
+            m2l_range(
+                r,
+                chunk,
+                con,
+                l,
+                &centers,
+                mults,
+                stride,
+                m2l_op.as_ref(),
+                &mut ws.shift,
+                &mut ws.m2l,
+            );
+        });
+    }
+    // P2L shortcuts (finest level; timed with M2L — they substitute for it)
+    {
+        let centers = pyr.centers(levels);
+        let rs = ranges(nl, nt);
+        pool.run_chunks_mut(&mut local.levels[levels], stride, &rs, |r, chunk, _ws| {
+            p2l_shortcut_range(r, chunk, pyr, con, &centers, pos, gam, opts.kernel, stride);
+        });
+    }
+    times.0[Phase::M2L as usize] = t.elapsed().as_secs_f64();
+
+    // ---- L2L: push local expansions down, sharded over child ranges ----
+    let t = Instant::now();
+    for l in 1..levels {
+        let (parents, children) = {
+            let (lo, hi) = local.levels.split_at_mut(l + 1);
+            (&lo[l], &mut hi[0])
+        };
+        let parents: &[C64] = parents;
+        let parent_centers = pyr.centers(l);
+        let child_centers = pyr.centers(l + 1);
+        let rs = ranges(boxes_at_level(l + 1), nt);
+        pool.run_chunks_mut(children, stride, &rs, |r, chunk, ws| {
+            l2l_range(
+                r,
+                chunk,
+                parents,
+                &parent_centers,
+                &child_centers,
+                stride,
+                &mut ws.shift,
+            );
+        });
+    }
+    times.0[Phase::L2L as usize] = t.elapsed().as_secs_f64();
+
+    // ---- L2P (+ M2P): sharded over leaf ranges; each task owns the
+    // contiguous particle slice of its boxes --------------------------
+    let t = Instant::now();
+    let mut phi = vec![ZERO; n];
+    {
+        let centers_v = pyr.centers(levels);
+        let centers: &[C64] = &centers_v;
+        let mlev: &[C64] = &multipole.levels[levels];
+        let llev: &[C64] = &local.levels[levels];
+        let rs = weighted_ranges(&l2p_weights(pyr, con, nl), nt);
+        let lens: Vec<usize> = rs
+            .iter()
+            .map(|r| pyr.starts[r.end] - pyr.starts[r.start])
+            .collect();
+        let chunks = split_lengths_mut(&mut phi, &lens);
+        let tasks: Vec<(Range<usize>, &mut [C64])> = rs.iter().cloned().zip(chunks).collect();
+        pool.run_tasks(tasks, |_k, (r, chunk), _ws| {
+            l2p_range(r, chunk, pyr, con, centers, mlev, llev, pos, stride);
+        });
+    }
+    times.0[Phase::L2P as usize] = t.elapsed().as_secs_f64();
+
+    // ---- P2P: near field -----------------------------------------------
+    let t = Instant::now();
+    let xs_v: Vec<f64> = pos.iter().map(|z| z.re).collect();
+    let ys_v: Vec<f64> = pos.iter().map(|z| z.im).collect();
+    let gre_v: Vec<f64> = gam.iter().map(|z| z.re).collect();
+    let gim_v: Vec<f64> = gam.iter().map(|z| z.im).collect();
+    let (xs, ys, gre, gim): (&[f64], &[f64], &[f64], &[f64]) = (&xs_v, &ys_v, &gre_v, &gim_v);
+    if opts.symmetric_p2p && opts.kernel == Kernel::Harmonic {
+        // CPU formulation (§4.2): the scattered Φ_j updates go to the
+        // pool's persistent per-task accumulators, merged in task order —
+        // same reduction order as the scoped engine, no allocation per
+        // evaluation after the first.
+        let rs = weighted_ranges(&p2p_symmetric_weights(pyr, con, nl), nt);
+        let mut accs = pool.take_accums();
+        // hard invariant, not a debug assert: zip-truncation below would
+        // silently drop P2P ranges (wrong potentials, no panic)
+        assert!(
+            accs.len() >= rs.len(),
+            "accumulator lease shorter than the range list ({} < {})",
+            accs.len(),
+            rs.len()
+        );
+        {
+            let tasks: Vec<(Range<usize>, &mut Accum)> =
+                rs.iter().cloned().zip(accs.iter_mut()).collect();
+            pool.run_tasks(tasks, |_k, (r, acc), _ws| {
+                acc.reset(n);
+                p2p_symmetric_range(r, pyr, con, xs, ys, gre, gim, &mut acc.re, &mut acc.im);
+            });
+        }
+        // Merge sharded over particle ranges; every task folds the
+        // accumulators for its slice in task order, so the result is
+        // independent of merge parallelism.
+        {
+            let parts: &[Accum] = &accs[..rs.len()];
+            let merge_rs = ranges(n, nt);
+            let merge_lens: Vec<usize> = merge_rs.iter().map(|r| r.end - r.start).collect();
+            let chunks = split_lengths_mut(&mut phi, &merge_lens);
+            let tasks: Vec<(Range<usize>, &mut [C64])> =
+                merge_rs.iter().cloned().zip(chunks).collect();
+            pool.run_tasks(tasks, |_k, (r, chunk), _ws| {
+                for a in parts {
+                    for (k, i) in (r.start..r.end).enumerate() {
+                        chunk[k] += C64::new(a.re[i], a.im[i]);
+                    }
+                }
+            });
+        }
+        pool.return_accums(accs);
+    } else {
+        // directed formulation (the GPU layout, §4.3): pure writer-side
+        // sharding over destination boxes, no reduction at all.
+        let w: Vec<u64> = (0..nl)
+            .map(|b| counts.leaf_sizes[b] as u64 * counts.p2p_src_per_box[b] as u64)
+            .collect();
+        let rs = weighted_ranges(&w, nt);
+        let lens: Vec<usize> = rs
+            .iter()
+            .map(|r| pyr.starts[r.end] - pyr.starts[r.start])
+            .collect();
+        let chunks = split_lengths_mut(&mut phi, &lens);
+        let tasks: Vec<(Range<usize>, &mut [C64])> = rs.iter().cloned().zip(chunks).collect();
+        pool.run_tasks(tasks, |_k, (r, chunk), _ws| {
+            p2p_directed_range(r, chunk, pyr, con, pos, gam, opts.kernel);
+        });
+    }
+    times.0[Phase::P2P as usize] = t.elapsed().as_secs_f64();
+
+    (phi, times, counts)
+}
+
+/// The computational phase on a prebuilt tree, executed by `nt ≥ 1`
+/// **scoped** worker threads (a fresh `std::thread::scope` per phase).
+/// Kept as the dispatch-overhead reference that `pool-bench` measures the
+/// persistent pool against; production dispatch goes through
+/// [`evaluate_on_tree_pool`]. Returns leaf-ordered potentials plus
+/// timings/counts (Sort/Connect slots left zero), exactly like the serial
+/// driver.
 pub fn evaluate_on_tree_parallel(
     pyr: &Pyramid,
     con: &Connectivity,
@@ -78,22 +597,12 @@ pub fn evaluate_on_tree_parallel(
         let centers = pyr.centers(levels);
         let rs = ranges(nl, nt);
         scoped_chunks_mut(&mut multipole.levels[levels], stride, &rs, |r, chunk| {
-            let mut acc = Coeffs::zero(p);
-            for (k, b) in (r.start..r.end).enumerate() {
-                let (lo, hi) = (pyr.starts[b], pyr.starts[b + 1]);
-                acc.clear();
-                p2m(opts.kernel, centers[b], &pos[lo..hi], &gam[lo..hi], &mut acc);
-                chunk[k * stride..(k + 1) * stride].copy_from_slice(&acc.0);
-            }
+            p2m_range(r, chunk, pyr, &centers, pos, gam, opts.kernel, stride);
         });
     }
     times.0[Phase::P2M as usize] = t.elapsed().as_secs_f64();
 
     // ---- M2M: upward pass, sharded over *parent* ranges per level ------
-    //
-    // A thread owns a parent box together with its four (contiguous)
-    // children, so the accumulation order into each parent matches the
-    // serial driver exactly.
     let t = Instant::now();
     for l in (1..=levels).rev() {
         let (parents, children) = {
@@ -107,21 +616,15 @@ pub fn evaluate_on_tree_parallel(
         let rs = ranges(boxes_at_level(l - 1), nt);
         scoped_chunks_mut(parents, stride, &rs, |r, chunk| {
             let mut scratch = ShiftScratch::new();
-            for (k, bp) in (r.start..r.end).enumerate() {
-                let zp = parent_centers[bp];
-                let parent = &mut chunk[k * stride..(k + 1) * stride];
-                for bc in 4 * bp..4 * bp + 4 {
-                    let zc = child_centers[bc];
-                    let child = &children[bc * stride..(bc + 1) * stride];
-                    if (zc - zp).norm_sqr() == 0.0 {
-                        for (pa, ch) in parent.iter_mut().zip(child) {
-                            *pa += *ch;
-                        }
-                    } else {
-                        m2m_scaled_with(child, zc, parent, zp, &mut scratch);
-                    }
-                }
-            }
+            m2m_range(
+                r,
+                chunk,
+                children,
+                &child_centers,
+                &parent_centers,
+                stride,
+                &mut scratch,
+            );
         });
     }
     times.0[Phase::M2M as usize] = t.elapsed().as_secs_f64();
@@ -135,25 +638,22 @@ pub fn evaluate_on_tree_parallel(
         let (mults, locs) = (&multipole.levels[l], &mut local.levels[l]);
         let mults: &[C64] = mults;
         // balance by per-destination in-degree (varies on adaptive meshes)
-        let w: Vec<u64> = (0..nb)
-            .map(|b| con.weak[l].sources(b).len() as u64)
-            .collect();
-        let rs = weighted_ranges(&w, nt);
+        let rs = weighted_ranges(&m2l_weights(con, l, nb), nt);
         scoped_chunks_mut(locs, stride, &rs, |r, chunk| {
             let mut scratch = ShiftScratch::new();
             let mut m2l_scratch = M2lScratch::default();
-            for (k, b) in (r.start..r.end).enumerate() {
-                let zo = centers[b];
-                let dst = &mut chunk[k * stride..(k + 1) * stride];
-                for &s in con.weak[l].sources(b) {
-                    let su = s as usize;
-                    let src = &mults[su * stride..(su + 1) * stride];
-                    match &m2l_op {
-                        Some(op) => op.apply(src, centers[su], dst, zo, &mut m2l_scratch),
-                        None => m2l_with(src, centers[su], dst, zo, &mut scratch),
-                    }
-                }
-            }
+            m2l_range(
+                r,
+                chunk,
+                con,
+                l,
+                &centers,
+                mults,
+                stride,
+                m2l_op.as_ref(),
+                &mut scratch,
+                &mut m2l_scratch,
+            );
         });
     }
     // P2L shortcuts (finest level; timed with M2L — they substitute for it)
@@ -161,19 +661,7 @@ pub fn evaluate_on_tree_parallel(
         let centers = pyr.centers(levels);
         let rs = ranges(nl, nt);
         scoped_chunks_mut(&mut local.levels[levels], stride, &rs, |r, chunk| {
-            for (k, b) in (r.start..r.end).enumerate() {
-                if con.p2l.sources(b).is_empty() {
-                    continue;
-                }
-                let dst = &mut chunk[k * stride..(k + 1) * stride];
-                let mut acc = Coeffs(dst.to_vec());
-                for &s in con.p2l.sources(b) {
-                    let su = s as usize;
-                    let (lo, hi) = (pyr.starts[su], pyr.starts[su + 1]);
-                    p2l(opts.kernel, centers[b], &pos[lo..hi], &gam[lo..hi], &mut acc);
-                }
-                dst.copy_from_slice(&acc.0);
-            }
+            p2l_shortcut_range(r, chunk, pyr, con, &centers, pos, gam, opts.kernel, stride);
         });
     }
     times.0[Phase::M2L as usize] = t.elapsed().as_secs_f64();
@@ -191,13 +679,15 @@ pub fn evaluate_on_tree_parallel(
         let rs = ranges(boxes_at_level(l + 1), nt);
         scoped_chunks_mut(children, stride, &rs, |r, chunk| {
             let mut scratch = ShiftScratch::new();
-            for (k, b) in (r.start..r.end).enumerate() {
-                let zp = parent_centers[b >> 2];
-                let zc = child_centers[b];
-                let parent = &parents[(b >> 2) * stride..((b >> 2) + 1) * stride];
-                let child = &mut chunk[k * stride..(k + 1) * stride];
-                l2l_with(parent, zp, child, zc, &mut scratch);
-            }
+            l2l_range(
+                r,
+                chunk,
+                parents,
+                &parent_centers,
+                &child_centers,
+                stride,
+                &mut scratch,
+            );
         });
     }
     times.0[Phase::L2L as usize] = t.elapsed().as_secs_f64();
@@ -211,13 +701,7 @@ pub fn evaluate_on_tree_parallel(
         let centers: &[C64] = &centers_v;
         let mlev: &[C64] = &multipole.levels[levels];
         let llev: &[C64] = &local.levels[levels];
-        let w: Vec<u64> = (0..nl)
-            .map(|b| {
-                let nb = (pyr.starts[b + 1] - pyr.starts[b]) as u64;
-                nb * (1 + con.m2p.sources(b).len() as u64)
-            })
-            .collect();
-        let rs = weighted_ranges(&w, nt);
+        let rs = weighted_ranges(&l2p_weights(pyr, con, nl), nt);
         let lens: Vec<usize> = rs
             .iter()
             .map(|r| pyr.starts[r.end] - pyr.starts[r.start])
@@ -226,22 +710,9 @@ pub fn evaluate_on_tree_parallel(
         std::thread::scope(|s| {
             for (r, chunk) in rs.iter().zip(chunks) {
                 let r = r.clone();
+                note_spawn();
                 s.spawn(move || {
-                    let base = pyr.starts[r.start];
-                    for b in r.start..r.end {
-                        let (lo, hi) = (pyr.starts[b], pyr.starts[b + 1]);
-                        let loc = Coeffs(llev[b * stride..(b + 1) * stride].to_vec());
-                        for i in lo..hi {
-                            chunk[i - base] = l2p(centers[b], &loc, pos[i]);
-                        }
-                        for &src in con.m2p.sources(b) {
-                            let su = src as usize;
-                            let msrc = Coeffs(mlev[su * stride..(su + 1) * stride].to_vec());
-                            for i in lo..hi {
-                                chunk[i - base] += m2p(centers[su], &msrc, pos[i]);
-                            }
-                        }
-                    }
+                    l2p_range(r, chunk, pyr, con, centers, mlev, llev, pos, stride);
                 });
             }
         });
@@ -263,62 +734,18 @@ pub fn evaluate_on_tree_parallel(
         // CPU formulation (§4.2): each unordered box pair visited once by
         // the thread owning the lower-numbered box; the scattered Φ_j
         // updates go to per-thread accumulators merged in thread order.
-        // The owner of box b does all pairs with sources ≥ b — a
-        // triangular load, so ranges are balanced by pair weight.
-        let w: Vec<u64> = (0..nl)
-            .map(|b| {
-                let nb = (pyr.starts[b + 1] - pyr.starts[b]) as u64;
-                let srcs: u64 = con
-                    .near
-                    .sources(b)
-                    .iter()
-                    .filter(|&&s| s as usize >= b)
-                    .map(|&s| (pyr.starts[s as usize + 1] - pyr.starts[s as usize]) as u64)
-                    .sum();
-                nb * srcs
-            })
-            .collect();
-        let rs = weighted_ranges(&w, nt);
+        let rs = weighted_ranges(&p2p_symmetric_weights(pyr, con, nl), nt);
         let mut partials: Vec<(Vec<f64>, Vec<f64>)> = Vec::with_capacity(rs.len());
         std::thread::scope(|s| {
             let handles: Vec<_> = rs
                 .iter()
                 .map(|r| {
                     let r = r.clone();
+                    note_spawn();
                     s.spawn(move || {
                         let mut phr = vec![0.0f64; n];
                         let mut phm = vec![0.0f64; n];
-                        for b in r.start..r.end {
-                            let (blo, bhi) = (pyr.starts[b], pyr.starts[b + 1]);
-                            for &src in con.near.sources(b) {
-                                let su = src as usize;
-                                if su < b {
-                                    continue; // owned by the other side
-                                }
-                                let (slo, shi) = (pyr.starts[su], pyr.starts[su + 1]);
-                                for i in blo..bhi {
-                                    let (xi, yi) = (xs[i], ys[i]);
-                                    let (gri, gii) = (gre[i], gim[i]);
-                                    let j0 = if su == b { i + 1 } else { slo };
-                                    let (mut ar, mut ai) = (0.0f64, 0.0f64);
-                                    for j in j0..shi {
-                                        // r = 1/(z_j − z_i); Φ_i += Γ_j r;
-                                        // Φ_j −= Γ_i r
-                                        let dx = xs[j] - xi;
-                                        let dy = ys[j] - yi;
-                                        let inv = 1.0 / (dx * dx + dy * dy);
-                                        let rr = dx * inv;
-                                        let ri = -dy * inv;
-                                        ar += gre[j] * rr - gim[j] * ri;
-                                        ai += gre[j] * ri + gim[j] * rr;
-                                        phr[j] -= gri * rr - gii * ri;
-                                        phm[j] -= gri * ri + gii * rr;
-                                    }
-                                    phr[i] += ar;
-                                    phm[i] += ai;
-                                }
-                            }
-                        }
+                        p2p_symmetric_range(r, pyr, con, xs, ys, gre, gim, &mut phr, &mut phm);
                         (phr, phm)
                     })
                 })
@@ -331,8 +758,8 @@ pub fn evaluate_on_tree_parallel(
         // per-thread accumulators for its slice in thread order, so the
         // result is independent of merge parallelism. (The accumulators
         // cost O(threads × N) transient memory — the price of the
-        // lock-free symmetric formulation; the directed path below has no
-        // reduction at all and is the better choice when memory-bound.)
+        // lock-free symmetric formulation; the pooled engine reuses
+        // pool-owned buffers instead of allocating them here.)
         let partials: &[(Vec<f64>, Vec<f64>)] = &partials;
         let merge_rs = ranges(n, nt);
         let merge_lens: Vec<usize> = merge_rs.iter().map(|r| r.end - r.start).collect();
@@ -340,6 +767,7 @@ pub fn evaluate_on_tree_parallel(
         std::thread::scope(|s| {
             for (r, chunk) in merge_rs.iter().zip(chunks) {
                 let r = r.clone();
+                note_spawn();
                 s.spawn(move || {
                     for (phr, phm) in partials {
                         for (k, i) in (r.start..r.end).enumerate() {
@@ -364,31 +792,9 @@ pub fn evaluate_on_tree_parallel(
         std::thread::scope(|s| {
             for (r, chunk) in rs.iter().zip(chunks) {
                 let r = r.clone();
+                note_spawn();
                 s.spawn(move || {
-                    let base = pyr.starts[r.start];
-                    for b in r.start..r.end {
-                        let (blo, bhi) = (pyr.starts[b], pyr.starts[b + 1]);
-                        for &src in con.near.sources(b) {
-                            let su = src as usize;
-                            let (slo, shi) = (pyr.starts[su], pyr.starts[su + 1]);
-                            for i in blo..bhi {
-                                let zi = pos[i];
-                                let mut acc = chunk[i - base];
-                                if su == b {
-                                    for j in slo..shi {
-                                        if j != i {
-                                            acc += opts.kernel.eval(zi, pos[j], gam[j]);
-                                        }
-                                    }
-                                } else {
-                                    for j in slo..shi {
-                                        acc += opts.kernel.eval(zi, pos[j], gam[j]);
-                                    }
-                                }
-                                chunk[i - base] = acc;
-                            }
-                        }
-                    }
+                    p2p_directed_range(r, chunk, pyr, con, pos, gam, opts.kernel);
                 });
             }
         });
@@ -398,13 +804,49 @@ pub fn evaluate_on_tree_parallel(
     (phi, times, counts)
 }
 
+/// Evaluate many prebuilt trees through the **persistent worker pool**:
+/// workers claim problems dynamically off a shared queue and run the
+/// serial driver ([`super::evaluate_on_tree_serial`]) on each claim — the
+/// production batch-group dispatch ([`crate::batch`]), performing zero
+/// thread spawns. Per-problem results (potentials, times, counts) are
+/// bitwise-identical to the serial driver; result order matches input
+/// order regardless of which worker ran which problem.
+pub fn evaluate_trees_on_pool(
+    problems: &[(&Pyramid, &Connectivity)],
+    opts: &FmmOptions,
+    pool: &WorkerPool,
+) -> Vec<(Vec<C64>, PhaseTimes, WorkCounts)> {
+    if problems.is_empty() {
+        return Vec::new();
+    }
+    type Out = (Vec<C64>, PhaseTimes, WorkCounts);
+    let limit = opts.effective_threads().min(pool.n_workers());
+    let out: Vec<std::sync::Mutex<Option<Out>>> =
+        (0..problems.len()).map(|_| std::sync::Mutex::new(None)).collect();
+    {
+        let out = &out;
+        pool.run_dynamic(
+            (0..problems.len()).collect::<Vec<usize>>(),
+            limit,
+            |_k, i, _ws| {
+                let (pyr, con) = problems[i];
+                *out[i].lock().unwrap() = Some(super::evaluate_on_tree_serial(pyr, con, opts));
+            },
+        );
+    }
+    out.into_iter()
+        .map(|m| m.into_inner().unwrap().expect("every problem evaluated"))
+        .collect()
+}
+
 /// Evaluate many prebuilt trees through **one** scoped worker pool: `nt`
 /// workers claim problems from a shared atomic queue and run the serial
 /// driver ([`super::evaluate_on_tree_serial`]) on each claim, so the
 /// thread-spawn cost is paid once per batch group instead of once per
-/// phase per problem. Per-problem results (potentials, times, counts) are
-/// bitwise-identical to the serial driver; result order matches input
-/// order regardless of which worker ran which problem.
+/// phase per problem. Kept as the scoped reference next to
+/// [`evaluate_trees_on_pool`] (which spawns nothing at all). Per-problem
+/// results are bitwise-identical to the serial driver; result order
+/// matches input order regardless of which worker ran which problem.
 pub fn evaluate_trees_pooled(
     problems: &[(&Pyramid, &Connectivity)],
     opts: &FmmOptions,
@@ -426,6 +868,7 @@ pub fn evaluate_trees_pooled(
         let handles: Vec<_> = (0..nt)
             .map(|_| {
                 let next = &next;
+                note_spawn();
                 s.spawn(move || {
                     let mut mine = Vec::new();
                     loop {
@@ -480,6 +923,37 @@ mod tests {
     }
 
     #[test]
+    fn pool_engine_is_bitwise_identical_to_scoped() {
+        let mut r = Pcg64::seed_from_u64(29);
+        let (pts, gs) = workload::normal_cloud(2000, 0.1, &mut r);
+        let pyr = Pyramid::build(&pts, &gs, 3).unwrap();
+        let con = Connectivity::build(&pyr, 0.5);
+        for symmetric in [true, false] {
+            let opts = FmmOptions {
+                cfg: FmmConfig {
+                    p: 11,
+                    levels_override: Some(3),
+                    ..FmmConfig::default()
+                },
+                symmetric_p2p: symmetric,
+                threads: Some(3),
+                ..Default::default()
+            };
+            let pool = WorkerPool::new(3, false);
+            let (scoped, _, cs) = evaluate_on_tree_parallel(&pyr, &con, &opts, 3);
+            let (pooled, _, cp) = evaluate_on_tree_pool(&pyr, &con, &opts, &pool);
+            assert_eq!(scoped.len(), pooled.len());
+            for (a, b) in scoped.iter().zip(&pooled) {
+                // identical sharding + identical reduction order ⇒ bitwise
+                assert_eq!(a.re, b.re, "symmetric={symmetric}");
+                assert_eq!(a.im, b.im, "symmetric={symmetric}");
+            }
+            assert_eq!(cs.p2p_pairs, cp.p2p_pairs);
+            assert_eq!(cs.p2p_src_per_box, cp.p2p_src_per_box);
+        }
+    }
+
+    #[test]
     fn pooled_batch_is_bitwise_serial_in_input_order() {
         let mut r = Pcg64::seed_from_u64(31);
         let opts = FmmOptions {
@@ -502,17 +976,22 @@ mod tests {
             .collect();
         let refs: Vec<(&Pyramid, &Connectivity)> =
             trees.iter().map(|(p, c)| (p, c)).collect();
-        let pooled = evaluate_trees_pooled(&refs, &opts, 3);
-        assert_eq!(pooled.len(), trees.len());
-        for ((pyr, con), (phi, _, counts)) in trees.iter().zip(&pooled) {
-            let (serial, _, cs) = super::super::evaluate_on_tree_serial(pyr, con, &opts);
-            assert_eq!(serial.len(), phi.len());
-            for (a, b) in serial.iter().zip(phi) {
-                assert_eq!(a.re, b.re);
-                assert_eq!(a.im, b.im);
+        let pool = WorkerPool::new(3, false);
+        for pooled in [
+            evaluate_trees_pooled(&refs, &opts, 3),
+            evaluate_trees_on_pool(&refs, &opts, &pool),
+        ] {
+            assert_eq!(pooled.len(), trees.len());
+            for ((pyr, con), (phi, _, counts)) in trees.iter().zip(&pooled) {
+                let (serial, _, cs) = super::super::evaluate_on_tree_serial(pyr, con, &opts);
+                assert_eq!(serial.len(), phi.len());
+                for (a, b) in serial.iter().zip(phi) {
+                    assert_eq!(a.re, b.re);
+                    assert_eq!(a.im, b.im);
+                }
+                assert_eq!(cs.p2p_pairs, counts.p2p_pairs);
+                assert_eq!(cs.n, counts.n);
             }
-            assert_eq!(cs.p2p_pairs, counts.p2p_pairs);
-            assert_eq!(cs.n, counts.n);
         }
     }
 
@@ -536,6 +1015,12 @@ mod tests {
         let (par, _, _) = evaluate_on_tree_parallel(&pyr, &con, &opts, 1);
         assert_eq!(serial.len(), par.len());
         for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.re, b.re);
+            assert_eq!(a.im, b.im);
+        }
+        let pool = WorkerPool::new(1, false);
+        let (pooled, _, _) = evaluate_on_tree_pool(&pyr, &con, &opts, &pool);
+        for (a, b) in serial.iter().zip(&pooled) {
             assert_eq!(a.re, b.re);
             assert_eq!(a.im, b.im);
         }

@@ -25,6 +25,9 @@ pub struct HarnessOpts {
     /// paper-faithful serial baseline; `Some(t)`/`None` regenerate every
     /// figure with the multithreaded engine (`--threads` on the CLI).
     pub threads: Option<usize>,
+    /// Pin pool workers to cores (`--pin`): steadier multithreaded series
+    /// on otherwise idle machines.
+    pub pin: bool,
 }
 
 impl Default for HarnessOpts {
@@ -34,6 +37,7 @@ impl Default for HarnessOpts {
             seed: 20120424, // the paper's submission year/month, why not
             gtx480: false,
             threads: Some(1),
+            pin: false,
         }
     }
 }
@@ -76,7 +80,7 @@ pub fn fig5_1(o: &HarnessOpts) -> SeriesTable {
             levels_override: Some(levels),
             ..FmmConfig::default()
         };
-        let pair = run_pair(&pts, &gs, &cfg, &sim, o.threads);
+        let pair = run_pair(&pts, &gs, &cfg, &sim, o.threads, o.pin);
         t.push(
             nd as f64,
             vec![
@@ -98,7 +102,7 @@ pub fn fig5_2(o: &HarnessOpts) -> SeriesTable {
     let mut rows = Vec::new();
     for nd in (10..=100).step_by(5) {
         let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
-        let pair = run_pair(&pts, &gs, &cfg_with(17, nd), &sim, o.threads);
+        let pair = run_pair(&pts, &gs, &cfg_with(17, nd), &sim, o.threads, o.pin);
         rows.push((nd as f64, pair.cpu_total(), pair.gpu_total()));
     }
     let min_cpu = rows.iter().map(|r| r.1).fold(f64::INFINITY, f64::min);
@@ -126,7 +130,7 @@ pub fn table5_1(o: &HarnessOpts) -> (String, SeriesTable) {
         levels_override: Some(levels),
         ..FmmConfig::default()
     };
-    let pair = run_pair(&pts, &gs, &cfg, &sim, o.threads);
+    let pair = run_pair(&pts, &gs, &cfg, &sim, o.threads, o.pin);
     let mut entries: Vec<(&str, f64)> = PHASE_NAMES
         .iter()
         .enumerate()
@@ -159,7 +163,7 @@ pub fn fig5_3(o: &HarnessOpts) -> SeriesTable {
     );
     let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
     for p in (4..=60).step_by(2) {
-        let pair = run_pair(&pts, &gs, &cfg_with(p, 45), &sim, o.threads);
+        let pair = run_pair(&pts, &gs, &cfg_with(p, 45), &sim, o.threads, o.pin);
         t.push(
             p as f64,
             vec![
@@ -190,7 +194,7 @@ pub fn fig5_4(o: &HarnessOpts) -> (SeriesTable, (f64, f64)) {
     for p in (8..=48).step_by(8) {
         let (mut best_gpu, mut best_cpu) = ((f64::INFINITY, 0), (f64::INFINITY, 0));
         for nd in (15..=120).step_by(5) {
-            let pair = run_pair(&pts, &gs, &cfg_with(p, nd), &sim, o.threads);
+            let pair = run_pair(&pts, &gs, &cfg_with(p, nd), &sim, o.threads, o.pin);
             if pair.gpu_total() < best_gpu.0 {
                 best_gpu = (pair.gpu_total(), nd);
             }
@@ -225,7 +229,7 @@ pub fn fig5_5(o: &HarnessOpts) -> (SeriesTable, f64) {
     let mut prev: Option<(f64, f64, f64)> = None; // (n, fmm_gpu, dir_gpu)
     for n in n_sweep(o.full) {
         let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
-        let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim, o.threads);
+        let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim, o.threads, o.pin);
         let (dir_cpu, _extr) = direct_cpu_time(&pts, &gs, cap);
         let dir_gpu = sim.direct_time(n);
         let fmm_gpu = pair.gpu_total();
@@ -257,7 +261,7 @@ pub fn fig5_6(o: &HarnessOpts) -> SeriesTable {
     );
     for n in n_sweep(o.full) {
         let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
-        let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim, o.threads);
+        let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim, o.threads, o.pin);
         let (dir_cpu, _) = direct_cpu_time(&pts, &gs, cap);
         t.push(
             n as f64,
@@ -280,7 +284,7 @@ pub fn fig5_7(o: &HarnessOpts) -> SeriesTable {
     );
     for n in n_sweep(o.full) {
         let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
-        let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim, o.threads);
+        let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim, o.threads, o.pin);
         t.push(
             n as f64,
             (0..8).map(|i| pair.cpu.0[i] / pair.gpu.0[i].max(1e-12)).collect(),
@@ -307,7 +311,7 @@ pub fn fig5_8(o: &HarnessOpts) -> SeriesTable {
             Distribution::Layer { sigma: 0.1 },
         ] {
             let (pts, gs) = workload_for(dist, n, o.seed);
-            let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim, o.threads);
+            let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim, o.threads, o.pin);
             ys.push(pair.cpu_total());
             ys.push(pair.gpu_total());
         }
@@ -324,7 +328,7 @@ pub fn fig5_9(o: &HarnessOpts) -> SeriesTable {
     let sim = o.sim();
     let n = if o.full { 1_000_000 } else { 80_000 };
     let (pts_u, gs_u) = workload_for(Distribution::Uniform, n, o.seed);
-    let base = run_pair(&pts_u, &gs_u, &cfg_with(17, 45), &sim, o.threads);
+    let base = run_pair(&pts_u, &gs_u, &cfg_with(17, 45), &sim, o.threads, o.pin);
     let (cpu_u, gpu_u) = (base.cpu_total(), base.gpu_total());
     let mut t = SeriesTable::new(
         "Fig 5.9: non-uniform time / uniform time vs sigma",
@@ -338,7 +342,7 @@ pub fn fig5_9(o: &HarnessOpts) -> SeriesTable {
             Distribution::Layer { sigma },
         ] {
             let (pts, gs) = workload_for(mk, n, o.seed);
-            let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim, o.threads);
+            let pair = run_pair(&pts, &gs, &cfg_with(17, 45), &sim, o.threads, o.pin);
             ys.push(pair.cpu_total() / cpu_u);
             ys.push(pair.gpu_total() / gpu_u);
         }
@@ -370,7 +374,8 @@ pub fn validate(o: &HarnessOpts) -> SeriesTable {
             kernel: Kernel::Harmonic,
             symmetric_p2p: true,
             threads: o.threads,
-            topo_threads: None,
+            pin: o.pin,
+            ..Default::default()
         };
         let out = crate::fmm::evaluate(&pts, &gs, &opts)
             .expect("harness workloads satisfy the pyramid invariants");
@@ -410,7 +415,8 @@ pub fn ablate_theta(o: &HarnessOpts) -> SeriesTable {
             kernel: Kernel::Harmonic,
             symmetric_p2p: true,
             threads: o.threads,
-            topo_threads: None,
+            pin: o.pin,
+            ..Default::default()
         };
         let out = crate::fmm::evaluate(&pts, &gs, &opts)
             .expect("harness workloads satisfy the pyramid invariants");
@@ -515,7 +521,8 @@ pub fn batch_throughput(o: &HarnessOpts) -> SeriesTable {
         kernel: Kernel::Harmonic,
         symmetric_p2p: true,
         threads: o.threads,
-        topo_threads: None,
+        pin: o.pin,
+        ..Default::default()
     };
     for &k in counts {
         let problems: Vec<BatchProblem> = (0..k)
@@ -532,7 +539,7 @@ pub fn batch_throughput(o: &HarnessOpts) -> SeriesTable {
             batch::run(
                 &problems,
                 &BatchOptions {
-                    fmm: fmm_opts,
+                    fmm: fmm_opts.clone(),
                     overlap: false,
                     ..Default::default()
                 },
@@ -553,7 +560,7 @@ pub fn batch_throughput(o: &HarnessOpts) -> SeriesTable {
         let out = batch::run(
             &problems,
             &BatchOptions {
-                fmm: fmm_opts,
+                fmm: fmm_opts.clone(),
                 overlap: false,
                 ..Default::default()
             },
@@ -566,7 +573,7 @@ pub fn batch_throughput(o: &HarnessOpts) -> SeriesTable {
         let out = batch::run(
             &problems,
             &BatchOptions {
-                fmm: fmm_opts,
+                fmm: fmm_opts.clone(),
                 ..Default::default()
             },
         )
@@ -632,7 +639,8 @@ pub fn topo_bench(o: &HarnessOpts) -> SeriesTable {
             kernel: Kernel::Harmonic,
             symmetric_p2p: true,
             threads: o.threads,
-            topo_threads: None,
+            pin: o.pin,
+            ..Default::default()
         };
         let t0 = std::time::Instant::now();
         let (phi, _, _) = fmm::evaluate_on_tree(&serial.pyramid, &serial.connectivity, &opts);
@@ -652,6 +660,121 @@ pub fn topo_bench(o: &HarnessOpts) -> SeriesTable {
         );
     }
     t
+}
+
+/// The `pool-bench` CLI command: per-phase wall-clock of the persistent
+/// worker pool against the scoped spawn-per-phase engine and the serial
+/// driver, on a fixed prebuilt tree per N (best-of-reps). Returns one
+/// table per measured worker count — `--threads T` pins a single count,
+/// the default sweeps powers of two up to the machine. The acceptance
+/// claims this table carries: at N ≥ 10⁴ the pool loses no phase to the
+/// scoped engine, and at N ≤ 10³ it cuts the end-to-end dispatch
+/// overhead that per-phase spawn/join used to pay.
+pub fn pool_bench(o: &HarnessOpts) -> Vec<SeriesTable> {
+    use crate::fmm::parallel::{evaluate_on_tree_parallel, evaluate_on_tree_pool};
+    use crate::fmm::PhaseTimes;
+    use crate::topology::{self, TopologyOptions};
+    use crate::util::pool::WorkerPool;
+
+    let max_t = crate::util::threadpool::available_threads().max(2);
+    let thread_counts: Vec<usize> = match o.threads {
+        None => {
+            let mut ts = vec![2usize];
+            while ts.last().unwrap() * 2 <= max_t {
+                let next = ts.last().unwrap() * 2;
+                ts.push(next);
+            }
+            ts
+        }
+        // an explicit --threads is honored exactly — t = 1 (one pool
+        // worker vs one scoped thread vs serial) is a meaningful
+        // dispatch-mechanism data point
+        Some(t) => vec![t],
+    };
+    let ns: Vec<usize> = if o.full {
+        vec![1_000, 10_000, 100_000, 1_000_000]
+    } else {
+        vec![600, 1_000, 10_000, 60_000]
+    };
+    let mut tables = Vec::new();
+    for &t in &thread_counts {
+        let pool = WorkerPool::new(t, o.pin);
+        let mut table = SeriesTable::new(
+            &format!(
+                "pool-bench: persistent pool vs scoped spawns vs serial, {t} workers (seconds)"
+            ),
+            "N",
+            &[
+                "p2m_scope", "p2m_pool", "m2m_scope", "m2m_pool", "m2l_scope", "m2l_pool",
+                "l2l_scope", "l2l_pool", "l2p_scope", "l2p_pool", "p2p_scope", "p2p_pool",
+                "total_serial", "total_scope", "total_pool",
+            ],
+        );
+        for &n in &ns {
+            let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
+            let cfg = cfg_with(17, 45);
+            let levels = cfg.levels_for(n);
+            let topo =
+                topology::build(&pts, &gs, levels, &TopologyOptions::parallel(cfg.theta, t))
+                    .expect("harness workloads satisfy the pyramid invariants");
+            let (pyr, con) = (&topo.pyramid, &topo.connectivity);
+            let opts = FmmOptions {
+                cfg,
+                threads: Some(t),
+                pin: o.pin,
+                ..Default::default()
+            };
+            let reps = if n <= 1_000 {
+                9
+            } else if n <= 10_000 {
+                3
+            } else {
+                1
+            };
+            // best-of-reps per phase and per total: spawn/scheduling noise
+            // is one-sided, so minima compare dispatch mechanisms fairly
+            let measure = |run: &dyn Fn() -> PhaseTimes| -> (PhaseTimes, f64) {
+                let mut best = run();
+                let mut best_total = best.total();
+                for _ in 1..reps {
+                    let sample = run();
+                    best_total = best_total.min(sample.total());
+                    for (b, v) in best.0.iter_mut().zip(&sample.0) {
+                        *b = (*b).min(*v);
+                    }
+                }
+                (best, best_total)
+            };
+            let (_, serial_total) =
+                measure(&|| fmm::evaluate_on_tree_serial(pyr, con, &opts).1);
+            let (scope_t, scope_total) =
+                measure(&|| evaluate_on_tree_parallel(pyr, con, &opts, t).1);
+            let (pool_t, pool_total) =
+                measure(&|| evaluate_on_tree_pool(pyr, con, &opts, &pool).1);
+            table.push(
+                n as f64,
+                vec![
+                    scope_t.get(Phase::P2M),
+                    pool_t.get(Phase::P2M),
+                    scope_t.get(Phase::M2M),
+                    pool_t.get(Phase::M2M),
+                    scope_t.get(Phase::M2L),
+                    pool_t.get(Phase::M2L),
+                    scope_t.get(Phase::L2L),
+                    pool_t.get(Phase::L2L),
+                    scope_t.get(Phase::L2P),
+                    pool_t.get(Phase::L2P),
+                    scope_t.get(Phase::P2P),
+                    pool_t.get(Phase::P2P),
+                    serial_total,
+                    scope_total,
+                    pool_total,
+                ],
+            );
+        }
+        tables.push(table);
+    }
+    tables
 }
 
 /// Calibration report: the quantities the cost model is fitted against
@@ -681,7 +804,7 @@ pub fn calibrate(o: &HarnessOpts) -> String {
         levels_override: Some(levels),
         ..FmmConfig::default()
     };
-    let pair = run_pair(&pts, &gs, &cfg, &sim, o.threads);
+    let pair = run_pair(&pts, &gs, &cfg, &sim, o.threads, o.pin);
     let _ = writeln!(
         out,
         "FMM total speedup @N={nf}: {:.1} (paper ≈ 11)",
@@ -745,9 +868,9 @@ mod tests {
         let sim = o.sim();
         let n = 20_000;
         let (pts_u, gs_u) = workload_for(Distribution::Uniform, n, o.seed);
-        let base = run_pair(&pts_u, &gs_u, &cfg_with(17, 45), &sim, o.threads);
+        let base = run_pair(&pts_u, &gs_u, &cfg_with(17, 45), &sim, o.threads, o.pin);
         let (pts, gs) = workload_for(Distribution::Normal { sigma: 0.05 }, n, o.seed);
-        let hard = run_pair(&pts, &gs, &cfg_with(17, 45), &sim, o.threads);
+        let hard = run_pair(&pts, &gs, &cfg_with(17, 45), &sim, o.threads, o.pin);
         let cpu_ratio = hard.cpu_total() / base.cpu_total();
         let gpu_ratio = hard.gpu_total() / base.gpu_total();
         assert!(

@@ -52,13 +52,16 @@ impl RunPair {
 /// `threads` selects the CPU engine: `Some(1)` (the harness default) is the
 /// paper's serial reference driver, `Some(t)`/`None` run the multithreaded
 /// engine ([`crate::fmm::parallel`]) with `t`/all cores — the work counts
-/// fed to the GPU model are identical either way.
+/// fed to the GPU model are identical either way. `pin` (the harness
+/// `--pin` flag) selects the core-pinned flavor of the shared worker pool
+/// for the multithreaded series.
 pub fn run_pair(
     points: &[C64],
     gammas: &[C64],
     cfg: &FmmConfig,
     sim: &GpuSim,
     threads: Option<usize>,
+    pin: bool,
 ) -> RunPair {
     let levels = cfg.levels_for(points.len());
 
@@ -70,7 +73,8 @@ pub fn run_pair(
         kernel: Kernel::Harmonic,
         symmetric_p2p: true,
         threads,
-        topo_threads: None,
+        pin,
+        ..FmmOptions::default()
     };
     let topo = topology::build(points, gammas, levels, &opts.topology_options())
         .expect("harness workloads satisfy the pyramid invariants");
@@ -143,7 +147,7 @@ mod tests {
             levels_override: Some(3),
             ..FmmConfig::default()
         };
-        let pair = run_pair(&pts, &gs, &cfg, &GpuSim::c2075(), Some(1));
+        let pair = run_pair(&pts, &gs, &cfg, &GpuSim::c2075(), Some(1), false);
         assert_eq!(pair.n, 3000);
         assert_eq!(pair.levels, 3);
         assert!(pair.cpu_total() > 0.0);
@@ -161,8 +165,8 @@ mod tests {
             ..FmmConfig::default()
         };
         let sim = GpuSim::c2075();
-        let serial = run_pair(&pts, &gs, &cfg, &sim, Some(1));
-        let par = run_pair(&pts, &gs, &cfg, &sim, Some(4));
+        let serial = run_pair(&pts, &gs, &cfg, &sim, Some(1), false);
+        let par = run_pair(&pts, &gs, &cfg, &sim, Some(4), false);
         // identical work description ⇒ identical GPU prediction
         assert_eq!(serial.counts.p2p_pairs, par.counts.p2p_pairs);
         assert_eq!(serial.counts.p2p_src_per_box, par.counts.p2p_src_per_box);

@@ -15,8 +15,12 @@
 //!   PJRT (`runtime`, behind the non-default `pjrt` cargo feature: the
 //!   default build carries no native dependencies);
 //! * the **multithreaded CPU engine** — every computational phase sharded
-//!   over `std::thread::scope` workers with writer-side (no-lock)
-//!   destination ownership ([`fmm::parallel`]);
+//!   over worker threads with writer-side (no-lock) destination ownership
+//!   ([`fmm::parallel`]), executed on a **persistent affinity-aware worker
+//!   pool** ([`util::pool`]: threads spawned once per process, parked
+//!   between fan-outs, sticky per-worker scratch, optional core pinning;
+//!   the scoped spawn-per-phase variant is kept as the `pool-bench`
+//!   reference);
 //! * the **batch execution subsystem** — many small FMM problems grouped
 //!   by compatible artifact shape and dispatched together, one pooled CPU
 //!   execution or one batched XLA invocation per group ([`batch`]);

@@ -21,7 +21,7 @@ fmm2d — adaptive fast multipole methods (Goude & Engblom 2012 reproduction)
 USAGE: fmm2d <command> [options]
 
 Experiment regeneration (DESIGN.md §3; all accept --full --seed S --gtx480
---threads T — T=1 (default) is the paper's serial CPU baseline, T>1 or
+--threads T --pin — T=1 (default) is the paper's serial CPU baseline, T>1 or
 --threads 0 (all cores) regenerates with the multithreaded engine):
   table5-1      GPU time distribution
   fig5-1        per-phase speedup vs N_d
@@ -42,22 +42,27 @@ Validation & tools:
   calibrate     cost-model calibration vs the paper's headline ratios
   run           one evaluation: --n --p --nd --dist uniform|normal|layer
                 [--sigma S] [--engine serial|parallel|xla] [--threads T]
-                [--topo-threads T] [--check] [--log-kernel]
+                [--topo-threads T] [--pin] [--check] [--log-kernel]
   batch         evaluate --count K problems of --n points each in grouped
                 fixed-shape dispatches: [--nmin A --nmax B] (size spread —
                 heterogeneous shapes form multiple groups) [--batch-size G]
                 [--engine serial|parallel|xla] [--p --nd --dist --sigma
-                --seed --threads --topo-threads] [--no-overlap: build all
+                --seed --threads --topo-threads --pin] [--no-overlap: build all
                 topologies before dispatching instead of overlapping them
                 with group execution] [--check] (parity vs sequential runs)
   batch-bench   batched vs sequential throughput table, incl. overlapped
                 vs sequential topology prologue (--full --seed --threads)
   topo-bench    Sort/Connect serial vs parallel vs compute per N (--full
                 --seed --threads)
+  pool-bench    per-phase wall-clock: persistent worker pool vs scoped
+                spawn-per-phase engine vs serial, per N (--full --seed;
+                --threads T pins one worker count, default sweeps; --pin)
   artifacts     list available AOT artifacts (needs --features pjrt)
 
 The default engine is `parallel` with all available cores; --threads T caps
-the worker count (T=1 falls back to the serial reference driver). The
+the worker count (T=1 falls back to the serial reference driver). Multicore
+runs execute on a persistent worker pool (threads spawned once per
+process); --pin pins worker i to core i (best-effort, Linux). The
 topological phase (Sort/Connect) follows --threads through the parallel
 topology engine; --topo-threads T overrides it independently (T=1 serial
 build, T=0 all cores). The xla engine and `artifacts` need a binary built
@@ -113,6 +118,7 @@ fn harness_opts(args: &Args) -> Result<HarnessOpts> {
         seed: args.get_or("seed", HarnessOpts::default().seed)?,
         gtx480: args.flag("gtx480"),
         threads: threads_arg(args, HarnessOpts::default().threads)?,
+        pin: args.flag("pin"),
     })
 }
 
@@ -179,11 +185,11 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
     match cmd {
         "table5-1" | "fig5-1" | "fig5-2" | "fig5-3" | "fig5-4" | "fig5-5" | "fig5-6"
         | "fig5-7" | "fig5-8" | "fig5-9" => {
-            args.check_known(&["full", "seed", "gtx480", "threads"])?;
+            args.check_known(&["full", "seed", "gtx480", "threads", "pin"])?;
             run_figure(cmd, &harness_opts(&args)?);
         }
         "all" => {
-            args.check_known(&["full", "seed", "gtx480", "threads"])?;
+            args.check_known(&["full", "seed", "gtx480", "threads", "pin"])?;
             let o = harness_opts(&args)?;
             for name in [
                 "table5-1", "fig5-1", "fig5-2", "fig5-3", "fig5-4", "fig5-5", "fig5-6",
@@ -194,31 +200,31 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             }
         }
         "validate" => {
-            args.check_known(&["full", "seed", "gtx480", "threads"])?;
+            args.check_known(&["full", "seed", "gtx480", "threads", "pin"])?;
             let t = harness::validate(&harness_opts(&args)?);
             println!("{}", t.render());
             t.save("validate");
         }
         "ablate-theta" => {
-            args.check_known(&["full", "seed", "gtx480", "threads"])?;
+            args.check_known(&["full", "seed", "gtx480", "threads", "pin"])?;
             let t = harness::ablate_theta(&harness_opts(&args)?);
             println!("{}", t.render());
             t.save("ablate_theta");
         }
         "ablate-shifts" => {
-            args.check_known(&["full", "seed", "gtx480", "threads"])?;
+            args.check_known(&["full", "seed", "gtx480", "threads", "pin"])?;
             let t = harness::ablate_shift_kernels(&harness_opts(&args)?);
             println!("{}", t.render());
             t.save("ablate_shifts");
         }
         "calibrate" => {
-            args.check_known(&["full", "seed", "gtx480", "threads"])?;
+            args.check_known(&["full", "seed", "gtx480", "threads", "pin"])?;
             println!("{}", harness::calibrate(&harness_opts(&args)?));
         }
         "run" => cmd_run(&args)?,
         "batch" => cmd_batch(&args)?,
         "batch-bench" => {
-            args.check_known(&["full", "seed", "gtx480", "threads"])?;
+            args.check_known(&["full", "seed", "gtx480", "threads", "pin"])?;
             // unlike the figure harness (serial-baseline default), a
             // throughput comparison defaults to all cores; an explicit
             // --threads (including --threads 1) is honored as given
@@ -231,7 +237,7 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             t.save("batch_throughput");
         }
         "topo-bench" => {
-            args.check_known(&["full", "seed", "gtx480", "threads"])?;
+            args.check_known(&["full", "seed", "gtx480", "threads", "pin"])?;
             // like batch-bench: a throughput comparison defaults to all
             // cores; an explicit --threads is honored as given
             let mut o = harness_opts(&args)?;
@@ -241,6 +247,22 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             let t = harness::topo_bench(&o);
             println!("{}", t.render());
             t.save("topo_bench");
+        }
+        "pool-bench" => {
+            args.check_known(&["full", "seed", "gtx480", "threads", "pin"])?;
+            // --threads absent = sweep worker counts (None); an explicit
+            // --threads T measures that single count, with T = 0 keeping
+            // its crate-wide "all cores" meaning (one all-core table)
+            let mut o = harness_opts(&args)?;
+            o.threads = match args.get("threads") {
+                None => None,
+                Some("0") => Some(fmm2d::util::threadpool::available_threads()),
+                Some(_) => o.threads,
+            };
+            for (i, t) in harness::pool_bench(&o).iter().enumerate() {
+                println!("{}", t.render());
+                t.save(&format!("pool_bench_{i}"));
+            }
         }
         "artifacts" => cmd_artifacts()?,
         "help" | "--help" | "-h" => print!("{USAGE}"),
@@ -270,7 +292,7 @@ fn cmd_artifacts() -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     args.check_known(&[
         "n", "p", "nd", "dist", "sigma", "engine", "check", "seed", "log-kernel", "levels",
-        "threads", "topo-threads",
+        "threads", "topo-threads", "pin",
     ])?;
     let n: usize = args.get_or("n", 10_000)?;
     let p: usize = args.get_or("p", 17)?;
@@ -319,6 +341,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         symmetric_p2p: true,
         threads,
         topo_threads,
+        pin: args.flag("pin"),
+        ..FmmOptions::default()
     };
     println!(
         "n={n} p={p} N_d={nd} levels={levels} dist={} kernel={kernel:?} engine={engine} \
@@ -380,6 +404,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
         "seed",
         "threads",
         "topo-threads",
+        "pin",
         "no-overlap",
         "check",
     ])?;
@@ -443,6 +468,8 @@ fn cmd_batch(args: &Args) -> Result<()> {
             symmetric_p2p: true,
             threads,
             topo_threads,
+            pin: args.flag("pin"),
+            ..FmmOptions::default()
         },
         engine,
         max_group: args.get_or("batch-size", 0)?,
@@ -490,7 +517,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
                 &pr.gammas,
                 &FmmOptions {
                     threads: Some(1),
-                    ..opts.fmm
+                    ..opts.fmm.clone()
                 },
             )?;
             for (a, b) in out.potentials[i].iter().zip(&seq.potentials) {

@@ -14,10 +14,11 @@
 //! * [`TopologyEngine::Serial`] — the reference path: serial quickselect
 //!   partitioning and the serial CSR classification (the paper's CPU code,
 //!   §4.1/§4.3);
-//! * [`TopologyEngine::Parallel`] — both halves sharded over scoped worker
+//! * [`TopologyEngine::Parallel`] — both halves sharded over worker
 //!   threads ([`Pyramid::build_threaded`],
-//!   [`Connectivity::build_threaded`]), bit-identical to the serial path
-//!   (`tests/topology_parity.rs`);
+//!   [`Connectivity::build_threaded`]; on the persistent pool when
+//!   [`TopologyOptions::pool`] is set — zero spawns), bit-identical to the
+//!   serial path (`tests/topology_parity.rs`);
 //! * the existing [`PartitionEngine`] selects the partitioning *model*
 //!   (CPU quickselect vs. the functional model of the CUDA two-pass
 //!   scatter sort whose [`crate::tree::partition::SortStats`] feed the GPU
@@ -47,7 +48,7 @@ pub enum TopologyEngine {
 }
 
 /// Options of one topology build.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct TopologyOptions {
     /// Well-separatedness parameter θ of the Connect classification.
     pub theta: f64,
@@ -58,6 +59,12 @@ pub struct TopologyOptions {
     /// Worker threads for [`TopologyEngine::Parallel`]: `None` uses all
     /// available cores. Ignored by `Serial`.
     pub threads: Option<usize>,
+    /// Persistent worker pool executing the parallel build's fan-outs
+    /// ([`crate::util::pool::WorkerPool`]): `None` falls back to scoped
+    /// spawns. Output is identical either way; the pool just spawns no
+    /// threads. [`crate::fmm::FmmOptions::topology_options`] fills this in
+    /// so a full `evaluate` is spawn-free end to end.
+    pub pool: Option<std::sync::Arc<crate::util::pool::WorkerPool>>,
 }
 
 impl Default for TopologyOptions {
@@ -67,6 +74,7 @@ impl Default for TopologyOptions {
             engine: TopologyEngine::Parallel,
             partition: PartitionEngine::Cpu,
             threads: None,
+            pool: None,
         }
     }
 }
@@ -94,6 +102,13 @@ impl TopologyOptions {
             threads: Some(threads.max(1)),
             ..Self::default()
         }
+    }
+
+    /// The same configuration executing on `pool` (see
+    /// [`TopologyOptions::pool`]).
+    pub fn on_pool(mut self, pool: std::sync::Arc<crate::util::pool::WorkerPool>) -> Self {
+        self.pool = Some(pool);
+        self
     }
 
     /// Resolved worker count (≥ 1): 1 for `Serial`, otherwise `threads`
@@ -132,11 +147,18 @@ pub fn build(
     opts: &TopologyOptions,
 ) -> Result<Topology> {
     let nt = opts.effective_threads();
+    let pool = if nt > 1 { opts.pool.as_deref() } else { None };
     let t = Instant::now();
-    let pyramid = Pyramid::build_threaded(points, gammas, levels, opts.partition, nt)?;
+    let pyramid = match pool {
+        Some(p) => Pyramid::build_on_pool(points, gammas, levels, opts.partition, nt, p)?,
+        None => Pyramid::build_threaded(points, gammas, levels, opts.partition, nt)?,
+    };
     let sort_s = t.elapsed().as_secs_f64();
     let t = Instant::now();
-    let connectivity = Connectivity::build_threaded(&pyramid, opts.theta, nt);
+    let connectivity = match pool {
+        Some(p) => Connectivity::build_on_pool(&pyramid, opts.theta, nt, p),
+        None => Connectivity::build_threaded(&pyramid, opts.theta, nt),
+    };
     let connect_s = t.elapsed().as_secs_f64();
     Ok(Topology {
         pyramid,
@@ -175,6 +197,24 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("fewer particles"), "got: {err}");
+    }
+
+    #[test]
+    fn pool_backed_build_is_identical() {
+        let mut r = Pcg64::seed_from_u64(7);
+        let (pts, gs) = workload::uniform_square(2000, &mut r);
+        let serial = build(&pts, &gs, 3, &TopologyOptions::serial(0.5)).unwrap();
+        let pool = std::sync::Arc::new(crate::util::pool::WorkerPool::new(4, false));
+        let pooled = build(
+            &pts,
+            &gs,
+            3,
+            &TopologyOptions::parallel(0.5, 4).on_pool(pool),
+        )
+        .unwrap();
+        assert_eq!(serial.pyramid.starts, pooled.pyramid.starts);
+        assert_eq!(serial.connectivity.checks, pooled.connectivity.checks);
+        assert_eq!(serial.connectivity.near.data, pooled.connectivity.near.data);
     }
 
     #[test]

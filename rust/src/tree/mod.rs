@@ -11,12 +11,13 @@
 //! data-parallel packing rely on.
 //!
 //! The build itself runs serially ([`Pyramid::build`] /
-//! [`Pyramid::build_with`]) or sharded over scoped worker threads
-//! ([`Pyramid::build_threaded`]): within a level every box owns a disjoint
+//! [`Pyramid::build_with`]) or sharded over worker threads — scoped
+//! spawns ([`Pyramid::build_threaded`]) or the persistent pool
+//! ([`Pyramid::build_on_pool`]): within a level every box owns a disjoint
 //! `particles[lo..hi]` slice, so the per-box `split_box_in_four` calls
 //! fan out with the same writer-side-ownership discipline as
 //! [`crate::fmm::parallel`], and per-thread [`SortStats`] merge in worker
-//! order. Both paths produce bit-identical pyramids
+//! order. All paths produce bit-identical pyramids
 //! (`tests/topology_parity.rs`); [`crate::topology`] selects between them.
 
 pub mod partition;
@@ -24,6 +25,7 @@ pub mod partition;
 use crate::complex::C64;
 use crate::geometry::Rect;
 use crate::util::error::Result;
+use crate::util::pool::WorkerPool;
 use crate::util::threadpool::{ranges, scoped_map, split_lengths_mut};
 use partition::{median_split, median_split_gpu_model, SortStats};
 
@@ -153,6 +155,38 @@ impl Pyramid {
         engine: PartitionEngine,
         threads: usize,
     ) -> Result<Self> {
+        Self::build_parallel(points, gammas, levels, engine, threads, None)
+    }
+
+    /// [`Pyramid::build_threaded`] executing its per-level fan-outs on a
+    /// persistent [`WorkerPool`] instead of scoped spawns — bit-identical
+    /// output, zero thread spawns.
+    pub fn build_on_pool(
+        points: &[C64],
+        gammas: &[C64],
+        levels: usize,
+        engine: PartitionEngine,
+        threads: usize,
+        pool: &WorkerPool,
+    ) -> Result<Self> {
+        Self::build_parallel(
+            points,
+            gammas,
+            levels,
+            engine,
+            threads.min(pool.n_workers()),
+            Some(pool),
+        )
+    }
+
+    fn build_parallel(
+        points: &[C64],
+        gammas: &[C64],
+        levels: usize,
+        engine: PartitionEngine,
+        threads: usize,
+        pool: Option<&WorkerPool>,
+    ) -> Result<Self> {
         if threads <= 1 {
             return Self::build_with(points, gammas, levels, engine);
         }
@@ -179,9 +213,15 @@ impl Pyramid {
                     .map(|r| starts_ref[r.end] - starts_ref[r.start])
                     .collect();
                 let chunks = split_lengths_mut(&mut particles, &lens);
-                scoped_map(rs.into_iter().zip(chunks).collect(), |(r, chunk)| {
-                    split_box_range(r, chunk, starts_ref, level_rects, engine)
-                })
+                let items: Vec<_> = rs.into_iter().zip(chunks).collect();
+                match pool {
+                    Some(p) => p.map_items(items, |(r, chunk)| {
+                        split_box_range(r, chunk, starts_ref, level_rects, engine)
+                    }),
+                    None => scoped_map(items, |(r, chunk)| {
+                        split_box_range(r, chunk, starts_ref, level_rects, engine)
+                    }),
+                }
             } else {
                 vec![split_box_range(
                     0..nb,
@@ -510,5 +550,21 @@ mod tests {
                 assert_eq!(serial.sort_stats.scattered, par.sort_stats.scattered);
             }
         }
+    }
+
+    #[test]
+    fn pool_build_is_bit_identical_to_serial() {
+        let mut r = Pcg64::seed_from_u64(13);
+        let (pts, gs) = workload::normal_cloud(1500, 0.1, &mut r);
+        let pool = crate::util::pool::WorkerPool::new(3, false);
+        let serial = Pyramid::build(&pts, &gs, 3).unwrap();
+        let pooled =
+            Pyramid::build_on_pool(&pts, &gs, 3, PartitionEngine::Cpu, 3, &pool).unwrap();
+        assert_eq!(serial.starts, pooled.starts);
+        for (a, b) in serial.particles.iter().zip(&pooled.particles) {
+            assert_eq!(a.orig, b.orig);
+            assert_eq!(a.pos, b.pos);
+        }
+        assert_eq!(serial.sort_stats.splits, pooled.sort_stats.splits);
     }
 }

@@ -1,11 +1,13 @@
 //! Small self-contained substrates that would normally come from crates.io
 //! (the build environment is offline): deterministic RNG, minimal JSON,
 //! statistics, a CLI argument parser, an error-context substrate, scoped
-//! threading helpers and a property-testing helper.
+//! threading helpers, the persistent worker pool and a property-testing
+//! helper.
 
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

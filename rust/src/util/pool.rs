@@ -1,0 +1,764 @@
+//! The persistent, affinity-aware worker pool — the execution resource of
+//! every multicore path in the crate (DESIGN.md §6).
+//!
+//! The scoped engines (PR 1–3) spawn and join a fresh `std::thread::scope`
+//! per *phase*: eight phases per evaluation, plus per-level scopes in Sort
+//! and per-group scopes in the batch runner. The paper's Table 5.1 makes
+//! per-phase dispatch overhead a first-class cost, and spawn/join noise is
+//! exactly what a calibrated CPU-vs-GPU dispatch decision must not see.
+//! [`WorkerPool`] replaces all of that with `n` long-lived threads that
+//! *park between tasks*: a [`WorkerPool::run_tasks`] fan-out wakes them,
+//! every worker runs its statically assigned tasks, and the caller blocks
+//! until the whole fan-out has finished (a scoped API — task closures may
+//! freely borrow the caller's stack).
+//!
+//! Invariants preserved from the scoped engines:
+//!
+//! * **Writer-side ownership** — a task owns a disjoint `&mut` slice of the
+//!   destination data ([`WorkerPool::run_chunks_mut`]); kernels take no
+//!   locks (the only locks are the one-shot task-claim `Mutex<Option<T>>`
+//!   takes at fan-out boundaries).
+//! * **Sticky worker identity** — task `k` always runs on worker
+//!   `k % n_workers`, and every worker owns a [`WorkerScratch`] allocated
+//!   once for the worker's lifetime (`ShiftScratch`/`M2lScratch` reused
+//!   across phases, problems and batches, not re-created per phase), so
+//!   repeated fan-outs of the same shape touch the same caches. The
+//!   symmetric-P2P accumulators live in pool-owned [`Accum`] buffers
+//!   ([`WorkerPool::take_accums`]) with the same task-index stickiness.
+//! * **Determinism** — static task→worker assignment keeps every reduction
+//!   in *task* order, so results are independent of OS scheduling and
+//!   bitwise-reproducible for a fixed worker count (asserted against the
+//!   scoped engine by `tests/pool_parity.rs`).
+//!
+//! Affinity: with `pin = true` (CLI `--pin`, [`crate::fmm::FmmOptions::pin`])
+//! worker `i` pins itself to core `i` via `sched_setaffinity` on Linux —
+//! best-effort (failures are ignored) and a no-op elsewhere.
+//!
+//! The module also owns the crate's **spawn accounting**: every thread
+//! spawn anywhere in the crate calls [`note_spawn`], and
+//! `tests/zero_spawn.rs` asserts that a full `evaluate` performs *zero*
+//! spawns once the pool exists.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use crate::expansion::matrices::M2lScratch;
+use crate::expansion::shifts::ShiftScratch;
+use crate::util::threadpool::split_lengths_mut;
+
+// ---------------------------------------------------------------------------
+// Spawn accounting (test hook)
+// ---------------------------------------------------------------------------
+
+static SPAWN_COUNT: AtomicUsize = AtomicUsize::new(0);
+
+/// Record one thread spawn. Called by **every** spawn site in the crate
+/// (pool worker construction, the scoped reference engines, batch topology
+/// producers), so tests can assert that a code path spawns no threads.
+#[inline]
+pub fn note_spawn() {
+    SPAWN_COUNT.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Total thread spawns recorded so far, process-wide.
+pub fn spawn_count() -> usize {
+    SPAWN_COUNT.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// Per-worker state
+// ---------------------------------------------------------------------------
+
+/// Per-worker scratch, allocated once per worker thread and handed `&mut`
+/// to every task it runs — the shift-operator and M2L working vectors are
+/// reused across phases, levels, problems and batches instead of being
+/// re-created per phase closure.
+#[derive(Default)]
+pub struct WorkerScratch {
+    pub shift: ShiftScratch,
+    pub m2l: M2lScratch,
+}
+
+/// One persistent symmetric-P2P accumulator pair (`Φ` real/imag parts over
+/// all particles). Owned by the pool and leased to the P2P phase via
+/// [`WorkerPool::take_accums`], so the `O(threads × N)` buffers are
+/// allocated once per pool, not once per evaluation.
+#[derive(Default)]
+pub struct Accum {
+    pub re: Vec<f64>,
+    pub im: Vec<f64>,
+}
+
+impl Accum {
+    /// Zero the accumulator for `n` particles, reusing capacity — but not
+    /// unconditionally: a buffer whose retained high-water mark dwarfs the
+    /// request is released first, so one huge evaluation on a long-lived
+    /// (e.g. process-global) pool does not pin `O(workers × max-N)` memory
+    /// forever once the workload moves back to small problems.
+    pub fn reset(&mut self, n: usize) {
+        const SLACK: usize = 4;
+        const KEEP_BELOW: usize = 1 << 16; // ≤ 512 KiB per vec: always keep
+        if self.re.capacity() > SLACK * n.max(KEEP_BELOW) {
+            self.re = Vec::new();
+            self.im = Vec::new();
+        }
+        self.re.clear();
+        self.re.resize(n, 0.0);
+        self.im.clear();
+        self.im.resize(n, 0.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The pool
+// ---------------------------------------------------------------------------
+
+/// A type-erased fan-out job: a pointer to the caller's closure plus its
+/// monomorphized trampoline. Only ever alive while the submitting
+/// [`WorkerPool::broadcast`] call blocks, which is what makes the borrow
+/// sound (the closure and everything it captures outlive the job).
+#[derive(Clone, Copy)]
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize, &mut WorkerScratch),
+}
+
+// Safety: the job pointer crosses threads, but `broadcast` does not return
+// until every worker is done with it, and the pointee is `Sync` (enforced
+// by the `F: Sync` bound at the only construction site).
+unsafe impl Send for Job {}
+
+struct PoolState {
+    /// Bumped once per fan-out; workers run the job exactly once per epoch.
+    epoch: u64,
+    job: Option<Job>,
+    /// The first `participants` workers take part in the current epoch —
+    /// a fan-out capped below the pool width wakes only the workers it
+    /// needs, so per-phase dispatch cost scales with the *requested*
+    /// parallelism, not the machine width.
+    participants: usize,
+    /// Participating workers still running the current epoch's job.
+    active: usize,
+    /// Workers whose job closure panicked this epoch (re-raised by the
+    /// caller; the worker itself survives and keeps serving).
+    panicked: usize,
+    /// First panic payload of the epoch, resumed in the submitting caller
+    /// so the original message/location is preserved.
+    payload: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// The submitting caller waits here for `active == 0`. (Workers wait
+    /// via `thread::park`, woken individually by `unpark` — see
+    /// `WorkerPool::broadcast`.)
+    done_cv: Condvar,
+    /// Live worker threads of *this* pool (shutdown test hook).
+    live: AtomicUsize,
+}
+
+thread_local! {
+    static ON_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// `true` when the current thread is a pool worker — fan-out entry points
+/// degrade to inline execution instead of deadlocking on their own pool.
+fn on_pool_worker() -> bool {
+    ON_POOL_WORKER.with(|f| f.get())
+}
+
+/// The persistent worker pool. See the module docs for the execution model
+/// and invariants; construction spawns the workers once, [`Drop`] parks
+/// none — it signals shutdown and joins them all.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    /// Thread handles for targeted `unpark` wake-ups, worker order.
+    workers: Vec<std::thread::Thread>,
+    /// Serializes concurrent fan-outs from different caller threads (the
+    /// batch runner's producers and consumer may share one pool).
+    run_lock: Mutex<()>,
+    /// Persistent symmetric-P2P accumulators, `n_workers` of them.
+    accums: Mutex<Vec<Accum>>,
+    n_workers: usize,
+    pinned: bool,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("workers", &self.n_workers)
+            .field("pinned", &self.pinned)
+            .finish()
+    }
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `threads` parked workers (clamped to `1..=256`).
+    /// With `pin`, worker `i` pins itself to core `i mod cores`
+    /// (best-effort, Linux only).
+    pub fn new(threads: usize, pin: bool) -> Self {
+        let n = threads.clamp(1, 256);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                participants: 0,
+                active: 0,
+                panicked: 0,
+                payload: None,
+                shutdown: false,
+            }),
+            done_cv: Condvar::new(),
+            live: AtomicUsize::new(0),
+        });
+        let handles: Vec<JoinHandle<()>> = (0..n)
+            .map(|id| {
+                note_spawn();
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("fmm2d-pool-{id}"))
+                    .spawn(move || worker_loop(&shared, id, pin))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        let workers = handles.iter().map(|h| h.thread().clone()).collect();
+        WorkerPool {
+            shared,
+            handles,
+            workers,
+            run_lock: Mutex::new(()),
+            accums: Mutex::new(Vec::new()),
+            n_workers: n,
+            pinned: pin,
+        }
+    }
+
+    /// Number of worker threads.
+    #[inline]
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Whether workers were asked to pin themselves to cores.
+    #[inline]
+    pub fn pinned(&self) -> bool {
+        self.pinned
+    }
+
+    /// Run `f(worker_id, scratch)` once on each of the first `limit`
+    /// workers and block until all have finished. The closure may borrow
+    /// the caller's stack freely — this call is the lifetime barrier.
+    /// Only the participating workers are woken (`unpark` per worker), so
+    /// a fan-out capped below the pool width costs the capped amount.
+    fn broadcast<F>(&self, limit: usize, f: F)
+    where
+        F: Fn(usize, &mut WorkerScratch) + Sync,
+    {
+        /// Monomorphized trampoline recovering `F` from the erased pointer.
+        unsafe fn call_erased<F>(data: *const (), id: usize, ws: &mut WorkerScratch)
+        where
+            F: Fn(usize, &mut WorkerScratch) + Sync,
+        {
+            (*(data as *const F))(id, ws)
+        }
+
+        let participants = limit.clamp(1, self.n_workers);
+        let guard = self.run_lock.lock().unwrap();
+        let job = Job {
+            data: &f as *const F as *const (),
+            call: call_erased::<F>,
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert_eq!(st.active, 0, "fan-out submitted while one is running");
+            st.job = Some(job);
+            st.epoch += 1;
+            st.participants = participants;
+            st.active = participants;
+        }
+        // `unpark` is sticky: a worker that checks the state after this
+        // and then parks consumes the pending token immediately, so there
+        // is no lost-wakeup window.
+        for w in &self.workers[..participants] {
+            w.unpark();
+        }
+        let (panicked, payload) = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.active > 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+            (std::mem::take(&mut st.panicked), st.payload.take())
+        };
+        drop(guard);
+        if let Some(p) = payload {
+            // re-raise the first worker panic with its original payload
+            std::panic::resume_unwind(p);
+        }
+        assert_eq!(panicked, 0, "{panicked} pool worker task(s) panicked");
+    }
+
+    /// Fan `tasks` out over the workers with **static assignment** (task
+    /// `k` → worker `k % n_workers`, each worker in ascending `k`) and
+    /// block until all are done. Static assignment is what keeps
+    /// reductions in task order — deterministic for a fixed worker count —
+    /// and task↔worker cache affinity stable across repeated fan-outs.
+    ///
+    /// Called from a pool worker (nested use), runs everything inline.
+    pub fn run_tasks<T, F>(&self, tasks: Vec<T>, f: F)
+    where
+        T: Send,
+        F: Fn(usize, T, &mut WorkerScratch) + Sync,
+    {
+        if tasks.is_empty() {
+            return;
+        }
+        if on_pool_worker() {
+            let mut ws = WorkerScratch::default();
+            for (k, t) in tasks.into_iter().enumerate() {
+                f(k, t, &mut ws);
+            }
+            return;
+        }
+        let nw = self.n_workers;
+        let slots: Vec<Mutex<Option<T>>> = tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        // task k runs on worker k % nw, so only the first min(tasks, nw)
+        // workers participate — the rest stay parked
+        let participants = slots.len().min(nw);
+        let slots = &slots;
+        let f = &f;
+        self.broadcast(participants, move |w, ws| {
+            let mut k = w;
+            while k < slots.len() {
+                let t = slots[k]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("each task is claimed exactly once");
+                f(k, t, ws);
+                k += nw;
+            }
+        });
+    }
+
+    /// Like [`WorkerPool::run_tasks`] but with **dynamic claiming**: up to
+    /// `limit` idle workers take the next unclaimed task off a shared
+    /// counter (workers beyond the limit return immediately — callers with
+    /// a thread budget below the pool width stay within it). Use when
+    /// per-task cost varies a lot (whole heterogeneous problems in a batch
+    /// group) and each task's result is order-independent.
+    pub fn run_dynamic<T, F>(&self, tasks: Vec<T>, limit: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, T, &mut WorkerScratch) + Sync,
+    {
+        if tasks.is_empty() {
+            return;
+        }
+        if limit == 0 || on_pool_worker() {
+            let mut ws = WorkerScratch::default();
+            for (k, t) in tasks.into_iter().enumerate() {
+                f(k, t, &mut ws);
+            }
+            return;
+        }
+        let slots: Vec<Mutex<Option<T>>> = tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        let participants = limit.min(slots.len()).min(self.n_workers);
+        let next = AtomicUsize::new(0);
+        let (slots, next, f) = (&slots, &next, &f);
+        self.broadcast(participants, move |_w, ws| loop {
+            let k = next.fetch_add(1, Ordering::Relaxed);
+            if k >= slots.len() {
+                break;
+            }
+            let t = slots[k]
+                .lock()
+                .unwrap()
+                .take()
+                .expect("each task is claimed exactly once");
+            f(k, t, ws);
+        });
+    }
+
+    /// The writer-side sharding primitive (pool analog of
+    /// `threadpool::scoped_chunks_mut`): run `f(range, chunk, scratch)` for
+    /// every range, where `chunk` is the disjoint destination slice
+    /// `data[range.start*stride .. range.end*stride]`. `ranges` must tile
+    /// `0..data.len()/stride`.
+    pub fn run_chunks_mut<T, F>(&self, data: &mut [T], stride: usize, ranges: &[Range<usize>], f: F)
+    where
+        T: Send,
+        F: Fn(Range<usize>, &mut [T], &mut WorkerScratch) + Sync,
+    {
+        let lens: Vec<usize> = ranges.iter().map(|r| (r.end - r.start) * stride).collect();
+        let chunks = split_lengths_mut(data, &lens);
+        let tasks: Vec<(Range<usize>, &mut [T])> = ranges.iter().cloned().zip(chunks).collect();
+        self.run_tasks(tasks, |_k, (r, chunk), ws| f(r, chunk, ws));
+    }
+
+    /// Pool analog of `threadpool::scoped_map`: apply `f` to every item on
+    /// the workers and collect the results in item order.
+    pub fn map_items<I, O, F>(&self, items: Vec<I>, f: F) -> Vec<O>
+    where
+        I: Send,
+        O: Send,
+        F: Fn(I) -> O + Sync,
+    {
+        let n = items.len();
+        let out: Vec<Mutex<Option<O>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        {
+            let (out, f) = (&out, &f);
+            self.run_tasks(items, move |k, item, _ws| {
+                *out[k].lock().unwrap() = Some(f(item));
+            });
+        }
+        out.into_iter()
+            .map(|m| m.into_inner().unwrap().expect("every task ran"))
+            .collect()
+    }
+
+    /// Lease `n_workers` persistent symmetric-P2P accumulators from the
+    /// pool's free list (topped up with fresh ones when concurrent
+    /// evaluations hold the stored sets). Callers [`Accum::reset`] the
+    /// ones they use and give them back via [`WorkerPool::return_accums`]
+    /// so subsequent evaluations reuse the allocations.
+    pub fn take_accums(&self) -> Vec<Accum> {
+        let mut out = {
+            let mut g = self.accums.lock().unwrap();
+            let keep = g.len().saturating_sub(self.n_workers);
+            g.split_off(keep)
+        };
+        while out.len() < self.n_workers {
+            out.push(Accum::default());
+        }
+        out
+    }
+
+    /// Return leased accumulators to the pool's free list. Concurrent
+    /// leases *extend* the list rather than replacing it (nothing is
+    /// silently dropped); retention is bounded to two lease-sets — beyond
+    /// steady-state concurrency the excess is freed. A lease lost to a
+    /// panic is not a memory leak (the `Vec`s drop with it), merely a
+    /// forfeited reuse: the next lease tops up with fresh buffers.
+    pub fn return_accums(&self, accums: Vec<Accum>) {
+        let mut g = self.accums.lock().unwrap();
+        g.extend(accums);
+        let cap = 2 * self.n_workers;
+        if g.len() > cap {
+            let excess = g.len() - cap;
+            g.drain(..excess);
+        }
+    }
+
+    /// Signal shutdown and join all workers (what [`Drop`] does).
+    fn shutdown_inner(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        for w in &self.workers {
+            w.unpark();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Tear the pool down (signal + join) and report how many of its
+    /// workers are still alive — `0` on a clean shutdown. Test hook for
+    /// the drop-then-rebuild contract (`tests/pool_parity.rs`).
+    pub fn shutdown_and_count(mut self) -> usize {
+        self.shutdown_inner();
+        self.shared.live.load(Ordering::SeqCst)
+        // Drop runs again on `self` but is idempotent: handles are drained.
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn worker_loop(shared: &Shared, id: usize, pin: bool) {
+    shared.live.fetch_add(1, Ordering::SeqCst);
+    ON_POOL_WORKER.with(|f| f.set(true));
+    if pin {
+        pin_current_thread(id);
+    }
+    let mut scratch = WorkerScratch::default();
+    let mut seen = 0u64;
+    loop {
+        // Wait parked until this worker participates in a new epoch (or
+        // shutdown). Spurious `park` returns just re-check the state; a
+        // worker skipped by several capped fan-outs catches up on the
+        // epoch counter without running their (long gone) jobs.
+        let job = loop {
+            let st = shared.state.lock().unwrap();
+            if st.shutdown {
+                drop(st);
+                shared.live.fetch_sub(1, Ordering::SeqCst);
+                return;
+            }
+            if st.epoch != seen {
+                seen = st.epoch;
+                if id < st.participants {
+                    break st.job.expect("epoch bumped with a job installed");
+                }
+            }
+            drop(st);
+            std::thread::park();
+        };
+        // A panicking task must not wedge the pool: catch it, finish the
+        // epoch, and let the submitting caller re-raise.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            (job.call)(job.data, id, &mut scratch)
+        }));
+        let mut st = shared.state.lock().unwrap();
+        if let Err(p) = result {
+            st.panicked += 1;
+            if st.payload.is_none() {
+                st.payload = Some(p);
+            }
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Affinity
+// ---------------------------------------------------------------------------
+
+/// Pin the calling thread to core `worker % cores`. Best-effort: failures
+/// (restricted cpusets, exotic kernels) are silently ignored, and the
+/// function is a no-op off Linux.
+#[cfg(target_os = "linux")]
+fn pin_current_thread(worker: usize) {
+    // 16 × 64 bits = 1024 CPUs, the kernel's historical CPU_SETSIZE.
+    const MASK_WORDS: usize = 16;
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    let cores = crate::util::threadpool::available_threads().max(1);
+    let core = worker % cores;
+    if core >= MASK_WORDS * 64 {
+        return;
+    }
+    let mut mask = [0u64; MASK_WORDS];
+    mask[core / 64] |= 1u64 << (core % 64);
+    unsafe {
+        // pid 0 = the calling thread; the return value is deliberately
+        // ignored (best-effort pinning)
+        sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr());
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_current_thread(_worker: usize) {}
+
+// ---------------------------------------------------------------------------
+// Process-wide shared pools
+// ---------------------------------------------------------------------------
+
+static GLOBAL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+static GLOBAL_PINNED: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+
+/// The process-wide shared pool (lazily built with one worker per
+/// available core), in an unpinned and a pinned flavor. Evaluations whose
+/// [`crate::fmm::FmmOptions::pool`] is `None` resolve here, so independent
+/// callers in one process share workers instead of spawning their own.
+pub fn global(pin: bool) -> Arc<WorkerPool> {
+    let cell = if pin { &GLOBAL_PINNED } else { &GLOBAL };
+    Arc::clone(cell.get_or_init(|| {
+        Arc::new(WorkerPool::new(
+            crate::util::threadpool::available_threads(),
+            pin,
+        ))
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_tasks_runs_every_task_exactly_once() {
+        let pool = WorkerPool::new(3, false);
+        let hits: Vec<AtomicUsize> = (0..10).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_tasks((0..10).collect::<Vec<usize>>(), |k, t, _ws| {
+            assert_eq!(k, t);
+            hits[t].fetch_add(1, Ordering::Relaxed);
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn run_dynamic_covers_all_tasks() {
+        let pool = WorkerPool::new(4, false);
+        for limit in [1usize, 2, 4, 9] {
+            let sum = AtomicUsize::new(0);
+            pool.run_dynamic((1..=100).collect::<Vec<usize>>(), limit, |_k, t, _ws| {
+                sum.fetch_add(t, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 5050, "limit={limit}");
+        }
+    }
+
+    #[test]
+    fn chunks_mut_writes_disjoint_slices() {
+        let pool = WorkerPool::new(5, false);
+        let n = 37;
+        let stride = 3;
+        let mut data = vec![0usize; n * stride];
+        let rs = crate::util::threadpool::ranges(n, 5);
+        pool.run_chunks_mut(&mut data, stride, &rs, |r, chunk, _ws| {
+            for (k, b) in (r.start..r.end).enumerate() {
+                for j in 0..stride {
+                    chunk[k * stride + j] = b * stride + j + 1;
+                }
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i + 1);
+        }
+    }
+
+    #[test]
+    fn map_items_preserves_order_and_reuses_pool() {
+        let pool = WorkerPool::new(3, false);
+        for round in 0..4u64 {
+            let out = pool.map_items((0..9u64).collect(), |i| i * i + round);
+            assert_eq!(out, (0..9u64).map(|i| i * i + round).collect::<Vec<_>>());
+        }
+        assert!(pool.map_items(Vec::<u32>::new(), |i| i).is_empty());
+    }
+
+    #[test]
+    fn tasks_are_statically_assigned_to_workers() {
+        // the determinism/stickiness contract: task k runs on worker
+        // k % n_workers — observed through the worker thread's name
+        // ("fmm2d-pool-{id}"), so a regression to dynamic claiming fails
+        let pool = WorkerPool::new(2, false);
+        let seen: Vec<Mutex<Option<String>>> = (0..7).map(|_| Mutex::new(None)).collect();
+        pool.run_tasks((0..7).collect::<Vec<usize>>(), |k, t, _ws| {
+            assert_eq!(k, t);
+            *seen[k].lock().unwrap() =
+                Some(std::thread::current().name().unwrap_or("?").to_string());
+        });
+        for (k, s) in seen.iter().enumerate() {
+            assert_eq!(
+                s.lock().unwrap().as_deref(),
+                Some(format!("fmm2d-pool-{}", k % 2).as_str()),
+                "task {k} ran on the wrong worker"
+            );
+        }
+    }
+
+    #[test]
+    fn accums_are_leased_and_reused() {
+        let pool = WorkerPool::new(2, false);
+        let mut a = pool.take_accums();
+        assert_eq!(a.len(), 2);
+        a[0].reset(5);
+        a[0].re[3] = 7.0;
+        let ptr = a[0].re.as_ptr();
+        pool.return_accums(a);
+        let b = pool.take_accums();
+        // same allocation comes back (reuse, not reallocation)
+        assert_eq!(b[0].re.as_ptr(), ptr);
+        pool.return_accums(b);
+    }
+
+    #[test]
+    fn concurrent_leases_extend_the_free_list() {
+        let pool = WorkerPool::new(2, false);
+        // two overlapping leases (concurrent evaluations on one pool)
+        let mut a = pool.take_accums();
+        let mut b = pool.take_accums();
+        assert_eq!((a.len(), b.len()), (2, 2));
+        for x in a.iter_mut().chain(b.iter_mut()) {
+            x.reset(8); // materialize real allocations to compare by ptr
+        }
+        let ptrs: Vec<*const f64> = a.iter().chain(&b).map(|x| x.re.as_ptr()).collect();
+        pool.return_accums(a);
+        pool.return_accums(b); // extends — must not drop the first set
+        let c = pool.take_accums();
+        let d = pool.take_accums();
+        // both retained sets come back (no reallocation): every buffer is
+        // one of the originals
+        for x in c.iter().chain(&d) {
+            assert!(ptrs.contains(&x.re.as_ptr()));
+        }
+        pool.return_accums(c);
+        pool.return_accums(d);
+    }
+
+    #[test]
+    fn nested_fanout_from_a_worker_runs_inline() {
+        let pool = Arc::new(WorkerPool::new(2, false));
+        let p2 = Arc::clone(&pool);
+        let total = AtomicUsize::new(0);
+        pool.run_tasks(vec![10usize, 20], |_k, t, _ws| {
+            // a fan-out issued from a worker must not deadlock
+            p2.run_tasks(vec![t, t], |_kk, tt, _ws2| {
+                total.fetch_add(tt, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 60);
+    }
+
+    #[test]
+    fn shutdown_leaves_no_workers_behind() {
+        let pool = WorkerPool::new(4, false);
+        pool.run_tasks(vec![1, 2, 3], |_k, _t, _ws| {});
+        assert_eq!(pool.shutdown_and_count(), 0);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2, false);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_tasks(vec![0usize, 1], |_k, t, _ws| {
+                if t == 1 {
+                    panic!("task boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "caller must observe the task panic");
+        // the pool is still serviceable afterwards
+        let sum = AtomicUsize::new(0);
+        pool.run_tasks(vec![5usize, 6], |_k, t, _ws| {
+            sum.fetch_add(t, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 11);
+    }
+
+    #[test]
+    fn pinned_pool_works() {
+        // best-effort pinning must never break execution
+        let pool = WorkerPool::new(2, true);
+        assert!(pool.pinned());
+        let out = pool.map_items(vec![1u32, 2, 3], |i| i + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+        assert_eq!(pool.shutdown_and_count(), 0);
+    }
+
+    #[test]
+    fn spawn_counter_records_pool_construction() {
+        // "fan-outs spawn nothing" needs a process to itself and lives in
+        // tests/zero_spawn.rs; here only the construction census is
+        // assertable (other tests spawn concurrently in this process)
+        let before = spawn_count();
+        let _pool = WorkerPool::new(3, false);
+        assert!(spawn_count() >= before + 3);
+    }
+}

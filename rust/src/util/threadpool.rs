@@ -1,12 +1,17 @@
-//! Chunking and scoped-thread helpers for the multithreaded execution
-//! engine ([`crate::fmm::parallel`]).
+//! Chunking helpers plus the *scoped* (spawn-per-phase) thread fan-outs.
 //!
 //! Built on `std::thread::scope` only — the offline environment has no
-//! rayon. The engine parallelizes by *writer-side sharding*: every phase
+//! rayon. The engines parallelize by *writer-side sharding*: every phase
 //! partitions its destination boxes into contiguous ranges and each thread
 //! owns a disjoint `&mut` slice of the destination data, matching the
 //! paper's directed no-write-conflict list layout (§4.3), so no locks or
 //! atomics are needed anywhere.
+//!
+//! The scoped fan-outs here ([`scoped_map`], [`scoped_chunks_mut`]) remain
+//! as the reference engine that `pool-bench` compares against; production
+//! paths run on the persistent worker pool ([`crate::util::pool`]), which
+//! pays the thread-spawn cost once per pool instead of once per phase.
+//! Every spawn below is recorded via [`crate::util::pool::note_spawn`].
 
 use std::ops::Range;
 
@@ -105,6 +110,7 @@ where
             .into_iter()
             .map(|item| {
                 let f = &f;
+                crate::util::pool::note_spawn();
                 s.spawn(move || f(item))
             })
             .collect();
@@ -130,6 +136,7 @@ where
         for (r, chunk) in ranges.iter().zip(chunks) {
             let r = r.clone();
             let f = &f;
+            crate::util::pool::note_spawn();
             s.spawn(move || f(r, chunk));
         }
     });

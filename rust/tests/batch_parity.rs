@@ -42,7 +42,7 @@ fn assert_parity(problems: &[BatchProblem], opts: &BatchOptions) -> batch::Batch
             &pr.gammas,
             &FmmOptions {
                 threads: Some(1),
-                ..opts.fmm
+                ..opts.fmm.clone()
             },
         )
         .unwrap();

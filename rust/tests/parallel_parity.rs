@@ -63,7 +63,7 @@ fn parallel_engine_matches_serial_across_the_grid() {
                 // engine falls back to the directed formulation for Log
                 symmetric_p2p: true,
                 threads: Some(1),
-                topo_threads: None,
+                ..FmmOptions::default()
             };
             let what = format!("{} × {:?}", dist.name(), kernel);
             let (serial, st, sc) = evaluate_on_tree_serial(&pyr, &con, &opts);
@@ -108,7 +108,7 @@ fn dispatch_selects_engine_by_thread_count() {
     };
     let one = FmmOptions {
         threads: Some(1),
-        ..base
+        ..base.clone()
     };
     let four = FmmOptions {
         threads: Some(4),

@@ -1,0 +1,242 @@
+//! Parity and lifecycle contract of the persistent worker pool engine
+//! (`fmm::parallel::evaluate_on_tree_pool`, `util::pool::WorkerPool`):
+//!
+//! * potentials ≤ 1e-12 relative error vs the serial driver and
+//!   *identical* `WorkCounts`, across thread counts 1 / 2 / odd / > cores;
+//! * bitwise identity with the scoped spawn-per-phase engine at the same
+//!   worker count (same sharding, same reduction order);
+//! * one pool reused across ≥ 3 consecutive heterogeneous problems (and a
+//!   batch run) without rebuilding;
+//! * drop-then-rebuild: shutdown joins every worker (none leaked/parked),
+//!   and a fresh pool serves correctly afterwards.
+
+use std::sync::Arc;
+
+use fmm2d::config::FmmConfig;
+use fmm2d::expansion::Kernel;
+use fmm2d::fmm::{
+    self, evaluate_on_tree_serial,
+    parallel::{evaluate_on_tree_parallel, evaluate_on_tree_pool},
+    FmmOptions, WorkCounts,
+};
+use fmm2d::topology::{self, TopologyOptions};
+use fmm2d::util::pool::WorkerPool;
+use fmm2d::util::rng::Pcg64;
+use fmm2d::workload::Distribution;
+
+fn assert_counts_identical(a: &WorkCounts, b: &WorkCounts, what: &str) {
+    assert_eq!(a.n, b.n, "{what}: n");
+    assert_eq!(a.levels, b.levels, "{what}: levels");
+    assert_eq!(a.p, b.p, "{what}: p");
+    assert_eq!(a.leaf_sizes, b.leaf_sizes, "{what}: leaf_sizes");
+    assert_eq!(a.m2l_per_level, b.m2l_per_level, "{what}: m2l_per_level");
+    assert_eq!(a.m2m_per_level, b.m2m_per_level, "{what}: m2m_per_level");
+    assert_eq!(a.l2l_per_level, b.l2l_per_level, "{what}: l2l_per_level");
+    assert_eq!(a.p2p_pairs, b.p2p_pairs, "{what}: p2p_pairs");
+    assert_eq!(a.p2p_src_per_box, b.p2p_src_per_box, "{what}: p2p_src_per_box");
+    assert_eq!(a.p2l_pairs, b.p2l_pairs, "{what}: p2l_pairs");
+    assert_eq!(a.m2p_pairs, b.m2p_pairs, "{what}: m2p_pairs");
+    assert_eq!(a.p2m_particles, b.p2m_particles, "{what}: p2m_particles");
+    assert_eq!(a.connect_checks, b.connect_checks, "{what}: connect_checks");
+}
+
+fn opts_with(p: usize, levels: usize, threads: usize) -> FmmOptions {
+    FmmOptions {
+        cfg: FmmConfig {
+            p,
+            levels_override: Some(levels),
+            ..FmmConfig::default()
+        },
+        threads: Some(threads),
+        ..FmmOptions::default()
+    }
+}
+
+#[test]
+fn pool_engine_matches_serial_across_thread_counts() {
+    let cores = fmm2d::util::threadpool::available_threads();
+    let mut r = Pcg64::seed_from_u64(41);
+    let (pts, gs) = Distribution::Normal { sigma: 0.1 }.generate(2500, &mut r);
+    let topo = topology::build(&pts, &gs, 3, &TopologyOptions::serial(0.5)).unwrap();
+    let (pyr, con) = (&topo.pyramid, &topo.connectivity);
+    let serial_opts = opts_with(13, 3, 1);
+    let (serial, _, sc) = evaluate_on_tree_serial(pyr, con, &serial_opts);
+    for nt in [1usize, 2, 3, cores + 2] {
+        let pool = WorkerPool::new(nt, false);
+        let opts = opts_with(13, 3, nt);
+        let (pooled, pt, pc) = evaluate_on_tree_pool(pyr, con, &opts, &pool);
+        assert_eq!(pooled.len(), serial.len());
+        for (i, (a, b)) in serial.iter().zip(&pooled).enumerate() {
+            assert!(
+                (*a - *b).abs() <= 1e-12 * a.abs().max(1.0),
+                "t={nt}: potential {i} diverged: {a:?} vs {b:?}"
+            );
+        }
+        assert_counts_identical(&sc, &pc, &format!("pool t={nt}"));
+        assert!(pt.total() > 0.0, "t={nt}: no time recorded");
+        // and bitwise identity with the scoped engine at the same count
+        let (scoped, _, _) = evaluate_on_tree_parallel(pyr, con, &opts, nt.min(pool.n_workers()));
+        for (a, b) in scoped.iter().zip(&pooled) {
+            assert_eq!(a.re, b.re, "t={nt}: pooled != scoped bitwise");
+            assert_eq!(a.im, b.im, "t={nt}: pooled != scoped bitwise");
+        }
+    }
+}
+
+#[test]
+fn one_pool_serves_consecutive_heterogeneous_problems() {
+    // one pool, ≥3 problems with different sizes, orders, depths,
+    // distributions and kernels — scratch/accumulator reuse must never
+    // leak state from one problem into the next
+    let pool = Arc::new(WorkerPool::new(3, false));
+    let cases: [(usize, usize, usize, Distribution, Kernel, bool); 4] = [
+        (1200, 10, 2, Distribution::Uniform, Kernel::Harmonic, true),
+        (3000, 17, 3, Distribution::Normal { sigma: 0.1 }, Kernel::Harmonic, false),
+        (800, 8, 2, Distribution::Layer { sigma: 0.05 }, Kernel::Harmonic, true),
+        (1600, 12, 2, Distribution::Uniform, Kernel::Log, false),
+    ];
+    for (seed, &(n, p, levels, dist, kernel, sym)) in cases.iter().enumerate() {
+        let mut r = Pcg64::seed_from_u64(100 + seed as u64);
+        let (pts, mut gs) = dist.generate(n, &mut r);
+        if kernel == Kernel::Log {
+            for g in gs.iter_mut() {
+                g.im = 0.0; // log potential: real strengths
+            }
+        }
+        let topo = topology::build(&pts, &gs, levels, &TopologyOptions::serial(0.5)).unwrap();
+        let opts = FmmOptions {
+            kernel,
+            symmetric_p2p: sym,
+            pool: Some(Arc::clone(&pool)),
+            ..opts_with(p, levels, 3)
+        };
+        let (serial, _, _) = evaluate_on_tree_serial(&topo.pyramid, &topo.connectivity, &opts);
+        let (pooled, _, _) =
+            evaluate_on_tree_pool(&topo.pyramid, &topo.connectivity, &opts, &pool);
+        for (i, (a, b)) in serial.iter().zip(&pooled).enumerate() {
+            assert!(
+                (*a - *b).abs() <= 1e-12 * a.abs().max(1.0),
+                "case {seed}: potential {i} diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn full_evaluate_through_an_explicit_pool() {
+    // the user-facing entry point with FmmOptions::pool set: topology and
+    // compute both run on the owned pool, results in caller order
+    let pool = Arc::new(WorkerPool::new(4, false));
+    let mut r = Pcg64::seed_from_u64(7);
+    let (pts, gs) = Distribution::Uniform.generate(3000, &mut r);
+    let serial = fmm::evaluate(
+        &pts,
+        &gs,
+        &FmmOptions {
+            threads: Some(1),
+            ..FmmOptions::default()
+        },
+    )
+    .unwrap();
+    let pooled = fmm::evaluate(
+        &pts,
+        &gs,
+        &FmmOptions {
+            threads: Some(4),
+            pool: Some(Arc::clone(&pool)),
+            ..FmmOptions::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(serial.potentials.len(), pooled.potentials.len());
+    for (a, b) in serial.potentials.iter().zip(&pooled.potentials) {
+        assert!((*a - *b).abs() <= 1e-12 * a.abs().max(1.0));
+    }
+    assert_eq!(serial.counts.p2p_pairs, pooled.counts.p2p_pairs);
+    // the pool-built topology is the same tree the serial path built
+    assert_eq!(serial.counts.connect_checks, pooled.counts.connect_checks);
+}
+
+#[test]
+fn batch_runs_on_an_explicit_pool() {
+    use fmm2d::batch::{self, BatchEngine, BatchOptions, BatchProblem};
+
+    let pool = Arc::new(WorkerPool::new(3, false));
+    let mut r = Pcg64::seed_from_u64(19);
+    let problems: Vec<BatchProblem> = [900usize, 2400, 1000, 2600]
+        .iter()
+        .map(|&n| {
+            let (points, gammas) = Distribution::Uniform.generate(n, &mut r);
+            BatchProblem { points, gammas }
+        })
+        .collect();
+    let opts = BatchOptions {
+        fmm: FmmOptions {
+            cfg: FmmConfig {
+                p: 10,
+                ..FmmConfig::default()
+            },
+            threads: Some(3),
+            pool: Some(Arc::clone(&pool)),
+            ..FmmOptions::default()
+        },
+        engine: BatchEngine::Parallel,
+        max_group: 0,
+        overlap: true,
+    };
+    let out = batch::run(&problems, &opts).unwrap();
+    assert_eq!(out.potentials.len(), problems.len());
+    for (pr, phi) in problems.iter().zip(&out.potentials) {
+        let seq = fmm::evaluate(
+            &pr.points,
+            &pr.gammas,
+            &FmmOptions {
+                threads: Some(1),
+                ..opts.fmm.clone()
+            },
+        )
+        .unwrap();
+        for (a, b) in phi.iter().zip(&seq.potentials) {
+            assert!((*a - *b).abs() <= 1e-12 * a.abs().max(1.0));
+        }
+    }
+}
+
+#[test]
+fn drop_then_rebuild_shuts_down_cleanly() {
+    let mut r = Pcg64::seed_from_u64(23);
+    let (pts, gs) = Distribution::Uniform.generate(1500, &mut r);
+    let topo = topology::build(&pts, &gs, 2, &TopologyOptions::serial(0.5)).unwrap();
+    let opts = opts_with(9, 2, 3);
+
+    let pool = WorkerPool::new(3, false);
+    let (first, _, _) = evaluate_on_tree_pool(&topo.pyramid, &topo.connectivity, &opts, &pool);
+    // shutdown joins every worker: none leaked, none left parked
+    assert_eq!(pool.shutdown_and_count(), 0, "workers leaked past shutdown");
+
+    // a rebuilt pool serves the same problem identically
+    let pool2 = WorkerPool::new(3, false);
+    let (second, _, _) = evaluate_on_tree_pool(&topo.pyramid, &topo.connectivity, &opts, &pool2);
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.re, b.re);
+        assert_eq!(a.im, b.im);
+    }
+    assert_eq!(pool2.shutdown_and_count(), 0);
+}
+
+#[test]
+fn pinned_pool_parity() {
+    // --pin is best-effort and must never change results
+    let mut r = Pcg64::seed_from_u64(29);
+    let (pts, gs) = Distribution::Uniform.generate(1200, &mut r);
+    let topo = topology::build(&pts, &gs, 2, &TopologyOptions::serial(0.5)).unwrap();
+    let opts = opts_with(11, 2, 2);
+    let unpinned = WorkerPool::new(2, false);
+    let pinned = WorkerPool::new(2, true);
+    let (a, _, _) = evaluate_on_tree_pool(&topo.pyramid, &topo.connectivity, &opts, &unpinned);
+    let (b, _, _) = evaluate_on_tree_pool(&topo.pyramid, &topo.connectivity, &opts, &pinned);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.re, y.re);
+        assert_eq!(x.im, y.im);
+    }
+}

@@ -1,0 +1,69 @@
+//! The headline acceptance contract of the persistent worker pool: once a
+//! pool exists, a full `fmm::evaluate` — Sort, Connect and all six
+//! computational phases — performs **zero thread spawns**. Every spawn
+//! site in the crate reports to `util::pool::note_spawn`, so the global
+//! counter is a complete census.
+//!
+//! This test lives alone in its own integration-test binary (its own
+//! process): spawn accounting is process-global, and tests from other
+//! binaries run as separate processes, so nothing else can move the
+//! counter between the snapshot and the assertion.
+
+use std::sync::Arc;
+
+use fmm2d::config::FmmConfig;
+use fmm2d::fmm::{self, FmmOptions};
+use fmm2d::util::pool::{self, WorkerPool};
+use fmm2d::util::rng::Pcg64;
+use fmm2d::workload::Distribution;
+
+#[test]
+fn full_evaluate_spawns_no_threads_after_pool_construction() {
+    let pool = Arc::new(WorkerPool::new(3, false));
+    let opts = FmmOptions {
+        cfg: FmmConfig {
+            p: 12,
+            ..FmmConfig::default()
+        },
+        threads: Some(3),
+        pool: Some(Arc::clone(&pool)),
+        ..FmmOptions::default()
+    };
+
+    let mut r = Pcg64::seed_from_u64(5);
+    let (pts, gs) = Distribution::Normal { sigma: 0.1 }.generate(4000, &mut r);
+
+    // Warm-up: first evaluation (one-time lazy setup may not spawn either,
+    // but the contract below is about steady state).
+    let warm = fmm::evaluate(&pts, &gs, &opts).unwrap();
+
+    let before = pool::spawn_count();
+    let mut last = None;
+    for seed in 0..3u64 {
+        let mut r = Pcg64::seed_from_u64(50 + seed);
+        let (pts, gs) = Distribution::Uniform.generate(2000 + 700 * seed as usize, &mut r);
+        last = Some(fmm::evaluate(&pts, &gs, &opts).unwrap());
+    }
+    assert_eq!(
+        pool::spawn_count(),
+        before,
+        "a full evaluate must spawn zero threads once the pool exists"
+    );
+
+    // sanity: the spawn-free evaluations really computed something
+    let out = last.unwrap();
+    assert_eq!(out.potentials.len(), 2000 + 700 * 2);
+    assert!(out.counts.p2p_pairs > 0);
+    assert!(out.times.total() > 0.0);
+    assert_eq!(warm.potentials.len(), 4000);
+
+    // the same holds for the directed (GPU-layout) near field
+    let dir_opts = FmmOptions {
+        symmetric_p2p: false,
+        ..opts.clone()
+    };
+    let before = pool::spawn_count();
+    let dir = fmm::evaluate(&pts, &gs, &dir_opts).unwrap();
+    assert_eq!(pool::spawn_count(), before, "directed P2P path spawned");
+    assert_eq!(dir.potentials.len(), pts.len());
+}
