@@ -86,6 +86,7 @@ fn main() {
             engine,
             max_group: 0,
             overlap,
+            ..BatchOptions::default()
         };
         run(&format!("{name}_{k}x{n}"), &mut || {
             black_box(batch::run(&problems, &opts).expect("CPU batch engines cannot fail"));
@@ -98,12 +99,27 @@ fn main() {
             fmm: fmm_opts.clone(),
             engine: BatchEngine::Parallel,
             max_group,
-            overlap: true,
+            ..BatchOptions::default()
         };
         run(&format!("batch_parallel_{k}x{n}_g{max_group}"), &mut || {
             black_box(batch::run(&problems, &opts).expect("CPU batch engines cannot fail"));
         });
     }
+
+    // dispatcher cross-check: the cost model's predicted batch time next
+    // to the measured numbers above (fallback rates unless `fmm2d
+    // calibrate` has written a profile)
+    let d = fmm2d::dispatch::Dispatcher::load_or_default(None);
+    let members: Vec<fmm2d::dispatch::Problem> = problems
+        .iter()
+        .map(|pr| fmm2d::dispatch::Problem::from_config(&fmm_opts.cfg, pr.points.len()))
+        .collect();
+    let dec = d.select_group(&members);
+    println!(
+        "dispatch cost model: would pick {} — predicted {:.6}s \
+         (serial {:.6}s, pooled {:.6}s, gpu {:.6}s)",
+        dec.choice, dec.predicted_s, dec.cost.serial_s, dec.cost.pooled_s, dec.cost.gpu_s
+    );
 
     println!("\n{} benchmarks run", results.len());
 }

@@ -1,0 +1,83 @@
+//! Autotuned dispatch: calibrate a cost-model profile on this machine,
+//! let the dispatcher pick the engine per problem and per batch group,
+//! and print the decisions with predicted vs measured times.
+//!
+//! Run: `cargo run --release --example auto_dispatch`
+
+use std::sync::Arc;
+
+use fmm2d::batch::{self, BatchEngine, BatchOptions, BatchProblem};
+use fmm2d::config::FmmConfig;
+use fmm2d::dispatch::{
+    evaluate_auto, CalibrationOptions, CalibrationProfile, DispatchReport, Dispatcher, Problem,
+};
+use fmm2d::util::rng::Pcg64;
+use fmm2d::workload;
+
+fn main() {
+    // 1. calibrate: a short pass of real evaluations measures per-phase
+    //    CPU throughput for the serial and pooled engines (quick sizes —
+    //    a couple of seconds; `fmm2d calibrate` persists this to disk)
+    let profile = CalibrationProfile::measure(&CalibrationOptions {
+        quick: true,
+        ..CalibrationOptions::default()
+    })
+    .expect("calibration workloads are valid");
+    println!("{}", profile.summary());
+    let dispatcher = Dispatcher::new(profile);
+
+    // 2. per-problem selection: tiny problems stay on the serial driver
+    //    (no pool fan-out overhead), large ones go to the pool
+    let cfg = FmmConfig::default();
+    for n in [300usize, 5_000, 80_000] {
+        let decision = dispatcher.select(&Problem::from_config(&cfg, n));
+        println!(
+            "n = {n:>6}: {} (predicted {:.2} ms; serial {:.2} ms, pooled {:.2} ms)",
+            decision.choice,
+            decision.predicted_s * 1e3,
+            decision.cost.serial_s * 1e3,
+            decision.cost.pooled_s * 1e3,
+        );
+    }
+
+    // 3. one auto evaluation end to end, decision + measurement included
+    let mut rng = Pcg64::seed_from_u64(7);
+    let (points, gammas) = workload::uniform_square(30_000, &mut rng);
+    let (out, decision) =
+        evaluate_auto(&points, &gammas, &Default::default(), &dispatcher).expect("valid workload");
+    println!(
+        "auto evaluation of {} points: {}",
+        out.potentials.len(),
+        DispatchReport {
+            decisions: vec![decision],
+        }
+        .render()
+    );
+
+    // 4. a homogeneous batch: the dispatcher resolves the engine per
+    //    group, and the batch output carries the full report
+    let problems: Vec<BatchProblem> = (0..24)
+        .map(|_| {
+            let (points, gammas) = workload::uniform_square(2_000, &mut rng);
+            BatchProblem { points, gammas }
+        })
+        .collect();
+    let batch_out = batch::run(
+        &problems,
+        &BatchOptions {
+            engine: BatchEngine::Auto,
+            dispatcher: Some(Arc::new(dispatcher)),
+            ..BatchOptions::default()
+        },
+    )
+    .expect("CPU batch engines cannot fail");
+    println!(
+        "batch of {} problems in {} groups:",
+        batch_out.stats.n_problems, batch_out.stats.n_groups
+    );
+    println!(
+        "{}",
+        batch_out.report.expect("auto batches carry a report").render()
+    );
+    println!("auto_dispatch OK");
+}

@@ -26,7 +26,10 @@
 //!   topology prologue **overlaps** group execution by default
 //!   ([`BatchOptions::overlap`]): producer workers build the next group's
 //!   trees while the current group computes, so the last serial stage of
-//!   the batch path is off the critical path;
+//!   the batch path is off the critical path. [`BatchEngine::Auto`]
+//!   resolves the engine **per group** from the calibrated dispatch cost
+//!   model ([`crate::dispatch`]) and records every decision (predicted vs
+//!   measured) in [`BatchOutput::report`](runner::BatchOutput::report);
 //! * per-problem potentials come back in each caller's original particle
 //!   order, with aggregated [`WorkCounts`](crate::fmm::WorkCounts) (for
 //!   the GPU cost model's batched-dispatch accounting) and [`BatchStats`].

@@ -23,13 +23,14 @@ use std::time::Instant;
 
 use crate::complex::C64;
 use crate::connectivity::Connectivity;
+use crate::dispatch::{self, DispatchReport, Dispatcher, Engine, EngineChoice};
 use crate::fmm::{self, FmmOptions, Phase, PhaseTimes, WorkCounts};
 use crate::topology::{self, TopologyOptions};
 use crate::tree::Pyramid;
 use crate::util::error::Result;
 use crate::util::pool::{note_spawn, WorkerPool};
 
-use super::plan::{BatchPlan, ProblemShape};
+use super::plan::{BatchGroup, BatchPlan, ProblemShape};
 
 /// One FMM problem of a batch: source points plus strengths.
 #[derive(Clone, Debug)]
@@ -53,6 +54,26 @@ pub enum BatchEngine {
     /// The XLA/PJRT runtime: one batched `run_raw` per group (needs the
     /// `pjrt` feature and artifacts compiled with a batch dimension).
     Xla,
+    /// Resolve the engine **per group** from the calibrated dispatch cost
+    /// model ([`crate::dispatch`]): small groups stay on the CPU
+    /// (serial or pooled), large padded groups go to the batched XLA path
+    /// when the build can run it. Uses [`BatchOptions::dispatcher`] (or
+    /// the default profile location) and records every decision with its
+    /// predicted and measured time in [`BatchOutput::report`].
+    Auto,
+}
+
+impl From<Engine> for BatchEngine {
+    /// The CLI `--engine` selector maps one-to-one onto batch engines —
+    /// the single parsing/mapping point shared by `run` and `batch`.
+    fn from(e: Engine) -> BatchEngine {
+        match e {
+            Engine::Serial => BatchEngine::Serial,
+            Engine::Parallel => BatchEngine::Parallel,
+            Engine::Xla => BatchEngine::Xla,
+            Engine::Auto => BatchEngine::Auto,
+        }
+    }
 }
 
 /// Options of one batch run.
@@ -68,7 +89,14 @@ pub struct BatchOptions {
     /// [`BatchEngine::Parallel`] path (default `true`; the CLI's
     /// `--no-overlap` disables it for A/B timing). The `Serial` engine
     /// always runs the fully sequential prologue — it is the baseline.
+    /// [`BatchEngine::Auto`] overlaps only when every group resolved to
+    /// the pooled engine.
     pub overlap: bool,
+    /// The dispatcher resolving [`BatchEngine::Auto`] groups. `None` (the
+    /// default) loads the default profile location, falling back to the
+    /// built-in rates ([`Dispatcher::load_or_default`]); ignored by the
+    /// explicit engines.
+    pub dispatcher: Option<std::sync::Arc<Dispatcher>>,
 }
 
 impl Default for BatchOptions {
@@ -78,6 +106,7 @@ impl Default for BatchOptions {
             engine: BatchEngine::Parallel,
             max_group: 0,
             overlap: true,
+            dispatcher: None,
         }
     }
 }
@@ -109,6 +138,9 @@ pub struct BatchOutput {
     /// ([`WorkCounts::absorb`]).
     pub counts: WorkCounts,
     pub stats: BatchStats,
+    /// Per-group dispatch decisions (choice, predicted vs measured time);
+    /// `Some` iff the batch ran with [`BatchEngine::Auto`].
+    pub report: Option<DispatchReport>,
 }
 
 /// Evaluate a batch of problems in grouped, shape-compatible dispatches.
@@ -148,11 +180,16 @@ pub fn run(problems: &[BatchProblem], opts: &BatchOptions) -> Result<BatchOutput
     let plan = BatchPlan::group(&shapes, opts.max_group);
     stats.n_groups = plan.n_groups();
 
+    // ---- engine resolution: explicit engines apply to every group; Auto
+    // asks the dispatcher per group (see `resolve_engines`)
+    let (group_engines, mut report) = resolve_engines(problems, &plan, opts);
+    let mut group_measured = vec![0.0f64; plan.n_groups()];
+
     // One persistent pool serves the whole batch — every group dispatch
     // (and, on the sequential prologue, every topology build) fans out on
     // it, so the batch performs no per-group thread spawns. A fully
     // single-threaded configuration never touches (or lazily builds) it.
-    let wants_pool = opts.engine == BatchEngine::Parallel
+    let wants_pool = group_engines.contains(&BatchEngine::Parallel)
         && opts
             .fmm
             .effective_threads()
@@ -161,7 +198,9 @@ pub fn run(problems: &[BatchProblem], opts: &BatchOptions) -> Result<BatchOutput
     let pool = wants_pool.then(|| opts.fmm.shared_pool());
 
     // ---- topological phase + dispatch ---------------------------------
-    if opts.engine == BatchEngine::Parallel && opts.overlap && problems.len() > 1 {
+    let all_parallel = !group_engines.is_empty()
+        && group_engines.iter().all(|e| *e == BatchEngine::Parallel);
+    if all_parallel && opts.overlap && problems.len() > 1 {
         run_overlapped(
             problems,
             &plan,
@@ -171,6 +210,7 @@ pub fn run(problems: &[BatchProblem], opts: &BatchOptions) -> Result<BatchOutput
             &mut counts,
             &mut stats,
             &mut times_per_problem,
+            &mut group_measured,
         )?;
     } else {
         // sequential prologue (the PR-2 shape): every topology is built —
@@ -183,29 +223,45 @@ pub fn run(problems: &[BatchProblem], opts: &BatchOptions) -> Result<BatchOutput
             times_per_problem[i] = t;
             trees.push(tree);
         }
-        match opts.engine {
-            BatchEngine::Serial | BatchEngine::Parallel => {
-                for group in &plan.groups {
-                    let members: Vec<(&Pyramid, &Connectivity)> = group
-                        .members
-                        .iter()
-                        .map(|&i| (&trees[i].0, &trees[i].1))
-                        .collect();
-                    let results = dispatch_cpu(&members, opts, pool.as_deref());
-                    stats.dispatches += 1;
-                    for (&i, (phi_leaf, t, c)) in group.members.iter().zip(results) {
-                        potentials[i] = trees[i].0.unpermute(&phi_leaf);
-                        times_per_problem[i].add(&t);
-                        counts.absorb(&c);
-                    }
-                }
+        let mut xla_groups: Vec<(usize, &BatchGroup)> = Vec::new();
+        for (gi, group) in plan.groups.iter().enumerate() {
+            let engine = group_engines[gi];
+            if engine == BatchEngine::Xla {
+                xla_groups.push((gi, group));
+                continue;
             }
-            BatchEngine::Xla => {
-                run_xla(&trees, &plan, &mut potentials, &mut counts, &mut stats)?
+            let members: Vec<(&Pyramid, &Connectivity)> = group
+                .members
+                .iter()
+                .map(|&i| (&trees[i].0, &trees[i].1))
+                .collect();
+            let t0 = Instant::now();
+            let results = dispatch_cpu(&members, opts, pool.as_deref(), engine);
+            group_measured[gi] = t0.elapsed().as_secs_f64();
+            stats.dispatches += 1;
+            for (&i, (phi_leaf, t, c)) in group.members.iter().zip(results) {
+                potentials[i] = trees[i].0.unpermute(&phi_leaf);
+                times_per_problem[i].add(&t);
+                counts.absorb(&c);
             }
+        }
+        if !xla_groups.is_empty() {
+            run_xla(
+                &trees,
+                &xla_groups,
+                &mut potentials,
+                &mut counts,
+                &mut stats,
+                &mut group_measured,
+            )?;
         }
     }
 
+    if let Some(r) = &mut report {
+        for (d, m) in r.decisions.iter_mut().zip(&group_measured) {
+            d.measured_s = Some(*m);
+        }
+    }
     for t in &times_per_problem {
         stats.times.add(t);
     }
@@ -214,7 +270,51 @@ pub fn run(problems: &[BatchProblem], opts: &BatchOptions) -> Result<BatchOutput
         potentials,
         counts,
         stats,
+        report,
     })
+}
+
+/// Resolve the engine of every group: explicit engines broadcast;
+/// [`BatchEngine::Auto`] consults the dispatcher per group (the pooled
+/// candidate capped at the configured thread budget) and collects the
+/// decisions into a [`DispatchReport`].
+fn resolve_engines(
+    problems: &[BatchProblem],
+    plan: &BatchPlan,
+    opts: &BatchOptions,
+) -> (Vec<BatchEngine>, Option<DispatchReport>) {
+    if opts.engine != BatchEngine::Auto {
+        return (vec![opts.engine; plan.n_groups()], None);
+    }
+    let dispatcher = opts
+        .dispatcher
+        .clone()
+        .unwrap_or_else(|| std::sync::Arc::new(Dispatcher::load_or_default(None)));
+    let cap = Some(opts.fmm.effective_threads());
+    let mut engines = Vec::with_capacity(plan.n_groups());
+    let mut decisions = Vec::with_capacity(plan.n_groups());
+    for group in &plan.groups {
+        let members: Vec<dispatch::Problem> = group
+            .members
+            .iter()
+            .map(|&i| {
+                dispatch::Problem::new(
+                    problems[i].points.len(),
+                    group.key.levels,
+                    group.key.p,
+                    opts.fmm.cfg.theta,
+                )
+            })
+            .collect();
+        let decision = dispatcher.select_group_capped(&members, cap);
+        engines.push(match decision.choice {
+            EngineChoice::Serial => BatchEngine::Serial,
+            EngineChoice::Pooled { .. } => BatchEngine::Parallel,
+            EngineChoice::Xla => BatchEngine::Xla,
+        });
+        decisions.push(decision);
+    }
+    (engines, Some(DispatchReport { decisions }))
 }
 
 /// Topology workers per problem on the sequential-prologue path: the
@@ -276,6 +376,7 @@ fn run_overlapped(
     counts: &mut WorkCounts,
     stats: &mut BatchStats,
     times_per_problem: &mut [PhaseTimes],
+    group_measured: &mut [f64],
 ) -> Result<()> {
     type Built = ((Pyramid, Connectivity), PhaseTimes);
 
@@ -326,7 +427,7 @@ fn run_overlapped(
         }
         drop(tx);
 
-        'groups: for group in &plan.groups {
+        'groups: for (gi, group) in plan.groups.iter().enumerate() {
             // wait for this group's trees; later groups keep building
             for &i in &group.members {
                 while trees[i].is_none() {
@@ -362,7 +463,9 @@ fn run_overlapped(
                     (pyr, con)
                 })
                 .collect();
-            let results = dispatch_cpu(&members, opts, pool);
+            let t0 = Instant::now();
+            let results = dispatch_cpu(&members, opts, pool, BatchEngine::Parallel);
+            group_measured[gi] = t0.elapsed().as_secs_f64();
             stats.dispatches += 1;
             for (&i, (phi_leaf, t, c)) in group.members.iter().zip(results) {
                 let (pyr, _) = trees[i].as_ref().expect("tree built above");
@@ -396,8 +499,9 @@ fn dispatch_cpu(
     members: &[(&Pyramid, &Connectivity)],
     opts: &BatchOptions,
     pool: Option<&WorkerPool>,
+    engine: BatchEngine,
 ) -> Vec<(Vec<C64>, PhaseTimes, WorkCounts)> {
-    match opts.engine {
+    match engine {
         BatchEngine::Serial => members
             .iter()
             .map(|&(pyr, con)| fmm::evaluate_on_tree_serial(pyr, con, &opts.fmm))
@@ -420,31 +524,38 @@ fn dispatch_cpu(
                     .collect()
             }
         }
-        BatchEngine::Xla => unreachable!("XLA dispatch is handled by run_xla"),
+        BatchEngine::Xla | BatchEngine::Auto => {
+            unreachable!("XLA groups go through run_xla; Auto resolves before dispatch")
+        }
     }
 }
 
-/// XLA dispatch of the whole batch: one compiled artifact and one batched
-/// `run_raw` per group. Phase times cannot be instrumented inside the
-/// artifact, so per-problem counts come from [`fmm::structural_counts`]
-/// and timing lands in the upload/execute/download stats.
+/// XLA dispatch of the given groups: one compiled artifact and one
+/// batched `run_raw` per group. Phase times cannot be instrumented inside
+/// the artifact, so per-problem counts come from
+/// [`fmm::structural_counts`] and timing lands in the
+/// upload/execute/download stats (plus the per-group `group_measured`
+/// wall-clock feeding the dispatch report).
 #[cfg(feature = "pjrt")]
 fn run_xla(
     trees: &[(Pyramid, Connectivity)],
-    plan: &BatchPlan,
+    groups: &[(usize, &BatchGroup)],
     potentials: &mut [Vec<C64>],
     counts: &mut WorkCounts,
     stats: &mut BatchStats,
+    group_measured: &mut [f64],
 ) -> Result<()> {
     let mut rt = crate::runtime::Runtime::new(None)?;
-    for group in &plan.groups {
+    for &(gi, group) in groups {
         let members: Vec<(&Pyramid, &Connectivity)> = group
             .members
             .iter()
             .map(|&i| (&trees[i].0, &trees[i].1))
             .collect();
+        let t0 = Instant::now();
         let exe = rt.fmm_artifact_for_group(&members)?;
         let (pots, rs) = exe.run_fmm_group(&members)?;
+        group_measured[gi] = t0.elapsed().as_secs_f64();
         stats.dispatches += 1;
         stats.upload_s += rs.upload_s;
         stats.execute_s += rs.execute_s;
@@ -460,10 +571,11 @@ fn run_xla(
 #[cfg(not(feature = "pjrt"))]
 fn run_xla(
     _trees: &[(Pyramid, Connectivity)],
-    _plan: &BatchPlan,
+    _groups: &[(usize, &BatchGroup)],
     _potentials: &mut [Vec<C64>],
     _counts: &mut WorkCounts,
     _stats: &mut BatchStats,
+    _group_measured: &mut [f64],
 ) -> Result<()> {
     crate::bail!(
         "BatchEngine::Xla needs the PJRT runtime, which is disabled in this \
@@ -501,7 +613,7 @@ mod tests {
             },
             engine,
             max_group,
-            overlap: true,
+            ..BatchOptions::default()
         }
     }
 

@@ -1,0 +1,163 @@
+//! The dispatch cost model: per-phase work units and predicted engine
+//! times.
+//!
+//! A problem is priced in two steps. [`Problem::counts`] estimates its
+//! [`WorkCounts`] from `(n, levels, p, θ)` alone — before any tree exists
+//! ([`WorkCounts::estimate`]) — and [`phase_units`] converts counts into
+//! one scalar *work unit* total per phase. CPU predictions divide units by
+//! the measured throughputs of a
+//! [`CalibrationProfile`](super::profile::CalibrationProfile); the
+//! simulated-GPU/XLA side is priced by the analytic
+//! [`GpuSim`](crate::gpusim::model::GpuSim) model
+//! ([`batched_compute_time_of`](crate::gpusim::model::GpuSim::batched_compute_time_of)
+//! for groups, whose topology always builds on the CPU). [`EngineCost`]
+//! carries the per-candidate totals that
+//! [`Dispatcher::select`](super::select::Dispatcher::select) compares.
+
+use crate::config::FmmConfig;
+use crate::fmm::{Phase, WorkCounts, N_PHASES};
+
+use super::profile::EngineRates;
+
+/// Shape summary of one FMM problem — everything the dispatcher needs,
+/// available before any tree is built.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Problem {
+    /// Number of source points.
+    pub n: usize,
+    /// Refinement levels (Eq. 5.2 unless overridden).
+    pub levels: usize,
+    /// Expansion order.
+    pub p: usize,
+    /// Well-separatedness parameter θ.
+    pub theta: f64,
+}
+
+impl Problem {
+    pub fn new(n: usize, levels: usize, p: usize, theta: f64) -> Self {
+        Self { n, levels, p, theta }
+    }
+
+    /// The problem an `(cfg, n)` evaluation would run (levels from
+    /// Eq. 5.2 / the override, `p` and θ from the config).
+    pub fn from_config(cfg: &FmmConfig, n: usize) -> Self {
+        Self {
+            n,
+            levels: cfg.levels_for(n),
+            p: cfg.p,
+            theta: cfg.theta,
+        }
+    }
+
+    /// Estimated work counts ([`WorkCounts::estimate`]).
+    pub fn counts(&self) -> WorkCounts {
+        WorkCounts::estimate(self.n, self.levels, self.p, self.theta)
+    }
+}
+
+/// Per-phase work units of one evaluation — the architecture-independent
+/// operation totals each phase's wall-clock is proportional to:
+/// particles·levels (Sort), θ-checks (Connect), coefficient·particle
+/// products (P2M/L2P, plus the M2P/P2L shortcut volume), shift-matrix
+/// cells (M2M/M2L/L2L) and pairwise interactions (P2P). The calibration
+/// pass and the predictor must use the *same* definitions — both call
+/// this function.
+pub fn phase_units(c: &WorkCounts) -> [f64; N_PHASES] {
+    let p1 = (c.p + 1) as f64;
+    let cells = p1 * p1;
+    let nl = c.leaf_sizes.len().max(1) as f64;
+    let avg_box = c.n as f64 / nl;
+    let mut u = [0.0; N_PHASES];
+    u[Phase::Sort as usize] = c.n as f64 * c.levels.max(1) as f64;
+    u[Phase::Connect as usize] = c.connect_checks as f64;
+    u[Phase::P2M as usize] = c.p2m_particles as f64 * p1;
+    u[Phase::M2M as usize] = c.m2m_per_level.iter().sum::<usize>() as f64 * cells;
+    u[Phase::M2L as usize] = c.m2l_per_level.iter().sum::<usize>() as f64 * cells
+        + c.p2l_pairs as f64 * avg_box * p1;
+    u[Phase::L2L as usize] = c.l2l_per_level.iter().sum::<usize>() as f64 * cells;
+    u[Phase::L2P as usize] = c.n as f64 * p1 + c.m2p_pairs as f64 * avg_box * p1;
+    u[Phase::P2P as usize] = c.p2p_pairs as f64;
+    u
+}
+
+/// Predicted end-to-end seconds of `units` on an engine: work over rates
+/// plus the engine's fixed per-evaluation overhead.
+pub fn cpu_total(rates: &EngineRates, units: &[f64; N_PHASES]) -> f64 {
+    units
+        .iter()
+        .zip(&rates.rates)
+        .map(|(u, r)| u / r.max(1.0))
+        .sum::<f64>()
+        + rates.overhead_s
+}
+
+/// Predicted compute-only seconds (P2M … P2P, overhead included; Sort and
+/// Connect excluded) — what `evaluate_on_tree` measures against a
+/// prebuilt tree, and what the `pool-bench` predicted columns use.
+pub fn cpu_compute(rates: &EngineRates, units: &[f64; N_PHASES]) -> f64 {
+    units
+        .iter()
+        .zip(&rates.rates)
+        .enumerate()
+        .filter(|(i, _)| *i != Phase::Sort as usize && *i != Phase::Connect as usize)
+        .map(|(_, (u, r))| u / r.max(1.0))
+        .sum::<f64>()
+        + rates.overhead_s
+}
+
+/// Predicted cost of one problem (or one batch group) on every candidate
+/// engine — what [`Dispatcher::select`](super::select::Dispatcher::select)
+/// compares and the `DispatchReport` prints.
+/// Scope: for **single problems** the predictions are end to end (the
+/// topology engine follows the choice, so Sort/Connect legitimately
+/// differs per candidate); for **batch groups** they cover the compute
+/// dispatch only — the runner builds every topology on the CPU per
+/// problem whatever the group's engine, so that cost is common (see
+/// [`Dispatcher::select_group`](super::select::Dispatcher::select_group)).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EngineCost {
+    /// Serial reference driver.
+    pub serial_s: f64,
+    /// Pooled engine (single problems: best calibrated worker count
+    /// under the cap; groups: the entry nearest the executed budget).
+    pub pooled_s: f64,
+    /// Calibrated worker count backing the pooled prediction.
+    pub pooled_workers: usize,
+    /// Simulated GPU / batched XLA dispatch
+    /// ([`GpuSim`](crate::gpusim::model::GpuSim), transfers included).
+    pub gpu_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fmm::PHASE_NAMES;
+
+    #[test]
+    fn units_cover_every_phase() {
+        let c = WorkCounts::estimate(10_000, 3, 17, 0.5);
+        let u = phase_units(&c);
+        for (i, name) in PHASE_NAMES.iter().enumerate() {
+            assert!(u[i] > 0.0, "{name} units must be positive");
+        }
+        // P2P dominates a 3-level 10k-point problem
+        assert!(u[Phase::P2P as usize] > u[Phase::M2M as usize]);
+    }
+
+    #[test]
+    fn cpu_times_scale_with_rates() {
+        let c = WorkCounts::estimate(10_000, 3, 17, 0.5);
+        let u = phase_units(&c);
+        let slow = EngineRates {
+            rates: [1.0e7; N_PHASES],
+            overhead_s: 0.0,
+        };
+        let fast = EngineRates {
+            rates: [4.0e7; N_PHASES],
+            overhead_s: 0.0,
+        };
+        let (ts, tf) = (cpu_total(&slow, &u), cpu_total(&fast, &u));
+        assert!((ts / tf - 4.0).abs() < 1e-9);
+        assert!(cpu_compute(&slow, &u) < ts, "compute excludes Sort/Connect");
+    }
+}

@@ -1,0 +1,51 @@
+//! Autotuned multi-backend dispatch: pick the engine per problem and per
+//! batch group from a calibrated cost model.
+//!
+//! The repo carries four interchangeable execution paths — the serial
+//! reference driver, the pooled multithreaded engine, the scoped
+//! spawn-per-phase baseline and the batched XLA/simulated-GPU path — and
+//! until this subsystem existed the choice between them was a CLI flag.
+//! Following the companion work on hybrid CPU/GPU balancing (Holm et al.,
+//! arXiv:1311.1006) and the task-scheduling layer of Agullo et al.
+//! (arXiv:1206.0115), `dispatch` owns that placement decision:
+//!
+//! 1. **Calibration** ([`profile`]): `fmm2d calibrate [--quick]` measures
+//!    per-phase CPU throughput for the serial and pooled engines (per
+//!    worker count) and persists a versioned JSON
+//!    [`CalibrationProfile`] (`~/.cache/fmm2d/profile.json` or
+//!    `--profile <file>`; strict parsing — version mismatches and unknown
+//!    fields are rejected).
+//! 2. **Cost model** ([`cost`]): [`Problem`] describes an evaluation by
+//!    `(n, levels, p, θ)` alone;
+//!    [`WorkCounts::estimate`](crate::fmm::WorkCounts::estimate) prices
+//!    it *before any tree exists*, [`phase_units`] converts counts to
+//!    work units, and the
+//!    profile's measured throughputs plus
+//!    [`GpuSim::batched_total_time`](crate::gpusim::model::GpuSim::batched_total_time)
+//!    yield an [`EngineCost`] per candidate.
+//! 3. **Selection** ([`select`]): [`Dispatcher::select`] resolves one
+//!    problem, [`Dispatcher::select_group`] one shape-compatible batch
+//!    group — small groups stay on the pool, large padded groups go to
+//!    the batched XLA path (when the build can run it). Both `fmm2d run`
+//!    and [`crate::batch::run`] expose the result as `--engine auto` /
+//!    [`BatchEngine::Auto`](crate::batch::BatchEngine::Auto), and every
+//!    decision (all candidate predictions + the measured time of the
+//!    chosen engine) is surfaced in a [`DispatchReport`].
+//!
+//! Determinism: selection is pure arithmetic over the profile — the same
+//! profile and the same problems always produce the same choices; the
+//! chosen CPU engines agree with the explicitly-selected ones to ≤ 1e-12
+//! (`tests/dispatch.rs`).
+
+pub mod cost;
+pub mod profile;
+pub mod select;
+
+pub use cost::{cpu_compute, cpu_total, phase_units, EngineCost, Problem};
+pub use profile::{
+    CalibrationOptions, CalibrationProfile, EngineRates, PooledRates, PROFILE_VERSION,
+};
+pub use select::{
+    evaluate_auto, execute_cpu_choice, Decision, DispatchReport, Dispatcher, Engine,
+    EngineChoice, ENGINE_NAMES,
+};

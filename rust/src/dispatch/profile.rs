@@ -1,0 +1,516 @@
+//! Calibration profiles: measured per-phase CPU throughputs, persisted as
+//! versioned JSON.
+//!
+//! A [`CalibrationProfile`] is the measured half of the dispatch cost
+//! model: for the serial reference driver and for the pooled
+//! multithreaded engine (per calibrated worker count) it records, per
+//! phase of [`crate::fmm::PHASE_NAMES`], how many *work units* the engine
+//! retires per second (see [`crate::dispatch::cost::phase_units`] for the
+//! unit definitions) plus a fixed per-evaluation dispatch overhead. The
+//! profile is produced by [`CalibrationProfile::measure`] — a short pass
+//! of real evaluations (`fmm2d calibrate`, `--quick` for the CI smoke
+//! variant) — and persisted with the in-tree JSON utilities
+//! ([`crate::util::json`]; no external dependencies) under
+//! [`CalibrationProfile::default_path`] or an explicit `--profile` path.
+//!
+//! The format is versioned ([`PROFILE_VERSION`]) and strict: parsing
+//! rejects version mismatches *and* unknown fields, so a stale or foreign
+//! file fails loudly instead of silently skewing dispatch decisions
+//! (`tests/dispatch.rs`).
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::fmm::{self, FmmOptions, N_PHASES, PHASE_NAMES};
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::workload;
+
+use super::cost::phase_units;
+
+/// Format version of the persisted profile; bumped whenever the rate
+/// semantics change so stale files are rejected, not misread.
+pub const PROFILE_VERSION: usize = 1;
+
+/// Measured throughput of one engine: work units per second per phase
+/// (ordered as [`PHASE_NAMES`]) plus a fixed per-evaluation overhead.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineRates {
+    /// Work units per second per phase (Sort … P2P).
+    pub rates: [f64; N_PHASES],
+    /// Fixed per-evaluation overhead in seconds (pool fan-out latency,
+    /// allocation churn) — what makes tiny problems prefer the serial
+    /// driver.
+    pub overhead_s: f64,
+}
+
+impl EngineRates {
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set(
+            "rates",
+            Json::Arr(self.rates.iter().map(|&r| Json::Num(r)).collect()),
+        )
+        .set("overhead_s", Json::Num(self.overhead_s));
+        j
+    }
+
+    fn from_json(v: &Json, what: &str) -> Result<Self> {
+        check_fields(v, &["rates", "overhead_s"], what)?;
+        let arr = v
+            .get("rates")
+            .and_then(Json::as_arr)
+            .with_context(|| format!("{what}: missing 'rates' array"))?;
+        if arr.len() != N_PHASES {
+            crate::bail!(
+                "{what}: expected {N_PHASES} phase rates ({}), got {}",
+                PHASE_NAMES.join("/"),
+                arr.len()
+            );
+        }
+        let mut rates = [0.0; N_PHASES];
+        for (i, x) in arr.iter().enumerate() {
+            let r = x
+                .as_f64()
+                .with_context(|| format!("{what}: rates[{i}] is not a number"))?;
+            if !r.is_finite() || r <= 0.0 {
+                crate::bail!("{what}: rates[{i}] = {r} must be finite and positive");
+            }
+            rates[i] = r;
+        }
+        let overhead_s = v
+            .get("overhead_s")
+            .and_then(Json::as_f64)
+            .with_context(|| format!("{what}: missing 'overhead_s'"))?;
+        if !overhead_s.is_finite() || overhead_s < 0.0 {
+            crate::bail!("{what}: overhead_s = {overhead_s} must be finite and non-negative");
+        }
+        Ok(EngineRates { rates, overhead_s })
+    }
+}
+
+/// [`EngineRates`] of the pooled engine at one calibrated worker count.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PooledRates {
+    pub workers: usize,
+    pub rates: EngineRates,
+}
+
+/// A full calibration profile: serial rates plus pooled rates per
+/// calibrated worker count. See the module docs for provenance and
+/// persistence.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibrationProfile {
+    pub version: usize,
+    pub serial: EngineRates,
+    /// Pooled-engine rates, ascending by worker count.
+    pub pooled: Vec<PooledRates>,
+}
+
+/// Options of one calibration pass ([`CalibrationProfile::measure`]).
+#[derive(Clone, Debug)]
+pub struct CalibrationOptions {
+    /// Small sizes only — seconds instead of tens of seconds; the CI smoke
+    /// configuration (`fmm2d calibrate --quick`).
+    pub quick: bool,
+    pub seed: u64,
+    /// Pin pool workers to cores during the pooled measurements.
+    pub pin: bool,
+    /// Worker counts to calibrate the pooled engine at; empty = powers of
+    /// two up to the machine plus the machine itself (`--quick`: machine
+    /// only).
+    pub worker_counts: Vec<usize>,
+}
+
+impl Default for CalibrationOptions {
+    fn default() -> Self {
+        Self {
+            quick: false,
+            seed: 1,
+            pin: false,
+            worker_counts: Vec::new(),
+        }
+    }
+}
+
+impl CalibrationOptions {
+    fn resolved_worker_counts(&self) -> Vec<usize> {
+        if !self.worker_counts.is_empty() {
+            let mut ws = self.worker_counts.clone();
+            ws.sort_unstable();
+            ws.dedup();
+            return ws;
+        }
+        let avail = crate::util::threadpool::available_threads().max(1);
+        if self.quick {
+            return vec![avail];
+        }
+        let mut ws = Vec::new();
+        let mut w = 2;
+        while w < avail {
+            ws.push(w);
+            w *= 2;
+        }
+        ws.push(avail);
+        ws.sort_unstable();
+        ws.dedup();
+        ws
+    }
+
+    fn sizes(&self) -> &'static [usize] {
+        if self.quick {
+            &[1_500, 12_000]
+        } else {
+            &[1_500, 12_000, 48_000]
+        }
+    }
+}
+
+/// Problem size used to measure the fixed per-evaluation overhead.
+const TINY_N: usize = 400;
+
+impl CalibrationProfile {
+    /// Run the calibration pass: evaluate a few deterministic uniform
+    /// workloads through the serial driver and through the pooled engine
+    /// at every requested worker count, and convert the measured per-phase
+    /// wall-clock into work-unit throughputs. The per-evaluation overhead
+    /// of each engine is backed out of a tiny run (measured total minus
+    /// the work the fitted rates predict).
+    pub fn measure(opts: &CalibrationOptions) -> Result<CalibrationProfile> {
+        let serial = measure_engine(Some(1), opts)?;
+        let mut pooled = Vec::new();
+        for w in opts.resolved_worker_counts() {
+            pooled.push(PooledRates {
+                workers: w,
+                rates: measure_engine(Some(w), opts)?,
+            });
+        }
+        Ok(CalibrationProfile {
+            version: PROFILE_VERSION,
+            serial,
+            pooled,
+        })
+    }
+
+    /// Built-in rough rates used when no profile file exists yet: a
+    /// plausible single-core throughput with a near-linear pooled speedup
+    /// on all available cores. Good enough to make `--engine auto` work
+    /// out of the box; `fmm2d calibrate` replaces it with measurements.
+    pub fn fallback() -> CalibrationProfile {
+        // units/s of a generic desktop core (order-of-magnitude only)
+        let serial = EngineRates {
+            rates: [
+                5.0e7, // Sort: particles·levels
+                4.0e7, // Connect: θ-criterion checks
+                1.5e8, // P2M: coefficient·particle units
+                4.0e8, // M2M: shift-matrix cells
+                6.0e8, // M2L: shift-matrix cells (matrix operator)
+                4.0e8, // L2L: shift-matrix cells
+                1.5e8, // L2P: coefficient·particle units
+                1.2e8, // P2P: pairwise interactions
+            ],
+            overhead_s: 0.0,
+        };
+        let avail = crate::util::threadpool::available_threads().max(1);
+        let speedup = (0.75 * avail as f64).max(1.0);
+        let pooled = EngineRates {
+            rates: serial.rates.map(|r| r * speedup),
+            overhead_s: 150.0e-6,
+        };
+        CalibrationProfile {
+            version: PROFILE_VERSION,
+            serial,
+            pooled: vec![PooledRates {
+                workers: avail,
+                rates: pooled,
+            }],
+        }
+    }
+
+    /// The pooled entry calibrated closest to `workers` (ties prefer the
+    /// smaller count); `None` when the profile carries no pooled rates.
+    pub fn pooled_near(&self, workers: usize) -> Option<&PooledRates> {
+        self.pooled.iter().min_by_key(|e| {
+            let d = e.workers.abs_diff(workers);
+            (d, e.workers)
+        })
+    }
+
+    /// The largest calibrated pooled entry **not exceeding** `workers` —
+    /// the only entry a run capped at `workers` can honestly be priced
+    /// with; `None` when every entry needs more workers than allowed.
+    pub fn pooled_within(&self, workers: usize) -> Option<&PooledRates> {
+        self.pooled
+            .iter()
+            .filter(|e| e.workers <= workers)
+            .max_by_key(|e| e.workers)
+    }
+
+    // ---- persistence ---------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("version", Json::Num(self.version as f64))
+            .set("serial", self.serial.to_json())
+            .set(
+                "pooled",
+                Json::Arr(
+                    self.pooled
+                        .iter()
+                        .map(|e| {
+                            let mut o = e.rates.to_json();
+                            o.set("workers", Json::Num(e.workers as f64));
+                            o
+                        })
+                        .collect(),
+                ),
+            );
+        j
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse a profile document, rejecting version mismatches and unknown
+    /// fields (see the module docs).
+    pub fn parse(s: &str) -> Result<CalibrationProfile> {
+        let v = Json::parse(s).context("parsing calibration profile")?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<CalibrationProfile> {
+        check_fields(v, &["version", "serial", "pooled"], "calibration profile")?;
+        let version = v.req_usize("version")?;
+        if version != PROFILE_VERSION {
+            crate::bail!(
+                "calibration profile version {version} does not match the supported \
+                 version {PROFILE_VERSION}; re-run `fmm2d calibrate`"
+            );
+        }
+        let serial = EngineRates::from_json(
+            v.get("serial").context("missing 'serial' rates")?,
+            "serial rates",
+        )?;
+        let arr = v
+            .get("pooled")
+            .and_then(Json::as_arr)
+            .context("missing 'pooled' rate array")?;
+        let mut pooled = Vec::with_capacity(arr.len());
+        for (i, e) in arr.iter().enumerate() {
+            let what = format!("pooled[{i}] rates");
+            check_fields(e, &["workers", "rates", "overhead_s"], &what)?;
+            let workers = e.req_usize("workers")?;
+            if workers == 0 {
+                crate::bail!("{what}: workers must be at least 1");
+            }
+            // re-check without 'workers' is unnecessary: EngineRates'
+            // parser only reads its two fields and the field check above
+            // already constrained the full set
+            let rates = {
+                let mut o = Json::obj();
+                o.set("rates", e.get("rates").cloned().unwrap_or(Json::Null))
+                    .set(
+                        "overhead_s",
+                        e.get("overhead_s").cloned().unwrap_or(Json::Null),
+                    );
+                EngineRates::from_json(&o, &what)?
+            };
+            pooled.push(PooledRates { workers, rates });
+        }
+        pooled.sort_by_key(|e| e.workers);
+        Ok(CalibrationProfile {
+            version,
+            serial,
+            pooled,
+        })
+    }
+
+    /// Default on-disk location: `$XDG_CACHE_HOME/fmm2d/profile.json`
+    /// (falling back to `~/.cache`, then `./.cache`).
+    pub fn default_path() -> PathBuf {
+        let base = std::env::var_os("XDG_CACHE_HOME")
+            .map(PathBuf::from)
+            .or_else(|| std::env::var_os("HOME").map(|h| PathBuf::from(h).join(".cache")))
+            .unwrap_or_else(|| PathBuf::from(".cache"));
+        base.join("fmm2d").join("profile.json")
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+        std::fs::write(path, self.to_json_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<CalibrationProfile> {
+        let s = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&s)
+    }
+
+    /// Human-readable rate table (Munits/s per phase and engine).
+    pub fn summary(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "# dispatch calibration profile (v{})", self.version);
+        let _ = write!(out, "{:<12} {:>12}", "engine", "overhead_us");
+        for name in PHASE_NAMES {
+            let _ = write!(out, " {name:>9}");
+        }
+        let _ = writeln!(out, "   (Munits/s)");
+        let mut row = |label: &str, r: &EngineRates| {
+            let _ = write!(out, "{label:<12} {:>12.1}", r.overhead_s * 1e6);
+            for rate in r.rates {
+                let _ = write!(out, " {:>9.1}", rate / 1e6);
+            }
+            let _ = writeln!(out);
+        };
+        row("serial", &self.serial);
+        for e in &self.pooled {
+            row(&format!("pooled({})", e.workers), &e.rates);
+        }
+        out
+    }
+}
+
+/// Measure one engine's rates: accumulate work units and per-phase seconds
+/// over the calibration sizes, then divide; back the overhead out of a
+/// tiny run.
+fn measure_engine(threads: Option<usize>, opts: &CalibrationOptions) -> Result<EngineRates> {
+    let fmm_opts = |threads: Option<usize>| FmmOptions {
+        threads,
+        pin: opts.pin,
+        ..FmmOptions::default()
+    };
+    // warm the pool (and the allocator) so the first timed run is not
+    // charged for thread spawns
+    {
+        let mut r = Pcg64::seed_from_u64(opts.seed ^ 0xbeef);
+        let (pts, gs) = workload::uniform_square(TINY_N, &mut r);
+        let _ = fmm::evaluate(&pts, &gs, &fmm_opts(threads))?;
+    }
+    let mut units_sum = [0.0f64; N_PHASES];
+    let mut secs_sum = [0.0f64; N_PHASES];
+    for (k, &n) in opts.sizes().iter().enumerate() {
+        let mut r = Pcg64::seed_from_u64(opts.seed.wrapping_add(k as u64));
+        let (pts, gs) = workload::uniform_square(n, &mut r);
+        let out = fmm::evaluate(&pts, &gs, &fmm_opts(threads))?;
+        let u = phase_units(&out.counts);
+        for i in 0..N_PHASES {
+            units_sum[i] += u[i];
+            secs_sum[i] += out.times.0[i];
+        }
+    }
+    let mut rates = [0.0f64; N_PHASES];
+    for i in 0..N_PHASES {
+        rates[i] = (units_sum[i] / secs_sum[i].max(1e-9)).max(1.0);
+    }
+    // overhead: measured tiny total minus what the rates predict for it
+    let overhead_s = {
+        let mut r = Pcg64::seed_from_u64(opts.seed ^ 0xfeed);
+        let (pts, gs) = workload::uniform_square(TINY_N, &mut r);
+        let t = Instant::now();
+        let out = fmm::evaluate(&pts, &gs, &fmm_opts(threads))?;
+        let measured = t.elapsed().as_secs_f64();
+        let predicted: f64 = phase_units(&out.counts)
+            .iter()
+            .zip(&rates)
+            .map(|(u, r)| u / r)
+            .sum();
+        (measured - predicted).max(0.0)
+    };
+    Ok(EngineRates { rates, overhead_s })
+}
+
+/// Reject JSON objects carrying fields this version does not understand.
+fn check_fields(v: &Json, known: &[&str], what: &str) -> Result<()> {
+    match v {
+        Json::Obj(m) => {
+            for k in m.keys() {
+                if !known.contains(&k.as_str()) {
+                    crate::bail!(
+                        "unknown field '{k}' in {what}; this build understands {}",
+                        known.join(", ")
+                    );
+                }
+            }
+            Ok(())
+        }
+        _ => crate::bail!("{what}: expected a JSON object"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CalibrationProfile {
+        CalibrationProfile {
+            version: PROFILE_VERSION,
+            serial: EngineRates {
+                rates: [1.0e8; N_PHASES],
+                overhead_s: 0.0,
+            },
+            pooled: vec![
+                PooledRates {
+                    workers: 2,
+                    rates: EngineRates {
+                        rates: [1.7e8; N_PHASES],
+                        overhead_s: 1.0e-4,
+                    },
+                },
+                PooledRates {
+                    workers: 8,
+                    rates: EngineRates {
+                        rates: [6.0e8; N_PHASES],
+                        overhead_s: 2.0e-4,
+                    },
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn round_trip() {
+        let p = sample();
+        let back = CalibrationProfile::parse(&p.to_json_string()).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn pooled_near_picks_closest() {
+        let p = sample();
+        assert_eq!(p.pooled_near(1).unwrap().workers, 2);
+        assert_eq!(p.pooled_near(4).unwrap().workers, 2); // tie → smaller
+        assert_eq!(p.pooled_near(6).unwrap().workers, 8);
+        assert_eq!(p.pooled_near(64).unwrap().workers, 8);
+    }
+
+    #[test]
+    fn pooled_within_respects_the_cap() {
+        let p = sample(); // entries at 2 and 8 workers
+        assert!(p.pooled_within(1).is_none());
+        assert_eq!(p.pooled_within(2).unwrap().workers, 2);
+        assert_eq!(p.pooled_within(7).unwrap().workers, 2);
+        assert_eq!(p.pooled_within(64).unwrap().workers, 8);
+    }
+
+    #[test]
+    fn rejects_bad_rates() {
+        let mut p = sample();
+        p.serial.rates[0] = -1.0;
+        assert!(CalibrationProfile::parse(&p.to_json_string()).is_err());
+    }
+
+    #[test]
+    fn summary_lists_engines() {
+        let s = sample().summary();
+        assert!(s.contains("serial"));
+        assert!(s.contains("pooled(8)"));
+        assert!(s.contains("P2P"));
+    }
+}

@@ -1,0 +1,533 @@
+//! Engine selection: the [`Dispatcher`] picks where each problem (and
+//! each batch group) runs, from the calibrated cost model.
+//!
+//! Candidates are the serial reference driver, the pooled multithreaded
+//! engine (at the best calibrated worker count) and — when the build can
+//! actually execute it ([`Dispatcher::allow_xla`], default: the `pjrt`
+//! feature) — the batched XLA path priced by the simulated-GPU model.
+//! Selection is pure arithmetic over the profile: the same profile and
+//! the same problems always produce the same choices
+//! (`tests/dispatch.rs`).
+//!
+//! Every decision is recorded as a [`Decision`] (all candidate
+//! predictions, the choice, and — once the work ran — the measured time)
+//! and surfaced through a [`DispatchReport`] by the CLI (`run`/`batch`
+//! `--engine auto`, `dispatch-bench`), which is how calibration drift
+//! stays visible.
+
+use std::fmt;
+use std::path::Path;
+use std::str::FromStr;
+use std::time::Instant;
+
+use crate::complex::C64;
+use crate::fmm::{self, FmmOptions, FmmOutput, WorkCounts, N_PHASES};
+use crate::gpusim::model::GpuSim;
+use crate::util::error::Result;
+
+use super::cost::{self, EngineCost, Problem};
+use super::profile::CalibrationProfile;
+
+/// The CLI engine selector (`--engine`), shared by `run` and `batch` so
+/// the name list and its error message exist exactly once.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Engine {
+    /// The serial reference driver.
+    Serial,
+    /// The pooled multithreaded engine (the default).
+    #[default]
+    Parallel,
+    /// The AOT-compiled XLA path (needs the `pjrt` feature).
+    Xla,
+    /// Resolve per problem / per batch group from the calibrated cost
+    /// model ([`Dispatcher`]).
+    Auto,
+}
+
+/// Valid `--engine` names, in parse order.
+pub const ENGINE_NAMES: [&str; 4] = ["serial", "parallel", "xla", "auto"];
+
+impl FromStr for Engine {
+    type Err = crate::util::error::Error;
+
+    fn from_str(s: &str) -> Result<Engine> {
+        match s {
+            "serial" => Ok(Engine::Serial),
+            "parallel" => Ok(Engine::Parallel),
+            "xla" => Ok(Engine::Xla),
+            "auto" => Ok(Engine::Auto),
+            other => Err(crate::anyhow!(
+                "unknown engine '{other}': expected one of {}",
+                ENGINE_NAMES.join("|")
+            )),
+        }
+    }
+}
+
+impl fmt::Display for Engine {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Engine::Serial => "serial",
+            Engine::Parallel => "parallel",
+            Engine::Xla => "xla",
+            Engine::Auto => "auto",
+        })
+    }
+}
+
+/// A resolved placement for one problem or batch group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineChoice {
+    /// The serial reference driver.
+    Serial,
+    /// The pooled multithreaded engine at the given worker count.
+    Pooled { workers: usize },
+    /// The batched XLA / simulated-GPU path.
+    Xla,
+}
+
+impl fmt::Display for EngineChoice {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineChoice::Serial => f.write_str("serial"),
+            EngineChoice::Pooled { workers } => write!(f, "pooled({workers})"),
+            EngineChoice::Xla => f.write_str("xla"),
+        }
+    }
+}
+
+/// One dispatch decision: what was predicted for every candidate, what
+/// was chosen, and (once run) what it actually took.
+#[derive(Clone, Debug)]
+pub struct Decision {
+    /// Human-readable target, e.g. `n=20000 L4 p17` or
+    /// `group L2 p17 ×64 (n=128000)`.
+    pub label: String,
+    /// Problems behind this decision (1 for a single evaluation).
+    pub members: usize,
+    pub choice: EngineChoice,
+    /// Predicted seconds per candidate engine.
+    pub cost: EngineCost,
+    /// Predicted seconds of the chosen engine.
+    pub predicted_s: f64,
+    /// Measured wall-clock of the chosen engine, filled in by whoever ran
+    /// the work (`None` until then). For batch groups this is the group's
+    /// *dispatch* (compute) wall-clock — the topology prologue is shared
+    /// by all CPU candidates and timed separately.
+    pub measured_s: Option<f64>,
+}
+
+/// The decisions of one `--engine auto` invocation, rendered by the CLI.
+#[derive(Clone, Debug, Default)]
+pub struct DispatchReport {
+    pub decisions: Vec<Decision>,
+}
+
+impl DispatchReport {
+    /// Aligned text table: every candidate's predicted time, the choice,
+    /// and measured-over-predicted drift where a measurement exists.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let width = self
+            .decisions
+            .iter()
+            .map(|d| d.label.len())
+            .max()
+            .unwrap_or(0)
+            .max(8);
+        let mut out = String::new();
+        let _ = writeln!(out, "# dispatch report (seconds; predicted per candidate)");
+        let _ = writeln!(
+            out,
+            "{:<width$} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12} {:>9}",
+            "target", "serial", "pooled", "gpu/xla", "chosen", "predicted", "measured", "meas/pred"
+        );
+        for d in &self.decisions {
+            let measured = d
+                .measured_s
+                .map(|m| format!("{m:>12.6}"))
+                .unwrap_or_else(|| format!("{:>12}", "-"));
+            let drift = d
+                .measured_s
+                .map(|m| format!("{:>9.2}", m / d.predicted_s.max(1e-12)))
+                .unwrap_or_else(|| format!("{:>9}", "-"));
+            let _ = writeln!(
+                out,
+                "{:<width$} {:>12.6} {:>12.6} {:>12.6} {:>12} {:>12.6} {measured} {drift}",
+                d.label,
+                d.cost.serial_s,
+                d.cost.pooled_s,
+                d.cost.gpu_s,
+                d.choice.to_string(),
+                d.predicted_s,
+            );
+        }
+        out
+    }
+}
+
+/// The autotuned engine selector: a calibration profile plus the GPU cost
+/// simulator. Construction is cheap; selection is pure arithmetic.
+#[derive(Clone, Debug)]
+pub struct Dispatcher {
+    pub profile: CalibrationProfile,
+    /// Prices the batched XLA candidate
+    /// ([`GpuSim::batched_total_time`]).
+    pub sim: GpuSim,
+    /// Whether the XLA candidate may be *chosen* (it is always priced for
+    /// the report). Defaults to whether this build can execute it — the
+    /// `pjrt` feature.
+    pub allow_xla: bool,
+}
+
+impl Default for Dispatcher {
+    fn default() -> Self {
+        Self::new(CalibrationProfile::fallback())
+    }
+}
+
+impl Dispatcher {
+    pub fn new(profile: CalibrationProfile) -> Self {
+        Self {
+            profile,
+            sim: GpuSim::c2075(),
+            allow_xla: cfg!(feature = "pjrt"),
+        }
+    }
+
+    /// Builder: override whether the XLA candidate may be chosen.
+    pub fn with_xla(mut self, allow: bool) -> Self {
+        self.allow_xla = allow;
+        self
+    }
+
+    /// Builder: override the GPU architecture model.
+    pub fn with_sim(mut self, sim: GpuSim) -> Self {
+        self.sim = sim;
+        self
+    }
+
+    /// Load a profile from `path` (strict: version/unknown-field errors
+    /// surface).
+    pub fn load(path: &Path) -> Result<Dispatcher> {
+        Ok(Dispatcher::new(CalibrationProfile::load(path)?))
+    }
+
+    /// Load from `path`, or the default profile location, or — when no
+    /// usable profile exists — the built-in fallback rates. Never errors
+    /// (the library entry points stay usable before the first
+    /// `calibrate`), but a file that *exists* and fails the strict parse
+    /// (corrupt, version mismatch) is reported on stderr before falling
+    /// back, so a stale profile cannot silently skew decisions forever.
+    pub fn load_or_default(path: Option<&Path>) -> Dispatcher {
+        let candidate = path
+            .map(Path::to_path_buf)
+            .unwrap_or_else(CalibrationProfile::default_path);
+        match CalibrationProfile::load(&candidate) {
+            Ok(p) => Dispatcher::new(p),
+            Err(e) => {
+                if candidate.exists() {
+                    eprintln!(
+                        "warning: ignoring dispatch profile {}: {e:#}; using built-in \
+                         fallback rates (re-run `fmm2d calibrate`)",
+                        candidate.display()
+                    );
+                }
+                Dispatcher::default()
+            }
+        }
+    }
+
+    // ---- single problems ----------------------------------------------
+
+    /// Predicted cost of one problem on every candidate engine.
+    pub fn predict(&self, p: &Problem) -> EngineCost {
+        self.predict_capped(p, None)
+    }
+
+    /// [`Dispatcher::predict`] with the pooled candidate restricted to at
+    /// most `cap` workers (the CLI's `--threads`).
+    pub fn predict_capped(&self, p: &Problem, cap: Option<usize>) -> EngineCost {
+        let c = p.counts();
+        let u = cost::phase_units(&c);
+        let serial_s = cost::cpu_total(&self.profile.serial, &u);
+        let (pooled_s, pooled_workers) = self.best_pooled(serial_s, cap, |rates| {
+            cost::cpu_total(rates, &u)
+        });
+        EngineCost {
+            serial_s,
+            pooled_s,
+            pooled_workers,
+            gpu_s: self.sim.total_time(&c),
+        }
+    }
+
+    /// Pick the engine for one problem ([`Dispatcher::predict`] + argmin;
+    /// ties keep the earlier candidate in serial → pooled → xla order).
+    pub fn select(&self, p: &Problem) -> Decision {
+        self.select_capped(p, None)
+    }
+
+    /// [`Dispatcher::select`] with a pooled worker cap.
+    pub fn select_capped(&self, p: &Problem, cap: Option<usize>) -> Decision {
+        let cost = self.predict_capped(p, cap);
+        let (choice, predicted_s) = self.pick(&cost);
+        Decision {
+            label: format!("n={} L{} p{}", p.n, p.levels, p.p),
+            members: 1,
+            choice,
+            cost,
+            predicted_s,
+            measured_s: None,
+        }
+    }
+
+    // ---- batch groups --------------------------------------------------
+
+    /// Pick the engine for one shape-compatible batch group.
+    ///
+    /// Group candidates are priced over the **compute dispatch only**
+    /// (P2M … P2P; [`cost::cpu_compute`] and
+    /// [`GpuSim::batched_compute_time_of`]): the batch runner builds
+    /// every topology on the CPU per problem regardless of the group's
+    /// engine, so Sort/Connect is a common cost no choice can avoid —
+    /// and the group's `measured_s` covers exactly that dispatch. The
+    /// pooled candidate mirrors the runner's actual rule at the executed
+    /// thread budget: groups with at least as many members as workers
+    /// stream through the problem-claiming dispatch (each worker running
+    /// the serial driver), smaller groups run the per-problem pooled
+    /// engine; the XLA candidate is one batched fixed-shape dispatch.
+    pub fn select_group(&self, members: &[Problem]) -> Decision {
+        self.select_group_capped(members, None)
+    }
+
+    /// [`Dispatcher::select_group`] with the thread budget the batch
+    /// runner will actually execute with (`None` = all cores). The
+    /// pooled prediction uses the calibrated entry nearest that budget,
+    /// which is also the `workers` it reports.
+    pub fn select_group_capped(&self, members: &[Problem], cap: Option<usize>) -> Decision {
+        let counts: Vec<WorkCounts> = members.iter().map(Problem::counts).collect();
+        let units: Vec<[f64; N_PHASES]> = counts.iter().map(cost::phase_units).collect();
+        let serial_each: Vec<f64> = units
+            .iter()
+            .map(|u| cost::cpu_compute(&self.profile.serial, u))
+            .collect();
+        let serial_s: f64 = serial_each.iter().sum();
+        let max_serial = serial_each.iter().cloned().fold(0.0f64, f64::max);
+        // the runner dispatches with its configured thread budget, not
+        // with whatever counts the profile happens to carry — predict at
+        // that budget, priced with the largest calibrated entry the
+        // budget can honor (entries above the cap would flatter the
+        // pooled candidate; like `best_pooled`, fall back to serial when
+        // none qualifies)
+        let nt = cap
+            .unwrap_or_else(crate::util::threadpool::available_threads)
+            .max(1);
+        let (pooled_s, pooled_workers) = match self.profile.pooled_within(nt) {
+            Some(e) => {
+                let t = if members.len() >= nt.max(2) {
+                    // problem-claiming dispatch: nt workers run the
+                    // serial driver, bounded below by the widest member
+                    (serial_s / nt as f64).max(max_serial) + e.rates.overhead_s
+                } else {
+                    units.iter().map(|u| cost::cpu_compute(&e.rates, u)).sum()
+                };
+                (t, e.workers)
+            }
+            None => (serial_s, 1),
+        };
+        let cost = EngineCost {
+            serial_s,
+            pooled_s,
+            pooled_workers,
+            gpu_s: self.sim.batched_compute_time_of(&counts),
+        };
+        let (choice, predicted_s) = self.pick(&cost);
+        let (levels, p) = members
+            .first()
+            .map(|m| (m.levels, m.p))
+            .unwrap_or((0, 0));
+        Decision {
+            label: format!(
+                "group L{levels} p{p} ×{} (n={})",
+                members.len(),
+                members.iter().map(|m| m.n).sum::<usize>()
+            ),
+            members: members.len(),
+            choice,
+            cost,
+            predicted_s,
+            measured_s: None,
+        }
+    }
+
+    /// Predicted compute-only seconds (P2M … P2P) of one problem on the
+    /// serial engine and on the pooled engine calibrated nearest to
+    /// `workers` — the `pool-bench` predicted columns.
+    pub fn predict_compute(&self, p: &Problem, workers: usize) -> (f64, f64) {
+        let u = cost::phase_units(&p.counts());
+        let serial = cost::cpu_compute(&self.profile.serial, &u);
+        let pooled = self
+            .profile
+            .pooled_near(workers)
+            .map(|e| cost::cpu_compute(&e.rates, &u))
+            .unwrap_or(serial);
+        (serial, pooled)
+    }
+
+    // ---- internals -----------------------------------------------------
+
+    /// Best pooled candidate under the worker cap: `(seconds, workers)`,
+    /// falling back to the serial prediction when no entry qualifies.
+    fn best_pooled(
+        &self,
+        serial_s: f64,
+        cap: Option<usize>,
+        time_of: impl Fn(&super::profile::EngineRates) -> f64,
+    ) -> (f64, usize) {
+        let mut best = f64::INFINITY;
+        let mut best_w = 0;
+        for e in &self.profile.pooled {
+            if cap.is_some_and(|c| e.workers > c) {
+                continue;
+            }
+            let t = time_of(&e.rates);
+            if t < best {
+                best = t;
+                best_w = e.workers;
+            }
+        }
+        if best.is_finite() {
+            (best, best_w)
+        } else {
+            (serial_s, 1)
+        }
+    }
+
+    fn pick(&self, c: &EngineCost) -> (EngineChoice, f64) {
+        let mut choice = EngineChoice::Serial;
+        let mut best = c.serial_s;
+        if c.pooled_s < best {
+            choice = EngineChoice::Pooled {
+                workers: c.pooled_workers,
+            };
+            best = c.pooled_s;
+        }
+        if self.allow_xla && c.gpu_s < best {
+            choice = EngineChoice::Xla;
+            best = c.gpu_s;
+        }
+        (choice, best)
+    }
+}
+
+/// Execute a decision's CPU engine through [`fmm::evaluate`] — the single
+/// choice-to-execution mapping shared by [`evaluate_auto`] and the CLI —
+/// filling the decision's `measured_s`. Callers that can run the PJRT
+/// runtime route [`EngineChoice::Xla`] decisions there instead of calling
+/// this; here an Xla choice falls back to the pooled CPU engine under the
+/// caller's thread setting.
+pub fn execute_cpu_choice(
+    points: &[C64],
+    gammas: &[C64],
+    opts: &FmmOptions,
+    decision: &mut Decision,
+) -> Result<FmmOutput> {
+    let threads = match decision.choice {
+        EngineChoice::Serial => Some(1),
+        EngineChoice::Pooled { workers } => Some(workers),
+        EngineChoice::Xla => opts.threads,
+    };
+    let run_opts = FmmOptions {
+        threads,
+        ..opts.clone()
+    };
+    let t = Instant::now();
+    let out = fmm::evaluate(points, gammas, &run_opts)?;
+    decision.measured_s = Some(t.elapsed().as_secs_f64());
+    Ok(out)
+}
+
+/// Evaluate one problem with the engine the dispatcher picks — the
+/// library form of `fmm2d run --engine auto`
+/// ([`Dispatcher::select_capped`] + [`execute_cpu_choice`]). Returns the
+/// output and the [`Decision`] with `measured_s` filled in.
+pub fn evaluate_auto(
+    points: &[C64],
+    gammas: &[C64],
+    opts: &FmmOptions,
+    dispatcher: &Dispatcher,
+) -> Result<(FmmOutput, Decision)> {
+    let problem = Problem::from_config(&opts.cfg, points.len());
+    let mut dec = dispatcher.select_capped(&problem, opts.threads);
+    let out = execute_cpu_choice(points, gammas, opts, &mut dec)?;
+    Ok((out, dec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::profile::{EngineRates, PooledRates, PROFILE_VERSION};
+
+    fn profile() -> CalibrationProfile {
+        CalibrationProfile {
+            version: PROFILE_VERSION,
+            serial: EngineRates {
+                rates: [1.0e8; N_PHASES],
+                overhead_s: 0.0,
+            },
+            pooled: vec![PooledRates {
+                workers: 4,
+                rates: EngineRates {
+                    rates: [3.2e8; N_PHASES],
+                    overhead_s: 5.0e-4,
+                },
+            }],
+        }
+    }
+
+    #[test]
+    fn engine_names_round_trip() {
+        for name in ENGINE_NAMES {
+            let e: Engine = name.parse().unwrap();
+            assert_eq!(e.to_string(), name);
+        }
+        let err = "warp-drive".parse::<Engine>().unwrap_err().to_string();
+        assert!(err.contains("serial|parallel|xla|auto"), "{err}");
+    }
+
+    #[test]
+    fn pooled_cap_falls_back_to_serial() {
+        let d = Dispatcher::new(profile()).with_xla(false);
+        let p = Problem::new(50_000, 5, 17, 0.5);
+        let c = d.predict_capped(&p, Some(1));
+        assert_eq!(c.pooled_workers, 1);
+        assert_eq!(c.pooled_s, c.serial_s);
+        assert_eq!(
+            d.select_capped(&p, Some(1)).choice,
+            EngineChoice::Serial,
+            "capped at one worker the serial driver must win"
+        );
+    }
+
+    #[test]
+    fn report_renders_choice_and_drift() {
+        let d = Dispatcher::new(profile()).with_xla(false);
+        let mut dec = d.select(&Problem::new(20_000, 4, 17, 0.5));
+        dec.measured_s = Some(dec.predicted_s * 2.0);
+        let s = DispatchReport {
+            decisions: vec![dec],
+        }
+        .render();
+        assert!(s.contains("n=20000 L4 p17"), "{s}");
+        assert!(s.contains("2.0"), "drift column missing: {s}");
+    }
+
+    #[test]
+    fn empty_group_is_serial_and_free() {
+        let d = Dispatcher::new(profile()).with_xla(false);
+        let dec = d.select_group(&[]);
+        assert_eq!(dec.members, 0);
+        assert_eq!(dec.cost.serial_s, 0.0);
+    }
+}

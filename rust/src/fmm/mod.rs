@@ -130,6 +130,126 @@ impl WorkCounts {
         self.connect_checks += other.connect_checks;
         self.sort.merge(&other.sort);
     }
+
+    /// Cheap a-priori estimate of the counts of an `(n, levels, p)`
+    /// problem — no tree, no particle data, O(levels) arithmetic plus one
+    /// `O(4^levels)` leaf-vector fill.
+    ///
+    /// The estimate models the pyramid as an idealized grid of congruent
+    /// square boxes per level. On that geometry the θ-criterion depends
+    /// only on the integer grid offset between two boxes, so the whole
+    /// connectivity recursion collapses to a per-level sum over the finite
+    /// set of *near* offsets, with exact boundary-aware pair counting —
+    /// the M2L/near/check totals are **exact** for the idealized grid.
+    /// Median splits balance leaf populations for *any* input
+    /// distribution, so `leaf_sizes` and the per-level M2M/L2L counts are
+    /// exact for the real tree too; the list-degree-dependent counts
+    /// (`m2l_per_level`, `p2p_pairs`, `connect_checks`) track the real
+    /// adaptive tree within a tolerance band that widens with clustering
+    /// (pinned in `tests/dispatch.rs`). Equal radii make the interchanged
+    /// criterion coincide with the plain one, so the idealized geometry
+    /// has no P2L/M2P shortcuts.
+    ///
+    /// This is what lets the dispatch cost model ([`crate::dispatch`])
+    /// price a problem *before* any tree is built.
+    pub fn estimate(n: usize, levels: usize, p: usize, theta: f64) -> WorkCounts {
+        let levels = levels.max(1);
+        let nl: usize = 1 << (2 * levels);
+        let nf = n as f64;
+
+        // median splits balance leaf populations: ⌊n/4^L⌋ or ⌈n/4^L⌉ each
+        let (base, rem) = (n / nl, n % nl);
+        let leaf_sizes: Vec<u32> = (0..nl)
+            .map(|b| (base + usize::from(b < rem)) as u32)
+            .collect();
+
+        // Congruent square boxes of side 2^-l have radius √2·2^-l/2, so
+        // the θ-criterion R + θ·r ≤ θ·d reads, in grid-offset units o:
+        // well separated ⇔ |o| ≥ (1+θ)/(√2·θ) = thr (θ = 1/2 gives
+        // thr² = 4.5: offsets (±2,±1) and beyond are weak).
+        let thr2 = {
+            let t = (1.0 + theta) * std::f64::consts::FRAC_1_SQRT_2 / theta;
+            t * t
+        };
+        let near = |dx: i64, dy: i64| ((dx * dx + dy * dy) as f64) < thr2;
+        let reach = thr2.sqrt().ceil() as i64;
+        let near_offsets: Vec<(i64, i64)> = (-reach..=reach)
+            .flat_map(|dx| (-reach..=reach).map(move |dy| (dx, dy)))
+            .filter(|&(dx, dy)| near(dx, dy))
+            .collect();
+        // per-axis child-corner differences c_src − c_dst with multiplicity
+        const CORNER: [(i64, f64); 3] = [(-1, 1.0), (0, 2.0), (1, 1.0)];
+
+        let mut m2l_per_level = vec![0usize; levels + 1];
+        let mut m2m_per_level = vec![0usize; levels + 1];
+        let mut l2l_per_level = vec![0usize; levels + 1];
+        let mut checks = 0.0f64;
+        let mut near_leaf_pairs = 0.0f64;
+        for l in 1..=levels {
+            // a pair of level-l boxes is examined iff its *parent* offset
+            // is near (children of the parent's strong list, §2); parent
+            // pairs at offset (dx, dy) in the 2^(l−1)-wide grid count
+            // (g−|dx|)⁺·(g−|dy|)⁺, each contributing 4×4 child pairs
+            let g = 1i64 << (l - 1);
+            let mut weak_l = 0.0;
+            let mut near_l = 0.0;
+            for &(dx, dy) in &near_offsets {
+                let pairs = ((g - dx.abs()).max(0) * (g - dy.abs()).max(0)) as f64;
+                if pairs == 0.0 {
+                    continue;
+                }
+                checks += pairs * 16.0;
+                for (ex, wx) in CORNER {
+                    for (ey, wy) in CORNER {
+                        let w = pairs * wx * wy;
+                        if near(2 * dx + ex, 2 * dy + ey) {
+                            near_l += w;
+                        } else {
+                            weak_l += w;
+                        }
+                    }
+                }
+            }
+            m2l_per_level[l] = weak_l.round() as usize;
+            m2m_per_level[l] = boxes_at_level(l);
+            if l >= 2 {
+                l2l_per_level[l] = boxes_at_level(l);
+            }
+            if l == levels {
+                near_leaf_pairs = near_l;
+            }
+        }
+        // finest level: one interchanged check per off-diagonal strong pair
+        checks += (near_leaf_pairs - nl as f64).max(0.0);
+
+        let nd = nf / nl as f64;
+        let src_avg = near_leaf_pairs * nd / nl as f64;
+        let p2p_src_per_box = vec![src_avg.round() as u32; nl];
+        let p2p_pairs = (near_leaf_pairs * nd * nd - nf).max(0.0).round() as usize;
+
+        WorkCounts {
+            n,
+            levels,
+            p,
+            leaf_sizes,
+            m2l_per_level,
+            m2m_per_level,
+            l2l_per_level,
+            p2p_pairs,
+            p2p_src_per_box,
+            p2l_pairs: 0,
+            m2p_pairs: 0,
+            p2m_particles: n,
+            connect_checks: checks.round() as usize,
+            sort: SortStats {
+                // boxes × 3 splits per refined level: Σ 3·4^l = 4^L − 1
+                splits: nl - 1,
+                elements_visited: 3 * n * levels,
+                passes: 2 * (nl - 1),
+                scattered: 2 * n * levels,
+            },
+        }
+    }
 }
 
 /// Work counts derived from the tree + connectivity structure alone,
@@ -882,6 +1002,25 @@ mod tests {
         assert_eq!(agg.m2m_per_level.len(), 4);
         assert_eq!(agg.m2m_per_level[1], 4 + 4);
         assert_eq!(agg.m2m_per_level[3], 64);
+    }
+
+    #[test]
+    fn estimate_exact_invariants() {
+        // the distribution-independent parts of the estimate are exact
+        let e = WorkCounts::estimate(4000, 3, 10, 0.5);
+        assert_eq!(e.n, 4000);
+        assert_eq!(e.levels, 3);
+        assert_eq!(e.p, 10);
+        assert_eq!(e.p2m_particles, 4000);
+        assert_eq!(e.leaf_sizes.len(), 64);
+        assert_eq!(e.leaf_sizes.iter().map(|&x| x as usize).sum::<usize>(), 4000);
+        assert_eq!(e.m2m_per_level, vec![0, 4, 16, 64]);
+        assert_eq!(e.l2l_per_level, vec![0, 0, 16, 64]);
+        // level 1 has no well-separated pairs at θ = 1/2
+        assert_eq!(e.m2l_per_level[1], 0);
+        assert!(e.m2l_per_level[2] > 0 && e.m2l_per_level[3] > e.m2l_per_level[2]);
+        assert!(e.p2p_pairs > 0 && e.connect_checks > 0);
+        assert_eq!(e.p2l_pairs + e.m2p_pairs, 0);
     }
 
     #[test]

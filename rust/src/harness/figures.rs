@@ -504,12 +504,17 @@ pub fn ablate_shift_kernels(_o: &HarnessOpts) -> SeriesTable {
 pub fn batch_throughput(o: &HarnessOpts) -> SeriesTable {
     let counts: &[usize] = if o.full { &[8, 32, 128, 512] } else { &[8, 32, 96] };
     let n = if o.full { 4000 } else { 2000 };
+    // the dispatcher's predicted batch time sits next to the measured
+    // columns so calibration drift is visible (fallback rates unless
+    // `fmm2d calibrate` has written a profile)
+    let dispatcher = crate::dispatch::Dispatcher::load_or_default(None);
     let mut t = SeriesTable::new(
         "Batched vs sequential throughput (K problems, parallel CPU engine)",
         "K",
         &[
             "seq_s",
             "batch_seqprologue_s",
+            "pred_seqprologue_s",
             "batch_overlap_s",
             "overlap_prob_per_s",
             "speedup_vs_seq",
@@ -580,11 +585,37 @@ pub fn batch_throughput(o: &HarnessOpts) -> SeriesTable {
         .expect("CPU batch engines cannot fail");
         std::hint::black_box(&out);
         let bat = t0.elapsed().as_secs_f64();
+        // predicted pooled time for the same K problems: the group
+        // prediction covers the compute dispatch, so add the per-problem
+        // topology term — that sum corresponds to the *sequential
+        // prologue* column (the overlapped column hides topology behind
+        // group compute, so it legitimately beats this prediction)
+        let members: Vec<crate::dispatch::Problem> = problems
+            .iter()
+            .map(|pr| crate::dispatch::Problem::from_config(&fmm_opts.cfg, pr.points.len()))
+            .collect();
+        let nt = fmm_opts.effective_threads();
+        let compute_pred = dispatcher.select_group_capped(&members, Some(nt)).cost.pooled_s;
+        let topo_rates = dispatcher
+            .profile
+            .pooled_near(nt)
+            .map(|e| &e.rates)
+            .unwrap_or(&dispatcher.profile.serial);
+        let topo_pred: f64 = members
+            .iter()
+            .map(|m| {
+                let u = crate::dispatch::phase_units(&m.counts());
+                crate::dispatch::cpu_total(topo_rates, &u)
+                    - crate::dispatch::cpu_compute(topo_rates, &u)
+            })
+            .sum();
+        let pred = compute_pred + topo_pred;
         t.push(
             k as f64,
             vec![
                 seq,
                 bat_seq,
+                pred,
                 bat,
                 k as f64 / bat.max(1e-12),
                 seq / bat.max(1e-12),
@@ -696,6 +727,11 @@ pub fn pool_bench(o: &HarnessOpts) -> Vec<SeriesTable> {
     } else {
         vec![600, 1_000, 10_000, 60_000]
     };
+    // dispatcher predictions (compute-only, matching what this bench
+    // measures) next to the measured totals — calibration drift shows as
+    // pred/measured pulling away from 1 (fallback rates unless
+    // `fmm2d calibrate` has written a profile)
+    let dispatcher = crate::dispatch::Dispatcher::load_or_default(None);
     let mut tables = Vec::new();
     for &t in &thread_counts {
         let pool = WorkerPool::new(t, o.pin);
@@ -707,7 +743,7 @@ pub fn pool_bench(o: &HarnessOpts) -> Vec<SeriesTable> {
             &[
                 "p2m_scope", "p2m_pool", "m2m_scope", "m2m_pool", "m2l_scope", "m2l_pool",
                 "l2l_scope", "l2l_pool", "l2p_scope", "l2p_pool", "p2p_scope", "p2p_pool",
-                "total_serial", "total_scope", "total_pool",
+                "total_serial", "pred_serial", "total_scope", "total_pool", "pred_pool",
             ],
         );
         for &n in &ns {
@@ -751,6 +787,8 @@ pub fn pool_bench(o: &HarnessOpts) -> Vec<SeriesTable> {
                 measure(&|| evaluate_on_tree_parallel(pyr, con, &opts, t).1);
             let (pool_t, pool_total) =
                 measure(&|| evaluate_on_tree_pool(pyr, con, &opts, &pool).1);
+            let problem = crate::dispatch::Problem::from_config(&cfg, n);
+            let (pred_serial, pred_pool) = dispatcher.predict_compute(&problem, t);
             table.push(
                 n as f64,
                 vec![
@@ -767,14 +805,131 @@ pub fn pool_bench(o: &HarnessOpts) -> Vec<SeriesTable> {
                     scope_t.get(Phase::P2P),
                     pool_t.get(Phase::P2P),
                     serial_total,
+                    pred_serial,
                     scope_total,
                     pool_total,
+                    pred_pool,
                 ],
             );
         }
         tables.push(table);
     }
     tables
+}
+
+/// The `dispatch-bench` CLI command: predicted time per candidate engine
+/// next to the measured time of the engine the dispatcher actually picks
+/// — for single problems across N and for homogeneous batch groups
+/// across K. Calibrates a fresh profile inline (quick sizes unless
+/// `--full`) so the table reflects *this* machine, not a stale file; the
+/// `choice` column is 0 = serial, 1 = pooled, 2 = xla.
+pub fn dispatch_bench(o: &HarnessOpts) -> Vec<SeriesTable> {
+    use crate::dispatch::{
+        evaluate_auto, CalibrationOptions, CalibrationProfile, Dispatcher, EngineChoice,
+    };
+
+    let profile = CalibrationProfile::measure(&CalibrationOptions {
+        quick: !o.full,
+        seed: o.seed,
+        pin: o.pin,
+        worker_counts: o.threads.map(|t| vec![t]).unwrap_or_default(),
+    })
+    .expect("calibration workloads satisfy the pyramid invariants");
+    // honor --gtx480 like every other harness subcommand
+    let dispatcher = Dispatcher::new(profile).with_sim(o.sim());
+    let choice_code = |c: &EngineChoice| match c {
+        EngineChoice::Serial => 0.0,
+        EngineChoice::Pooled { .. } => 1.0,
+        EngineChoice::Xla => 2.0,
+    };
+    let cols = [
+        "pred_serial_s",
+        "pred_pooled_s",
+        "pool_w",
+        "pred_gpu_s",
+        "choice",
+        "measured_s",
+        "meas/pred",
+    ];
+
+    let mut single = SeriesTable::new(
+        "dispatch-bench: single problems — predicted per candidate, auto choice, measured",
+        "N",
+        &cols,
+    );
+    let fmm_opts = FmmOptions {
+        cfg: FmmConfig::default(),
+        threads: o.threads,
+        pin: o.pin,
+        ..Default::default()
+    };
+    let ns: &[usize] = if o.full {
+        &[300, 1_000, 5_000, 20_000, 100_000]
+    } else {
+        &[300, 1_000, 5_000, 20_000]
+    };
+    for &n in ns {
+        let (pts, gs) = workload_for(Distribution::Uniform, n, o.seed);
+        let (out, dec) = evaluate_auto(&pts, &gs, &fmm_opts, &dispatcher)
+            .expect("harness workloads satisfy the pyramid invariants");
+        std::hint::black_box(&out.potentials);
+        let measured = dec.measured_s.unwrap_or(f64::NAN);
+        single.push(
+            n as f64,
+            vec![
+                dec.cost.serial_s,
+                dec.cost.pooled_s,
+                dec.cost.pooled_workers as f64,
+                dec.cost.gpu_s,
+                choice_code(&dec.choice),
+                measured,
+                measured / dec.predicted_s.max(1e-12),
+            ],
+        );
+    }
+
+    let n = 2000;
+    let mut grouped = SeriesTable::new(
+        "dispatch-bench: homogeneous batch groups of K × 2000 points",
+        "K",
+        &cols,
+    );
+    let ks: &[usize] = if o.full { &[4, 16, 64, 256] } else { &[4, 16, 64] };
+    for &k in ks {
+        let problems: Vec<BatchProblem> = (0..k)
+            .map(|i| {
+                let (points, gammas) =
+                    workload_for(Distribution::Uniform, n, o.seed.wrapping_add(i as u64));
+                BatchProblem { points, gammas }
+            })
+            .collect();
+        let opts = BatchOptions {
+            fmm: fmm_opts.clone(),
+            engine: crate::batch::BatchEngine::Auto,
+            dispatcher: Some(std::sync::Arc::new(dispatcher.clone())),
+            ..Default::default()
+        };
+        let out = batch::run(&problems, &opts).expect("CPU batch engines cannot fail");
+        std::hint::black_box(&out.potentials);
+        let report = out.report.expect("auto batches carry a dispatch report");
+        let dec = &report.decisions[0]; // homogeneous sizes: one group
+        // the report's measured_s is the group's compute dispatch — the
+        // same scope the group predictions are priced over
+        let measured = dec.measured_s.unwrap_or(f64::NAN);
+        grouped.push(
+            k as f64,
+            vec![
+                dec.cost.serial_s,
+                dec.cost.pooled_s,
+                dec.cost.pooled_workers as f64,
+                dec.cost.gpu_s,
+                choice_code(&dec.choice),
+                measured,
+                measured / dec.predicted_s.max(1e-12),
+            ],
+        );
+    }
+    vec![single, grouped]
 }
 
 /// Calibration report: the quantities the cost model is fitted against

@@ -24,6 +24,11 @@
 //! * the **batch execution subsystem** — many small FMM problems grouped
 //!   by compatible artifact shape and dispatched together, one pooled CPU
 //!   execution or one batched XLA invocation per group ([`batch`]);
+//! * the **autotuned dispatch subsystem** — per-problem and per-group
+//!   engine selection from a calibrated cost model (measured CPU phase
+//!   throughputs vs. the simulated-GPU batch price), persisted as a
+//!   versioned JSON profile and exposed as `--engine auto`
+//!   ([`dispatch`]);
 //! * a **GPU execution-cost simulator** ([`gpusim`]) standing in for the
 //!   paper's Tesla C2075 / GTX 480 testbed;
 //! * the **evaluation harness** regenerating every table and figure of the
@@ -41,6 +46,7 @@ pub mod complex;
 pub mod config;
 pub mod connectivity;
 pub mod direct;
+pub mod dispatch;
 pub mod expansion;
 pub mod fmm;
 pub mod geometry;

@@ -7,11 +7,14 @@
 
 use fmm2d::bail;
 use fmm2d::config::FmmConfig;
+use fmm2d::dispatch::{
+    CalibrationOptions, CalibrationProfile, DispatchReport, Dispatcher, Engine, EngineChoice,
+};
 use fmm2d::expansion::Kernel;
-use fmm2d::fmm::{self, FmmOptions, PHASE_NAMES};
+use fmm2d::fmm::{self, FmmOptions, PhaseTimes, PHASE_NAMES};
 use fmm2d::harness::{self, HarnessOpts};
 use fmm2d::util::cli::Args;
-use fmm2d::util::error::Result;
+use fmm2d::util::error::{Context, Result};
 use fmm2d::util::stats::max_rel_error;
 use fmm2d::workload::Distribution;
 
@@ -39,24 +42,36 @@ Validation & tools:
   validate      TOL vs p against direct summation (Eq. 5.3)
   ablate-theta  θ sweep: work mix / time / accuracy (design-choice ablation)
   ablate-shifts M2L kernel variants: recurrence vs unscaled vs matrix
-  calibrate     cost-model calibration vs the paper's headline ratios
+  calibrate     GPU cost-model report vs the paper's headline ratios, then
+                the dispatch calibration pass: measures per-phase CPU
+                throughput (serial + pooled per worker count) and writes
+                the JSON profile `--engine auto` reads [--quick: small
+                sizes, dispatch profile only — the CI smoke configuration]
+                [--profile FILE] [--threads T: calibrate one pooled count]
   run           one evaluation: --n --p --nd --dist uniform|normal|layer
-                [--sigma S] [--engine serial|parallel|xla] [--threads T]
-                [--topo-threads T] [--pin] [--check] [--log-kernel]
+                [--sigma S] [--engine serial|parallel|xla|auto]
+                [--profile FILE] [--threads T] [--topo-threads T] [--pin]
+                [--check] [--log-kernel]
   batch         evaluate --count K problems of --n points each in grouped
                 fixed-shape dispatches: [--nmin A --nmax B] (size spread —
                 heterogeneous shapes form multiple groups) [--batch-size G]
-                [--engine serial|parallel|xla] [--p --nd --dist --sigma
+                [--engine serial|parallel|xla|auto] [--profile FILE]
+                [--p --nd --dist --sigma
                 --seed --threads --topo-threads --pin] [--no-overlap: build all
                 topologies before dispatching instead of overlapping them
                 with group execution] [--check] (parity vs sequential runs)
   batch-bench   batched vs sequential throughput table, incl. overlapped
-                vs sequential topology prologue (--full --seed --threads)
+                vs sequential topology prologue and the dispatcher's
+                predicted batch time (--full --seed --threads)
   topo-bench    Sort/Connect serial vs parallel vs compute per N (--full
                 --seed --threads)
   pool-bench    per-phase wall-clock: persistent worker pool vs scoped
-                spawn-per-phase engine vs serial, per N (--full --seed;
-                --threads T pins one worker count, default sweeps; --pin)
+                spawn-per-phase engine vs serial, per N, plus the
+                dispatcher's predicted totals (--full --seed; --threads T
+                pins one worker count, default sweeps; --pin)
+  dispatch-bench predicted vs measured time per candidate engine and the
+                auto choice, for single problems and batch groups (--full
+                --seed --threads --pin)
   artifacts     list available AOT artifacts (needs --features pjrt)
 
 The default engine is `parallel` with all available cores; --threads T caps
@@ -65,8 +80,11 @@ runs execute on a persistent worker pool (threads spawned once per
 process); --pin pins worker i to core i (best-effort, Linux). The
 topological phase (Sort/Connect) follows --threads through the parallel
 topology engine; --topo-threads T overrides it independently (T=1 serial
-build, T=0 all cores). The xla engine and `artifacts` need a binary built
-with `--features pjrt`.
+build, T=0 all cores). `--engine auto` resolves the engine per problem and
+per batch group from the calibrated cost model (run `calibrate` once; the
+decision, predicted and measured times print as a dispatch report;
+--profile overrides the default ~/.cache/fmm2d/profile.json). The xla
+engine and `artifacts` need a binary built with `--features pjrt`.
 ";
 
 fn main() {
@@ -218,8 +236,45 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             t.save("ablate_shifts");
         }
         "calibrate" => {
+            args.check_known(&["full", "seed", "gtx480", "threads", "pin", "quick", "profile"])?;
+            let o = harness_opts(&args)?;
+            let quick = args.flag("quick");
+            if !quick {
+                println!("{}", harness::calibrate(&o));
+            }
+            // dispatch calibration: measure CPU phase throughputs and
+            // persist the profile `--engine auto` reads
+            let copts = CalibrationOptions {
+                quick,
+                seed: o.seed,
+                pin: o.pin,
+                // an explicit --threads T calibrates the pooled engine at
+                // that single worker count; default sweeps
+                worker_counts: match (args.get("threads").is_some(), o.threads) {
+                    (true, Some(t)) => vec![t],
+                    _ => Vec::new(),
+                },
+            };
+            let profile = CalibrationProfile::measure(&copts)?;
+            println!("{}", profile.summary());
+            let path = match args.get("profile") {
+                Some(p) => std::path::PathBuf::from(p),
+                None => CalibrationProfile::default_path(),
+            };
+            profile.save(&path)?;
+            println!("[dispatch profile saved to {}]", path.display());
+        }
+        "dispatch-bench" => {
             args.check_known(&["full", "seed", "gtx480", "threads", "pin"])?;
-            println!("{}", harness::calibrate(&harness_opts(&args)?));
+            // like batch-bench: engine comparisons default to all cores
+            let mut o = harness_opts(&args)?;
+            if args.get("threads").is_none() {
+                o.threads = None;
+            }
+            for (i, t) in harness::dispatch_bench(&o).iter().enumerate() {
+                println!("{}", t.render());
+                t.save(&format!("dispatch_bench_{i}"));
+            }
         }
         "run" => cmd_run(&args)?,
         "batch" => cmd_batch(&args)?,
@@ -289,10 +344,29 @@ fn cmd_artifacts() -> Result<()> {
     );
 }
 
+/// The dispatcher of an `--engine auto` invocation: an explicit
+/// `--profile` must load (errors surface), otherwise the default profile
+/// location with a built-in fallback.
+fn dispatcher_from_args(args: &Args) -> Result<Dispatcher> {
+    match args.get("profile") {
+        Some(p) => Dispatcher::load(std::path::Path::new(p))
+            .with_context(|| format!("loading --profile {p}")),
+        None => Ok(Dispatcher::load_or_default(None)),
+    }
+}
+
+fn print_phase_times(times: &PhaseTimes) {
+    println!("{:<8} {:>12} ", "phase", "seconds");
+    for (i, name) in PHASE_NAMES.iter().enumerate() {
+        println!("{name:<8} {:>12.6}", times.0[i]);
+    }
+    println!("{:<8} {:>12.6}", "total", times.total());
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     args.check_known(&[
         "n", "p", "nd", "dist", "sigma", "engine", "check", "seed", "log-kernel", "levels",
-        "threads", "topo-threads", "pin",
+        "threads", "topo-threads", "pin", "profile",
     ])?;
     let n: usize = args.get_or("n", 10_000)?;
     let p: usize = args.get_or("p", 17)?;
@@ -310,11 +384,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     } else {
         Kernel::Harmonic
     };
-    let engine = args.get_choice("engine", &["serial", "parallel", "xla"], "parallel")?;
-    let threads = match engine.as_str() {
+    // one FromStr impl owns the engine-name list for `run` and `batch`
+    let engine: Engine = args.get_or("engine", Engine::Parallel)?;
+    let threads = match engine {
         // --engine serial forces the reference driver; otherwise --threads T
-        // caps the workers (default: all cores)
-        "serial" => Some(1),
+        // caps the workers (default: all cores; `auto` treats it as the
+        // pooled candidate's worker cap)
+        Engine::Serial => Some(1),
         _ => threads_arg(args, None)?,
     };
     // topology workers follow the engine unless --topo-threads overrides
@@ -351,18 +427,39 @@ fn cmd_run(args: &Args) -> Result<()> {
         opts.effective_threads(),
     );
 
-    let potentials = match engine.as_str() {
-        "serial" | "parallel" => {
+    let potentials = match engine {
+        Engine::Serial | Engine::Parallel => {
             let out = fmm::evaluate(&pts, &gs, &opts)?;
-            println!("{:<8} {:>12} ", "phase", "seconds");
-            for (i, name) in PHASE_NAMES.iter().enumerate() {
-                println!("{name:<8} {:>12.6}", out.times.0[i]);
-            }
-            println!("{:<8} {:>12.6}", "total", out.times.total());
+            print_phase_times(&out.times);
             out.potentials
         }
-        "xla" => run_xla_engine(&pts, &gs, &opts, levels, p)?,
-        other => unreachable!("get_choice admitted --engine {other}"),
+        Engine::Xla => run_xla_engine(&pts, &gs, &opts, levels, p)?,
+        Engine::Auto => {
+            // resolve the engine from the calibrated cost model, run it,
+            // and report the decision with predicted vs measured time
+            let dispatcher = dispatcher_from_args(args)?;
+            let problem = fmm2d::dispatch::Problem::from_config(&opts.cfg, pts.len());
+            let mut decision = dispatcher.select_capped(&problem, opts.threads);
+            let potentials = if decision.choice == EngineChoice::Xla {
+                let t0 = std::time::Instant::now();
+                let pots = run_xla_engine(&pts, &gs, &opts, levels, p)?;
+                decision.measured_s = Some(t0.elapsed().as_secs_f64());
+                pots
+            } else {
+                // the shared choice-to-execution mapping (times included)
+                let out = fmm2d::dispatch::execute_cpu_choice(&pts, &gs, &opts, &mut decision)?;
+                print_phase_times(&out.times);
+                out.potentials
+            };
+            println!(
+                "{}",
+                DispatchReport {
+                    decisions: vec![decision],
+                }
+                .render()
+            );
+            potentials
+        }
     };
 
     if args.flag("check") {
@@ -407,6 +504,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
         "pin",
         "no-overlap",
         "check",
+        "profile",
     ])?;
     let count: usize = args.get_or("count", 64)?;
     let n: usize = args.get_or("n", 2000)?;
@@ -430,13 +528,14 @@ fn cmd_batch(args: &Args) -> Result<()> {
         "layer" => Distribution::Layer { sigma },
         _ => Distribution::Uniform,
     };
-    let engine = match args
-        .get_choice("engine", &["serial", "parallel", "xla"], "parallel")?
-        .as_str()
-    {
-        "serial" => BatchEngine::Serial,
-        "xla" => BatchEngine::Xla,
-        _ => BatchEngine::Parallel,
+    // the same FromStr impl as `run` parses the engine; BatchEngine is its
+    // one-to-one image (From<Engine>)
+    let cli_engine: Engine = args.get_or("engine", Engine::Parallel)?;
+    let engine = BatchEngine::from(cli_engine);
+    let dispatcher = if cli_engine == Engine::Auto {
+        Some(std::sync::Arc::new(dispatcher_from_args(args)?))
+    } else {
+        None
     };
     let threads = threads_arg(args, None)?;
     let topo_threads = topo_threads_arg(args)?;
@@ -474,11 +573,12 @@ fn cmd_batch(args: &Args) -> Result<()> {
         engine,
         max_group: args.get_or("batch-size", 0)?,
         overlap: !args.flag("no-overlap"),
+        dispatcher,
     };
     let out = batch::run(&problems, &opts)?;
     let s = &out.stats;
     println!(
-        "problems={} groups={} dispatches={} total_points={} engine={engine:?} threads={}",
+        "problems={} groups={} dispatches={} total_points={} engine={cli_engine} threads={}",
         s.n_problems,
         s.n_groups,
         s.dispatches,
@@ -501,6 +601,9 @@ fn cmd_batch(args: &Args) -> Result<()> {
             s.upload_s, s.execute_s, s.download_s
         );
     }
+    if let Some(report) = &out.report {
+        println!("{}", report.render());
+    }
 
     if args.flag("check") {
         if nmax > 30_000 {
@@ -509,7 +612,13 @@ fn cmd_batch(args: &Args) -> Result<()> {
         // the CPU engines reduce in the serial driver's order (parity to
         // 1e-12); the XLA artifacts reduce in padded fixed-shape order and
         // legitimately deviate more (runtime_e2e accepts 1e-9 on this path)
-        let tol = if engine == BatchEngine::Xla { 1e-9 } else { 1e-12 };
+        let xla_involved = engine == BatchEngine::Xla
+            || out.report.as_ref().is_some_and(|r| {
+                r.decisions
+                    .iter()
+                    .any(|d| d.choice == EngineChoice::Xla)
+            });
+        let tol = if xla_involved { 1e-9 } else { 1e-12 };
         let mut worst = 0.0f64;
         for (i, pr) in problems.iter().enumerate() {
             let seq = fmm::evaluate(

@@ -80,6 +80,11 @@ impl Args {
     /// Enumerated-string option: returns `default` when absent, errors
     /// when the given value is not one of `choices` (typos fail fast with
     /// the valid alternatives listed).
+    ///
+    /// For enums that exist as types, prefer a `FromStr` impl routed
+    /// through [`Args::get_or`] — the `--engine` selector does this via
+    /// [`crate::dispatch::Engine`], so the name list and its error
+    /// message live in exactly one place instead of per call site.
     pub fn get_choice(
         &self,
         name: &str,

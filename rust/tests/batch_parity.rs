@@ -70,7 +70,7 @@ fn parallel_engine_parity_on_heterogeneous_batch() {
             fmm: fmm_opts(12, Some(3)),
             engine: BatchEngine::Parallel,
             max_group: 0,
-            overlap: true,
+            ..BatchOptions::default()
         },
     );
     assert!(
@@ -91,7 +91,7 @@ fn serial_engine_parity_on_heterogeneous_batch() {
             fmm: fmm_opts(10, Some(1)),
             engine: BatchEngine::Serial,
             max_group: 0,
-            overlap: true,
+            ..BatchOptions::default()
         },
     );
     assert!(out.stats.n_groups >= 2);
@@ -108,7 +108,7 @@ fn parity_survives_group_splitting() {
             fmm: fmm_opts(10, Some(2)),
             engine: BatchEngine::Parallel,
             max_group: 2,
-            overlap: true,
+            ..BatchOptions::default()
         },
     );
     let wide = batch::run(
@@ -117,7 +117,7 @@ fn parity_survives_group_splitting() {
             fmm: fmm_opts(10, Some(2)),
             engine: BatchEngine::Parallel,
             max_group: 0,
-            overlap: true,
+            ..BatchOptions::default()
         },
     )
     .unwrap();
@@ -138,7 +138,7 @@ fn aggregated_counts_are_the_sum_of_members() {
             fmm: fmm_opts(10, Some(2)),
             engine: BatchEngine::Parallel,
             max_group: 0,
-            overlap: true,
+            ..BatchOptions::default()
         },
     )
     .unwrap();
@@ -170,7 +170,7 @@ fn directed_p2p_batches_identically() {
         },
         engine: BatchEngine::Parallel,
         max_group: 0,
-        overlap: true,
+        ..BatchOptions::default()
     };
     assert_parity(&problems, &opts);
 }

@@ -1,0 +1,319 @@
+//! The dispatch subsystem end to end: profile JSON round-trip (incl.
+//! version/unknown-field rejection), deterministic selection,
+//! `Engine::Auto` parity with the explicitly-chosen engines, and the
+//! tolerance band of the a-priori `WorkCounts::estimate`.
+
+use std::sync::Arc;
+
+use fmm2d::batch::{self, BatchEngine, BatchOptions, BatchProblem};
+use fmm2d::config::FmmConfig;
+use fmm2d::dispatch::{
+    evaluate_auto, CalibrationProfile, Dispatcher, Engine, EngineChoice, EngineRates,
+    PooledRates, Problem, PROFILE_VERSION,
+};
+use fmm2d::fmm::{self, FmmOptions, WorkCounts, N_PHASES};
+use fmm2d::util::rng::Pcg64;
+use fmm2d::workload::{self, Distribution};
+
+/// A hand-built profile with a serial engine, one pooled entry (4 workers,
+/// 3.2× the throughput, a 0.5 ms dispatch overhead) — tiny problems pick
+/// serial, large ones the pool, deterministically.
+fn synthetic_profile() -> CalibrationProfile {
+    CalibrationProfile {
+        version: PROFILE_VERSION,
+        serial: EngineRates {
+            rates: [1.0e8; N_PHASES],
+            overhead_s: 0.0,
+        },
+        pooled: vec![PooledRates {
+            workers: 4,
+            rates: EngineRates {
+                rates: [3.2e8; N_PHASES],
+                overhead_s: 5.0e-4,
+            },
+        }],
+    }
+}
+
+// ---- profile persistence -----------------------------------------------
+
+#[test]
+fn profile_round_trips_through_json() {
+    let p = synthetic_profile();
+    let s = p.to_json_string();
+    let back = CalibrationProfile::parse(&s).expect("own serialization must parse");
+    assert_eq!(p, back);
+}
+
+#[test]
+fn profile_rejects_version_mismatch() {
+    let mut p = synthetic_profile();
+    p.version = PROFILE_VERSION + 1;
+    let err = CalibrationProfile::parse(&p.to_json_string())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("version"), "unexpected error: {err}");
+}
+
+#[test]
+fn profile_rejects_unknown_fields() {
+    let s = synthetic_profile().to_json_string();
+    // a field from the future, injected at the top level
+    let hacked = s.replacen('{', "{\"from_the_future\":1,", 1);
+    let err = CalibrationProfile::parse(&hacked).unwrap_err().to_string();
+    assert!(err.contains("unknown field"), "unexpected error: {err}");
+    // and inside an engine-rates object
+    let hacked = s.replacen("\"overhead_s\"", "\"surprise\":1,\"overhead_s\"", 1);
+    let err = CalibrationProfile::parse(&hacked).unwrap_err().to_string();
+    assert!(err.contains("unknown field"), "unexpected error: {err}");
+}
+
+#[test]
+fn profile_save_load_cycle_on_disk() {
+    let p = synthetic_profile();
+    let dir = std::env::temp_dir().join("fmm2d-dispatch-test");
+    let path = dir.join("profile.json");
+    p.save(&path).expect("saving the profile");
+    let d = Dispatcher::load(&path).expect("loading the saved profile");
+    assert_eq!(d.profile, p);
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---- selection ----------------------------------------------------------
+
+#[test]
+fn same_profile_same_problems_same_choices() {
+    let d = Dispatcher::new(synthetic_profile()).with_xla(false);
+    let problems: Vec<Problem> = [(150, 1), (2_000, 2), (20_000, 4), (300_000, 6)]
+        .iter()
+        .map(|&(n, l)| Problem::new(n, l, 17, 0.5))
+        .collect();
+    let first: Vec<EngineChoice> = problems.iter().map(|p| d.select(p).choice).collect();
+    let second: Vec<EngineChoice> = problems.iter().map(|p| d.select(p).choice).collect();
+    assert_eq!(first, second);
+    let g1 = d.select_group(&problems);
+    let g2 = d.select_group(&problems);
+    assert_eq!(g1.choice, g2.choice);
+    assert_eq!(g1.predicted_s, g2.predicted_s);
+}
+
+#[test]
+fn small_problems_stay_serial_large_ones_pool() {
+    let d = Dispatcher::new(synthetic_profile()).with_xla(false);
+    let small = d.select(&Problem::new(150, 1, 17, 0.5));
+    assert_eq!(
+        small.choice,
+        EngineChoice::Serial,
+        "a tiny problem must not pay the pool overhead: {small:?}"
+    );
+    let big = d.select(&Problem::new(200_000, 6, 17, 0.5));
+    assert!(
+        matches!(big.choice, EngineChoice::Pooled { workers: 4 }),
+        "a large problem must use the pool: {big:?}"
+    );
+    assert!(big.cost.pooled_s < big.cost.serial_s);
+}
+
+#[test]
+fn large_groups_go_to_xla_only_when_allowed() {
+    // deliberately slow CPU rates: the simulated-GPU batch price wins
+    let mut slow = synthetic_profile();
+    slow.serial.rates = [1.0e6; N_PHASES];
+    slow.pooled[0].rates.rates = [2.0e6; N_PHASES];
+    let members: Vec<Problem> = (0..32).map(|_| Problem::new(2_000, 2, 17, 0.5)).collect();
+    let with_xla = Dispatcher::new(slow.clone()).with_xla(true);
+    assert_eq!(with_xla.select_group(&members).choice, EngineChoice::Xla);
+    let cpu_only = Dispatcher::new(slow).with_xla(false);
+    assert_ne!(cpu_only.select_group(&members).choice, EngineChoice::Xla);
+}
+
+#[test]
+fn engine_parses_through_the_single_from_str_impl() {
+    assert_eq!("serial".parse::<Engine>().unwrap(), Engine::Serial);
+    assert_eq!("parallel".parse::<Engine>().unwrap(), Engine::Parallel);
+    assert_eq!("xla".parse::<Engine>().unwrap(), Engine::Xla);
+    assert_eq!("auto".parse::<Engine>().unwrap(), Engine::Auto);
+    let err = "cuda".parse::<Engine>().unwrap_err().to_string();
+    assert!(err.contains("serial|parallel|xla|auto"), "{err}");
+    // the batch engine is the one-to-one image of the CLI selector
+    assert_eq!(BatchEngine::from(Engine::Auto), BatchEngine::Auto);
+    assert_eq!(BatchEngine::from(Engine::Serial), BatchEngine::Serial);
+}
+
+// ---- Engine::Auto end to end -------------------------------------------
+
+#[test]
+fn auto_single_evaluation_matches_pooled() {
+    let mut r = Pcg64::seed_from_u64(11);
+    let (pts, gs) = workload::uniform_square(4_000, &mut r);
+    let opts = FmmOptions {
+        cfg: FmmConfig {
+            p: 13,
+            ..FmmConfig::default()
+        },
+        ..FmmOptions::default()
+    };
+    let d = Dispatcher::new(synthetic_profile()).with_xla(false);
+    let (auto_out, decision) = evaluate_auto(&pts, &gs, &opts, &d).unwrap();
+    assert!(decision.measured_s.unwrap() > 0.0);
+    assert!(decision.predicted_s > 0.0);
+    let pooled = fmm::evaluate(&pts, &gs, &opts).unwrap();
+    for (a, b) in auto_out.potentials.iter().zip(&pooled.potentials) {
+        assert!(
+            (*a - *b).abs() <= 1e-12 * a.abs().max(1.0),
+            "auto {a:?} vs pooled {b:?}"
+        );
+    }
+}
+
+#[test]
+fn auto_batch_matches_parallel_and_carries_a_report() {
+    let mut r = Pcg64::seed_from_u64(12);
+    let problems: Vec<BatchProblem> = [800usize, 2_200, 900, 2_400]
+        .iter()
+        .map(|&n| {
+            let (points, gammas) = workload::uniform_square(n, &mut r);
+            BatchProblem { points, gammas }
+        })
+        .collect();
+    let fmm_opts = FmmOptions {
+        cfg: FmmConfig {
+            p: 10,
+            ..FmmConfig::default()
+        },
+        threads: Some(2),
+        ..FmmOptions::default()
+    };
+    let auto = batch::run(
+        &problems,
+        &BatchOptions {
+            fmm: fmm_opts.clone(),
+            engine: BatchEngine::Auto,
+            dispatcher: Some(Arc::new(
+                Dispatcher::new(synthetic_profile()).with_xla(false),
+            )),
+            ..BatchOptions::default()
+        },
+    )
+    .unwrap();
+    let parallel = batch::run(
+        &problems,
+        &BatchOptions {
+            fmm: fmm_opts,
+            engine: BatchEngine::Parallel,
+            ..BatchOptions::default()
+        },
+    )
+    .unwrap();
+    assert!(parallel.report.is_none(), "explicit engines carry no report");
+    let report = auto.report.expect("auto batches carry a dispatch report");
+    assert_eq!(report.decisions.len(), auto.stats.n_groups);
+    for d in &report.decisions {
+        assert!(d.measured_s.is_some(), "every group must be timed: {d:?}");
+        assert_ne!(d.choice, EngineChoice::Xla, "CPU-only build chose XLA");
+    }
+    let rendered = report.render();
+    assert!(
+        rendered.contains("serial") || rendered.contains("pooled"),
+        "render must show the choice: {rendered}"
+    );
+    assert_eq!(auto.stats.dispatches, auto.stats.n_groups);
+    for (a, b) in auto.potentials.iter().zip(&parallel.potentials) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!(
+                (*x - *y).abs() <= 1e-12 * x.abs().max(1.0),
+                "auto {x:?} vs parallel {y:?}"
+            );
+        }
+    }
+}
+
+// ---- WorkCounts::estimate tolerance band --------------------------------
+
+fn measured_counts(dist: Distribution, n: usize, p: usize, seed: u64) -> WorkCounts {
+    let mut r = Pcg64::seed_from_u64(seed);
+    let (pts, gs) = dist.generate(n, &mut r);
+    let out = fmm::evaluate(
+        &pts,
+        &gs,
+        &FmmOptions {
+            cfg: FmmConfig {
+                p,
+                ..FmmConfig::default()
+            },
+            threads: Some(1),
+            ..FmmOptions::default()
+        },
+    )
+    .unwrap();
+    out.counts
+}
+
+fn assert_band(what: &str, estimated: usize, measured: usize, lo: f64, hi: f64) {
+    let ratio = estimated as f64 / measured.max(1) as f64;
+    assert!(
+        ratio >= lo && ratio <= hi,
+        "{what}: estimate {estimated} vs measured {measured} (ratio {ratio:.3} \
+         outside [{lo}, {hi}])"
+    );
+}
+
+#[test]
+fn estimate_tracks_measured_counts_on_uniform_points() {
+    let n = 4_000;
+    let m = measured_counts(Distribution::Uniform, n, 10, 21);
+    let e = WorkCounts::estimate(n, m.levels, 10, 0.5);
+    // structure-exact quantities
+    assert_eq!(e.p2m_particles, m.p2m_particles);
+    assert_eq!(e.m2m_per_level, m.m2m_per_level);
+    assert_eq!(e.l2l_per_level, m.l2l_per_level);
+    assert_eq!(e.leaf_sizes.len(), m.leaf_sizes.len());
+    assert_eq!(
+        e.leaf_sizes.iter().map(|&x| x as usize).sum::<usize>(),
+        m.leaf_sizes.iter().map(|&x| x as usize).sum::<usize>()
+    );
+    // geometry-dependent quantities: tight band on uniform inputs
+    assert_band(
+        "m2l (uniform)",
+        e.m2l_per_level.iter().sum(),
+        m.m2l_per_level.iter().sum(),
+        0.5,
+        2.0,
+    );
+    assert_band("p2p (uniform)", e.p2p_pairs, m.p2p_pairs, 0.5, 2.0);
+    assert_band(
+        "checks (uniform)",
+        e.connect_checks,
+        m.connect_checks,
+        0.5,
+        2.0,
+    );
+}
+
+#[test]
+fn estimate_tracks_measured_counts_on_clustered_points() {
+    let n = 4_000;
+    let m = measured_counts(Distribution::Normal { sigma: 0.1 }, n, 10, 22);
+    let e = WorkCounts::estimate(n, m.levels, 10, 0.5);
+    assert_eq!(e.p2m_particles, m.p2m_particles);
+    assert_eq!(e.m2m_per_level, m.m2m_per_level);
+    assert_eq!(e.l2l_per_level, m.l2l_per_level);
+    // clustering skews the boxes, so the bands are wider — but an
+    // order-of-magnitude regression still fails
+    assert_band(
+        "m2l (clustered)",
+        e.m2l_per_level.iter().sum(),
+        m.m2l_per_level.iter().sum(),
+        0.1,
+        8.0,
+    );
+    assert_band("p2p (clustered)", e.p2p_pairs, m.p2p_pairs, 0.1, 8.0);
+    assert_band(
+        "checks (clustered)",
+        e.connect_checks,
+        m.connect_checks,
+        0.1,
+        8.0,
+    );
+}

@@ -182,7 +182,7 @@ fn batch_runs_on_an_explicit_pool() {
         },
         engine: BatchEngine::Parallel,
         max_group: 0,
-        overlap: true,
+        ..BatchOptions::default()
     };
     let out = batch::run(&problems, &opts).unwrap();
     assert_eq!(out.potentials.len(), problems.len());
