@@ -402,6 +402,9 @@ fn run_overlapped(
         (0..problems.len()).map(|_| None).collect();
     let mut first_err = None;
 
+    // xtask: allow(no-spawn) — the overlapped prologue's producer threads
+    // are the one sanctioned spawn site outside the pools (they overlap
+    // topology builds with pool-side evaluation; see tests/zero_spawn.rs)
     std::thread::scope(|s| {
         for _ in 0..producers {
             let tx = tx.clone();

@@ -240,6 +240,105 @@ impl Connectivity {
         Self::build_parallel(pyr, theta, threads.min(pool.n_workers()), Some(pool))
     }
 
+    /// Structural validation of the built lists against their pyramid
+    /// (DESIGN.md §8):
+    ///
+    /// * CSR well-formedness — every list has `n_boxes + 1` offsets
+    ///   starting at 0, monotone, ending at `data.len()`, with every
+    ///   source index in range;
+    /// * shape — `weak[l]` aligns with `pyr.rects[l]` for every level
+    ///   (`4^l` boxes, root level empty), and the finest-level lists cover
+    ///   exactly the leaves;
+    /// * symmetry — the weak (M2L) lists and the P2P near field are
+    ///   symmetric, and the near field contains each box itself;
+    /// * exclusivity — no finest-level pair is classified both weak (M2L)
+    ///   and near (P2P);
+    /// * duality — `(dst, src) ∈ p2l ⟺ (src, dst) ∈ m2p` (the larger
+    ///   box's particles feed the smaller's local expansion; the smaller's
+    ///   multipole is evaluated in the larger).
+    ///
+    /// Wired into debug-mode [`crate::topology::build`] and the `--check`
+    /// paths of `run`/`batch`.
+    pub fn validate(&self, pyr: &Pyramid) -> crate::util::error::Result<()> {
+        fn check_csr(name: &str, adj: &AdjList, nb: usize) -> crate::util::error::Result<()> {
+            crate::ensure!(
+                adj.offsets.len() == nb + 1,
+                "{name}: {} offsets for {nb} boxes",
+                adj.offsets.len()
+            );
+            crate::ensure!(adj.offsets[0] == 0, "{name}: offsets must start at 0");
+            for b in 0..nb {
+                crate::ensure!(
+                    adj.offsets[b] <= adj.offsets[b + 1],
+                    "{name}: offsets not monotone at box {b}"
+                );
+            }
+            crate::ensure!(
+                adj.offsets[nb] as usize == adj.data.len(),
+                "{name}: offsets end at {}, data has {} entries",
+                adj.offsets[nb],
+                adj.data.len()
+            );
+            for &s in &adj.data {
+                crate::ensure!(
+                    (s as usize) < nb,
+                    "{name}: source {s} out of range 0..{nb}"
+                );
+            }
+            Ok(())
+        }
+
+        let levels = pyr.levels;
+        crate::ensure!(
+            self.weak.len() == levels + 1,
+            "{} weak levels for a {levels}-level pyramid",
+            self.weak.len()
+        );
+        crate::ensure!(self.weak[0].is_empty(), "root level must have no weak pairs");
+        for (l, w) in self.weak.iter().enumerate() {
+            check_csr(&format!("weak[{l}]"), w, boxes_at_level(l))?;
+            crate::ensure!(is_symmetric(w), "weak[{l}] is not symmetric");
+        }
+
+        let nl = pyr.n_leaves();
+        check_csr("near", &self.near, nl)?;
+        check_csr("p2l", &self.p2l, nl)?;
+        check_csr("m2p", &self.m2p, nl)?;
+        crate::ensure!(is_symmetric(&self.near), "near field is not symmetric");
+        for b in 0..nl {
+            crate::ensure!(
+                self.near.sources(b).contains(&(b as u32)),
+                "near field of box {b} is missing the box itself"
+            );
+            for &s in self.near.sources(b) {
+                crate::ensure!(
+                    !self.weak[levels].sources(b).contains(&s),
+                    "pair ({b}, {s}) classified both near (P2P) and weak (M2L)"
+                );
+            }
+        }
+
+        let mut p2l_pairs: Vec<(u32, u32)> = Vec::new();
+        let mut m2p_pairs: Vec<(u32, u32)> = Vec::new();
+        for b in 0..nl {
+            for &s in self.p2l.sources(b) {
+                p2l_pairs.push((b as u32, s));
+            }
+            for &s in self.m2p.sources(b) {
+                m2p_pairs.push((s, b as u32));
+            }
+        }
+        p2l_pairs.sort_unstable();
+        m2p_pairs.sort_unstable();
+        crate::ensure!(
+            p2l_pairs == m2p_pairs,
+            "p2l/m2p are not duals ({} vs {} pairs)",
+            p2l_pairs.len(),
+            m2p_pairs.len()
+        );
+        Ok(())
+    }
+
     fn build_parallel(
         pyr: &Pyramid,
         theta: f64,

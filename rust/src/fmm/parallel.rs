@@ -707,6 +707,8 @@ pub fn evaluate_on_tree_parallel(
             .map(|r| pyr.starts[r.end] - pyr.starts[r.start])
             .collect();
         let chunks = split_lengths_mut(&mut phi, &lens);
+        // xtask: allow(no-spawn) — scoped reference engine, kept as the
+        // spawn-per-phase baseline the pool engine is benchmarked against
         std::thread::scope(|s| {
             for (r, chunk) in rs.iter().zip(chunks) {
                 let r = r.clone();
@@ -736,6 +738,7 @@ pub fn evaluate_on_tree_parallel(
         // updates go to per-thread accumulators merged in thread order.
         let rs = weighted_ranges(&p2p_symmetric_weights(pyr, con, nl), nt);
         let mut partials: Vec<(Vec<f64>, Vec<f64>)> = Vec::with_capacity(rs.len());
+        // xtask: allow(no-spawn) — scoped reference engine (see L2P above)
         std::thread::scope(|s| {
             let handles: Vec<_> = rs
                 .iter()
@@ -751,6 +754,8 @@ pub fn evaluate_on_tree_parallel(
                 })
                 .collect();
             for h in handles {
+                // xtask: allow(no-panic) — a worker panic here is already a
+                // bug being re-raised; there is no caller-facing Result
                 partials.push(h.join().expect("P2P worker panicked"));
             }
         });
@@ -764,6 +769,7 @@ pub fn evaluate_on_tree_parallel(
         let merge_rs = ranges(n, nt);
         let merge_lens: Vec<usize> = merge_rs.iter().map(|r| r.end - r.start).collect();
         let chunks = split_lengths_mut(&mut phi, &merge_lens);
+        // xtask: allow(no-spawn) — scoped reference engine (see L2P above)
         std::thread::scope(|s| {
             for (r, chunk) in merge_rs.iter().zip(chunks) {
                 let r = r.clone();
@@ -789,6 +795,7 @@ pub fn evaluate_on_tree_parallel(
             .map(|r| pyr.starts[r.end] - pyr.starts[r.start])
             .collect();
         let chunks = split_lengths_mut(&mut phi, &lens);
+        // xtask: allow(no-spawn) — scoped reference engine (see L2P above)
         std::thread::scope(|s| {
             for (r, chunk) in rs.iter().zip(chunks) {
                 let r = r.clone();
@@ -830,11 +837,15 @@ pub fn evaluate_trees_on_pool(
             limit,
             |_k, i, _ws| {
                 let (pyr, con) = problems[i];
+                // xtask: allow(no-panic) — uncontended one-shot slot; a
+                // poisoned lock means a worker already panicked
                 *out[i].lock().unwrap() = Some(super::evaluate_on_tree_serial(pyr, con, opts));
             },
         );
     }
     out.into_iter()
+        // xtask: allow(no-panic) — run_dynamic returns only after every
+        // claimed index ran, so each slot is infallibly filled
         .map(|m| m.into_inner().unwrap().expect("every problem evaluated"))
         .collect()
 }
@@ -864,6 +875,8 @@ pub fn evaluate_trees_pooled(
     }
     let next = std::sync::atomic::AtomicUsize::new(0);
     let mut collected = Vec::with_capacity(problems.len());
+    // xtask: allow(no-spawn) — scoped reference engine for batch groups,
+    // kept next to the spawn-free evaluate_trees_on_pool
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..nt)
             .map(|_| {
@@ -884,6 +897,8 @@ pub fn evaluate_trees_pooled(
             })
             .collect();
         for h in handles {
+            // xtask: allow(no-panic) — re-raising a worker panic, no
+            // caller-facing Result to plumb it into
             collected.extend(h.join().expect("pooled batch worker panicked"));
         }
     });

@@ -1,0 +1,492 @@
+//! The repo's strict performance baseline: `fmm2d bench-suite`.
+//!
+//! Runs a **fixed matrix** of end-to-end evaluations (sizes ×
+//! distributions × engines), takes the median of `reps` timed runs after a
+//! warmup, and writes a versioned `BENCH_<date>.json` record under
+//! `results/`. When a previous record exists (or `--baseline` names one),
+//! the suite prints per-case ratios against it — so a perf PR carries
+//! before/after evidence from one command, and a regression shows up as a
+//! ratio, not an anecdote.
+//!
+//! The record format follows the calibration profile's persistence rules
+//! (`dispatch/profile.rs`): versioned, strict parsing — unknown fields and
+//! version mismatches are errors, never silently ignored — so stale
+//! baselines fail loudly instead of producing nonsense ratios.
+
+use std::path::{Path, PathBuf};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use crate::config::FmmConfig;
+use crate::fmm::{self, FmmOptions};
+use crate::harness::runner::workload_for;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::workload::Distribution;
+
+/// Format version of the `BENCH_<date>.json` record.
+pub const BENCH_VERSION: usize = 1;
+
+/// Options of one bench-suite invocation.
+#[derive(Clone, Debug)]
+pub struct BenchSuiteOpts {
+    /// Add the paper-scale size to the matrix.
+    pub full: bool,
+    pub seed: u64,
+    /// Timed repetitions per case (the median is recorded).
+    pub reps: usize,
+    /// Worker cap of the parallel engine (`None` = all cores).
+    pub threads: Option<usize>,
+    pub pin: bool,
+}
+
+impl Default for BenchSuiteOpts {
+    fn default() -> Self {
+        Self {
+            full: false,
+            seed: 1,
+            reps: 5,
+            threads: None,
+            pin: false,
+        }
+    }
+}
+
+/// One measured cell of the matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchCase {
+    pub engine: String,
+    pub dist: String,
+    pub n: usize,
+    /// Median wall-clock of the timed repetitions (seconds).
+    pub median_s: f64,
+    pub points_per_s: f64,
+}
+
+/// A full bench-suite record (what `BENCH_<date>.json` holds).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    pub version: usize,
+    /// `YYYYMMDD`, also embedded in the default file name.
+    pub date: String,
+    pub seed: u64,
+    pub reps: usize,
+    /// Resolved parallel-engine worker count.
+    pub threads: usize,
+    pub cases: Vec<BenchCase>,
+}
+
+/// The fixed size axis: small enough that the default suite finishes in
+/// minutes, wide enough that serial/parallel separate clearly.
+fn sizes(full: bool) -> Vec<usize> {
+    let mut s = vec![2_000, 8_000, 32_000];
+    if full {
+        s.push(100_000);
+    }
+    s
+}
+
+fn dists() -> [Distribution; 3] {
+    [
+        Distribution::Uniform,
+        Distribution::Normal { sigma: 0.1 },
+        Distribution::Layer { sigma: 0.1 },
+    ]
+}
+
+fn median(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("bench times are finite"));
+    xs[xs.len() / 2]
+}
+
+/// Run the fixed matrix and assemble the record.
+pub fn run(opts: &BenchSuiteOpts) -> Result<BenchRecord> {
+    let mut pairs = Vec::new();
+    for d in dists() {
+        for n in sizes(opts.full) {
+            pairs.push((d, n));
+        }
+    }
+    run_matrix(opts, &pairs)
+}
+
+/// The measurement loop over an explicit `(distribution, n)` list (the
+/// public [`run`] passes the fixed matrix; tests pass a tiny one).
+pub fn run_matrix(opts: &BenchSuiteOpts, matrix: &[(Distribution, usize)]) -> Result<BenchRecord> {
+    let reps = opts.reps.max(1);
+    let engines: [(&str, Option<usize>); 2] = [("serial", Some(1)), ("parallel", opts.threads)];
+    let threads = FmmOptions {
+        threads: opts.threads,
+        ..FmmOptions::default()
+    }
+    .effective_threads();
+    let mut cases = Vec::new();
+    for &(dist, n) in matrix {
+        let (pts, gs) = workload_for(dist, n, opts.seed);
+        for (name, engine_threads) in engines {
+            let fopts = FmmOptions {
+                cfg: FmmConfig::default(),
+                threads: engine_threads,
+                pin: opts.pin,
+                ..FmmOptions::default()
+            };
+            // warmup: first contact pays pool spawn-up and page faults
+            let _ = fmm::evaluate(&pts, &gs, &fopts)?;
+            let mut times = Vec::with_capacity(reps);
+            for _ in 0..reps {
+                let t = Instant::now();
+                let _ = fmm::evaluate(&pts, &gs, &fopts)?;
+                times.push(t.elapsed().as_secs_f64());
+            }
+            let median_s = median(&mut times);
+            cases.push(BenchCase {
+                engine: name.to_string(),
+                dist: dist.name().to_string(),
+                n,
+                median_s,
+                points_per_s: n as f64 / median_s.max(1e-12),
+            });
+        }
+    }
+    Ok(BenchRecord {
+        version: BENCH_VERSION,
+        date: date_string(),
+        seed: opts.seed,
+        reps,
+        threads,
+        cases,
+    })
+}
+
+// ---- calendar ----------------------------------------------------------
+// std has no date formatting; the civil-from-days conversion is the
+// standard Gregorian algorithm (exact for the whole proleptic calendar).
+
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = (z - era * 146_097) as u64;
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe as i64 + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32;
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+/// Today as `YYYYMMDD` (UTC).
+pub fn date_string() -> String {
+    let secs = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let (y, m, d) = civil_from_days((secs / 86_400) as i64);
+    format!("{y:04}{m:02}{d:02}")
+}
+
+// ---- persistence -------------------------------------------------------
+
+impl BenchRecord {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("version", Json::Num(self.version as f64))
+            .set("date", Json::Str(self.date.clone()))
+            .set("seed", Json::Num(self.seed as f64))
+            .set("reps", Json::Num(self.reps as f64))
+            .set("threads", Json::Num(self.threads as f64))
+            .set(
+                "cases",
+                Json::Arr(
+                    self.cases
+                        .iter()
+                        .map(|c| {
+                            let mut o = Json::obj();
+                            o.set("engine", Json::Str(c.engine.clone()))
+                                .set("dist", Json::Str(c.dist.clone()))
+                                .set("n", Json::Num(c.n as f64))
+                                .set("median_s", Json::Num(c.median_s))
+                                .set("points_per_s", Json::Num(c.points_per_s));
+                            o
+                        })
+                        .collect(),
+                ),
+            );
+        j
+    }
+
+    pub fn parse(s: &str) -> Result<BenchRecord> {
+        let v = Json::parse(s).context("parsing bench record")?;
+        check_fields(
+            &v,
+            &["version", "date", "seed", "reps", "threads", "cases"],
+            "bench record",
+        )?;
+        let version = v.req_usize("version")?;
+        if version != BENCH_VERSION {
+            crate::bail!(
+                "bench record version {version} does not match the supported \
+                 version {BENCH_VERSION}; re-run `fmm2d bench-suite`"
+            );
+        }
+        let arr = v
+            .get("cases")
+            .and_then(Json::as_arr)
+            .context("missing 'cases' array")?;
+        let mut cases = Vec::with_capacity(arr.len());
+        for (i, c) in arr.iter().enumerate() {
+            let what = format!("cases[{i}]");
+            check_fields(
+                c,
+                &["engine", "dist", "n", "median_s", "points_per_s"],
+                &what,
+            )?;
+            cases.push(BenchCase {
+                engine: c.req_str("engine")?.to_string(),
+                dist: c.req_str("dist")?.to_string(),
+                n: c.req_usize("n")?,
+                median_s: req_f64(c, "median_s", &what)?,
+                points_per_s: req_f64(c, "points_per_s", &what)?,
+            });
+        }
+        Ok(BenchRecord {
+            version,
+            date: v.req_str("date")?.to_string(),
+            seed: v.req_usize("seed")? as u64,
+            reps: v.req_usize("reps")?,
+            threads: v.req_usize("threads")?,
+            cases,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<BenchRecord> {
+        let s = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&s)
+    }
+
+    /// The default output path of this record: `<dir>/BENCH_<date>.json`.
+    pub fn default_path(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("BENCH_{}.json", self.date))
+    }
+
+    /// Human-readable measurement table.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "# bench-suite {} (seed {}, median of {}, parallel workers {})",
+            self.date, self.seed, self.reps, self.threads
+        );
+        let _ = writeln!(
+            out,
+            "{:<10} {:<8} {:>8} {:>12} {:>14}",
+            "engine", "dist", "N", "median [s]", "points/s"
+        );
+        for c in &self.cases {
+            let _ = writeln!(
+                out,
+                "{:<10} {:<8} {:>8} {:>12.6} {:>14.3e}",
+                c.engine, c.dist, c.n, c.median_s, c.points_per_s
+            );
+        }
+        out
+    }
+}
+
+fn req_f64(v: &Json, key: &str, what: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| crate::anyhow!("{what}: missing/invalid number field '{key}'"))
+}
+
+/// Reject JSON objects carrying fields this version does not understand
+/// (same policy as the calibration profile).
+fn check_fields(v: &Json, known: &[&str], what: &str) -> Result<()> {
+    match v {
+        Json::Obj(m) => {
+            for k in m.keys() {
+                if !known.contains(&k.as_str()) {
+                    crate::bail!(
+                        "unknown field '{k}' in {what}; this build understands {}",
+                        known.join(", ")
+                    );
+                }
+            }
+            Ok(())
+        }
+        _ => crate::bail!("{what}: expected a JSON object"),
+    }
+}
+
+// ---- baseline comparison -----------------------------------------------
+
+/// The newest `BENCH_*.json` in `dir` whose name sorts strictly before
+/// `BENCH_<date>.json` (dates are `YYYYMMDD`, so lexicographic order is
+/// chronological). `None` when no earlier record exists.
+pub fn find_baseline(dir: &Path, date: &str) -> Option<PathBuf> {
+    let current = format!("BENCH_{date}.json");
+    let mut best: Option<String> = None;
+    for entry in std::fs::read_dir(dir).ok()?.flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let earlier = name.starts_with("BENCH_") && name.ends_with(".json") && name < current;
+        if earlier && best.as_deref().map(|b| name.as_str() > b).unwrap_or(true) {
+            best = Some(name);
+        }
+    }
+    best.map(|n| dir.join(n))
+}
+
+/// Per-case ratio table of `current` against `baseline` (ratio > 1 means
+/// the current run is slower). Returns the rendered report and the worst
+/// ratio over matched cases (1.0 when nothing matched).
+pub fn compare(current: &BenchRecord, baseline: &BenchRecord) -> (String, f64) {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# vs baseline {} (seed {}, parallel workers {})",
+        baseline.date, baseline.seed, baseline.threads
+    );
+    let _ = writeln!(
+        out,
+        "{:<10} {:<8} {:>8} {:>12} {:>12} {:>8}",
+        "engine", "dist", "N", "base [s]", "now [s]", "ratio"
+    );
+    let mut worst = 1.0f64;
+    let mut matched = 0usize;
+    for c in &current.cases {
+        let Some(b) = baseline
+            .cases
+            .iter()
+            .find(|b| b.engine == c.engine && b.dist == c.dist && b.n == c.n)
+        else {
+            continue;
+        };
+        matched += 1;
+        let ratio = c.median_s / b.median_s.max(1e-12);
+        worst = worst.max(ratio);
+        let _ = writeln!(
+            out,
+            "{:<10} {:<8} {:>8} {:>12.6} {:>12.6} {:>8.3}",
+            c.engine, c.dist, c.n, b.median_s, c.median_s, ratio
+        );
+    }
+    let _ = writeln!(
+        out,
+        "matched {matched}/{} cases; worst ratio {worst:.3}",
+        current.cases.len()
+    );
+    (out, worst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(date: &str, median_s: f64) -> BenchRecord {
+        BenchRecord {
+            version: BENCH_VERSION,
+            date: date.to_string(),
+            seed: 1,
+            reps: 3,
+            threads: 4,
+            cases: vec![BenchCase {
+                engine: "parallel".into(),
+                dist: "uniform".into(),
+                n: 2000,
+                median_s,
+                points_per_s: 2000.0 / median_s,
+            }],
+        }
+    }
+
+    #[test]
+    fn civil_from_days_known_dates() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(18_993), (2022, 1, 1));
+        assert_eq!(civil_from_days(11_016), (2000, 2, 29)); // leap day
+        assert_eq!(civil_from_days(-1), (1969, 12, 31)); // pre-epoch
+        let today = date_string();
+        assert_eq!(today.len(), 8);
+        assert!(today.as_str() >= "20260101", "clock sanity: {today}");
+    }
+
+    #[test]
+    fn median_is_order_insensitive() {
+        assert_eq!(median(&mut [3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&mut [5.0]), 5.0);
+        assert_eq!(median(&mut [4.0, 1.0, 3.0, 2.0]), 3.0);
+    }
+
+    #[test]
+    fn record_round_trips_and_parses_strictly() {
+        let r = record("20260807", 0.25);
+        let parsed = BenchRecord::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(parsed, r);
+
+        // version mismatch is an error, not a guess
+        let bumped = r.to_json().to_string().replace("\"version\":1", "\"version\":9");
+        assert!(BenchRecord::parse(&bumped).unwrap_err().to_string().contains("version"));
+
+        // unknown fields are rejected (strict schema)
+        let extra = r
+            .to_json()
+            .to_string()
+            .replace("\"seed\":1", "\"seed\":1,\"frobnicate\":2");
+        assert!(BenchRecord::parse(&extra)
+            .unwrap_err()
+            .to_string()
+            .contains("frobnicate"));
+    }
+
+    #[test]
+    fn comparison_ratios_and_baseline_discovery() {
+        let base = record("20260801", 0.2);
+        let now = record("20260807", 0.3);
+        let (report, worst) = compare(&now, &base);
+        assert!((worst - 1.5).abs() < 1e-9, "worst={worst}");
+        assert!(report.contains("1.500"), "{report}");
+
+        let dir = std::env::temp_dir().join(format!("fmm2d_bench_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        base.save(&base.default_path(&dir)).unwrap();
+        now.save(&now.default_path(&dir)).unwrap();
+        // the newest record older than "today" is the baseline; the current
+        // day's own record is never its own baseline
+        let found = find_baseline(&dir, "20260807").unwrap();
+        assert!(found.ends_with("BENCH_20260801.json"), "{found:?}");
+        assert!(find_baseline(&dir, "20260801").is_none());
+        let loaded = BenchRecord::load(&found).unwrap();
+        assert_eq!(loaded, base);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn tiny_matrix_measures_both_engines() {
+        let opts = BenchSuiteOpts {
+            reps: 2,
+            threads: Some(2),
+            ..BenchSuiteOpts::default()
+        };
+        let r = run_matrix(&opts, &[(Distribution::Uniform, 300)]).unwrap();
+        assert_eq!(r.cases.len(), 2); // serial + parallel
+        for c in &r.cases {
+            assert!(c.median_s > 0.0 && c.points_per_s > 0.0);
+            assert_eq!(c.n, 300);
+        }
+        assert_eq!(r.reps, 2);
+        assert!(r.version == BENCH_VERSION && r.date.len() == 8);
+    }
+}

@@ -12,6 +12,7 @@
 //! calibrated cost model ([`crate::gpusim`]) fed with the measured work
 //! counts of the same tree (the substitution documented in DESIGN.md §1).
 
+pub mod benchsuite;
 pub mod figures;
 pub mod report;
 pub mod runner;

@@ -72,6 +72,11 @@ Validation & tools:
   dispatch-bench predicted vs measured time per candidate engine and the
                 auto choice, for single problems and batch groups (--full
                 --seed --threads --pin)
+  bench-suite   strict perf baseline: fixed matrix (sizes × distributions ×
+                serial/parallel), warmup + median of --reps R (default 5),
+                written to results/BENCH_<date>.json and compared against
+                the newest earlier record (or --baseline FILE) as per-case
+                ratios (--full --seed --threads --pin --out FILE)
   artifacts     list available AOT artifacts (needs --features pjrt)
 
 The default engine is `parallel` with all available cores; --threads T caps
@@ -319,9 +324,59 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
                 t.save(&format!("pool_bench_{i}"));
             }
         }
+        "bench-suite" => cmd_bench_suite(&args)?,
         "artifacts" => cmd_artifacts()?,
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => bail!("unknown command '{other}'; see `fmm2d help`"),
+    }
+    Ok(())
+}
+
+fn cmd_bench_suite(args: &Args) -> Result<()> {
+    use fmm2d::harness::benchsuite::{self, BenchRecord, BenchSuiteOpts};
+
+    args.check_known(&["full", "seed", "reps", "threads", "pin", "out", "baseline"])?;
+    let opts = BenchSuiteOpts {
+        full: args.flag("full"),
+        seed: args.get_or("seed", BenchSuiteOpts::default().seed)?,
+        reps: args.get_or("reps", BenchSuiteOpts::default().reps)?,
+        threads: threads_arg(args, None)?,
+        pin: args.flag("pin"),
+    };
+    if opts.reps == 0 {
+        bail!("--reps must be at least 1");
+    }
+    let record = benchsuite::run(&opts)?;
+    print!("{}", record.render());
+
+    let out_dir = std::path::Path::new("results");
+    let path = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => record.default_path(out_dir),
+    };
+    // resolve the baseline before writing, so today's record never
+    // compares against itself
+    let baseline = match args.get("baseline") {
+        Some(p) => Some(
+            BenchRecord::load(std::path::Path::new(p))
+                .with_context(|| format!("loading --baseline {p}"))?,
+        ),
+        None => match benchsuite::find_baseline(out_dir, &record.date) {
+            Some(found) => Some(
+                BenchRecord::load(&found)
+                    .with_context(|| format!("loading baseline {}", found.display()))?,
+            ),
+            None => None,
+        },
+    };
+    record.save(&path)?;
+    println!("[bench record saved to {}]", path.display());
+    match baseline {
+        Some(base) => {
+            let (report, _worst) = benchsuite::compare(&record, &base);
+            print!("{report}");
+        }
+        None => println!("no earlier BENCH_*.json found; this run is the baseline"),
     }
     Ok(())
 }
@@ -466,6 +521,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         if n > 30_000 {
             bail!("--check is O(N²); use n ≤ 30000");
         }
+        // structural validators (debug builds run these inside every
+        // topology::build; --check extends the coverage to release)
+        let topo = fmm2d::topology::build(&pts, &gs, levels, &opts.topology_options())?;
+        topo.pyramid.validate()?;
+        topo.connectivity.validate(&topo.pyramid)?;
+        println!("structural validators: pyramid + connectivity OK");
         let exact = fmm2d::direct::eval_symmetric(kernel, &pts, &gs);
         let (a, e): (Vec<f64>, Vec<f64>) = if kernel == Kernel::Harmonic {
             (
@@ -621,6 +682,17 @@ fn cmd_batch(args: &Args) -> Result<()> {
         let tol = if xla_involved { 1e-9 } else { 1e-12 };
         let mut worst = 0.0f64;
         for (i, pr) in problems.iter().enumerate() {
+            // structural validators on every problem's topology (debug
+            // builds also run them inside topology::build itself)
+            let levels = opts.fmm.cfg.levels_for(pr.points.len());
+            let topo = fmm2d::topology::build(
+                &pr.points,
+                &pr.gammas,
+                levels,
+                &opts.fmm.topology_options(),
+            )?;
+            topo.pyramid.validate()?;
+            topo.connectivity.validate(&topo.pyramid)?;
             let seq = fmm::evaluate(
                 &pr.points,
                 &pr.gammas,

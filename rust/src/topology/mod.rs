@@ -160,6 +160,14 @@ pub fn build(
         None => Connectivity::build_threaded(&pyramid, opts.theta, nt),
     };
     let connect_s = t.elapsed().as_secs_f64();
+    // Debug builds run the structural validators on every topology, so the
+    // whole debug test suite (the parity suites above all) doubles as
+    // validator coverage; release callers opt in through `--check`.
+    #[cfg(debug_assertions)]
+    {
+        pyramid.validate()?;
+        connectivity.validate(&pyramid)?;
+    }
     Ok(Topology {
         pyramid,
         connectivity,

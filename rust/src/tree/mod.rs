@@ -323,6 +323,98 @@ impl Pyramid {
         }
         out
     }
+
+    /// Structural validation of a fully built pyramid (DESIGN.md §8):
+    ///
+    /// * shape — `rects[l]` has `4^l` entries for every `l ≤ L`, and
+    ///   `starts` is a well-formed exclusive scan over the leaves
+    ///   (`starts[0] == 0`, monotone, `starts[4^L] == n`);
+    /// * geometry — every box rectangle is finite and non-degenerate, and
+    ///   each child rectangle lies inside its parent (the median splits
+    ///   tile, they never leak);
+    /// * containment — every particle of leaf `b` lies inside
+    ///   `rects[L][b]` (closed intervals: a particle on a shared split
+    ///   boundary belongs to both sides' closures);
+    /// * permutation — the `orig` indices are a bijection onto `0..n`, so
+    ///   [`Pyramid::unpermute`] is lossless.
+    ///
+    /// O(N + boxes) — cheap enough for the parity suites, which run it on
+    /// every debug-mode [`crate::topology::build`]; release callers reach
+    /// it through `--check`.
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(self.levels >= 1, "pyramid must have at least one level");
+        crate::ensure!(
+            self.rects.len() == self.levels + 1,
+            "rects has {} levels, expected {}",
+            self.rects.len(),
+            self.levels + 1
+        );
+        for (l, rl) in self.rects.iter().enumerate() {
+            crate::ensure!(
+                rl.len() == boxes_at_level(l),
+                "level {l} has {} rects, expected {}",
+                rl.len(),
+                boxes_at_level(l)
+            );
+            for (b, r) in rl.iter().enumerate() {
+                crate::ensure!(
+                    r.x0.is_finite() && r.x1.is_finite() && r.y0.is_finite() && r.y1.is_finite(),
+                    "box l={l} b={b} has non-finite bounds"
+                );
+                crate::ensure!(
+                    r.x1 >= r.x0 && r.y1 >= r.y0,
+                    "box l={l} b={b} is degenerate"
+                );
+                if l > 0 {
+                    let p = &self.rects[l - 1][parent_of(b)];
+                    crate::ensure!(
+                        r.x0 >= p.x0 && r.x1 <= p.x1 && r.y0 >= p.y0 && r.y1 <= p.y1,
+                        "box l={l} b={b} leaks outside its parent"
+                    );
+                }
+            }
+        }
+
+        let nl = self.n_leaves();
+        let n = self.particles.len();
+        crate::ensure!(
+            self.starts.len() == nl + 1,
+            "starts has {} entries, expected {}",
+            self.starts.len(),
+            nl + 1
+        );
+        crate::ensure!(self.starts[0] == 0, "starts[0] must be 0");
+        for b in 0..nl {
+            crate::ensure!(
+                self.starts[b] <= self.starts[b + 1],
+                "starts not monotone at leaf {b}"
+            );
+        }
+        crate::ensure!(
+            self.starts[nl] == n,
+            "starts ends at {}, expected the particle count {n}",
+            self.starts[nl]
+        );
+
+        for b in 0..nl {
+            let r = &self.rects[self.levels][b];
+            for (k, p) in self.leaf(b).iter().enumerate() {
+                crate::ensure!(
+                    r.contains(p.pos),
+                    "particle {k} of leaf {b} lies outside its box"
+                );
+            }
+        }
+
+        let mut seen = vec![false; n];
+        for p in &self.particles {
+            let o = p.orig as usize;
+            crate::ensure!(o < n, "orig index {o} out of range 0..{n}");
+            crate::ensure!(!seen[o], "orig index {o} appears twice");
+            seen[o] = true;
+        }
+        Ok(())
+    }
 }
 
 /// Split one box's particles into four quadrant boxes: one median split

@@ -39,6 +39,11 @@
 //! `tests/zero_spawn.rs` asserts that a full `evaluate` performs *zero*
 //! spawns once the pool exists.
 
+// This module owns the only `unsafe` in the crate (enforced by
+// `cargo xtask lint`); unsafe operations inside unsafe fns still need
+// explicit blocks so each one carries its own SAFETY argument.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
@@ -122,10 +127,14 @@ impl Accum {
 #[derive(Clone, Copy)]
 struct Job {
     data: *const (),
+    // SAFETY: `call` may only be invoked with the `data` it was paired
+    // with at construction (`call_erased::<F>` alongside a `*const F`),
+    // while the erased closure is still alive — both upheld because jobs
+    // never outlive the `broadcast` call that builds them.
     call: unsafe fn(*const (), usize, &mut WorkerScratch),
 }
 
-// Safety: the job pointer crosses threads, but `broadcast` does not return
+// SAFETY: the job pointer crosses threads, but `broadcast` does not return
 // until every worker is done with it, and the pointee is `Sync` (enforced
 // by the `F: Sync` bound at the only construction site).
 unsafe impl Send for Job {}
@@ -259,11 +268,17 @@ impl WorkerPool {
         F: Fn(usize, &mut WorkerScratch) + Sync,
     {
         /// Monomorphized trampoline recovering `F` from the erased pointer.
+        ///
+        /// SAFETY: callers must pass the `data` pointer this trampoline was
+        /// paired with, while the erased closure is still alive.
         unsafe fn call_erased<F>(data: *const (), id: usize, ws: &mut WorkerScratch)
         where
             F: Fn(usize, &mut WorkerScratch) + Sync,
         {
-            (*(data as *const F))(id, ws)
+            // SAFETY: `data` is the `&f` erased in `broadcast` below, which
+            // blocks until every worker has finished this epoch, so the
+            // closure is alive; `F: Sync` makes concurrent calls sound.
+            unsafe { (*(data as *const F))(id, ws) }
         }
 
         let participants = limit.clamp(1, self.n_workers);
@@ -515,6 +530,9 @@ fn worker_loop(shared: &Shared, id: usize, pin: bool) {
         };
         // A panicking task must not wedge the pool: catch it, finish the
         // epoch, and let the submitting caller re-raise.
+        // SAFETY: the job was installed by the `broadcast` call that is
+        // still blocked on this epoch, so `job.data` points at its live
+        // closure and `job.call` is the matching monomorphized trampoline.
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
             (job.call)(job.data, id, &mut scratch)
         }));
@@ -553,9 +571,10 @@ fn pin_current_thread(worker: usize) {
     }
     let mut mask = [0u64; MASK_WORDS];
     mask[core / 64] |= 1u64 << (core % 64);
+    // SAFETY: plain FFI call; the mask pointer is valid for the size
+    // passed, pid 0 means the calling thread, and the return value is
+    // deliberately ignored (best-effort pinning).
     unsafe {
-        // pid 0 = the calling thread; the return value is deliberately
-        // ignored (best-effort pinning)
         sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr());
     }
 }

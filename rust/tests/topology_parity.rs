@@ -128,6 +128,79 @@ fn gpu_model_stats_survive_the_parallel_build() {
 }
 
 #[test]
+fn structural_validators_pass_on_built_topologies() {
+    // explicit release-mode-style coverage: validate the exact structures
+    // the parity assertions above compare (debug builds additionally run
+    // the validators inside every topology::build)
+    let dists = [
+        Distribution::Uniform,
+        Distribution::Normal { sigma: 0.08 },
+        Distribution::Layer { sigma: 0.05 },
+    ];
+    for (di, dist) in dists.iter().enumerate() {
+        let mut r = Pcg64::seed_from_u64(950 + di as u64);
+        let (pts, gs) = dist.generate(3000, &mut r);
+        for levels in [1usize, 3] {
+            let topo =
+                topology::build(&pts, &gs, levels, &TopologyOptions::parallel(0.5, 4)).unwrap();
+            topo.pyramid.validate().unwrap();
+            topo.connectivity.validate(&topo.pyramid).unwrap();
+        }
+    }
+}
+
+#[test]
+fn structural_validators_reject_corrupted_topologies() {
+    let mut r = Pcg64::seed_from_u64(960);
+    let (pts, gs) = Distribution::Uniform.generate(2000, &mut r);
+    let topo = topology::build(&pts, &gs, 3, &TopologyOptions::serial(0.5)).unwrap();
+
+    // broken exclusive scan: starts no longer begins at 0
+    let mut pyr = topo.pyramid.clone();
+    pyr.starts[0] = 1;
+    assert!(pyr.validate().is_err(), "corrupted starts must be rejected");
+
+    // broken permutation: a duplicated orig index
+    let mut pyr = topo.pyramid.clone();
+    pyr.particles[0].orig = pyr.particles[1].orig;
+    assert!(pyr.validate().is_err(), "duplicate orig must be rejected");
+
+    // broken containment: a particle teleported outside its leaf box
+    let mut pyr = topo.pyramid.clone();
+    pyr.particles[0].pos = fmm2d::complex::C64::new(1e9, 1e9);
+    assert!(
+        pyr.validate().is_err(),
+        "escaped particle must be rejected"
+    );
+
+    // broken CSR: near data grows without its offsets
+    let mut con = topo.connectivity.clone();
+    con.near.data.push(0);
+    assert!(
+        con.validate(&topo.pyramid).is_err(),
+        "CSR length mismatch must be rejected"
+    );
+
+    // broken symmetry: a one-directional near entry
+    let mut con = topo.connectivity.clone();
+    let extra = {
+        // a box that is not already a near source of box 0: the farthest one
+        (topo.pyramid.n_leaves() - 1) as u32
+    };
+    if !con.near.sources(0).contains(&extra) {
+        let at = con.near.offsets[1] as usize;
+        con.near.data.insert(at, extra);
+        for off in con.near.offsets.iter_mut().skip(1) {
+            *off += 1;
+        }
+        assert!(
+            con.validate(&topo.pyramid).is_err(),
+            "asymmetric near field must be rejected"
+        );
+    }
+}
+
+#[test]
 fn topology_errors_are_results_not_panics() {
     let mut r = Pcg64::seed_from_u64(902);
     let (pts, gs) = Distribution::Uniform.generate(20, &mut r);

@@ -1,0 +1,15 @@
+// Planted violations for the `float-reduction` lint: iterator reductions
+// over floats whose association order depends on the iterator, breaking
+// bitwise reproducibility across worker counts. (Fixture — never compiled.)
+
+pub fn total_energy(parts: &[f64]) -> f64 {
+    parts.iter().sum::<f64>()
+}
+
+pub fn accumulate(parts: &[f64]) -> f64 {
+    parts.iter().fold(0.0, |acc, x| acc + x)
+}
+
+pub fn pairwise_max(parts: &[f64]) -> Option<f64> {
+    parts.iter().copied().reduce(f64::max)
+}

@@ -1,0 +1,24 @@
+// Clean twin of float_reduction/bad.rs: the worker-order merge idiom —
+// per-worker partials combined in a fixed, explicit order — plus integer
+// reductions, which are exact and allowed. (Fixture — never compiled.)
+
+pub fn total_energy(per_worker: &[Vec<f64>]) -> Vec<f64> {
+    let n = per_worker.first().map_or(0, Vec::len);
+    let mut acc = vec![0.0f64; n];
+    // worker-order merge: workers are visited 0..w, so the float addition
+    // order is identical for every thread count
+    for partial in per_worker {
+        for (a, x) in acc.iter_mut().zip(partial) {
+            *a += x;
+        }
+    }
+    acc
+}
+
+pub fn total_pairs(counts: &[u64]) -> u64 {
+    counts.iter().sum::<u64>()
+}
+
+pub fn total_boxes(counts: &[usize]) -> usize {
+    counts.iter().sum::<usize>()
+}

@@ -1,0 +1,25 @@
+// Planted violations for the `no-panic` lint: exactly three panicking
+// calls before the test module, plus panics *inside* #[cfg(test)] that
+// must NOT be flagged. (Fixture — never compiled.)
+
+pub fn lookup(xs: &[f64], i: usize) -> f64 {
+    let first = xs.first().unwrap();
+    let second = xs.get(1).expect("needs two entries");
+    if i >= xs.len() {
+        panic!("index {i} out of bounds");
+    }
+    first + second + xs[i]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn panics_in_tests_are_fine() {
+        let xs = vec![1.0, 2.0];
+        assert_eq!(xs.first().unwrap(), &1.0);
+        let _ = xs.get(1).expect("present");
+        if xs.len() > 9 {
+            unreachable!("test-only");
+        }
+    }
+}

@@ -1,0 +1,19 @@
+// Clean twin of no_panic/bad.rs: the same lookups with Result plumbing
+// and non-panicking combinators; unwraps only inside #[cfg(test)].
+// (Fixture — never compiled.)
+
+pub fn lookup(xs: &[f64], i: usize) -> Result<f64, String> {
+    let first = xs.first().ok_or_else(|| "empty input".to_string())?;
+    let second = xs.get(1).copied().unwrap_or(0.0);
+    let third = xs.get(i).ok_or_else(|| format!("index {i} out of bounds"))?;
+    Ok(first + second + third)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwraps_in_tests_are_fine() {
+        assert_eq!(super::lookup(&[1.0, 2.0], 0).unwrap(), 4.0);
+        super::lookup(&[], 0).expect_err("empty must fail");
+    }
+}

@@ -1,0 +1,17 @@
+// Planted violations for the `no-spawn` lint: direct spawns outside the
+// two pool modules. (Fixture — never compiled.)
+
+pub fn fan_out(work: Vec<usize>) -> Vec<usize> {
+    std::thread::scope(|s| {
+        let handles: Vec<_> = work.iter().map(|&w| s.spawn(move || w * 2)).collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+pub fn detach() {
+    std::thread::spawn(|| {});
+}
+
+pub fn named() {
+    let _ = std::thread::Builder::new().name("w".into()).spawn(|| {});
+}

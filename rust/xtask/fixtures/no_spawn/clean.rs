@@ -1,0 +1,13 @@
+// Clean twin of no_spawn/bad.rs: the same fan-out expressed on the
+// persistent worker pool — zero spawns. A string or comment mentioning
+// thread::spawn must not trip the lint either. (Fixture — never compiled.)
+
+pub fn fan_out(pool: &WorkerPool, work: &[usize], out: &mut [usize]) {
+    // the pool replaces thread::spawn entirely
+    pool.run_tasks(work.len(), |i, _ws| {
+        let doubled = work[i] * 2;
+        let _ = doubled;
+    });
+    let msg = "do not call thread::spawn here";
+    let _ = (msg, out);
+}

@@ -1,0 +1,15 @@
+// Waiver demonstration: a deliberate scoped spawn carrying the documented
+// waiver syntax, both same-line and preceding-comment forms.
+// (Fixture — never compiled.)
+
+pub fn reference_engine(work: Vec<usize>) -> Vec<usize> {
+    // xtask: allow(no-spawn) — reference engine, benchmarked against the pool
+    std::thread::scope(|s| {
+        let handles: Vec<_> = work.iter().map(|&w| s.spawn(move || w + 1)).collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+pub fn detached_helper() {
+    std::thread::spawn(|| {}); // xtask: allow(no-spawn) — fixture same-line form
+}

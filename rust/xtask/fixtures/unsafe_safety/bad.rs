@@ -1,0 +1,9 @@
+// Planted violation for the `unsafe-safety` lint: an unsafe block with no
+// SAFETY comment anywhere near it. Outside the allowlist this is denied
+// outright; inside util/pool.rs it is flagged for the missing comment.
+// (Fixture — never compiled.)
+
+pub fn read_raw(p: *const u32) -> u32 {
+    let v = unsafe { *p };
+    v
+}

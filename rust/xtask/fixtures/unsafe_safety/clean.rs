@@ -1,0 +1,10 @@
+// Clean twin of unsafe_safety/bad.rs: the same block with the required
+// SAFETY comment (valid only inside the util/pool.rs allowlist).
+// (Fixture — never compiled.)
+
+pub fn read_raw(p: *const u32) -> u32 {
+    // SAFETY: the caller guarantees `p` is non-null, aligned, and points
+    // to a live u32 for the duration of this call.
+    let v = unsafe { *p };
+    v
+}

@@ -1,0 +1,251 @@
+//! A minimal line-oriented Rust lexer for the lint pass.
+//!
+//! The offline toolchain has no `syn`, so the lints run on a token-level
+//! view instead of an AST: for every source line we produce the line's
+//! *code* with comments and string/char literals blanked out (so substring
+//! patterns cannot false-positive inside a string or a doc comment) and,
+//! separately, the text of any *comment* on that line (so the lints can
+//! recognise `// SAFETY:` annotations and `xtask: allow(...)` waivers).
+//!
+//! Handled: line comments, nested block comments, plain/byte strings with
+//! escapes, raw strings `r#"…"#` (any hash depth, `b` prefix), char
+//! literals, lifetimes. Multi-line strings and block comments carry their
+//! state across lines.
+
+/// One source line, split into its code and comment parts.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// The line with comments and literal *contents* removed.
+    pub code: String,
+    /// Concatenated text of all comments on the line.
+    pub comment: String,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    Code,
+    LineComment,
+    /// Block comment with nesting depth.
+    Block(u32),
+    /// Plain or byte string literal.
+    Str,
+    /// Raw string literal with its hash count.
+    RawStr(u32),
+}
+
+/// Split `src` into lexed [`Line`]s.
+pub fn lex(src: &str) -> Vec<Line> {
+    let b: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = Line::default();
+    let mut state = State::Code;
+    let mut i = 0usize;
+    // true when the previous code char could end an identifier (so a
+    // following `r"` is not a raw-string prefix, e.g. in `attr "x"` split
+    // weirdly — conservative but safe)
+    let mut prev_ident = false;
+
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            lines.push(std::mem::take(&mut cur));
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            prev_ident = false;
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '/' && b.get(i + 1) == Some(&'/') {
+                    state = State::LineComment;
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && b.get(i + 1) == Some(&'*') {
+                    state = State::Block(1);
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    state = State::Str;
+                    cur.code.push(' ');
+                    i += 1;
+                    prev_ident = false;
+                    continue;
+                }
+                // raw / byte string prefixes: r", r#…", b", br#…"
+                if !prev_ident && (c == 'r' || c == 'b') {
+                    let mut j = i + 1;
+                    if c == 'b' && b.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let mut hashes = 0u32;
+                    while b.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    let is_raw = c == 'r' || (c == 'b' && b.get(i + 1) == Some(&'r'));
+                    if b.get(j) == Some(&'"') && (is_raw || hashes == 0) {
+                        state = if is_raw { State::RawStr(hashes) } else { State::Str };
+                        cur.code.push(' ');
+                        i = j + 1;
+                        continue;
+                    }
+                }
+                // char literal vs lifetime
+                if c == '\'' {
+                    if b.get(i + 1) == Some(&'\\') {
+                        // escaped char literal: skip to the closing quote
+                        let mut j = i + 2;
+                        if j < b.len() {
+                            j += 1; // the escaped character itself
+                        }
+                        while j < b.len() && b[j] != '\'' && b[j] != '\n' {
+                            j += 1;
+                        }
+                        cur.code.push(' ');
+                        i = (j + 1).min(b.len());
+                        prev_ident = false;
+                        continue;
+                    }
+                    if b.get(i + 2) == Some(&'\'') && b.get(i + 1) != Some(&'\'') {
+                        cur.code.push(' ');
+                        i += 3;
+                        prev_ident = false;
+                        continue;
+                    }
+                    // lifetime or label: keep as code
+                    cur.code.push(c);
+                    prev_ident = false;
+                    i += 1;
+                    continue;
+                }
+                cur.code.push(c);
+                prev_ident = c.is_alphanumeric() || c == '_';
+                i += 1;
+            }
+            State::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            State::Block(depth) => {
+                if c == '/' && b.get(i + 1) == Some(&'*') {
+                    state = State::Block(depth + 1);
+                    i += 2;
+                } else if c == '*' && b.get(i + 1) == Some(&'/') {
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::Block(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    // a `\<newline>` continuation still ends the physical
+                    // line — keep the Line vector aligned with the file
+                    if b.get(i + 1) == Some(&'\n') {
+                        lines.push(std::mem::take(&mut cur));
+                    }
+                    i += 2; // skip the escaped char (incl. \" and \\)
+                } else if c == '"' {
+                    state = State::Code;
+                    cur.code.push(' ');
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    let mut ok = true;
+                    for k in 0..hashes as usize {
+                        if b.get(i + 1 + k) != Some(&'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        state = State::Code;
+                        cur.code.push(' ');
+                        i += 1 + hashes as usize;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+    lines.push(cur);
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        lex(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let ls = lex("let x = \"unsafe // not code\"; // unsafe comment\n");
+        assert!(!ls[0].code.contains("unsafe"));
+        assert!(ls[0].comment.contains("unsafe comment"));
+        assert!(ls[0].code.contains("let x ="));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let ls = lex("a /* x /* y */ z */ b\nc\n");
+        assert_eq!(ls[0].code.replace(' ', ""), "ab");
+        assert!(ls[0].comment.contains('y'));
+        assert_eq!(ls[1].code, "c");
+    }
+
+    #[test]
+    fn multiline_string_spans_lines() {
+        let ls = codes("let s = \"line1\nthread::spawn\n\"; end();\n");
+        assert!(!ls.concat().contains("thread::spawn"));
+        assert!(ls[2].contains("end()"));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let ls = codes("let s = r#\"a \" b panic!( \"# ; after();\n");
+        assert!(!ls[0].contains("panic!"));
+        assert!(ls[0].contains("after()"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let ls = codes("fn f<'a>(x: &'a str) { let c = '\\n'; let q = '\"'; g(); }\n");
+        assert!(ls[0].contains("<'a>"));
+        assert!(ls[0].contains("g()"));
+        // the quote char literal must not open a string state
+        assert!(ls[0].contains("let q ="));
+    }
+
+    #[test]
+    fn string_line_continuation_keeps_line_count() {
+        let src = "let s = \"part one \\\n    part two\";\nnext();\n";
+        let ls = lex(src);
+        // 3 physical lines + the trailing empty slot after the last \n
+        assert_eq!(ls.len(), 4);
+        assert_eq!(ls[2].code, "next();");
+    }
+
+    #[test]
+    fn line_comment_ends_at_newline() {
+        let ls = lex("// only comment\ncode();\n");
+        assert!(ls[0].code.trim().is_empty());
+        assert_eq!(ls[1].code, "code();");
+    }
+}

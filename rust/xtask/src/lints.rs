@@ -1,0 +1,529 @@
+//! The repo-specific lint catalog (see DESIGN.md §8).
+//!
+//! Five lints, each enforcing an invariant the codebase promises
+//! informally and the test suite checks only by example:
+//!
+//! * `no-spawn` — no `thread::spawn` / `thread::scope` / `thread::Builder`
+//!   outside `util/pool.rs` and `util/threadpool.rs` (the source-level twin
+//!   of `tests/zero_spawn.rs`);
+//! * `unsafe-safety` — every `unsafe` carries a nearby `// SAFETY:`
+//!   comment, and `unsafe` outside `util/pool.rs` is denied outright;
+//! * `no-panic` — no `unwrap`/`expect`/`panic!`-family calls in the
+//!   engine/topology/dispatch hot paths outside `#[cfg(test)]` (keeps the
+//!   Result plumbing honest);
+//! * `float-reduction` — no iterator float reductions (`sum::<f64>`,
+//!   `fold(0.0`, `.reduce(`) in the parallel-engine files, where bitwise
+//!   reproducibility requires the explicit worker-order `merge` loops;
+//! * `no-new-deps` — the `[dependencies]` sections of every manifest stay
+//!   empty except the in-tree optional `xla` stub; `dev-`/`build-`
+//!   dependencies are denied everywhere.
+//!
+//! Waiver syntax (same line or in the comment/attribute block immediately
+//! above the flagged line):
+//!
+//! ```text
+//! // xtask: allow(no-spawn) — reference engine, measured against the pool
+//! std::thread::scope(|s| { ... })
+//! ```
+//!
+//! Being token-level (no AST), the lints have known lexical limits: a
+//! float reduction without a turbofish (`.sum()` on an f64 iterator) or a
+//! renamed import (`use std::thread as t`) would slip through. The
+//! fixture corpus under `fixtures/` pins the behaviour that *is* promised:
+//! every lint flags its planted violation and passes the clean twin.
+
+use std::path::Path;
+
+use crate::lexer::{lex, Line};
+
+/// One lint violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Lint name as used in `xtask: allow(...)`.
+    pub lint: &'static str,
+    /// Path relative to the repo root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+}
+
+/// Files allowed to spawn threads (the two pool implementations).
+const SPAWN_ALLOWLIST: [&str; 2] = ["rust/src/util/pool.rs", "rust/src/util/threadpool.rs"];
+/// Files allowed to contain `unsafe` at all.
+const UNSAFE_ALLOWLIST: [&str; 1] = ["rust/src/util/pool.rs"];
+/// Hot-path directories where panicking calls are denied.
+const NO_PANIC_DIRS: [&str; 3] = ["rust/src/fmm/", "rust/src/topology/", "rust/src/dispatch/"];
+/// Parallel-engine files where iterator float reductions are denied.
+const FLOAT_REDUCTION_FILES: [&str; 5] = [
+    "rust/src/fmm/parallel.rs",
+    "rust/src/tree/mod.rs",
+    "rust/src/connectivity/mod.rs",
+    "rust/src/topology/mod.rs",
+    "rust/src/batch/runner.rs",
+];
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Does `code` contain `word` delimited by non-identifier characters?
+fn has_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(p) = code[start..].find(word) {
+        let a = start + p;
+        let b = a + word.len();
+        let before_ok = a == 0 || !is_ident(bytes[a - 1]);
+        let after_ok = b >= code.len() || !is_ident(bytes[b]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = a + 1;
+    }
+    false
+}
+
+/// Is the finding at `idx` waived — `xtask: allow(<lint>)` on the same
+/// line, or in the contiguous block of comments/attributes directly above?
+fn waived(lines: &[Line], idx: usize, lint: &str) -> bool {
+    let tag = format!("xtask: allow({lint})");
+    for j in (0..=idx).rev() {
+        let l = &lines[j];
+        if l.comment.contains(&tag) {
+            return true;
+        }
+        if j == idx {
+            continue; // the flagged line itself may carry code
+        }
+        let t = l.code.trim();
+        let comment_only = t.is_empty() && !l.comment.is_empty();
+        let attribute = t.starts_with("#[") || t.starts_with("#!");
+        if !(comment_only || attribute) {
+            return false;
+        }
+    }
+    false
+}
+
+/// Is there a `SAFETY:` comment on this line or within the `window` lines
+/// above it?
+fn has_safety_comment(lines: &[Line], idx: usize, window: usize) -> bool {
+    let lo = idx.saturating_sub(window);
+    lines[lo..=idx].iter().any(|l| l.comment.contains("SAFETY:"))
+}
+
+/// Index of the first line opening a `#[cfg(test)]` section, if any (test
+/// modules sit at the end of every file in this tree).
+fn test_section_start(lines: &[Line]) -> usize {
+    lines
+        .iter()
+        .position(|l| l.code.contains("#[cfg(test)]"))
+        .unwrap_or(lines.len())
+}
+
+/// Run the four source lints over one lexed `.rs` file.
+pub fn lint_source(rel: &str, lines: &[Line]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let spawn_allowed = SPAWN_ALLOWLIST.iter().any(|f| rel == *f);
+    let unsafe_allowed = UNSAFE_ALLOWLIST.iter().any(|f| rel == *f);
+    let panic_scoped = NO_PANIC_DIRS.iter().any(|d| rel.starts_with(d));
+    let float_scoped = FLOAT_REDUCTION_FILES.iter().any(|f| rel == *f);
+    let tests_from = test_section_start(lines);
+
+    for (i, l) in lines.iter().enumerate() {
+        let code = l.code.as_str();
+        let lineno = i + 1;
+
+        // no-spawn
+        if !spawn_allowed {
+            for pat in ["thread::spawn", "thread::scope", "thread::Builder"] {
+                if code.contains(pat) && !waived(lines, i, "no-spawn") {
+                    out.push(Finding {
+                        lint: "no-spawn",
+                        file: rel.to_string(),
+                        line: lineno,
+                        message: format!(
+                            "`{pat}` outside util/pool.rs and util/threadpool.rs \
+                             (production paths must run on the persistent pool)"
+                        ),
+                    });
+                    break;
+                }
+            }
+        }
+
+        // unsafe-safety
+        if has_word(code, "unsafe") {
+            if !unsafe_allowed && !waived(lines, i, "unsafe-safety") {
+                out.push(Finding {
+                    lint: "unsafe-safety",
+                    file: rel.to_string(),
+                    line: lineno,
+                    message: "new `unsafe` outside util/pool.rs is denied".to_string(),
+                });
+            } else if unsafe_allowed
+                && !has_safety_comment(lines, i, 5)
+                && !waived(lines, i, "unsafe-safety")
+            {
+                out.push(Finding {
+                    lint: "unsafe-safety",
+                    file: rel.to_string(),
+                    line: lineno,
+                    message: "`unsafe` without a `// SAFETY:` comment within 5 lines"
+                        .to_string(),
+                });
+            }
+        }
+
+        // no-panic (hot paths, outside #[cfg(test)])
+        if panic_scoped && i < tests_from {
+            for pat in [
+                ".unwrap()",
+                ".expect(",
+                "panic!(",
+                "unreachable!(",
+                "todo!(",
+                "unimplemented!(",
+            ] {
+                if code.contains(pat) && !waived(lines, i, "no-panic") {
+                    out.push(Finding {
+                        lint: "no-panic",
+                        file: rel.to_string(),
+                        line: lineno,
+                        message: format!(
+                            "`{pat}` in a hot path — plumb a Result instead \
+                             (or waive with an argument for infallibility)"
+                        ),
+                    });
+                    break;
+                }
+            }
+        }
+
+        // float-reduction (parallel-engine files)
+        if float_scoped {
+            for pat in [
+                "sum::<f64>",
+                "sum::<C64>",
+                ".fold(0.0",
+                ".fold(C64::new(",
+                ".reduce(",
+            ] {
+                if code.contains(pat) && !waived(lines, i, "float-reduction") {
+                    out.push(Finding {
+                        lint: "float-reduction",
+                        file: rel.to_string(),
+                        line: lineno,
+                        message: format!(
+                            "`{pat}` in a parallel-engine file — floating-point \
+                             reductions must use the explicit worker-order merge loops \
+                             so results stay bitwise reproducible"
+                        ),
+                    });
+                    break;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Manifest keys allowed in dependency sections: (file, section, key).
+const DEP_ALLOWLIST: [(&str, &str, &str); 1] = [("rust/Cargo.toml", "dependencies", "xla")];
+
+/// Run the `no-new-deps` lint over one `Cargo.toml`.
+pub fn lint_manifest(rel: &str, text: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        let waived_here = raw.contains("xtask: allow(no-new-deps)");
+        if line.starts_with('[') && line.ends_with(']') {
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let is_dep_section = section == "dependencies"
+            || section == "dev-dependencies"
+            || section == "build-dependencies"
+            || section.ends_with(".dependencies")
+            || section.ends_with(".dev-dependencies")
+            || section.ends_with(".build-dependencies");
+        if !is_dep_section || line.is_empty() {
+            continue;
+        }
+        let key = line
+            .split('=')
+            .next()
+            .unwrap_or("")
+            .trim()
+            .trim_matches('"')
+            .split('.')
+            .next()
+            .unwrap_or("")
+            .to_string();
+        if key.is_empty() {
+            continue;
+        }
+        let allowed = DEP_ALLOWLIST
+            .iter()
+            .any(|(f, s, k)| rel == *f && section == *s && key == *k);
+        if !allowed && !waived_here {
+            out.push(Finding {
+                lint: "no-new-deps",
+                file: rel.to_string(),
+                line: i + 1,
+                message: format!(
+                    "dependency `{key}` in [{section}] — the tree builds with zero \
+                     external crates; vendor in-tree or gate behind a feature stub"
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// Walk the repo and run every lint. `root` is the repository root (the
+/// directory holding the workspace `Cargo.toml`).
+pub fn run(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+
+    let src = root.join("rust/src");
+    let mut rs_files = Vec::new();
+    collect_rs(&src, &mut rs_files)?;
+    rs_files.sort();
+    for path in rs_files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = std::fs::read_to_string(&path)?;
+        findings.extend(lint_source(&rel, &lex(&text)));
+    }
+
+    for rel in [
+        "Cargo.toml",
+        "rust/Cargo.toml",
+        "rust/xla-stub/Cargo.toml",
+        "rust/xtask/Cargo.toml",
+    ] {
+        let path = root.join(rel);
+        if path.exists() {
+            findings.extend(lint_manifest(rel, &std::fs::read_to_string(&path)?));
+        }
+    }
+    Ok(findings)
+}
+
+/// Recursively collect `.rs` files (skipping nothing inside `rust/src` —
+/// fixtures live outside it).
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn lints_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.lint).collect()
+    }
+
+    // -- no-spawn ---------------------------------------------------------
+
+    #[test]
+    fn no_spawn_flags_bad_fixture() {
+        let src = include_str!("../fixtures/no_spawn/bad.rs");
+        let f = lint_source("rust/src/harness/fixture.rs", &lex(src));
+        assert!(
+            f.iter().filter(|f| f.lint == "no-spawn").count() >= 2,
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn no_spawn_passes_clean_fixture() {
+        let src = include_str!("../fixtures/no_spawn/clean.rs");
+        let f = lint_source("rust/src/harness/fixture.rs", &lex(src));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn no_spawn_honours_waivers() {
+        let src = include_str!("../fixtures/no_spawn/waived.rs");
+        let f = lint_source("rust/src/harness/fixture.rs", &lex(src));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn no_spawn_allowlists_the_pools() {
+        let src = include_str!("../fixtures/no_spawn/bad.rs");
+        let f = lint_source("rust/src/util/pool.rs", &lex(src));
+        assert!(!lints_of(&f).contains(&"no-spawn"), "{f:?}");
+    }
+
+    // -- unsafe-safety ----------------------------------------------------
+
+    #[test]
+    fn unsafe_outside_allowlist_is_denied() {
+        let src = include_str!("../fixtures/unsafe_safety/bad.rs");
+        let f = lint_source("rust/src/fmm/fixture.rs", &lex(src));
+        assert!(lints_of(&f).contains(&"unsafe-safety"), "{f:?}");
+    }
+
+    #[test]
+    fn unsafe_in_pool_requires_safety_comment() {
+        let bad = include_str!("../fixtures/unsafe_safety/bad.rs");
+        let f = lint_source("rust/src/util/pool.rs", &lex(bad));
+        assert!(
+            f.iter()
+                .any(|f| f.lint == "unsafe-safety" && f.message.contains("SAFETY")),
+            "{f:?}"
+        );
+        let clean = include_str!("../fixtures/unsafe_safety/clean.rs");
+        let f = lint_source("rust/src/util/pool.rs", &lex(clean));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn unsafe_in_a_string_is_not_flagged() {
+        let f = lint_source(
+            "rust/src/fmm/fixture.rs",
+            &lex("let s = \"unsafe\"; // mentions unsafe\n"),
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    // -- no-panic ---------------------------------------------------------
+
+    #[test]
+    fn no_panic_flags_bad_fixture_outside_tests_only() {
+        let src = include_str!("../fixtures/no_panic/bad.rs");
+        let f = lint_source("rust/src/fmm/fixture.rs", &lex(src));
+        let n = f.iter().filter(|f| f.lint == "no-panic").count();
+        // three planted violations before #[cfg(test)], none after
+        assert_eq!(n, 3, "{f:?}");
+    }
+
+    #[test]
+    fn no_panic_passes_clean_fixture() {
+        let src = include_str!("../fixtures/no_panic/clean.rs");
+        let f = lint_source("rust/src/fmm/fixture.rs", &lex(src));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn no_panic_only_applies_to_hot_paths() {
+        let src = include_str!("../fixtures/no_panic/bad.rs");
+        let f = lint_source("rust/src/harness/fixture.rs", &lex(src));
+        assert!(!lints_of(&f).contains(&"no-panic"), "{f:?}");
+    }
+
+    // -- float-reduction --------------------------------------------------
+
+    #[test]
+    fn float_reduction_flags_bad_fixture() {
+        let src = include_str!("../fixtures/float_reduction/bad.rs");
+        let f = lint_source("rust/src/fmm/parallel.rs", &lex(src));
+        assert!(
+            f.iter().filter(|f| f.lint == "float-reduction").count() >= 2,
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn float_reduction_passes_clean_fixture() {
+        let src = include_str!("../fixtures/float_reduction/clean.rs");
+        let f = lint_source("rust/src/fmm/parallel.rs", &lex(src));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn float_reduction_only_applies_to_engine_files() {
+        let src = include_str!("../fixtures/float_reduction/bad.rs");
+        let f = lint_source("rust/src/harness/fixture.rs", &lex(src));
+        assert!(!lints_of(&f).contains(&"float-reduction"), "{f:?}");
+    }
+
+    // -- no-new-deps ------------------------------------------------------
+
+    #[test]
+    fn no_new_deps_flags_bad_manifest() {
+        let text = include_str!("../fixtures/no_new_deps/bad.toml");
+        let f = lint_manifest("rust/Cargo.toml", text);
+        assert!(
+            f.iter().filter(|f| f.lint == "no-new-deps").count() >= 2,
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn no_new_deps_passes_clean_manifest() {
+        let text = include_str!("../fixtures/no_new_deps/clean.toml");
+        let f = lint_manifest("rust/Cargo.toml", text);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn no_new_deps_xla_only_allowed_in_fmm2d() {
+        let text = include_str!("../fixtures/no_new_deps/clean.toml");
+        let f = lint_manifest("rust/xtask/Cargo.toml", text);
+        assert!(lints_of(&f).contains(&"no-new-deps"), "{f:?}");
+    }
+
+    // -- waiver mechanics -------------------------------------------------
+
+    #[test]
+    fn waiver_applies_through_attributes_but_not_past_code() {
+        let src = "\
+// xtask: allow(no-spawn) — fixture
+#[inline]
+std::thread::spawn(|| ());
+";
+        let f = lint_source("rust/src/harness/fixture.rs", &lex(src));
+        assert!(f.is_empty(), "{f:?}");
+
+        let src = "\
+// xtask: allow(no-spawn) — fixture
+let x = 1;
+std::thread::spawn(|| ());
+";
+        let f = lint_source("rust/src/harness/fixture.rs", &lex(src));
+        assert!(lints_of(&f).contains(&"no-spawn"), "{f:?}");
+    }
+
+    #[test]
+    fn waiver_is_lint_specific() {
+        let src = "\
+// xtask: allow(no-panic) — wrong lint name
+std::thread::spawn(|| ());
+";
+        let f = lint_source("rust/src/harness/fixture.rs", &lex(src));
+        assert!(lints_of(&f).contains(&"no-spawn"), "{f:?}");
+    }
+
+    // -- the real tree ----------------------------------------------------
+
+    #[test]
+    fn the_shipped_tree_is_clean() {
+        // xtask always compiles from its in-tree location, so the repo
+        // root is two levels up from this crate's manifest.
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("../..")
+            .canonicalize()
+            .expect("repo root");
+        let f = run(&root).expect("lint walk");
+        assert!(f.is_empty(), "lint findings on the shipped tree: {f:#?}");
+    }
+}

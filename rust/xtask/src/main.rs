@@ -1,0 +1,153 @@
+//! `cargo xtask` — repo-specific dev tooling.
+//!
+//! The only subcommand today is `lint`, the static-analysis pass described
+//! in DESIGN.md §8 (invoke as `cargo xtask lint` via the alias in
+//! `.cargo/config.toml`, or `cargo run -p xtask -- lint`):
+//!
+//! ```text
+//! cargo xtask lint [--json] [--root PATH]
+//! ```
+//!
+//! Exit code 0 when the tree is clean, 1 with a report (human-readable by
+//! default, a machine-readable JSON document with `--json`) otherwise.
+
+mod lexer;
+mod lints;
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => lint(&args[1..]),
+        Some("--help" | "-h" | "help") | None => {
+            print!("{USAGE}");
+            ExitCode::SUCCESS
+        }
+        Some(other) => {
+            eprintln!("unknown xtask subcommand '{other}'\n\n{USAGE}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "\
+usage: cargo xtask <command>
+
+commands:
+  lint [--json] [--root PATH]   run the repo lint pass (DESIGN.md \u{a7}8)
+                                  --json   machine-readable report on stdout
+                                  --root   repo root (default: auto-detected)
+";
+
+fn lint(args: &[String]) -> ExitCode {
+    let mut json = false;
+    let mut root: Option<PathBuf> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--json" => json = true,
+            "--root" => match it.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("--root needs a value");
+                    return ExitCode::FAILURE;
+                }
+            },
+            other => {
+                eprintln!("unknown lint option '{other}'\n\n{USAGE}");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    // xtask always compiles in-tree, so the repo root defaults to two
+    // levels above this crate's manifest — stable no matter where the
+    // `cargo xtask` invocation happens inside the workspace.
+    let root = root.unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../.."));
+
+    let findings = match lints::run(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("xtask lint: cannot walk {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+
+    if json {
+        println!("{}", report_json(&findings));
+    } else if findings.is_empty() {
+        println!("xtask lint: clean");
+    } else {
+        for f in &findings {
+            println!("{}:{}: [{}] {}", f.file, f.line, f.lint, f.message);
+        }
+        println!(
+            "xtask lint: {} finding(s) — waive with `// xtask: allow(<lint>) — reason`",
+            findings.len()
+        );
+    }
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+/// The machine-readable report: a single JSON object, schema version 1.
+fn report_json(findings: &[lints::Finding]) -> String {
+    let mut s = String::from("{\"version\":1,\"ok\":");
+    s.push_str(if findings.is_empty() { "true" } else { "false" });
+    s.push_str(",\"findings\":[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str("{\"lint\":");
+        json_str(&mut s, f.lint);
+        s.push_str(",\"file\":");
+        json_str(&mut s, &f.file);
+        s.push_str(&format!(",\"line\":{}", f.line));
+        s.push_str(",\"message\":");
+        json_str(&mut s, &f.message);
+        s.push('}');
+    }
+    s.push_str("]}");
+    s
+}
+
+fn json_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_report_is_parseable_shape() {
+        let f = vec![lints::Finding {
+            lint: "no-spawn",
+            file: "rust/src/x.rs".into(),
+            line: 3,
+            message: "a \"quoted\" message".into(),
+        }];
+        let s = report_json(&f);
+        assert!(s.starts_with("{\"version\":1,\"ok\":false"));
+        assert!(s.contains("\\\"quoted\\\""));
+        assert!(s.ends_with("]}"));
+        assert_eq!(report_json(&[]), "{\"version\":1,\"ok\":true,\"findings\":[]}");
+    }
+}
