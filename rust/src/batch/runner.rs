@@ -18,7 +18,7 @@
 //! interleaving differs.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Mutex};
 use std::time::Instant;
 
 use crate::complex::C64;
@@ -29,6 +29,7 @@ use crate::topology::{self, TopologyOptions};
 use crate::tree::Pyramid;
 use crate::util::error::Result;
 use crate::util::pool::{note_spawn, WorkerPool};
+use crate::util::sched::Graph;
 
 use super::plan::{BatchGroup, BatchPlan, ProblemShape};
 
@@ -51,6 +52,16 @@ pub enum BatchEngine {
     /// back to the per-problem pooled engine so a lone large problem still
     /// uses every core. Either way, the batch spawns no threads per group.
     Parallel,
+    /// The task-graph scheduler ([`crate::util::sched`]): the whole batch
+    /// becomes one dependency graph — a topology node feeding a compute
+    /// node per problem — run as a single dispatch on the persistent
+    /// pool, so problem *i*'s computational phase overlaps problem *j*'s
+    /// topology build with zero producer threads (the generalized form of
+    /// the overlapped prologue). Per-problem results are identical to the
+    /// serial baseline (independent problems, serial driver per compute
+    /// task). Narrow groups on the sequential fallback run the
+    /// per-problem task-graph engine.
+    TaskGraph,
     /// The XLA/PJRT runtime: one batched `run_raw` per group (needs the
     /// `pjrt` feature and artifacts compiled with a batch dimension).
     Xla,
@@ -70,6 +81,7 @@ impl From<Engine> for BatchEngine {
         match e {
             Engine::Serial => BatchEngine::Serial,
             Engine::Parallel => BatchEngine::Parallel,
+            Engine::TaskGraph => BatchEngine::TaskGraph,
             Engine::Xla => BatchEngine::Xla,
             Engine::Auto => BatchEngine::Auto,
         }
@@ -189,7 +201,9 @@ pub fn run(problems: &[BatchProblem], opts: &BatchOptions) -> Result<BatchOutput
     // (and, on the sequential prologue, every topology build) fans out on
     // it, so the batch performs no per-group thread spawns. A fully
     // single-threaded configuration never touches (or lazily builds) it.
-    let wants_pool = group_engines.contains(&BatchEngine::Parallel)
+    let wants_pool = group_engines
+        .iter()
+        .any(|e| matches!(e, BatchEngine::Parallel | BatchEngine::TaskGraph))
         && opts
             .fmm
             .effective_threads()
@@ -198,9 +212,25 @@ pub fn run(problems: &[BatchProblem], opts: &BatchOptions) -> Result<BatchOutput
     let pool = wants_pool.then(|| opts.fmm.shared_pool());
 
     // ---- topological phase + dispatch ---------------------------------
+    let all_taskgraph = !group_engines.is_empty()
+        && group_engines.iter().all(|e| *e == BatchEngine::TaskGraph);
     let all_parallel = !group_engines.is_empty()
         && group_engines.iter().all(|e| *e == BatchEngine::Parallel);
-    if all_parallel && opts.overlap && problems.len() > 1 {
+    let graph_pool = (all_taskgraph && opts.overlap && problems.len() > 1)
+        .then(|| pool.as_deref())
+        .flatten();
+    if let Some(graph_pool) = graph_pool {
+        run_taskgraph(
+            problems,
+            &plan,
+            opts,
+            graph_pool,
+            &mut potentials,
+            &mut counts,
+            &mut stats,
+            &mut times_per_problem,
+        )?;
+    } else if all_parallel && opts.overlap && problems.len() > 1 {
         run_overlapped(
             problems,
             &plan,
@@ -310,6 +340,7 @@ fn resolve_engines(
         engines.push(match decision.choice {
             EngineChoice::Serial => BatchEngine::Serial,
             EngineChoice::Pooled { .. } => BatchEngine::Parallel,
+            EngineChoice::TaskGraph { .. } => BatchEngine::TaskGraph,
             EngineChoice::Xla => BatchEngine::Xla,
         });
         decisions.push(decision);
@@ -346,6 +377,92 @@ fn build_problem_topology(
     t.0[Phase::Sort as usize] = topo.sort_s;
     t.0[Phase::Connect as usize] = topo.connect_s;
     Ok(((topo.pyramid, topo.connectivity), t))
+}
+
+/// The task-graph batch path: the whole batch as **one dependency graph**
+/// on the persistent pool — per problem, a topology node feeding a
+/// compute node — so problem *i*'s computational phase overlaps problem
+/// *j*'s topology build through the same dependency-gated ready queue the
+/// single-problem task-graph engine uses, with zero producer threads
+/// (contrast [`run_overlapped`]'s scoped spawns). Problems are
+/// independent, the topology build is the bit-identical serial engine and
+/// each compute task is the serial driver, so per-problem results are
+/// bitwise-identical to the sequential baseline under any schedule.
+///
+/// Memory: the graph does not throttle producers, so worst-case residency
+/// matches the sequential prologue (every tree at once); each problem's
+/// tree is dropped as soon as its compute task finishes.
+#[allow(clippy::too_many_arguments)]
+fn run_taskgraph(
+    problems: &[BatchProblem],
+    plan: &BatchPlan,
+    opts: &BatchOptions,
+    pool: &WorkerPool,
+    potentials: &mut [Vec<C64>],
+    counts: &mut WorkCounts,
+    stats: &mut BatchStats,
+    times_per_problem: &mut [PhaseTimes],
+) -> Result<()> {
+    type Built = ((Pyramid, Connectivity), PhaseTimes);
+    type Out = (Vec<C64>, PhaseTimes, WorkCounts);
+    let built: Vec<Mutex<Option<Result<Built>>>> =
+        (0..problems.len()).map(|_| Mutex::new(None)).collect();
+    let done: Vec<Mutex<Option<Out>>> = (0..problems.len()).map(|_| Mutex::new(None)).collect();
+    // dispatch order: group by group, as the other prologues build
+    let order: Vec<usize> = plan
+        .groups
+        .iter()
+        .flat_map(|g| g.members.iter().copied())
+        .collect();
+    let nt = opts
+        .fmm
+        .effective_threads()
+        .min(pool.n_workers())
+        .max(1);
+    {
+        let (built, done, fmm_opts) = (&built, &done, &opts.fmm);
+        let mut g = Graph::new();
+        for &i in &order {
+            let topo = g.node(&[]);
+            g.add_task(topo, move |_ws| {
+                // serial per-problem build: topology parallelism would
+                // only contend with the compute tasks this build overlaps
+                let b = build_problem_topology(&problems[i], fmm_opts, 1, None);
+                *built[i].lock().unwrap() = Some(b);
+            });
+            let compute = g.node(&[topo]);
+            g.add_task(compute, move |_ws| {
+                let b = built[i].lock().unwrap().take();
+                match b {
+                    Some(Ok((tree, topo_t))) => {
+                        let (phi, t, c) = fmm::evaluate_on_tree_serial(&tree.0, &tree.1, fmm_opts);
+                        let mut times = topo_t;
+                        times.add(&t);
+                        *done[i].lock().unwrap() = Some((tree.0.unpermute(&phi), times, c));
+                    }
+                    // park the error for collection after the run
+                    Some(Err(e)) => *built[i].lock().unwrap() = Some(Err(e)),
+                    None => {}
+                }
+            });
+        }
+        g.run(pool, nt, None);
+    }
+    stats.dispatches += 1;
+    for i in 0..problems.len() {
+        if let Some(Err(e)) = built[i].lock().unwrap().take() {
+            return Err(e);
+        }
+        match done[i].lock().unwrap().take() {
+            Some((phi, t, c)) => {
+                potentials[i] = phi;
+                times_per_problem[i] = t;
+                counts.absorb(&c);
+            }
+            None => crate::bail!("task-graph batch produced no result for problem {i}"),
+        }
+    }
+    Ok(())
 }
 
 /// The overlapped prologue of the pooled CPU path: producer workers claim
@@ -509,9 +626,11 @@ fn dispatch_cpu(
             .iter()
             .map(|&(pyr, con)| fmm::evaluate_on_tree_serial(pyr, con, &opts.fmm))
             .collect(),
-        BatchEngine::Parallel => {
+        BatchEngine::Parallel | BatchEngine::TaskGraph => {
             let nt = opts.fmm.effective_threads();
             if members.len() >= nt.max(2) {
+                // wide groups stream through the problem-claiming dispatch
+                // on both engines — it is already barrier-free per problem
                 match pool {
                     // nt == 1 degenerates to the serial loop inside the
                     // scoped variant — no fan-out at all
@@ -521,9 +640,16 @@ fn dispatch_cpu(
                     _ => fmm::parallel::evaluate_trees_pooled(members, &opts.fmm, nt),
                 }
             } else {
+                let fmm_opts = FmmOptions {
+                    cpu_engine: match engine {
+                        BatchEngine::TaskGraph => fmm::CpuEngine::TaskGraph,
+                        _ => opts.fmm.cpu_engine,
+                    },
+                    ..opts.fmm.clone()
+                };
                 members
                     .iter()
-                    .map(|&(pyr, con)| fmm::evaluate_on_tree(pyr, con, &opts.fmm))
+                    .map(|&(pyr, con)| fmm::evaluate_on_tree(pyr, con, &fmm_opts))
                     .collect()
             }
         }
@@ -668,6 +794,38 @@ mod tests {
                 assert_eq!(x.im, y.im);
             }
         }
+    }
+
+    #[test]
+    fn taskgraph_batch_matches_serial_bitwise() {
+        let problems = problems_of(&[600, 2200, 700, 2400], 5);
+        let serial = run(&problems, &opts_with(BatchEngine::Serial, 0)).unwrap();
+        let tg = run(&problems, &opts_with(BatchEngine::TaskGraph, 0)).unwrap();
+        // the whole batch is one graph dispatch
+        assert_eq!(tg.stats.dispatches, 1);
+        assert_eq!(serial.counts.n, tg.counts.n);
+        assert_eq!(serial.counts.p2p_pairs, tg.counts.p2p_pairs);
+        for (a, b) in serial.potentials.iter().zip(&tg.potentials) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                // identical trees + serial driver per compute task
+                assert_eq!(x.re, y.re);
+                assert_eq!(x.im, y.im);
+            }
+        }
+    }
+
+    #[test]
+    fn taskgraph_batch_surfaces_topology_errors() {
+        let mut problems = problems_of(&[600, 650], 9);
+        problems.push(BatchProblem {
+            points: problems[0].points[..10].to_vec(),
+            gammas: problems[0].gammas[..10].to_vec(),
+        });
+        let mut opts = opts_with(BatchEngine::TaskGraph, 0);
+        opts.fmm.cfg.levels_override = Some(3);
+        let err = run(&problems, &opts).unwrap_err().to_string();
+        assert!(err.contains("fewer particles"), "got: {err}");
     }
 
     #[test]

@@ -123,6 +123,11 @@ pub struct EngineCost {
     pub pooled_s: f64,
     /// Calibrated worker count backing the pooled prediction.
     pub pooled_workers: usize,
+    /// Task-graph pipelined engine (same candidate rules as pooled, over
+    /// the profile's task-graph entries).
+    pub taskgraph_s: f64,
+    /// Calibrated worker count backing the task-graph prediction.
+    pub taskgraph_workers: usize,
     /// Simulated GPU / batched XLA dispatch
     /// ([`GpuSim`](crate::gpusim::model::GpuSim), transfers included).
     pub gpu_s: f64,

@@ -1,8 +1,9 @@
 //! Autotuned multi-backend dispatch: pick the engine per problem and per
 //! batch group from a calibrated cost model.
 //!
-//! The repo carries four interchangeable execution paths — the serial
-//! reference driver, the pooled multithreaded engine, the scoped
+//! The repo carries several interchangeable execution paths — the serial
+//! reference driver, the pooled multithreaded engine, the task-graph
+//! pipelined engine ([`crate::fmm::taskgraph`]), the scoped
 //! spawn-per-phase baseline and the batched XLA/simulated-GPU path — and
 //! until this subsystem existed the choice between them was a CLI flag.
 //! Following the companion work on hybrid CPU/GPU balancing (Holm et al.,

@@ -31,7 +31,8 @@ use super::cost::phase_units;
 
 /// Format version of the persisted profile; bumped whenever the rate
 /// semantics change so stale files are rejected, not misread.
-pub const PROFILE_VERSION: usize = 1;
+/// v2 added the task-graph engine's rate entries.
+pub const PROFILE_VERSION: usize = 2;
 
 /// Measured throughput of one engine: work units per second per phase
 /// (ordered as [`PHASE_NAMES`]) plus a fixed per-evaluation overhead.
@@ -90,22 +91,29 @@ impl EngineRates {
     }
 }
 
-/// [`EngineRates`] of the pooled engine at one calibrated worker count.
+/// [`EngineRates`] of one multicore engine at one calibrated worker count
+/// (used by both the pooled barrier engine and the task-graph engine).
 #[derive(Clone, Debug, PartialEq)]
 pub struct PooledRates {
     pub workers: usize,
     pub rates: EngineRates,
 }
 
-/// A full calibration profile: serial rates plus pooled rates per
-/// calibrated worker count. See the module docs for provenance and
-/// persistence.
+/// A full calibration profile: serial rates plus pooled and task-graph
+/// rates per calibrated worker count. See the module docs for provenance
+/// and persistence.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CalibrationProfile {
     pub version: usize,
     pub serial: EngineRates,
-    /// Pooled-engine rates, ascending by worker count.
+    /// Pooled barrier-engine rates, ascending by worker count.
     pub pooled: Vec<PooledRates>,
+    /// Task-graph engine rates, ascending by worker count. The engine's
+    /// per-phase times are normalized so they sum to the *overlapped*
+    /// wall-clock ([`crate::fmm::taskgraph`]), so these rates price its
+    /// phase overlap honestly: a total predicted from them is a predicted
+    /// wall time.
+    pub taskgraph: Vec<PooledRates>,
 }
 
 /// Options of one calibration pass ([`CalibrationProfile::measure`]).
@@ -178,18 +186,24 @@ impl CalibrationProfile {
     /// of each engine is backed out of a tiny run (measured total minus
     /// the work the fitted rates predict).
     pub fn measure(opts: &CalibrationOptions) -> Result<CalibrationProfile> {
-        let serial = measure_engine(Some(1), opts)?;
+        let serial = measure_engine(Some(1), fmm::CpuEngine::Barrier, opts)?;
         let mut pooled = Vec::new();
+        let mut taskgraph = Vec::new();
         for w in opts.resolved_worker_counts() {
             pooled.push(PooledRates {
                 workers: w,
-                rates: measure_engine(Some(w), opts)?,
+                rates: measure_engine(Some(w), fmm::CpuEngine::Barrier, opts)?,
+            });
+            taskgraph.push(PooledRates {
+                workers: w,
+                rates: measure_engine(Some(w), fmm::CpuEngine::TaskGraph, opts)?,
             });
         }
         Ok(CalibrationProfile {
             version: PROFILE_VERSION,
             serial,
             pooled,
+            taskgraph,
         })
     }
 
@@ -221,6 +235,13 @@ impl CalibrationProfile {
         CalibrationProfile {
             version: PROFILE_VERSION,
             serial,
+            // the fallback prices the task-graph engine identically to the
+            // pooled engine: the strict-less-than pick order then keeps
+            // pooled until a real `calibrate` measures the overlap win
+            taskgraph: vec![PooledRates {
+                workers: avail,
+                rates: pooled.clone(),
+            }],
             pooled: vec![PooledRates {
                 workers: avail,
                 rates: pooled,
@@ -231,41 +252,45 @@ impl CalibrationProfile {
     /// The pooled entry calibrated closest to `workers` (ties prefer the
     /// smaller count); `None` when the profile carries no pooled rates.
     pub fn pooled_near(&self, workers: usize) -> Option<&PooledRates> {
-        self.pooled.iter().min_by_key(|e| {
-            let d = e.workers.abs_diff(workers);
-            (d, e.workers)
-        })
+        near_in(&self.pooled, workers)
     }
 
     /// The largest calibrated pooled entry **not exceeding** `workers` —
     /// the only entry a run capped at `workers` can honestly be priced
     /// with; `None` when every entry needs more workers than allowed.
     pub fn pooled_within(&self, workers: usize) -> Option<&PooledRates> {
-        self.pooled
-            .iter()
-            .filter(|e| e.workers <= workers)
-            .max_by_key(|e| e.workers)
+        within_in(&self.pooled, workers)
+    }
+
+    /// [`Self::pooled_near`], over the task-graph entries.
+    pub fn taskgraph_near(&self, workers: usize) -> Option<&PooledRates> {
+        near_in(&self.taskgraph, workers)
+    }
+
+    /// [`Self::pooled_within`], over the task-graph entries.
+    pub fn taskgraph_within(&self, workers: usize) -> Option<&PooledRates> {
+        within_in(&self.taskgraph, workers)
     }
 
     // ---- persistence ---------------------------------------------------
 
     pub fn to_json(&self) -> Json {
+        let entries = |es: &[PooledRates]| {
+            Json::Arr(
+                es.iter()
+                    .map(|e| {
+                        let mut o = e.rates.to_json();
+                        o.set("workers", Json::Num(e.workers as f64));
+                        o
+                    })
+                    .collect(),
+            )
+        };
         let mut j = Json::obj();
         j.set("version", Json::Num(self.version as f64))
             .set("serial", self.serial.to_json())
-            .set(
-                "pooled",
-                Json::Arr(
-                    self.pooled
-                        .iter()
-                        .map(|e| {
-                            let mut o = e.rates.to_json();
-                            o.set("workers", Json::Num(e.workers as f64));
-                            o
-                        })
-                        .collect(),
-                ),
-            );
+            .set("pooled", entries(&self.pooled))
+            .set("taskgraph", entries(&self.taskgraph));
         j
     }
 
@@ -281,7 +306,11 @@ impl CalibrationProfile {
     }
 
     pub fn from_json(v: &Json) -> Result<CalibrationProfile> {
-        check_fields(v, &["version", "serial", "pooled"], "calibration profile")?;
+        check_fields(
+            v,
+            &["version", "serial", "pooled", "taskgraph"],
+            "calibration profile",
+        )?;
         let version = v.req_usize("version")?;
         if version != PROFILE_VERSION {
             crate::bail!(
@@ -293,37 +322,13 @@ impl CalibrationProfile {
             v.get("serial").context("missing 'serial' rates")?,
             "serial rates",
         )?;
-        let arr = v
-            .get("pooled")
-            .and_then(Json::as_arr)
-            .context("missing 'pooled' rate array")?;
-        let mut pooled = Vec::with_capacity(arr.len());
-        for (i, e) in arr.iter().enumerate() {
-            let what = format!("pooled[{i}] rates");
-            check_fields(e, &["workers", "rates", "overhead_s"], &what)?;
-            let workers = e.req_usize("workers")?;
-            if workers == 0 {
-                crate::bail!("{what}: workers must be at least 1");
-            }
-            // re-check without 'workers' is unnecessary: EngineRates'
-            // parser only reads its two fields and the field check above
-            // already constrained the full set
-            let rates = {
-                let mut o = Json::obj();
-                o.set("rates", e.get("rates").cloned().unwrap_or(Json::Null))
-                    .set(
-                        "overhead_s",
-                        e.get("overhead_s").cloned().unwrap_or(Json::Null),
-                    );
-                EngineRates::from_json(&o, &what)?
-            };
-            pooled.push(PooledRates { workers, rates });
-        }
-        pooled.sort_by_key(|e| e.workers);
+        let pooled = parse_entries(v, "pooled")?;
+        let taskgraph = parse_entries(v, "taskgraph")?;
         Ok(CalibrationProfile {
             version,
             serial,
             pooled,
+            taskgraph,
         })
     }
 
@@ -373,17 +378,76 @@ impl CalibrationProfile {
         for e in &self.pooled {
             row(&format!("pooled({})", e.workers), &e.rates);
         }
+        for e in &self.taskgraph {
+            row(&format!("taskgraph({})", e.workers), &e.rates);
+        }
         out
     }
+}
+
+/// The entry calibrated closest to `workers` (ties prefer the smaller
+/// count) — shared by the pooled and task-graph lookups.
+fn near_in(entries: &[PooledRates], workers: usize) -> Option<&PooledRates> {
+    entries.iter().min_by_key(|e| {
+        let d = e.workers.abs_diff(workers);
+        (d, e.workers)
+    })
+}
+
+/// The largest calibrated entry not exceeding `workers` — shared by the
+/// pooled and task-graph lookups.
+fn within_in(entries: &[PooledRates], workers: usize) -> Option<&PooledRates> {
+    entries
+        .iter()
+        .filter(|e| e.workers <= workers)
+        .max_by_key(|e| e.workers)
+}
+
+/// Parse one engine's `[{workers, rates, overhead_s}]` array, sorted
+/// ascending by worker count.
+fn parse_entries(v: &Json, key: &str) -> Result<Vec<PooledRates>> {
+    let arr = v
+        .get(key)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("missing '{key}' rate array"))?;
+    let mut entries = Vec::with_capacity(arr.len());
+    for (i, e) in arr.iter().enumerate() {
+        let what = format!("{key}[{i}] rates");
+        check_fields(e, &["workers", "rates", "overhead_s"], &what)?;
+        let workers = e.req_usize("workers")?;
+        if workers == 0 {
+            crate::bail!("{what}: workers must be at least 1");
+        }
+        // re-check without 'workers' is unnecessary: EngineRates' parser
+        // only reads its two fields and the field check above already
+        // constrained the full set
+        let rates = {
+            let mut o = Json::obj();
+            o.set("rates", e.get("rates").cloned().unwrap_or(Json::Null))
+                .set(
+                    "overhead_s",
+                    e.get("overhead_s").cloned().unwrap_or(Json::Null),
+                );
+            EngineRates::from_json(&o, &what)?
+        };
+        entries.push(PooledRates { workers, rates });
+    }
+    entries.sort_by_key(|e| e.workers);
+    Ok(entries)
 }
 
 /// Measure one engine's rates: accumulate work units and per-phase seconds
 /// over the calibration sizes, then divide; back the overhead out of a
 /// tiny run.
-fn measure_engine(threads: Option<usize>, opts: &CalibrationOptions) -> Result<EngineRates> {
+fn measure_engine(
+    threads: Option<usize>,
+    engine: fmm::CpuEngine,
+    opts: &CalibrationOptions,
+) -> Result<EngineRates> {
     let fmm_opts = |threads: Option<usize>| FmmOptions {
         threads,
         pin: opts.pin,
+        cpu_engine: engine,
         ..FmmOptions::default()
     };
     // warm the pool (and the allocator) so the first timed run is not
@@ -471,6 +535,13 @@ mod tests {
                     },
                 },
             ],
+            taskgraph: vec![PooledRates {
+                workers: 8,
+                rates: EngineRates {
+                    rates: [7.0e8; N_PHASES],
+                    overhead_s: 2.5e-4,
+                },
+            }],
         }
     }
 
@@ -511,6 +582,15 @@ mod tests {
         let s = sample().summary();
         assert!(s.contains("serial"));
         assert!(s.contains("pooled(8)"));
+        assert!(s.contains("taskgraph(8)"));
         assert!(s.contains("P2P"));
+    }
+
+    #[test]
+    fn taskgraph_lookups_mirror_pooled() {
+        let p = sample(); // one taskgraph entry at 8 workers
+        assert_eq!(p.taskgraph_near(2).unwrap().workers, 8);
+        assert!(p.taskgraph_within(7).is_none());
+        assert_eq!(p.taskgraph_within(8).unwrap().workers, 8);
     }
 }

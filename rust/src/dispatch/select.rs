@@ -37,6 +37,9 @@ pub enum Engine {
     /// The pooled multithreaded engine (the default).
     #[default]
     Parallel,
+    /// The task-graph pipelined engine ([`crate::fmm::taskgraph`]):
+    /// dependency-gated phases on the same pool, no phase barriers.
+    TaskGraph,
     /// The AOT-compiled XLA path (needs the `pjrt` feature).
     Xla,
     /// Resolve per problem / per batch group from the calibrated cost
@@ -45,7 +48,7 @@ pub enum Engine {
 }
 
 /// Valid `--engine` names, in parse order.
-pub const ENGINE_NAMES: [&str; 4] = ["serial", "parallel", "xla", "auto"];
+pub const ENGINE_NAMES: [&str; 5] = ["serial", "parallel", "taskgraph", "xla", "auto"];
 
 impl FromStr for Engine {
     type Err = crate::util::error::Error;
@@ -54,6 +57,7 @@ impl FromStr for Engine {
         match s {
             "serial" => Ok(Engine::Serial),
             "parallel" => Ok(Engine::Parallel),
+            "taskgraph" => Ok(Engine::TaskGraph),
             "xla" => Ok(Engine::Xla),
             "auto" => Ok(Engine::Auto),
             other => Err(crate::anyhow!(
@@ -69,6 +73,7 @@ impl fmt::Display for Engine {
         f.write_str(match self {
             Engine::Serial => "serial",
             Engine::Parallel => "parallel",
+            Engine::TaskGraph => "taskgraph",
             Engine::Xla => "xla",
             Engine::Auto => "auto",
         })
@@ -82,6 +87,8 @@ pub enum EngineChoice {
     Serial,
     /// The pooled multithreaded engine at the given worker count.
     Pooled { workers: usize },
+    /// The task-graph pipelined engine at the given worker count.
+    TaskGraph { workers: usize },
     /// The batched XLA / simulated-GPU path.
     Xla,
 }
@@ -91,6 +98,7 @@ impl fmt::Display for EngineChoice {
         match self {
             EngineChoice::Serial => f.write_str("serial"),
             EngineChoice::Pooled { workers } => write!(f, "pooled({workers})"),
+            EngineChoice::TaskGraph { workers } => write!(f, "taskgraph({workers})"),
             EngineChoice::Xla => f.write_str("xla"),
         }
     }
@@ -139,8 +147,16 @@ impl DispatchReport {
         let _ = writeln!(out, "# dispatch report (seconds; predicted per candidate)");
         let _ = writeln!(
             out,
-            "{:<width$} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12} {:>9}",
-            "target", "serial", "pooled", "gpu/xla", "chosen", "predicted", "measured", "meas/pred"
+            "{:<width$} {:>12} {:>12} {:>12} {:>12} {:>14} {:>12} {:>12} {:>9}",
+            "target",
+            "serial",
+            "pooled",
+            "taskgraph",
+            "gpu/xla",
+            "chosen",
+            "predicted",
+            "measured",
+            "meas/pred"
         );
         for d in &self.decisions {
             let measured = d
@@ -153,10 +169,11 @@ impl DispatchReport {
                 .unwrap_or_else(|| format!("{:>9}", "-"));
             let _ = writeln!(
                 out,
-                "{:<width$} {:>12.6} {:>12.6} {:>12.6} {:>12} {:>12.6} {measured} {drift}",
+                "{:<width$} {:>12.6} {:>12.6} {:>12.6} {:>12.6} {:>14} {:>12.6} {measured} {drift}",
                 d.label,
                 d.cost.serial_s,
                 d.cost.pooled_s,
+                d.cost.taskgraph_s,
                 d.cost.gpu_s,
                 d.choice.to_string(),
                 d.predicted_s,
@@ -251,19 +268,27 @@ impl Dispatcher {
         let c = p.counts();
         let u = cost::phase_units(&c);
         let serial_s = cost::cpu_total(&self.profile.serial, &u);
-        let (pooled_s, pooled_workers) = self.best_pooled(serial_s, cap, |rates| {
-            cost::cpu_total(rates, &u)
-        });
+        let (pooled_s, pooled_workers) =
+            best_entry(&self.profile.pooled, serial_s, cap, |rates| {
+                cost::cpu_total(rates, &u)
+            });
+        let (taskgraph_s, taskgraph_workers) =
+            best_entry(&self.profile.taskgraph, serial_s, cap, |rates| {
+                cost::cpu_total(rates, &u)
+            });
         EngineCost {
             serial_s,
             pooled_s,
             pooled_workers,
+            taskgraph_s,
+            taskgraph_workers,
             gpu_s: self.sim.total_time(&c),
         }
     }
 
     /// Pick the engine for one problem ([`Dispatcher::predict`] + argmin;
-    /// ties keep the earlier candidate in serial → pooled → xla order).
+    /// ties keep the earlier candidate in serial → pooled → taskgraph →
+    /// xla order).
     pub fn select(&self, p: &Problem) -> Decision {
         self.select_capped(p, None)
     }
@@ -323,23 +348,32 @@ impl Dispatcher {
         let nt = cap
             .unwrap_or_else(crate::util::threadpool::available_threads)
             .max(1);
-        let (pooled_s, pooled_workers) = match self.profile.pooled_within(nt) {
-            Some(e) => {
-                let t = if members.len() >= nt.max(2) {
-                    // problem-claiming dispatch: nt workers run the
-                    // serial driver, bounded below by the widest member
-                    (serial_s / nt as f64).max(max_serial) + e.rates.overhead_s
-                } else {
-                    units.iter().map(|u| cost::cpu_compute(&e.rates, u)).sum()
-                };
-                (t, e.workers)
+        let group_time = |e: &super::profile::PooledRates| {
+            if members.len() >= nt.max(2) {
+                // problem-claiming dispatch: nt workers run the
+                // serial driver, bounded below by the widest member
+                (serial_s / nt as f64).max(max_serial) + e.rates.overhead_s
+            } else {
+                units.iter().map(|u| cost::cpu_compute(&e.rates, u)).sum()
             }
+        };
+        let (pooled_s, pooled_workers) = match self.profile.pooled_within(nt) {
+            Some(e) => (group_time(e), e.workers),
+            None => (serial_s, 1),
+        };
+        // the task-graph batch path shares the problem-claiming dispatch
+        // for wide groups and runs the per-problem task-graph engine for
+        // narrow ones — the same candidate shape, its own calibration
+        let (taskgraph_s, taskgraph_workers) = match self.profile.taskgraph_within(nt) {
+            Some(e) => (group_time(e), e.workers),
             None => (serial_s, 1),
         };
         let cost = EngineCost {
             serial_s,
             pooled_s,
             pooled_workers,
+            taskgraph_s,
+            taskgraph_workers,
             gpu_s: self.sim.batched_compute_time_of(&counts),
         };
         let (choice, predicted_s) = self.pick(&cost);
@@ -362,9 +396,10 @@ impl Dispatcher {
     }
 
     /// Predicted compute-only seconds (P2M … P2P) of one problem on the
-    /// serial engine and on the pooled engine calibrated nearest to
-    /// `workers` — the `pool-bench` predicted columns.
-    pub fn predict_compute(&self, p: &Problem, workers: usize) -> (f64, f64) {
+    /// serial engine, the pooled engine and the task-graph engine
+    /// calibrated nearest to `workers` — the `pool-bench` predicted
+    /// columns.
+    pub fn predict_compute(&self, p: &Problem, workers: usize) -> (f64, f64, f64) {
         let u = cost::phase_units(&p.counts());
         let serial = cost::cpu_compute(&self.profile.serial, &u);
         let pooled = self
@@ -372,37 +407,15 @@ impl Dispatcher {
             .pooled_near(workers)
             .map(|e| cost::cpu_compute(&e.rates, &u))
             .unwrap_or(serial);
-        (serial, pooled)
+        let taskgraph = self
+            .profile
+            .taskgraph_near(workers)
+            .map(|e| cost::cpu_compute(&e.rates, &u))
+            .unwrap_or(pooled);
+        (serial, pooled, taskgraph)
     }
 
     // ---- internals -----------------------------------------------------
-
-    /// Best pooled candidate under the worker cap: `(seconds, workers)`,
-    /// falling back to the serial prediction when no entry qualifies.
-    fn best_pooled(
-        &self,
-        serial_s: f64,
-        cap: Option<usize>,
-        time_of: impl Fn(&super::profile::EngineRates) -> f64,
-    ) -> (f64, usize) {
-        let mut best = f64::INFINITY;
-        let mut best_w = 0;
-        for e in &self.profile.pooled {
-            if cap.is_some_and(|c| e.workers > c) {
-                continue;
-            }
-            let t = time_of(&e.rates);
-            if t < best {
-                best = t;
-                best_w = e.workers;
-            }
-        }
-        if best.is_finite() {
-            (best, best_w)
-        } else {
-            (serial_s, 1)
-        }
-    }
 
     fn pick(&self, c: &EngineCost) -> (EngineChoice, f64) {
         let mut choice = EngineChoice::Serial;
@@ -413,11 +426,45 @@ impl Dispatcher {
             };
             best = c.pooled_s;
         }
+        if c.taskgraph_s < best {
+            choice = EngineChoice::TaskGraph {
+                workers: c.taskgraph_workers,
+            };
+            best = c.taskgraph_s;
+        }
         if self.allow_xla && c.gpu_s < best {
             choice = EngineChoice::Xla;
             best = c.gpu_s;
         }
         (choice, best)
+    }
+}
+
+/// Best calibrated candidate of one engine under the worker cap:
+/// `(seconds, workers)`, falling back to the serial prediction when no
+/// entry qualifies.
+fn best_entry(
+    entries: &[super::profile::PooledRates],
+    serial_s: f64,
+    cap: Option<usize>,
+    time_of: impl Fn(&super::profile::EngineRates) -> f64,
+) -> (f64, usize) {
+    let mut best = f64::INFINITY;
+    let mut best_w = 0;
+    for e in entries {
+        if cap.is_some_and(|c| e.workers > c) {
+            continue;
+        }
+        let t = time_of(&e.rates);
+        if t < best {
+            best = t;
+            best_w = e.workers;
+        }
+    }
+    if best.is_finite() {
+        (best, best_w)
+    } else {
+        (serial_s, 1)
     }
 }
 
@@ -435,11 +482,17 @@ pub fn execute_cpu_choice(
 ) -> Result<FmmOutput> {
     let threads = match decision.choice {
         EngineChoice::Serial => Some(1),
-        EngineChoice::Pooled { workers } => Some(workers),
+        EngineChoice::Pooled { workers } | EngineChoice::TaskGraph { workers } => Some(workers),
         EngineChoice::Xla => opts.threads,
+    };
+    let cpu_engine = match decision.choice {
+        EngineChoice::TaskGraph { .. } => fmm::CpuEngine::TaskGraph,
+        EngineChoice::Serial | EngineChoice::Pooled { .. } => fmm::CpuEngine::Barrier,
+        EngineChoice::Xla => opts.cpu_engine,
     };
     let run_opts = FmmOptions {
         threads,
+        cpu_engine,
         ..opts.clone()
     };
     let t = Instant::now();
@@ -483,6 +536,15 @@ mod tests {
                     overhead_s: 5.0e-4,
                 },
             }],
+            // slightly slower than pooled so the existing pooled-choice
+            // assertions stay meaningful
+            taskgraph: vec![PooledRates {
+                workers: 4,
+                rates: EngineRates {
+                    rates: [3.0e8; N_PHASES],
+                    overhead_s: 5.0e-4,
+                },
+            }],
         }
     }
 
@@ -493,7 +555,33 @@ mod tests {
             assert_eq!(e.to_string(), name);
         }
         let err = "warp-drive".parse::<Engine>().unwrap_err().to_string();
-        assert!(err.contains("serial|parallel|xla|auto"), "{err}");
+        assert!(err.contains("serial|parallel|taskgraph|xla|auto"), "{err}");
+    }
+
+    #[test]
+    fn faster_taskgraph_rates_win_the_pick() {
+        let mut p = profile();
+        p.taskgraph[0].rates.rates = [6.4e8; N_PHASES];
+        let d = Dispatcher::new(p).with_xla(false);
+        let dec = d.select(&Problem::new(50_000, 5, 17, 0.5));
+        assert!(
+            matches!(dec.choice, EngineChoice::TaskGraph { workers: 4 }),
+            "calibrated-faster taskgraph must be chosen, got {}",
+            dec.choice
+        );
+    }
+
+    #[test]
+    fn taskgraph_tie_keeps_pooled() {
+        let mut p = profile();
+        p.taskgraph = p.pooled.clone();
+        let d = Dispatcher::new(p).with_xla(false);
+        let dec = d.select(&Problem::new(50_000, 5, 17, 0.5));
+        assert!(
+            matches!(dec.choice, EngineChoice::Pooled { .. }),
+            "exact tie must keep the earlier candidate, got {}",
+            dec.choice
+        );
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! differs.
 
 pub mod parallel;
+pub mod taskgraph;
 
 use std::time::Instant;
 
@@ -307,6 +308,21 @@ pub fn structural_counts(pyr: &Pyramid, con: &Connectivity, p: usize) -> WorkCou
     }
 }
 
+/// Which multicore engine runs the computational phase when
+/// [`FmmOptions::effective_threads`] resolves above one.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CpuEngine {
+    /// The pooled barrier engine ([`parallel::evaluate_on_tree_pool`]):
+    /// all eight phases as global fork-joins on the persistent pool.
+    #[default]
+    Barrier,
+    /// The task-graph pipelined engine
+    /// ([`taskgraph::evaluate_on_tree_taskgraph`]): the same shards,
+    /// dependency-gated instead of barrier-separated, so P2P overlaps the
+    /// multipole chain. Bitwise-identical results to [`Self::Barrier`].
+    TaskGraph,
+}
+
 /// Options of one evaluation.
 #[derive(Clone, Debug)]
 pub struct FmmOptions {
@@ -335,6 +351,10 @@ pub struct FmmOptions {
     /// code path spawns threads. Own a pool explicitly to isolate
     /// workloads or control its size/pinning/lifetime.
     pub pool: Option<std::sync::Arc<crate::util::pool::WorkerPool>>,
+    /// Multicore engine flavor for the computational phase (ignored when
+    /// the resolved thread count is 1, which always runs the serial
+    /// reference driver). See [`CpuEngine`].
+    pub cpu_engine: CpuEngine,
 }
 
 impl Default for FmmOptions {
@@ -347,6 +367,7 @@ impl Default for FmmOptions {
             topo_threads: None,
             pin: false,
             pool: None,
+            cpu_engine: CpuEngine::default(),
         }
     }
 }
@@ -475,7 +496,12 @@ pub fn evaluate_on_tree(
     let nt = opts.effective_threads().min(pyr.n_leaves());
     if nt > 1 {
         let pool = opts.shared_pool();
-        return parallel::evaluate_on_tree_pool(pyr, con, opts, &pool);
+        return match opts.cpu_engine {
+            CpuEngine::Barrier => parallel::evaluate_on_tree_pool(pyr, con, opts, &pool),
+            CpuEngine::TaskGraph => {
+                taskgraph::evaluate_on_tree_taskgraph(pyr, con, opts, &pool)
+            }
+        };
     }
     evaluate_on_tree_serial(pyr, con, opts)
 }

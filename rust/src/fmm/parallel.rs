@@ -54,14 +54,14 @@ use crate::util::pool::{note_spawn, Accum, WorkerPool};
 use crate::util::threadpool::{ranges, scoped_chunks_mut, split_lengths_mut, weighted_ranges};
 
 /// Per-destination-box M2L weights (in-degree varies on adaptive meshes).
-fn m2l_weights(con: &Connectivity, l: usize, nb: usize) -> Vec<u64> {
+pub(crate) fn m2l_weights(con: &Connectivity, l: usize, nb: usize) -> Vec<u64> {
     (0..nb)
         .map(|b| con.weak[l].sources(b).len() as u64)
         .collect()
 }
 
 /// Per-leaf L2P weights: particles × (own expansion + M2P sources).
-fn l2p_weights(pyr: &Pyramid, con: &Connectivity, nl: usize) -> Vec<u64> {
+pub(crate) fn l2p_weights(pyr: &Pyramid, con: &Connectivity, nl: usize) -> Vec<u64> {
     (0..nl)
         .map(|b| {
             let nb = (pyr.starts[b + 1] - pyr.starts[b]) as u64;
@@ -72,7 +72,7 @@ fn l2p_weights(pyr: &Pyramid, con: &Connectivity, nl: usize) -> Vec<u64> {
 
 /// Per-leaf symmetric-P2P pair weights (box `b` owns all pairs with
 /// sources `≥ b` — a triangular load).
-fn p2p_symmetric_weights(pyr: &Pyramid, con: &Connectivity, nl: usize) -> Vec<u64> {
+pub(crate) fn p2p_symmetric_weights(pyr: &Pyramid, con: &Connectivity, nl: usize) -> Vec<u64> {
     (0..nl)
         .map(|b| {
             let nb = (pyr.starts[b + 1] - pyr.starts[b]) as u64;
@@ -92,7 +92,7 @@ fn p2p_symmetric_weights(pyr: &Pyramid, con: &Connectivity, nl: usize) -> Vec<u6
 /// engines so their arithmetic is identical — as are all `*_range`
 /// kernels below: each engine only supplies its own fan-out and scratch).
 #[allow(clippy::too_many_arguments)] // internal kernel plumbing, not API
-fn p2m_range(
+pub(crate) fn p2m_range(
     r: Range<usize>,
     chunk: &mut [C64],
     pyr: &Pyramid,
@@ -117,7 +117,7 @@ fn p2m_range(
 /// The M2M inner loop of one *parent* range: a task owns a parent box
 /// together with its four (contiguous) children, so the accumulation
 /// order into each parent matches the serial driver exactly.
-fn m2m_range(
+pub(crate) fn m2m_range(
     r: Range<usize>,
     chunk: &mut [C64],
     children: &[C64],
@@ -145,7 +145,7 @@ fn m2m_range(
 
 /// The M2L inner loop of one destination range at level `l`.
 #[allow(clippy::too_many_arguments)] // internal kernel plumbing, not API
-fn m2l_range(
+pub(crate) fn m2l_range(
     r: Range<usize>,
     chunk: &mut [C64],
     con: &Connectivity,
@@ -173,7 +173,7 @@ fn m2l_range(
 
 /// The P2L-shortcut inner loop of one finest-level range.
 #[allow(clippy::too_many_arguments)] // internal kernel plumbing, not API
-fn p2l_shortcut_range(
+pub(crate) fn p2l_shortcut_range(
     r: Range<usize>,
     chunk: &mut [C64],
     pyr: &Pyramid,
@@ -198,7 +198,7 @@ fn p2l_shortcut_range(
 }
 
 /// The L2L inner loop of one *child* range.
-fn l2l_range(
+pub(crate) fn l2l_range(
     r: Range<usize>,
     chunk: &mut [C64],
     parents: &[C64],
@@ -220,7 +220,7 @@ fn l2l_range(
 /// into `phr`/`phm` (shared by the scoped and pooled engines so their
 /// arithmetic is identical).
 #[allow(clippy::too_many_arguments)]
-fn p2p_symmetric_range(
+pub(crate) fn p2p_symmetric_range(
     r: Range<usize>,
     pyr: &Pyramid,
     con: &Connectivity,
@@ -265,7 +265,7 @@ fn p2p_symmetric_range(
 
 /// The directed-P2P inner loop of one destination range (GPU layout,
 /// §4.3): pure writer-side sharding, no reduction at all.
-fn p2p_directed_range(
+pub(crate) fn p2p_directed_range(
     r: Range<usize>,
     chunk: &mut [C64],
     pyr: &Pyramid,
@@ -302,7 +302,7 @@ fn p2p_directed_range(
 
 /// The L2P (+ M2P) inner loop of one leaf range (shared by both engines).
 #[allow(clippy::too_many_arguments)] // internal kernel plumbing, not API
-fn l2p_range(
+pub(crate) fn l2p_range(
     r: Range<usize>,
     chunk: &mut [C64],
     pyr: &Pyramid,

@@ -1,0 +1,540 @@
+//! The task-graph pipelined FMM engine: the pooled barrier engine's
+//! phases, re-expressed as a dependency graph and executed without global
+//! phase barriers (DESIGN.md §9).
+//!
+//! The barrier engines ([`super::parallel`]) leave every worker idle at
+//! each of the eight phase boundaries even though the dependence structure
+//! is much looser: P2P is independent of the *entire* multipole chain, and
+//! the per-level M2M/M2L/L2L recursions only couple level to level. Agullo
+//! et al. (arXiv:1206.0115) pipeline exactly these phases over a runtime
+//! system; this module does the same on the in-tree scheduler
+//! ([`crate::util::sched`]): one **node** per phase×level shard group,
+//! one **task** per shard, dependency edges
+//!
+//! ```text
+//! P2M ─ M2M(L) ─ M2M(L−1) ─ … ─ M2M(1)
+//!  │      └ M2L(L) ─ P2L ┐   └ M2L(l) ┐
+//!  │                     ├ L2L(l→l+1) ┤  (write-order edges per L level)
+//!  │                     └─────┬──────┘
+//!  └───────────┬─ L2P ←────────┘
+//!  P2P(acc) ─┐ │
+//!            └ merge          (symmetric; directed: P2P ← L2P)
+//! ```
+//!
+//! so P2P overlaps the whole multipole pipeline and level `l` work
+//! overlaps level `l±1` work, scheduled on the persistent [`WorkerPool`]
+//! via a dependency-gated ready queue (zero thread spawns, one pool epoch
+//! per evaluation).
+//!
+//! **Bitwise parity.** Shard boundaries ([`ranges`]/[`weighted_ranges`] at
+//! the same `nt`), per-shard kernels (the shared `*_range` functions of
+//! [`super::parallel`]) and every reduction order are *identical* to the
+//! pooled engine: accumulation chains into one memory location are either
+//! intra-task (M2M into a parent, M2L source order per destination) or
+//! ordered by dependency edges (M2L → P2L → L2L per local level, L2P →
+//! P2P into `Φ`, symmetric-P2P partials folded in accumulator index order
+//! by the merge tasks). With writer-side ownership enforced at runtime by
+//! [`RangedBuf`], *any* dependency-respecting schedule therefore produces
+//! bitwise-identical output — fuzzed across seeds, worker counts and
+//! claim-order jitter by `tests/taskgraph_parity.rs`.
+//!
+//! Phase times are measured per task and normalized so they sum to the
+//! overlapped wall clock (`Σ times = wall`), which keeps the calibration
+//! profile ([`crate::dispatch`]) pricing this engine honestly: predicted
+//! totals equal predicted wall time, overlap included.
+
+use std::ops::Range;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::parallel::{
+    l2l_range, l2p_range, l2p_weights, m2l_range, m2l_weights, m2m_range, p2l_shortcut_range,
+    p2m_range, p2p_directed_range, p2p_symmetric_range, p2p_symmetric_weights,
+};
+use super::{CoeffPyramid, FmmOptions, Phase, PhaseTimes, WorkCounts, N_PHASES};
+use crate::complex::{C64, ZERO};
+use crate::connectivity::Connectivity;
+use crate::expansion::matrices::M2lOperator;
+use crate::expansion::Kernel;
+use crate::tree::{boxes_at_level, Pyramid};
+use crate::util::pool::{Accum, RangedBuf, WorkerPool, WorkerScratch};
+use crate::util::sched::{Graph, Jitter, NodeId};
+use crate::util::threadpool::{ranges, weighted_ranges};
+
+/// Wrap a task so its wall-clock is charged to `ph`. The per-phase sums
+/// are normalized against the overlapped wall clock after the run.
+fn timed<'a>(
+    secs: &'a Mutex<[f64; N_PHASES]>,
+    ph: Phase,
+    f: impl FnOnce(&mut WorkerScratch) + Send + 'a,
+) -> impl FnOnce(&mut WorkerScratch) + Send + 'a {
+    move |ws| {
+        let t = Instant::now();
+        f(ws);
+        let dt = t.elapsed().as_secs_f64();
+        if let Ok(mut g) = secs.lock() {
+            g[ph as usize] += dt;
+        }
+    }
+}
+
+/// The computational phase on a prebuilt tree, executed as one dependency
+/// graph on the persistent worker pool — no phase barriers, zero thread
+/// spawns. Results are bitwise-identical to
+/// [`super::parallel::evaluate_on_tree_pool`] at the same thread count
+/// (see the module docs for the argument; asserted across fuzzed
+/// schedules by `tests/taskgraph_parity.rs`).
+pub fn evaluate_on_tree_taskgraph(
+    pyr: &Pyramid,
+    con: &Connectivity,
+    opts: &FmmOptions,
+    pool: &WorkerPool,
+) -> (Vec<C64>, PhaseTimes, WorkCounts) {
+    evaluate_on_tree_taskgraph_seeded(pyr, con, opts, pool, None)
+}
+
+/// [`evaluate_on_tree_taskgraph`] with injected schedule noise — the
+/// schedule-fuzz hook (`tests/taskgraph_parity.rs`). `None` is the
+/// production schedule.
+pub fn evaluate_on_tree_taskgraph_seeded(
+    pyr: &Pyramid,
+    con: &Connectivity,
+    opts: &FmmOptions,
+    pool: &WorkerPool,
+    jitter: Option<Jitter>,
+) -> (Vec<C64>, PhaseTimes, WorkCounts) {
+    let (phi, times, counts, _) = evaluate_on_tree_taskgraph_stats(pyr, con, opts, pool, jitter);
+    (phi, times, counts)
+}
+
+/// Aggregate schedule statistics of one task-graph run — what the
+/// `pool-bench` overlap column prints.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OverlapStats {
+    /// Overlapped wall clock of the whole graph run.
+    pub wall_s: f64,
+    /// Sum of per-task seconds across every phase (the un-normalized
+    /// totals behind [`PhaseTimes`]'s Σ = wall convention).
+    pub busy_s: f64,
+}
+
+impl OverlapStats {
+    /// Mean number of simultaneously busy workers, `busy / wall` — 1.0
+    /// is a fully serialized schedule, values toward the worker count
+    /// mean the phases genuinely overlapped.
+    pub fn ratio(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.busy_s / self.wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// [`evaluate_on_tree_taskgraph_seeded`], also returning the raw
+/// wall/busy split the normalized [`PhaseTimes`] intentionally hides.
+pub fn evaluate_on_tree_taskgraph_stats(
+    pyr: &Pyramid,
+    con: &Connectivity,
+    opts: &FmmOptions,
+    pool: &WorkerPool,
+    jitter: Option<Jitter>,
+) -> (Vec<C64>, PhaseTimes, WorkCounts, OverlapStats) {
+    let p = opts.cfg.p;
+    let stride = p + 1;
+    let levels = pyr.levels;
+    let nl = pyr.n_leaves();
+    let n = pyr.particles.len();
+    let nt = opts
+        .effective_threads()
+        .min(pool.n_workers())
+        .clamp(1, nl);
+    let kernel = opts.kernel;
+    // identical to the serial driver's measured values (same derivation as
+    // the barrier engines)
+    let counts = super::structural_counts(pyr, con, p);
+
+    // SoA copies of the permuted particles, shared read-only by all tasks
+    let pos_v: Vec<C64> = pyr.particles.iter().map(|q| q.pos).collect();
+    let gam_v: Vec<C64> = pyr.particles.iter().map(|q| q.gamma).collect();
+    let pos: &[C64] = &pos_v;
+    let gam: &[C64] = &gam_v;
+    let xs_v: Vec<f64> = pos.iter().map(|z| z.re).collect();
+    let ys_v: Vec<f64> = pos.iter().map(|z| z.im).collect();
+    let gre_v: Vec<f64> = gam.iter().map(|z| z.re).collect();
+    let gim_v: Vec<f64> = gam.iter().map(|z| z.im).collect();
+    let (xs, ys, gre, gim): (&[f64], &[f64], &[f64], &[f64]) = (&xs_v, &ys_v, &gre_v, &gim_v);
+    let centers_v: Vec<Vec<C64>> = (0..=levels).map(|l| pyr.centers(l)).collect();
+    let centers: &[Vec<C64>] = &centers_v;
+    let m2l_op = (kernel == Kernel::Harmonic).then(|| M2lOperator::new(p));
+    let m2l_op = &m2l_op;
+
+    // Coefficient pyramids and Φ behind runtime-checked range borrows:
+    // tasks of concurrent nodes take disjoint write chunks and whole-buffer
+    // reads, which the ledger admits (and would reject on any scheduler
+    // bug — writer-side ownership stays armed, see `RangedBuf`).
+    let mbufs_v: Vec<RangedBuf<C64>> = CoeffPyramid::zeros(levels, p)
+        .levels
+        .into_iter()
+        .map(RangedBuf::new)
+        .collect();
+    let lbufs_v: Vec<RangedBuf<C64>> = CoeffPyramid::zeros(levels, p)
+        .levels
+        .into_iter()
+        .map(RangedBuf::new)
+        .collect();
+    let phibuf = RangedBuf::new(vec![ZERO; n]);
+    let (mbufs, lbufs): (&[RangedBuf<C64>], &[RangedBuf<C64>]) = (&mbufs_v, &lbufs_v);
+
+    let symmetric = opts.symmetric_p2p && kernel == Kernel::Harmonic;
+    let p2p_rs: Vec<Range<usize>> = if symmetric {
+        weighted_ranges(&p2p_symmetric_weights(pyr, con, nl), nt)
+    } else {
+        let w: Vec<u64> = (0..nl)
+            .map(|b| counts.leaf_sizes[b] as u64 * counts.p2p_src_per_box[b] as u64)
+            .collect();
+        weighted_ranges(&w, nt)
+    };
+    // Symmetric P2P partials go to the pool's leased accumulators, wrapped
+    // in range-checked buffers: the trim/size half of `Accum::reset` runs
+    // here, the O(workers × N) zero-fill runs inside the tasks (parallel;
+    // values identical to the pooled engine's task-side `reset`).
+    let (accbufs_v, acc_rest) = if symmetric {
+        let mut accs = pool.take_accums();
+        // hard invariant, as in the pooled engine: silently folding fewer
+        // accumulators than ranges would drop P2P contributions
+        assert!(
+            accs.len() >= p2p_rs.len(),
+            "accumulator lease shorter than the range list ({} < {})",
+            accs.len(),
+            p2p_rs.len()
+        );
+        let rest = accs.split_off(p2p_rs.len());
+        let bufs: Vec<(RangedBuf<f64>, RangedBuf<f64>)> = accs
+            .into_iter()
+            .map(|mut a| {
+                a.prepare(n);
+                (RangedBuf::new(a.re), RangedBuf::new(a.im))
+            })
+            .collect();
+        (bufs, rest)
+    } else {
+        (Vec::new(), Vec::new())
+    };
+    let accbufs: &[(RangedBuf<f64>, RangedBuf<f64>)] = &accbufs_v;
+
+    let phase_secs = Mutex::new([0.0f64; N_PHASES]);
+    let t_run = Instant::now();
+    {
+        let secs = &phase_secs;
+        let mut g = Graph::new();
+
+        // ---- P2M: leaf multipole expansions --------------------------------
+        let p2m = g.node(&[]);
+        for r in ranges(nl, nt) {
+            g.add_task(
+                p2m,
+                timed(secs, Phase::P2M, move |_ws| {
+                    let mut w = mbufs[levels].write(r.start * stride..r.end * stride);
+                    p2m_range(r, &mut w, pyr, &centers[levels], pos, gam, kernel, stride);
+                }),
+            );
+        }
+
+        // ---- M2M: upward chain, one node per level -------------------------
+        // `m_prod[l]` is the node that finalizes M[l] (P2M for the finest
+        // level — which also covers `levels == 0`, where P2M writes M[0]).
+        let mut m_prod: Vec<NodeId> = vec![p2m; levels + 1];
+        for l in (1..=levels).rev() {
+            let node = g.node(&[m_prod[l]]);
+            for r in ranges(boxes_at_level(l - 1), nt) {
+                g.add_task(
+                    node,
+                    timed(secs, Phase::M2M, move |ws| {
+                        let src = mbufs[l].read(0..mbufs[l].len());
+                        let mut w = mbufs[l - 1].write(r.start * stride..r.end * stride);
+                        m2m_range(
+                            r,
+                            &mut w,
+                            &src,
+                            &centers[l],
+                            &centers[l - 1],
+                            stride,
+                            &mut ws.shift,
+                        );
+                    }),
+                );
+            }
+            m_prod[l - 1] = node;
+        }
+
+        // ---- M2L: one node per level, gated only on that level's M ---------
+        // `l_prods[l]` collects the nodes writing L[l] *in serial program
+        // order* — the write-order dependency edges that keep accumulation
+        // into each local coefficient in the barrier engines' order
+        // (M2L, then P2L at the finest level, then L2L from above).
+        let mut l_prods: Vec<Vec<NodeId>> = vec![Vec::new(); levels + 1];
+        for l in 1..=levels {
+            let node = g.node(&[m_prod[l]]);
+            let nb = boxes_at_level(l);
+            for r in weighted_ranges(&m2l_weights(con, l, nb), nt) {
+                g.add_task(
+                    node,
+                    timed(secs, Phase::M2L, move |ws| {
+                        let src = mbufs[l].read(0..mbufs[l].len());
+                        let mut w = lbufs[l].write(r.start * stride..r.end * stride);
+                        m2l_range(
+                            r,
+                            &mut w,
+                            con,
+                            l,
+                            &centers[l],
+                            &src,
+                            stride,
+                            m2l_op.as_ref(),
+                            &mut ws.shift,
+                            &mut ws.m2l,
+                        );
+                    }),
+                );
+            }
+            l_prods[l].push(node);
+        }
+
+        // ---- P2L shortcuts (finest level; charged to M2L like the barrier
+        // engines — they substitute for it) --------------------------------
+        {
+            let node = g.node(&l_prods[levels]);
+            for r in ranges(nl, nt) {
+                g.add_task(
+                    node,
+                    timed(secs, Phase::M2L, move |_ws| {
+                        let mut w = lbufs[levels].write(r.start * stride..r.end * stride);
+                        p2l_shortcut_range(
+                            r,
+                            &mut w,
+                            pyr,
+                            con,
+                            &centers[levels],
+                            pos,
+                            gam,
+                            kernel,
+                            stride,
+                        );
+                    }),
+                );
+            }
+            l_prods[levels].push(node);
+        }
+
+        // ---- L2L: downward chain; level l → l+1 waits for every earlier
+        // producer of both levels (read source + write order) ---------------
+        for l in 1..levels {
+            let deps: Vec<NodeId> = l_prods[l].iter().chain(&l_prods[l + 1]).copied().collect();
+            let node = g.node(&deps);
+            for r in ranges(boxes_at_level(l + 1), nt) {
+                g.add_task(
+                    node,
+                    timed(secs, Phase::L2L, move |ws| {
+                        let src = lbufs[l].read(0..lbufs[l].len());
+                        let mut w = lbufs[l + 1].write(r.start * stride..r.end * stride);
+                        l2l_range(
+                            r,
+                            &mut w,
+                            &src,
+                            &centers[l],
+                            &centers[l + 1],
+                            stride,
+                            &mut ws.shift,
+                        );
+                    }),
+                );
+            }
+            l_prods[l + 1].push(node);
+        }
+
+        // ---- L2P (+ M2P): needs the finished finest M and L levels — but
+        // *not* the upward M2M chain above the finest level ------------------
+        let l2p = {
+            let mut deps = l_prods[levels].clone();
+            deps.push(m_prod[levels]);
+            let node = g.node(&deps);
+            for r in weighted_ranges(&l2p_weights(pyr, con, nl), nt) {
+                g.add_task(
+                    node,
+                    timed(secs, Phase::L2P, move |_ws| {
+                        let mlev = mbufs[levels].read(0..mbufs[levels].len());
+                        let llev = lbufs[levels].read(0..lbufs[levels].len());
+                        let mut w = phibuf.write(pyr.starts[r.start]..pyr.starts[r.end]);
+                        l2p_range(
+                            r,
+                            &mut w,
+                            pyr,
+                            con,
+                            &centers[levels],
+                            &mlev,
+                            &llev,
+                            pos,
+                            stride,
+                        );
+                    }),
+                );
+            }
+            node
+        };
+
+        // ---- P2P: fully concurrent with the whole multipole chain ----------
+        if symmetric {
+            // accumulation into leased per-task buffers needs nothing at all
+            let acc_node = g.node(&[]);
+            for (k, r) in p2p_rs.iter().enumerate() {
+                let r = r.clone();
+                g.add_task(
+                    acc_node,
+                    timed(secs, Phase::P2P, move |_ws| {
+                        let (bre, bim) = &accbufs[k];
+                        let mut wre = bre.write(0..n);
+                        let mut wim = bim.write(0..n);
+                        wre.fill(0.0);
+                        wim.fill(0.0);
+                        p2p_symmetric_range(r, pyr, con, xs, ys, gre, gim, &mut wre, &mut wim);
+                    }),
+                );
+            }
+            // the merge folds partials into Φ in accumulator index order —
+            // the same fixed reduction order as the barrier engines
+            let merge = g.node(&[l2p, acc_node]);
+            for r in ranges(n, nt) {
+                g.add_task(
+                    merge,
+                    timed(secs, Phase::P2P, move |_ws| {
+                        let mut w = phibuf.write(r.clone());
+                        for (bre, bim) in accbufs {
+                            let are = bre.read(r.clone());
+                            let aim = bim.read(r.clone());
+                            for k in 0..(r.end - r.start) {
+                                w[k] += C64::new(are[k], aim[k]);
+                            }
+                        }
+                    }),
+                );
+            }
+        } else {
+            // directed formulation: read-modify-write of the L2P results
+            let node = g.node(&[l2p]);
+            for r in p2p_rs.iter().cloned() {
+                g.add_task(
+                    node,
+                    timed(secs, Phase::P2P, move |_ws| {
+                        let mut chunk = phibuf.write(pyr.starts[r.start]..pyr.starts[r.end]);
+                        p2p_directed_range(r, &mut chunk, pyr, con, pos, gam, kernel);
+                    }),
+                );
+            }
+        }
+
+        g.run(pool, nt, jitter);
+    }
+    let wall = t_run.elapsed().as_secs_f64();
+
+    // Return the leased accumulators (used ones recovered from their range
+    // wrappers) so subsequent evaluations reuse the allocations.
+    if symmetric {
+        let mut accs: Vec<Accum> = accbufs_v
+            .into_iter()
+            .map(|(re, im)| Accum {
+                re: re.into_inner(),
+                im: im.into_inner(),
+            })
+            .collect();
+        accs.extend(acc_rest);
+        pool.return_accums(accs);
+    }
+
+    // Per-phase task seconds, normalized so Σ phases = overlapped wall
+    // clock — the calibration-facing convention (see the module docs).
+    let secs = match phase_secs.into_inner() {
+        Ok(s) => s,
+        Err(e) => e.into_inner(),
+    };
+    let mut total = 0.0;
+    for s in &secs {
+        total += *s;
+    }
+    let mut times = PhaseTimes::default();
+    if total > 0.0 {
+        for i in 0..N_PHASES {
+            times.0[i] = secs[i] / total * wall;
+        }
+    }
+    let stats = OverlapStats {
+        wall_s: wall,
+        busy_s: total,
+    };
+
+    (phibuf.into_inner(), times, counts, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FmmConfig;
+    use crate::util::rng::Pcg64;
+    use crate::workload;
+
+    #[test]
+    fn taskgraph_is_bitwise_identical_to_pooled() {
+        let mut r = Pcg64::seed_from_u64(41);
+        let (pts, gs) = workload::uniform_square(2500, &mut r);
+        let pyr = Pyramid::build(&pts, &gs, 3).unwrap();
+        let con = Connectivity::build(&pyr, 0.5);
+        for symmetric in [true, false] {
+            let opts = FmmOptions {
+                cfg: FmmConfig {
+                    p: 10,
+                    levels_override: Some(3),
+                    ..FmmConfig::default()
+                },
+                symmetric_p2p: symmetric,
+                threads: Some(3),
+                ..Default::default()
+            };
+            let pool = WorkerPool::new(3, false);
+            let (pooled, _, cp) =
+                super::super::parallel::evaluate_on_tree_pool(&pyr, &con, &opts, &pool);
+            let (tg, _, ct) = evaluate_on_tree_taskgraph(&pyr, &con, &opts, &pool);
+            assert_eq!(pooled.len(), tg.len());
+            for (a, b) in pooled.iter().zip(&tg) {
+                assert_eq!(a.re, b.re, "symmetric={symmetric}");
+                assert_eq!(a.im, b.im, "symmetric={symmetric}");
+            }
+            assert_eq!(cp.p2p_pairs, ct.p2p_pairs);
+            assert_eq!(cp.m2l_per_level, ct.m2l_per_level);
+        }
+    }
+
+    #[test]
+    fn taskgraph_handles_single_level_trees() {
+        let mut r = Pcg64::seed_from_u64(43);
+        let (pts, gs) = workload::uniform_square(300, &mut r);
+        let pyr = Pyramid::build(&pts, &gs, 1).unwrap();
+        let con = Connectivity::build(&pyr, 0.5);
+        let opts = FmmOptions {
+            cfg: FmmConfig {
+                p: 8,
+                levels_override: Some(1),
+                ..FmmConfig::default()
+            },
+            threads: Some(2),
+            ..Default::default()
+        };
+        let pool = WorkerPool::new(2, false);
+        let (pooled, _, _) =
+            super::super::parallel::evaluate_on_tree_pool(&pyr, &con, &opts, &pool);
+        let (tg, _, _) = evaluate_on_tree_taskgraph(&pyr, &con, &opts, &pool);
+        for (a, b) in pooled.iter().zip(&tg) {
+            assert_eq!(a.re, b.re);
+            assert_eq!(a.im, b.im);
+        }
+    }
+}

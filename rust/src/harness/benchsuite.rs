@@ -17,7 +17,7 @@ use std::path::{Path, PathBuf};
 use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
 use crate::config::FmmConfig;
-use crate::fmm::{self, FmmOptions};
+use crate::fmm::{self, CpuEngine, FmmOptions};
 use crate::harness::runner::workload_for;
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
@@ -113,7 +113,11 @@ pub fn run(opts: &BenchSuiteOpts) -> Result<BenchRecord> {
 /// public [`run`] passes the fixed matrix; tests pass a tiny one).
 pub fn run_matrix(opts: &BenchSuiteOpts, matrix: &[(Distribution, usize)]) -> Result<BenchRecord> {
     let reps = opts.reps.max(1);
-    let engines: [(&str, Option<usize>); 2] = [("serial", Some(1)), ("parallel", opts.threads)];
+    let engines: [(&str, Option<usize>, CpuEngine); 3] = [
+        ("serial", Some(1), CpuEngine::Barrier),
+        ("parallel", opts.threads, CpuEngine::Barrier),
+        ("taskgraph", opts.threads, CpuEngine::TaskGraph),
+    ];
     let threads = FmmOptions {
         threads: opts.threads,
         ..FmmOptions::default()
@@ -122,11 +126,12 @@ pub fn run_matrix(opts: &BenchSuiteOpts, matrix: &[(Distribution, usize)]) -> Re
     let mut cases = Vec::new();
     for &(dist, n) in matrix {
         let (pts, gs) = workload_for(dist, n, opts.seed);
-        for (name, engine_threads) in engines {
+        for (name, engine_threads, cpu_engine) in engines {
             let fopts = FmmOptions {
                 cfg: FmmConfig::default(),
                 threads: engine_threads,
                 pin: opts.pin,
+                cpu_engine,
                 ..FmmOptions::default()
             };
             // warmup: first contact pays pool spawn-up and page faults
@@ -474,14 +479,16 @@ mod tests {
     }
 
     #[test]
-    fn tiny_matrix_measures_both_engines() {
+    fn tiny_matrix_measures_every_engine() {
         let opts = BenchSuiteOpts {
             reps: 2,
             threads: Some(2),
             ..BenchSuiteOpts::default()
         };
         let r = run_matrix(&opts, &[(Distribution::Uniform, 300)]).unwrap();
-        assert_eq!(r.cases.len(), 2); // serial + parallel
+        assert_eq!(r.cases.len(), 3); // serial + parallel + taskgraph
+        let lanes: Vec<&str> = r.cases.iter().map(|c| c.engine.as_str()).collect();
+        assert_eq!(lanes, ["serial", "parallel", "taskgraph"]);
         for c in &r.cases {
             assert!(c.median_s > 0.0 && c.points_per_s > 0.0);
             assert_eq!(c.n, 300);

@@ -695,14 +695,18 @@ pub fn topo_bench(o: &HarnessOpts) -> SeriesTable {
 
 /// The `pool-bench` CLI command: per-phase wall-clock of the persistent
 /// worker pool against the scoped spawn-per-phase engine and the serial
-/// driver, on a fixed prebuilt tree per N (best-of-reps). Returns one
+/// driver, on a fixed prebuilt tree per N (best-of-reps), plus the
+/// task-graph pipelined engine's wall-clock and its overlap ratio
+/// (mean simultaneously busy workers, busy/wall). Returns one
 /// table per measured worker count — `--threads T` pins a single count,
 /// the default sweeps powers of two up to the machine. The acceptance
 /// claims this table carries: at N ≥ 10⁴ the pool loses no phase to the
-/// scoped engine, and at N ≤ 10³ it cuts the end-to-end dispatch
-/// overhead that per-phase spawn/join used to pay.
+/// scoped engine, at N ≤ 10³ it cuts the end-to-end dispatch
+/// overhead that per-phase spawn/join used to pay, and the task-graph
+/// engine's overlap column stays > 1 wherever multiple phases have work.
 pub fn pool_bench(o: &HarnessOpts) -> Vec<SeriesTable> {
     use crate::fmm::parallel::{evaluate_on_tree_parallel, evaluate_on_tree_pool};
+    use crate::fmm::taskgraph::evaluate_on_tree_taskgraph_stats;
     use crate::fmm::PhaseTimes;
     use crate::topology::{self, TopologyOptions};
     use crate::util::pool::WorkerPool;
@@ -744,6 +748,7 @@ pub fn pool_bench(o: &HarnessOpts) -> Vec<SeriesTable> {
                 "p2m_scope", "p2m_pool", "m2m_scope", "m2m_pool", "m2l_scope", "m2l_pool",
                 "l2l_scope", "l2l_pool", "l2p_scope", "l2p_pool", "p2p_scope", "p2p_pool",
                 "total_serial", "pred_serial", "total_scope", "total_pool", "pred_pool",
+                "total_tg", "pred_tg", "tg_overlap",
             ],
         );
         for &n in &ns {
@@ -787,8 +792,22 @@ pub fn pool_bench(o: &HarnessOpts) -> Vec<SeriesTable> {
                 measure(&|| evaluate_on_tree_parallel(pyr, con, &opts, t).1);
             let (pool_t, pool_total) =
                 measure(&|| evaluate_on_tree_pool(pyr, con, &opts, &pool).1);
+            // the task-graph lane, best-of-reps like the others; the
+            // overlap column is busy/wall of the *best* wall-clock run
+            // (mean simultaneously busy workers — 1.0 means the schedule
+            // degenerated to a serialized chain)
+            let mut tg_total = f64::INFINITY;
+            let mut tg_overlap = 0.0;
+            for _ in 0..reps {
+                let (_, _, _, stats) =
+                    evaluate_on_tree_taskgraph_stats(pyr, con, &opts, &pool, None);
+                if stats.wall_s < tg_total {
+                    tg_total = stats.wall_s;
+                    tg_overlap = stats.ratio();
+                }
+            }
             let problem = crate::dispatch::Problem::from_config(&cfg, n);
-            let (pred_serial, pred_pool) = dispatcher.predict_compute(&problem, t);
+            let (pred_serial, pred_pool, pred_tg) = dispatcher.predict_compute(&problem, t);
             table.push(
                 n as f64,
                 vec![
@@ -809,6 +828,9 @@ pub fn pool_bench(o: &HarnessOpts) -> Vec<SeriesTable> {
                     scope_total,
                     pool_total,
                     pred_pool,
+                    tg_total,
+                    pred_tg,
+                    tg_overlap,
                 ],
             );
         }
@@ -822,7 +844,7 @@ pub fn pool_bench(o: &HarnessOpts) -> Vec<SeriesTable> {
 /// — for single problems across N and for homogeneous batch groups
 /// across K. Calibrates a fresh profile inline (quick sizes unless
 /// `--full`) so the table reflects *this* machine, not a stale file; the
-/// `choice` column is 0 = serial, 1 = pooled, 2 = xla.
+/// `choice` column is 0 = serial, 1 = pooled, 2 = xla, 3 = taskgraph.
 pub fn dispatch_bench(o: &HarnessOpts) -> Vec<SeriesTable> {
     use crate::dispatch::{
         evaluate_auto, CalibrationOptions, CalibrationProfile, Dispatcher, EngineChoice,
@@ -841,6 +863,7 @@ pub fn dispatch_bench(o: &HarnessOpts) -> Vec<SeriesTable> {
         EngineChoice::Serial => 0.0,
         EngineChoice::Pooled { .. } => 1.0,
         EngineChoice::Xla => 2.0,
+        EngineChoice::TaskGraph { .. } => 3.0,
     };
     let cols = [
         "pred_serial_s",

@@ -11,7 +11,7 @@ use fmm2d::dispatch::{
     CalibrationOptions, CalibrationProfile, DispatchReport, Dispatcher, Engine, EngineChoice,
 };
 use fmm2d::expansion::Kernel;
-use fmm2d::fmm::{self, FmmOptions, PhaseTimes, PHASE_NAMES};
+use fmm2d::fmm::{self, CpuEngine, FmmOptions, PhaseTimes, PHASE_NAMES};
 use fmm2d::harness::{self, HarnessOpts};
 use fmm2d::util::cli::Args;
 use fmm2d::util::error::{Context, Result};
@@ -49,13 +49,13 @@ Validation & tools:
                 sizes, dispatch profile only — the CI smoke configuration]
                 [--profile FILE] [--threads T: calibrate one pooled count]
   run           one evaluation: --n --p --nd --dist uniform|normal|layer
-                [--sigma S] [--engine serial|parallel|xla|auto]
+                [--sigma S] [--engine serial|parallel|taskgraph|xla|auto]
                 [--profile FILE] [--threads T] [--topo-threads T] [--pin]
                 [--check] [--log-kernel]
   batch         evaluate --count K problems of --n points each in grouped
                 fixed-shape dispatches: [--nmin A --nmax B] (size spread —
                 heterogeneous shapes form multiple groups) [--batch-size G]
-                [--engine serial|parallel|xla|auto] [--profile FILE]
+                [--engine serial|parallel|taskgraph|xla|auto] [--profile FILE]
                 [--p --nd --dist --sigma
                 --seed --threads --topo-threads --pin] [--no-overlap: build all
                 topologies before dispatching instead of overlapping them
@@ -67,13 +67,14 @@ Validation & tools:
                 --seed --threads)
   pool-bench    per-phase wall-clock: persistent worker pool vs scoped
                 spawn-per-phase engine vs serial, per N, plus the
-                dispatcher's predicted totals (--full --seed; --threads T
+                dispatcher's predicted totals and the task-graph engine's
+                wall-clock + phase-overlap ratio (--full --seed; --threads T
                 pins one worker count, default sweeps; --pin)
   dispatch-bench predicted vs measured time per candidate engine and the
                 auto choice, for single problems and batch groups (--full
                 --seed --threads --pin)
   bench-suite   strict perf baseline: fixed matrix (sizes × distributions ×
-                serial/parallel), warmup + median of --reps R (default 5),
+                serial/parallel/taskgraph), warmup + median of --reps R (default 5),
                 written to results/BENCH_<date>.json and compared against
                 the newest earlier record (or --baseline FILE) as per-case
                 ratios (--full --seed --threads --pin --out FILE)
@@ -82,7 +83,10 @@ Validation & tools:
 The default engine is `parallel` with all available cores; --threads T caps
 the worker count (T=1 falls back to the serial reference driver). Multicore
 runs execute on a persistent worker pool (threads spawned once per
-process); --pin pins worker i to core i (best-effort, Linux). The
+process); --pin pins worker i to core i (best-effort, Linux). `taskgraph`
+runs the same pool through the dependency-graph scheduler: no phase
+barriers, P2P overlaps the multipole chain, results stay bitwise-identical
+to `parallel` (DESIGN.md §9). The
 topological phase (Sort/Connect) follows --threads through the parallel
 topology engine; --topo-threads T overrides it independently (T=1 serial
 build, T=0 all cores). `--engine auto` resolves the engine per problem and
@@ -473,6 +477,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         threads,
         topo_threads,
         pin: args.flag("pin"),
+        cpu_engine: match engine {
+            // the pipelined engine replaces the barrier engine in-place;
+            // every other selector keeps the barrier default
+            Engine::TaskGraph => CpuEngine::TaskGraph,
+            _ => CpuEngine::Barrier,
+        },
         ..FmmOptions::default()
     };
     println!(
@@ -483,7 +493,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
 
     let potentials = match engine {
-        Engine::Serial | Engine::Parallel => {
+        Engine::Serial | Engine::Parallel | Engine::TaskGraph => {
             let out = fmm::evaluate(&pts, &gs, &opts)?;
             print_phase_times(&out.times);
             out.potentials

@@ -10,5 +10,6 @@ pub mod json;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod sched;
 pub mod stats;
 pub mod threadpool;

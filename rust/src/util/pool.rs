@@ -103,15 +103,24 @@ impl Accum {
     /// (e.g. process-global) pool does not pin `O(workers × max-N)` memory
     /// forever once the workload moves back to small problems.
     pub fn reset(&mut self, n: usize) {
+        self.prepare(n);
+        self.re.fill(0.0);
+        self.im.fill(0.0);
+    }
+
+    /// The retention/sizing half of [`Accum::reset`] without the
+    /// zero-fill: the task-graph engine applies the trim policy and sizes
+    /// the buffers on the caller, then zeroes them *inside* the P2P tasks
+    /// so the `O(workers × N)` memset runs in parallel. Values are
+    /// identical to `reset` once the task-side fill has run.
+    pub fn prepare(&mut self, n: usize) {
         const SLACK: usize = 4;
         const KEEP_BELOW: usize = 1 << 16; // ≤ 512 KiB per vec: always keep
         if self.re.capacity() > SLACK * n.max(KEEP_BELOW) {
             self.re = Vec::new();
             self.im = Vec::new();
         }
-        self.re.clear();
         self.re.resize(n, 0.0);
-        self.im.clear();
         self.im.resize(n, 0.0);
     }
 }
@@ -551,6 +560,215 @@ fn worker_loop(shared: &Shared, id: usize, pin: bool) {
 }
 
 // ---------------------------------------------------------------------------
+// Range-checked shared buffers (task-graph support)
+// ---------------------------------------------------------------------------
+
+/// A shared buffer handing out **range-scoped** borrows checked at
+/// runtime. The task-graph engine ([`crate::fmm::taskgraph`]) runs tasks
+/// of *different phases* concurrently: one task writes a disjoint chunk of
+/// a destination buffer while tasks of another node read the whole buffer
+/// one level up — a borrow structure the compile-time checker cannot
+/// express when the set of live borrows is decided by a dependency graph
+/// resolved at runtime. `RangedBuf` enforces the aliasing rules
+/// dynamically instead: a mutex-guarded ledger of active borrows rejects
+/// (panics on) any overlap involving a writer, which is exactly what makes
+/// the raw-pointer slices handed out sound. The scheduler's dependency
+/// edges make rejections unreachable in the engine; the ledger is the
+/// armed proof obligation, not a hot-path cost (one lock per *task*, not
+/// per element).
+///
+/// The type lives here — not next to its only consumer — because this
+/// module is the crate's sanctioned home for `unsafe` (see the module
+/// docs; enforced by `cargo xtask lint`).
+pub struct RangedBuf<T> {
+    /// Owns the allocation. Elements are only ever touched through `base`;
+    /// the cell is read again only by `into_inner(self)`, when no guard
+    /// can be alive.
+    data: std::cell::UnsafeCell<Vec<T>>,
+    /// Base pointer of the allocation, captured at construction. The
+    /// vector is never grown or shrunk afterwards (no such API exists on
+    /// `RangedBuf`), so the pointer stays valid for the buffer's lifetime.
+    base: *mut T,
+    len: usize,
+    ledger: Mutex<Ledger>,
+}
+
+#[derive(Default)]
+struct Ledger {
+    next: u64,
+    /// Active borrows: `(guard id, element range, exclusive?)`.
+    active: Vec<(u64, Range<usize>, bool)>,
+}
+
+// SAFETY: moving a `RangedBuf` between threads moves the owned `Vec<T>`
+// plus a pointer into its (heap) allocation; sound whenever `T: Send`.
+unsafe impl<T: Send> Send for RangedBuf<T> {}
+// SAFETY: every cross-thread access path goes through the ledger, which
+// admits overlapping ranges only for read/read sharing (`&[T]` on several
+// threads — needs `T: Sync`) and hands disjoint ranges to writers
+// (`&mut [T]` used from another thread — needs `T: Send`).
+unsafe impl<T: Send + Sync> Sync for RangedBuf<T> {}
+
+impl<T> RangedBuf<T> {
+    pub fn new(mut data: Vec<T>) -> Self {
+        let base = data.as_mut_ptr();
+        let len = data.len();
+        RangedBuf {
+            data: std::cell::UnsafeCell::new(data),
+            base,
+            len,
+            ledger: Mutex::new(Ledger::default()),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Recover the underlying vector. Taking `self` by value statically
+    /// guarantees no guard is alive.
+    pub fn into_inner(self) -> Vec<T> {
+        self.data.into_inner()
+    }
+
+    fn ledger(&self) -> std::sync::MutexGuard<'_, Ledger> {
+        // Overlap violations panic *while holding* this lock; guards being
+        // dropped during the resulting unwind must still release their
+        // entries, so poisoning is deliberately ignored (the ledger is
+        // consistent at every panic site — the violating entry was never
+        // inserted).
+        self.ledger
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    fn admit(&self, r: &Range<usize>, write: bool) -> u64 {
+        assert!(
+            r.start <= r.end && r.end <= self.len,
+            "range {r:?} out of bounds for RangedBuf of len {}",
+            self.len
+        );
+        let mut led = self.ledger();
+        for (_, held, excl) in &led.active {
+            let overlap = r.start < held.end && held.start < r.end;
+            assert!(
+                !(overlap && (write || *excl)),
+                "conflicting range borrows: requested {:?} ({}) overlaps held {:?} ({})",
+                r,
+                if write { "write" } else { "read" },
+                held,
+                if *excl { "write" } else { "read" },
+            );
+        }
+        let id = led.next;
+        led.next += 1;
+        led.active.push((id, r.clone(), write));
+        id
+    }
+
+    fn release(&self, id: u64) {
+        let mut led = self.ledger();
+        if let Some(k) = led.active.iter().position(|(i, _, _)| *i == id) {
+            led.active.swap_remove(k);
+        }
+    }
+
+    /// Borrow `r` shared. Panics if any *exclusive* borrow overlaps it.
+    pub fn read(&self, r: Range<usize>) -> RangedRead<'_, T> {
+        let (start, len) = (r.start, r.end - r.start);
+        let id = self.admit(&r, false);
+        // SAFETY: `base` points at the start of a live allocation of
+        // `self.len` elements and the ledger just admitted
+        // `start..start + len` as in bounds.
+        let ptr = unsafe { self.base.add(start) } as *const T;
+        RangedRead {
+            buf: self,
+            id,
+            ptr,
+            len,
+        }
+    }
+
+    /// Borrow `r` exclusively. Panics if *any* borrow overlaps it.
+    pub fn write(&self, r: Range<usize>) -> RangedWrite<'_, T> {
+        let (start, len) = (r.start, r.end - r.start);
+        let id = self.admit(&r, true);
+        // SAFETY: as in `read`; the admitted entry is exclusive.
+        let ptr = unsafe { self.base.add(start) };
+        RangedWrite {
+            buf: self,
+            id,
+            ptr,
+            len,
+        }
+    }
+}
+
+/// Shared borrow of a [`RangedBuf`] range (`Deref` to `[T]`).
+pub struct RangedRead<'b, T> {
+    buf: &'b RangedBuf<T>,
+    id: u64,
+    ptr: *const T,
+    len: usize,
+}
+
+impl<T> std::ops::Deref for RangedRead<'_, T> {
+    type Target = [T];
+    #[inline]
+    fn deref(&self) -> &[T] {
+        // SAFETY: the ledger entry held by this guard keeps every
+        // overlapping exclusive borrow out until `Drop` releases it, and
+        // `ptr..ptr + len` was admitted as in bounds.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl<T> Drop for RangedRead<'_, T> {
+    fn drop(&mut self) {
+        self.buf.release(self.id);
+    }
+}
+
+/// Exclusive borrow of a [`RangedBuf`] range (`DerefMut` to `[T]`).
+pub struct RangedWrite<'b, T> {
+    buf: &'b RangedBuf<T>,
+    id: u64,
+    ptr: *mut T,
+    len: usize,
+}
+
+impl<T> std::ops::Deref for RangedWrite<'_, T> {
+    type Target = [T];
+    #[inline]
+    fn deref(&self) -> &[T] {
+        // SAFETY: the exclusive ledger entry held by this guard keeps
+        // every overlapping borrow out until `Drop` releases it.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl<T> std::ops::DerefMut for RangedWrite<'_, T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [T] {
+        // SAFETY: as in `deref` — the entry is exclusive, so handing out
+        // `&mut` cannot alias any other live guard.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+}
+
+impl<T> Drop for RangedWrite<'_, T> {
+    fn drop(&mut self) {
+        self.buf.release(self.id);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Affinity
 // ---------------------------------------------------------------------------
 
@@ -769,6 +987,96 @@ mod tests {
         let out = pool.map_items(vec![1u32, 2, 3], |i| i + 1);
         assert_eq!(out, vec![2, 3, 4]);
         assert_eq!(pool.shutdown_and_count(), 0);
+    }
+
+    #[test]
+    fn ranged_buf_disjoint_writes_and_overlapping_reads() {
+        let buf = RangedBuf::new(vec![0u32; 10]);
+        {
+            let mut a = buf.write(0..5);
+            let mut b = buf.write(5..10);
+            a.fill(1);
+            b.fill(2);
+        }
+        {
+            let r1 = buf.read(0..10);
+            let r2 = buf.read(3..8); // read/read overlap is fine
+            assert_eq!(r1[0], 1);
+            assert_eq!(r2[4], 2);
+        }
+        let v = buf.into_inner();
+        assert_eq!(v, [1, 1, 1, 1, 1, 2, 2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn ranged_buf_guards_release_on_drop() {
+        let buf = RangedBuf::new(vec![0u8; 4]);
+        drop(buf.write(0..4));
+        drop(buf.write(0..4)); // same range again: previous guard released
+        drop(buf.read(0..4));
+        drop(buf.write(0..4));
+    }
+
+    #[test]
+    fn ranged_buf_rejects_write_write_overlap() {
+        let buf = RangedBuf::new(vec![0u8; 8]);
+        let _w = buf.write(0..5);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| buf.write(4..8)));
+        assert!(err.is_err(), "overlapping writes must panic");
+        // the rejected borrow left no ledger entry behind
+        drop(_w);
+        drop(buf.write(4..8));
+    }
+
+    #[test]
+    fn ranged_buf_rejects_read_write_overlap() {
+        let buf = RangedBuf::new(vec![0u8; 8]);
+        let _r = buf.read(2..6);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| buf.write(5..7)));
+        assert!(err.is_err(), "write overlapping a read must panic");
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| buf.read(9..10)));
+        assert!(err.is_err(), "out-of-bounds range must panic");
+        drop(buf.write(6..8)); // disjoint write is fine while reading
+    }
+
+    #[test]
+    fn ranged_buf_is_shareable_across_pool_workers() {
+        let pool = WorkerPool::new(3, false);
+        let buf = RangedBuf::new(vec![0usize; 30]);
+        let rs = crate::util::threadpool::ranges(30, 5);
+        {
+            let buf = &buf;
+            pool.run_tasks(rs, |_k, r, _ws| {
+                let mut w = buf.write(r.clone());
+                for (k, i) in r.enumerate() {
+                    w[k] = i * 2;
+                }
+            });
+        }
+        let v = buf.into_inner();
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i * 2);
+        }
+    }
+
+    #[test]
+    fn accum_prepare_then_fill_matches_reset() {
+        let mut a = Accum::default();
+        a.reset(6);
+        a.re[3] = 5.0;
+        a.im[2] = -1.0;
+        a.prepare(6);
+        a.re.fill(0.0);
+        a.im.fill(0.0);
+        let mut b = Accum::default();
+        b.reset(6);
+        assert_eq!(a.re, b.re);
+        assert_eq!(a.im, b.im);
+        // prepare resizes without losing the allocation
+        let ptr = a.re.as_ptr();
+        a.prepare(4);
+        assert_eq!(a.re.len(), 4);
+        assert_eq!(a.re.as_ptr(), ptr);
     }
 
     #[test]

@@ -1,0 +1,457 @@
+//! Dependency-gated task scheduling on the persistent worker pool.
+//!
+//! The barrier engines run every FMM phase as a global fan-out: no task of
+//! phase *k+1* starts before the last task of phase *k* retires, even when
+//! the two touch unrelated data (P2P vs the whole multipole chain; level
+//! `l` vs level `l+1`). This module provides the runtime underneath the
+//! task-graph engine ([`crate::fmm::taskgraph`]) that removes those
+//! barriers: a [`Graph`] of **nodes** (one per phase×level shard group)
+//! connected by dependency edges, executed by pool workers draining a
+//! **ready queue** gated on per-node counters.
+//!
+//! Protocol (all counter updates under **one** mutex, the reduction the
+//! model check in `tests/pool_model.rs` verifies):
+//!
+//! * `pending[n]` — dependency nodes of `n` not yet complete. When it
+//!   reaches zero the node becomes *ready*: its tasks are pushed onto the
+//!   shared ready queue (a node with no tasks completes immediately and
+//!   cascades).
+//! * `unfinished[n]` — tasks of `n` not yet retired. A worker pops a
+//!   `(node, task)` pair, claims the task closure from its one-shot slot,
+//!   runs it **outside** the lock, then decrements; reaching zero
+//!   completes the node, decrements every successor's `pending`, and
+//!   wakes the waiters.
+//! * Termination: `nodes_remaining == 0`. Deadlock freedom is structural —
+//!   [`Graph::node`] only accepts already-created nodes as dependencies,
+//!   so the graph is acyclic by construction, and an acyclic graph always
+//!   has a ready task while incomplete nodes remain and nothing is in
+//!   flight.
+//!
+//! **Determinism**: the scheduler adds no nondeterminism to *results*.
+//! Every task owns a disjoint `&mut` destination range (writer-side
+//! ownership, enforced at runtime by [`crate::util::pool::RangedBuf`]) and
+//! every cross-task reduction is folded in fixed task order by a
+//! *consumer* task, so any dependency-respecting execution order produces
+//! bitwise-identical output. The schedule-fuzz suite
+//! (`tests/taskgraph_parity.rs`) drives this with [`Jitter`]: seeded
+//! per-worker busy-wait pauses before every claim perturb the schedule
+//! without touching the arithmetic.
+//!
+//! Workers are the pool's own threads — [`Graph::run`] issues a single
+//! [`WorkerPool::run_tasks`] fan-out of drain loops, so a whole evaluation
+//! is **one** pool epoch and spawns nothing. Called *from* a pool worker
+//! (nested use, e.g. the batch runner), the fan-out degrades to inline
+//! execution and the first drain loop retires the entire graph serially.
+
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::sync::{Condvar, Mutex};
+
+use crate::util::pool::{WorkerPool, WorkerScratch};
+
+/// Handle to a node created by [`Graph::node`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NodeId(usize);
+
+type Task<'g> = Box<dyn FnOnce(&mut WorkerScratch) + Send + 'g>;
+
+struct Node<'g> {
+    /// Dependency node indices, sorted and deduplicated (all `< self`).
+    deps: Vec<usize>,
+    tasks: Vec<Task<'g>>,
+}
+
+/// A dependency graph of tasks, built once and consumed by [`Graph::run`].
+/// Task closures may borrow the caller's stack (`'g`): `run` blocks until
+/// every task has retired, which is the lifetime barrier.
+#[derive(Default)]
+pub struct Graph<'g> {
+    nodes: Vec<Node<'g>>,
+}
+
+impl<'g> Graph<'g> {
+    pub fn new() -> Self {
+        Graph::default()
+    }
+
+    /// Create a node depending on `deps`. Dependencies must already exist —
+    /// which is also what makes every graph acyclic by construction.
+    pub fn node(&mut self, deps: &[NodeId]) -> NodeId {
+        let mut ds: Vec<usize> = deps
+            .iter()
+            .map(|d| {
+                assert!(d.0 < self.nodes.len(), "dependency on a node created later");
+                d.0
+            })
+            .collect();
+        ds.sort_unstable();
+        ds.dedup();
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            deps: ds,
+            tasks: Vec::new(),
+        });
+        NodeId(id)
+    }
+
+    /// Attach a task to `n`. Tasks of one node may run concurrently with
+    /// each other (and with tasks of any dependency-unrelated node) — the
+    /// caller guarantees they own disjoint destinations.
+    pub fn add_task(&mut self, n: NodeId, f: impl FnOnce(&mut WorkerScratch) + Send + 'g) {
+        self.nodes[n.0].tasks.push(Box::new(f));
+    }
+
+    /// Number of nodes created so far.
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Number of tasks attached so far.
+    pub fn n_tasks(&self) -> usize {
+        self.nodes.iter().map(|n| n.tasks.len()).sum()
+    }
+
+    /// Execute the graph on `width` pool workers (clamped to `1..=` pool
+    /// width by the pool itself) and block until every task has retired.
+    /// `jitter` injects seeded schedule noise for the fuzz suites — `None`
+    /// in production.
+    pub fn run(self, pool: &WorkerPool, width: usize, jitter: Option<Jitter>) {
+        let n = self.nodes.len();
+        if n == 0 {
+            return;
+        }
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut pending = vec![0usize; n];
+        for (i, nd) in self.nodes.iter().enumerate() {
+            pending[i] = nd.deps.len();
+            for &d in &nd.deps {
+                succs[d].push(i);
+            }
+        }
+        let slots: Vec<Vec<Mutex<Option<Task<'g>>>>> = self
+            .nodes
+            .into_iter()
+            .map(|nd| nd.tasks.into_iter().map(|t| Mutex::new(Some(t))).collect())
+            .collect();
+        let mut st = RunState {
+            ready: VecDeque::new(),
+            pending,
+            unfinished: slots.iter().map(|s| s.len()).collect(),
+            nodes_remaining: n,
+            poisoned: false,
+        };
+        // Seed the ready queue with the dependency-free nodes (task-less
+        // roots complete immediately and cascade into their successors).
+        for i in 0..n {
+            if st.pending[i] == 0 {
+                if st.unfinished[i] == 0 {
+                    complete_node(&mut st, &succs, i);
+                } else {
+                    enqueue_tasks(&mut st, i);
+                }
+            }
+        }
+        let sync = (Mutex::new(st), Condvar::new());
+        let width = width.max(1);
+        let (slots, succs, sync) = (&slots, &succs, &sync);
+        pool.run_tasks((0..width).collect::<Vec<usize>>(), move |w, _t, ws| {
+            drain(slots, succs, sync, jitter.map(|j| j.for_worker(w)), ws);
+        });
+    }
+}
+
+struct RunState {
+    /// Claimable `(node, task)` pairs; every pair is enqueued exactly once
+    /// (when its node's last dependency completes).
+    ready: VecDeque<(usize, usize)>,
+    /// Per node: dependency nodes not yet complete.
+    pending: Vec<usize>,
+    /// Per node: tasks not yet retired.
+    unfinished: Vec<usize>,
+    /// Nodes not yet complete; `0` terminates every drain loop.
+    nodes_remaining: usize,
+    /// A task panicked: abandon the run (the catching worker re-raises,
+    /// and the pool re-raises to the submitting caller).
+    poisoned: bool,
+}
+
+fn enqueue_tasks(st: &mut RunState, i: usize) {
+    for t in 0..st.unfinished[i] {
+        st.ready.push_back((i, t));
+    }
+}
+
+/// Called under the lock when node `i` retires its last task (or is a
+/// task-less node whose last dependency completed): cascade completion
+/// into the successors.
+fn complete_node(st: &mut RunState, succs: &[Vec<usize>], i: usize) {
+    let mut done = vec![i];
+    while let Some(d) = done.pop() {
+        st.nodes_remaining -= 1;
+        for &s in &succs[d] {
+            st.pending[s] -= 1;
+            if st.pending[s] == 0 {
+                if st.unfinished[s] == 0 {
+                    done.push(s);
+                } else {
+                    enqueue_tasks(st, s);
+                }
+            }
+        }
+    }
+}
+
+type Sync_<'g> = (Mutex<RunState>, Condvar);
+
+fn drain<'g>(
+    slots: &[Vec<Mutex<Option<Task<'g>>>>],
+    succs: &[Vec<usize>],
+    sync: &Sync_<'g>,
+    mut jitter: Option<JitterState>,
+    ws: &mut WorkerScratch,
+) {
+    let (mx, cv) = sync;
+    loop {
+        if let Some(j) = jitter.as_mut() {
+            j.pause();
+        }
+        let (i, t) = {
+            let mut st = mx.lock().unwrap();
+            loop {
+                if st.poisoned || st.nodes_remaining == 0 {
+                    return;
+                }
+                if let Some(pair) = st.ready.pop_front() {
+                    break pair;
+                }
+                st = cv.wait(st).unwrap();
+            }
+        };
+        let task = slots[i][t]
+            .lock()
+            .unwrap()
+            .take()
+            .expect("each (node, task) pair is enqueued exactly once");
+        // A panicking task must not leave the other drain loops waiting on
+        // a node that will never complete: poison the run, wake everyone,
+        // re-raise (the pool forwards the payload to the caller).
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(ws)));
+        let mut st = mx.lock().unwrap();
+        match result {
+            Ok(()) => {
+                st.unfinished[i] -= 1;
+                if st.unfinished[i] == 0 {
+                    complete_node(&mut st, succs, i);
+                    cv.notify_all();
+                }
+            }
+            Err(p) => {
+                st.poisoned = true;
+                cv.notify_all();
+                drop(st);
+                std::panic::resume_unwind(p);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Schedule fuzzing
+// ---------------------------------------------------------------------------
+
+/// Seeded schedule noise: every worker busy-waits a pseudorandom
+/// `0..max_ns` nanoseconds before each claim attempt, perturbing claim
+/// order and wakeup interleavings without touching any arithmetic. Used by
+/// `tests/taskgraph_parity.rs` to fuzz schedules that must all produce
+/// bitwise-identical results.
+#[derive(Clone, Copy, Debug)]
+pub struct Jitter {
+    pub seed: u64,
+    pub max_ns: u64,
+}
+
+impl Jitter {
+    fn for_worker(self, w: usize) -> JitterState {
+        JitterState {
+            s: self.seed ^ (w as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            max_ns: self.max_ns,
+        }
+    }
+}
+
+struct JitterState {
+    s: u64,
+    max_ns: u64,
+}
+
+impl JitterState {
+    /// One splitmix64 step → busy-wait below `max_ns`.
+    fn pause(&mut self) {
+        if self.max_ns == 0 {
+            return;
+        }
+        self.s = self.s.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.s;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        let ns = (z ^ (z >> 31)) % self.max_ns;
+        let t = std::time::Instant::now();
+        while (t.elapsed().as_nanos() as u64) < ns {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Record the completion order of nodes via a shared log.
+    fn log_task<'g>(
+        log: &'g Mutex<Vec<usize>>,
+        tag: usize,
+    ) -> impl FnOnce(&mut WorkerScratch) + Send + 'g {
+        move |_ws| log.lock().unwrap().push(tag)
+    }
+
+    #[test]
+    fn diamond_respects_dependencies() {
+        let pool = WorkerPool::new(4, false);
+        for seed in 0..20u64 {
+            let log = Mutex::new(Vec::new());
+            let mut g = Graph::new();
+            let a = g.node(&[]);
+            let b = g.node(&[a]);
+            let c = g.node(&[a]);
+            let d = g.node(&[b, c]);
+            g.add_task(a, log_task(&log, 0));
+            g.add_task(b, log_task(&log, 1));
+            g.add_task(c, log_task(&log, 2));
+            g.add_task(d, log_task(&log, 3));
+            g.run(
+                &pool,
+                4,
+                Some(Jitter {
+                    seed,
+                    max_ns: 20_000,
+                }),
+            );
+            let order = log.into_inner().unwrap();
+            assert_eq!(order.len(), 4);
+            let pos = |x: usize| order.iter().position(|&v| v == x).unwrap();
+            assert!(pos(0) < pos(1) && pos(0) < pos(2), "{order:?}");
+            assert!(pos(3) > pos(1) && pos(3) > pos(2), "{order:?}");
+        }
+    }
+
+    #[test]
+    fn empty_nodes_cascade() {
+        let pool = WorkerPool::new(2, false);
+        let hits = AtomicUsize::new(0);
+        let mut g = Graph::new();
+        let root = g.node(&[]); // no tasks
+        let mid = g.node(&[root]); // no tasks
+        let leaf = g.node(&[mid]);
+        g.add_task(leaf, |_ws| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        g.run(&pool, 2, None);
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+        // a fully empty graph terminates too
+        Graph::new().run(&pool, 2, None);
+        let mut g = Graph::new();
+        g.node(&[]);
+        g.run(&pool, 2, None);
+    }
+
+    #[test]
+    fn every_task_runs_exactly_once() {
+        let pool = WorkerPool::new(3, false);
+        let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        let mut g = Graph::new();
+        let a = g.node(&[]);
+        let b = g.node(&[a]);
+        for k in 0..32 {
+            let h = &hits[k];
+            g.add_task(a, move |_ws| {
+                h.fetch_add(1, Ordering::Relaxed);
+            });
+            let h = &hits[32 + k];
+            g.add_task(b, move |_ws| {
+                h.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        g.run(&pool, 3, Some(Jitter { seed: 7, max_ns: 5_000 }));
+        for (k, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "task {k}");
+        }
+    }
+
+    #[test]
+    fn independent_chains_can_interleave() {
+        // two independent chains; completion counters see both advance —
+        // structural smoke test that nothing serializes the whole graph
+        let pool = WorkerPool::new(2, false);
+        let done = AtomicUsize::new(0);
+        let mut g = Graph::new();
+        let mut prev: Option<NodeId> = None;
+        for _ in 0..5 {
+            let deps: Vec<NodeId> = prev.into_iter().collect();
+            let n = g.node(&deps);
+            g.add_task(n, |_ws| {
+                done.fetch_add(1, Ordering::Relaxed);
+            });
+            prev = Some(n);
+        }
+        let solo = g.node(&[]);
+        g.add_task(solo, |_ws| {
+            done.fetch_add(1, Ordering::Relaxed);
+        });
+        g.run(&pool, 2, None);
+        assert_eq!(done.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn nested_run_from_a_pool_worker_degrades_inline() {
+        let pool = std::sync::Arc::new(WorkerPool::new(2, false));
+        let p2 = std::sync::Arc::clone(&pool);
+        let total = AtomicUsize::new(0);
+        pool.run_tasks(vec![(); 2], |_k, (), _ws| {
+            let mut g = Graph::new();
+            let a = g.node(&[]);
+            let b = g.node(&[a]);
+            g.add_task(a, |_ws| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+            g.add_task(b, |_ws| {
+                total.fetch_add(10, Ordering::Relaxed);
+            });
+            g.run(&p2, 2, None);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 22);
+    }
+
+    #[test]
+    fn task_panic_propagates_without_wedging() {
+        let pool = WorkerPool::new(3, false);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Graph::new();
+            let a = g.node(&[]);
+            let b = g.node(&[a]);
+            g.add_task(a, |_ws| panic!("graph task boom"));
+            g.add_task(b, |_ws| {});
+            g.run(&pool, 3, None);
+        }));
+        assert!(caught.is_err(), "caller must observe the task panic");
+        // the pool (and a fresh graph) still work afterwards
+        let ok = AtomicUsize::new(0);
+        let mut g = Graph::new();
+        let a = g.node(&[]);
+        g.add_task(a, |_ws| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        g.run(&pool, 3, None);
+        assert_eq!(ok.load(Ordering::Relaxed), 1);
+    }
+}

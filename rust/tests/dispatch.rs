@@ -32,6 +32,15 @@ fn synthetic_profile() -> CalibrationProfile {
                 overhead_s: 5.0e-4,
             },
         }],
+        // slightly below pooled, so the strict-less-than pick keeps the
+        // pooled engine and the serial/pooled assertions below stay sharp
+        taskgraph: vec![PooledRates {
+            workers: 4,
+            rates: EngineRates {
+                rates: [3.0e8; N_PHASES],
+                overhead_s: 5.0e-4,
+            },
+        }],
     }
 }
 
@@ -120,6 +129,7 @@ fn large_groups_go_to_xla_only_when_allowed() {
     let mut slow = synthetic_profile();
     slow.serial.rates = [1.0e6; N_PHASES];
     slow.pooled[0].rates.rates = [2.0e6; N_PHASES];
+    slow.taskgraph[0].rates.rates = [2.0e6; N_PHASES];
     let members: Vec<Problem> = (0..32).map(|_| Problem::new(2_000, 2, 17, 0.5)).collect();
     let with_xla = Dispatcher::new(slow.clone()).with_xla(true);
     assert_eq!(with_xla.select_group(&members).choice, EngineChoice::Xla);
@@ -131,13 +141,18 @@ fn large_groups_go_to_xla_only_when_allowed() {
 fn engine_parses_through_the_single_from_str_impl() {
     assert_eq!("serial".parse::<Engine>().unwrap(), Engine::Serial);
     assert_eq!("parallel".parse::<Engine>().unwrap(), Engine::Parallel);
+    assert_eq!("taskgraph".parse::<Engine>().unwrap(), Engine::TaskGraph);
     assert_eq!("xla".parse::<Engine>().unwrap(), Engine::Xla);
     assert_eq!("auto".parse::<Engine>().unwrap(), Engine::Auto);
     let err = "cuda".parse::<Engine>().unwrap_err().to_string();
-    assert!(err.contains("serial|parallel|xla|auto"), "{err}");
+    assert!(err.contains("serial|parallel|taskgraph|xla|auto"), "{err}");
     // the batch engine is the one-to-one image of the CLI selector
     assert_eq!(BatchEngine::from(Engine::Auto), BatchEngine::Auto);
     assert_eq!(BatchEngine::from(Engine::Serial), BatchEngine::Serial);
+    assert_eq!(
+        BatchEngine::from(Engine::TaskGraph),
+        BatchEngine::TaskGraph
+    );
 }
 
 // ---- Engine::Auto end to end -------------------------------------------

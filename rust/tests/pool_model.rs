@@ -1,5 +1,7 @@
-//! Exhaustive-interleaving model check of the [`WorkerPool`] protocol,
-//! plus a deterministic stress harness on the real pool.
+//! Exhaustive-interleaving model checks of the [`WorkerPool`] protocol
+//! and of the task-graph scheduler's ready-counter protocol
+//! (`util/sched.rs`), plus a deterministic stress harness on the real
+//! pool.
 //!
 //! The offline toolchain has no `loom`, so the model checker is built
 //! in-tree: the pool's park/unpark epoch broadcast is transcribed into a
@@ -345,6 +347,223 @@ fn shutdown_during_narrow_fanouts_joins_every_worker() {
     for n in [2usize, 3, 4] {
         Checker::check(n, &[1], true).unwrap_or_else(|e| panic!("n={n}: {e}"));
     }
+}
+
+// ---------------------------------------------------------------------------
+// The ready-counter protocol of the task-graph scheduler (util/sched.rs)
+// ---------------------------------------------------------------------------
+// Same methodology as the pool model above: the scheduler keeps all shared
+// state (pending counters, ready queue, in-flight count) under one mutex,
+// so each lock-held critical section is one atomic step and exhaustive
+// DFS over step interleavings covers every real execution. Claims are
+// modelled from *any* ready-queue position — a superset of the real
+// pop-front order that also covers the jittered schedules of
+// `tests/taskgraph_parity.rs`.
+//
+// Checked properties, over every reachable interleaving:
+//
+// * dependency safety — no task starts before all its deps completed;
+// * exactly-once — every task runs once, on exactly one worker;
+// * termination — some thread can always step until all tasks are done
+//   (deadlock freedom; completion cascades through empty nodes too).
+//
+// The checker is proven live by negative models: a completion that skips
+// the counter decrement must deadlock, and one that over-decrements must
+// release a task before its dependencies — both must be *found*.
+
+/// DAG under test: `deps[i]` lists the nodes task `i` waits on.
+type Dag = Vec<Vec<usize>>;
+
+/// Faulty counter-decrement variants the checker must catch.
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum CounterBug {
+    /// Completion never decrements the dependents' pending counters.
+    SkipDecrement,
+    /// Completion decrements every dependent twice.
+    DoubleDecrement,
+}
+
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+struct SchedModel {
+    /// Remaining not-yet-completed dependency count per task.
+    pending: Vec<u8>,
+    /// Tasks whose counter reached zero and were enqueued.
+    ready: Vec<usize>,
+    /// Per worker: the task it is currently executing.
+    running: Vec<Option<usize>>,
+    started: Vec<bool>,
+    done: Vec<bool>,
+}
+
+impl SchedModel {
+    fn new(dag: &Dag, n_workers: usize) -> Self {
+        let pending: Vec<u8> = dag.iter().map(|d| d.len() as u8).collect();
+        let ready = (0..dag.len()).filter(|&t| pending[t] == 0).collect();
+        SchedModel {
+            pending,
+            ready,
+            running: vec![None; n_workers],
+            started: vec![false; dag.len()],
+            done: vec![false; dag.len()],
+        }
+    }
+}
+
+struct SchedChecker {
+    dag: Dag,
+    /// Reverse edges: `dependents[i]` lists the tasks waiting on `i`.
+    dependents: Vec<Vec<usize>>,
+    bug: Option<CounterBug>,
+    visited: HashSet<SchedModel>,
+    states: usize,
+}
+
+impl SchedChecker {
+    fn check(dag: &Dag, n_workers: usize, bug: Option<CounterBug>) -> Result<usize, String> {
+        let mut dependents = vec![Vec::new(); dag.len()];
+        for (t, deps) in dag.iter().enumerate() {
+            for &d in deps {
+                dependents[d].push(t);
+            }
+        }
+        let mut c = SchedChecker {
+            dag: dag.clone(),
+            dependents,
+            bug,
+            visited: HashSet::new(),
+            states: 0,
+        };
+        c.explore(SchedModel::new(dag, n_workers))?;
+        Ok(c.states)
+    }
+
+    fn explore(&mut self, s: SchedModel) -> Result<(), String> {
+        if !self.visited.insert(s.clone()) {
+            return Ok(());
+        }
+        self.states += 1;
+
+        if s.done.iter().all(|&d| d) {
+            return Ok(()); // terminal: everything ran (exactly-once held per step)
+        }
+
+        let mut stepped = false;
+
+        // claim: any idle worker takes any ready task (any position —
+        // covers every wakeup/claim order the jitter hook can produce)
+        for w in 0..s.running.len() {
+            if s.running[w].is_some() {
+                continue;
+            }
+            for slot in 0..s.ready.len() {
+                let mut n = s.clone();
+                let t = n.ready.remove(slot);
+                // dependency safety at the moment of claim
+                if let Some(&d) = self.dag[t].iter().find(|&&d| !s.done[d]) {
+                    return Err(format!("task {t} claimed before its dependency {d} completed"));
+                }
+                if s.started[t] {
+                    return Err(format!("task {t} claimed twice"));
+                }
+                n.started[t] = true;
+                n.running[w] = Some(t);
+                stepped = true;
+                self.explore(n)?;
+            }
+        }
+
+        // complete: a running worker finishes its task and cascades the
+        // ready counters (the step under test — bugs injected here)
+        for w in 0..s.running.len() {
+            let Some(t) = s.running[w] else { continue };
+            let mut n = s.clone();
+            n.running[w] = None;
+            n.done[t] = true;
+            let decrements: usize = match self.bug {
+                Some(CounterBug::SkipDecrement) => 0,
+                Some(CounterBug::DoubleDecrement) => 2,
+                None => 1,
+            };
+            for &dep in &self.dependents[t] {
+                for _ in 0..decrements {
+                    n.pending[dep] = n.pending[dep].saturating_sub(1);
+                }
+                if n.pending[dep] == 0 && !n.started[dep] && !n.ready.contains(&dep) {
+                    n.ready.push(dep);
+                }
+            }
+            stepped = true;
+            self.explore(n)?;
+        }
+
+        if !stepped {
+            return Err(format!(
+                "deadlock: tasks {:?} never became ready (pending {:?})",
+                s.done
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &d)| !d)
+                    .map(|(t, _)| t)
+                    .collect::<Vec<_>>(),
+                s.pending,
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The diamond the task-graph engine is built from (A → {B, C} → D), the
+/// shape where both a lost decrement and a premature release are visible.
+fn diamond() -> Dag {
+    vec![vec![], vec![0], vec![0], vec![1, 2]]
+}
+
+#[test]
+fn ready_counter_protocol_is_safe_and_deadlock_free() {
+    // diamond, chain, independent fan, and the engine's real shape in
+    // miniature (P2P parallel to a multipole chain joining at a merge);
+    // state floors guard against a degenerate non-branching search
+    let fmm_shape: Dag = vec![
+        vec![],        // 0: P2M
+        vec![0],       // 1: M2M
+        vec![1],       // 2: M2L
+        vec![2],       // 3: L2L
+        vec![3],       // 4: L2P
+        vec![],        // 5: P2P accumulate
+        vec![4, 5],    // 6: merge
+    ];
+    for (dag, workers, min_states) in [
+        (diamond(), 1, 8),
+        (diamond(), 2, 30),
+        (diamond(), 3, 30),
+        (vec![vec![], vec![0], vec![1]], 2, 6), // chain
+        (vec![vec![], vec![], vec![]], 2, 20),  // fully independent
+        (fmm_shape, 2, 100),
+    ] {
+        let states = SchedChecker::check(&dag, workers, None)
+            .unwrap_or_else(|e| panic!("dag={dag:?} workers={workers}: {e}"));
+        assert!(
+            states > min_states,
+            "dag={dag:?} workers={workers}: only {states} states explored"
+        );
+    }
+}
+
+#[test]
+fn checker_catches_a_skipped_counter_decrement_as_deadlock() {
+    let err = SchedChecker::check(&diamond(), 2, Some(CounterBug::SkipDecrement))
+        .expect_err("a lost decrement must strand the dependents");
+    assert!(err.contains("deadlock"), "unexpected failure mode: {err}");
+}
+
+#[test]
+fn checker_catches_an_over_decrement_as_a_premature_claim() {
+    let err = SchedChecker::check(&diamond(), 2, Some(CounterBug::DoubleDecrement))
+        .expect_err("an over-decrement must release a task early");
+    assert!(
+        err.contains("before its dependency"),
+        "unexpected failure mode: {err}"
+    );
 }
 
 // ---------------------------------------------------------------------------

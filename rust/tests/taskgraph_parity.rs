@@ -1,0 +1,182 @@
+//! Schedule-fuzz parity suite of the task-graph pipelined engine
+//! (`fmm::taskgraph`, DESIGN.md §9).
+//!
+//! The engine's claim is *schedule independence*: because every reduction
+//! order is pinned by the graph's dependency edges (or kept intra-task),
+//! any dependency-respecting schedule must produce **bitwise-identical**
+//! potentials — equal to the pooled barrier engine at the same thread
+//! count, whose shard boundaries and per-shard kernels it shares. This
+//! suite attacks that claim with randomized wakeup/claim jitter
+//! ([`Jitter`]: every worker busy-waits a seeded pseudorandom interval
+//! before each claim attempt), across worker counts of 1, 2, an odd
+//! count, and more workers than the machine has cores, on uniform and
+//! clustered particle distributions, through both P2P formulations.
+//!
+//! Equality is exact (`==` on f64 bit patterns via `assert_eq!`), not a
+//! tolerance: the pooled engine already promises bitwise parity with the
+//! serial driver, and the task-graph engine extends that promise. The
+//! serial cross-check at the bottom keeps the whole chain anchored to the
+//! reference driver within 1e-12.
+
+use fmm2d::complex::C64;
+use fmm2d::config::FmmConfig;
+use fmm2d::connectivity::Connectivity;
+use fmm2d::fmm::parallel::evaluate_on_tree_pool;
+use fmm2d::fmm::taskgraph::evaluate_on_tree_taskgraph_seeded;
+use fmm2d::fmm::{self, FmmOptions, WorkCounts};
+use fmm2d::tree::Pyramid;
+use fmm2d::util::pool::WorkerPool;
+use fmm2d::util::rng::Pcg64;
+use fmm2d::util::sched::Jitter;
+use fmm2d::util::threadpool::available_threads;
+use fmm2d::workload;
+
+/// One prebuilt problem the whole suite reuses per distribution.
+struct Case {
+    pyr: Pyramid,
+    con: Connectivity,
+    name: &'static str,
+}
+
+fn cases() -> Vec<Case> {
+    let mut r = Pcg64::seed_from_u64(97);
+    let (u_pts, u_gs) = workload::uniform_square(3_000, &mut r);
+    let (c_pts, c_gs) = workload::normal_cloud(3_000, 0.08, &mut r);
+    [("uniform", u_pts, u_gs), ("clustered", c_pts, c_gs)]
+        .into_iter()
+        .map(|(name, pts, gs)| {
+            let pyr = Pyramid::build(&pts, &gs, 3).expect("3 levels fit 3000 points");
+            let con = Connectivity::build(&pyr, 0.5);
+            Case { pyr, con, name }
+        })
+        .collect()
+}
+
+fn opts(threads: usize, symmetric: bool) -> FmmOptions {
+    FmmOptions {
+        cfg: FmmConfig {
+            p: 10,
+            levels_override: Some(3),
+            ..FmmConfig::default()
+        },
+        symmetric_p2p: symmetric,
+        threads: Some(threads),
+        ..FmmOptions::default()
+    }
+}
+
+fn assert_bitwise(a: &[C64], b: &[C64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.re, y.re, "{what}: re diverged at particle {i}");
+        assert_eq!(x.im, y.im, "{what}: im diverged at particle {i}");
+    }
+}
+
+fn assert_counts_equal(a: &WorkCounts, b: &WorkCounts, what: &str) {
+    assert_eq!(a.n, b.n, "{what}: n");
+    assert_eq!(a.levels, b.levels, "{what}: levels");
+    assert_eq!(a.p2p_pairs, b.p2p_pairs, "{what}: p2p_pairs");
+    assert_eq!(a.p2l_pairs, b.p2l_pairs, "{what}: p2l_pairs");
+    assert_eq!(a.m2p_pairs, b.m2p_pairs, "{what}: m2p_pairs");
+    assert_eq!(a.p2m_particles, b.p2m_particles, "{what}: p2m_particles");
+    assert_eq!(a.m2l_per_level, b.m2l_per_level, "{what}: m2l_per_level");
+    assert_eq!(a.m2m_per_level, b.m2m_per_level, "{what}: m2m_per_level");
+    assert_eq!(a.l2l_per_level, b.l2l_per_level, "{what}: l2l_per_level");
+    assert_eq!(a.leaf_sizes, b.leaf_sizes, "{what}: leaf_sizes");
+}
+
+/// The worker-count axis: serial-width, even, odd, and oversubscribed
+/// (more workers than cores — wakeup order is then at the OS's mercy,
+/// which is exactly the schedule space the suite wants to sample).
+fn thread_counts() -> Vec<usize> {
+    vec![1, 2, 3, available_threads() + 2]
+}
+
+#[test]
+fn fuzzed_schedules_are_bitwise_identical_to_the_pooled_engine() {
+    for case in cases() {
+        for symmetric in [true, false] {
+            for t in thread_counts() {
+                let pool = WorkerPool::new(t, false);
+                let o = opts(t, symmetric);
+                let (base, _, base_counts) =
+                    evaluate_on_tree_pool(&case.pyr, &case.con, &o, &pool);
+                // the production schedule plus jittered ones: several
+                // seeds, short and long perturbation windows
+                let mut schedules = vec![None];
+                for seed in [1u64, 2, 0xDEAD_BEEF] {
+                    schedules.push(Some(Jitter {
+                        seed,
+                        max_ns: 5_000,
+                    }));
+                    schedules.push(Some(Jitter {
+                        seed: seed.wrapping_mul(31) + 7,
+                        max_ns: 50_000,
+                    }));
+                }
+                for jitter in schedules {
+                    let what = format!(
+                        "{} symmetric={symmetric} t={t} jitter={jitter:?}",
+                        case.name
+                    );
+                    let (tg, times, counts) = evaluate_on_tree_taskgraph_seeded(
+                        &case.pyr, &case.con, &o, &pool, jitter,
+                    );
+                    assert_bitwise(&base, &tg, &what);
+                    assert_counts_equal(&base_counts, &counts, &what);
+                    // the normalized phase times must stay a valid split
+                    // of the wall clock under every schedule
+                    assert!(times.total() >= 0.0, "{what}: negative total");
+                    assert!(
+                        times.0.iter().all(|s| s.is_finite() && *s >= 0.0),
+                        "{what}: non-finite phase time {:?}",
+                        times.0
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn taskgraph_stays_anchored_to_the_serial_driver() {
+    // the bitwise chain above is serial ↔ pooled ↔ taskgraph; this keeps
+    // the anchor itself honest (≤ 1e-12 relative, the repo-wide parity
+    // tolerance between the serial driver and the parallel engines)
+    for case in cases() {
+        let serial = fmm::evaluate_on_tree_serial(&case.pyr, &case.con, &opts(1, true)).0;
+        let pool = WorkerPool::new(3, false);
+        let (tg, _, _) =
+            evaluate_on_tree_taskgraph_seeded(&case.pyr, &case.con, &opts(3, true), &pool, None);
+        for (i, (a, b)) in serial.iter().zip(&tg).enumerate() {
+            let scale = a.abs().max(1.0);
+            assert!(
+                (*a - *b).abs() <= 1e-12 * scale,
+                "{}: particle {i}: serial {a:?} vs taskgraph {b:?}",
+                case.name
+            );
+        }
+    }
+}
+
+#[test]
+fn repeated_fuzzed_runs_on_one_pool_are_self_consistent() {
+    // same pool, same jitter seed, many runs: the engine must be a pure
+    // function of its inputs (no state leaks through the accumulator
+    // lease or the scheduler between evaluations)
+    let case = &cases()[0];
+    let pool = WorkerPool::new(3, false);
+    let o = opts(3, true);
+    let jitter = Some(Jitter {
+        seed: 11,
+        max_ns: 20_000,
+    });
+    let (first, _, _) =
+        evaluate_on_tree_taskgraph_seeded(&case.pyr, &case.con, &o, &pool, jitter);
+    for round in 0..4 {
+        let (again, _, _) =
+            evaluate_on_tree_taskgraph_seeded(&case.pyr, &case.con, &o, &pool, jitter);
+        assert_bitwise(&first, &again, &format!("round {round}"));
+    }
+}

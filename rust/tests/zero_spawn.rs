@@ -1,6 +1,7 @@
 //! The headline acceptance contract of the persistent worker pool: once a
 //! pool exists, a full `fmm::evaluate` — Sort, Connect and all six
-//! computational phases — performs **zero thread spawns**. Every spawn
+//! computational phases, through the barrier engine *and* the task-graph
+//! pipelined engine — performs **zero thread spawns**. Every spawn
 //! site in the crate reports to `util::pool::note_spawn`, so the global
 //! counter is a complete census.
 //!
@@ -66,4 +67,34 @@ fn full_evaluate_spawns_no_threads_after_pool_construction() {
     let dir = fmm::evaluate(&pts, &gs, &dir_opts).unwrap();
     assert_eq!(pool::spawn_count(), before, "directed P2P path spawned");
     assert_eq!(dir.potentials.len(), pts.len());
+
+    // the task-graph pipelined engine rides the same pool: the
+    // dependency-gated ready queue dispatches onto existing workers, so
+    // repeated evaluations spawn nothing either (symmetric and directed)
+    for symmetric in [true, false] {
+        let tg_opts = FmmOptions {
+            cpu_engine: fmm::CpuEngine::TaskGraph,
+            symmetric_p2p: symmetric,
+            ..opts.clone()
+        };
+        let warm_tg = fmm::evaluate(&pts, &gs, &tg_opts).unwrap();
+        assert_eq!(warm_tg.potentials.len(), pts.len());
+        let before = pool::spawn_count();
+        for _ in 0..3 {
+            let tg = fmm::evaluate(&pts, &gs, &tg_opts).unwrap();
+            assert_eq!(tg.potentials.len(), pts.len());
+        }
+        assert_eq!(
+            pool::spawn_count(),
+            before,
+            "task-graph engine (symmetric={symmetric}) spawned"
+        );
+    }
+
+    // accumulator-lease bound across engines: after the barrier and
+    // task-graph engines have churned the lease, a fresh take is still
+    // exactly one full lease per worker — nothing leaked, nothing grew
+    let lease = pool.take_accums();
+    assert_eq!(lease.len(), pool.n_workers(), "lease must stay complete");
+    pool.return_accums(lease);
 }
