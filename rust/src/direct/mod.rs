@@ -10,68 +10,105 @@
 //!   GPU code uses (no f64 atomics on the C2075 ⇒ no scatter-adds).
 //!
 //! [`eval_separate`] covers the `{y_i} ≠ {x_j}` case of Eq. (1.2).
+//!
+//! All three baselines run on the same blocked SoA micro-kernels as the
+//! FMM engines' P2P phase ([`crate::tiles`], DESIGN.md §10): the input is
+//! packed once into one padded tile and the inner loops are the shared
+//! FMA accumulators, so the O(N²) reference exercises exactly the
+//! arithmetic the tree code uses.
 
 use crate::complex::{C64, ZERO};
 use crate::expansion::Kernel;
+use crate::tiles::{
+    accum_harmonic, accum_harmonic_guarded, accum_log, accum_scatter_harmonic, PackedPoints,
+};
 
 /// Direct potential at every source point, all ordered pairs (`j ≠ i`).
 pub fn eval_plain(kernel: Kernel, points: &[C64], gammas: &[C64]) -> Vec<C64> {
     let n = points.len();
+    let t = PackedPoints::pack(points, gammas);
     let mut phi = vec![ZERO; n];
     for i in 0..n {
-        let zi = points[i];
-        let mut acc = ZERO;
-        for j in 0..n {
-            if j != i {
-                acc += kernel.eval(zi, points[j], gammas[j]);
-            }
-        }
-        phi[i] = acc;
+        let (xi, yi) = (t.xs[i], t.ys[i]);
+        // skip slot i by splitting the run; the harmonic upper range may
+        // extend over the padding (exact no-ops), the log one must not
+        // (`ln` turns the sentinel into NaN — see `accum_log`)
+        let (lo, hi) = match kernel {
+            Kernel::Harmonic => (
+                accum_harmonic(&t.xs, &t.ys, &t.gre, &t.gim, 0, i, xi, yi),
+                accum_harmonic(&t.xs, &t.ys, &t.gre, &t.gim, i + 1, t.padded(), xi, yi),
+            ),
+            Kernel::Log => (
+                accum_log(&t.xs, &t.ys, &t.gre, &t.gim, 0, i, xi, yi),
+                accum_log(&t.xs, &t.ys, &t.gre, &t.gim, i + 1, n, xi, yi),
+            ),
+        };
+        phi[i] = C64::new(lo.0 + hi.0, lo.1 + hi.1);
     }
     phi
 }
 
 /// Direct potential at every source point using the pairwise symmetry of
 /// the harmonic kernel: `Γ_j/(z_j−z_i)` and `Γ_i/(z_i−z_j)` share one
-/// reciprocal. Falls back to [`eval_plain`] for the log kernel (whose
-/// imaginary part is not antisymmetric across the branch cut).
+/// reciprocal ("almost a factor of two", §4.2), via the same scattering
+/// micro-kernel as the FMM engines' symmetric P2P.
 pub fn eval_symmetric(kernel: Kernel, points: &[C64], gammas: &[C64]) -> Vec<C64> {
     if kernel != Kernel::Harmonic {
+        // The log kernel cannot take the symmetric path: only its *real*
+        // part is symmetric (ln|z_i−z_j| = ln|z_j−z_i|), while the
+        // imaginary part arg(z_i−z_j) = arg(z_j−z_i) ± π flips by a full π
+        // across the principal branch cut, so one evaluation cannot serve
+        // both directions. Route through the (tiled) plain path instead —
+        // bitwise the same ordered-pair sum `eval_plain` computes.
         return eval_plain(kernel, points, gammas);
     }
     let n = points.len();
-    let mut phi = vec![ZERO; n];
+    let t = PackedPoints::pack(points, gammas);
+    let mut phr = vec![0.0f64; n];
+    let mut phm = vec![0.0f64; n];
     for i in 0..n {
-        let zi = points[i];
-        let gi = gammas[i];
-        let mut acc = phi[i];
-        for j in i + 1..n {
-            // r = 1/(z_j − z_i): contribution Γ_j·r at i and −Γ_i·r at j
-            let r = (points[j] - zi).recip();
-            acc += gammas[j] * r;
-            phi[j] -= gi * r;
-        }
-        phi[i] = acc;
+        let (xi, yi) = (t.xs[i], t.ys[i]);
+        let (gri, gii) = (t.gre[i], t.gim[i]);
+        // j > i only; the scatter side writes real particles, so the range
+        // stops at the true population (scalar tail), never the padding
+        let (ar, ai) = accum_scatter_harmonic(
+            &t.xs, &t.ys, &t.gre, &t.gim, i + 1, n, xi, yi, gri, gii, 0, &mut phr, &mut phm,
+        );
+        phr[i] += ar;
+        phm[i] += ai;
     }
-    phi
+    phr.iter().zip(&phm).map(|(&r, &m)| C64::new(r, m)).collect()
 }
 
 /// Direct potential of `sources` evaluated at separate `targets`
 /// (Eq. 1.2 with disjoint evaluation set; no self-exclusion needed as long
-/// as no target coincides with a source — coincident pairs are skipped).
+/// as no target coincides with a source — coincident pairs are skipped,
+/// which the harmonic path does branchlessly in
+/// [`accum_harmonic_guarded`]).
 pub fn eval_separate(
     kernel: Kernel,
     targets: &[C64],
     sources: &[C64],
     gammas: &[C64],
 ) -> Vec<C64> {
+    if kernel == Kernel::Harmonic {
+        let t = PackedPoints::pack(sources, gammas);
+        return targets
+            .iter()
+            .map(|&zt| {
+                let (ar, ai) =
+                    accum_harmonic_guarded(&t.xs, &t.ys, &t.gre, &t.gim, 0, t.padded(), zt.re, zt.im);
+                C64::new(ar, ai)
+            })
+            .collect();
+    }
     targets
         .iter()
-        .map(|&t| {
+        .map(|&zt| {
             let mut acc = ZERO;
             for (&s, &g) in sources.iter().zip(gammas) {
-                if s != t {
-                    acc += kernel.eval(t, s, g);
+                if s != zt {
+                    acc += kernel.eval(zt, s, g);
                 }
             }
             acc

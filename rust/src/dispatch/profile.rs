@@ -31,8 +31,11 @@ use super::cost::phase_units;
 
 /// Format version of the persisted profile; bumped whenever the rate
 /// semantics change so stale files are rejected, not misread.
-/// v2 added the task-graph engine's rate entries.
-pub const PROFILE_VERSION: usize = 2;
+/// v2 added the task-graph engine's rate entries. v3: the measured P2P and
+/// M2L rates reflect the tiled SoA / panel micro-kernels (DESIGN.md §10) —
+/// profiles calibrated against the pre-tile kernels would skew `--engine
+/// auto` toward the wrong side of the crossovers.
+pub const PROFILE_VERSION: usize = 3;
 
 /// Measured throughput of one engine: work units per second per phase
 /// (ordered as [`PHASE_NAMES`]) plus a fixed per-evaluation overhead.

@@ -211,13 +211,118 @@ impl M2lOperator {
             irl *= neg_ir;
         }
     }
+
+    /// Accumulate the M2L translations of **all** `srcs` (one destination
+    /// box's weak-interaction list) into `local` as a single blocked
+    /// matrix-panel sweep (DESIGN.md §10): every source is pre-scaled into
+    /// a k-major `(p+1) × S` panel, then each row `l` of the constant
+    /// structure matrix is swept once across the panel — `S` fused dot
+    /// products per row — and reduced over sources with the post-scale
+    /// factor `(−1)^l r_s^{−l}` carried per source in Horner order (one
+    /// complex multiply per source per row, no `powi` tables). Loading the
+    /// `T` row once per `l` regardless of list length is what makes the
+    /// kernel compute-bound; the adaptive mesh's median splits leave no
+    /// reusable offset classes to block over (box centers are not a lattice),
+    /// so the panel is grouped by *destination* instead.
+    ///
+    /// `mults` is the level's coefficient slab with row stride `stride`;
+    /// `src_centers` is indexed by the global box ids in `srcs`. Equivalent
+    /// to repeated [`Self::apply`] up to floating-point reassociation (each
+    /// coefficient sums its sources in list order here, instead of
+    /// accumulating one whole translation at a time). As for [`Self::apply`],
+    /// every source must have `a_0 = 0`.
+    #[allow(clippy::too_many_arguments)] // internal kernel plumbing, not API
+    pub fn apply_panel(
+        &self,
+        mults: &[C64],
+        stride: usize,
+        srcs: &[u32],
+        src_centers: &[C64],
+        local: &mut [C64],
+        z_o: C64,
+        scratch: &mut M2lScratch,
+    ) {
+        let p = self.p;
+        debug_assert!(stride >= p + 1);
+        debug_assert_eq!(local.len(), p + 1);
+        let ns = srcs.len();
+        if ns == 0 {
+            return;
+        }
+
+        // pre-scale every source into the k-major panel (lane = source)
+        scratch.pre_re.resize((p + 1) * ns, 0.0);
+        scratch.pre_im.resize((p + 1) * ns, 0.0);
+        scratch.dot_re.resize(ns, 0.0);
+        scratch.dot_im.resize(ns, 0.0);
+        scratch.cur_re.resize(ns, 0.0);
+        scratch.cur_im.resize(ns, 0.0);
+        scratch.nir_re.resize(ns, 0.0);
+        scratch.nir_im.resize(ns, 0.0);
+        for (s, &src) in srcs.iter().enumerate() {
+            let su = src as usize;
+            let m = &mults[su * stride..su * stride + p + 1];
+            debug_assert_eq!(m[0], ZERO, "matrix path requires a_0 = 0");
+            let ir = (z_o - src_centers[su]).recip();
+            let mut pw = ir;
+            for k in 1..=p {
+                let v = m[k] * pw;
+                scratch.pre_re[k * ns + s] = v.re;
+                scratch.pre_im[k * ns + s] = v.im;
+                pw *= ir;
+            }
+            scratch.cur_re[s] = 1.0; // (−1)^l r_s^{−l}, advanced per row below
+            scratch.cur_im[s] = 0.0;
+            scratch.nir_re[s] = -ir.re;
+            scratch.nir_im[s] = -ir.im;
+        }
+
+        // matrix-panel core: T row l × panel → S dots, post-scale, reduce
+        for l in 0..=p {
+            let row = &self.t[l * (p + 1)..(l + 1) * (p + 1)];
+            scratch.dot_re.fill(0.0);
+            scratch.dot_im.fill(0.0);
+            // column 0 of T is zero (a_0 handled separately), start at k = 1
+            for k in 1..=p {
+                let c = row[k];
+                let base = k * ns;
+                for s in 0..ns {
+                    scratch.dot_re[s] = c.mul_add(scratch.pre_re[base + s], scratch.dot_re[s]);
+                    scratch.dot_im[s] = c.mul_add(scratch.pre_im[base + s], scratch.dot_im[s]);
+                }
+            }
+            let mut acc_re = 0.0;
+            let mut acc_im = 0.0;
+            for s in 0..ns {
+                let (dr, di) = (scratch.dot_re[s], scratch.dot_im[s]);
+                let (cr, ci) = (scratch.cur_re[s], scratch.cur_im[s]);
+                acc_re += dr * cr - di * ci;
+                acc_im += dr * ci + di * cr;
+                let (nr, ni) = (scratch.nir_re[s], scratch.nir_im[s]);
+                scratch.cur_re[s] = cr * nr - ci * ni;
+                scratch.cur_im[s] = cr * ni + ci * nr;
+            }
+            local[l] += C64::new(acc_re, acc_im);
+        }
+    }
 }
 
-/// Scratch for [`M2lOperator::apply`].
+/// Scratch for [`M2lOperator::apply`] and [`M2lOperator::apply_panel`].
 #[derive(Clone, Debug, Default)]
 pub struct M2lScratch {
     re: Vec<f64>,
     im: Vec<f64>,
+    // panel state (`apply_panel`): k-major pre-scaled coefficients, the
+    // per-row dot accumulators, and the per-source Horner factor
+    // (−1)^l r^{−l} with its per-row update −r^{−1}
+    pre_re: Vec<f64>,
+    pre_im: Vec<f64>,
+    dot_re: Vec<f64>,
+    dot_im: Vec<f64>,
+    cur_re: Vec<f64>,
+    cur_im: Vec<f64>,
+    nir_re: Vec<f64>,
+    nir_im: Vec<f64>,
 }
 
 #[cfg(test)]
@@ -369,6 +474,84 @@ mod operator_tests {
                     "p={p} j={j}: {err:e}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn m2l_panel_matches_repeated_apply() {
+        // the blocked panel must agree with per-source `apply` (and hence,
+        // transitively, with the recurrence) for a scattered weak list
+        let mut r = Pcg64::seed_from_u64(31);
+        for p in [1usize, 2, 8, 17, 42] {
+            let op = M2lOperator::new(p);
+            let stride = p + 1;
+            let nboxes = 7;
+            let mut mults = vec![ZERO; nboxes * stride];
+            let mut centers = vec![ZERO; nboxes];
+            for b in 0..nboxes {
+                for k in 1..=p {
+                    mults[b * stride + k] =
+                        C64::new(r.uniform_in(-1.0, 1.0), r.uniform_in(-1.0, 1.0));
+                }
+                centers[b] = C64::new(r.uniform_in(2.0, 4.0), r.uniform_in(-4.0, -2.0));
+            }
+            let z_o = C64::new(-0.3, 0.4);
+            let srcs: Vec<u32> = vec![5, 0, 3, 6, 1];
+            let mut scratch = M2lScratch::default();
+            let mut via_panel = vec![ZERO; p + 1];
+            op.apply_panel(
+                &mults,
+                stride,
+                &srcs,
+                &centers,
+                &mut via_panel,
+                z_o,
+                &mut scratch,
+            );
+            let mut via_apply = vec![ZERO; p + 1];
+            for &s in &srcs {
+                let su = s as usize;
+                op.apply(
+                    &mults[su * stride..(su + 1) * stride],
+                    centers[su],
+                    &mut via_apply,
+                    z_o,
+                    &mut scratch,
+                );
+            }
+            for j in 0..=p {
+                let err = (via_panel[j] - via_apply[j]).abs();
+                assert!(
+                    err / via_apply[j].abs().max(1.0) < 1e-11,
+                    "p={p} j={j}: {err:e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn m2l_panel_accumulates_and_ignores_empty_lists() {
+        let p = 5;
+        let op = M2lOperator::new(p);
+        let stride = p + 1;
+        let mut mults = vec![ZERO; 2 * stride];
+        mults[stride + 1] = C64::new(1.0, -0.5);
+        let centers = [C64::new(3.0, 0.0), C64::new(0.0, 3.0)];
+        let z_o = C64::new(0.0, 0.0);
+        let mut scratch = M2lScratch::default();
+        let mut out = vec![ZERO; p + 1];
+        op.apply_panel(&mults, stride, &[1], &centers, &mut out, z_o, &mut scratch);
+        let once = out.clone();
+        op.apply_panel(&mults, stride, &[1], &centers, &mut out, z_o, &mut scratch);
+        for j in 0..=p {
+            assert!((out[j] - once[j] * 2.0).abs() < 1e-14, "j={j}");
+        }
+        op.apply_panel(&mults, stride, &[], &centers, &mut out, z_o, &mut scratch);
+        for j in 0..=p {
+            assert!(
+                (out[j] - once[j] * 2.0).abs() < 1e-14,
+                "empty weak list must be a no-op (j={j})"
+            );
         }
     }
 

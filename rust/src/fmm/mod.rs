@@ -600,15 +600,20 @@ pub fn evaluate_on_tree_serial(
         for b in 0..boxes_at_level(l) {
             let zo = centers[b];
             let dst = &mut locs[b * (p + 1)..(b + 1) * (p + 1)];
-            for &s in con.weak[l].sources(b) {
-                let su = s as usize;
-                let src = &mults[su * (p + 1)..(su + 1) * (p + 1)];
-                match &m2l_op {
-                    Some(op) => op.apply(src, centers[su], dst, zo, &mut m2l_scratch),
-                    None => m2l_with(src, centers[su], dst, zo, &mut scratch),
+            let srcs = con.weak[l].sources(b);
+            match &m2l_op {
+                // one destination-grouped panel over all weak sources
+                // (same blocked kernel as the parallel engines, §10)
+                Some(op) => op.apply_panel(mults, p + 1, srcs, centers, dst, zo, &mut m2l_scratch),
+                None => {
+                    for &s in srcs {
+                        let su = s as usize;
+                        let src = &mults[su * (p + 1)..(su + 1) * (p + 1)];
+                        m2l_with(src, centers[su], dst, zo, &mut scratch);
+                    }
                 }
             }
-            counts.m2l_per_level[l] += con.weak[l].sources(b).len();
+            counts.m2l_per_level[l] += srcs.len();
         }
     }
     // P2L shortcuts (finest level; timed with M2L — they substitute for it)
@@ -677,91 +682,51 @@ pub fn evaluate_on_tree_serial(
 
     // ---- P2P: near field ------------------------------------------------
     //
-    // SoA split of positions/strengths: the inner pairwise loops run over
-    // plain f64 slices, which LLVM vectorizes where the access pattern
-    // allows (EXPERIMENTS.md §Perf — the CPU-side counterpart of the
-    // paper's SSE-intrinsics P2P, §4.4).
+    // Routed through the same blocked SoA tile micro-kernels as every
+    // parallel engine ([`parallel::p2p_symmetric_range`] /
+    // [`parallel::p2p_directed_range`] over [`crate::tiles::LeafTiles`],
+    // DESIGN.md §10 — the CPU-side counterpart of the paper's
+    // SSE-intrinsics P2P, §4.4), so a whole-range serial call is bitwise
+    // what a one-thread parallel run computes. Work counts are integer
+    // identities of the box-pair structure, tallied in a separate
+    // arithmetic-free pass with the semantics the measured loops had:
+    // `p2p_src_per_box` counts every source of every destination
+    // (directed/GPU semantics, formulation-independent — asserted in
+    // `work_counts_consistent`), `p2p_pairs` counts kernel evaluations of
+    // the chosen formulation.
     let t = Instant::now();
     counts.p2p_src_per_box = vec![0; nl];
-    let xs: Vec<f64> = pos.iter().map(|z| z.re).collect();
-    let ys: Vec<f64> = pos.iter().map(|z| z.im).collect();
-    let gre: Vec<f64> = gam.iter().map(|z| z.re).collect();
-    let gim: Vec<f64> = gam.iter().map(|z| z.im).collect();
-    if opts.symmetric_p2p && opts.kernel == Kernel::Harmonic {
+    let tiles = crate::tiles::LeafTiles::build(pyr);
+    let symmetric = opts.symmetric_p2p && opts.kernel == Kernel::Harmonic;
+    parallel::near_pairs(con, 0..nl, false, |b, su| {
+        let nb = pyr.starts[b + 1] - pyr.starts[b];
+        let ns = pyr.starts[su + 1] - pyr.starts[su];
+        counts.p2p_src_per_box[b] += ns as u32;
+        if symmetric && su < b {
+            return; // pair owned (and counted) by the other side
+        }
+        counts.p2p_pairs += if su == b {
+            // self pairs: n·(n−1) ordered evaluations either way (the
+            // symmetric path does half the reciprocals for the same count)
+            nb * nb.saturating_sub(1)
+        } else if symmetric {
+            2 * nb * ns // one shared reciprocal serves both directions
+        } else {
+            nb * ns
+        };
+    });
+    if symmetric {
         // CPU formulation (§4.2): each unordered box pair visited once,
         // shared reciprocal serves both directions.
         let mut phr: Vec<f64> = vec![0.0; phi.len()];
         let mut phm: Vec<f64> = vec![0.0; phi.len()];
-        for b in 0..nl {
-            let (blo, bhi) = (pyr.starts[b], pyr.starts[b + 1]);
-            for &s in con.near.sources(b) {
-                let su = s as usize;
-                // Counted for every source — including the `su < b` pairs
-                // skipped below — because `p2p_src_per_box` carries the
-                // *directed* semantics (sources streamed per destination
-                // box) that the GPU cost model reads: the directed path
-                // visits every (b, su) entry of the symmetric `near` lists,
-                // so the count must be formulation-independent (asserted in
-                // `work_counts_consistent`).
-                counts.p2p_src_per_box[b] += (pyr.starts[su + 1] - pyr.starts[su]) as u32;
-                if su < b {
-                    continue; // visited from the other side
-                }
-                let (slo, shi) = (pyr.starts[su], pyr.starts[su + 1]);
-                for i in blo..bhi {
-                    let (xi, yi) = (xs[i], ys[i]);
-                    let (gri, gii) = (gre[i], gim[i]);
-                    let j0 = if su == b { i + 1 } else { slo };
-                    let (mut ar, mut ai) = (0.0f64, 0.0f64);
-                    for j in j0..shi {
-                        // r = 1/(z_j − z_i); Φ_i += Γ_j r; Φ_j −= Γ_i r
-                        let dx = xs[j] - xi;
-                        let dy = ys[j] - yi;
-                        let inv = 1.0 / (dx * dx + dy * dy);
-                        let rr = dx * inv;
-                        let ri = -dy * inv;
-                        ar += gre[j] * rr - gim[j] * ri;
-                        ai += gre[j] * ri + gim[j] * rr;
-                        phr[j] -= gri * rr - gii * ri;
-                        phm[j] -= gri * ri + gii * rr;
-                    }
-                    counts.p2p_pairs += 2 * (shi - j0);
-                    phr[i] += ar;
-                    phm[i] += ai;
-                }
-            }
-        }
+        parallel::p2p_symmetric_range(0..nl, pyr, con, &tiles, &mut phr, &mut phm);
         for (p_, (r, m)) in phi.iter_mut().zip(phr.iter().zip(&phm)) {
             *p_ += C64::new(*r, *m);
         }
     } else {
         // directed formulation (the GPU layout, §4.3)
-        for b in 0..nl {
-            let (blo, bhi) = (pyr.starts[b], pyr.starts[b + 1]);
-            for &s in con.near.sources(b) {
-                let su = s as usize;
-                let (slo, shi) = (pyr.starts[su], pyr.starts[su + 1]);
-                counts.p2p_src_per_box[b] += (shi - slo) as u32;
-                for i in blo..bhi {
-                    let zi = pos[i];
-                    let mut acc = phi[i];
-                    if su == b {
-                        for j in slo..shi {
-                            if j != i {
-                                acc += opts.kernel.eval(zi, pos[j], gam[j]);
-                                counts.p2p_pairs += 1;
-                            }
-                        }
-                    } else {
-                        for j in slo..shi {
-                            acc += opts.kernel.eval(zi, pos[j], gam[j]);
-                            counts.p2p_pairs += 1;
-                        }
-                    }
-                    phi[i] = acc;
-                }
-            }
-        }
+        parallel::p2p_directed_range(0..nl, &mut phi, pyr, con, &tiles, &pos, &gam, opts.kernel);
     }
     times.0[Phase::P2P as usize] = t.elapsed().as_secs_f64();
 

@@ -49,6 +49,7 @@ use crate::connectivity::Connectivity;
 use crate::expansion::matrices::{M2lOperator, M2lScratch};
 use crate::expansion::shifts::{l2l_with, m2l_with, m2m_scaled_with, ShiftScratch};
 use crate::expansion::{l2p_slice, m2p_slice, p2l_slice, p2m_slice, Kernel};
+use crate::tiles::{accum_harmonic, accum_scatter_harmonic, LeafTiles};
 use crate::tree::{boxes_at_level, Pyramid};
 use crate::util::pool::{note_spawn, Accum, WorkerPool};
 use crate::util::threadpool::{ranges, scoped_chunks_mut, split_lengths_mut, weighted_ranges};
@@ -160,13 +161,43 @@ pub(crate) fn m2l_range(
     for (k, b) in r.enumerate() {
         let zo = centers[b];
         let dst = &mut chunk[k * stride..(k + 1) * stride];
-        for &s in con.weak[l].sources(b) {
-            let su = s as usize;
-            let src = &mults[su * stride..(su + 1) * stride];
-            match m2l_op {
-                Some(op) => op.apply(src, centers[su], dst, zo, m2l_scratch),
-                None => m2l_with(src, centers[su], dst, zo, shift),
+        let srcs = con.weak[l].sources(b);
+        match m2l_op {
+            // harmonic hot path: one blocked matrix-panel application over
+            // the destination's whole weak list (source order preserved —
+            // see `M2lOperator::apply_panel`)
+            Some(op) => op.apply_panel(mults, stride, srcs, centers, dst, zo, m2l_scratch),
+            None => {
+                for &s in srcs {
+                    let su = s as usize;
+                    let src = &mults[su * stride..(su + 1) * stride];
+                    m2l_with(src, centers[su], dst, zo, shift);
+                }
             }
+        }
+    }
+}
+
+/// Walk the near-field box pairs of destination range `r` in the
+/// connectivity's source order — the one box-pair iteration all three
+/// near-field formulations share (the symmetric and directed kernels below
+/// plus the serial driver's count pass), so the tile micro-kernels are
+/// wired in exactly once. `skip_lower` applies the symmetric ownership
+/// rule (§4.2: the unordered pair `{b, su}` belongs to the side with the
+/// lower box number).
+pub(crate) fn near_pairs(
+    con: &Connectivity,
+    r: Range<usize>,
+    skip_lower: bool,
+    mut f: impl FnMut(usize, usize),
+) {
+    for b in r {
+        for &src in con.near.sources(b) {
+            let su = src as usize;
+            if skip_lower && su < b {
+                continue; // owned by the other side
+            }
+            f(b, su);
         }
     }
 }
@@ -217,68 +248,89 @@ pub(crate) fn l2l_range(
 }
 
 /// The symmetric-P2P inner loop of one destination range, accumulating
-/// into `phr`/`phm` (shared by the scoped and pooled engines so their
-/// arithmetic is identical).
-#[allow(clippy::too_many_arguments)]
+/// into `phr`/`phm` (shared by the serial driver and every parallel
+/// engine so their arithmetic is identical). Runs the blocked tile
+/// micro-kernel ([`accum_scatter_harmonic`]) per box pair; because the
+/// symmetric formulation scatters into the *source* particles, the source
+/// loop is bounded to the tile's true population (scalar tail), never the
+/// padded width.
 pub(crate) fn p2p_symmetric_range(
     r: Range<usize>,
     pyr: &Pyramid,
     con: &Connectivity,
-    xs: &[f64],
-    ys: &[f64],
-    gre: &[f64],
-    gim: &[f64],
+    tiles: &LeafTiles,
     phr: &mut [f64],
     phm: &mut [f64],
 ) {
-    for b in r {
-        let (blo, bhi) = (pyr.starts[b], pyr.starts[b + 1]);
-        for &src in con.near.sources(b) {
-            let su = src as usize;
-            if su < b {
-                continue; // owned by the other side
-            }
-            let (slo, shi) = (pyr.starts[su], pyr.starts[su + 1]);
-            for i in blo..bhi {
-                let (xi, yi) = (xs[i], ys[i]);
-                let (gri, gii) = (gre[i], gim[i]);
-                let j0 = if su == b { i + 1 } else { slo };
-                let (mut ar, mut ai) = (0.0f64, 0.0f64);
-                for j in j0..shi {
-                    // r = 1/(z_j − z_i); Φ_i += Γ_j r; Φ_j −= Γ_i r
-                    let dx = xs[j] - xi;
-                    let dy = ys[j] - yi;
-                    let inv = 1.0 / (dx * dx + dy * dy);
-                    let rr = dx * inv;
-                    let ri = -dy * inv;
-                    ar += gre[j] * rr - gim[j] * ri;
-                    ai += gre[j] * ri + gim[j] * rr;
-                    phr[j] -= gri * rr - gii * ri;
-                    phm[j] -= gri * ri + gii * rr;
-                }
-                phr[i] += ar;
-                phm[i] += ai;
-            }
+    let nmax = tiles.nmax;
+    near_pairs(con, r, true, |b, su| {
+        let bt = b * nmax;
+        let slen = tiles.len[su];
+        let sxs = &tiles.xs[su * nmax..su * nmax + slen];
+        let sys = &tiles.ys[su * nmax..su * nmax + slen];
+        let sgre = &tiles.gre[su * nmax..su * nmax + slen];
+        let sgim = &tiles.gim[su * nmax..su * nmax + slen];
+        let blo = pyr.starts[b];
+        let jbase = pyr.starts[su];
+        for ii in 0..tiles.len[b] {
+            let i = blo + ii;
+            let (xi, yi) = (tiles.xs[bt + ii], tiles.ys[bt + ii]);
+            let (gri, gii) = (tiles.gre[bt + ii], tiles.gim[bt + ii]);
+            let j0 = if su == b { ii + 1 } else { 0 };
+            // r = 1/(z_j − z_i); Φ_i += Γ_j r; Φ_j −= Γ_i r
+            let (ar, ai) = accum_scatter_harmonic(
+                sxs, sys, sgre, sgim, j0, slen, xi, yi, gri, gii, jbase, phr, phm,
+            );
+            phr[i] += ar;
+            phm[i] += ai;
         }
-    }
+    });
 }
 
 /// The directed-P2P inner loop of one destination range (GPU layout,
-/// §4.3): pure writer-side sharding, no reduction at all.
+/// §4.3): pure writer-side sharding, no reduction at all. The harmonic
+/// kernel runs the blocked tile micro-kernel ([`accum_harmonic`]) over the
+/// full padded width — destination-side accumulation only, so padded
+/// slots are exact no-ops and non-self tiles need no tail; the general
+/// kernel (Log: `ln`/`atan2`-bound) keeps the per-pair evaluation.
+#[allow(clippy::too_many_arguments)] // internal kernel plumbing, not API
 pub(crate) fn p2p_directed_range(
     r: Range<usize>,
     chunk: &mut [C64],
     pyr: &Pyramid,
     con: &Connectivity,
+    tiles: &LeafTiles,
     pos: &[C64],
     gam: &[C64],
     kernel: Kernel,
 ) {
     let base = pyr.starts[r.start];
-    for b in r {
-        let (blo, bhi) = (pyr.starts[b], pyr.starts[b + 1]);
-        for &src in con.near.sources(b) {
-            let su = src as usize;
+    if kernel == Kernel::Harmonic {
+        let nmax = tiles.nmax;
+        near_pairs(con, r, false, |b, su| {
+            let bt = b * nmax;
+            let sxs = &tiles.xs[tiles.tile(su)];
+            let sys = &tiles.ys[tiles.tile(su)];
+            let sgre = &tiles.gre[tiles.tile(su)];
+            let sgim = &tiles.gim[tiles.tile(su)];
+            let blo = pyr.starts[b];
+            for ii in 0..tiles.len[b] {
+                let i = blo + ii;
+                let (xi, yi) = (tiles.xs[bt + ii], tiles.ys[bt + ii]);
+                let (ar, ai) = if su == b {
+                    // self tile: skip slot ii by splitting the run
+                    let lo = accum_harmonic(sxs, sys, sgre, sgim, 0, ii, xi, yi);
+                    let hi = accum_harmonic(sxs, sys, sgre, sgim, ii + 1, nmax, xi, yi);
+                    (lo.0 + hi.0, lo.1 + hi.1)
+                } else {
+                    accum_harmonic(sxs, sys, sgre, sgim, 0, nmax, xi, yi)
+                };
+                chunk[i - base] += C64::new(ar, ai);
+            }
+        });
+    } else {
+        near_pairs(con, r, false, |b, su| {
+            let (blo, bhi) = (pyr.starts[b], pyr.starts[b + 1]);
             let (slo, shi) = (pyr.starts[su], pyr.starts[su + 1]);
             for i in blo..bhi {
                 let zi = pos[i];
@@ -296,7 +348,7 @@ pub(crate) fn p2p_directed_range(
                 }
                 chunk[i - base] = acc;
             }
-        }
+        });
     }
 }
 
@@ -486,11 +538,9 @@ pub fn evaluate_on_tree_pool(
 
     // ---- P2P: near field -----------------------------------------------
     let t = Instant::now();
-    let xs_v: Vec<f64> = pos.iter().map(|z| z.re).collect();
-    let ys_v: Vec<f64> = pos.iter().map(|z| z.im).collect();
-    let gre_v: Vec<f64> = gam.iter().map(|z| z.re).collect();
-    let gim_v: Vec<f64> = gam.iter().map(|z| z.im).collect();
-    let (xs, ys, gre, gim): (&[f64], &[f64], &[f64], &[f64]) = (&xs_v, &ys_v, &gre_v, &gim_v);
+    // padded SoA leaf tiles (DESIGN.md §10), shared read-only by all tasks
+    let tiles_v = LeafTiles::build(pyr);
+    let tiles = &tiles_v;
     if opts.symmetric_p2p && opts.kernel == Kernel::Harmonic {
         // CPU formulation (§4.2): the scattered Φ_j updates go to the
         // pool's persistent per-task accumulators, merged in task order —
@@ -511,7 +561,7 @@ pub fn evaluate_on_tree_pool(
                 rs.iter().cloned().zip(accs.iter_mut()).collect();
             pool.run_tasks(tasks, |_k, (r, acc), _ws| {
                 acc.reset(n);
-                p2p_symmetric_range(r, pyr, con, xs, ys, gre, gim, &mut acc.re, &mut acc.im);
+                p2p_symmetric_range(r, pyr, con, tiles, &mut acc.re, &mut acc.im);
             });
         }
         // Merge sharded over particle ranges; every task folds the
@@ -547,7 +597,7 @@ pub fn evaluate_on_tree_pool(
         let chunks = split_lengths_mut(&mut phi, &lens);
         let tasks: Vec<(Range<usize>, &mut [C64])> = rs.iter().cloned().zip(chunks).collect();
         pool.run_tasks(tasks, |_k, (r, chunk), _ws| {
-            p2p_directed_range(r, chunk, pyr, con, pos, gam, opts.kernel);
+            p2p_directed_range(r, chunk, pyr, con, tiles, pos, gam, opts.kernel);
         });
     }
     times.0[Phase::P2P as usize] = t.elapsed().as_secs_f64();
@@ -727,11 +777,9 @@ pub fn evaluate_on_tree_parallel(
     // pair total) come from `structural_counts` above — identical for both
     // formulations and to the serial driver (`work_counts_consistent`).
     let t = Instant::now();
-    let xs_v: Vec<f64> = pos.iter().map(|z| z.re).collect();
-    let ys_v: Vec<f64> = pos.iter().map(|z| z.im).collect();
-    let gre_v: Vec<f64> = gam.iter().map(|z| z.re).collect();
-    let gim_v: Vec<f64> = gam.iter().map(|z| z.im).collect();
-    let (xs, ys, gre, gim): (&[f64], &[f64], &[f64], &[f64]) = (&xs_v, &ys_v, &gre_v, &gim_v);
+    // padded SoA leaf tiles (DESIGN.md §10), shared read-only by all tasks
+    let tiles_v = LeafTiles::build(pyr);
+    let tiles = &tiles_v;
     if opts.symmetric_p2p && opts.kernel == Kernel::Harmonic {
         // CPU formulation (§4.2): each unordered box pair visited once by
         // the thread owning the lower-numbered box; the scattered Φ_j
@@ -748,7 +796,7 @@ pub fn evaluate_on_tree_parallel(
                     s.spawn(move || {
                         let mut phr = vec![0.0f64; n];
                         let mut phm = vec![0.0f64; n];
-                        p2p_symmetric_range(r, pyr, con, xs, ys, gre, gim, &mut phr, &mut phm);
+                        p2p_symmetric_range(r, pyr, con, tiles, &mut phr, &mut phm);
                         (phr, phm)
                     })
                 })
@@ -801,7 +849,7 @@ pub fn evaluate_on_tree_parallel(
                 let r = r.clone();
                 note_spawn();
                 s.spawn(move || {
-                    p2p_directed_range(r, chunk, pyr, con, pos, gam, opts.kernel);
+                    p2p_directed_range(r, chunk, pyr, con, tiles, pos, gam, opts.kernel);
                 });
             }
         });

@@ -159,11 +159,9 @@ pub fn evaluate_on_tree_taskgraph_stats(
     let gam_v: Vec<C64> = pyr.particles.iter().map(|q| q.gamma).collect();
     let pos: &[C64] = &pos_v;
     let gam: &[C64] = &gam_v;
-    let xs_v: Vec<f64> = pos.iter().map(|z| z.re).collect();
-    let ys_v: Vec<f64> = pos.iter().map(|z| z.im).collect();
-    let gre_v: Vec<f64> = gam.iter().map(|z| z.re).collect();
-    let gim_v: Vec<f64> = gam.iter().map(|z| z.im).collect();
-    let (xs, ys, gre, gim): (&[f64], &[f64], &[f64], &[f64]) = (&xs_v, &ys_v, &gre_v, &gim_v);
+    // padded SoA leaf tiles (DESIGN.md §10), shared read-only by all tasks
+    let tiles_v = crate::tiles::LeafTiles::build(pyr);
+    let tiles: &crate::tiles::LeafTiles = &tiles_v;
     let centers_v: Vec<Vec<C64>> = (0..=levels).map(|l| pyr.centers(l)).collect();
     let centers: &[Vec<C64>] = &centers_v;
     let m2l_op = (kernel == Kernel::Harmonic).then(|| M2lOperator::new(p));
@@ -397,7 +395,7 @@ pub fn evaluate_on_tree_taskgraph_stats(
                         let mut wim = bim.write(0..n);
                         wre.fill(0.0);
                         wim.fill(0.0);
-                        p2p_symmetric_range(r, pyr, con, xs, ys, gre, gim, &mut wre, &mut wim);
+                        p2p_symmetric_range(r, pyr, con, tiles, &mut wre, &mut wim);
                     }),
                 );
             }
@@ -427,7 +425,7 @@ pub fn evaluate_on_tree_taskgraph_stats(
                     node,
                     timed(secs, Phase::P2P, move |_ws| {
                         let mut chunk = phibuf.write(pyr.starts[r.start]..pyr.starts[r.end]);
-                        p2p_directed_range(r, &mut chunk, pyr, con, pos, gam, kernel);
+                        p2p_directed_range(r, &mut chunk, pyr, con, tiles, pos, gam, kernel);
                     }),
                 );
             }

@@ -1,0 +1,438 @@
+//! Per-kernel roofline bench: `fmm2d kernel-bench`.
+//!
+//! Measures the attained throughput of each micro-kernel (the tiled P2P
+//! accumulators and the blocked M2L panel, DESIGN.md §10) and reports it
+//! against a **measured** roofline (Williams et al.): the compute roof is
+//! the FMA throughput of this machine as timed on independent `mul_add`
+//! chains, the memory roof is a streaming read sum, and every kernel's
+//! attainable ceiling is `min(compute, intensity × bandwidth)` at its
+//! nominal arithmetic intensity.
+//!
+//! Flop counts are *nominal*: an FMA is 2 flops, a divide (and, for the
+//! log kernel, `ln`/`atan2`) is counted as 1 — so the attained GFLOP/s of
+//! divide/libm-heavy kernels *understates* their hardware utilization.
+//! Byte counts assume the tile streams from memory once per pass (4 f64
+//! lanes per source slot; the scatter kernel adds a read-modify-write
+//! pair), which is the DRAM-resident worst case — the working sets here
+//! are cache-resident, so the memory roof is a lower bound on what the
+//! kernels actually see. Both conventions are fixed and documented so the
+//! numbers are comparable across commits, which is what the bench is for.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use crate::complex::C64;
+use crate::expansion::matrices::{M2lOperator, M2lScratch};
+use crate::tiles::{accum_harmonic, accum_log, accum_scatter_harmonic, PackedPoints};
+use crate::util::rng::Pcg64;
+
+/// Nominal flops per source slot of [`accum_harmonic`]: 2 subs, 1 mul +
+/// 1 FMA (=2) for `d²`, 1 divide, 2 muls for `r`, 4 FMAs (=8) for the
+/// split accumulators.
+pub const FLOPS_P2P_GATHER: f64 = 16.0;
+/// [`accum_scatter_harmonic`]: the gather body plus 4 scatter FMAs.
+pub const FLOPS_P2P_SCATTER: f64 = 24.0;
+/// [`accum_log`]: 2 subs, 3 for `d²`, 1 mul, `ln` + `atan2` counted as 1
+/// each, 4 FMAs (=8).
+pub const FLOPS_P2P_LOG: f64 = 16.0;
+
+/// Nominal flops of one blocked M2L translation at order `p`
+/// ([`M2lOperator::apply_panel`]): pre-scale `12p` (two complex multiplies
+/// per coefficient), panel core `4p(p+1)` (two FMAs per matrix entry),
+/// post-scale + reduction `14(p+1)` per row (one complex multiply-add and
+/// one complex multiply).
+pub fn flops_m2l(p: usize) -> f64 {
+    let pf = p as f64;
+    12.0 * pf + 4.0 * pf * (pf + 1.0) + 14.0 * (pf + 1.0)
+}
+
+/// Options of one `kernel-bench` invocation.
+#[derive(Clone, Debug)]
+pub struct KernelBenchOpts {
+    /// Shrink every measurement to CI-smoke size (sub-second total).
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl Default for KernelBenchOpts {
+    fn default() -> Self {
+        Self {
+            quick: false,
+            seed: 1,
+        }
+    }
+}
+
+/// One measured kernel.
+#[derive(Clone, Debug)]
+pub struct RooflineRow {
+    pub name: String,
+    /// Total nominal flops executed during the timed region.
+    pub flops: f64,
+    /// Total nominal bytes streamed (the DRAM-worst-case convention).
+    pub bytes: f64,
+    pub secs: f64,
+}
+
+impl RooflineRow {
+    pub fn gflops(&self) -> f64 {
+        self.flops / self.secs.max(1e-12) / 1e9
+    }
+
+    /// Nominal arithmetic intensity, flops per byte.
+    pub fn intensity(&self) -> f64 {
+        self.flops / self.bytes.max(1.0)
+    }
+}
+
+/// The full report: two measured machine roofs plus per-kernel rows.
+#[derive(Clone, Debug)]
+pub struct KernelReport {
+    pub quick: bool,
+    pub seed: u64,
+    /// Compute roof: measured FMA-chain throughput, GFLOP/s.
+    pub peak_gflops: f64,
+    /// Memory roof: measured streaming-read bandwidth, GB/s.
+    pub bw_gbs: f64,
+    pub rows: Vec<RooflineRow>,
+}
+
+impl KernelReport {
+    /// The roofline ceiling of `row`: `min(peak, intensity × bandwidth)`.
+    pub fn roof_gflops(&self, row: &RooflineRow) -> f64 {
+        self.peak_gflops.min(row.intensity() * self.bw_gbs)
+    }
+
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "# kernel-bench (seed {}{})",
+            self.seed,
+            if self.quick { ", --quick" } else { "" }
+        );
+        let _ = writeln!(
+            out,
+            "machine roofs: compute {:.2} GFLOP/s (FMA chains), memory {:.2} GB/s (stream sum)",
+            self.peak_gflops, self.bw_gbs
+        );
+        let _ = writeln!(
+            out,
+            "{:<14} {:>10} {:>12} {:>10} {:>8}",
+            "kernel", "GFLOP/s", "AI [fl/B]", "roof", "%roof"
+        );
+        for r in &self.rows {
+            let roof = self.roof_gflops(r);
+            let _ = writeln!(
+                out,
+                "{:<14} {:>10.2} {:>12.2} {:>10.2} {:>7.1}%",
+                r.name,
+                r.gflops(),
+                r.intensity(),
+                roof,
+                100.0 * r.gflops() / roof.max(1e-12)
+            );
+        }
+        out
+    }
+}
+
+/// Problem sizes of one run; tests use a miniature instance.
+#[derive(Clone, Copy, Debug)]
+pub struct Sizes {
+    /// FMA-chain iterations of the compute-roof measurement.
+    pub peak_iters: u64,
+    /// f64 elements (per pass) of the bandwidth measurement.
+    pub bw_len: usize,
+    pub bw_passes: usize,
+    /// Source count of the P2P sweeps.
+    pub p2p_src: usize,
+    /// Target count of the gather/log sweeps.
+    pub p2p_tgt: usize,
+    pub p2p_passes: usize,
+    /// Expansion order and weak-list length of the M2L panel.
+    pub m2l_p: usize,
+    pub m2l_srcs: usize,
+    pub m2l_passes: usize,
+}
+
+impl Sizes {
+    pub fn for_opts(quick: bool) -> Self {
+        if quick {
+            Self {
+                peak_iters: 4_000_000,
+                bw_len: 2 << 20, // 16 MB
+                bw_passes: 3,
+                p2p_src: 1024,
+                p2p_tgt: 128,
+                p2p_passes: 2,
+                m2l_p: 17,
+                m2l_srcs: 27,
+                m2l_passes: 2_000,
+            }
+        } else {
+            Self {
+                peak_iters: 40_000_000,
+                bw_len: 8 << 20, // 64 MB
+                bw_passes: 6,
+                p2p_src: 4096,
+                p2p_tgt: 512,
+                p2p_passes: 10,
+                m2l_p: 17,
+                m2l_srcs: 27,
+                m2l_passes: 50_000,
+            }
+        }
+    }
+}
+
+/// Compute roof: 8 independent FMA dependency chains (enough to cover the
+/// FMA latency×throughput product of current cores), nominal 2 flops each.
+fn measure_peak_gflops(iters: u64) -> f64 {
+    let a = black_box(1.000000001f64);
+    let b = black_box(1e-9f64);
+    let mut acc = [1.0f64, 1.25, 1.5, 1.75, 2.0, 2.25, 2.5, 2.75];
+    let t = Instant::now();
+    for _ in 0..iters {
+        for x in acc.iter_mut() {
+            *x = a.mul_add(*x, b);
+        }
+    }
+    let secs = t.elapsed().as_secs_f64();
+    black_box(acc);
+    2.0 * 8.0 * iters as f64 / secs.max(1e-12) / 1e9
+}
+
+/// Memory roof: streaming read sum with 4 split accumulators.
+fn measure_bandwidth_gbs(len: usize, passes: usize) -> f64 {
+    let v: Vec<f64> = (0..len).map(|i| (i % 17) as f64 * 0.25).collect();
+    let mut acc = [0.0f64; 4];
+    let t = Instant::now();
+    for _ in 0..passes {
+        let mut i = 0;
+        while i + 4 <= v.len() {
+            acc[0] += v[i];
+            acc[1] += v[i + 1];
+            acc[2] += v[i + 2];
+            acc[3] += v[i + 3];
+            i += 4;
+        }
+        black_box(&acc);
+    }
+    let secs = t.elapsed().as_secs_f64();
+    (len * passes * 8) as f64 / secs.max(1e-12) / 1e9
+}
+
+fn random_points(r: &mut Pcg64, n: usize) -> (Vec<C64>, Vec<C64>) {
+    let pts = (0..n)
+        .map(|_| C64::new(r.uniform_in(0.0, 1.0), r.uniform_in(0.0, 1.0)))
+        .collect();
+    let gs = (0..n)
+        .map(|_| C64::new(r.uniform_in(-1.0, 1.0), r.uniform_in(-1.0, 1.0)))
+        .collect();
+    (pts, gs)
+}
+
+/// Run the bench at explicit sizes (the CLI passes [`Sizes::for_opts`]).
+pub fn run_sized(opts: &KernelBenchOpts, s: &Sizes) -> KernelReport {
+    let mut rng = Pcg64::seed_from_u64(opts.seed);
+    let peak_gflops = measure_peak_gflops(s.peak_iters);
+    let bw_gbs = measure_bandwidth_gbs(s.bw_len, s.bw_passes);
+    let mut rows = Vec::new();
+
+    let (pts, gs) = random_points(&mut rng, s.p2p_src);
+    let tile = PackedPoints::pack(&pts, &gs);
+    let (tpts, _) = random_points(&mut rng, s.p2p_tgt);
+
+    // p2p-gather: destination-side accumulation over the full padded tile
+    {
+        let mut sink = (0.0, 0.0);
+        let t = Instant::now();
+        for _ in 0..s.p2p_passes {
+            for zt in &tpts {
+                let (ar, ai) = accum_harmonic(
+                    &tile.xs,
+                    &tile.ys,
+                    &tile.gre,
+                    &tile.gim,
+                    0,
+                    tile.padded(),
+                    zt.re,
+                    zt.im,
+                );
+                sink.0 += ar;
+                sink.1 += ai;
+            }
+        }
+        let secs = t.elapsed().as_secs_f64();
+        black_box(sink);
+        let pairs = (s.p2p_passes * s.p2p_tgt * tile.padded()) as f64;
+        rows.push(RooflineRow {
+            name: "p2p-gather".into(),
+            flops: FLOPS_P2P_GATHER * pairs,
+            bytes: 32.0 * pairs,
+            secs,
+        });
+    }
+
+    // p2p-scatter: the symmetric formulation over all unordered pairs
+    {
+        let n = tile.n;
+        let mut phr = vec![0.0f64; n];
+        let mut phm = vec![0.0f64; n];
+        let t = Instant::now();
+        for _ in 0..s.p2p_passes {
+            for i in 0..n {
+                let (ar, ai) = accum_scatter_harmonic(
+                    &tile.xs,
+                    &tile.ys,
+                    &tile.gre,
+                    &tile.gim,
+                    i + 1,
+                    n,
+                    tile.xs[i],
+                    tile.ys[i],
+                    tile.gre[i],
+                    tile.gim[i],
+                    0,
+                    &mut phr,
+                    &mut phm,
+                );
+                phr[i] += ar;
+                phm[i] += ai;
+            }
+        }
+        let secs = t.elapsed().as_secs_f64();
+        black_box(&phr);
+        let pairs = (s.p2p_passes * n * (n - 1) / 2) as f64;
+        rows.push(RooflineRow {
+            name: "p2p-scatter".into(),
+            flops: FLOPS_P2P_SCATTER * pairs,
+            bytes: 64.0 * pairs,
+            secs,
+        });
+    }
+
+    // p2p-log: bounded to the true population (padding is unsafe under ln)
+    {
+        let mut sink = (0.0, 0.0);
+        let t = Instant::now();
+        for _ in 0..s.p2p_passes {
+            for zt in &tpts {
+                let (ar, ai) = accum_log(
+                    &tile.xs, &tile.ys, &tile.gre, &tile.gim, 0, tile.n, zt.re, zt.im,
+                );
+                sink.0 += ar;
+                sink.1 += ai;
+            }
+        }
+        let secs = t.elapsed().as_secs_f64();
+        black_box(sink);
+        let pairs = (s.p2p_passes * s.p2p_tgt * tile.n) as f64;
+        rows.push(RooflineRow {
+            name: "p2p-log".into(),
+            flops: FLOPS_P2P_LOG * pairs,
+            bytes: 32.0 * pairs,
+            secs,
+        });
+    }
+
+    // m2l-panel: one destination's weak list, the blocked panel kernel
+    {
+        let p = s.m2l_p;
+        let stride = p + 1;
+        let op = M2lOperator::new(p);
+        let nboxes = s.m2l_srcs;
+        let mut mults = vec![crate::complex::ZERO; nboxes * stride];
+        let mut centers = vec![crate::complex::ZERO; nboxes];
+        for b in 0..nboxes {
+            for k in 1..=p {
+                mults[b * stride + k] =
+                    C64::new(rng.uniform_in(-1.0, 1.0), rng.uniform_in(-1.0, 1.0));
+            }
+            // well-separated source centers (θ-criterion distances)
+            centers[b] = C64::new(rng.uniform_in(2.0, 4.0), rng.uniform_in(2.0, 4.0));
+        }
+        let srcs: Vec<u32> = (0..nboxes as u32).collect();
+        let z_o = C64::new(0.0, 0.0);
+        let mut local = vec![crate::complex::ZERO; stride];
+        let mut scratch = M2lScratch::default();
+        let t = Instant::now();
+        for _ in 0..s.m2l_passes {
+            op.apply_panel(&mults, stride, &srcs, &centers, &mut local, z_o, &mut scratch);
+        }
+        let secs = t.elapsed().as_secs_f64();
+        black_box(&local);
+        let translations = (s.m2l_passes * nboxes) as f64;
+        rows.push(RooflineRow {
+            name: "m2l-panel".into(),
+            flops: flops_m2l(p) * translations,
+            // nominal traffic: the source's coefficients in; T and the
+            // panel state are cache-resident by construction
+            bytes: 16.0 * (p as f64 + 1.0) * translations,
+            secs,
+        });
+    }
+
+    KernelReport {
+        quick: opts.quick,
+        seed: opts.seed,
+        peak_gflops,
+        bw_gbs,
+        rows,
+    }
+}
+
+/// Run the bench at the sizes implied by `opts`.
+pub fn run(opts: &KernelBenchOpts) -> KernelReport {
+    run_sized(opts, &Sizes::for_opts(opts.quick))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Miniature sizes so the test finishes in milliseconds.
+    fn tiny() -> Sizes {
+        Sizes {
+            peak_iters: 10_000,
+            bw_len: 1 << 14,
+            bw_passes: 2,
+            p2p_src: 64,
+            p2p_tgt: 8,
+            p2p_passes: 1,
+            m2l_p: 5,
+            m2l_srcs: 4,
+            m2l_passes: 10,
+        }
+    }
+
+    #[test]
+    fn report_measures_every_kernel() {
+        let opts = KernelBenchOpts {
+            quick: true,
+            seed: 7,
+        };
+        let r = run_sized(&opts, &tiny());
+        assert!(r.peak_gflops > 0.0 && r.peak_gflops.is_finite());
+        assert!(r.bw_gbs > 0.0 && r.bw_gbs.is_finite());
+        let names: Vec<&str> = r.rows.iter().map(|x| x.name.as_str()).collect();
+        assert_eq!(names, ["p2p-gather", "p2p-scatter", "p2p-log", "m2l-panel"]);
+        for row in &r.rows {
+            assert!(row.flops > 0.0 && row.bytes > 0.0 && row.secs >= 0.0);
+            assert!(row.gflops().is_finite() && row.intensity() > 0.0);
+            assert!(r.roof_gflops(row) > 0.0);
+        }
+        let text = r.render();
+        assert!(text.contains("p2p-gather") && text.contains("m2l-panel"));
+        assert!(text.contains("machine roofs"));
+    }
+
+    #[test]
+    fn m2l_flop_model_is_quadratic() {
+        // sanity of the documented closed form
+        assert_eq!(flops_m2l(1), 12.0 + 8.0 + 28.0);
+        assert!(flops_m2l(17) > flops_m2l(8));
+    }
+}

@@ -14,6 +14,7 @@
 
 pub mod benchsuite;
 pub mod figures;
+pub mod kernelbench;
 pub mod report;
 pub mod runner;
 

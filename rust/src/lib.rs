@@ -10,6 +10,10 @@
 //! * the **computational phase** — multipole/local expansion operators
 //!   ([`expansion`]), a serial CPU driver ([`fmm`]) and the O(N²) baseline
 //!   ([`direct`]);
+//! * the **micro-kernel layer** — padded SoA leaf tiles and the blocked
+//!   FMA harmonic P2P kernels shared by every CPU engine and the direct
+//!   baselines ([`tiles`], DESIGN.md §10), with per-kernel throughput vs
+//!   a measured roofline reported by `fmm2d kernel-bench`;
 //! * the **data-parallel path** — packing of the pyramid into fixed-shape
 //!   tensors ([`packing`]) executed through AOT-compiled XLA artifacts via
 //!   PJRT (`runtime`, behind the non-default `pjrt` cargo feature: the
@@ -55,6 +59,7 @@ pub mod harness;
 pub mod packing;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod tiles;
 pub mod topology;
 pub mod tree;
 pub mod util;

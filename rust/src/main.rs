@@ -78,6 +78,10 @@ Validation & tools:
                 written to results/BENCH_<date>.json and compared against
                 the newest earlier record (or --baseline FILE) as per-case
                 ratios (--full --seed --threads --pin --out FILE)
+  kernel-bench  per-kernel GFLOP/s of the tiled P2P accumulators and the
+                blocked M2L panel vs a measured roofline (FMA-chain compute
+                roof + streaming memory roof, DESIGN.md §10); --quick is the
+                CI smoke size (--seed)
   artifacts     list available AOT artifacts (needs --features pjrt)
 
 The default engine is `parallel` with all available cores; --threads T caps
@@ -329,6 +333,15 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             }
         }
         "bench-suite" => cmd_bench_suite(&args)?,
+        "kernel-bench" => {
+            use fmm2d::harness::kernelbench::{self, KernelBenchOpts};
+            args.check_known(&["quick", "seed"])?;
+            let opts = KernelBenchOpts {
+                quick: args.flag("quick"),
+                seed: args.get_or("seed", KernelBenchOpts::default().seed)?,
+            };
+            print!("{}", kernelbench::run(&opts).render());
+        }
         "artifacts" => cmd_artifacts()?,
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => bail!("unknown command '{other}'; see `fmm2d help`"),

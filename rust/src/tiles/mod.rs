@@ -1,0 +1,503 @@
+//! SoA leaf tiles and the harmonic P2P micro-kernels.
+//!
+//! The near-field hot loops used to stream particles out of flat
+//! `xs/ys/gre/gim` arrays indexed by the pyramid's leaf ranges — SoA, but
+//! with box boundaries at arbitrary offsets, so every box pair paid a
+//! remainder loop and the vectorizer saw ragged trip counts. This module
+//! mirrors the leaf particles once per evaluation into **padded tiles**:
+//!
+//! ```text
+//!        slot   0    1    2    ... len[b]-1 | len[b] ...  nmax-1
+//!  xs[b*nmax+·] x_0  x_1  x_2  ...  x_last  | 1e200  ...  1e200   (PAD_POS)
+//!  ys[b*nmax+·] y_0  y_1  y_2  ...  y_last  | 1e200  ...  1e200
+//! gre[b*nmax+·] Γre  Γre  Γre  ...   Γre    |  0.0   ...   0.0
+//! gim[b*nmax+·] Γim  Γim  Γim  ...   Γim    |  0.0   ...   0.0
+//! ```
+//!
+//! where `nmax` is the maximum leaf population rounded up to a multiple of
+//! [`LANE`]. Every leaf starts at a lane-aligned offset and the padded
+//! slots are arithmetic no-ops for the harmonic kernel: with the sentinel
+//! position `dx² + dy²` overflows to `+∞`, the reciprocal collapses to
+//! `±0.0`, and the zero pad strengths multiply it away — so
+//! destination-side accumulations may run over the full padded width with
+//! no tail and no branch. (Padded slots must never be used for
+//! *scattered* source-side writes; the symmetric kernel therefore bounds
+//! its source loop to the true length and takes the scalar tail instead.)
+//!
+//! The micro-kernels ([`accum_harmonic`], [`accum_scatter_harmonic`],
+//! [`accum_harmonic_guarded`]) share one loop shape: [`LANE`]-wide blocks
+//! with **split re/im accumulator lanes** (element `j` lands in lane
+//! `(j − j0) mod LANE`), an FMA (`mul_add`) reciprocal-free inner body,
+//! a scalar tail continuing the lane pattern, and a **fixed-order lane
+//! reduction** `(a0 + a1) + (a2 + a3)` at the end. The lane decomposition
+//! is part of the kernel's contract — `tests/kernel_tiles.rs` pins it
+//! bitwise against a scalar model, which certifies the loop shape the
+//! vectorizer sees and keeps every engine (serial, scoped, pooled,
+//! task-graph) bitwise-reproducible on the same shards (DESIGN.md §10).
+
+use std::ops::Range;
+
+use crate::complex::C64;
+use crate::tree::Pyramid;
+
+/// Lane width of the blocked micro-kernels (f64x4 — one AVX2 register).
+pub const LANE: usize = 4;
+
+/// Sentinel position of padded slots: large enough that `dx² + dy²`
+/// overflows to `+∞` against any real coordinate (so the reciprocal is an
+/// exact `±0.0`), finite so `dx` itself stays a number (`∞ − x = ∞` would
+/// still work, but `∞ · 0` would not).
+pub const PAD_POS: f64 = 1e200;
+
+/// Leaf particles mirrored into padded SoA tiles, built once per
+/// evaluation alongside the pyramid and shared read-only by every engine.
+/// Leaf `b` owns slots `b·nmax .. (b+1)·nmax`; slot `s < len[b]`
+/// holds the particle with global (leaf-ordered) index
+/// `pyramid.starts[b] + s`.
+#[derive(Clone, Debug)]
+pub struct LeafTiles {
+    /// Tile width: max leaf population rounded up to a [`LANE`] multiple.
+    pub nmax: usize,
+    /// True population of each leaf (`starts[b+1] − starts[b]`).
+    pub len: Vec<usize>,
+    /// Padded positions, real part.
+    pub xs: Vec<f64>,
+    /// Padded positions, imaginary part.
+    pub ys: Vec<f64>,
+    /// Padded strengths, real part (zero in padded slots).
+    pub gre: Vec<f64>,
+    /// Padded strengths, imaginary part (zero in padded slots).
+    pub gim: Vec<f64>,
+}
+
+impl LeafTiles {
+    /// Mirror the pyramid's (already leaf-sorted) particles into tiles.
+    pub fn build(pyr: &Pyramid) -> Self {
+        let nl = pyr.n_leaves();
+        let nmax = round_up_lane(pyr.max_leaf_len());
+        let mut xs = vec![PAD_POS; nl * nmax];
+        let mut ys = vec![PAD_POS; nl * nmax];
+        let mut gre = vec![0.0; nl * nmax];
+        let mut gim = vec![0.0; nl * nmax];
+        let mut len = Vec::with_capacity(nl);
+        for b in 0..nl {
+            let (lo, hi) = (pyr.starts[b], pyr.starts[b + 1]);
+            len.push(hi - lo);
+            let base = b * nmax;
+            for (s, q) in pyr.particles[lo..hi].iter().enumerate() {
+                xs[base + s] = q.pos.re;
+                ys[base + s] = q.pos.im;
+                gre[base + s] = q.gamma.re;
+                gim[base + s] = q.gamma.im;
+            }
+        }
+        Self {
+            nmax,
+            len,
+            xs,
+            ys,
+            gre,
+            gim,
+        }
+    }
+
+    /// Number of leaf tiles.
+    #[inline]
+    pub fn n_leaves(&self) -> usize {
+        self.len.len()
+    }
+
+    /// Slot range of leaf `b` in the flat arrays.
+    #[inline]
+    pub fn tile(&self, b: usize) -> Range<usize> {
+        b * self.nmax..(b + 1) * self.nmax
+    }
+}
+
+/// One padded SoA tile over an arbitrary point set — the [`crate::direct`]
+/// baselines' counterpart of [`LeafTiles`] (a single tile holding the whole
+/// input, same padding contract).
+#[derive(Clone, Debug)]
+pub struct PackedPoints {
+    /// True point count; slots `n..padded()` hold [`PAD_POS`]/zero.
+    pub n: usize,
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+    pub gre: Vec<f64>,
+    pub gim: Vec<f64>,
+}
+
+impl PackedPoints {
+    pub fn pack(points: &[C64], gammas: &[C64]) -> Self {
+        let n = points.len();
+        let padded = round_up_lane(n);
+        let mut xs = vec![PAD_POS; padded];
+        let mut ys = vec![PAD_POS; padded];
+        let mut gre = vec![0.0; padded];
+        let mut gim = vec![0.0; padded];
+        for i in 0..n {
+            xs[i] = points[i].re;
+            ys[i] = points[i].im;
+            gre[i] = gammas[i].re;
+            gim[i] = gammas[i].im;
+        }
+        Self { n, xs, ys, gre, gim }
+    }
+
+    /// Padded width (a [`LANE`] multiple, `≥ n`).
+    #[inline]
+    pub fn padded(&self) -> usize {
+        self.xs.len()
+    }
+}
+
+/// Round `n` up to the next [`LANE`] multiple.
+#[inline]
+pub fn round_up_lane(n: usize) -> usize {
+    n.div_ceil(LANE) * LANE
+}
+
+/// Destination-side harmonic accumulation over source slots `j0..j1`:
+/// returns `Σ_j Γ_j / (z_j − z_i)` as split `(re, im)`. Safe over padded
+/// slots (exact no-ops, see the module docs). Blocked [`LANE`]-wide with
+/// split accumulator lanes, FMA bodies and a fixed-order lane reduction —
+/// the lane semantics `tests/kernel_tiles.rs` pins bitwise.
+#[inline]
+pub fn accum_harmonic(
+    xs: &[f64],
+    ys: &[f64],
+    gre: &[f64],
+    gim: &[f64],
+    j0: usize,
+    j1: usize,
+    xi: f64,
+    yi: f64,
+) -> (f64, f64) {
+    let mut ar = [0.0f64; LANE];
+    let mut ai = [0.0f64; LANE];
+    let mut j = j0;
+    while j + LANE <= j1 {
+        for k in 0..LANE {
+            let dx = xs[j + k] - xi;
+            let dy = ys[j + k] - yi;
+            let inv = 1.0 / dx.mul_add(dx, dy * dy);
+            let rr = dx * inv;
+            let ri = -(dy * inv);
+            ar[k] = gre[j + k].mul_add(rr, ar[k]);
+            ar[k] = (-gim[j + k]).mul_add(ri, ar[k]);
+            ai[k] = gre[j + k].mul_add(ri, ai[k]);
+            ai[k] = gim[j + k].mul_add(rr, ai[k]);
+        }
+        j += LANE;
+    }
+    // scalar tail, continuing the lane pattern (element j → lane (j−j0)%LANE)
+    let mut k = 0;
+    while j < j1 {
+        let dx = xs[j] - xi;
+        let dy = ys[j] - yi;
+        let inv = 1.0 / dx.mul_add(dx, dy * dy);
+        let rr = dx * inv;
+        let ri = -(dy * inv);
+        ar[k] = gre[j].mul_add(rr, ar[k]);
+        ar[k] = (-gim[j]).mul_add(ri, ar[k]);
+        ai[k] = gre[j].mul_add(ri, ai[k]);
+        ai[k] = gim[j].mul_add(rr, ai[k]);
+        j += 1;
+        k += 1;
+    }
+    ((ar[0] + ar[1]) + (ar[2] + ar[3]), (ai[0] + ai[1]) + (ai[2] + ai[3]))
+}
+
+/// [`accum_harmonic`] with the symmetric kernel's scattered side (§4.2):
+/// besides accumulating `Σ_j Γ_j/(z_j − z_i)` for the destination, each
+/// source slot `j` receives `Φ_{jbase+j} −= Γ_i / (z_j − z_i)` into
+/// `phr`/`phm` (global particle indexing; `jbase` maps tile slots to it).
+/// Because of those real writes the loop must stop at the true source
+/// population — callers pass `j1 ≤ len`, never the padded width.
+#[allow(clippy::too_many_arguments)] // micro-kernel plumbing, not API
+#[inline]
+pub fn accum_scatter_harmonic(
+    xs: &[f64],
+    ys: &[f64],
+    gre: &[f64],
+    gim: &[f64],
+    j0: usize,
+    j1: usize,
+    xi: f64,
+    yi: f64,
+    gri: f64,
+    gii: f64,
+    jbase: usize,
+    phr: &mut [f64],
+    phm: &mut [f64],
+) -> (f64, f64) {
+    let mut ar = [0.0f64; LANE];
+    let mut ai = [0.0f64; LANE];
+    let mut j = j0;
+    while j + LANE <= j1 {
+        for k in 0..LANE {
+            let dx = xs[j + k] - xi;
+            let dy = ys[j + k] - yi;
+            let inv = 1.0 / dx.mul_add(dx, dy * dy);
+            let rr = dx * inv;
+            let ri = -(dy * inv);
+            ar[k] = gre[j + k].mul_add(rr, ar[k]);
+            ar[k] = (-gim[j + k]).mul_add(ri, ar[k]);
+            ai[k] = gre[j + k].mul_add(ri, ai[k]);
+            ai[k] = gim[j + k].mul_add(rr, ai[k]);
+            // Φ_j −= Γ_i r  (Φre −= gri·rr − gii·ri; Φim −= gri·ri + gii·rr)
+            let pr = gii.mul_add(ri, phr[jbase + j + k]);
+            phr[jbase + j + k] = (-gri).mul_add(rr, pr);
+            let pm = (-gii).mul_add(rr, phm[jbase + j + k]);
+            phm[jbase + j + k] = (-gri).mul_add(ri, pm);
+        }
+        j += LANE;
+    }
+    let mut k = 0;
+    while j < j1 {
+        let dx = xs[j] - xi;
+        let dy = ys[j] - yi;
+        let inv = 1.0 / dx.mul_add(dx, dy * dy);
+        let rr = dx * inv;
+        let ri = -(dy * inv);
+        ar[k] = gre[j].mul_add(rr, ar[k]);
+        ar[k] = (-gim[j]).mul_add(ri, ar[k]);
+        ai[k] = gre[j].mul_add(ri, ai[k]);
+        ai[k] = gim[j].mul_add(rr, ai[k]);
+        let pr = gii.mul_add(ri, phr[jbase + j]);
+        phr[jbase + j] = (-gri).mul_add(rr, pr);
+        let pm = (-gii).mul_add(rr, phm[jbase + j]);
+        phm[jbase + j] = (-gri).mul_add(ri, pm);
+        j += 1;
+        k += 1;
+    }
+    ((ar[0] + ar[1]) + (ar[2] + ar[3]), (ai[0] + ai[1]) + (ai[2] + ai[3]))
+}
+
+/// [`accum_harmonic`] with a coincidence guard: slots whose position equals
+/// `(xi, yi)` contribute nothing instead of `∞/NaN` — the separate-targets
+/// case of Eq. (1.2) ([`crate::direct::eval_separate`]), where a target may
+/// coincide with a source. The guard is a branchless select on `d² > 0`
+/// (padded slots take the `1/∞ = 0` route, not the guard).
+#[inline]
+pub fn accum_harmonic_guarded(
+    xs: &[f64],
+    ys: &[f64],
+    gre: &[f64],
+    gim: &[f64],
+    j0: usize,
+    j1: usize,
+    xi: f64,
+    yi: f64,
+) -> (f64, f64) {
+    let mut ar = [0.0f64; LANE];
+    let mut ai = [0.0f64; LANE];
+    let mut j = j0;
+    while j + LANE <= j1 {
+        for k in 0..LANE {
+            let dx = xs[j + k] - xi;
+            let dy = ys[j + k] - yi;
+            let d2 = dx.mul_add(dx, dy * dy);
+            let inv = if d2 > 0.0 { 1.0 / d2 } else { 0.0 };
+            let rr = dx * inv;
+            let ri = -(dy * inv);
+            ar[k] = gre[j + k].mul_add(rr, ar[k]);
+            ar[k] = (-gim[j + k]).mul_add(ri, ar[k]);
+            ai[k] = gre[j + k].mul_add(ri, ai[k]);
+            ai[k] = gim[j + k].mul_add(rr, ai[k]);
+        }
+        j += LANE;
+    }
+    let mut k = 0;
+    while j < j1 {
+        let dx = xs[j] - xi;
+        let dy = ys[j] - yi;
+        let d2 = dx.mul_add(dx, dy * dy);
+        let inv = if d2 > 0.0 { 1.0 / d2 } else { 0.0 };
+        let rr = dx * inv;
+        let ri = -(dy * inv);
+        ar[k] = gre[j].mul_add(rr, ar[k]);
+        ar[k] = (-gim[j]).mul_add(ri, ar[k]);
+        ai[k] = gre[j].mul_add(ri, ai[k]);
+        ai[k] = gim[j].mul_add(rr, ai[k]);
+        j += 1;
+        k += 1;
+    }
+    ((ar[0] + ar[1]) + (ar[2] + ar[3]), (ai[0] + ai[1]) + (ai[2] + ai[3]))
+}
+
+/// Destination-side **log-kernel** accumulation over source slots
+/// `j0..j1`: returns `Σ_j Γ_j · ln(z_i − z_j)` as split `(re, im)`, with
+/// `ln` evaluated exactly as [`C64::ln`] does (`0.5·ln(d²)` real part,
+/// `atan2` imaginary part). Same blocked lane shape as [`accum_harmonic`].
+///
+/// Unlike the harmonic kernels, padded slots are **not** no-ops here —
+/// `ln(∞) = ∞` and `0 · ∞ = NaN` — so callers must bound `j1` to the true
+/// population (the scalar tail absorbs the remainder), and coincident
+/// slots (`d² = 0 ⇒ ln = −∞`) must be excluded by splitting the range.
+#[inline]
+pub fn accum_log(
+    xs: &[f64],
+    ys: &[f64],
+    gre: &[f64],
+    gim: &[f64],
+    j0: usize,
+    j1: usize,
+    xi: f64,
+    yi: f64,
+) -> (f64, f64) {
+    let mut ar = [0.0f64; LANE];
+    let mut ai = [0.0f64; LANE];
+    let mut j = j0;
+    while j + LANE <= j1 {
+        for k in 0..LANE {
+            let dx = xi - xs[j + k];
+            let dy = yi - ys[j + k];
+            let lr = 0.5 * dx.mul_add(dx, dy * dy).ln();
+            let li = dy.atan2(dx);
+            ar[k] = gre[j + k].mul_add(lr, ar[k]);
+            ar[k] = (-gim[j + k]).mul_add(li, ar[k]);
+            ai[k] = gre[j + k].mul_add(li, ai[k]);
+            ai[k] = gim[j + k].mul_add(lr, ai[k]);
+        }
+        j += LANE;
+    }
+    let mut k = 0;
+    while j < j1 {
+        let dx = xi - xs[j];
+        let dy = yi - ys[j];
+        let lr = 0.5 * dx.mul_add(dx, dy * dy).ln();
+        let li = dy.atan2(dx);
+        ar[k] = gre[j].mul_add(lr, ar[k]);
+        ar[k] = (-gim[j]).mul_add(li, ar[k]);
+        ai[k] = gre[j].mul_add(li, ai[k]);
+        ai[k] = gim[j].mul_add(lr, ai[k]);
+        j += 1;
+        k += 1;
+    }
+    ((ar[0] + ar[1]) + (ar[2] + ar[3]), (ai[0] + ai[1]) + (ai[2] + ai[3]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use crate::workload;
+
+    fn build_tree(n: usize, levels: usize, seed: u64) -> Pyramid {
+        let mut r = Pcg64::seed_from_u64(seed);
+        let (pts, gs) = workload::uniform_square(n, &mut r);
+        Pyramid::build(&pts, &gs, levels).unwrap()
+    }
+
+    #[test]
+    fn tile_width_is_lane_aligned() {
+        assert_eq!(round_up_lane(0), 0);
+        assert_eq!(round_up_lane(1), LANE);
+        assert_eq!(round_up_lane(LANE), LANE);
+        assert_eq!(round_up_lane(LANE + 1), 2 * LANE);
+        let pyr = build_tree(1000, 3, 7);
+        let t = LeafTiles::build(&pyr);
+        assert_eq!(t.nmax % LANE, 0);
+        assert!(t.nmax >= pyr.max_leaf_len());
+        assert!(t.nmax < pyr.max_leaf_len() + LANE);
+        assert_eq!(t.n_leaves(), pyr.n_leaves());
+        assert_eq!(t.xs.len(), t.n_leaves() * t.nmax);
+    }
+
+    #[test]
+    fn tiles_mirror_particles_and_pad_the_rest() {
+        // 37 particles over 16 leaves forces uneven populations: real
+        // slots mirror the leaf-sorted particles, padded slots carry the
+        // sentinel position and zero strength
+        let pyr = build_tree(37, 2, 11);
+        let t = LeafTiles::build(&pyr);
+        for b in 0..t.n_leaves() {
+            let (lo, hi) = (pyr.starts[b], pyr.starts[b + 1]);
+            assert_eq!(t.len[b], hi - lo);
+            let base = b * t.nmax;
+            for s in 0..t.nmax {
+                if s < t.len[b] {
+                    let q = &pyr.particles[lo + s];
+                    assert_eq!(t.xs[base + s], q.pos.re);
+                    assert_eq!(t.ys[base + s], q.pos.im);
+                    assert_eq!(t.gre[base + s], q.gamma.re);
+                    assert_eq!(t.gim[base + s], q.gamma.im);
+                } else {
+                    assert_eq!(t.xs[base + s], PAD_POS);
+                    assert_eq!(t.ys[base + s], PAD_POS);
+                    assert_eq!(t.gre[base + s], 0.0);
+                    assert_eq!(t.gim[base + s], 0.0);
+                }
+            }
+        }
+        // uneven populations actually occurred (scalar-tail boxes exist)
+        assert!((0..t.n_leaves()).any(|b| t.len[b] % LANE != 0));
+        // empty leaves are all-padding tiles
+        if let Some(b) = (0..t.n_leaves()).find(|&b| t.len[b] == 0) {
+            assert!(t.xs[t.tile(b)].iter().all(|&x| x == PAD_POS));
+        }
+    }
+
+    #[test]
+    fn padded_slots_are_exact_noops() {
+        // a one-particle tile padded to LANE: accumulating over the full
+        // padded width must equal accumulating over the single real slot
+        let pts = [C64::new(0.25, 0.5)];
+        let gs = [C64::new(1.5, -0.5)];
+        let t = PackedPoints::pack(&pts, &gs);
+        assert_eq!(t.padded(), LANE);
+        let (xi, yi) = (0.75, 0.25);
+        let full = accum_harmonic(&t.xs, &t.ys, &t.gre, &t.gim, 0, t.padded(), xi, yi);
+        let real = accum_harmonic(&t.xs, &t.ys, &t.gre, &t.gim, 0, 1, xi, yi);
+        assert_eq!(full.0, real.0);
+        assert_eq!(full.1, real.1);
+        // and the guarded flavor agrees on non-coincident data
+        let g = accum_harmonic_guarded(&t.xs, &t.ys, &t.gre, &t.gim, 0, t.padded(), xi, yi);
+        assert_eq!(g.0, full.0);
+        assert_eq!(g.1, full.1);
+    }
+
+    #[test]
+    fn guarded_skips_coincident_sources() {
+        let pts = [C64::new(0.5, 0.5), C64::new(0.125, 0.75)];
+        let gs = [C64::new(1.0, 2.0), C64::new(-3.0, 0.5)];
+        let t = PackedPoints::pack(&pts, &gs);
+        // target sits exactly on source 0: only source 1 contributes
+        let (ar, ai) = accum_harmonic_guarded(&t.xs, &t.ys, &t.gre, &t.gim, 0, t.padded(), 0.5, 0.5);
+        let (er, ei) = accum_harmonic(&t.xs, &t.ys, &t.gre, &t.gim, 1, 2, 0.5, 0.5);
+        assert!(ar.is_finite() && ai.is_finite());
+        assert!((ar - er).abs() <= 1e-15 * er.abs().max(1.0));
+        assert!((ai - ei).abs() <= 1e-15 * ei.abs().max(1.0));
+    }
+
+    #[test]
+    fn log_accumulator_matches_complex_ln() {
+        use crate::expansion::Kernel;
+        let mut r = Pcg64::seed_from_u64(17);
+        let (pts, gs) = workload::uniform_square(23, &mut r);
+        let t = PackedPoints::pack(&pts, &gs);
+        let (xi, yi) = (1.5, -0.25);
+        let zt = C64::new(xi, yi);
+        // bounded to the true population — padding is NOT a no-op under ln
+        let (ar, ai) = accum_log(&t.xs, &t.ys, &t.gre, &t.gim, 0, t.n, xi, yi);
+        let mut want = C64::new(0.0, 0.0);
+        for (p, g) in pts.iter().zip(&gs) {
+            want += Kernel::Log.eval(zt, *p, *g);
+        }
+        assert!((ar - want.re).abs() <= 1e-12 * want.re.abs().max(1.0));
+        assert!((ai - want.im).abs() <= 1e-12 * want.im.abs().max(1.0));
+    }
+
+    #[test]
+    fn single_box_tree_builds_one_padded_tile() {
+        let pyr = build_tree(1, 0, 13);
+        let t = LeafTiles::build(&pyr);
+        assert_eq!(t.n_leaves(), 1);
+        assert_eq!(t.nmax, LANE);
+        // zero-length accumulation is an exact zero
+        let (ar, ai) = accum_harmonic(&t.xs, &t.ys, &t.gre, &t.gim, 0, 0, 0.1, 0.2);
+        assert_eq!(ar, 0.0);
+        assert_eq!(ai, 0.0);
+    }
+}

@@ -55,9 +55,10 @@ const UNSAFE_ALLOWLIST: [&str; 1] = ["rust/src/util/pool.rs"];
 /// Hot-path directories where panicking calls are denied.
 const NO_PANIC_DIRS: [&str; 3] = ["rust/src/fmm/", "rust/src/topology/", "rust/src/dispatch/"];
 /// Parallel-engine files where iterator float reductions are denied.
-const FLOAT_REDUCTION_FILES: [&str; 6] = [
+const FLOAT_REDUCTION_FILES: [&str; 7] = [
     "rust/src/fmm/parallel.rs",
     "rust/src/fmm/taskgraph.rs",
+    "rust/src/tiles/mod.rs",
     "rust/src/tree/mod.rs",
     "rust/src/connectivity/mod.rs",
     "rust/src/topology/mod.rs",
