@@ -62,6 +62,36 @@ impl FmmConfig {
     pub fn tolerance_estimate(&self) -> f64 {
         self.theta.powi(self.p as i32)
     }
+
+    /// Validate field ranges at a service/API boundary. The library itself
+    /// tolerates unusual-but-workable configurations (sweeps explore them),
+    /// so this is called where untrusted input enters — the serve request
+    /// decoder — not from `fmm::evaluate`.
+    pub fn validate(&self) -> crate::util::error::Result<()> {
+        crate::ensure!(
+            (1..=64).contains(&self.p),
+            "p must be in 1..=64 (got {})",
+            self.p
+        );
+        crate::ensure!(
+            (1..=4096).contains(&self.n_per_box),
+            "n_per_box must be in 1..=4096 (got {})",
+            self.n_per_box
+        );
+        crate::ensure!(
+            self.theta.is_finite() && self.theta > 0.0 && self.theta < 1.0,
+            "theta must lie in (0,1) (got {})",
+            self.theta
+        );
+        if let Some(l) = self.levels_override {
+            crate::ensure!(
+                (1..=crate::tree::MAX_LEVELS).contains(&l),
+                "levels must be in 1..={} (got {l})",
+                crate::tree::MAX_LEVELS
+            );
+        }
+        Ok(())
+    }
 }
 
 /// Eq. (5.2) as a free function.
@@ -115,6 +145,24 @@ mod tests {
         let n = 45 * (1 << 16);
         assert_eq!(cfg.levels_for(n), 8);
         assert_eq!(cfg.leaf_boxes_for(n), 4usize.pow(8));
+    }
+
+    #[test]
+    fn validate_accepts_defaults_and_rejects_out_of_range() {
+        assert!(FmmConfig::default().validate().is_ok());
+        let bad = [
+            FmmConfig { p: 0, ..Default::default() },
+            FmmConfig { p: 65, ..Default::default() },
+            FmmConfig { n_per_box: 0, ..Default::default() },
+            FmmConfig { theta: 0.0, ..Default::default() },
+            FmmConfig { theta: 1.0, ..Default::default() },
+            FmmConfig { theta: f64::NAN, ..Default::default() },
+            FmmConfig { levels_override: Some(0), ..Default::default() },
+            FmmConfig { levels_override: Some(17), ..Default::default() },
+        ];
+        for cfg in bad {
+            assert!(cfg.validate().is_err(), "{cfg:?}");
+        }
     }
 
     #[test]

@@ -195,6 +195,13 @@ pub struct Dispatcher {
     /// the report). Defaults to whether this build can execute it — the
     /// `pjrt` feature.
     pub allow_xla: bool,
+    /// True when this dispatcher runs on the *built-in* fallback rates
+    /// because no usable calibration profile existed (missing, corrupt, or
+    /// stale version). Long-lived consumers — `fmm2d serve` — use this to
+    /// resolve `--engine auto` to the pooled engine instead of trusting
+    /// uncalibrated crossovers; one-shot CLI runs keep the fallback
+    /// predictions (the report labels them).
+    pub fallback: bool,
 }
 
 impl Default for Dispatcher {
@@ -209,6 +216,7 @@ impl Dispatcher {
             profile,
             sim: GpuSim::c2075(),
             allow_xla: cfg!(feature = "pjrt"),
+            fallback: false,
         }
     }
 
@@ -231,11 +239,13 @@ impl Dispatcher {
     }
 
     /// Load from `path`, or the default profile location, or — when no
-    /// usable profile exists — the built-in fallback rates. Never errors
-    /// (the library entry points stay usable before the first
-    /// `calibrate`), but a file that *exists* and fails the strict parse
-    /// (corrupt, version mismatch) is reported on stderr before falling
-    /// back, so a stale profile cannot silently skew decisions forever.
+    /// usable profile exists — the built-in fallback rates with
+    /// [`Dispatcher::fallback`] set. Never errors (the library entry
+    /// points stay usable before the first `calibrate`; a fresh deployment
+    /// must serve traffic before it has measured anything), and warns on
+    /// stderr *once per process* why it fell back — a corrupt or
+    /// stale-version file that exists, or no file at all — so a missing or
+    /// broken profile cannot silently skew decisions forever.
     pub fn load_or_default(path: Option<&Path>) -> Dispatcher {
         let candidate = path
             .map(Path::to_path_buf)
@@ -243,14 +253,27 @@ impl Dispatcher {
         match CalibrationProfile::load(&candidate) {
             Ok(p) => Dispatcher::new(p),
             Err(e) => {
-                if candidate.exists() {
-                    eprintln!(
-                        "warning: ignoring dispatch profile {}: {e:#}; using built-in \
-                         fallback rates (re-run `fmm2d calibrate`)",
-                        candidate.display()
-                    );
+                static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+                WARN_ONCE.call_once(|| {
+                    if candidate.exists() {
+                        eprintln!(
+                            "warning: ignoring dispatch profile {}: {e:#}; using built-in \
+                             fallback rates (re-run `fmm2d calibrate`)",
+                            candidate.display()
+                        );
+                    } else {
+                        eprintln!(
+                            "warning: no dispatch profile at {}; using built-in fallback \
+                             rates (run `fmm2d calibrate` to enable measured `auto` \
+                             decisions)",
+                            candidate.display()
+                        );
+                    }
+                });
+                Dispatcher {
+                    fallback: true,
+                    ..Dispatcher::default()
                 }
-                Dispatcher::default()
             }
         }
     }
@@ -609,6 +632,18 @@ mod tests {
         .render();
         assert!(s.contains("n=20000 L4 p17"), "{s}");
         assert!(s.contains("2.0"), "drift column missing: {s}");
+    }
+
+    #[test]
+    fn missing_profile_falls_back_with_flag_set() {
+        let d = Dispatcher::load_or_default(Some(std::path::Path::new(
+            "/nonexistent/fmm2d-no-such-profile.json",
+        )));
+        assert!(d.fallback, "missing profile must set the fallback flag");
+        assert!(
+            !Dispatcher::new(profile()).fallback,
+            "a real profile must not"
+        );
     }
 
     #[test]

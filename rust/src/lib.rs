@@ -35,6 +35,12 @@
 //!   ([`dispatch`]);
 //! * a **GPU execution-cost simulator** ([`gpusim`]) standing in for the
 //!   paper's Tesla C2075 / GTX 480 testbed;
+//! * the **serving layer** — `fmm2d serve`, a fault-tolerant line-JSON
+//!   daemon with deadline-aware request batching, admission control, a
+//!   panic-isolation degradation ladder, and a deterministic
+//!   fault-injection harness plus load generator (`fmm2d loadgen`)
+//!   ([`serve`], [`util::failpoint`], behind the non-default `failpoints`
+//!   feature for the chaos sites);
 //! * the **evaluation harness** regenerating every table and figure of the
 //!   paper ([`harness`], [`bench`], [`workload`]).
 //!
@@ -59,6 +65,7 @@ pub mod harness;
 pub mod packing;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod tiles;
 pub mod topology;
 pub mod tree;

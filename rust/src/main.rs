@@ -84,6 +84,30 @@ Validation & tools:
                 CI smoke size (--seed)
   artifacts     list available AOT artifacts (needs --features pjrt)
 
+Serving & load generation (DESIGN.md §11):
+  serve         long-lived daemon: line-delimited JSON requests on stdin
+                (replies on stdout, stats on stderr), or TCP with --listen
+                ADDR. In-flight requests coalesce into (levels,p) groups
+                flushed on size or deadline; overload sheds with
+                `overloaded` + retry_after_ms; panics are isolated per
+                group (pool rebuilt, group split, engine degraded
+                taskgraph→pooled→serial). [--engine
+                serial|parallel|taskgraph|auto] [--threads T] [--topo-threads
+                T] [--pin] [--profile FILE] [--max-group G] [--max-queue Q]
+                [--max-n N] [--deadline-ms D] [--flush-fraction F]
+                [--verbose] [--faults SPEC: arm deterministic failpoints,
+                needs a --features failpoints build]
+  loadgen       paced open-loop load test + audit: every request must be
+                answered exactly once and every `ok` digest must match an
+                offline evaluation bit for bit (nonzero exit otherwise).
+                [--rps R] [--duration-s S] [--mix 300:3,900:1] [--burst B:
+                unpaced mid-run burst, default --max-queue when --faults
+                is armed] [--dist D --sigma S --seed S] [--deadline-ms D]
+                [--engine E --threads T --pin --profile FILE] [--max-group
+                G --max-queue Q --max-n N] [--quick: CI smoke preset]
+                [--connect ADDR: drive a remote daemon instead of an
+                in-process one] [--faults SPEC] [--no-digest-check]
+
 The default engine is `parallel` with all available cores; --threads T caps
 the worker count (T=1 falls back to the serial reference driver). Multicore
 runs execute on a persistent worker pool (threads spawned once per
@@ -343,6 +367,8 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             print!("{}", kernelbench::run(&opts).render());
         }
         "artifacts" => cmd_artifacts()?,
+        "serve" => cmd_serve(&args)?,
+        "loadgen" => cmd_loadgen(&args)?,
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => bail!("unknown command '{other}'; see `fmm2d help`"),
     }
@@ -416,6 +442,145 @@ fn cmd_artifacts() -> Result<()> {
     );
 }
 
+/// The `ServeOptions` shared by `cmd_serve` and `cmd_loadgen`: engine +
+/// thread resolution identical to `run` (serial forces one worker), queue
+/// and deadline knobs from the common flag set.
+fn serve_options_from_args(args: &Args) -> Result<fmm2d::serve::ServeOptions> {
+    use fmm2d::serve::ServeOptions;
+    let engine: Engine = args.get_or("engine", Engine::Parallel)?;
+    if engine == Engine::Xla {
+        bail!("serve runs the CPU engines; --engine xla is not a serve target");
+    }
+    let threads = match engine {
+        Engine::Serial => Some(1),
+        _ => threads_arg(args, None)?,
+    };
+    let dispatcher = if engine == Engine::Auto {
+        Some(std::sync::Arc::new(dispatcher_from_args(args)?))
+    } else {
+        None
+    };
+    let defaults = ServeOptions::default();
+    Ok(ServeOptions {
+        fmm: FmmOptions {
+            threads,
+            topo_threads: topo_threads_arg(args)?,
+            pin: args.flag("pin"),
+            ..FmmOptions::default()
+        },
+        engine,
+        dispatcher,
+        max_group: args.get_or("max-group", defaults.max_group)?,
+        max_queue: args.get_or("max-queue", defaults.max_queue)?,
+        max_points: args.get_or("max-n", defaults.max_points)?,
+        default_deadline_ms: args.get_or("deadline-ms", defaults.default_deadline_ms)?,
+        flush_fraction: args.get_or("flush-fraction", defaults.flush_fraction)?,
+        verbose: args.flag("verbose"),
+        ..defaults
+    })
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "listen",
+        "engine",
+        "threads",
+        "topo-threads",
+        "pin",
+        "profile",
+        "max-group",
+        "max-queue",
+        "max-n",
+        "deadline-ms",
+        "flush-fraction",
+        "faults",
+        "verbose",
+    ])?;
+    if let Some(spec) = args.get("faults") {
+        fmm2d::util::failpoint::arm(spec)?;
+        eprintln!("fmm2d serve: failpoints armed: {spec}");
+    }
+    let opts = serve_options_from_args(args)?;
+    match args.get("listen") {
+        Some(addr) => fmm2d::serve::run_tcp(addr, opts)?,
+        None => {
+            fmm2d::serve::run_stdin(opts)?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use fmm2d::serve::loadgen::{self, LoadgenOptions};
+    args.check_known(&[
+        "rps",
+        "duration-s",
+        "mix",
+        "dist",
+        "sigma",
+        "seed",
+        "deadline-ms",
+        "engine",
+        "threads",
+        "topo-threads",
+        "pin",
+        "profile",
+        "max-group",
+        "max-queue",
+        "max-n",
+        "flush-fraction",
+        "burst",
+        "quick",
+        "faults",
+        "connect",
+        "no-digest-check",
+        "verbose",
+    ])?;
+    let quick = args.flag("quick");
+    let defaults = LoadgenOptions::default();
+    // --quick is the CI smoke preset: short, small problems, tight
+    // deadlines — enough traffic to exercise grouping and shedding while
+    // staying subsecond-scale
+    let (d_rps, d_dur, d_mix, d_deadline) = if quick {
+        (40.0, 1.5, "300:3,900:1".to_string(), 400)
+    } else {
+        (
+            defaults.rps,
+            defaults.duration_s,
+            String::new(),
+            defaults.deadline_ms,
+        )
+    };
+    let sigma: f64 = args.get_or("sigma", 0.1)?;
+    let faults = args.get("faults").map(str::to_string);
+    let mut serve = serve_options_from_args(args)?;
+    serve.default_deadline_ms = args.get_or("deadline-ms", d_deadline)?;
+    let mix = match args.get("mix") {
+        Some(spec) => loadgen::parse_mix(spec)?,
+        None if !d_mix.is_empty() => loadgen::parse_mix(&d_mix)?,
+        None => defaults.mix.clone(),
+    };
+    // under injected faults the interesting regime is a saturated queue:
+    // default the burst to the admission bound so shedding must happen
+    let default_burst = if faults.is_some() { serve.max_queue } else { 0 };
+    let opts = LoadgenOptions {
+        rps: args.get_or("rps", d_rps)?,
+        duration_s: args.get_or("duration-s", d_dur)?,
+        mix,
+        dist: Distribution::from_name(args.get("dist").unwrap_or("uniform"), sigma)?,
+        seed: args.get_or("seed", defaults.seed)?,
+        deadline_ms: args.get_or("deadline-ms", d_deadline)?,
+        burst: args.get_or("burst", default_burst)?,
+        serve,
+        connect: args.get("connect").map(str::to_string),
+        faults,
+        digest_check: !args.flag("no-digest-check"),
+    };
+    let report = loadgen::run(&opts)?;
+    println!("{}", report.render());
+    report.gate()
+}
+
 /// The dispatcher of an `--engine auto` invocation: an explicit
 /// `--profile` must load (errors surface), otherwise the default profile
 /// location with a built-in fallback.
@@ -445,12 +610,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     let nd: usize = args.get_or("nd", 45)?;
     let seed: u64 = args.get_or("seed", 1)?;
     let sigma: f64 = args.get_or("sigma", 0.1)?;
-    let dist = match args.get("dist").unwrap_or("uniform") {
-        "uniform" => Distribution::Uniform,
-        "normal" => Distribution::Normal { sigma },
-        "layer" => Distribution::Layer { sigma },
-        other => bail!("unknown --dist {other}"),
-    };
+    // from_name also validates σ (finite, positive, bounded) at the CLI
+    // boundary — the same check `serve` applies to wire requests
+    let dist = Distribution::from_name(args.get("dist").unwrap_or("uniform"), sigma)?;
     let kernel = if args.flag("log-kernel") {
         Kernel::Log
     } else {
@@ -604,14 +766,11 @@ fn cmd_batch(args: &Args) -> Result<()> {
     let nd: usize = args.get_or("nd", 45)?;
     let seed: u64 = args.get_or("seed", 1)?;
     let sigma: f64 = args.get_or("sigma", 0.1)?;
-    let dist = match args
-        .get_choice("dist", &["uniform", "normal", "layer"], "uniform")?
-        .as_str()
-    {
-        "normal" => Distribution::Normal { sigma },
-        "layer" => Distribution::Layer { sigma },
-        _ => Distribution::Uniform,
-    };
+    let dist = Distribution::from_name(
+        args.get_choice("dist", &["uniform", "normal", "layer"], "uniform")?
+            .as_str(),
+        sigma,
+    )?;
     // the same FromStr impl as `run` parses the engine; BatchEngine is its
     // one-to-one image (From<Engine>)
     let cli_engine: Engine = args.get_or("engine", Engine::Parallel)?;

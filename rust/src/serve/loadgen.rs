@@ -1,0 +1,605 @@
+//! **`fmm2d loadgen`** — deterministic open-loop load generation plus the
+//! chaos gate.
+//!
+//! Drives a [`Server`] (in-process by default, or a remote daemon over
+//! `--connect`) with a paced request stream, then audits the reply ledger:
+//!
+//! * **exactly-once** — every sent request got exactly one reply (`ok`,
+//!   `error`, `expired`, or `overloaded`); zero lost, zero duplicated;
+//! * **bit-correctness** — every `ok` digest equals the digest of an
+//!   *offline* [`crate::fmm::evaluate`] of the same deterministic workload
+//!   on the engine/worker-count the reply advertised (potentials are
+//!   bit-reproducible per engine rung × worker count, so the daemon's
+//!   answers under churn, panics, and pool rebuilds must match a quiet
+//!   offline run bit for bit);
+//! * **latency** — p50/p95/p99/max over the server-measured `latency_ms`.
+//!
+//! [`LoadgenReport::gate`] turns violations into a nonzero exit: this is
+//! the acceptance gate the CI serve lane runs under `--faults` with every
+//! failpoint armed.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::config::FmmConfig;
+use crate::dispatch::Engine;
+use crate::fmm::{self, CpuEngine, FmmOptions};
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::workload::Distribution;
+
+use super::protocol::{digest64, Body, EvalRequest};
+use super::server::{ServeOptions, ServeStats, Server};
+
+/// Configuration of one loadgen run.
+#[derive(Clone, Debug)]
+pub struct LoadgenOptions {
+    /// Target request rate (requests/second, open loop).
+    pub rps: f64,
+    /// Paced phase duration in seconds (`total = ceil(rps · duration)`).
+    pub duration_s: f64,
+    /// Problem-size mix as `(n, weight)` pairs, expanded into a
+    /// deterministic weighted round-robin pattern.
+    pub mix: Vec<(usize, u32)>,
+    pub dist: Distribution,
+    /// Base RNG seed; request `i` uses `seed + i` (distinct workloads,
+    /// all reproducible offline).
+    pub seed: u64,
+    pub deadline_ms: u64,
+    /// Extra burst of back-to-back requests injected halfway through the
+    /// paced phase — pushes the queue into admission control so the shed
+    /// path is exercised, not just declared.
+    pub burst: usize,
+    /// Server under test (ignored under `--connect`).
+    pub serve: ServeOptions,
+    /// Drive a remote daemon at this address instead of an in-process one.
+    pub connect: Option<String>,
+    /// Failpoint spec to arm before the run (in-process only).
+    pub faults: Option<String>,
+    /// Verify `ok` digests against offline evaluations (the expensive
+    /// half of the gate; on by default).
+    pub digest_check: bool,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> Self {
+        Self {
+            rps: 50.0,
+            duration_s: 3.0,
+            mix: vec![(300, 3), (900, 1)],
+            dist: Distribution::Uniform,
+            seed: 1,
+            deadline_ms: 2_000,
+            burst: 0,
+            serve: ServeOptions::default(),
+            connect: None,
+            faults: None,
+            digest_check: true,
+        }
+    }
+}
+
+/// Parse a `--mix` spec like `300:3,900:1` (or bare `300,900` with unit
+/// weights) into `(n, weight)` pairs.
+pub fn parse_mix(spec: &str) -> Result<Vec<(usize, u32)>> {
+    let mut mix = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (n_str, w_str) = match part.split_once(':') {
+            Some((n, w)) => (n, w),
+            None => (part, "1"),
+        };
+        let n: usize = n_str
+            .parse()
+            .with_context(|| format!("bad mix entry '{part}': n must be an integer"))?;
+        let w: u32 = w_str
+            .parse()
+            .with_context(|| format!("bad mix entry '{part}': weight must be an integer"))?;
+        crate::ensure!(n >= 4, "mix entry '{part}': n must be >= 4");
+        crate::ensure!(w >= 1, "mix entry '{part}': weight must be >= 1");
+        mix.push((n, w));
+    }
+    crate::ensure!(!mix.is_empty(), "--mix '{spec}' names no problem sizes");
+    Ok(mix)
+}
+
+/// Outcome of one loadgen run; [`render`](Self::render) for humans,
+/// [`gate`](Self::gate) for CI.
+#[derive(Clone, Debug, Default)]
+pub struct LoadgenReport {
+    pub sent: u64,
+    pub ok: u64,
+    pub errors: u64,
+    pub expired: u64,
+    pub shed: u64,
+    /// Sent requests that never received any reply — must be zero.
+    pub lost: u64,
+    /// Requests answered more than once — must be zero.
+    pub duplicates: u64,
+    /// `ok` digests checked against offline evaluations.
+    pub digest_checked: u64,
+    /// Digest mismatches — must be zero.
+    pub digest_mismatch: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    pub wall_s: f64,
+    /// Completed (`ok`) requests per second of wall clock.
+    pub throughput: f64,
+    /// Server-side counters (in-process runs only).
+    pub server: Option<ServeStats>,
+}
+
+impl LoadgenReport {
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "loadgen: sent {} → ok {}, errors {}, expired {}, shed {} \
+             (lost {}, duplicates {})\n\
+             loadgen: latency ms p50 {:.3}  p95 {:.3}  p99 {:.3}  max {:.3}; \
+             {:.1} ok/s over {:.2} s\n\
+             loadgen: digests checked {}, mismatches {}",
+            self.sent,
+            self.ok,
+            self.errors,
+            self.expired,
+            self.shed,
+            self.lost,
+            self.duplicates,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.max_ms,
+            self.throughput,
+            self.wall_s,
+            self.digest_checked,
+            self.digest_mismatch,
+        );
+        if let Some(st) = &self.server {
+            s.push('\n');
+            s.push_str(&st.render());
+        }
+        s
+    }
+
+    /// The chaos gate: zero lost replies, zero duplicates, zero digest
+    /// mismatches, and every sent request accounted for.
+    pub fn gate(&self) -> Result<()> {
+        crate::ensure!(
+            self.lost == 0,
+            "{} request(s) never received a reply",
+            self.lost
+        );
+        crate::ensure!(
+            self.duplicates == 0,
+            "{} request(s) were answered more than once",
+            self.duplicates
+        );
+        crate::ensure!(
+            self.digest_mismatch == 0,
+            "{} ok repl(ies) disagree with the offline evaluation bit-for-bit",
+            self.digest_mismatch
+        );
+        let accounted = self.ok + self.errors + self.expired + self.shed;
+        crate::ensure!(
+            accounted == self.sent,
+            "reply ledger does not balance: sent {} but accounted {}",
+            self.sent,
+            accounted
+        );
+        Ok(())
+    }
+}
+
+/// Expand the mix into the deterministic per-request size pattern.
+fn size_pattern(mix: &[(usize, u32)]) -> Vec<usize> {
+    let mut pat = Vec::new();
+    for &(n, w) in mix {
+        for _ in 0..w {
+            pat.push(n);
+        }
+    }
+    pat
+}
+
+fn request_for(i: u64, opts: &LoadgenOptions, pattern: &[usize]) -> EvalRequest {
+    EvalRequest {
+        id: i,
+        body: Body::Generate {
+            n: pattern[(i as usize) % pattern.len()],
+            dist: opts.dist,
+            seed: opts.seed + i,
+        },
+        cfg: FmmConfig::default(),
+        deadline_ms: opts.deadline_ms,
+        digest: true,
+    }
+}
+
+/// The wire form of [`request_for`] for `--connect` runs.
+fn request_line(req: &EvalRequest) -> String {
+    let mut j = Json::obj();
+    j.set("id", Json::Num(req.id as f64));
+    if let Body::Generate { n, dist, seed } = &req.body {
+        j.set("n", Json::Num(*n as f64))
+            .set("seed", Json::Num(*seed as f64));
+        match dist {
+            Distribution::Uniform => {
+                j.set("dist", Json::Str("uniform".into()));
+            }
+            Distribution::Normal { sigma } => {
+                j.set("dist", Json::Str("normal".into()))
+                    .set("sigma", Json::Num(*sigma));
+            }
+            Distribution::Layer { sigma } => {
+                j.set("dist", Json::Str("layer".into()))
+                    .set("sigma", Json::Num(*sigma));
+            }
+        }
+    }
+    j.set("deadline_ms", Json::Num(req.deadline_ms as f64))
+        .set("digest", Json::Bool(true));
+    j.to_string()
+}
+
+/// Run the load test and audit the ledger.
+pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
+    crate::ensure!(opts.rps > 0.0, "--rps must be positive");
+    crate::ensure!(opts.duration_s > 0.0, "--duration-s must be positive");
+    let pattern = size_pattern(&opts.mix);
+    crate::ensure!(!pattern.is_empty(), "--mix names no problem sizes");
+    let total = (opts.rps * opts.duration_s).ceil() as u64;
+    crate::ensure!(total >= 1, "rps × duration yields zero requests");
+
+    if let Some(spec) = &opts.faults {
+        crate::ensure!(
+            opts.connect.is_none(),
+            "--faults arms failpoints in-process; a --connect daemon arms its own via `fmm2d serve --faults`"
+        );
+        crate::util::failpoint::arm(spec)?;
+    }
+
+    let t0 = Instant::now();
+    let replies = match &opts.connect {
+        Some(addr) => drive_tcp(addr, opts, &pattern, total)?,
+        None => drive_in_process(opts, &pattern, total)?,
+    };
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // The offline verification below must run on a quiet substrate: any
+    // armed failpoint would inject panics into *our* reference
+    // evaluations.
+    crate::util::failpoint::disarm_all();
+
+    audit(opts, &pattern, total, replies, wall_s)
+}
+
+/// In-process mode: one [`Server`], paced submissions from this thread,
+/// the engine loop on a scoped helper. Returns every reply (including
+/// shed/overloaded ones answered at submit time).
+fn drive_in_process(
+    opts: &LoadgenOptions,
+    pattern: &[usize],
+    total: u64,
+) -> Result<Vec<Json>> {
+    let server = Server::new(opts.serve.clone())?;
+    let replies: Mutex<Vec<Json>> = Mutex::new(Vec::new());
+    let push = |j: &Json| {
+        replies
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(j.clone());
+    };
+
+    // xtask: allow(no-spawn) — loadgen needs the engine loop concurrent
+    // with its paced submissions; scoped and joined before returning
+    std::thread::scope(|s| {
+        let engine = s.spawn(|| server.engine_loop(&push));
+        let start = Instant::now();
+        let gap = Duration::from_secs_f64(1.0 / opts.rps);
+        let burst_at = total / 2;
+        let mut next_id = total; // burst ids follow the paced range
+        for i in 0..total {
+            let target = start + gap.mul_f64(i as f64);
+            std::thread::sleep(target.saturating_duration_since(Instant::now()));
+            if let Err(reply) = server.submit(request_for(i, opts, pattern)) {
+                push(&reply);
+            }
+            if i == burst_at {
+                for _ in 0..opts.burst {
+                    if let Err(reply) = server.submit(request_for(next_id, opts, pattern)) {
+                        push(&reply);
+                    }
+                    next_id += 1;
+                }
+            }
+        }
+        server.drain();
+        engine
+            .join()
+            .map_err(|_| crate::anyhow!("loadgen engine thread panicked"))
+    })?;
+
+    Ok(replies.into_inner().unwrap_or_else(|p| p.into_inner()))
+}
+
+/// `--connect` mode: the same paced stream over a TCP connection; replies
+/// are read by a scoped thread until the daemon closes the stream after
+/// our shutdown line.
+fn drive_tcp(
+    addr: &str,
+    opts: &LoadgenOptions,
+    pattern: &[usize],
+    total: u64,
+) -> Result<Vec<Json>> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to daemon at {addr}"))?;
+    let reader = BufReader::new(stream.try_clone().context("cloning connection")?);
+    let mut writer = stream;
+    let replies: Mutex<Vec<Json>> = Mutex::new(Vec::new());
+
+    // xtask: allow(no-spawn) — reader thread for the reply stream; scoped
+    // and joined before returning
+    std::thread::scope(|s| -> Result<()> {
+        let h = s.spawn(|| {
+            let mut reader = reader;
+            let mut line = String::new();
+            loop {
+                line.clear();
+                match reader.read_line(&mut line) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => {}
+                }
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                if let Ok(j) = Json::parse(trimmed) {
+                    replies.lock().unwrap_or_else(|p| p.into_inner()).push(j);
+                }
+            }
+        });
+        let start = Instant::now();
+        let gap = Duration::from_secs_f64(1.0 / opts.rps);
+        let burst_at = total / 2;
+        let mut next_id = total;
+        for i in 0..total {
+            let target = start + gap.mul_f64(i as f64);
+            std::thread::sleep(target.saturating_duration_since(Instant::now()));
+            writeln!(writer, "{}", request_line(&request_for(i, opts, pattern)))
+                .context("writing request")?;
+            if i == burst_at {
+                for _ in 0..opts.burst {
+                    writeln!(
+                        writer,
+                        "{}",
+                        request_line(&request_for(next_id, opts, pattern))
+                    )
+                    .context("writing burst request")?;
+                    next_id += 1;
+                }
+            }
+        }
+        let shutdown_line = r#"{"kind":"shutdown"}"#;
+        writeln!(writer, "{shutdown_line}").context("writing shutdown")?;
+        writer.flush().context("flushing requests")?;
+        h.join()
+            .map_err(|_| crate::anyhow!("loadgen reader thread panicked"))?;
+        Ok(())
+    })?;
+
+    Ok(replies.into_inner().unwrap_or_else(|p| p.into_inner()))
+}
+
+/// Audit the ledger: exactly-once accounting, digest verification against
+/// offline evaluations, latency percentiles.
+fn audit(
+    opts: &LoadgenOptions,
+    pattern: &[usize],
+    total: u64,
+    replies: Vec<Json>,
+    wall_s: f64,
+) -> Result<LoadgenReport> {
+    let sent = total + opts.burst as u64;
+    let mut seen = vec![0u32; sent as usize];
+    let mut report = LoadgenReport {
+        sent,
+        wall_s,
+        ..LoadgenReport::default()
+    };
+    let mut latencies: Vec<f64> = Vec::new();
+    // Offline digest cache: the potentials depend only on the workload and
+    // the engine-rung × worker-count the reply advertised, so one offline
+    // evaluation per distinct (n, seed, taskgraph?, workers) settles every
+    // reply that claims it.
+    let mut expected: std::collections::BTreeMap<(usize, u64, bool, usize), u64> =
+        std::collections::BTreeMap::new();
+    for r in &replies {
+        let Some(id) = r.get("id").and_then(Json::as_f64) else {
+            // id:null replies are decode-error replies — loadgen never
+            // sends undecodable lines, so treat one as a lost-reply bug.
+            report.lost += 1;
+            continue;
+        };
+        let id = id as u64;
+        if id >= sent {
+            report.duplicates += 1; // an id we never issued
+            continue;
+        }
+        seen[id as usize] += 1;
+        match r.get("status").and_then(Json::as_str) {
+            Some("ok") => {
+                report.ok += 1;
+                if let Some(ms) = r.get("latency_ms").and_then(Json::as_f64) {
+                    latencies.push(ms);
+                }
+                if opts.digest_check {
+                    verify_digest(opts, pattern, id, r, &mut expected, &mut report)?;
+                }
+            }
+            Some("error") => report.errors += 1,
+            Some("expired") => report.expired += 1,
+            Some("overloaded") => report.shed += 1,
+            _ => report.errors += 1,
+        }
+    }
+    for &count in &seen {
+        if count == 0 {
+            report.lost += 1;
+        } else if count > 1 {
+            report.duplicates += (count - 1) as u64;
+        }
+    }
+    latencies.sort_by(f64::total_cmp);
+    let pct = |q: f64| -> f64 {
+        if latencies.is_empty() {
+            return 0.0;
+        }
+        let idx = ((latencies.len() as f64 - 1.0) * q).round() as usize;
+        latencies[idx.min(latencies.len() - 1)]
+    };
+    report.p50_ms = pct(0.50);
+    report.p95_ms = pct(0.95);
+    report.p99_ms = pct(0.99);
+    report.max_ms = latencies.last().copied().unwrap_or(0.0);
+    report.throughput = if wall_s > 0.0 {
+        report.ok as f64 / wall_s
+    } else {
+        0.0
+    };
+    Ok(report)
+}
+
+fn verify_digest(
+    opts: &LoadgenOptions,
+    pattern: &[usize],
+    id: u64,
+    reply: &Json,
+    cache: &mut std::collections::BTreeMap<(usize, u64, bool, usize), u64>,
+    report: &mut LoadgenReport,
+) -> Result<()> {
+    let got = reply
+        .get("digest")
+        .and_then(Json::as_str)
+        .and_then(|s| u64::from_str_radix(s, 16).ok());
+    let engine = reply.get("engine").and_then(Json::as_str).unwrap_or("");
+    let workers = reply
+        .get("workers")
+        .and_then(Json::as_usize)
+        .unwrap_or(1)
+        .max(1);
+    let Some(got) = got else {
+        report.digest_mismatch += 1;
+        return Ok(());
+    };
+    let n = pattern[(id as usize) % pattern.len()];
+    let seed = opts.seed + id;
+    let taskgraph = engine == "taskgraph";
+    let key = (n, seed, taskgraph, workers);
+    let want = match cache.get(&key) {
+        Some(&d) => d,
+        None => {
+            // Potentials are bit-reproducible per engine flavor × worker
+            // count: the pooled barrier engine at `workers` matches the
+            // serial driver when workers == 1, and the taskgraph engine is
+            // bitwise-identical to the barrier engine at equal counts — so
+            // one Barrier evaluation per key is the reference for all
+            // three rungs.
+            let (pts, gs) = crate::harness::workload_for(opts.dist, n, seed);
+            let fopts = FmmOptions {
+                threads: Some(workers),
+                cpu_engine: CpuEngine::Barrier,
+                ..FmmOptions::default()
+            };
+            let out = fmm::evaluate(&pts, &gs, &fopts)
+                .with_context(|| format!("offline reference evaluation for id {id}"))?;
+            let d = digest64(&out.potentials);
+            cache.insert(key, d);
+            d
+        }
+    };
+    report.digest_checked += 1;
+    if got != want {
+        report.digest_mismatch += 1;
+    }
+    Ok(())
+}
+
+/// The serve options a loadgen-driven engine choice implies (shared by
+/// `cmd_loadgen` and the tests): explicit thread count so the reply
+/// contract is stable, sane queue bounds for a short run.
+pub fn quick_serve_options(engine: Engine, threads: Option<usize>) -> ServeOptions {
+    ServeOptions {
+        fmm: FmmOptions {
+            threads,
+            ..FmmOptions::default()
+        },
+        engine,
+        max_queue: 128,
+        ..ServeOptions::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::protocol;
+
+    #[test]
+    fn mix_parsing() {
+        assert_eq!(parse_mix("300:3,900:1").unwrap(), vec![(300, 3), (900, 1)]);
+        assert_eq!(parse_mix("500").unwrap(), vec![(500, 1)]);
+        assert!(parse_mix("").is_err());
+        assert!(parse_mix("3:1").is_err()); // n < 4
+        assert!(parse_mix("300:0").is_err());
+        assert!(parse_mix("abc").is_err());
+        assert_eq!(size_pattern(&[(300, 2), (900, 1)]), vec![300, 300, 900]);
+    }
+
+    #[test]
+    fn request_lines_decode_back() {
+        let o = LoadgenOptions::default();
+        let pat = size_pattern(&o.mix);
+        let line = request_line(&request_for(7, &o, &pat));
+        let limits = protocol::Limits {
+            max_points: 1_000_000,
+            default_deadline_ms: 1_000,
+        };
+        match protocol::decode(&line, &limits).unwrap() {
+            protocol::Request::Eval(r) => {
+                assert_eq!(r.id, 7);
+                assert_eq!(r.n(), pat[7 % pat.len()]);
+                assert_eq!(r.deadline_ms, o.deadline_ms);
+                assert!(r.digest);
+            }
+            other => panic!("expected eval, got {other:?}"),
+        }
+    }
+
+    /// End-to-end in-process smoke: a tiny run must pass its own gate
+    /// (exactly-once + digest parity) with no faults armed.
+    #[test]
+    fn tiny_run_passes_the_gate() {
+        // serialize against lib tests that arm the global failpoint sites
+        #[cfg(feature = "failpoints")]
+        let _fp = crate::util::failpoint::test_lock();
+        let opts = LoadgenOptions {
+            rps: 200.0,
+            duration_s: 0.05,
+            mix: vec![(300, 1)],
+            deadline_ms: 30_000,
+            serve: quick_serve_options(Engine::Parallel, Some(2)),
+            ..LoadgenOptions::default()
+        };
+        let report = run(&opts).unwrap();
+        assert!(report.sent >= 10);
+        report.gate().unwrap();
+        assert_eq!(report.ok + report.errors + report.expired + report.shed, report.sent);
+        assert!(report.digest_checked >= report.ok.min(1));
+    }
+}

@@ -1,0 +1,223 @@
+//! **`fmm2d serve`** — the FMM as a fault-tolerant service.
+//!
+//! A long-lived daemon speaking line-delimited JSON (stdin/stdout or TCP)
+//! whose core is a robustness layer over the existing engine zoo:
+//!
+//! * [`protocol`] — the strict wire protocol: request decoding with
+//!   boundary validation (non-finite coordinates, hostile `(levels, p, θ)`
+//!   ranges, oversized `n` are all structured `error` replies, never
+//!   panics), reply builders, and the FNV-1a potential digest the chaos
+//!   gate compares against offline `fmm2d run` evaluations.
+//! * [`server`] — queueing, admission control (bounded queue depth and
+//!   in-flight points; excess traffic is shed with `overloaded` +
+//!   `retry_after_ms`), deadline-aware group flushing via
+//!   [`crate::batch::BatchPlan`], and the panic-isolation ladder
+//!   (taskgraph → pooled → serial with pool rebuild and group bisection).
+//! * [`loadgen`] — `fmm2d loadgen`: a deterministic open-loop load
+//!   generator + verifier that replays the daemon's `ok` digests against
+//!   offline evaluations and enforces the exactly-once ledger.
+//!
+//! This module owns only the transport: [`serve_lines`] wires a reader and
+//! a reply sink to one [`Server`], [`run_stdin`]/[`run_tcp`] bind that to
+//! the process's stdio or a listening socket.
+//!
+//! ## Exactly-once
+//!
+//! Every line of input gets exactly one reply with the salvaged `id` (or
+//! `id: null` when the line was too broken to carry one): decode errors
+//! answer immediately from the reader; shed/draining requests answer from
+//! [`Server::submit`]; accepted requests answer from the engine loop in
+//! every branch of the degradation ladder. The reply writer itself sits
+//! behind the `write` failpoint with bounded retries, so the chaos suite
+//! also covers transient sink failures.
+
+pub mod loadgen;
+pub mod protocol;
+pub mod server;
+
+pub use loadgen::{LoadgenOptions, LoadgenReport};
+pub use protocol::{decode, digest64, EvalRequest, Limits, Request};
+pub use server::{ServeOptions, ServeStats, Server};
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+/// Result of one [`serve_lines`] session.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOutcome {
+    /// Final counter snapshot.
+    pub stats: ServeStats,
+    /// The session ended on an explicit `{"kind":"shutdown"}` (as opposed
+    /// to EOF / a dropped connection).
+    pub shutdown: bool,
+}
+
+/// Serialized reply writer shared by the reader thread (decode errors,
+/// shed replies) and the engine thread (evaluation replies). One reply is
+/// one line; a transient write failure (failpoint `write`) is retried a
+/// bounded number of times before the attempt proceeds anyway — the
+/// daemon never dies in its reply path.
+struct ReplySink<W: Write> {
+    out: Mutex<W>,
+    retries: AtomicU64,
+}
+
+impl<W: Write> ReplySink<W> {
+    fn new(out: W) -> Self {
+        Self {
+            out: Mutex::new(out),
+            retries: AtomicU64::new(0),
+        }
+    }
+
+    fn write(&self, reply: &Json) {
+        let line = reply.to_string();
+        let mut out = self.out.lock().unwrap_or_else(|p| p.into_inner());
+        // Injected transient sink failures (failpoint `write`): retry up
+        // to twice per line. The chaos gate asserts zero lost replies, so
+        // this bounded loop is exactly what `--faults "write=…"` tests.
+        #[cfg(feature = "failpoints")]
+        {
+            let mut attempts = 0;
+            while attempts < 2 && crate::util::failpoint::fire("write") {
+                attempts += 1;
+                self.retries.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // A genuinely broken pipe (client went away) must not kill the
+        // daemon; the remaining replies are simply undeliverable.
+        let _ = writeln!(out, "{line}");
+        let _ = out.flush();
+    }
+
+    fn into_inner(self) -> (W, u64) {
+        let retries = self.retries.load(Ordering::Relaxed);
+        (
+            self.out.into_inner().unwrap_or_else(|p| p.into_inner()),
+            retries,
+        )
+    }
+}
+
+/// Serve one session: read requests line by line from `input`, write one
+/// reply line per request to `output`, until EOF or a `shutdown` request;
+/// then drain the queue (every accepted request is still answered) and
+/// return the final stats.
+pub fn serve_lines<R: BufRead, W: Write + Send>(
+    mut input: R,
+    output: W,
+    opts: ServeOptions,
+) -> Result<ServeOutcome> {
+    let server = Server::new(opts)?;
+    let limits = server.limits();
+    let sink = ReplySink::new(output);
+    let mut shutdown = false;
+
+    // xtask: allow(no-spawn) — the daemon's one long-lived engine thread;
+    // scoped so the borrow of `server`/`sink` provably outlives it, and
+    // joined before this function returns (same idiom as run_overlapped)
+    std::thread::scope(|s| {
+        let engine = s.spawn(|| server.engine_loop(&|reply: &Json| sink.write(reply)));
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match input.read_line(&mut line) {
+                Ok(0) | Err(_) => break, // EOF or dead transport: drain and exit
+                Ok(_) => {}
+            }
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            if trimmed.len() > protocol::MAX_LINE_BYTES {
+                server.note_rejected();
+                sink.write(&protocol::reply_error(
+                    None,
+                    &format!(
+                        "request line exceeds {} bytes; send points in batches",
+                        protocol::MAX_LINE_BYTES
+                    ),
+                ));
+                continue;
+            }
+            match protocol::decode(trimmed, &limits) {
+                Ok(Request::Shutdown) => {
+                    shutdown = true;
+                    break;
+                }
+                Ok(Request::Eval(req)) => {
+                    if let Err(reply) = server.submit(*req) {
+                        sink.write(&reply);
+                    }
+                }
+                Err(e) => {
+                    server.note_rejected();
+                    sink.write(&protocol::reply_error(e.id, &format!("{:#}", e.err)));
+                }
+            }
+        }
+        server.drain();
+        // The engine loop exits once the queue is empty while draining;
+        // a panic on the engine thread itself would be a serve bug — the
+        // ladder is supposed to have absorbed it — so surface it loudly.
+        engine
+            .join()
+            .map_err(|_| crate::anyhow!("serve engine thread panicked"))
+    })?;
+
+    let mut stats = server.stats();
+    let (_out, retries) = sink.into_inner();
+    stats.write_retries = retries;
+    Ok(ServeOutcome { stats, shutdown })
+}
+
+/// `fmm2d serve` on stdio: one session over stdin/stdout, stats to stderr.
+pub fn run_stdin(opts: ServeOptions) -> Result<ServeOutcome> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let outcome = serve_lines(stdin.lock(), stdout.lock(), opts)?;
+    eprintln!("{}", outcome.stats.render());
+    Ok(outcome)
+}
+
+/// `fmm2d serve --listen ADDR`: accept connections sequentially, one
+/// session per connection, until a session ends with `shutdown`.
+pub fn run_tcp(addr: &str, opts: ServeOptions) -> Result<()> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding serve listener on {addr}"))?;
+    let local = listener
+        .local_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| addr.to_string());
+    eprintln!("fmm2d serve: listening on {local}");
+    for conn in listener.incoming() {
+        let stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("fmm2d serve: accept failed: {e}");
+                continue;
+            }
+        };
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "?".to_string());
+        let reader = BufReader::new(
+            stream
+                .try_clone()
+                .with_context(|| format!("cloning connection from {peer}"))?,
+        );
+        let outcome = serve_lines(reader, stream, opts.clone())?;
+        eprintln!("fmm2d serve: session from {peer} done");
+        eprintln!("{}", outcome.stats.render());
+        if outcome.shutdown {
+            break;
+        }
+    }
+    Ok(())
+}

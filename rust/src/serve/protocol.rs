@@ -1,0 +1,533 @@
+//! Wire protocol of `fmm2d serve`: one strict-parsed JSON object per line.
+//!
+//! Requests are decoded with [`crate::util::json`] under the repo's strict
+//! conventions — unknown fields are rejected, trailing garbage is rejected,
+//! and every parameter is range-checked *at the boundary* (this module plus
+//! [`crate::config::FmmConfig::validate`] /
+//! [`crate::workload::Distribution::validate`]) so nothing non-finite or
+//! absurd ever reaches an engine. Two request bodies exist:
+//!
+//! * **generator form** — `{"id":1,"n":2000,"dist":"uniform","seed":7}`:
+//!   the daemon synthesizes the workload with the same
+//!   [`crate::harness::workload_for`] used by `fmm2d run`, so an offline
+//!   run of the same `(dist, n, seed)` is the bit-exact reference;
+//! * **inline form** — `{"id":2,"points":[[x,y],…],"gammas":[[re,im],…]}`.
+//!
+//! Replies carry a `status` of `ok`, `error`, `overloaded` or `expired`;
+//! `ok` replies report the engine rung and worker count that produced them
+//! (potentials are bit-reproducible only *per engine and worker count* —
+//! see `rust/README.md`), plus either the full potentials or an FNV-1a
+//! [`digest64`] over their bit patterns.
+
+use crate::complex::C64;
+use crate::config::FmmConfig;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::workload::Distribution;
+
+/// Hard cap on one request line; longer lines are rejected with an error
+/// reply instead of buffering without bound.
+pub const MAX_LINE_BYTES: usize = 8 << 20;
+
+/// Fields the decoder accepts; anything else is a strict-parse error.
+const KNOWN_FIELDS: [&str; 13] = [
+    "id",
+    "kind",
+    "n",
+    "dist",
+    "sigma",
+    "seed",
+    "points",
+    "gammas",
+    "p",
+    "nd",
+    "theta",
+    "deadline_ms",
+    "digest",
+];
+
+/// Boundary limits the decoder enforces (from
+/// [`crate::serve::ServeOptions`]).
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    /// Largest accepted per-request point count.
+    pub max_points: usize,
+    /// Deadline applied when a request names none.
+    pub default_deadline_ms: u64,
+}
+
+/// One decoded request line.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Eval(Box<EvalRequest>),
+    /// `{"kind":"shutdown"}` — drain the queue, answer everything, exit.
+    Shutdown,
+}
+
+/// How the workload of an eval request is obtained.
+#[derive(Clone, Debug)]
+pub enum Body {
+    /// Synthesized via [`crate::harness::workload_for`] (deterministic).
+    Generate {
+        n: usize,
+        dist: Distribution,
+        seed: u64,
+    },
+    /// Sent inline on the wire.
+    Inline { points: Vec<C64>, gammas: Vec<C64> },
+}
+
+/// A validated evaluation request.
+#[derive(Clone, Debug)]
+pub struct EvalRequest {
+    /// Client-chosen correlation id, echoed on the reply.
+    pub id: u64,
+    pub body: Body,
+    /// Validated FMM parameters (`p`, `nd`, `theta`; levels from Eq. 5.2).
+    pub cfg: FmmConfig,
+    /// Per-request deadline budget in milliseconds from arrival.
+    pub deadline_ms: u64,
+    /// Reply with a digest instead of the full potentials.
+    pub digest: bool,
+}
+
+impl EvalRequest {
+    /// Point count (known before any tree exists — it drives admission
+    /// control and `(levels, p)` grouping).
+    pub fn n(&self) -> usize {
+        match &self.body {
+            Body::Generate { n, .. } => *n,
+            Body::Inline { points, .. } => points.len(),
+        }
+    }
+
+    /// Refinement depth this request will run at (Eq. 5.2 — a pure
+    /// function of `n` and `nd`, so shape groups form before any tree is
+    /// built).
+    pub fn levels(&self) -> usize {
+        self.cfg.levels_for(self.n())
+    }
+
+    /// Produce the workload: generate deterministically or clone the
+    /// inline arrays.
+    pub fn materialize(&self) -> (Vec<C64>, Vec<C64>) {
+        match &self.body {
+            Body::Generate { n, dist, seed } => crate::harness::workload_for(*dist, *n, *seed),
+            Body::Inline { points, gammas } => (points.clone(), gammas.clone()),
+        }
+    }
+}
+
+/// A decode failure, carrying the request id when one could be salvaged
+/// from the (possibly malformed) line so the error reply still correlates.
+#[derive(Debug)]
+pub struct DecodeError {
+    pub id: Option<u64>,
+    pub err: crate::util::error::Error,
+}
+
+fn get_u64(v: &Json, key: &str) -> Result<Option<u64>> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(j) => {
+            let x = j
+                .as_f64()
+                .ok_or_else(|| crate::anyhow!("field '{key}' must be a number"))?;
+            crate::ensure!(
+                x.is_finite() && x >= 0.0 && x.fract() == 0.0 && x <= 9.0e15,
+                "field '{key}' must be a non-negative integer (got {x})"
+            );
+            Ok(Some(x as u64))
+        }
+    }
+}
+
+fn get_f64(v: &Json, key: &str) -> Result<Option<f64>> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(j) => Ok(Some(j.as_f64().ok_or_else(|| {
+            crate::anyhow!("field '{key}' must be a number")
+        })?)),
+    }
+}
+
+fn get_bool(v: &Json, key: &str) -> Result<bool> {
+    match v.get(key) {
+        None => Ok(false),
+        Some(Json::Bool(b)) => Ok(*b),
+        Some(_) => crate::bail!("field '{key}' must be a boolean"),
+    }
+}
+
+/// Parse a `[[a,b],…]` array of pairs into complex numbers, rejecting
+/// anything non-finite (`1e999` parses to +inf and is caught here — no
+/// NaN/inf can be smuggled through the wire into an engine).
+fn get_pairs(v: &Json, key: &str, what: &str) -> Result<Vec<C64>> {
+    let arr = v
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| crate::anyhow!("field '{key}' must be an array of [x,y] pairs"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, e) in arr.iter().enumerate() {
+        let pair = e
+            .as_arr()
+            .filter(|p| p.len() == 2)
+            .ok_or_else(|| crate::anyhow!("{what}[{i}] must be a 2-element array"))?;
+        let (a, b) = (pair[0].as_f64(), pair[1].as_f64());
+        let (a, b) = match (a, b) {
+            (Some(a), Some(b)) => (a, b),
+            _ => crate::bail!("{what}[{i}] must hold two numbers"),
+        };
+        crate::ensure!(
+            a.is_finite() && b.is_finite(),
+            "{what}[{i}] is non-finite ({a}, {b})"
+        );
+        out.push(C64::new(a, b));
+    }
+    Ok(out)
+}
+
+fn decode_inner(line: &str, limits: &Limits) -> Result<Request> {
+    let v = Json::parse(line).context("parsing request line")?;
+    let Json::Obj(map) = &v else {
+        crate::bail!("request must be a JSON object");
+    };
+    for key in map.keys() {
+        crate::ensure!(
+            KNOWN_FIELDS.contains(&key.as_str()),
+            "unknown field '{key}' (strict protocol; known fields: {})",
+            KNOWN_FIELDS.join(", ")
+        );
+    }
+    match v.get("kind").map(|k| k.as_str()) {
+        None => {}
+        Some(Some("eval")) => {}
+        Some(Some("shutdown")) => {
+            crate::ensure!(
+                map.len() == 1,
+                "shutdown takes no other fields (got {} fields)",
+                map.len()
+            );
+            return Ok(Request::Shutdown);
+        }
+        Some(Some(other)) => crate::bail!("unknown kind '{other}': expected eval|shutdown"),
+        Some(None) => crate::bail!("field 'kind' must be a string"),
+    }
+
+    let id = get_u64(&v, "id")?.ok_or_else(|| crate::anyhow!("missing required field 'id'"))?;
+
+    let body = if map.contains_key("points") || map.contains_key("gammas") {
+        for banned in ["n", "dist", "sigma", "seed"] {
+            crate::ensure!(
+                !map.contains_key(banned),
+                "field '{banned}' conflicts with inline points/gammas"
+            );
+        }
+        let points = get_pairs(&v, "points", "points")?;
+        let gammas = get_pairs(&v, "gammas", "gammas")?;
+        crate::ensure!(
+            points.len() == gammas.len(),
+            "points ({}) and gammas ({}) differ in length",
+            points.len(),
+            gammas.len()
+        );
+        Body::Inline { points, gammas }
+    } else {
+        let n = get_u64(&v, "n")?.ok_or_else(|| {
+            crate::anyhow!("missing field 'n' (or inline 'points'/'gammas')")
+        })? as usize;
+        let sigma = get_f64(&v, "sigma")?.unwrap_or(0.1);
+        let dist = match v.get("dist") {
+            None => Distribution::Uniform,
+            Some(d) => {
+                let name = d
+                    .as_str()
+                    .ok_or_else(|| crate::anyhow!("field 'dist' must be a string"))?;
+                Distribution::from_name(name, sigma).context("field 'dist'")?
+            }
+        };
+        let seed = get_u64(&v, "seed")?.unwrap_or(1);
+        Body::Generate { n, dist, seed }
+    };
+
+    let cfg = FmmConfig {
+        p: get_u64(&v, "p")?.unwrap_or(17) as usize,
+        n_per_box: get_u64(&v, "nd")?.unwrap_or(45) as usize,
+        theta: get_f64(&v, "theta")?.unwrap_or(0.5),
+        levels_override: None,
+    };
+    cfg.validate()?;
+
+    let req = EvalRequest {
+        id,
+        body,
+        cfg,
+        deadline_ms: get_u64(&v, "deadline_ms")?.unwrap_or(limits.default_deadline_ms),
+        digest: get_bool(&v, "digest")?,
+    };
+    let n = req.n();
+    crate::ensure!(n >= 4, "n must be at least 4 (got {n}): a pyramid needs 4 leaf boxes");
+    crate::ensure!(
+        n <= limits.max_points,
+        "n ({n}) exceeds this server's per-request limit (--max-n {})",
+        limits.max_points
+    );
+    Ok(Request::Eval(Box::new(req)))
+}
+
+/// Decode one request line. On failure the error carries any salvageable
+/// `id` so the reply still correlates with the request.
+pub fn decode(line: &str, limits: &Limits) -> std::result::Result<Request, DecodeError> {
+    decode_inner(line, limits).map_err(|err| DecodeError {
+        id: Json::parse(line)
+            .ok()
+            .and_then(|v| get_u64(&v, "id").ok().flatten()),
+        err,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Replies
+// ---------------------------------------------------------------------------
+
+/// FNV-1a 64 over the little-endian bit patterns of the potentials:
+/// a cheap, dependency-free digest that changes iff any output bit does,
+/// rendered as 16 hex digits on the wire.
+pub fn digest64(potentials: &[C64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut absorb = |x: f64, h: &mut u64| {
+        for b in x.to_bits().to_le_bytes() {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    for c in potentials {
+        absorb(c.re, &mut h);
+        absorb(c.im, &mut h);
+    }
+    h
+}
+
+fn base(id: u64, status: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("id", Json::Num(id as f64))
+        .set("status", Json::Str(status.into()));
+    j
+}
+
+/// Successful evaluation reply: engine rung + worker count (the bit
+/// reproducibility contract), measured latency, and potentials or digest.
+pub fn reply_ok(
+    id: u64,
+    engine: &str,
+    workers: usize,
+    latency_ms: f64,
+    potentials: &[C64],
+    digest_only: bool,
+) -> Json {
+    let mut j = base(id, "ok");
+    j.set("engine", Json::Str(engine.into()))
+        .set("workers", Json::Num(workers as f64))
+        .set("latency_ms", Json::Num(round3(latency_ms)));
+    if digest_only {
+        j.set("digest", Json::Str(format!("{:016x}", digest64(potentials))));
+    } else {
+        let arr = potentials
+            .iter()
+            .map(|c| Json::Arr(vec![Json::Num(c.re), Json::Num(c.im)]))
+            .collect();
+        j.set("potentials", Json::Arr(arr));
+    }
+    j
+}
+
+/// Structured failure reply (decode errors, validation errors, evaluation
+/// errors, ladder exhaustion). `id` is null when the line was too broken
+/// to salvage one.
+pub fn reply_error(id: Option<u64>, msg: &str) -> Json {
+    let mut j = Json::obj();
+    j.set(
+        "id",
+        match id {
+            Some(i) => Json::Num(i as f64),
+            None => Json::Null,
+        },
+    )
+    .set("status", Json::Str("error".into()))
+    .set("error", Json::Str(msg.into()));
+    j
+}
+
+/// Admission-control shed: the request was *not* accepted; retry after the
+/// hinted backoff.
+pub fn reply_overloaded(id: u64, retry_after_ms: u64) -> Json {
+    let mut j = base(id, "overloaded");
+    j.set("retry_after_ms", Json::Num(retry_after_ms as f64));
+    j
+}
+
+/// The request was accepted but its deadline passed before (or while)
+/// its group flushed; the evaluation was skipped.
+pub fn reply_expired(id: u64, waited_ms: f64) -> Json {
+    let mut j = base(id, "expired");
+    j.set("waited_ms", Json::Num(round3(waited_ms)));
+    j
+}
+
+fn round3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn limits() -> Limits {
+        Limits {
+            max_points: 50_000,
+            default_deadline_ms: 10_000,
+        }
+    }
+
+    fn decode_err(line: &str) -> DecodeError {
+        match decode(line, &limits()) {
+            Err(e) => e,
+            Ok(_) => panic!("expected decode error for {line}"),
+        }
+    }
+
+    #[test]
+    fn generator_form_decodes_with_defaults() {
+        let r = decode(r#"{"id":7,"n":2000}"#, &limits()).unwrap();
+        let Request::Eval(req) = r else {
+            panic!("expected eval")
+        };
+        assert_eq!(req.id, 7);
+        assert_eq!(req.n(), 2000);
+        assert_eq!(req.cfg, FmmConfig::default());
+        assert_eq!(req.deadline_ms, 10_000);
+        assert!(!req.digest);
+        assert!(matches!(
+            req.body,
+            Body::Generate {
+                dist: Distribution::Uniform,
+                seed: 1,
+                ..
+            }
+        ));
+        // levels are a pure function of (n, nd) — groups form pre-tree
+        assert_eq!(req.levels(), req.cfg.levels_for(2000));
+    }
+
+    #[test]
+    fn inline_form_decodes_and_matches_generator_workload() {
+        let r = decode(
+            r#"{"id":1,"points":[[0.1,0.2],[0.3,0.4],[0.5,0.6],[0.7,0.8]],"gammas":[[1,0],[0,1],[-1,0],[0,-1]],"digest":true}"#,
+            &limits(),
+        )
+        .unwrap();
+        let Request::Eval(req) = r else {
+            panic!("expected eval")
+        };
+        assert_eq!(req.n(), 4);
+        assert!(req.digest);
+        let (pts, gs) = req.materialize();
+        assert_eq!(pts[1], C64::new(0.3, 0.4));
+        assert_eq!(gs[3], C64::new(0.0, -1.0));
+    }
+
+    #[test]
+    fn shutdown_decodes() {
+        assert!(matches!(
+            decode(r#"{"kind":"shutdown"}"#, &limits()).unwrap(),
+            Request::Shutdown
+        ));
+        // shutdown with extra fields is malformed, not silently partial
+        assert!(decode(r#"{"kind":"shutdown","id":1}"#, &limits()).is_err());
+    }
+
+    #[test]
+    fn strict_errors_carry_salvaged_ids() {
+        // truncated line: unparsable, no id salvageable
+        assert_eq!(decode_err(r#"{"id":3,"n":100"#).id, None);
+        // unknown field: parsable, id salvaged
+        let e = decode_err(r#"{"id":3,"n":1000,"bogus":1}"#);
+        assert_eq!(e.id, Some(3));
+        assert!(format!("{:#}", e.err).contains("unknown field 'bogus'"));
+        // wrong top-level type
+        assert_eq!(decode_err("[1,2]").id, None);
+        // missing id
+        assert!(format!("{:#}", decode_err(r#"{"n":1000}"#).err).contains("'id'"));
+    }
+
+    #[test]
+    fn boundary_validation_rejects_hostile_parameters() {
+        for bad in [
+            r#"{"id":1,"n":0}"#,                           // too few points
+            r#"{"id":1,"n":3}"#,                           // below 4-leaf floor
+            r#"{"id":1,"n":100000}"#,                      // over max_points
+            r#"{"id":1,"n":1000,"p":0}"#,                  // p out of range
+            r#"{"id":1,"n":1000,"p":200}"#,                // p out of range
+            r#"{"id":1,"n":1000,"theta":1.5}"#,            // theta out of (0,1)
+            r#"{"id":1,"n":1000,"theta":1e999}"#,          // theta = +inf
+            r#"{"id":1,"n":1000,"dist":"normal","sigma":-1}"#, // sampler wedge
+            r#"{"id":1,"n":1000,"dist":"normal","sigma":1e999}"#, // sigma inf
+            r#"{"id":1,"n":1000,"dist":"gauss"}"#,         // unknown dist
+            r#"{"id":1,"n":1000,"seed":-3}"#,              // negative integer
+            r#"{"id":1,"n":1000,"digest":"yes"}"#,         // non-bool digest
+            r#"{"id":-1,"n":1000}"#,                       // negative id
+            r#"{"id":1.5,"n":1000}"#,                      // fractional id
+        ] {
+            assert!(decode(bad, &limits()).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn non_finite_inline_coordinates_are_rejected() {
+        // 1e999 overflows to +inf during parsing — the classic smuggle
+        let e = decode_err(r#"{"id":9,"points":[[1e999,0.2],[0.3,0.4],[0.1,0.1],[0.2,0.2]],"gammas":[[1,0],[1,0],[1,0],[1,0]]}"#);
+        assert_eq!(e.id, Some(9));
+        assert!(format!("{:#}", e.err).contains("non-finite"), "{:#}", e.err);
+        // mismatched lengths
+        assert!(decode(
+            r#"{"id":9,"points":[[0.1,0.2],[0.3,0.4]],"gammas":[[1,0]]}"#,
+            &limits()
+        )
+        .is_err());
+        // inline + generator fields conflict
+        assert!(decode(
+            r#"{"id":9,"n":4,"points":[[0.1,0.2]],"gammas":[[1,0]]}"#,
+            &limits()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn digest_is_bit_sensitive_and_stable() {
+        let a = [C64::new(1.0, 2.0), C64::new(3.0, 4.0)];
+        let mut b = a;
+        assert_eq!(digest64(&a), digest64(&b));
+        b[1].im = f64::from_bits(b[1].im.to_bits() ^ 1); // one ulp
+        assert_ne!(digest64(&a), digest64(&b));
+        // pinned value: the digest is part of the wire contract
+        assert_eq!(format!("{:016x}", digest64(&[])), "cbf29ce484222325");
+    }
+
+    #[test]
+    fn replies_render_as_strict_json() {
+        let ok = reply_ok(4, "pooled", 8, 1.2345678, &[C64::new(1.0, -2.5)], false);
+        let s = ok.to_string();
+        assert!(s.contains(r#""status":"ok""#), "{s}");
+        assert!(s.contains(r#""engine":"pooled""#), "{s}");
+        assert!(s.contains(r#""workers":8"#), "{s}");
+        // round-trips through the strict parser
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(back.get("id").and_then(Json::as_usize), Some(4));
+        let err = reply_error(None, "broken").to_string();
+        assert!(err.contains(r#""id":null"#), "{err}");
+        let shed = reply_overloaded(2, 40).to_string();
+        assert!(shed.contains(r#""retry_after_ms":40"#), "{shed}");
+        let exp = reply_expired(3, 12.5).to_string();
+        assert!(exp.contains(r#""status":"expired""#), "{exp}");
+    }
+}

@@ -1,0 +1,865 @@
+//! The daemon core: queueing, admission control, deadline-aware group
+//! flushing, and the panic-isolation / degradation ladder.
+//!
+//! One [`Server`] owns a queue of accepted requests and a persistent
+//! [`WorkerPool`]. Producers call [`Server::submit`] (admission control
+//! answers sheds immediately); one engine thread runs
+//! [`Server::engine_loop`], which repeatedly:
+//!
+//! 1. groups the queue by `(levels, p)` via [`BatchPlan::group`] — the
+//!    same planner the batch subsystem uses, applied to in-flight traffic;
+//! 2. flushes a group when it is **full** (`max_group` members), when its
+//!    **oldest member nears its deadline** (`flush_fraction` of the
+//!    deadline budget has elapsed), or when the server is **draining**;
+//! 3. evaluates the group under `catch_unwind`. A panic anywhere inside —
+//!    topology build, a pool worker, the dispatch path — tears down and
+//!    rebuilds the pool, then *splits* the group and retries both halves
+//!    one rung down the degradation ladder (taskgraph → pooled → serial),
+//!    isolating a hostile request to a single-member serial evaluation
+//!    before giving up on it with a structured `error` reply.
+//!
+//! Every accepted request is answered **exactly once** — `ok`, `error`, or
+//! `expired` — in every branch of the ladder; shed requests are answered
+//! `overloaded` at submit time and never enter the queue. The chaos suite
+//! (`tests/serve_chaos.rs`, `fmm2d loadgen --faults`) drives injected
+//! panics through all three sites and holds the daemon to that invariant.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::batch::{BatchPlan, ProblemShape};
+use crate::dispatch::{Dispatcher, Engine, EngineChoice, Problem};
+use crate::fmm::{self, CpuEngine, FmmOptions};
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::util::pool::WorkerPool;
+
+use super::protocol::{self, EvalRequest, Limits};
+
+/// Configuration of one daemon instance.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Base evaluation options: `threads` fixes the pool width (and the
+    /// bit-reproducibility contract of the replies), `pin`/`topo_threads`
+    /// pass through. `pool`/`cpu_engine` are managed by the server.
+    pub fmm: FmmOptions,
+    /// Engine the ladder starts from: `taskgraph`, `parallel`, `serial`,
+    /// or `auto` (per-group dispatch decision; resolves to `parallel` on
+    /// an uncalibrated [`Dispatcher::fallback`]). `xla` is rejected.
+    pub engine: Engine,
+    /// Dispatcher for `--engine auto`; `None` loads the default profile.
+    pub dispatcher: Option<Arc<Dispatcher>>,
+    /// Flush a `(levels, p)` group at this many members.
+    pub max_group: usize,
+    /// Admission control: maximum queued requests before shedding.
+    pub max_queue: usize,
+    /// Admission control: maximum total queued points before shedding.
+    pub max_queued_points: usize,
+    /// Per-request point cap (decode-time `error`, not a shed).
+    pub max_points: usize,
+    /// Deadline for requests that name none (milliseconds).
+    pub default_deadline_ms: u64,
+    /// Flush a group once its oldest member has waited this fraction of
+    /// its deadline budget (0 < f ≤ 1). The rest of the budget is left
+    /// for the evaluation itself.
+    pub flush_fraction: f64,
+    /// Log recoveries and flush decisions to stderr.
+    pub verbose: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            fmm: FmmOptions::default(),
+            engine: Engine::Parallel,
+            dispatcher: None,
+            max_group: 8,
+            max_queue: 256,
+            max_queued_points: 2_000_000,
+            max_points: 200_000,
+            default_deadline_ms: 10_000,
+            flush_fraction: 0.5,
+            verbose: false,
+        }
+    }
+}
+
+/// Counters of one daemon run; snapshot via [`Server::stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Requests admitted to the queue.
+    pub accepted: u64,
+    /// Accepted requests answered `ok`.
+    pub ok: u64,
+    /// Accepted requests answered `error` (evaluation error or ladder
+    /// exhaustion).
+    pub errors: u64,
+    /// Accepted requests answered `expired` (deadline passed pre-eval).
+    pub expired: u64,
+    /// Requests shed by admission control (`overloaded`; never queued).
+    pub shed: u64,
+    /// Lines rejected at decode time (`error` with no admission).
+    pub rejected: u64,
+    /// Groups flushed, by trigger.
+    pub flushes_full: u64,
+    pub flushes_deadline: u64,
+    pub flushes_drain: u64,
+    /// Panics caught by the group isolation layer.
+    pub recoveries: u64,
+    /// Worker pools torn down and rebuilt after a caught panic.
+    pub pool_rebuilds: u64,
+    /// Ladder steps taken (an engine rung abandoned for a lower one).
+    pub degraded: u64,
+    /// Transient reply-write failures retried (failpoint `write`).
+    pub write_retries: u64,
+}
+
+impl ServeStats {
+    /// Accepted requests answered so far (the exactly-once ledger).
+    pub fn answered(&self) -> u64 {
+        self.ok + self.errors + self.expired
+    }
+
+    /// Two-line human summary for stderr.
+    pub fn render(&self) -> String {
+        format!(
+            "serve: accepted {} (ok {}, errors {}, expired {}), shed {}, rejected {}\n\
+             serve: flushes {} (full {}, deadline {}, drain {}), recoveries {}, \
+             pool rebuilds {}, degraded {}, write retries {}",
+            self.accepted,
+            self.ok,
+            self.errors,
+            self.expired,
+            self.shed,
+            self.rejected,
+            self.flushes_full + self.flushes_deadline + self.flushes_drain,
+            self.flushes_full,
+            self.flushes_deadline,
+            self.flushes_drain,
+            self.recoveries,
+            self.pool_rebuilds,
+            self.degraded,
+            self.write_retries,
+        )
+    }
+}
+
+#[derive(Debug, Default)]
+struct Counters {
+    accepted: AtomicU64,
+    ok: AtomicU64,
+    errors: AtomicU64,
+    expired: AtomicU64,
+    shed: AtomicU64,
+    rejected: AtomicU64,
+    flushes_full: AtomicU64,
+    flushes_deadline: AtomicU64,
+    flushes_drain: AtomicU64,
+    recoveries: AtomicU64,
+    pool_rebuilds: AtomicU64,
+    degraded: AtomicU64,
+    write_retries: AtomicU64,
+}
+
+fn bump(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One accepted request waiting for its group to flush.
+struct Pending {
+    req: EvalRequest,
+    levels: usize,
+    arrived: Instant,
+    /// Flush trigger: `arrived + flush_fraction · deadline`.
+    due_at: Instant,
+    /// Hard deadline: `arrived + deadline`.
+    deadline: Instant,
+}
+
+struct QueueState {
+    pending: Vec<Pending>,
+    queued_points: usize,
+    draining: bool,
+}
+
+/// A rung of the degradation ladder, carrying the worker count the reply
+/// will advertise (potentials are bit-reproducible per rung × workers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Rung {
+    TaskGraph(usize),
+    Pooled(usize),
+    Serial,
+}
+
+impl Rung {
+    fn next(self) -> Option<Rung> {
+        match self {
+            Rung::TaskGraph(w) => Some(Rung::Pooled(w)),
+            Rung::Pooled(_) => Some(Rung::Serial),
+            Rung::Serial => None,
+        }
+    }
+
+    fn label(self) -> &'static str {
+        match self {
+            Rung::TaskGraph(_) => "taskgraph",
+            Rung::Pooled(_) => "pooled",
+            Rung::Serial => "serial",
+        }
+    }
+
+    fn workers(self) -> usize {
+        match self {
+            Rung::TaskGraph(w) | Rung::Pooled(w) => w,
+            Rung::Serial => 1,
+        }
+    }
+}
+
+/// Poison-tolerant lock: a panic while holding one of these mutexes is
+/// already routed through the recovery ladder, so waiters recover the
+/// guard instead of cascading.
+fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// The daemon core. See the module docs for the lifecycle.
+pub struct Server {
+    opts: ServeOptions,
+    /// Resolved base engine (never `Auto` unless a calibrated dispatcher
+    /// backs it, never `Xla`).
+    engine: Engine,
+    dispatcher: Option<Arc<Dispatcher>>,
+    /// Fixed pool width (= the `workers` field of pooled/taskgraph
+    /// replies).
+    threads: usize,
+    pool: Mutex<Arc<WorkerPool>>,
+    state: Mutex<QueueState>,
+    wake: Condvar,
+    counters: Counters,
+}
+
+impl Server {
+    pub fn new(opts: ServeOptions) -> Result<Server> {
+        crate::ensure!(opts.max_group >= 1, "max_group must be >= 1");
+        crate::ensure!(opts.max_queue >= 1, "max_queue must be >= 1");
+        crate::ensure!(
+            opts.flush_fraction > 0.0 && opts.flush_fraction <= 1.0,
+            "flush_fraction must lie in (0, 1] (got {})",
+            opts.flush_fraction
+        );
+        let threads = opts.fmm.effective_threads();
+        let (engine, dispatcher) = match opts.engine {
+            Engine::Xla => {
+                crate::bail!("serve runs the CPU engines; --engine xla is not a serve target")
+            }
+            Engine::Auto => {
+                let d = opts
+                    .dispatcher
+                    .clone()
+                    .unwrap_or_else(|| Arc::new(Dispatcher::load_or_default(None)));
+                if d.fallback {
+                    // Satellite contract: a fresh deployment (no usable
+                    // calibration profile) serves traffic on the pooled
+                    // engine instead of trusting uncalibrated crossovers.
+                    eprintln!(
+                        "fmm2d serve: --engine auto without a calibration profile; \
+                         resolving to the pooled engine (run `fmm2d calibrate`)"
+                    );
+                    (Engine::Parallel, None)
+                } else {
+                    (Engine::Auto, Some(d))
+                }
+            }
+            e => (e, None),
+        };
+        let pool = Arc::new(WorkerPool::new(threads, opts.fmm.pin));
+        Ok(Server {
+            engine,
+            dispatcher,
+            threads,
+            pool: Mutex::new(pool),
+            state: Mutex::new(QueueState {
+                pending: Vec::new(),
+                queued_points: 0,
+                draining: false,
+            }),
+            wake: Condvar::new(),
+            counters: Counters::default(),
+            opts,
+        })
+    }
+
+    /// Decode-time limits for [`protocol::decode`].
+    pub fn limits(&self) -> Limits {
+        Limits {
+            max_points: self.opts.max_points,
+            default_deadline_ms: self.opts.default_deadline_ms,
+        }
+    }
+
+    /// Count one decode-time rejection (the producer already wrote the
+    /// `error` reply).
+    pub fn note_rejected(&self) {
+        bump(&self.counters.rejected);
+    }
+
+    /// Count one transiently-failed-then-retried reply write.
+    pub fn note_write_retry(&self) {
+        bump(&self.counters.write_retries);
+    }
+
+    /// Admission control: accept `req` into the queue, or return the
+    /// structured reply (`overloaded` with a backoff hint, or `error`
+    /// while draining) that the producer must write instead. Accepted
+    /// requests are guaranteed exactly one reply from the engine loop.
+    pub fn submit(&self, req: EvalRequest) -> std::result::Result<(), Json> {
+        let n = req.n();
+        let mut st = locked(&self.state);
+        if st.draining {
+            bump(&self.counters.rejected);
+            return Err(protocol::reply_error(
+                Some(req.id),
+                "server is draining and accepts no new requests",
+            ));
+        }
+        if st.pending.len() >= self.opts.max_queue
+            || st.queued_points + n > self.opts.max_queued_points
+        {
+            bump(&self.counters.shed);
+            let retry = self.retry_after_ms(&st);
+            return Err(protocol::reply_overloaded(req.id, retry));
+        }
+        bump(&self.counters.accepted);
+        let now = Instant::now();
+        let budget = Duration::from_millis(req.deadline_ms);
+        let flush_after = budget.mul_f64(self.opts.flush_fraction);
+        st.queued_points += n;
+        st.pending.push(Pending {
+            levels: req.levels(),
+            arrived: now,
+            due_at: now + flush_after,
+            deadline: now + budget,
+            req,
+        });
+        drop(st);
+        self.wake.notify_all();
+        Ok(())
+    }
+
+    /// Deterministic backoff hint: grows with queue pressure so a loadgen
+    /// (or a real client) backs off harder the more overloaded we are.
+    fn retry_after_ms(&self, st: &QueueState) -> u64 {
+        10 + (200 * st.pending.len() as u64) / (self.opts.max_queue.max(1) as u64)
+    }
+
+    /// Begin draining: no new admissions; the engine loop flushes what is
+    /// queued and returns once everything is answered.
+    pub fn drain(&self) {
+        locked(&self.state).draining = true;
+        self.wake.notify_all();
+    }
+
+    /// Snapshot of the run counters.
+    pub fn stats(&self) -> ServeStats {
+        let c = &self.counters;
+        let get = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        ServeStats {
+            accepted: get(&c.accepted),
+            ok: get(&c.ok),
+            errors: get(&c.errors),
+            expired: get(&c.expired),
+            shed: get(&c.shed),
+            rejected: get(&c.rejected),
+            flushes_full: get(&c.flushes_full),
+            flushes_deadline: get(&c.flushes_deadline),
+            flushes_drain: get(&c.flushes_drain),
+            recoveries: get(&c.recoveries),
+            pool_rebuilds: get(&c.pool_rebuilds),
+            degraded: get(&c.degraded),
+            write_retries: get(&c.write_retries),
+        }
+    }
+
+    /// The engine loop: block until a group is due, flush it, repeat;
+    /// returns once draining *and* the queue is empty. Run it on exactly
+    /// one thread; `emit` receives every reply (it must be `Sync` because
+    /// producers write shed replies concurrently through the same sink).
+    pub fn engine_loop(&self, emit: &(dyn Fn(&Json) + Sync)) {
+        loop {
+            let group = {
+                let mut st = locked(&self.state);
+                loop {
+                    if st.pending.is_empty() {
+                        if st.draining {
+                            return;
+                        }
+                        st = self
+                            .wake
+                            .wait_timeout(st, Duration::from_millis(50))
+                            .unwrap_or_else(|p| p.into_inner())
+                            .0;
+                        continue;
+                    }
+                    let now = Instant::now();
+                    if let Some(g) = self.take_due_group(&mut st, now) {
+                        break g;
+                    }
+                    // Nothing due yet: sleep until the earliest due_at (or
+                    // a submit/drain wakes us), capped for responsiveness.
+                    let earliest = st.pending.iter().map(|p| p.due_at).min();
+                    let wait = earliest
+                        .map(|t| t.saturating_duration_since(now))
+                        .unwrap_or(Duration::from_millis(50))
+                        .clamp(Duration::from_millis(1), Duration::from_millis(50));
+                    st = self
+                        .wake
+                        .wait_timeout(st, wait)
+                        .unwrap_or_else(|p| p.into_inner())
+                        .0;
+                }
+            };
+            let rung = self.initial_rung(&group);
+            self.run_ladder(group, rung, emit);
+        }
+    }
+
+    /// Pick and remove the most urgent due `(levels, p)` group, if any.
+    /// Groups come from [`BatchPlan::group`] over the queue (members stay
+    /// in arrival order); a group is due when it is full, when its oldest
+    /// member's flush timer fired, or when the server is draining.
+    fn take_due_group(&self, st: &mut QueueState, now: Instant) -> Option<Vec<Pending>> {
+        let shapes: Vec<ProblemShape> = st
+            .pending
+            .iter()
+            .map(|p| ProblemShape {
+                levels: p.levels,
+                p: p.req.cfg.p,
+                nmax: p.req.n(),
+            })
+            .collect();
+        let plan = BatchPlan::group(&shapes, self.opts.max_group);
+        // Most urgent = earliest due member; full groups pre-empt that
+        // order (they cost no extra latency and free the most queue).
+        let mut best: Option<(&[usize], bool, Instant)> = None;
+        for g in &plan.groups {
+            let full = g.len() >= self.opts.max_group;
+            let earliest = g
+                .members
+                .iter()
+                .map(|&i| st.pending[i].due_at)
+                .min()
+                .unwrap_or(now);
+            let due = full || st.draining || earliest <= now;
+            if !due {
+                continue;
+            }
+            let better = match &best {
+                None => true,
+                Some((_, best_full, best_t)) => {
+                    (full && !best_full) || (full == *best_full && earliest < *best_t)
+                }
+            };
+            if better {
+                best = Some((&g.members, full, earliest));
+            }
+        }
+        let (members, full, _) = best?;
+        if full {
+            bump(&self.counters.flushes_full);
+        } else if st.draining {
+            bump(&self.counters.flushes_drain);
+        } else {
+            bump(&self.counters.flushes_deadline);
+        }
+        let take: std::collections::BTreeSet<usize> = members.iter().copied().collect();
+        let mut group = Vec::with_capacity(take.len());
+        let mut kept = Vec::with_capacity(st.pending.len() - take.len());
+        for (i, p) in st.pending.drain(..).enumerate() {
+            if take.contains(&i) {
+                st.queued_points -= p.req.n();
+                group.push(p);
+            } else {
+                kept.push(p);
+            }
+        }
+        st.pending = kept;
+        Some(group)
+    }
+
+    /// Entry rung of the ladder for this group: the configured engine, or
+    /// the dispatcher's per-group decision under `--engine auto`.
+    fn initial_rung(&self, group: &[Pending]) -> Rung {
+        let configured = match self.engine {
+            Engine::Serial => Rung::Serial,
+            Engine::TaskGraph => Rung::TaskGraph(self.threads),
+            _ => Rung::Pooled(self.threads),
+        };
+        if self.engine != Engine::Auto {
+            return configured;
+        }
+        let Some(d) = &self.dispatcher else {
+            return configured;
+        };
+        let members: Vec<Problem> = group
+            .iter()
+            .map(|p| Problem::new(p.req.n(), p.levels, p.req.cfg.p, p.req.cfg.theta))
+            .collect();
+        let decision = d.select_group_capped(&members, Some(self.threads));
+        match decision.choice {
+            EngineChoice::Serial => Rung::Serial,
+            EngineChoice::Pooled { workers } => Rung::Pooled(workers.clamp(1, self.threads)),
+            EngineChoice::TaskGraph { workers } => Rung::TaskGraph(workers.clamp(1, self.threads)),
+            // serve never executes XLA; take the strongest CPU rung
+            EngineChoice::Xla => Rung::TaskGraph(self.threads),
+        }
+    }
+
+    /// Evaluate `group` at `rung`, stepping down the ladder (and splitting
+    /// the group) on caught panics. Emits exactly one reply per member.
+    fn run_ladder(&self, group: Vec<Pending>, rung: Rung, emit: &(dyn Fn(&Json) + Sync)) {
+        if group.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        let (live, dead): (Vec<Pending>, Vec<Pending>) =
+            group.into_iter().partition(|p| now <= p.deadline);
+        for p in dead {
+            bump(&self.counters.expired);
+            let waited = now.duration_since(p.arrived).as_secs_f64() * 1000.0;
+            emit(&protocol::reply_expired(p.req.id, waited));
+        }
+        if live.is_empty() {
+            return;
+        }
+        match self.try_eval(&live, rung) {
+            Ok(replies) => {
+                for (ok, reply) in replies {
+                    bump(if ok {
+                        &self.counters.ok
+                    } else {
+                        &self.counters.errors
+                    });
+                    emit(&reply);
+                }
+            }
+            Err(panic_msg) => {
+                bump(&self.counters.recoveries);
+                self.rebuild_pool();
+                if self.opts.verbose {
+                    eprintln!(
+                        "fmm2d serve: recovered from panic at rung {} ({} member(s)): {panic_msg}",
+                        rung.label(),
+                        live.len()
+                    );
+                }
+                let next = rung.next().unwrap_or(Rung::Serial);
+                if next != rung {
+                    bump(&self.counters.degraded);
+                }
+                if live.len() > 1 {
+                    // Split to isolate the hostile member: both halves
+                    // retry one rung down (bisection terminates at a
+                    // single member on the serial rung).
+                    let mut a = live;
+                    let b = a.split_off(a.len() / 2);
+                    self.run_ladder(a, next, emit);
+                    self.run_ladder(b, next, emit);
+                } else if rung != Rung::Serial {
+                    self.run_ladder(live, next, emit);
+                } else {
+                    // A single member still panicking on the serial rung:
+                    // this request is the fault. Answer it and move on.
+                    for p in live {
+                        bump(&self.counters.errors);
+                        emit(&protocol::reply_error(
+                            Some(p.req.id),
+                            &format!("evaluation panicked at every engine rung: {panic_msg}"),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Evaluate every member of `group` at `rung` under one
+    /// `catch_unwind`. Returns the replies (ok flag + json) or the panic
+    /// message. Replies are only emitted by the caller *after* the whole
+    /// group succeeded, so an unwound group re-evaluates members without
+    /// ever double-answering.
+    #[allow(clippy::type_complexity)]
+    fn try_eval(
+        &self,
+        group: &[Pending],
+        rung: Rung,
+    ) -> std::result::Result<Vec<(bool, Json)>, String> {
+        let pool = locked(&self.pool).clone();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // Deterministic fault injection for the chaos suite: a crash
+            // in the serve dispatch path itself (`failpoints` builds only).
+            #[cfg(feature = "failpoints")]
+            if crate::util::failpoint::fire("dispatch") {
+                // xtask: allow(no-panic) — deliberate fault-injection site,
+                // compiled only under the non-default `failpoints` feature
+                panic!("failpoint: dispatch");
+            }
+            let mut replies = Vec::with_capacity(group.len());
+            for p in group {
+                let (pts, gs) = p.req.materialize();
+                let opts = FmmOptions {
+                    cfg: p.req.cfg,
+                    threads: Some(rung.workers()),
+                    topo_threads: self.opts.fmm.topo_threads,
+                    pin: self.opts.fmm.pin,
+                    pool: Some(Arc::clone(&pool)),
+                    cpu_engine: match rung {
+                        Rung::TaskGraph(_) => CpuEngine::TaskGraph,
+                        _ => CpuEngine::Barrier,
+                    },
+                    ..FmmOptions::default()
+                };
+                let reply = match fmm::evaluate(&pts, &gs, &opts) {
+                    Ok(out) => {
+                        let latency_ms =
+                            p.arrived.elapsed().as_secs_f64() * 1000.0;
+                        (
+                            true,
+                            protocol::reply_ok(
+                                p.req.id,
+                                rung.label(),
+                                rung.workers(),
+                                latency_ms,
+                                &out.potentials,
+                                p.req.digest,
+                            ),
+                        )
+                    }
+                    Err(e) => (
+                        false,
+                        protocol::reply_error(Some(p.req.id), &format!("{e:#}")),
+                    ),
+                };
+                replies.push(reply);
+            }
+            replies
+        }));
+        caught.map_err(|p| payload_msg(&p))
+    }
+
+    /// Tear down the (possibly poisoned) pool and install a fresh one of
+    /// the same width. Queued requests and the queue itself are untouched
+    /// — only the compute substrate is replaced.
+    fn rebuild_pool(&self) {
+        bump(&self.counters.pool_rebuilds);
+        let fresh = Arc::new(WorkerPool::new(self.threads, self.opts.fmm.pin));
+        *locked(&self.pool) = fresh;
+    }
+}
+
+fn payload_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::protocol::{decode, Request};
+    use std::sync::Mutex as StdMutex;
+
+    fn small_opts() -> ServeOptions {
+        ServeOptions {
+            fmm: FmmOptions {
+                threads: Some(2),
+                ..FmmOptions::default()
+            },
+            max_group: 4,
+            ..ServeOptions::default()
+        }
+    }
+
+    fn req(server: &Server, line: &str) -> EvalRequest {
+        match decode(line, &server.limits()) {
+            Ok(Request::Eval(r)) => *r,
+            other => panic!("expected eval request, got {other:?}"),
+        }
+    }
+
+    /// Submit-then-drain: `engine_loop` with `draining` set processes the
+    /// whole queue synchronously on the calling thread — no spawns needed
+    /// to unit-test the core.
+    fn run_to_completion(server: &Server) -> Vec<Json> {
+        // under --features failpoints our evaluations pass through the
+        // global failpoint sites: serialize against tests that arm them
+        #[cfg(feature = "failpoints")]
+        let _fp = crate::util::failpoint::test_lock();
+        server.drain();
+        let replies = StdMutex::new(Vec::new());
+        server.engine_loop(&|j: &Json| replies.lock().unwrap().push(j.clone()));
+        replies.into_inner().unwrap()
+    }
+
+    #[test]
+    fn xla_engine_is_rejected() {
+        let err = Server::new(ServeOptions {
+            engine: Engine::Xla,
+            ..small_opts()
+        })
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("not a serve target"));
+    }
+
+    #[test]
+    fn answers_every_accepted_request_exactly_once() {
+        let server = Server::new(small_opts()).unwrap();
+        for i in 0..6 {
+            let line = format!(r#"{{"id":{i},"n":{},"seed":{i},"digest":true}}"#, 500 + i * 100);
+            server.submit(req(&server, &line)).unwrap();
+        }
+        let replies = run_to_completion(&server);
+        assert_eq!(replies.len(), 6);
+        let mut ids: Vec<usize> = replies
+            .iter()
+            .map(|r| r.get("id").and_then(Json::as_usize).unwrap())
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..6).collect::<Vec<_>>());
+        for r in &replies {
+            assert_eq!(r.get("status").and_then(Json::as_str), Some("ok"));
+        }
+        let st = server.stats();
+        assert_eq!(st.accepted, 6);
+        assert_eq!(st.ok, 6);
+        assert_eq!(st.answered(), 6);
+    }
+
+    #[test]
+    fn overload_sheds_with_retry_hint_and_drain_rejects() {
+        let server = Server::new(ServeOptions {
+            max_queue: 2,
+            ..small_opts()
+        })
+        .unwrap();
+        server.submit(req(&server, r#"{"id":0,"n":500}"#)).unwrap();
+        server.submit(req(&server, r#"{"id":1,"n":500}"#)).unwrap();
+        let shed = server
+            .submit(req(&server, r#"{"id":2,"n":500}"#))
+            .unwrap_err();
+        assert_eq!(shed.get("status").and_then(Json::as_str), Some("overloaded"));
+        assert!(shed.get("retry_after_ms").and_then(Json::as_usize).unwrap() >= 10);
+        server.drain();
+        let rejected = server
+            .submit(req(&server, r#"{"id":3,"n":500}"#))
+            .unwrap_err();
+        assert_eq!(rejected.get("status").and_then(Json::as_str), Some("error"));
+        let replies = run_to_completion(&server);
+        assert_eq!(replies.len(), 2, "only the two accepted requests answer");
+        assert_eq!(server.stats().shed, 1);
+    }
+
+    #[test]
+    fn queued_points_bound_sheds_big_requests() {
+        let server = Server::new(ServeOptions {
+            max_queued_points: 1000,
+            ..small_opts()
+        })
+        .unwrap();
+        server.submit(req(&server, r#"{"id":0,"n":800}"#)).unwrap();
+        assert!(server.submit(req(&server, r#"{"id":1,"n":800}"#)).is_err());
+        let replies = run_to_completion(&server);
+        assert_eq!(replies.len(), 1);
+    }
+
+    #[test]
+    fn expired_deadline_answers_expired_not_ok() {
+        let server = Server::new(small_opts()).unwrap();
+        server
+            .submit(req(&server, r#"{"id":5,"n":600,"deadline_ms":0}"#))
+            .unwrap();
+        let replies = run_to_completion(&server);
+        assert_eq!(replies.len(), 1);
+        assert_eq!(
+            replies[0].get("status").and_then(Json::as_str),
+            Some("expired")
+        );
+        assert_eq!(server.stats().expired, 1);
+    }
+
+    #[test]
+    fn groups_form_by_levels_and_p() {
+        let server = Server::new(small_opts()).unwrap();
+        // same n → same levels; two p values → two groups
+        for i in 0..4 {
+            let p = if i % 2 == 0 { 10 } else { 17 };
+            server
+                .submit(req(&server, &format!(r#"{{"id":{i},"n":900,"p":{p}}}"#)))
+                .unwrap();
+        }
+        let replies = run_to_completion(&server);
+        assert_eq!(replies.len(), 4);
+        let st = server.stats();
+        assert_eq!(st.flushes_full + st.flushes_deadline + st.flushes_drain, 2);
+    }
+
+    #[test]
+    fn full_group_flushes_before_deadline() {
+        let server = Server::new(ServeOptions {
+            max_group: 2,
+            ..small_opts()
+        })
+        .unwrap();
+        // long deadlines: only the size trigger can flush these
+        server
+            .submit(req(&server, r#"{"id":0,"n":700,"deadline_ms":60000}"#))
+            .unwrap();
+        server
+            .submit(req(&server, r#"{"id":1,"n":700,"deadline_ms":60000}"#))
+            .unwrap();
+        // Not draining: only the size trigger can flush, and it must do so
+        // long before the 60 s deadlines. Run the loop on a helper thread
+        // and stop it via drain() once both replies arrived.
+        #[cfg(feature = "failpoints")]
+        let _fp = crate::util::failpoint::test_lock();
+        let replies = StdMutex::new(Vec::new());
+        let emit = |j: &Json| replies.lock().unwrap().push(j.clone());
+        std::thread::scope(|s| {
+            let h = s.spawn(|| server.engine_loop(&emit));
+            while server.stats().answered() < 2 {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            server.drain();
+            h.join().unwrap();
+        });
+        assert_eq!(server.stats().flushes_full, 1);
+        assert_eq!(replies.into_inner().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn degenerate_inline_input_is_answered_exactly_once() {
+        // Four coincident points are a degenerate pyramid input (every
+        // median split ties). Whatever the evaluator decides — succeed or
+        // error — the serve invariant is that the accepted request gets
+        // exactly one structured reply and the daemon stays up. (The
+        // panic-path variants live in the `failpoints` chaos suite.)
+        let server = Server::new(small_opts()).unwrap();
+        server
+            .submit(req(
+                &server,
+                r#"{"id":0,"points":[[0.5,0.5],[0.5,0.5],[0.5,0.5],[0.5,0.5]],"gammas":[[1,0],[1,0],[1,0],[1,0]],"digest":true}"#,
+            ))
+            .unwrap();
+        let replies = run_to_completion(&server);
+        assert_eq!(replies.len(), 1);
+        let status = replies[0].get("status").and_then(Json::as_str).unwrap();
+        assert!(
+            status == "ok" || status == "error",
+            "answered exactly once, with a structured status: {status}"
+        );
+    }
+}

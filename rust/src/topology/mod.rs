@@ -146,6 +146,15 @@ pub fn build(
     levels: usize,
     opts: &TopologyOptions,
 ) -> Result<Topology> {
+    // Deterministic fault injection for the serve chaos suite: a panic here
+    // models a crash in the topology prologue before any phase ran
+    // (`failpoints` builds only; see `util::failpoint`).
+    #[cfg(feature = "failpoints")]
+    if crate::util::failpoint::fire("topology") {
+        // xtask: allow(no-panic) — deliberate fault-injection site, compiled
+        // only under the non-default `failpoints` feature
+        panic!("failpoint: topology");
+    }
     let nt = opts.effective_threads();
     let pool = if nt > 1 { opts.pool.as_deref() } else { None };
     let t = Instant::now();

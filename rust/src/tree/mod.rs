@@ -40,6 +40,12 @@ pub enum PartitionEngine {
     GpuModel,
 }
 
+/// Largest refinement depth a pyramid will accept: `4^16` leaf boxes is
+/// already far past any point count this code targets, and bounding the
+/// depth here keeps the `4^l` index arithmetic away from shift overflow
+/// when a hostile `levels` arrives from an API boundary.
+pub const MAX_LEVELS: usize = 16;
+
 /// Index arithmetic of the pyramid: boxes of level `l` are numbered
 /// `0..4^l`; the children of box `b` are `4b..4b+4` at the next level.
 #[inline]
@@ -91,8 +97,9 @@ impl Pyramid {
     /// see [`crate::workload`]).
     ///
     /// Errors (instead of panicking) when the inputs cannot form a pyramid:
-    /// mismatched array lengths, `levels == 0`, or fewer particles than
-    /// leaf boxes.
+    /// mismatched array lengths, `levels == 0` or `levels > `
+    /// [`MAX_LEVELS`], fewer particles than leaf boxes, or any non-finite
+    /// coordinate/strength (which would otherwise NaN-poison the answer).
     pub fn build(points: &[C64], gammas: &[C64], levels: usize) -> Result<Self> {
         Self::build_with(points, gammas, levels, PartitionEngine::Cpu)
     }
@@ -271,11 +278,33 @@ impl Pyramid {
         );
         crate::ensure!(levels >= 1, "pyramid needs at least one refinement level");
         crate::ensure!(
+            levels <= MAX_LEVELS,
+            "levels ({levels}) exceeds the supported maximum ({MAX_LEVELS})"
+        );
+        crate::ensure!(
             points.len() >= boxes_at_level(levels),
             "fewer particles ({}) than leaf boxes ({}); lower the level count",
             points.len(),
             boxes_at_level(levels)
         );
+        // A single non-finite coordinate poisons `Rect::bounding` (NaN box
+        // extents) and from there every potential in the answer; a
+        // non-finite strength poisons silently. Reject both up front so no
+        // engine ever returns NaN-poisoned potentials for bad input.
+        if let Some(i) = points.iter().position(|q| !q.re.is_finite() || !q.im.is_finite()) {
+            crate::bail!(
+                "non-finite coordinate at index {i}: ({}, {})",
+                points[i].re,
+                points[i].im
+            );
+        }
+        if let Some(i) = gammas.iter().position(|g| !g.re.is_finite() || !g.im.is_finite()) {
+            crate::bail!(
+                "non-finite strength at index {i}: ({}, {})",
+                gammas[i].re,
+                gammas[i].im
+            );
+        }
         let particles = points
             .iter()
             .zip(gammas)
@@ -481,6 +510,25 @@ mod tests {
     fn uniform(n: usize, seed: u64) -> (Vec<C64>, Vec<C64>) {
         let mut r = Pcg64::seed_from_u64(seed);
         workload::uniform_square(n, &mut r)
+    }
+
+    #[test]
+    fn non_finite_inputs_are_rejected_not_poisoned() {
+        let (mut pts, gs) = uniform(1000, 11);
+        pts[500] = C64::new(f64::NAN, 0.25);
+        let err = format!("{:#}", Pyramid::build(&pts, &gs, 3).unwrap_err());
+        assert!(err.contains("non-finite coordinate at index 500"), "{err}");
+        let (pts, mut gs) = uniform(1000, 12);
+        gs[7] = C64::new(0.1, f64::INFINITY);
+        let err = format!("{:#}", Pyramid::build(&pts, &gs, 3).unwrap_err());
+        assert!(err.contains("non-finite strength at index 7"), "{err}");
+    }
+
+    #[test]
+    fn absurd_level_counts_are_rejected() {
+        let (pts, gs) = uniform(64, 13);
+        assert!(Pyramid::build(&pts, &gs, MAX_LEVELS + 1).is_err());
+        assert!(Pyramid::build(&pts, &gs, usize::MAX / 2).is_err());
     }
 
     #[test]

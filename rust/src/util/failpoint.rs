@@ -1,0 +1,289 @@
+//! Deterministic fault injection for the serve chaos suite.
+//!
+//! A *failpoint* is a named site in the code that can be armed to fail on a
+//! deterministic schedule. The real machinery only exists when the crate is
+//! built with the non-default `failpoints` feature; without it, [`fire`]
+//! compiles to an inline `false` (release binaries carry no injection
+//! branches) and [`arm`] returns an error so `--faults` fails loudly
+//! instead of silently testing nothing.
+//!
+//! Schedules are counted, not random, so a chaos run is reproducible:
+//! `arm("topology=every:5,dispatch=once:3")` makes the `topology` site fire
+//! on its 5th, 10th, 15th… hit and the `dispatch` site on exactly its 3rd.
+//! Hit counters are process-global and only advance while a site is armed.
+//!
+//! The shipped sites (see `DESIGN.md` §11 for the catalog):
+//!
+//! | site          | location                         | models                      |
+//! |---------------|----------------------------------|-----------------------------|
+//! | `topology`    | `topology::build` prologue       | crash building the tree     |
+//! | `dispatch`    | serve group evaluation           | crash in the compute phase  |
+//! | `pool-worker` | `WorkerPool` worker task         | a worker dying mid-task     |
+//! | `write`       | serve response writer            | transient reply-write error |
+
+use crate::util::error::Result;
+
+/// Names of every failpoint site compiled into the crate. [`arm`] rejects
+/// specs naming anything else, so a typo in `--faults` cannot silently arm
+/// nothing.
+pub const SITES: [&str; 4] = ["topology", "dispatch", "pool-worker", "write"];
+
+#[cfg(feature = "failpoints")]
+mod imp {
+    use super::SITES;
+    use crate::util::error::Result;
+    use std::collections::BTreeMap;
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+
+    #[derive(Clone, Copy, Debug)]
+    enum Trigger {
+        /// Fire on every K-th hit (K, 2K, 3K, …).
+        Every(u64),
+        /// Fire on exactly the N-th hit.
+        Once(u64),
+    }
+
+    #[derive(Debug, Default)]
+    struct Site {
+        trigger: Option<Trigger>,
+        hits: u64,
+        fired: u64,
+    }
+
+    #[derive(Debug, Default)]
+    pub(super) struct Registry {
+        sites: BTreeMap<&'static str, Site>,
+    }
+
+    fn registry() -> MutexGuard<'static, Registry> {
+        static REG: OnceLock<Mutex<Registry>> = OnceLock::new();
+        REG.get_or_init(|| Mutex::new(Registry::default()))
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn canonical(name: &str) -> Result<&'static str> {
+        SITES
+            .iter()
+            .find(|s| **s == name)
+            .copied()
+            .ok_or_else(|| {
+                crate::anyhow!(
+                    "unknown failpoint '{name}': known sites are {}",
+                    SITES.join(", ")
+                )
+            })
+    }
+
+    fn parse_trigger(s: &str) -> Result<Trigger> {
+        let (kind, count) = s
+            .split_once(':')
+            .ok_or_else(|| crate::anyhow!("bad failpoint trigger '{s}': want every:K or once:N"))?;
+        let k: u64 = count
+            .parse()
+            .map_err(|_| crate::anyhow!("bad failpoint count '{count}' in '{s}'"))?;
+        crate::ensure!(k >= 1, "failpoint count must be >= 1 in '{s}'");
+        match kind {
+            "every" => Ok(Trigger::Every(k)),
+            "once" => Ok(Trigger::Once(k)),
+            other => crate::bail!("bad failpoint trigger kind '{other}' in '{s}': want every or once"),
+        }
+    }
+
+    pub(super) fn arm(spec: &str) -> Result<()> {
+        // Parse the whole spec before touching the registry, so a bad spec
+        // arms nothing.
+        let mut parsed = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, trig) = part
+                .split_once('=')
+                .ok_or_else(|| crate::anyhow!("bad failpoint spec '{part}': want name=every:K or name=once:N"))?;
+            parsed.push((canonical(name.trim())?, parse_trigger(trig.trim())?));
+        }
+        crate::ensure!(!parsed.is_empty(), "empty failpoint spec");
+        let mut reg = registry();
+        for (name, trig) in parsed {
+            let site = reg.sites.entry(name).or_default();
+            site.trigger = Some(trig);
+            site.hits = 0;
+            site.fired = 0;
+        }
+        // Injected panics are expected traffic during a chaos run: keep the
+        // default hook (real test failures, unexpected panics) but silence
+        // the per-panic stderr line for payloads we planted ourselves.
+        quiet_failpoint_panics();
+        Ok(())
+    }
+
+    fn quiet_failpoint_panics() {
+        use std::sync::Once;
+        static HOOK: Once = Once::new();
+        HOOK.call_once(|| {
+            let prev = std::panic::take_hook();
+            std::panic::set_hook(Box::new(move |info| {
+                let planted = info
+                    .payload()
+                    .downcast_ref::<&str>()
+                    .map(|s| s.starts_with("failpoint:"))
+                    .or_else(|| {
+                        info.payload()
+                            .downcast_ref::<String>()
+                            .map(|s| s.starts_with("failpoint:"))
+                    })
+                    .unwrap_or(false);
+                if !planted {
+                    prev(info);
+                }
+            }));
+        });
+    }
+
+    pub(super) fn disarm_all() {
+        registry().sites.clear();
+    }
+
+    pub(super) fn fire(name: &str) -> bool {
+        let mut reg = registry();
+        let Some(site) = reg.sites.get_mut(name) else {
+            return false;
+        };
+        let Some(trigger) = site.trigger else {
+            return false;
+        };
+        site.hits += 1;
+        let fire = match trigger {
+            Trigger::Every(k) => site.hits % k == 0,
+            Trigger::Once(n) => site.hits == n,
+        };
+        if fire {
+            site.fired += 1;
+        }
+        fire
+    }
+
+    pub(super) fn fired_total() -> u64 {
+        registry().sites.values().map(|s| s.fired).sum()
+    }
+}
+
+/// Arm failpoints from a comma-separated spec: `name=every:K` fires the
+/// site on every K-th hit, `name=once:N` on exactly the N-th. Re-arming a
+/// site resets its counters; sites not named keep their current schedule.
+/// Errors on unknown site names, malformed triggers, and — in builds
+/// without the `failpoints` feature — on any spec at all.
+#[cfg(feature = "failpoints")]
+pub fn arm(spec: &str) -> Result<()> {
+    imp::arm(spec)
+}
+
+/// Without the `failpoints` feature there is nothing to arm: fail loudly so
+/// `--faults` is never a silent no-op.
+#[cfg(not(feature = "failpoints"))]
+pub fn arm(_spec: &str) -> Result<()> {
+    crate::bail!(
+        "this build has no fault-injection support: rebuild with `--features failpoints` to use --faults"
+    )
+}
+
+/// Disarm every site and reset all counters.
+#[cfg(feature = "failpoints")]
+pub fn disarm_all() {
+    imp::disarm_all();
+}
+
+/// No-op without the `failpoints` feature.
+#[cfg(not(feature = "failpoints"))]
+pub fn disarm_all() {}
+
+/// Count a hit at site `name` and report whether it should fail now.
+/// Callers decide *how* to fail (panic, transient error, …) — the registry
+/// only decides *when*.
+#[cfg(feature = "failpoints")]
+pub fn fire(name: &str) -> bool {
+    imp::fire(name)
+}
+
+/// Inline `false` without the `failpoints` feature: the optimizer removes
+/// the site entirely.
+#[cfg(not(feature = "failpoints"))]
+#[inline(always)]
+pub fn fire(_name: &str) -> bool {
+    false
+}
+
+/// Total number of injections that actually fired since arming (all sites).
+#[cfg(feature = "failpoints")]
+pub fn fired_total() -> u64 {
+    imp::fired_total()
+}
+
+/// Serialize test scenarios that arm sites or evaluate through them: the
+/// registry is process-global, so concurrent tests in one binary would
+/// otherwise perturb each other's hit counters (or eat each other's
+/// injected panics). Every test that touches an armed site — in this
+/// module, in `serve`, or in the chaos integration suite — holds this
+/// guard for its whole scenario.
+#[cfg(feature = "failpoints")]
+pub fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Zero without the `failpoints` feature.
+#[cfg(not(feature = "failpoints"))]
+pub fn fired_total() -> u64 {
+    0
+}
+
+#[cfg(all(test, feature = "failpoints"))]
+mod tests {
+    use super::*;
+
+    // The registry is process-global and these tests run in one binary with
+    // the rest of the lib suite (including serve tests that evaluate through
+    // the `dispatch`/`write` sites): hold `test_lock` for each scenario.
+
+    #[test]
+    fn every_and_once_schedules_are_deterministic() {
+        let _g = test_lock();
+        disarm_all();
+        arm("dispatch=every:3,write=once:2").unwrap();
+        let every: Vec<bool> = (0..9).map(|_| fire("dispatch")).collect();
+        assert_eq!(
+            every,
+            [false, false, true, false, false, true, false, false, true]
+        );
+        let once: Vec<bool> = (0..4).map(|_| fire("write")).collect();
+        assert_eq!(once, [false, true, false, false]);
+        assert_eq!(fired_total(), 4);
+        disarm_all();
+        assert!(!fire("dispatch"));
+    }
+
+    #[test]
+    fn unarmed_sites_never_fire() {
+        let _g = test_lock();
+        disarm_all();
+        arm("write=every:1").unwrap();
+        assert!(!fire("dispatch"));
+        assert!(fire("write"));
+        disarm_all();
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_and_arm_nothing() {
+        let _g = test_lock();
+        disarm_all();
+        assert!(arm("bogus-site=every:2").is_err());
+        assert!(arm("dispatch").is_err());
+        assert!(arm("dispatch=every:0").is_err());
+        assert!(arm("dispatch=sometimes:3").is_err());
+        assert!(arm("").is_err());
+        // the failed arms must not have armed the valid prefix
+        assert!(!fire("dispatch"));
+    }
+}

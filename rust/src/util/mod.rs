@@ -6,6 +6,7 @@
 
 pub mod cli;
 pub mod error;
+pub mod failpoint;
 pub mod json;
 pub mod pool;
 pub mod prop;

@@ -539,11 +539,19 @@ fn worker_loop(shared: &Shared, id: usize, pin: bool) {
         };
         // A panicking task must not wedge the pool: catch it, finish the
         // epoch, and let the submitting caller re-raise.
-        // SAFETY: the job was installed by the `broadcast` call that is
-        // still blocked on this epoch, so `job.data` points at its live
-        // closure and `job.call` is the matching monomorphized trampoline.
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
-            (job.call)(job.data, id, &mut scratch)
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // Deterministic fault injection for the serve chaos suite: a
+            // worker dying mid-task (`failpoints` builds only). Inside the
+            // catch so it rides the normal panic-recovery path.
+            #[cfg(feature = "failpoints")]
+            if crate::util::failpoint::fire("pool-worker") {
+                panic!("failpoint: pool-worker");
+            }
+            // SAFETY: the job was installed by the `broadcast` call that is
+            // still blocked on this epoch, so `job.data` points at its live
+            // closure and `job.call` is the matching monomorphized
+            // trampoline.
+            unsafe { (job.call)(job.data, id, &mut scratch) }
         }));
         let mut st = shared.state.lock().unwrap();
         if let Err(p) = result {

@@ -4,6 +4,7 @@
 //! fit exactly within the unit square, as the paper does.
 
 use crate::complex::C64;
+use crate::util::error::Result;
 use crate::util::rng::Pcg64;
 
 /// Distribution of source points.
@@ -20,6 +21,42 @@ pub enum Distribution {
 }
 
 impl Distribution {
+    /// Parse a distribution by CLI/wire name (`uniform`, `normal`,
+    /// `layer`), validating its parameters. This is the boundary
+    /// constructor used by the CLI and the serve request decoder — prefer
+    /// it over building the enum directly from untrusted input.
+    pub fn from_name(name: &str, sigma: f64) -> Result<Distribution> {
+        let d = match name {
+            "uniform" => Distribution::Uniform,
+            "normal" => Distribution::Normal { sigma },
+            "layer" => Distribution::Layer { sigma },
+            other => crate::bail!("unknown distribution '{other}': expected uniform|normal|layer"),
+        };
+        d.validate()?;
+        Ok(d)
+    }
+
+    /// Reject parameters that would wedge or poison the sampler: the
+    /// normal/layer generators rejection-sample into the unit square, so a
+    /// non-finite or non-positive σ loops forever (NaN never satisfies the
+    /// containment test) and a huge σ accepts almost nothing.
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            Distribution::Uniform => Ok(()),
+            Distribution::Normal { sigma } | Distribution::Layer { sigma } => {
+                crate::ensure!(
+                    sigma.is_finite() && sigma > 0.0,
+                    "sigma must be finite and positive (got {sigma})"
+                );
+                crate::ensure!(
+                    sigma <= 100.0,
+                    "sigma {sigma} would reject almost every sample into [0,1]²; use sigma <= 100"
+                );
+                Ok(())
+            }
+        }
+    }
+
     pub fn name(&self) -> String {
         match self {
             Distribution::Uniform => "uniform".into(),
@@ -120,6 +157,24 @@ mod tests {
         let y_spread = pts.iter().filter(|p| (p.im - 0.5).abs() > 0.25).count();
         assert!(x_spread as f64 > 0.2 * 20_000.0, "x should be uniform");
         assert!((y_spread as f64) < 0.01 * 20_000.0, "y should be tight");
+    }
+
+    #[test]
+    fn from_name_parses_and_validates() {
+        assert_eq!(
+            Distribution::from_name("uniform", f64::NAN).unwrap(),
+            Distribution::Uniform
+        );
+        assert_eq!(
+            Distribution::from_name("normal", 0.1).unwrap(),
+            Distribution::Normal { sigma: 0.1 }
+        );
+        assert!(Distribution::from_name("gauss", 0.1).is_err());
+        // parameters that would wedge the rejection sampler are rejected
+        for bad in [f64::NAN, f64::INFINITY, 0.0, -1.0, 1e300] {
+            assert!(Distribution::from_name("normal", bad).is_err(), "{bad}");
+            assert!(Distribution::from_name("layer", bad).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -1,0 +1,272 @@
+//! End-to-end tests of the serve transport and the protocol error paths
+//! on the default build. Every test drives a full [`serve_lines`] session
+//! (reader + engine thread + reply sink) through an in-memory transport
+//! and audits the reply stream for the exactly-once invariant. The
+//! injected-panic scenarios need `--features failpoints` and live in
+//! `serve_chaos.rs`.
+
+use std::io::Cursor;
+use std::sync::Arc;
+
+use fmm2d::dispatch::{Dispatcher, Engine};
+use fmm2d::fmm::{self, CpuEngine, FmmOptions};
+use fmm2d::serve::{serve_lines, ServeOptions, ServeOutcome};
+use fmm2d::util::json::Json;
+use fmm2d::workload::Distribution;
+
+fn opts() -> ServeOptions {
+    ServeOptions {
+        fmm: FmmOptions {
+            threads: Some(2),
+            ..FmmOptions::default()
+        },
+        ..ServeOptions::default()
+    }
+}
+
+/// Run one full session over an in-memory transport and parse the reply
+/// stream.
+fn run_session(input: &str, opts: ServeOptions) -> (Vec<Json>, ServeOutcome) {
+    let mut out: Vec<u8> = Vec::new();
+    let outcome = serve_lines(Cursor::new(input.to_string()), &mut out, opts).unwrap();
+    let replies = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Json::parse(l).unwrap())
+        .collect();
+    (replies, outcome)
+}
+
+fn status_of(r: &Json) -> &str {
+    r.get("status").and_then(Json::as_str).unwrap()
+}
+
+fn id_of(r: &Json) -> Option<u64> {
+    match r.get("id") {
+        Some(Json::Null) | None => None,
+        Some(v) => v.as_f64().map(|x| x as u64),
+    }
+}
+
+fn potentials_of(r: &Json) -> Vec<(f64, f64)> {
+    match r.get("potentials") {
+        Some(Json::Arr(items)) => items
+            .iter()
+            .map(|it| match it {
+                Json::Arr(p) => (p[0].as_f64().unwrap(), p[1].as_f64().unwrap()),
+                other => panic!("bad potential entry {other:?}"),
+            })
+            .collect(),
+        other => panic!("reply carries no potentials: {other:?}"),
+    }
+}
+
+/// The daemon's potentials must be *bit-identical* to an offline
+/// `fmm::evaluate` of the same deterministic workload at the engine ×
+/// worker count the reply advertises — the same contract `fmm2d loadgen`
+/// gates on via digests, checked here value by value.
+#[test]
+fn replies_are_bitwise_identical_to_offline_evaluation() {
+    let input = "{\"id\":1,\"n\":500,\"seed\":7}\n{\"id\":2,\"n\":900,\"seed\":8}\n";
+    let (replies, outcome) = run_session(input, opts());
+    assert_eq!(replies.len(), 2, "{replies:?}");
+    assert!(!outcome.shutdown);
+    assert_eq!(outcome.stats.ok, 2);
+    for r in &replies {
+        assert_eq!(status_of(r), "ok");
+        let id = id_of(r).unwrap();
+        let workers = r.get("workers").and_then(Json::as_usize).unwrap();
+        let (n, seed) = if id == 1 { (500, 7) } else { (900, 8) };
+        let got = potentials_of(r);
+        assert_eq!(got.len(), n);
+        let (pts, gs) = fmm2d::harness::workload_for(Distribution::Uniform, n, seed);
+        let offline = fmm::evaluate(
+            &pts,
+            &gs,
+            &FmmOptions {
+                threads: Some(workers),
+                cpu_engine: CpuEngine::Barrier,
+                ..FmmOptions::default()
+            },
+        )
+        .unwrap();
+        for (i, (re, im)) in got.iter().enumerate() {
+            assert_eq!(re.to_bits(), offline.potentials[i].re.to_bits(), "id {id} re[{i}]");
+            assert_eq!(im.to_bits(), offline.potentials[i].im.to_bits(), "id {id} im[{i}]");
+        }
+    }
+}
+
+/// Hostile and malformed lines each get exactly one structured `error`
+/// reply — with the id salvaged whenever the line could still carry one —
+/// and the daemon keeps serving afterwards.
+#[test]
+fn malformed_lines_get_error_replies_and_service_continues() {
+    let input = concat!(
+        "this is not json\n",
+        "{\"id\":3,\"n\":1000\n",               // truncated — id unsalvageable
+        "{\"id\":4,\"bogus\":1,\"n\":500}\n",   // unknown field
+        "{\"id\":5,\"n\":\"x\"}\n",             // wrong type
+        "{\"id\":6,\"n\":100000000}\n",         // oversized n
+        "{\"id\":7,\"n\":500,\"theta\":1e999}\n", // non-finite smuggled via overflow
+        "{\"id\":8,\"n\":50,\"p\":0}\n",        // out-of-range p
+        "\n",                                   // blank lines are skipped
+        "{\"id\":9,\"n\":500,\"digest\":true}\n", // still alive?
+    );
+    let (replies, outcome) = run_session(input, opts());
+    assert_eq!(replies.len(), 8, "{replies:?}");
+    let errors: Vec<Option<u64>> = replies[..7].iter().map(id_of).collect();
+    for r in &replies[..7] {
+        assert_eq!(status_of(r), "error", "{r:?}");
+    }
+    // the first two lines cannot carry an id; the rest salvage theirs
+    assert_eq!(
+        errors,
+        [None, None, Some(4), Some(5), Some(6), Some(7), Some(8)]
+    );
+    assert_eq!(status_of(&replies[7]), "ok");
+    assert_eq!(id_of(&replies[7]), Some(9));
+    assert_eq!(outcome.stats.rejected, 7);
+    assert_eq!(outcome.stats.accepted, 1);
+}
+
+/// An inline request with non-finite coordinates is rejected at the
+/// boundary (satellite: input validation), not discovered as a poisoned
+/// tree later.
+#[test]
+fn non_finite_inline_points_are_rejected() {
+    let input = "{\"id\":1,\"points\":[[0.1,0.2],[0.3,1e999],[0.5,0.5],[0.7,0.7]],\
+                 \"gammas\":[[1,0],[1,0],[1,0],[1,0]]}\n";
+    let (replies, outcome) = run_session(input, opts());
+    assert_eq!(replies.len(), 1);
+    assert_eq!(status_of(&replies[0]), "error");
+    assert_eq!(id_of(&replies[0]), Some(1));
+    assert_eq!(outcome.stats.accepted, 0);
+}
+
+#[test]
+fn expired_deadline_is_answered_expired() {
+    let input = "{\"id\":11,\"n\":500,\"deadline_ms\":0}\n";
+    let (replies, outcome) = run_session(input, opts());
+    assert_eq!(replies.len(), 1);
+    assert_eq!(status_of(&replies[0]), "expired");
+    assert_eq!(id_of(&replies[0]), Some(11));
+    assert!(replies[0].get("waited_ms").and_then(Json::as_f64).is_some());
+    assert_eq!(outcome.stats.expired, 1);
+}
+
+/// Under a tiny admission bound every request is still answered exactly
+/// once: `ok` if it got in, structured `overloaded` with a backoff hint if
+/// it was shed. (Whether any are shed depends on reader/engine timing; the
+/// deterministic shed assertions live in the server unit tests.)
+#[test]
+fn overload_ledger_balances_exactly_once() {
+    let mut input = String::new();
+    for i in 0..10 {
+        input.push_str(&format!("{{\"id\":{i},\"n\":2000,\"digest\":true}}\n"));
+    }
+    let (replies, outcome) = run_session(
+        input.as_str(),
+        ServeOptions {
+            max_queue: 2,
+            ..opts()
+        },
+    );
+    assert_eq!(replies.len(), 10, "{replies:?}");
+    let mut ids: Vec<u64> = replies.iter().map(|r| id_of(r).unwrap()).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..10).collect::<Vec<_>>(), "each id exactly once");
+    for r in &replies {
+        match status_of(r) {
+            "ok" => {}
+            "overloaded" => {
+                assert!(r.get("retry_after_ms").and_then(Json::as_usize).unwrap() >= 10);
+            }
+            other => panic!("unexpected status {other}: {r:?}"),
+        }
+    }
+    assert_eq!(outcome.stats.accepted + outcome.stats.shed, 10);
+    assert_eq!(outcome.stats.answered(), outcome.stats.accepted);
+}
+
+/// `shutdown` drains the queue (everything accepted is still answered) and
+/// stops reading: lines after it are never processed.
+#[test]
+fn shutdown_drains_and_stops_reading() {
+    let input = "{\"id\":1,\"n\":500,\"digest\":true}\n\
+                 {\"kind\":\"shutdown\"}\n\
+                 {\"id\":2,\"n\":500,\"digest\":true}\n";
+    let (replies, outcome) = run_session(input, opts());
+    assert!(outcome.shutdown);
+    assert_eq!(replies.len(), 1, "{replies:?}");
+    assert_eq!(id_of(&replies[0]), Some(1));
+    assert_eq!(status_of(&replies[0]), "ok");
+    assert_eq!(outcome.stats.accepted, 1);
+}
+
+/// Oversized request lines are rejected before JSON parsing with a
+/// structured reply, not a hang or an unbounded allocation downstream.
+#[test]
+fn oversized_lines_are_rejected() {
+    let mut input = String::from("{\"pad\":\"");
+    input.push_str(&"x".repeat(9 << 20)); // > MAX_LINE_BYTES
+    input.push_str("\"}\n{\"id\":1,\"n\":500,\"digest\":true}\n");
+    let (replies, outcome) = run_session(&input, opts());
+    assert_eq!(replies.len(), 2, "{replies:?}");
+    assert_eq!(status_of(&replies[0]), "error");
+    assert!(replies[0]
+        .get("error")
+        .and_then(Json::as_str)
+        .unwrap()
+        .contains("exceeds"));
+    assert_eq!(status_of(&replies[1]), "ok");
+    assert_eq!(outcome.stats.rejected, 1);
+}
+
+/// Satellite: `--engine auto` without a usable calibration profile must
+/// not trust uncalibrated crossovers — the server resolves it to the
+/// pooled engine (and says so once on stderr).
+#[test]
+fn auto_engine_falls_back_to_pooled_without_calibration() {
+    let uncalibrated = Dispatcher {
+        fallback: true,
+        ..Dispatcher::default()
+    };
+    let (replies, _) = run_session(
+        "{\"id\":1,\"n\":500,\"digest\":true}\n",
+        ServeOptions {
+            engine: Engine::Auto,
+            dispatcher: Some(Arc::new(uncalibrated)),
+            ..opts()
+        },
+    );
+    assert_eq!(replies.len(), 1);
+    assert_eq!(status_of(&replies[0]), "ok");
+    assert_eq!(
+        replies[0].get("engine").and_then(Json::as_str),
+        Some("pooled")
+    );
+}
+
+/// A *calibrated* dispatcher keeps `auto` live: the reply advertises
+/// whatever CPU rung the cost model picked (never xla in serve).
+#[test]
+fn auto_engine_with_calibration_serves_on_a_cpu_rung() {
+    let calibrated = Dispatcher::default(); // fallback rates, but not flagged
+    let (replies, _) = run_session(
+        "{\"id\":1,\"n\":500,\"digest\":true}\n",
+        ServeOptions {
+            engine: Engine::Auto,
+            dispatcher: Some(Arc::new(calibrated)),
+            ..opts()
+        },
+    );
+    assert_eq!(replies.len(), 1);
+    assert_eq!(status_of(&replies[0]), "ok");
+    let engine = replies[0].get("engine").and_then(Json::as_str).unwrap();
+    assert!(
+        ["serial", "pooled", "taskgraph"].contains(&engine),
+        "unexpected engine {engine}"
+    );
+}

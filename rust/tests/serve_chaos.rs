@@ -1,0 +1,189 @@
+//! Chaos suite: the serve robustness layer under deterministic fault
+//! injection. Needs `--features failpoints`; without it the whole file
+//! compiles away (the default `cargo test` never arms anything).
+//!
+//! Every scenario holds [`failpoint::test_lock`] — the failpoint registry
+//! is process-global — and ends disarmed. The invariant under test is
+//! always the same: **no injected panic may cost a reply or the daemon**;
+//! every accepted request is answered exactly once, and every `ok` answer
+//! is bit-identical to an offline evaluation.
+
+#![cfg(feature = "failpoints")]
+
+use std::io::Cursor;
+
+use fmm2d::fmm::{self, CpuEngine, FmmOptions};
+use fmm2d::serve::loadgen::{self, LoadgenOptions};
+use fmm2d::serve::{digest64, serve_lines, ServeOptions, ServeOutcome};
+use fmm2d::util::failpoint;
+use fmm2d::util::json::Json;
+use fmm2d::workload::Distribution;
+
+fn opts() -> ServeOptions {
+    ServeOptions {
+        fmm: FmmOptions {
+            threads: Some(2),
+            ..FmmOptions::default()
+        },
+        ..ServeOptions::default()
+    }
+}
+
+fn run_session(input: &str, opts: ServeOptions) -> (Vec<Json>, ServeOutcome) {
+    let mut out: Vec<u8> = Vec::new();
+    let outcome = serve_lines(Cursor::new(input.to_string()), &mut out, opts).unwrap();
+    let replies = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Json::parse(l).unwrap())
+        .collect();
+    (replies, outcome)
+}
+
+fn digest_requests(k: u64, n: usize) -> String {
+    let mut s = String::new();
+    for i in 0..k {
+        s.push_str(&format!(
+            "{{\"id\":{i},\"n\":{n},\"seed\":{},\"digest\":true}}\n",
+            100 + i
+        ));
+    }
+    s
+}
+
+/// Check every `ok` reply's digest against a quiet offline evaluation at
+/// the advertised worker count (failpoints must already be disarmed).
+fn assert_digests_match(replies: &[Json], n: usize) {
+    for r in replies {
+        if r.get("status").and_then(Json::as_str) != Some("ok") {
+            continue;
+        }
+        let id = r.get("id").and_then(Json::as_usize).unwrap() as u64;
+        let workers = r.get("workers").and_then(Json::as_usize).unwrap();
+        let got = r.get("digest").and_then(Json::as_str).unwrap();
+        let (pts, gs) = fmm2d::harness::workload_for(Distribution::Uniform, n, 100 + id);
+        let offline = fmm::evaluate(
+            &pts,
+            &gs,
+            &FmmOptions {
+                threads: Some(workers),
+                cpu_engine: CpuEngine::Barrier,
+                ..FmmOptions::default()
+            },
+        )
+        .unwrap();
+        let want = format!("{:016x}", digest64(&offline.potentials));
+        assert_eq!(got, want, "digest mismatch for id {id} ({workers} workers)");
+    }
+}
+
+/// A panic in the serve dispatch path itself: the group is caught, the
+/// pool rebuilt, the group split and re-run a rung down — and every
+/// member still answers `ok` with a bit-correct digest.
+#[test]
+fn dispatch_panic_recovers_and_answers_everything() {
+    let _g = failpoint::test_lock();
+    failpoint::arm("dispatch=once:1").unwrap();
+    let (replies, outcome) = run_session(&digest_requests(6, 500), opts());
+    failpoint::disarm_all();
+
+    assert_eq!(replies.len(), 6, "{replies:?}");
+    for r in &replies {
+        assert_eq!(r.get("status").and_then(Json::as_str), Some("ok"), "{r:?}");
+    }
+    let st = outcome.stats;
+    assert_eq!(st.ok, 6);
+    assert!(st.recoveries >= 1, "{st:?}");
+    assert!(st.pool_rebuilds >= 1, "{st:?}");
+    assert!(st.degraded >= 1, "{st:?}");
+    assert_digests_match(&replies, 500);
+}
+
+/// A crash in the topology prologue (inside `fmm::evaluate`) is just as
+/// recoverable: the unwind crosses the group `catch_unwind`, not the
+/// process.
+#[test]
+fn topology_panic_is_isolated() {
+    let _g = failpoint::test_lock();
+    failpoint::arm("topology=once:1").unwrap();
+    let (replies, outcome) = run_session(&digest_requests(4, 500), opts());
+    failpoint::disarm_all();
+
+    assert_eq!(replies.len(), 4, "{replies:?}");
+    for r in &replies {
+        assert_eq!(r.get("status").and_then(Json::as_str), Some("ok"), "{r:?}");
+    }
+    assert!(outcome.stats.recoveries >= 1, "{:?}", outcome.stats);
+    assert_digests_match(&replies, 500);
+}
+
+/// A worker thread dying mid-task poisons the pooled evaluation; the
+/// server tears the pool down, rebuilds it, and the retry (serial rung,
+/// pool-free) completes every request.
+#[test]
+fn pool_worker_panic_rebuilds_the_pool() {
+    let _g = failpoint::test_lock();
+    failpoint::arm("pool-worker=once:3").unwrap();
+    let (replies, outcome) = run_session(&digest_requests(4, 900), opts());
+    failpoint::disarm_all();
+
+    assert_eq!(replies.len(), 4, "{replies:?}");
+    for r in &replies {
+        assert_eq!(r.get("status").and_then(Json::as_str), Some("ok"), "{r:?}");
+    }
+    let st = outcome.stats;
+    assert_eq!(st.ok, 4);
+    assert!(st.recoveries >= 1, "{st:?}");
+    assert!(st.pool_rebuilds >= 1, "{st:?}");
+    assert_digests_match(&replies, 900);
+}
+
+/// Transient reply-write failures are retried inside the sink: the reply
+/// stream stays complete and the retries are counted.
+#[test]
+fn write_failures_are_retried_not_lost() {
+    let _g = failpoint::test_lock();
+    failpoint::arm("write=every:2").unwrap();
+    let (replies, outcome) = run_session(&digest_requests(6, 500), opts());
+    failpoint::disarm_all();
+
+    assert_eq!(replies.len(), 6, "every reply line present: {replies:?}");
+    assert!(outcome.stats.write_retries >= 1, "{:?}", outcome.stats);
+    assert_digests_match(&replies, 500);
+}
+
+/// The full chaos gate, in miniature: every failpoint armed at once under
+/// sustained load with a saturating burst. The loadgen audit must come
+/// back clean — zero lost replies, zero duplicates, zero digest
+/// mismatches — and the server must have actually recovered (not merely
+/// never been hit).
+#[test]
+fn loadgen_gate_holds_with_every_failpoint_armed() {
+    let _g = failpoint::test_lock();
+    failpoint::disarm_all();
+    let opts = LoadgenOptions {
+        rps: 150.0,
+        duration_s: 0.4,
+        mix: vec![(300, 3), (900, 1)],
+        deadline_ms: 10_000,
+        burst: 30,
+        serve: ServeOptions {
+            fmm: FmmOptions {
+                threads: Some(2),
+                ..FmmOptions::default()
+            },
+            max_queue: 64,
+            ..ServeOptions::default()
+        },
+        faults: Some(
+            "topology=every:11,dispatch=every:7,pool-worker=every:173,write=every:5".to_string(),
+        ),
+        ..LoadgenOptions::default()
+    };
+    let report = loadgen::run(&opts).unwrap();
+    report.gate().unwrap_or_else(|e| panic!("chaos gate failed: {e:#}\n{}", report.render()));
+    let st = report.server.expect("in-process run records server stats");
+    assert!(st.recoveries >= 1, "no failpoint ever fired:\n{}", report.render());
+    assert!(report.ok >= 1, "{}", report.render());
+}

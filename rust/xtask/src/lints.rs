@@ -52,8 +52,15 @@ pub struct Finding {
 const SPAWN_ALLOWLIST: [&str; 2] = ["rust/src/util/pool.rs", "rust/src/util/threadpool.rs"];
 /// Files allowed to contain `unsafe` at all.
 const UNSAFE_ALLOWLIST: [&str; 1] = ["rust/src/util/pool.rs"];
-/// Hot-path directories where panicking calls are denied.
-const NO_PANIC_DIRS: [&str; 3] = ["rust/src/fmm/", "rust/src/topology/", "rust/src/dispatch/"];
+/// Hot-path directories where panicking calls are denied. `serve/` is held
+/// to the same bar: a panic in the daemon is a dropped reply, so its only
+/// permitted panics are the explicitly waivered fault-injection sites.
+const NO_PANIC_DIRS: [&str; 4] = [
+    "rust/src/fmm/",
+    "rust/src/topology/",
+    "rust/src/dispatch/",
+    "rust/src/serve/",
+];
 /// Parallel-engine files where iterator float reductions are denied.
 const FLOAT_REDUCTION_FILES: [&str; 7] = [
     "rust/src/fmm/parallel.rs",
@@ -430,6 +437,19 @@ mod tests {
         let src = include_str!("../fixtures/no_panic/bad.rs");
         let f = lint_source("rust/src/harness/fixture.rs", &lex(src));
         assert!(!lints_of(&f).contains(&"no-panic"), "{f:?}");
+    }
+
+    #[test]
+    fn no_panic_applies_to_serve() {
+        // the serve daemon is a no-panic zone like the engine hot paths:
+        // an unwound reply is a lost reply
+        let src = include_str!("../fixtures/no_panic/bad.rs");
+        let f = lint_source("rust/src/serve/fixture.rs", &lex(src));
+        assert_eq!(
+            f.iter().filter(|f| f.lint == "no-panic").count(),
+            3,
+            "{f:?}"
+        );
     }
 
     // -- float-reduction --------------------------------------------------
