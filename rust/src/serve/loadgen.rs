@@ -265,9 +265,12 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
     }
 
     let t0 = Instant::now();
-    let replies = match &opts.connect {
-        Some(addr) => drive_tcp(addr, opts, &pattern, total)?,
-        None => drive_in_process(opts, &pattern, total)?,
+    let (replies, server_stats) = match &opts.connect {
+        Some(addr) => (drive_tcp(addr, opts, &pattern, total)?, None),
+        None => {
+            let (replies, stats) = drive_in_process(opts, &pattern, total)?;
+            (replies, Some(stats))
+        }
     };
     let wall_s = t0.elapsed().as_secs_f64();
 
@@ -276,17 +279,20 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
     // evaluations.
     crate::util::failpoint::disarm_all();
 
-    audit(opts, &pattern, total, replies, wall_s)
+    let mut report = audit(opts, &pattern, total, replies, wall_s)?;
+    report.server = server_stats;
+    Ok(report)
 }
 
 /// In-process mode: one [`Server`], paced submissions from this thread,
 /// the engine loop on a scoped helper. Returns every reply (including
-/// shed/overloaded ones answered at submit time).
+/// shed/overloaded ones answered at submit time) plus the server's final
+/// counter snapshot for [`LoadgenReport::server`].
 fn drive_in_process(
     opts: &LoadgenOptions,
     pattern: &[usize],
     total: u64,
-) -> Result<Vec<Json>> {
+) -> Result<(Vec<Json>, ServeStats)> {
     let server = Server::new(opts.serve.clone())?;
     let replies: Mutex<Vec<Json>> = Mutex::new(Vec::new());
     let push = |j: &Json| {
@@ -325,7 +331,11 @@ fn drive_in_process(
             .map_err(|_| crate::anyhow!("loadgen engine thread panicked"))
     })?;
 
-    Ok(replies.into_inner().unwrap_or_else(|p| p.into_inner()))
+    let stats = server.stats();
+    Ok((
+        replies.into_inner().unwrap_or_else(|p| p.into_inner()),
+        stats,
+    ))
 }
 
 /// `--connect` mode: the same paced stream over a TCP connection; replies
@@ -601,5 +611,10 @@ mod tests {
         report.gate().unwrap();
         assert_eq!(report.ok + report.errors + report.expired + report.shed, report.sent);
         assert!(report.digest_checked >= report.ok.min(1));
+        // In-process runs must surface the server-side ledger, and it has
+        // to agree with the client-side one.
+        let st = report.server.expect("in-process run records server stats");
+        assert_eq!(st.ok, report.ok);
+        assert_eq!(st.answered() + st.shed, report.sent);
     }
 }

@@ -41,7 +41,6 @@ pub use server::{ServeOptions, ServeStats, Server};
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::util::error::{Context, Result};
@@ -61,17 +60,20 @@ pub struct ServeOutcome {
 /// shed replies) and the engine thread (evaluation replies). One reply is
 /// one line; a transient write failure (failpoint `write`) is retried a
 /// bounded number of times before the attempt proceeds anyway — the
-/// daemon never dies in its reply path.
-struct ReplySink<W: Write> {
+/// daemon never dies in its reply path. Retries bump the server's
+/// `write_retries` counter directly, so [`Server::stats`] is live during
+/// the session (single source of truth).
+struct ReplySink<'s, W: Write> {
     out: Mutex<W>,
-    retries: AtomicU64,
+    #[cfg_attr(not(feature = "failpoints"), allow(dead_code))]
+    server: &'s Server,
 }
 
-impl<W: Write> ReplySink<W> {
-    fn new(out: W) -> Self {
+impl<'s, W: Write> ReplySink<'s, W> {
+    fn new(out: W, server: &'s Server) -> Self {
         Self {
             out: Mutex::new(out),
-            retries: AtomicU64::new(0),
+            server,
         }
     }
 
@@ -86,7 +88,7 @@ impl<W: Write> ReplySink<W> {
             let mut attempts = 0;
             while attempts < 2 && crate::util::failpoint::fire("write") {
                 attempts += 1;
-                self.retries.fetch_add(1, Ordering::Relaxed);
+                self.server.note_write_retry();
             }
         }
         // A genuinely broken pipe (client went away) must not kill the
@@ -94,14 +96,64 @@ impl<W: Write> ReplySink<W> {
         let _ = writeln!(out, "{line}");
         let _ = out.flush();
     }
+}
 
-    fn into_inner(self) -> (W, u64) {
-        let retries = self.retries.load(Ordering::Relaxed);
-        (
-            self.out.into_inner().unwrap_or_else(|p| p.into_inner()),
-            retries,
-        )
+/// Outcome of one [`read_line_bounded`] call.
+enum LineRead {
+    /// EOF (or a dead transport) with no pending bytes.
+    Eof,
+    /// `buf` holds one line, trailing newline stripped.
+    Line,
+    /// The line exceeded the cap; it was consumed and discarded without
+    /// ever being buffered in full.
+    Oversized,
+}
+
+/// Read one `\n`-terminated line, buffering at most `cap` bytes. Unlike
+/// `BufRead::read_line`, an over-long line is *streamed past* — chunks are
+/// consumed and dropped until its newline (or EOF) — so a hostile client
+/// sending gigabytes with no newline costs a bounded buffer, not memory
+/// exhaustion. This is what makes the [`protocol::MAX_LINE_BYTES`]
+/// contract real at the transport layer.
+fn read_line_bounded<R: BufRead>(
+    input: &mut R,
+    buf: &mut Vec<u8>,
+    cap: usize,
+) -> std::io::Result<LineRead> {
+    buf.clear();
+    let mut oversized = false;
+    loop {
+        let chunk = input.fill_buf()?;
+        if chunk.is_empty() {
+            // EOF: flush whatever we have as a final unterminated line.
+            if buf.is_empty() && !oversized {
+                return Ok(LineRead::Eof);
+            }
+            break;
+        }
+        let (seg, found_nl) = match chunk.iter().position(|&b| b == b'\n') {
+            Some(i) => (&chunk[..i], true),
+            None => (chunk, false),
+        };
+        let consume = seg.len() + usize::from(found_nl);
+        if !oversized {
+            if buf.len() + seg.len() > cap {
+                oversized = true;
+                buf.clear();
+            } else {
+                buf.extend_from_slice(seg);
+            }
+        }
+        input.consume(consume);
+        if found_nl {
+            break;
+        }
     }
+    Ok(if oversized {
+        LineRead::Oversized
+    } else {
+        LineRead::Line
+    })
 }
 
 /// Serve one session: read requests line by line from `input`, write one
@@ -115,7 +167,7 @@ pub fn serve_lines<R: BufRead, W: Write + Send>(
 ) -> Result<ServeOutcome> {
     let server = Server::new(opts)?;
     let limits = server.limits();
-    let sink = ReplySink::new(output);
+    let sink = ReplySink::new(output, &server);
     let mut shutdown = false;
 
     // xtask: allow(no-spawn) — the daemon's one long-lived engine thread;
@@ -123,26 +175,28 @@ pub fn serve_lines<R: BufRead, W: Write + Send>(
     // joined before this function returns (same idiom as run_overlapped)
     std::thread::scope(|s| {
         let engine = s.spawn(|| server.engine_loop(&|reply: &Json| sink.write(reply)));
-        let mut line = String::new();
+        let mut buf = Vec::new();
         loop {
-            line.clear();
-            match input.read_line(&mut line) {
-                Ok(0) | Err(_) => break, // EOF or dead transport: drain and exit
-                Ok(_) => {}
+            match read_line_bounded(&mut input, &mut buf, protocol::MAX_LINE_BYTES) {
+                Ok(LineRead::Eof) | Err(_) => break, // EOF or dead transport: drain and exit
+                Ok(LineRead::Oversized) => {
+                    server.note_rejected();
+                    sink.write(&protocol::reply_error(
+                        None,
+                        &format!(
+                            "request line exceeds {} bytes; send points in batches",
+                            protocol::MAX_LINE_BYTES
+                        ),
+                    ));
+                    continue;
+                }
+                Ok(LineRead::Line) => {}
             }
+            // Invalid UTF-8 degrades to replacement characters and fails
+            // strict decoding below — one structured reply either way.
+            let line = String::from_utf8_lossy(&buf);
             let trimmed = line.trim();
             if trimmed.is_empty() {
-                continue;
-            }
-            if trimmed.len() > protocol::MAX_LINE_BYTES {
-                server.note_rejected();
-                sink.write(&protocol::reply_error(
-                    None,
-                    &format!(
-                        "request line exceeds {} bytes; send points in batches",
-                        protocol::MAX_LINE_BYTES
-                    ),
-                ));
                 continue;
             }
             match protocol::decode(trimmed, &limits) {
@@ -170,9 +224,7 @@ pub fn serve_lines<R: BufRead, W: Write + Send>(
             .map_err(|_| crate::anyhow!("serve engine thread panicked"))
     })?;
 
-    let mut stats = server.stats();
-    let (_out, retries) = sink.into_inner();
-    stats.write_retries = retries;
+    let stats = server.stats();
     Ok(ServeOutcome { stats, shutdown })
 }
 
@@ -220,4 +272,58 @@ pub fn run_tcp(addr: &str, opts: ServeOptions) -> Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn read_all(input: &[u8], cap: usize) -> Vec<Result<String, &'static str>> {
+        let mut r = std::io::BufReader::with_capacity(16, input);
+        let mut buf = Vec::new();
+        let mut lines = Vec::new();
+        loop {
+            match read_line_bounded(&mut r, &mut buf, cap).unwrap() {
+                LineRead::Eof => break,
+                LineRead::Line => lines.push(Ok(String::from_utf8(buf.clone()).unwrap())),
+                LineRead::Oversized => lines.push(Err("oversized")),
+            }
+        }
+        lines
+    }
+
+    #[test]
+    fn bounded_reader_splits_lines_and_caps_length() {
+        assert_eq!(
+            read_all(b"ab\ncd\n", 10),
+            vec![Ok("ab".to_string()), Ok("cd".to_string())]
+        );
+        // final line without a trailing newline still arrives
+        assert_eq!(read_all(b"ab", 10), vec![Ok("ab".to_string())]);
+        assert!(read_all(b"", 10).is_empty());
+        // empty lines pass through (the session loop skips them)
+        assert_eq!(
+            read_all(b"\nx\n", 10),
+            vec![Ok(String::new()), Ok("x".to_string())]
+        );
+    }
+
+    #[test]
+    fn bounded_reader_discards_oversized_lines_without_buffering() {
+        // An over-cap line — far larger than the reader's 16-byte internal
+        // buffer, so it spans many fill_buf chunks — is reported oversized
+        // and fully consumed; the next line decodes normally.
+        let mut input = vec![b'x'; 100];
+        input.extend_from_slice(b"\nok\n");
+        assert_eq!(
+            read_all(&input, 8),
+            vec![Err("oversized"), Ok("ok".to_string())]
+        );
+        // oversized with no newline before EOF: still reported, then EOF
+        assert_eq!(read_all(&[b'y'; 100], 8), vec![Err("oversized")]);
+        // exactly at the cap is fine
+        assert_eq!(read_all(b"12345678\n", 8), vec![Ok("12345678".to_string())]);
+        // one past the cap is not
+        assert_eq!(read_all(b"123456789\n", 8), vec![Err("oversized")]);
+    }
 }

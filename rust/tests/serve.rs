@@ -224,6 +224,30 @@ fn oversized_lines_are_rejected() {
     assert_eq!(outcome.stats.rejected, 1);
 }
 
+/// A hostile client streaming one giant line with *no newline at all*
+/// (the memory-exhaustion shape) is rejected with the same structured
+/// reply: the transport discards past the cap instead of buffering.
+#[test]
+fn unterminated_oversized_line_is_rejected() {
+    let mut input = String::from("{\"id\":1,\"n\":500,\"digest\":true}\n{\"pad\":\"");
+    input.push_str(&"x".repeat(9 << 20)); // > MAX_LINE_BYTES, never terminated
+    let (replies, outcome) = run_session(&input, opts());
+    assert_eq!(replies.len(), 2, "{replies:?}");
+    // The rejection comes from the reader thread, the `ok` from the engine
+    // thread — order is not deterministic.
+    let mut statuses: Vec<&str> = replies.iter().map(status_of).collect();
+    statuses.sort_unstable();
+    assert_eq!(statuses, ["error", "ok"]);
+    let rejection = replies.iter().find(|&r| status_of(r) == "error").unwrap();
+    assert!(rejection
+        .get("error")
+        .and_then(Json::as_str)
+        .unwrap()
+        .contains("exceeds"));
+    assert_eq!(outcome.stats.rejected, 1);
+    assert_eq!(outcome.stats.ok, 1);
+}
+
 /// Satellite: `--engine auto` without a usable calibration profile must
 /// not trust uncalibrated crossovers — the server resolves it to the
 /// pooled engine (and says so once on stderr).
