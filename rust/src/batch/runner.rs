@@ -266,7 +266,9 @@ pub fn run(problems: &[BatchProblem], opts: &BatchOptions) -> Result<BatchOutput
                 .map(|&i| (&trees[i].0, &trees[i].1))
                 .collect();
             let t0 = Instant::now();
+            let sp = crate::obs::span("batch", "compute").arg("members", members.len() as f64);
             let results = dispatch_cpu(&members, opts, pool.as_deref(), engine);
+            drop(sp);
             group_measured[gi] = t0.elapsed().as_secs_f64();
             stats.dispatches += 1;
             for (&i, (phi_leaf, t, c)) in group.members.iter().zip(results) {
@@ -290,6 +292,7 @@ pub fn run(problems: &[BatchProblem], opts: &BatchOptions) -> Result<BatchOutput
     if let Some(r) = &mut report {
         for (d, m) in r.decisions.iter_mut().zip(&group_measured) {
             d.measured_s = Some(*m);
+            d.record_drift();
         }
     }
     for t in &times_per_problem {
@@ -372,6 +375,7 @@ fn build_problem_topology(
     let levels = fmm_opts.cfg.levels_for(pr.points.len());
     let mut topo_opts = TopologyOptions::parallel(fmm_opts.cfg.theta, threads);
     topo_opts.pool = pool;
+    let _sp = crate::obs::span("batch", "prologue").arg("n", pr.points.len() as f64);
     let topo = topology::build(&pr.points, &pr.gammas, levels, &topo_opts)?;
     let mut t = PhaseTimes::default();
     t.0[Phase::Sort as usize] = topo.sort_s;
@@ -435,6 +439,7 @@ fn run_taskgraph(
                 let b = built[i].lock().unwrap().take();
                 match b {
                     Some(Ok((tree, topo_t))) => {
+                        let _sp = crate::obs::span("batch", "compute").arg("members", 1.0);
                         let (phi, t, c) = fmm::evaluate_on_tree_serial(&tree.0, &tree.1, fmm_opts);
                         let mut times = topo_t;
                         times.add(&t);
@@ -584,7 +589,9 @@ fn run_overlapped(
                 })
                 .collect();
             let t0 = Instant::now();
+            let sp = crate::obs::span("batch", "compute").arg("members", members.len() as f64);
             let results = dispatch_cpu(&members, opts, pool, BatchEngine::Parallel);
+            drop(sp);
             group_measured[gi] = t0.elapsed().as_secs_f64();
             stats.dispatches += 1;
             for (&i, (phi_leaf, t, c)) in group.members.iter().zip(results) {

@@ -115,6 +115,7 @@ impl Connectivity {
     /// children of the strong list of `b`'s parent (§2) — the recursion
     /// starts from the root being strongly coupled to itself.
     pub fn build(pyr: &Pyramid, theta: f64) -> Self {
+        let _sp = crate::obs::span("topo", "classify");
         let levels = pyr.levels;
         let mut checks = 0usize;
 
@@ -350,6 +351,7 @@ impl Connectivity {
         if threads <= 1 {
             return Self::build(pyr, theta);
         }
+        let _sp = crate::obs::span("topo", "classify").arg("threads", threads as f64);
         let levels = pyr.levels;
         let mut checks = 0usize;
 

@@ -125,6 +125,53 @@ pub struct Decision {
     pub measured_s: Option<f64>,
 }
 
+impl Decision {
+    /// Engine-family key of the choice, without the worker count — the
+    /// metric/trace label (`dispatch.drift.<key>`).
+    pub fn engine_key(&self) -> &'static str {
+        match self.choice {
+            EngineChoice::Serial => "serial",
+            EngineChoice::Pooled { .. } => "pooled",
+            EngineChoice::TaskGraph { .. } => "taskgraph",
+            EngineChoice::Xla => "xla",
+        }
+    }
+
+    /// Relative prediction error `measured/predicted − 1` (0 while
+    /// unmeasured or when the prediction degenerated to zero).
+    pub fn drift(&self) -> f64 {
+        match self.measured_s {
+            Some(m) if self.predicted_s > 0.0 => m / self.predicted_s - 1.0,
+            _ => 0.0,
+        }
+    }
+
+    /// Self-observability of the dispatcher (DESIGN.md §12): record this
+    /// decision's predicted-vs-measured outcome as a `dispatch` trace
+    /// event and fold it into the rolling per-engine drift gauge
+    /// `dispatch.drift.<engine>` of the global metrics registry. Call
+    /// after `measured_s` is filled; a no-op before that.
+    pub fn record_drift(&self) {
+        let Some(measured) = self.measured_s else {
+            return;
+        };
+        let drift = self.drift();
+        crate::obs::event(
+            "dispatch",
+            self.engine_key(),
+            &[
+                ("predicted_s", self.predicted_s),
+                ("measured_s", measured),
+                ("drift", drift),
+                ("members", self.members as f64),
+            ],
+        );
+        crate::obs::metrics::global()
+            .gauge(&format!("dispatch.drift.{}", self.engine_key()))
+            .ewma(drift, 0.2);
+    }
+}
+
 /// The decisions of one `--engine auto` invocation, rendered by the CLI.
 #[derive(Clone, Debug, Default)]
 pub struct DispatchReport {
@@ -256,17 +303,21 @@ impl Dispatcher {
                 static WARN_ONCE: std::sync::Once = std::sync::Once::new();
                 WARN_ONCE.call_once(|| {
                     if candidate.exists() {
-                        eprintln!(
-                            "warning: ignoring dispatch profile {}: {e:#}; using built-in \
-                             fallback rates (re-run `fmm2d calibrate`)",
-                            candidate.display()
+                        crate::obs::log::warn(
+                            "dispatch",
+                            "ignoring dispatch profile; using built-in fallback rates \
+                             (re-run `fmm2d calibrate`)",
+                            &[
+                                ("path", candidate.display().to_string()),
+                                ("error", format!("{e:#}")),
+                            ],
                         );
                     } else {
-                        eprintln!(
-                            "warning: no dispatch profile at {}; using built-in fallback \
-                             rates (run `fmm2d calibrate` to enable measured `auto` \
-                             decisions)",
-                            candidate.display()
+                        crate::obs::log::warn(
+                            "dispatch",
+                            "no dispatch profile; using built-in fallback rates (run \
+                             `fmm2d calibrate` to enable measured `auto` decisions)",
+                            &[("path", candidate.display().to_string())],
                         );
                     }
                 });
@@ -521,6 +572,7 @@ pub fn execute_cpu_choice(
     let t = Instant::now();
     let out = fmm::evaluate(points, gammas, &run_opts)?;
     decision.measured_s = Some(t.elapsed().as_secs_f64());
+    decision.record_drift();
     Ok(out)
 }
 

@@ -538,6 +538,7 @@ pub fn evaluate_on_tree_serial(
 
     // ---- P2M: leaf multipole expansions -------------------------------
     let t = Instant::now();
+    let sp = crate::obs::span("phase", "P2M").arg("leaves", nl as f64);
     {
         let centers = pyr.centers(levels);
         for b in 0..nl {
@@ -554,10 +555,12 @@ pub fn evaluate_on_tree_serial(
         }
         counts.p2m_particles = pyr.particles.len();
     }
+    drop(sp);
     times.0[Phase::P2M as usize] = t.elapsed().as_secs_f64();
 
     // ---- M2M: upward pass ---------------------------------------------
     let t = Instant::now();
+    let sp = crate::obs::span("phase", "M2M");
     counts.m2m_per_level = vec![0; levels + 1];
     for l in (1..=levels).rev() {
         let (parents, children) = {
@@ -582,6 +585,7 @@ pub fn evaluate_on_tree_serial(
             counts.m2m_per_level[l] += 1;
         }
     }
+    drop(sp);
     times.0[Phase::M2M as usize] = t.elapsed().as_secs_f64();
 
     // ---- M2L: the downward pass's far-field input ----------------------
@@ -591,6 +595,7 @@ pub fn evaluate_on_tree_serial(
     // §Perf); the general kernel keeps the paper-style recurrence, whose
     // a_0 terms the matrix path omits.
     let t = Instant::now();
+    let sp = crate::obs::span("phase", "M2L");
     counts.m2l_per_level = vec![0; levels + 1];
     let m2l_op = (opts.kernel == Kernel::Harmonic).then(|| M2lOperator::new(p));
     let mut m2l_scratch = M2lScratch::default();
@@ -632,10 +637,12 @@ pub fn evaluate_on_tree_serial(
             }
         }
     }
+    drop(sp);
     times.0[Phase::M2L as usize] = t.elapsed().as_secs_f64();
 
     // ---- L2L: push local expansions down -------------------------------
     let t = Instant::now();
+    let sp = crate::obs::span("phase", "L2L");
     counts.l2l_per_level = vec![0; levels + 1];
     for l in 1..levels {
         let (parents, children) = {
@@ -653,10 +660,12 @@ pub fn evaluate_on_tree_serial(
             counts.l2l_per_level[l + 1] += 1;
         }
     }
+    drop(sp);
     times.0[Phase::L2L as usize] = t.elapsed().as_secs_f64();
 
     // ---- L2P (+ M2P): far-field potential at the particles -------------
     let t = Instant::now();
+    let sp = crate::obs::span("phase", "L2P");
     let mut phi = vec![ZERO; pyr.particles.len()];
     {
         let centers = pyr.centers(levels);
@@ -678,6 +687,7 @@ pub fn evaluate_on_tree_serial(
             }
         }
     }
+    drop(sp);
     times.0[Phase::L2P as usize] = t.elapsed().as_secs_f64();
 
     // ---- P2P: near field ------------------------------------------------
@@ -695,6 +705,7 @@ pub fn evaluate_on_tree_serial(
     // `work_counts_consistent`), `p2p_pairs` counts kernel evaluations of
     // the chosen formulation.
     let t = Instant::now();
+    let sp = crate::obs::span("phase", "P2P");
     counts.p2p_src_per_box = vec![0; nl];
     let tiles = crate::tiles::LeafTiles::build(pyr);
     let symmetric = opts.symmetric_p2p && opts.kernel == Kernel::Harmonic;
@@ -728,6 +739,7 @@ pub fn evaluate_on_tree_serial(
         // directed formulation (the GPU layout, §4.3)
         parallel::p2p_directed_range(0..nl, &mut phi, pyr, con, &tiles, &pos, &gam, opts.kernel);
     }
+    drop(sp);
     times.0[Phase::P2P as usize] = t.elapsed().as_secs_f64();
 
     (phi, times, counts)

@@ -420,6 +420,7 @@ pub fn evaluate_on_tree_pool(
 
     // ---- P2M: leaf multipole expansions, sharded over leaf ranges ------
     let t = Instant::now();
+    let sp = crate::obs::span("phase", "P2M").arg("workers", nt as f64);
     {
         let centers = pyr.centers(levels);
         let rs = ranges(nl, nt);
@@ -427,10 +428,12 @@ pub fn evaluate_on_tree_pool(
             p2m_range(r, chunk, pyr, &centers, pos, gam, opts.kernel, stride);
         });
     }
+    drop(sp);
     times.0[Phase::P2M as usize] = t.elapsed().as_secs_f64();
 
     // ---- M2M: upward pass, sharded over *parent* ranges per level ------
     let t = Instant::now();
+    let sp = crate::obs::span("phase", "M2M");
     for l in (1..=levels).rev() {
         let (parents, children) = {
             // split-borrow the two levels
@@ -453,10 +456,12 @@ pub fn evaluate_on_tree_pool(
             );
         });
     }
+    drop(sp);
     times.0[Phase::M2M as usize] = t.elapsed().as_secs_f64();
 
     // ---- M2L (+ P2L): sharded over destination-box ranges per level ----
     let t = Instant::now();
+    let sp = crate::obs::span("phase", "M2L");
     let m2l_op = (opts.kernel == Kernel::Harmonic).then(|| M2lOperator::new(p));
     for l in 1..=levels {
         let nb = boxes_at_level(l);
@@ -487,10 +492,12 @@ pub fn evaluate_on_tree_pool(
             p2l_shortcut_range(r, chunk, pyr, con, &centers, pos, gam, opts.kernel, stride);
         });
     }
+    drop(sp);
     times.0[Phase::M2L as usize] = t.elapsed().as_secs_f64();
 
     // ---- L2L: push local expansions down, sharded over child ranges ----
     let t = Instant::now();
+    let sp = crate::obs::span("phase", "L2L");
     for l in 1..levels {
         let (parents, children) = {
             let (lo, hi) = local.levels.split_at_mut(l + 1);
@@ -512,11 +519,13 @@ pub fn evaluate_on_tree_pool(
             );
         });
     }
+    drop(sp);
     times.0[Phase::L2L as usize] = t.elapsed().as_secs_f64();
 
     // ---- L2P (+ M2P): sharded over leaf ranges; each task owns the
     // contiguous particle slice of its boxes --------------------------
     let t = Instant::now();
+    let sp = crate::obs::span("phase", "L2P");
     let mut phi = vec![ZERO; n];
     {
         let centers_v = pyr.centers(levels);
@@ -534,10 +543,12 @@ pub fn evaluate_on_tree_pool(
             l2p_range(r, chunk, pyr, con, centers, mlev, llev, pos, stride);
         });
     }
+    drop(sp);
     times.0[Phase::L2P as usize] = t.elapsed().as_secs_f64();
 
     // ---- P2P: near field -----------------------------------------------
     let t = Instant::now();
+    let sp = crate::obs::span("phase", "P2P");
     // padded SoA leaf tiles (DESIGN.md §10), shared read-only by all tasks
     let tiles_v = LeafTiles::build(pyr);
     let tiles = &tiles_v;
@@ -600,6 +611,7 @@ pub fn evaluate_on_tree_pool(
             p2p_directed_range(r, chunk, pyr, con, tiles, pos, gam, opts.kernel);
         });
     }
+    drop(sp);
     times.0[Phase::P2P as usize] = t.elapsed().as_secs_f64();
 
     (phi, times, counts)

@@ -51,7 +51,7 @@ use super::parallel::{
     l2l_range, l2p_range, l2p_weights, m2l_range, m2l_weights, m2m_range, p2l_shortcut_range,
     p2m_range, p2p_directed_range, p2p_symmetric_range, p2p_symmetric_weights,
 };
-use super::{CoeffPyramid, FmmOptions, Phase, PhaseTimes, WorkCounts, N_PHASES};
+use super::{CoeffPyramid, FmmOptions, Phase, PhaseTimes, WorkCounts, N_PHASES, PHASE_NAMES};
 use crate::complex::{C64, ZERO};
 use crate::connectivity::Connectivity;
 use crate::expansion::matrices::M2lOperator;
@@ -70,7 +70,9 @@ fn timed<'a>(
 ) -> impl FnOnce(&mut WorkerScratch) + Send + 'a {
     move |ws| {
         let t = Instant::now();
+        let sp = crate::obs::span("task", PHASE_NAMES[ph as usize]);
         f(ws);
+        drop(sp);
         let dt = t.elapsed().as_secs_f64();
         if let Ok(mut g) = secs.lock() {
             g[ph as usize] += dt;

@@ -799,11 +799,27 @@ pub fn pool_bench(o: &HarnessOpts) -> Vec<SeriesTable> {
             let mut tg_total = f64::INFINITY;
             let mut tg_overlap = 0.0;
             for _ in 0..reps {
+                // With the recorder on, mean busy workers comes from the
+                // per-task spans instead of OverlapStats' internal sums —
+                // the same clock the Chrome trace shows, so the column
+                // matches what Perfetto renders. Each rep drains the ring
+                // first so the busy sum covers exactly this run (the
+                // exported pool-bench trace keeps the other lanes' spans).
+                let tracing = crate::obs::enabled();
+                if tracing {
+                    let _ = crate::obs::drain();
+                }
                 let (_, _, _, stats) =
                     evaluate_on_tree_taskgraph_stats(pyr, con, &opts, &pool, None);
+                let overlap = if tracing && stats.wall_s > 0.0 {
+                    let tr = crate::obs::drain();
+                    crate::obs::busy_seconds(&tr.spans, "task") / stats.wall_s
+                } else {
+                    stats.ratio()
+                };
                 if stats.wall_s < tg_total {
                     tg_total = stats.wall_s;
-                    tg_overlap = stats.ratio();
+                    tg_overlap = overlap;
                 }
             }
             let problem = crate::dispatch::Problem::from_config(&cfg, n);

@@ -82,7 +82,7 @@ impl SeriesTable {
         let _ = std::fs::create_dir_all("results");
         let path = format!("results/{name}.json");
         if std::fs::write(&path, self.to_json().to_string()).is_ok() {
-            eprintln!("[saved {path}]");
+            crate::obs::log::info("harness", "saved results", &[("path", path)]);
         }
     }
 }

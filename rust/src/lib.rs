@@ -41,6 +41,10 @@
 //!   fault-injection harness plus load generator (`fmm2d loadgen`)
 //!   ([`serve`], [`util::failpoint`], behind the non-default `failpoints`
 //!   feature for the chaos sites);
+//! * the **flight recorder** — zero-overhead-when-off span tracing across
+//!   every engine, scheduler, batch and serve layer, exported as Chrome
+//!   trace-event JSON (`--trace`, `fmm2d trace-report`), plus the serve
+//!   metrics registry and the leveled structured logger ([`obs`]);
 //! * the **evaluation harness** regenerating every table and figure of the
 //!   paper ([`harness`], [`bench`], [`workload`]).
 //!
@@ -62,6 +66,7 @@ pub mod fmm;
 pub mod geometry;
 pub mod gpusim;
 pub mod harness;
+pub mod obs;
 pub mod packing;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

@@ -107,6 +107,22 @@ Serving & load generation (DESIGN.md §11):
                 G --max-queue Q --max-n N] [--quick: CI smoke preset]
                 [--connect ADDR: drive a remote daemon instead of an
                 in-process one] [--faults SPEC] [--no-digest-check]
+                [--metrics: fetch the daemon's metric registry via the
+                {\"op\":\"stats\"} wire request and reconcile it against the
+                client-side exactly-once ledger]
+
+Observability (DESIGN.md §12; flags accepted by every subcommand):
+  --trace FILE  arm the flight recorder for this invocation and write a
+                Chrome trace-event JSON timeline (load in Perfetto or
+                chrome://tracing): per-phase spans, task-graph tasks,
+                pool-worker occupancy, batch groups, serve lifecycle,
+                dispatch predicted-vs-measured drift
+  --log-level L stderr verbosity: error|warn|info|debug (default info);
+                diagnostics are structured key=value lines
+  trace-report FILE
+                summarize any --trace file: per-phase busy/wall, worker
+                occupancy, task-graph critical path, serve and dispatch
+                tallies
 
 The default engine is `parallel` with all available cores; --threads T caps
 the worker count (T=1 falls back to the serial reference driver). Multicore
@@ -236,16 +252,58 @@ fn run_figure(name: &str, o: &HarnessOpts) {
 }
 
 fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
+    if cmd == "trace-report" {
+        if rest.len() != 1 || rest[0].starts_with("--") {
+            bail!("usage: fmm2d trace-report FILE  (FILE: a Chrome trace written by --trace)");
+        }
+        print!(
+            "{}",
+            fmm2d::obs::report::render_file(std::path::Path::new(&rest[0]))?
+        );
+        return Ok(());
+    }
     let args = Args::parse(rest)?;
+    // cross-cutting observability options, accepted by every subcommand
+    // (check_known treats them as globally known)
+    if let Some(l) = args.get("log-level") {
+        fmm2d::obs::log::set_level(fmm2d::obs::log::Level::parse(l)?);
+    }
+    let trace = args.get("trace").map(std::path::PathBuf::from);
+    if trace.is_some() {
+        fmm2d::obs::enable(&fmm2d::obs::ObsOptions::default());
+    }
+    let out = run_command(cmd, &args);
+    if let Some(path) = &trace {
+        // write the trace even when the command failed: a partial timeline
+        // is exactly what diagnosing the failure needs
+        match fmm2d::obs::write_chrome_file(path) {
+            Ok(tr) => eprintln!(
+                "[trace: {} span(s) from {} thread(s) written to {}{}]",
+                tr.spans.len(),
+                tr.threads.len(),
+                path.display(),
+                if tr.dropped > 0 {
+                    format!(" ({} dropped)", tr.dropped)
+                } else {
+                    String::new()
+                }
+            ),
+            Err(e) => eprintln!("[trace: writing {} failed: {e:#}]", path.display()),
+        }
+    }
+    out
+}
+
+fn run_command(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "table5-1" | "fig5-1" | "fig5-2" | "fig5-3" | "fig5-4" | "fig5-5" | "fig5-6"
         | "fig5-7" | "fig5-8" | "fig5-9" => {
             args.check_known(&["full", "seed", "gtx480", "threads", "pin"])?;
-            run_figure(cmd, &harness_opts(&args)?);
+            run_figure(cmd, &harness_opts(args)?);
         }
         "all" => {
             args.check_known(&["full", "seed", "gtx480", "threads", "pin"])?;
-            let o = harness_opts(&args)?;
+            let o = harness_opts(args)?;
             for name in [
                 "table5-1", "fig5-1", "fig5-2", "fig5-3", "fig5-4", "fig5-5", "fig5-6",
                 "fig5-7", "fig5-8", "fig5-9",
@@ -256,25 +314,25 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
         }
         "validate" => {
             args.check_known(&["full", "seed", "gtx480", "threads", "pin"])?;
-            let t = harness::validate(&harness_opts(&args)?);
+            let t = harness::validate(&harness_opts(args)?);
             println!("{}", t.render());
             t.save("validate");
         }
         "ablate-theta" => {
             args.check_known(&["full", "seed", "gtx480", "threads", "pin"])?;
-            let t = harness::ablate_theta(&harness_opts(&args)?);
+            let t = harness::ablate_theta(&harness_opts(args)?);
             println!("{}", t.render());
             t.save("ablate_theta");
         }
         "ablate-shifts" => {
             args.check_known(&["full", "seed", "gtx480", "threads", "pin"])?;
-            let t = harness::ablate_shift_kernels(&harness_opts(&args)?);
+            let t = harness::ablate_shift_kernels(&harness_opts(args)?);
             println!("{}", t.render());
             t.save("ablate_shifts");
         }
         "calibrate" => {
             args.check_known(&["full", "seed", "gtx480", "threads", "pin", "quick", "profile"])?;
-            let o = harness_opts(&args)?;
+            let o = harness_opts(args)?;
             let quick = args.flag("quick");
             if !quick {
                 println!("{}", harness::calibrate(&o));
@@ -304,7 +362,7 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
         "dispatch-bench" => {
             args.check_known(&["full", "seed", "gtx480", "threads", "pin"])?;
             // like batch-bench: engine comparisons default to all cores
-            let mut o = harness_opts(&args)?;
+            let mut o = harness_opts(args)?;
             if args.get("threads").is_none() {
                 o.threads = None;
             }
@@ -313,14 +371,14 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
                 t.save(&format!("dispatch_bench_{i}"));
             }
         }
-        "run" => cmd_run(&args)?,
-        "batch" => cmd_batch(&args)?,
+        "run" => cmd_run(args)?,
+        "batch" => cmd_batch(args)?,
         "batch-bench" => {
             args.check_known(&["full", "seed", "gtx480", "threads", "pin"])?;
             // unlike the figure harness (serial-baseline default), a
             // throughput comparison defaults to all cores; an explicit
             // --threads (including --threads 1) is honored as given
-            let mut o = harness_opts(&args)?;
+            let mut o = harness_opts(args)?;
             if args.get("threads").is_none() {
                 o.threads = None;
             }
@@ -332,7 +390,7 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             args.check_known(&["full", "seed", "gtx480", "threads", "pin"])?;
             // like batch-bench: a throughput comparison defaults to all
             // cores; an explicit --threads is honored as given
-            let mut o = harness_opts(&args)?;
+            let mut o = harness_opts(args)?;
             if args.get("threads").is_none() {
                 o.threads = None;
             }
@@ -345,7 +403,7 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             // --threads absent = sweep worker counts (None); an explicit
             // --threads T measures that single count, with T = 0 keeping
             // its crate-wide "all cores" meaning (one all-core table)
-            let mut o = harness_opts(&args)?;
+            let mut o = harness_opts(args)?;
             o.threads = match args.get("threads") {
                 None => None,
                 Some("0") => Some(fmm2d::util::threadpool::available_threads()),
@@ -356,7 +414,7 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
                 t.save(&format!("pool_bench_{i}"));
             }
         }
-        "bench-suite" => cmd_bench_suite(&args)?,
+        "bench-suite" => cmd_bench_suite(args)?,
         "kernel-bench" => {
             use fmm2d::harness::kernelbench::{self, KernelBenchOpts};
             args.check_known(&["quick", "seed"])?;
@@ -367,8 +425,8 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             print!("{}", kernelbench::run(&opts).render());
         }
         "artifacts" => cmd_artifacts()?,
-        "serve" => cmd_serve(&args)?,
-        "loadgen" => cmd_loadgen(&args)?,
+        "serve" => cmd_serve(args)?,
+        "loadgen" => cmd_loadgen(args)?,
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => bail!("unknown command '{other}'; see `fmm2d help`"),
     }
@@ -534,6 +592,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         "faults",
         "connect",
         "no-digest-check",
+        "metrics",
         "verbose",
     ])?;
     let quick = args.flag("quick");
@@ -575,6 +634,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         connect: args.get("connect").map(str::to_string),
         faults,
         digest_check: !args.flag("no-digest-check"),
+        metrics: args.flag("metrics"),
     };
     let report = loadgen::run(&opts)?;
     println!("{}", report.render());

@@ -1,0 +1,148 @@
+//! Leveled, structured stderr logging: the one sanctioned home of
+//! diagnostic prints (`cargo xtask lint` denies raw `eprintln!` in
+//! `src/` outside this module and `main.rs` — the `no-adhoc-log` rule).
+//!
+//! Lines are `key=value` structured:
+//!
+//! ```text
+//! level=warn target=dispatch msg="no calibration profile" path=/x/y.json
+//! ```
+//!
+//! The level is process-global (`--log-level error|warn|info|debug`,
+//! default `info`); values containing spaces, quotes or `=` are quoted
+//! with `"` / `\` escaping so the lines stay machine-splittable.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::util::error::Result;
+
+/// Severity, most severe first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    /// Parse a `--log-level` value.
+    pub fn parse(s: &str) -> Result<Level> {
+        match s {
+            "error" => Ok(Level::Error),
+            "warn" => Ok(Level::Warn),
+            "info" => Ok(Level::Info),
+            "debug" => Ok(Level::Debug),
+            other => crate::bail!("unknown log level '{other}': expected error|warn|info|debug"),
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the process-global log level.
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Would a record at `l` be emitted?
+#[inline]
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+fn push_value(line: &mut String, v: &str) {
+    let needs_quote =
+        v.is_empty() || v.contains([' ', '"', '=', '\n', '\t', '\r', '\\']);
+    if !needs_quote {
+        line.push_str(v);
+        return;
+    }
+    line.push('"');
+    for c in v.chars() {
+        match c {
+            '"' => line.push_str("\\\""),
+            '\\' => line.push_str("\\\\"),
+            '\n' => line.push_str("\\n"),
+            '\t' => line.push_str("\\t"),
+            '\r' => line.push_str("\\r"),
+            c => line.push(c),
+        }
+    }
+    line.push('"');
+}
+
+/// Emit one structured record. `kv` pairs follow the message.
+pub fn emit(l: Level, target: &str, msg: &str, kv: &[(&str, String)]) {
+    if !enabled(l) {
+        return;
+    }
+    let mut line = String::with_capacity(64);
+    line.push_str("level=");
+    line.push_str(l.name());
+    line.push_str(" target=");
+    push_value(&mut line, target);
+    line.push_str(" msg=");
+    push_value(&mut line, msg);
+    for (k, v) in kv {
+        line.push(' ');
+        line.push_str(k);
+        line.push('=');
+        push_value(&mut line, v);
+    }
+    eprintln!("{line}");
+}
+
+pub fn error(target: &str, msg: &str, kv: &[(&str, String)]) {
+    emit(Level::Error, target, msg, kv);
+}
+
+pub fn warn(target: &str, msg: &str, kv: &[(&str, String)]) {
+    emit(Level::Warn, target, msg, kv);
+}
+
+pub fn info(target: &str, msg: &str, kv: &[(&str, String)]) {
+    emit(Level::Info, target, msg, kv);
+}
+
+pub fn debug(target: &str, msg: &str, kv: &[(&str, String)]) {
+    emit(Level::Debug, target, msg, kv);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_and_order() {
+        assert_eq!(Level::parse("warn").unwrap(), Level::Warn);
+        assert_eq!(Level::parse("debug").unwrap(), Level::Debug);
+        assert!(Level::parse("verbose").is_err());
+        assert!(Level::Error < Level::Warn && Level::Warn < Level::Info);
+    }
+
+    #[test]
+    fn quoting_keeps_lines_splittable() {
+        let mut s = String::new();
+        push_value(&mut s, "plain");
+        assert_eq!(s, "plain");
+        let mut s = String::new();
+        push_value(&mut s, "two words");
+        assert_eq!(s, "\"two words\"");
+        let mut s = String::new();
+        push_value(&mut s, "a\"b\\c\nd");
+        assert_eq!(s, "\"a\\\"b\\\\c\\nd\"");
+        let mut s = String::new();
+        push_value(&mut s, "");
+        assert_eq!(s, "\"\"");
+    }
+}

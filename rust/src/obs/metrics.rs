@@ -1,0 +1,301 @@
+//! The metrics registry: named counters, gauges and log-bucketed
+//! histograms with lock-free hot paths.
+//!
+//! A [`Registry`] is an *instance*, not a global: each [`crate::serve::Server`]
+//! owns one, so concurrent serve sessions in one process (the loadgen
+//! tests run several) never share counters and exact-count assertions
+//! stay exact. Handles ([`Counter`], [`Gauge`], [`Histogram`]) are cheap
+//! clones of `Arc`'d atomics — resolve them once by name, then update
+//! without any lock. A process-wide registry ([`global`]) exists for
+//! cross-cutting gauges like the dispatcher's rolling drift.
+//!
+//! Naming convention: `<subsystem>.<metric>` (e.g. `serve.accepted`,
+//! `serve.queue_depth`, `dispatch.drift.pooled`). Histograms record
+//! milliseconds; snapshots report `count`, `sum_ms`, `max_ms` and
+//! bucket-resolved `p50/p95/p99` upper bounds (power-of-two microsecond
+//! buckets, so quantiles are exact to within a factor of two).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use crate::util::json::Json;
+
+const N_BUCKETS: usize = 64;
+
+/// Monotone counter handle.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge handle (f64 stored as bits).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    /// Exponential moving average update: `g ← (1−α)·g + α·v`. Not
+    /// atomic as a whole (racing writers may lose an update), which is
+    /// fine for a telemetry gauge.
+    pub fn ewma(&self, v: f64, alpha: f64) {
+        let old = self.get();
+        let next = if old == 0.0 {
+            v
+        } else {
+            old * (1.0 - alpha) + v * alpha
+        };
+        self.set(next);
+    }
+}
+
+struct HistogramCore {
+    count: AtomicU64,
+    /// Sum of recorded values in whole microseconds (saturating).
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+    /// Bucket `i` holds values whose microsecond count has bit length `i`
+    /// (bucket 0 is exactly zero): power-of-two bucketing.
+    buckets: [AtomicU64; N_BUCKETS],
+}
+
+/// Log-bucketed histogram handle; records milliseconds.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistogramCore>);
+
+fn bucket_of(us: u64) -> usize {
+    (u64::BITS - us.leading_zeros()) as usize
+}
+
+impl Histogram {
+    pub fn record(&self, ms: f64) {
+        let us = if ms.is_finite() && ms > 0.0 {
+            (ms * 1000.0).round() as u64
+        } else {
+            0
+        };
+        let c = &self.0;
+        c.count.fetch_add(1, Ordering::Relaxed);
+        c.sum_us.fetch_add(us, Ordering::Relaxed);
+        c.max_us.fetch_max(us, Ordering::Relaxed);
+        c.buckets[bucket_of(us).min(N_BUCKETS - 1)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    /// Bucket-resolved quantile: the upper bound (ms) of the bucket
+    /// containing the q-th recorded value. 0.0 when empty.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.0.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                // bucket i covers us ∈ [2^(i−1), 2^i − 1]; report 2^i µs
+                let upper_us = if i == 0 { 0u64 } else { 1u64 << i.min(63) };
+                return upper_us as f64 / 1000.0;
+            }
+        }
+        self.0.max_us.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+
+    fn snapshot(&self) -> Json {
+        let c = &self.0;
+        let mut j = Json::obj();
+        j.set("count", Json::Num(c.count.load(Ordering::Relaxed) as f64))
+            .set(
+                "sum_ms",
+                Json::Num(c.sum_us.load(Ordering::Relaxed) as f64 / 1000.0),
+            )
+            .set(
+                "max_ms",
+                Json::Num(c.max_us.load(Ordering::Relaxed) as f64 / 1000.0),
+            )
+            .set("p50_ms", Json::Num(self.quantile_ms(0.50)))
+            .set("p95_ms", Json::Num(self.quantile_ms(0.95)))
+            .set("p99_ms", Json::Num(self.quantile_ms(0.99)));
+        j
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, Counter>,
+    gauges: BTreeMap<String, Gauge>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+/// A named-metric registry. Handle resolution takes the registry lock;
+/// handle updates never do.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+fn locked(m: &Mutex<Inner>) -> MutexGuard<'_, Inner> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or create the counter `name`.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut i = locked(&self.inner);
+        i.counters
+            .entry(name.to_string())
+            .or_insert_with(|| Counter(Arc::new(AtomicU64::new(0))))
+            .clone()
+    }
+
+    /// Get or create the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut i = locked(&self.inner);
+        i.gauges
+            .entry(name.to_string())
+            .or_insert_with(|| Gauge(Arc::new(AtomicU64::new(0.0f64.to_bits()))))
+            .clone()
+    }
+
+    /// Get or create the histogram `name`.
+    pub fn histogram(&self, name: &str) -> Histogram {
+        let mut i = locked(&self.inner);
+        i.histograms
+            .entry(name.to_string())
+            .or_insert_with(|| {
+                Histogram(Arc::new(HistogramCore {
+                    count: AtomicU64::new(0),
+                    sum_us: AtomicU64::new(0),
+                    max_us: AtomicU64::new(0),
+                    buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+                }))
+            })
+            .clone()
+    }
+
+    /// One strict-JSON snapshot of every metric:
+    /// `{"counters":{…},"gauges":{…},"histograms":{…}}`.
+    pub fn snapshot(&self) -> Json {
+        let i = locked(&self.inner);
+        let mut counters = Json::obj();
+        for (k, c) in &i.counters {
+            counters.set(k, Json::Num(c.get() as f64));
+        }
+        let mut gauges = Json::obj();
+        for (k, g) in &i.gauges {
+            let v = g.get();
+            gauges.set(k, Json::Num(if v.is_finite() { v } else { 0.0 }));
+        }
+        let mut hists = Json::obj();
+        for (k, h) in &i.histograms {
+            hists.set(k, h.snapshot());
+        }
+        let mut j = Json::obj();
+        j.set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", hists);
+        j
+    }
+}
+
+/// The process-wide registry for cross-cutting metrics (dispatch drift
+/// gauges). Subsystem-scoped metrics (serve) use their own instance.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("t.hits");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // same name resolves to the same underlying atomic
+        assert_eq!(r.counter("t.hits").get(), 5);
+        let g = r.gauge("t.depth");
+        g.set(3.5);
+        assert_eq!(r.gauge("t.depth").get(), 3.5);
+        g.ewma(1.5, 0.5);
+        assert!((g.get() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let r = Registry::new();
+        let h = r.histogram("t.lat_ms");
+        for _ in 0..90 {
+            h.record(1.0); // 1000 µs → bucket 10
+        }
+        for _ in 0..10 {
+            h.record(100.0); // 100000 µs → bucket 17
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile_ms(0.50);
+        assert!(p50 >= 1.0 && p50 <= 2.1, "p50 {p50}");
+        let p99 = h.quantile_ms(0.99);
+        assert!(p99 >= 100.0 && p99 <= 140.0, "p99 {p99}");
+        // zero and non-finite recordings land in bucket 0, not a panic
+        h.record(0.0);
+        h.record(f64::NAN);
+        assert_eq!(h.count(), 102);
+    }
+
+    #[test]
+    fn snapshot_is_strict_json() {
+        let r = Registry::new();
+        r.counter("a.n").add(2);
+        r.gauge("a.g").set(1.25);
+        r.histogram("a.h").record(5.0);
+        let s = r.snapshot().to_string();
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(
+            back.get("counters").and_then(|c| c.get("a.n")).and_then(Json::as_usize),
+            Some(2)
+        );
+        assert_eq!(
+            back.get("gauges").and_then(|g| g.get("a.g")).and_then(Json::as_f64),
+            Some(1.25)
+        );
+        let h = back.get("histograms").and_then(|h| h.get("a.h")).unwrap();
+        assert_eq!(h.get("count").and_then(Json::as_usize), Some(1));
+        assert!(h.get("p50_ms").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,357 @@
+//! `fmm2d trace-report FILE` — summarize a Chrome trace produced by
+//! `--trace`: per-phase wall/busy, task-graph busy and critical path vs
+//! achieved wall, worker occupancy, serve lifecycle tallies, and the top
+//! dispatch predicted-vs-measured drift offenders.
+//!
+//! Works on any strict trace-event JSON with the categories this crate
+//! emits (see [`crate::obs`] module docs); unknown categories are
+//! ignored, so the report is forward-compatible with later
+//! instrumentation.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+struct Ev {
+    name: String,
+    cat: String,
+    ts_us: f64,
+    dur_us: f64,
+    tid: usize,
+    args: Json,
+}
+
+fn arg(e: &Ev, key: &str) -> Option<f64> {
+    e.args.get(key).and_then(Json::as_f64)
+}
+
+/// Aggregate of one span name: count, total busy, and the covering wall
+/// interval.
+#[derive(Clone, Copy)]
+struct Agg {
+    count: usize,
+    busy_us: f64,
+    t_min: f64,
+    t_max: f64,
+    first: f64,
+}
+
+impl Agg {
+    fn new(ts: f64, dur: f64) -> Agg {
+        Agg {
+            count: 1,
+            busy_us: dur,
+            t_min: ts,
+            t_max: ts + dur,
+            first: ts,
+        }
+    }
+
+    fn fold(&mut self, ts: f64, dur: f64) {
+        self.count += 1;
+        self.busy_us += dur;
+        self.t_min = self.t_min.min(ts);
+        self.t_max = self.t_max.max(ts + dur);
+    }
+
+    fn wall_us(&self) -> f64 {
+        (self.t_max - self.t_min).max(0.0)
+    }
+}
+
+fn aggregate<'a>(evs: impl Iterator<Item = &'a Ev>) -> Vec<(String, Agg)> {
+    let mut by_name: BTreeMap<&str, Agg> = BTreeMap::new();
+    for e in evs {
+        match by_name.get_mut(e.name.as_str()) {
+            Some(a) => a.fold(e.ts_us, e.dur_us),
+            None => {
+                by_name.insert(&e.name, Agg::new(e.ts_us, e.dur_us));
+            }
+        }
+    }
+    let mut v: Vec<(String, Agg)> = by_name
+        .into_iter()
+        .map(|(k, a)| (k.to_string(), a))
+        .collect();
+    // timeline order: by first occurrence
+    v.sort_by(|a, b| a.1.first.total_cmp(&b.1.first));
+    v
+}
+
+fn ms(us: f64) -> f64 {
+    us / 1000.0
+}
+
+fn section_spans(out: &mut String, title: &str, rows: &[(String, Agg)]) {
+    if rows.is_empty() {
+        return;
+    }
+    let _ = writeln!(out, "\n{title}");
+    let _ = writeln!(
+        out,
+        "  {:<14} {:>8} {:>12} {:>12} {:>8}",
+        "name", "count", "busy_ms", "wall_ms", "busy/wall"
+    );
+    for (name, a) in rows {
+        let wall = a.wall_us();
+        let ratio = if wall > 0.0 { a.busy_us / wall } else { 0.0 };
+        let _ = writeln!(
+            out,
+            "  {:<14} {:>8} {:>12.3} {:>12.3} {:>8.2}",
+            name,
+            a.count,
+            ms(a.busy_us),
+            ms(wall),
+            ratio
+        );
+    }
+}
+
+fn section_occupancy(
+    out: &mut String,
+    title: &str,
+    evs: &[&Ev],
+    names: &BTreeMap<usize, String>,
+) {
+    if evs.is_empty() {
+        return;
+    }
+    let mut per_tid: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut t_min = f64::INFINITY;
+    let mut t_max = f64::NEG_INFINITY;
+    for e in evs {
+        *per_tid.entry(e.tid).or_insert(0.0) += e.dur_us;
+        t_min = t_min.min(e.ts_us);
+        t_max = t_max.max(e.ts_us + e.dur_us);
+    }
+    let window = (t_max - t_min).max(0.0);
+    let mut total_busy = 0.0;
+    let _ = writeln!(out, "\n{title} (window {:.3} ms)", ms(window));
+    let _ = writeln!(out, "  {:<26} {:>12} {:>10}", "thread", "busy_ms", "occup");
+    for (tid, busy) in &per_tid {
+        total_busy += busy;
+        let occ = if window > 0.0 { busy / window } else { 0.0 };
+        let label = match names.get(tid) {
+            Some(n) => format!("{tid}:{n}"),
+            None => format!("{tid}"),
+        };
+        let _ = writeln!(out, "  {:<26} {:>12.3} {:>10.2}", label, ms(*busy), occ);
+    }
+    if window > 0.0 {
+        let _ = writeln!(
+            out,
+            "  mean busy workers: {:.2} over {} thread(s)",
+            total_busy / window,
+            per_tid.len()
+        );
+    }
+}
+
+/// Render the human summary of a parsed Chrome trace.
+pub fn render(trace: &Json) -> Result<String> {
+    let events = trace
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| crate::anyhow!("not a Chrome trace: missing 'traceEvents' array"))?;
+
+    let mut evs: Vec<Ev> = Vec::new();
+    let mut thread_names: BTreeMap<usize, String> = BTreeMap::new();
+    for e in events {
+        match e.get("ph").and_then(Json::as_str) {
+            Some("M") => {
+                if e.get("name").and_then(Json::as_str) == Some("thread_name") {
+                    if let (Some(tid), Some(n)) = (
+                        e.get("tid").and_then(Json::as_usize),
+                        e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str),
+                    ) {
+                        thread_names.insert(tid, n.to_string());
+                    }
+                }
+            }
+            Some("X") => {
+                let ts = e.get("ts").and_then(Json::as_f64).unwrap_or(0.0);
+                let dur = e.get("dur").and_then(Json::as_f64).unwrap_or(0.0);
+                crate::ensure!(
+                    ts >= 0.0 && dur >= 0.0 && ts.is_finite() && dur.is_finite(),
+                    "invalid trace: negative or non-finite ts/dur"
+                );
+                evs.push(Ev {
+                    name: e
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .unwrap_or("?")
+                        .to_string(),
+                    cat: e.get("cat").and_then(Json::as_str).unwrap_or("").to_string(),
+                    ts_us: ts,
+                    dur_us: dur,
+                    tid: e.get("tid").and_then(Json::as_usize).unwrap_or(0),
+                    args: e.get("args").cloned().unwrap_or_else(Json::obj),
+                });
+            }
+            _ => {}
+        }
+    }
+
+    let dropped = trace.get("dropped").and_then(Json::as_f64).unwrap_or(0.0);
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "trace: {} span(s) across {} thread(s), {} dropped",
+        evs.len(),
+        thread_names.len().max(
+            evs.iter().map(|e| e.tid + 1).max().unwrap_or(0)
+        ),
+        dropped as u64
+    );
+
+    let of = |cat: &str| evs.iter().filter(move |e| e.cat == cat);
+
+    section_spans(&mut out, "phases (barrier engines + topology)", &aggregate(of("phase")));
+    section_spans(&mut out, "task-graph tasks (by phase)", &aggregate(of("task")));
+    section_spans(&mut out, "batch groups", &aggregate(of("batch")));
+
+    let workers: Vec<&Ev> = of("worker").collect();
+    section_occupancy(&mut out, "worker occupancy", &workers, &thread_names);
+    if workers.is_empty() {
+        let tasks: Vec<&Ev> = of("task").collect();
+        section_occupancy(
+            &mut out,
+            "worker occupancy (from task spans)",
+            &tasks,
+            &thread_names,
+        );
+    }
+
+    let cps: Vec<&Ev> = evs
+        .iter()
+        .filter(|e| e.cat == "taskgraph" && e.name == "critical_path")
+        .collect();
+    if !cps.is_empty() {
+        let _ = writeln!(out, "\ntask-graph critical path");
+        let _ = writeln!(
+            out,
+            "  {:>12} {:>12} {:>10} {:>8}",
+            "critical_ms", "wall_ms", "headroom", "nodes"
+        );
+        for e in &cps {
+            let cp = arg(e, "critical_path_s").unwrap_or(0.0);
+            let wall = arg(e, "wall_s").unwrap_or(0.0);
+            let head = if cp > 0.0 { wall / cp } else { 0.0 };
+            let _ = writeln!(
+                out,
+                "  {:>12.3} {:>12.3} {:>9.2}x {:>8}",
+                cp * 1000.0,
+                wall * 1000.0,
+                head,
+                arg(e, "nodes").unwrap_or(0.0) as usize
+            );
+        }
+    }
+
+    let serve: Vec<&Ev> = of("serve").collect();
+    if !serve.is_empty() {
+        let mut tally: BTreeMap<&str, usize> = BTreeMap::new();
+        for e in &serve {
+            *tally.entry(e.name.as_str()).or_insert(0) += 1;
+        }
+        let _ = writeln!(out, "\nserve lifecycle");
+        for (name, n) in tally {
+            let _ = writeln!(out, "  {name:<16} {n:>8}");
+        }
+    }
+
+    let mut drifts: Vec<&Ev> = of("dispatch").collect();
+    if !drifts.is_empty() {
+        let _ = writeln!(out, "\ndispatch drift (top offenders)");
+        let _ = writeln!(
+            out,
+            "  {:<10} {:>12} {:>12} {:>9}",
+            "engine", "pred_ms", "meas_ms", "drift"
+        );
+        drifts.sort_by(|a, b| {
+            arg(b, "drift")
+                .unwrap_or(0.0)
+                .abs()
+                .total_cmp(&arg(a, "drift").unwrap_or(0.0).abs())
+        });
+        for e in drifts.iter().take(5) {
+            let _ = writeln!(
+                out,
+                "  {:<10} {:>12.3} {:>12.3} {:>8.1}%",
+                e.name,
+                arg(e, "predicted_s").unwrap_or(0.0) * 1000.0,
+                arg(e, "measured_s").unwrap_or(0.0) * 1000.0,
+                arg(e, "drift").unwrap_or(0.0) * 100.0
+            );
+        }
+    }
+
+    Ok(out)
+}
+
+/// Load a trace file and render its summary.
+pub fn render_file(path: &std::path::Path) -> Result<String> {
+    use crate::util::error::Context;
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    let json = Json::parse(&text)
+        .with_context(|| format!("parsing trace {}", path.display()))?;
+    render(&json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{export_chrome, Span, Trace, MAX_ARGS};
+
+    fn span(cat: &'static str, name: &'static str, t0: u64, dur: u64, tid: u32) -> Span {
+        Span {
+            cat,
+            name,
+            t0_ns: t0,
+            dur_ns: dur,
+            tid,
+            n_args: 0,
+            args: [("", 0.0); MAX_ARGS],
+        }
+    }
+
+    #[test]
+    fn report_summarizes_phases_workers_and_critical_path() {
+        let mut spans = vec![
+            span("phase", "P2M", 0, 2_000_000, 0),
+            span("phase", "M2L", 2_000_000, 3_000_000, 0),
+            span("worker", "job", 0, 4_000_000, 1),
+            span("worker", "job", 0, 2_000_000, 2),
+        ];
+        let mut cp = span("taskgraph", "critical_path", 5_000_000, 0, 0);
+        cp.n_args = 2;
+        cp.args[0] = ("critical_path_s", 0.004);
+        cp.args[1] = ("wall_s", 0.005);
+        spans.push(cp);
+        let trace = Trace {
+            spans,
+            threads: vec!["main".into(), "fmm2d-pool-0".into(), "fmm2d-pool-1".into()],
+            dropped: 0,
+        };
+        let text = render(&export_chrome(&trace)).unwrap();
+        assert!(text.contains("P2M"), "{text}");
+        assert!(text.contains("M2L"), "{text}");
+        assert!(text.contains("worker occupancy"), "{text}");
+        assert!(text.contains("mean busy workers"), "{text}");
+        assert!(text.contains("critical path"), "{text}");
+        assert!(text.contains("fmm2d-pool-0"), "{text}");
+    }
+
+    #[test]
+    fn report_rejects_non_traces() {
+        assert!(render(&Json::parse("{}").unwrap()).is_err());
+        let bad = Json::parse(
+            r#"{"traceEvents":[{"ph":"X","name":"x","cat":"phase","ts":-5,"dur":1,"tid":0}]}"#,
+        )
+        .unwrap();
+        assert!(render(&bad).is_err(), "negative ts must be rejected");
+    }
+}

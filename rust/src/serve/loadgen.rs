@@ -61,6 +61,10 @@ pub struct LoadgenOptions {
     /// Verify `ok` digests against offline evaluations (the expensive
     /// half of the gate; on by default).
     pub digest_check: bool,
+    /// Fetch the server's metric registry (`--metrics`): over the wire
+    /// via `{"op":"stats"}` on `--connect` runs, directly post-drain
+    /// in-process. The snapshot is reconciled against the client ledger.
+    pub metrics: bool,
 }
 
 impl Default for LoadgenOptions {
@@ -77,6 +81,7 @@ impl Default for LoadgenOptions {
             connect: None,
             faults: None,
             digest_check: true,
+            metrics: false,
         }
     }
 }
@@ -134,6 +139,10 @@ pub struct LoadgenReport {
     pub throughput: f64,
     /// Server-side counters (in-process runs only).
     pub server: Option<ServeStats>,
+    /// Metric-registry snapshot (`--metrics` runs): the `stats` payload
+    /// of the `{"op":"stats"}` reply, or the in-process registry read
+    /// after drain.
+    pub stats: Option<Json>,
 }
 
 impl LoadgenReport {
@@ -164,7 +173,53 @@ impl LoadgenReport {
             s.push('\n');
             s.push_str(&st.render());
         }
+        if let Some(st) = &self.stats {
+            s.push_str("\nloadgen: serve metrics ");
+            s.push_str(&st.to_string());
+        }
         s
+    }
+
+    /// Cross-check a `--metrics` snapshot against the client-side ledger.
+    /// Admission is settled by the time the snapshot is taken (every eval
+    /// line precedes the stats line on the wire), so `accepted + shed`
+    /// must equal `sent` unconditionally; when the snapshot is post-drain
+    /// (every accepted request already answered — always true in-process)
+    /// the per-status counts must agree exactly too. No-op without a
+    /// snapshot.
+    pub fn reconcile(&self) -> Result<()> {
+        let Some(st) = &self.stats else {
+            return Ok(());
+        };
+        let c = |name: &str| -> u64 {
+            st.get("counters")
+                .and_then(|c| c.get(&format!("serve.{name}")))
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0) as u64
+        };
+        crate::ensure!(
+            c("accepted") + c("shed") == self.sent,
+            "serve metrics disagree with the ledger: accepted {} + shed {} != sent {}",
+            c("accepted"),
+            c("shed"),
+            self.sent
+        );
+        let answered = c("ok") + c("errors") + c("expired");
+        if answered == c("accepted") {
+            for (name, want) in [
+                ("ok", self.ok),
+                ("errors", self.errors),
+                ("expired", self.expired),
+                ("shed", self.shed),
+            ] {
+                crate::ensure!(
+                    c(name) == want,
+                    "serve.{name} is {} but the client ledger counted {want}",
+                    c(name)
+                );
+            }
+        }
+        Ok(())
     }
 
     /// The chaos gate: zero lost replies, zero duplicates, zero digest
@@ -265,11 +320,11 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
     }
 
     let t0 = Instant::now();
-    let (replies, server_stats) = match &opts.connect {
-        Some(addr) => (drive_tcp(addr, opts, &pattern, total)?, None),
+    let (replies, server_stats, snapshot) = match &opts.connect {
+        Some(addr) => (drive_tcp(addr, opts, &pattern, total)?, None, None),
         None => {
-            let (replies, stats) = drive_in_process(opts, &pattern, total)?;
-            (replies, Some(stats))
+            let (replies, stats, snapshot) = drive_in_process(opts, &pattern, total)?;
+            (replies, Some(stats), snapshot)
         }
     };
     let wall_s = t0.elapsed().as_secs_f64();
@@ -281,6 +336,10 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
 
     let mut report = audit(opts, &pattern, total, replies, wall_s)?;
     report.server = server_stats;
+    if report.stats.is_none() {
+        report.stats = snapshot;
+    }
+    report.reconcile()?;
     Ok(report)
 }
 
@@ -292,7 +351,7 @@ fn drive_in_process(
     opts: &LoadgenOptions,
     pattern: &[usize],
     total: u64,
-) -> Result<(Vec<Json>, ServeStats)> {
+) -> Result<(Vec<Json>, ServeStats, Option<Json>)> {
     let server = Server::new(opts.serve.clone())?;
     let replies: Mutex<Vec<Json>> = Mutex::new(Vec::new());
     let push = |j: &Json| {
@@ -332,9 +391,13 @@ fn drive_in_process(
     })?;
 
     let stats = server.stats();
+    // Post-drain snapshot: every accepted request is answered, so the
+    // registry must reconcile exactly with the client ledger.
+    let snapshot = opts.metrics.then(|| server.stats_json());
     Ok((
         replies.into_inner().unwrap_or_else(|p| p.into_inner()),
         stats,
+        snapshot,
     ))
 }
 
@@ -395,6 +458,12 @@ fn drive_tcp(
                 }
             }
         }
+        if opts.metrics {
+            // Every eval line precedes this on the wire, so the snapshot
+            // has final admission counters (evaluation may still be in
+            // flight; reconcile() accounts for that).
+            writeln!(writer, r#"{{"op":"stats"}}"#).context("writing stats request")?;
+        }
         let shutdown_line = r#"{"kind":"shutdown"}"#;
         writeln!(writer, "{shutdown_line}").context("writing shutdown")?;
         writer.flush().context("flushing requests")?;
@@ -430,6 +499,12 @@ fn audit(
     let mut expected: std::collections::BTreeMap<(usize, u64, bool, usize), u64> =
         std::collections::BTreeMap::new();
     for r in &replies {
+        if r.get("status").and_then(Json::as_str) == Some("stats") {
+            // The metrics snapshot rides the reply stream but is not part
+            // of the exactly-once eval ledger.
+            report.stats = r.get("stats").cloned();
+            continue;
+        }
         let Some(id) = r.get("id").and_then(Json::as_f64) else {
             // id:null replies are decode-error replies — loadgen never
             // sends undecodable lines, so treat one as a lost-reply bug.
@@ -616,5 +691,43 @@ mod tests {
         let st = report.server.expect("in-process run records server stats");
         assert_eq!(st.ok, report.ok);
         assert_eq!(st.answered() + st.shed, report.sent);
+    }
+
+    /// `--metrics`: the in-process registry snapshot reconciles with the
+    /// exactly-once ledger (run() enforces it; spot-check the payload).
+    #[test]
+    fn metrics_snapshot_reconciles_in_process() {
+        #[cfg(feature = "failpoints")]
+        let _fp = crate::util::failpoint::test_lock();
+        let opts = LoadgenOptions {
+            rps: 200.0,
+            duration_s: 0.05,
+            mix: vec![(300, 1)],
+            deadline_ms: 30_000,
+            digest_check: false,
+            metrics: true,
+            serve: quick_serve_options(Engine::Parallel, Some(2)),
+            ..LoadgenOptions::default()
+        };
+        let report = run(&opts).unwrap();
+        let st = report.stats.as_ref().expect("--metrics records a snapshot");
+        let c = |name: &str| {
+            st.get("counters")
+                .and_then(|c| c.get(name))
+                .and_then(Json::as_usize)
+                .unwrap() as u64
+        };
+        assert_eq!(c("serve.ok"), report.ok);
+        assert_eq!(c("serve.accepted"), report.ok + report.errors + report.expired);
+        // one latency sample per ok reply
+        let lat = st
+            .get("histograms")
+            .and_then(|h| h.get("serve.latency_ms"))
+            .expect("latency histogram present");
+        assert_eq!(
+            lat.get("count").and_then(Json::as_usize).unwrap() as u64,
+            report.ok
+        );
+        assert!(report.render().contains("serve metrics"));
     }
 }

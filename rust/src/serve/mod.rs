@@ -209,6 +209,12 @@ pub fn serve_lines<R: BufRead, W: Write + Send>(
                         sink.write(&reply);
                     }
                 }
+                Ok(Request::Stats) => {
+                    // Answered inline from the reader thread: the snapshot
+                    // reflects everything counted up to this line, and the
+                    // reply never enters the exactly-once eval ledger.
+                    sink.write(&protocol::reply_stats(server.stats_json()));
+                }
                 Err(e) => {
                     server.note_rejected();
                     sink.write(&protocol::reply_error(e.id, &format!("{:#}", e.err)));
@@ -233,7 +239,9 @@ pub fn run_stdin(opts: ServeOptions) -> Result<ServeOutcome> {
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     let outcome = serve_lines(stdin.lock(), stdout.lock(), opts)?;
-    eprintln!("{}", outcome.stats.render());
+    for line in outcome.stats.render().lines() {
+        crate::obs::log::info("serve", line, &[]);
+    }
     Ok(outcome)
 }
 
@@ -246,12 +254,12 @@ pub fn run_tcp(addr: &str, opts: ServeOptions) -> Result<()> {
         .local_addr()
         .map(|a| a.to_string())
         .unwrap_or_else(|_| addr.to_string());
-    eprintln!("fmm2d serve: listening on {local}");
+    crate::obs::log::info("serve", "listening", &[("addr", local)]);
     for conn in listener.incoming() {
         let stream = match conn {
             Ok(s) => s,
             Err(e) => {
-                eprintln!("fmm2d serve: accept failed: {e}");
+                crate::obs::log::warn("serve", "accept failed", &[("error", e.to_string())]);
                 continue;
             }
         };
@@ -265,8 +273,10 @@ pub fn run_tcp(addr: &str, opts: ServeOptions) -> Result<()> {
                 .with_context(|| format!("cloning connection from {peer}"))?,
         );
         let outcome = serve_lines(reader, stream, opts.clone())?;
-        eprintln!("fmm2d serve: session from {peer} done");
-        eprintln!("{}", outcome.stats.render());
+        crate::obs::log::info("serve", "session done", &[("peer", peer)]);
+        for line in outcome.stats.render().lines() {
+            crate::obs::log::info("serve", line, &[]);
+        }
         if outcome.shutdown {
             break;
         }

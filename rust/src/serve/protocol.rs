@@ -13,7 +13,11 @@
 //!   run of the same `(dist, n, seed)` is the bit-exact reference;
 //! * **inline form** — `{"id":2,"points":[[x,y],…],"gammas":[[re,im],…]}`.
 //!
-//! Replies carry a `status` of `ok`, `error`, `overloaded` or `expired`;
+//! A third line form, `{"op":"stats"}`, asks for a snapshot of the
+//! server's metric registry (answered inline, never queued).
+//!
+//! Replies carry a `status` of `ok`, `error`, `overloaded`, `expired`
+//! or `stats`;
 //! `ok` replies report the engine rung and worker count that produced them
 //! (potentials are bit-reproducible only *per engine and worker count* —
 //! see `rust/README.md`), plus either the full potentials or an FNV-1a
@@ -30,9 +34,10 @@ use crate::workload::Distribution;
 pub const MAX_LINE_BYTES: usize = 8 << 20;
 
 /// Fields the decoder accepts; anything else is a strict-parse error.
-const KNOWN_FIELDS: [&str; 13] = [
+const KNOWN_FIELDS: [&str; 14] = [
     "id",
     "kind",
+    "op",
     "n",
     "dist",
     "sigma",
@@ -62,6 +67,11 @@ pub enum Request {
     Eval(Box<EvalRequest>),
     /// `{"kind":"shutdown"}` — drain the queue, answer everything, exit.
     Shutdown,
+    /// `{"op":"stats"}` — reply with a snapshot of the server's metric
+    /// registry. Answered inline by the reader thread (never queued), so
+    /// it reflects the ledger at the moment of the request and is not
+    /// itself part of the exactly-once accounting.
+    Stats,
 }
 
 /// How the workload of an eval request is obtained.
@@ -198,6 +208,18 @@ fn decode_inner(line: &str, limits: &Limits) -> Result<Request> {
             "unknown field '{key}' (strict protocol; known fields: {})",
             KNOWN_FIELDS.join(", ")
         );
+    }
+    if let Some(op) = v.get("op") {
+        let name = op
+            .as_str()
+            .ok_or_else(|| crate::anyhow!("field 'op' must be a string"))?;
+        crate::ensure!(name == "stats", "unknown op '{name}': expected stats");
+        crate::ensure!(
+            map.len() == 1,
+            "op:stats takes no other fields (got {} fields)",
+            map.len()
+        );
+        return Ok(Request::Stats);
     }
     match v.get("kind").map(|k| k.as_str()) {
         None => {}
@@ -366,6 +388,16 @@ pub fn reply_overloaded(id: u64, retry_after_ms: u64) -> Json {
     j
 }
 
+/// Metrics snapshot reply for `{"op":"stats"}`. Carries no `id` and is
+/// excluded from the exactly-once eval ledger (loadgen's audit skips
+/// `status:"stats"` lines).
+pub fn reply_stats(snapshot: Json) -> Json {
+    let mut j = Json::obj();
+    j.set("status", Json::Str("stats".into()))
+        .set("stats", snapshot);
+    j
+}
+
 /// The request was accepted but its deadline passed before (or while)
 /// its group flushed; the evaluation was skipped.
 pub fn reply_expired(id: u64, waited_ms: f64) -> Json {
@@ -444,6 +476,21 @@ mod tests {
         ));
         // shutdown with extra fields is malformed, not silently partial
         assert!(decode(r#"{"kind":"shutdown","id":1}"#, &limits()).is_err());
+    }
+
+    #[test]
+    fn stats_op_decodes_strictly() {
+        assert!(matches!(
+            decode(r#"{"op":"stats"}"#, &limits()).unwrap(),
+            Request::Stats
+        ));
+        // op:stats rides alone — no id, no eval fields
+        assert!(decode(r#"{"op":"stats","id":1}"#, &limits()).is_err());
+        assert!(decode(r#"{"op":"flush"}"#, &limits()).is_err());
+        assert!(decode(r#"{"op":1}"#, &limits()).is_err());
+        let reply = reply_stats(Json::obj()).to_string();
+        assert!(reply.contains(r#""status":"stats""#), "{reply}");
+        assert!(Json::parse(&reply).is_ok());
     }
 
     #[test]

@@ -24,13 +24,13 @@
 //! (`tests/serve_chaos.rs`, `fmm2d loadgen --faults`) drives injected
 //! panics through all three sites and holds the daemon to that invariant.
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::batch::{BatchPlan, ProblemShape};
 use crate::dispatch::{Dispatcher, Engine, EngineChoice, Problem};
 use crate::fmm::{self, CpuEngine, FmmOptions};
+use crate::obs::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::util::error::Result;
 use crate::util::json::Json;
 use crate::util::pool::WorkerPool;
@@ -145,25 +145,57 @@ impl ServeStats {
     }
 }
 
-#[derive(Debug, Default)]
-struct Counters {
-    accepted: AtomicU64,
-    ok: AtomicU64,
-    errors: AtomicU64,
-    expired: AtomicU64,
-    shed: AtomicU64,
-    rejected: AtomicU64,
-    flushes_full: AtomicU64,
-    flushes_deadline: AtomicU64,
-    flushes_drain: AtomicU64,
-    recoveries: AtomicU64,
-    pool_rebuilds: AtomicU64,
-    degraded: AtomicU64,
-    write_retries: AtomicU64,
+/// Pre-resolved handles into the server's [`Registry`] — one per ledger
+/// counter plus the load gauges and latency/grouping histograms. The
+/// exactly-once ledger (`serve.ok + serve.errors + serve.expired =
+/// serve.accepted` at drain) lives in the same registry a client reads
+/// through `{"op":"stats"}`, so the wire snapshot *is* the ledger.
+struct Handles {
+    accepted: Counter,
+    ok: Counter,
+    errors: Counter,
+    expired: Counter,
+    shed: Counter,
+    rejected: Counter,
+    flushes_full: Counter,
+    flushes_deadline: Counter,
+    flushes_drain: Counter,
+    recoveries: Counter,
+    pool_rebuilds: Counter,
+    degraded: Counter,
+    write_retries: Counter,
+    /// Requests waiting in the queue (updated on submit and flush).
+    queue_depth: Gauge,
+    /// Total points waiting in the queue.
+    queued_points: Gauge,
+    /// Per-`ok`-reply latency, admission to reply (ms).
+    latency_ms: Histogram,
+    /// Members per flushed group (recorded as a raw count, not ms).
+    group_size: Histogram,
 }
 
-fn bump(c: &AtomicU64) {
-    c.fetch_add(1, Ordering::Relaxed);
+impl Handles {
+    fn new(r: &Registry) -> Handles {
+        Handles {
+            accepted: r.counter("serve.accepted"),
+            ok: r.counter("serve.ok"),
+            errors: r.counter("serve.errors"),
+            expired: r.counter("serve.expired"),
+            shed: r.counter("serve.shed"),
+            rejected: r.counter("serve.rejected"),
+            flushes_full: r.counter("serve.flushes_full"),
+            flushes_deadline: r.counter("serve.flushes_deadline"),
+            flushes_drain: r.counter("serve.flushes_drain"),
+            recoveries: r.counter("serve.recoveries"),
+            pool_rebuilds: r.counter("serve.pool_rebuilds"),
+            degraded: r.counter("serve.degraded"),
+            write_retries: r.counter("serve.write_retries"),
+            queue_depth: r.gauge("serve.queue_depth"),
+            queued_points: r.gauge("serve.queued_points"),
+            latency_ms: r.histogram("serve.latency_ms"),
+            group_size: r.histogram("serve.group_size"),
+        }
+    }
 }
 
 /// One accepted request waiting for its group to flush.
@@ -237,7 +269,9 @@ pub struct Server {
     pool: Mutex<Arc<WorkerPool>>,
     state: Mutex<QueueState>,
     wake: Condvar,
-    counters: Counters,
+    /// Per-instance metric registry (snapshot via [`Server::stats_json`]).
+    metrics: Registry,
+    m: Handles,
 }
 
 impl Server {
@@ -263,9 +297,11 @@ impl Server {
                     // Satellite contract: a fresh deployment (no usable
                     // calibration profile) serves traffic on the pooled
                     // engine instead of trusting uncalibrated crossovers.
-                    eprintln!(
-                        "fmm2d serve: --engine auto without a calibration profile; \
-                         resolving to the pooled engine (run `fmm2d calibrate`)"
+                    crate::obs::log::warn(
+                        "serve",
+                        "--engine auto without a calibration profile; \
+                         resolving to the pooled engine (run `fmm2d calibrate`)",
+                        &[],
                     );
                     (Engine::Parallel, None)
                 } else {
@@ -275,6 +311,8 @@ impl Server {
             e => (e, None),
         };
         let pool = Arc::new(WorkerPool::new(threads, opts.fmm.pin));
+        let metrics = Registry::new();
+        let m = Handles::new(&metrics);
         Ok(Server {
             engine,
             dispatcher,
@@ -286,7 +324,8 @@ impl Server {
                 draining: false,
             }),
             wake: Condvar::new(),
-            counters: Counters::default(),
+            metrics,
+            m,
             opts,
         })
     }
@@ -302,12 +341,12 @@ impl Server {
     /// Count one decode-time rejection (the producer already wrote the
     /// `error` reply).
     pub fn note_rejected(&self) {
-        bump(&self.counters.rejected);
+        self.m.rejected.inc();
     }
 
     /// Count one transiently-failed-then-retried reply write.
     pub fn note_write_retry(&self) {
-        bump(&self.counters.write_retries);
+        self.m.write_retries.inc();
     }
 
     /// Admission control: accept `req` into the queue, or return the
@@ -318,7 +357,7 @@ impl Server {
         let n = req.n();
         let mut st = locked(&self.state);
         if st.draining {
-            bump(&self.counters.rejected);
+            self.m.rejected.inc();
             return Err(protocol::reply_error(
                 Some(req.id),
                 "server is draining and accepts no new requests",
@@ -327,11 +366,16 @@ impl Server {
         if st.pending.len() >= self.opts.max_queue
             || st.queued_points + n > self.opts.max_queued_points
         {
-            bump(&self.counters.shed);
+            self.m.shed.inc();
+            crate::obs::event(
+                "serve",
+                "shed",
+                &[("n", n as f64), ("queue", st.pending.len() as f64)],
+            );
             let retry = self.retry_after_ms(&st);
             return Err(protocol::reply_overloaded(req.id, retry));
         }
-        bump(&self.counters.accepted);
+        self.m.accepted.inc();
         let now = Instant::now();
         let budget = Duration::from_millis(req.deadline_ms);
         let flush_after = budget.mul_f64(self.opts.flush_fraction);
@@ -343,6 +387,13 @@ impl Server {
             deadline: now + budget,
             req,
         });
+        self.m.queue_depth.set(st.pending.len() as f64);
+        self.m.queued_points.set(st.queued_points as f64);
+        crate::obs::event(
+            "serve",
+            "enqueue",
+            &[("n", n as f64), ("queue", st.pending.len() as f64)],
+        );
         drop(st);
         self.wake.notify_all();
         Ok(())
@@ -363,23 +414,28 @@ impl Server {
 
     /// Snapshot of the run counters.
     pub fn stats(&self) -> ServeStats {
-        let c = &self.counters;
-        let get = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        let m = &self.m;
         ServeStats {
-            accepted: get(&c.accepted),
-            ok: get(&c.ok),
-            errors: get(&c.errors),
-            expired: get(&c.expired),
-            shed: get(&c.shed),
-            rejected: get(&c.rejected),
-            flushes_full: get(&c.flushes_full),
-            flushes_deadline: get(&c.flushes_deadline),
-            flushes_drain: get(&c.flushes_drain),
-            recoveries: get(&c.recoveries),
-            pool_rebuilds: get(&c.pool_rebuilds),
-            degraded: get(&c.degraded),
-            write_retries: get(&c.write_retries),
+            accepted: m.accepted.get(),
+            ok: m.ok.get(),
+            errors: m.errors.get(),
+            expired: m.expired.get(),
+            shed: m.shed.get(),
+            rejected: m.rejected.get(),
+            flushes_full: m.flushes_full.get(),
+            flushes_deadline: m.flushes_deadline.get(),
+            flushes_drain: m.flushes_drain.get(),
+            recoveries: m.recoveries.get(),
+            pool_rebuilds: m.pool_rebuilds.get(),
+            degraded: m.degraded.get(),
+            write_retries: m.write_retries.get(),
         }
+    }
+
+    /// Full registry snapshot (counters + gauges + histograms) as strict
+    /// JSON — the payload of the `{"op":"stats"}` wire reply.
+    pub fn stats_json(&self) -> Json {
+        self.metrics.snapshot()
     }
 
     /// The engine loop: block until a group is due, flush it, repeat;
@@ -466,13 +522,25 @@ impl Server {
             }
         }
         let (members, full, _) = best?;
-        if full {
-            bump(&self.counters.flushes_full);
+        let reason = if full {
+            self.m.flushes_full.inc();
+            "flush_full"
         } else if st.draining {
-            bump(&self.counters.flushes_drain);
+            self.m.flushes_drain.inc();
+            "flush_drain"
         } else {
-            bump(&self.counters.flushes_deadline);
-        }
+            self.m.flushes_deadline.inc();
+            "flush_deadline"
+        };
+        self.m.group_size.record(members.len() as f64);
+        crate::obs::event(
+            "serve",
+            reason,
+            &[
+                ("members", members.len() as f64),
+                ("queue", st.pending.len() as f64),
+            ],
+        );
         let take: std::collections::BTreeSet<usize> = members.iter().copied().collect();
         let mut group = Vec::with_capacity(take.len());
         let mut kept = Vec::with_capacity(st.pending.len() - take.len());
@@ -485,6 +553,8 @@ impl Server {
             }
         }
         st.pending = kept;
+        self.m.queue_depth.set(st.pending.len() as f64);
+        self.m.queued_points.set(st.queued_points as f64);
         Some(group)
     }
 
@@ -526,7 +596,7 @@ impl Server {
         let (live, dead): (Vec<Pending>, Vec<Pending>) =
             group.into_iter().partition(|p| now <= p.deadline);
         for p in dead {
-            bump(&self.counters.expired);
+            self.m.expired.inc();
             let waited = now.duration_since(p.arrived).as_secs_f64() * 1000.0;
             emit(&protocol::reply_expired(p.req.id, waited));
         }
@@ -536,27 +606,35 @@ impl Server {
         match self.try_eval(&live, rung) {
             Ok(replies) => {
                 for (ok, reply) in replies {
-                    bump(if ok {
-                        &self.counters.ok
+                    if ok {
+                        self.m.ok.inc();
+                        if let Some(ms) = reply.get("latency_ms").and_then(Json::as_f64) {
+                            self.m.latency_ms.record(ms);
+                        }
                     } else {
-                        &self.counters.errors
-                    });
+                        self.m.errors.inc();
+                    }
                     emit(&reply);
                 }
             }
             Err(panic_msg) => {
-                bump(&self.counters.recoveries);
+                self.m.recoveries.inc();
+                crate::obs::event("serve", "recovery", &[("members", live.len() as f64)]);
                 self.rebuild_pool();
                 if self.opts.verbose {
-                    eprintln!(
-                        "fmm2d serve: recovered from panic at rung {} ({} member(s)): {panic_msg}",
-                        rung.label(),
-                        live.len()
+                    crate::obs::log::info(
+                        "serve",
+                        "recovered from panic",
+                        &[
+                            ("rung", rung.label().to_string()),
+                            ("members", live.len().to_string()),
+                            ("panic", panic_msg.clone()),
+                        ],
                     );
                 }
                 let next = rung.next().unwrap_or(Rung::Serial);
                 if next != rung {
-                    bump(&self.counters.degraded);
+                    self.m.degraded.inc();
                 }
                 if live.len() > 1 {
                     // Split to isolate the hostile member: both halves
@@ -572,7 +650,7 @@ impl Server {
                     // A single member still panicking on the serial rung:
                     // this request is the fault. Answer it and move on.
                     for p in live {
-                        bump(&self.counters.errors);
+                        self.m.errors.inc();
                         emit(&protocol::reply_error(
                             Some(p.req.id),
                             &format!("evaluation panicked at every engine rung: {panic_msg}"),
@@ -595,6 +673,9 @@ impl Server {
         rung: Rung,
     ) -> std::result::Result<Vec<(bool, Json)>, String> {
         let pool = locked(&self.pool).clone();
+        let _sp = crate::obs::span("serve", "evaluate")
+            .arg("members", group.len() as f64)
+            .arg("workers", rung.workers() as f64);
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             // Deterministic fault injection for the chaos suite: a crash
             // in the serve dispatch path itself (`failpoints` builds only).
@@ -651,7 +732,7 @@ impl Server {
     /// the same width. Queued requests and the queue itself are untouched
     /// — only the compute substrate is replaced.
     fn rebuild_pool(&self) {
-        bump(&self.counters.pool_rebuilds);
+        self.m.pool_rebuilds.inc();
         let fresh = Arc::new(WorkerPool::new(self.threads, self.opts.fmm.pin));
         *locked(&self.pool) = fresh;
     }

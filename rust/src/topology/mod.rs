@@ -158,16 +158,22 @@ pub fn build(
     let nt = opts.effective_threads();
     let pool = if nt > 1 { opts.pool.as_deref() } else { None };
     let t = Instant::now();
+    let sp = crate::obs::span("phase", "Sort")
+        .arg("n", points.len() as f64)
+        .arg("threads", nt as f64);
     let pyramid = match pool {
         Some(p) => Pyramid::build_on_pool(points, gammas, levels, opts.partition, nt, p)?,
         None => Pyramid::build_threaded(points, gammas, levels, opts.partition, nt)?,
     };
+    drop(sp);
     let sort_s = t.elapsed().as_secs_f64();
     let t = Instant::now();
+    let sp = crate::obs::span("phase", "Connect").arg("theta", opts.theta);
     let connectivity = match pool {
         Some(p) => Connectivity::build_on_pool(&pyramid, opts.theta, nt, p),
         None => Connectivity::build_threaded(&pyramid, opts.theta, nt),
     };
+    drop(sp);
     let connect_s = t.elapsed().as_secs_f64();
     // Debug builds run the structural validators on every topology, so the
     // whole debug test suite (the parity suites above all) doubles as

@@ -111,6 +111,7 @@ impl Pyramid {
         levels: usize,
         engine: PartitionEngine,
     ) -> Result<Self> {
+        let _sp = crate::obs::span("topo", "pyramid");
         let (mut particles, root) = Self::validated_particles(points, gammas, levels)?;
         let mut rects: Vec<Vec<Rect>> = vec![vec![root]];
         let mut stats = SortStats::default();
@@ -203,6 +204,7 @@ impl Pyramid {
         if threads <= 1 {
             return Self::build_with(points, gammas, levels, engine);
         }
+        let _sp = crate::obs::span("topo", "pyramid").arg("threads", threads as f64);
         let (mut particles, root) = Self::validated_particles(points, gammas, levels)?;
         let mut rects: Vec<Vec<Rect>> = vec![vec![root]];
         let mut stats = SortStats::default();

@@ -103,10 +103,14 @@ impl Args {
         }
     }
 
-    /// Error out if any provided `--option` is not in `known` (flags included).
+    /// Error out if any provided `--option` is not in `known` (flags
+    /// included). The cross-cutting observability options — `--trace FILE`
+    /// (flight-recorder Chrome trace) and `--log-level L` — are handled
+    /// centrally by `main` and accepted by every subcommand.
     pub fn check_known(&self, known: &[&str]) -> crate::util::error::Result<()> {
+        const GLOBAL: [&str; 2] = ["trace", "log-level"];
         for k in self.opts.keys().chain(self.flags.iter()) {
-            if !known.contains(&k.as_str()) {
+            if !known.contains(&k.as_str()) && !GLOBAL.contains(&k.as_str()) {
                 crate::bail!("unknown option --{k}; known: {}", known.join(", "));
             }
         }
@@ -148,6 +152,9 @@ mod tests {
         assert!(a.check_known(&["n", "p"]).is_err());
         let b = Args::parse(&sv(&["--n", "1"])).unwrap();
         assert!(b.check_known(&["n"]).is_ok());
+        // the global observability options pass every subcommand's check
+        let c = Args::parse(&sv(&["--trace", "t.json", "--log-level", "debug"])).unwrap();
+        assert!(c.check_known(&["n"]).is_ok());
     }
 
     #[test]

@@ -539,6 +539,7 @@ fn worker_loop(shared: &Shared, id: usize, pin: bool) {
         };
         // A panicking task must not wedge the pool: catch it, finish the
         // epoch, and let the submitting caller re-raise.
+        let sp = crate::obs::span("worker", "job");
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             // Deterministic fault injection for the serve chaos suite: a
             // worker dying mid-task (`failpoints` builds only). Inside the
@@ -553,6 +554,7 @@ fn worker_loop(shared: &Shared, id: usize, pin: bool) {
             // trampoline.
             unsafe { (job.call)(job.data, id, &mut scratch) }
         }));
+        drop(sp);
         let mut st = shared.state.lock().unwrap();
         if let Err(p) = result {
             st.panicked += 1;

@@ -45,6 +45,7 @@
 
 use std::collections::VecDeque;
 use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 
 use crate::util::pool::{WorkerPool, WorkerScratch};
@@ -120,6 +121,24 @@ impl<'g> Graph<'g> {
         if n == 0 {
             return;
         }
+        // Flight-recorder support (zero cost unless tracing is armed): keep
+        // the dependency lists, time each task, and reduce to the graph's
+        // critical path afterwards. The tracing decision is latched here so
+        // a mid-run toggle cannot tear the bookkeeping.
+        let tracing = crate::obs::enabled();
+        let dep_lists: Vec<Vec<usize>> = if tracing {
+            self.nodes.iter().map(|nd| nd.deps.clone()).collect()
+        } else {
+            Vec::new()
+        };
+        let n_tasks = self.n_tasks();
+        let t_run = tracing.then(std::time::Instant::now);
+        // Per node: the longest single task (ns) — with unbounded workers a
+        // node completes after its slowest task, so these are the critical
+        // path's node weights.
+        let node_max_v: Vec<AtomicU64> = (0..if tracing { n } else { 0 })
+            .map(|_| AtomicU64::new(0))
+            .collect();
         let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
         let mut pending = vec![0usize; n];
         for (i, nd) in self.nodes.iter().enumerate() {
@@ -154,9 +173,33 @@ impl<'g> Graph<'g> {
         let sync = (Mutex::new(st), Condvar::new());
         let width = width.max(1);
         let (slots, succs, sync) = (&slots, &succs, &sync);
+        let node_max: &[AtomicU64] = &node_max_v;
         pool.run_tasks((0..width).collect::<Vec<usize>>(), move |w, _t, ws| {
-            drain(slots, succs, sync, jitter.map(|j| j.for_worker(w)), ws);
+            drain(slots, succs, sync, node_max, jitter.map(|j| j.for_worker(w)), ws);
         });
+        if let Some(t0) = t_run {
+            let wall = t0.elapsed().as_secs_f64();
+            // Longest path through the DAG: dependencies always precede
+            // their dependents in index order (enforced by `node`), so one
+            // forward sweep computes every earliest finish.
+            let mut ef = vec![0u64; n];
+            let mut cp = 0u64;
+            for i in 0..n {
+                let start = dep_lists[i].iter().map(|&d| ef[d]).max().unwrap_or(0);
+                ef[i] = start.saturating_add(node_max_v[i].load(Ordering::Relaxed));
+                cp = cp.max(ef[i]);
+            }
+            crate::obs::event(
+                "taskgraph",
+                "critical_path",
+                &[
+                    ("critical_path_s", cp as f64 * 1e-9),
+                    ("wall_s", wall),
+                    ("nodes", n as f64),
+                    ("tasks", n_tasks as f64),
+                ],
+            );
+        }
     }
 }
 
@@ -207,6 +250,7 @@ fn drain<'g>(
     slots: &[Vec<Mutex<Option<Task<'g>>>>],
     succs: &[Vec<usize>],
     sync: &Sync_<'g>,
+    node_max: &[AtomicU64],
     mut jitter: Option<JitterState>,
     ws: &mut WorkerScratch,
 ) {
@@ -235,7 +279,11 @@ fn drain<'g>(
         // A panicking task must not leave the other drain loops waiting on
         // a node that will never complete: poison the run, wake everyone,
         // re-raise (the pool forwards the payload to the caller).
+        let t_task = (!node_max.is_empty()).then(std::time::Instant::now);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(ws)));
+        if let Some(t0) = t_task {
+            node_max[i].fetch_max(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
         let mut st = mx.lock().unwrap();
         match result {
             Ok(()) => {

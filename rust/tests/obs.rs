@@ -1,0 +1,277 @@
+//! Integration suite of the flight recorder (`obs`, DESIGN.md §12).
+//!
+//! The recorder's headline contract is *invisibility*: instrumentation
+//! must never change what the engines compute. The first test pins that
+//! at full strength — bitwise-identical potentials with tracing on and
+//! off across the serial, pooled and task-graph engines. The rest pins
+//! the observable surface: ring wraparound drops oldest-first with an
+//! exact casualty count, the Chrome export round-trips through the strict
+//! in-tree JSON parser with sane timestamps and feeds `trace-report`, the
+//! span ledger agrees with the task-graph engine's own `OverlapStats`,
+//! and the serve daemon answers the `{"op":"stats"}` wire request with a
+//! registry snapshot that reconciles with the reply stream.
+//!
+//! The recorder is process-global, so every test serializes its
+//! enable/disable window behind one mutex (same discipline as the unit
+//! tests in `src/obs/mod.rs`).
+
+use std::io::Cursor;
+use std::sync::{Mutex, MutexGuard};
+
+use fmm2d::complex::C64;
+use fmm2d::config::FmmConfig;
+use fmm2d::connectivity::Connectivity;
+use fmm2d::fmm::parallel::evaluate_on_tree_pool;
+use fmm2d::fmm::taskgraph::evaluate_on_tree_taskgraph_stats;
+use fmm2d::fmm::{self, FmmOptions};
+use fmm2d::obs;
+use fmm2d::serve::{serve_lines, ServeOptions, ServeOutcome};
+use fmm2d::tree::Pyramid;
+use fmm2d::util::json::Json;
+use fmm2d::util::pool::WorkerPool;
+use fmm2d::util::rng::Pcg64;
+use fmm2d::workload;
+
+fn lock() -> MutexGuard<'static, ()> {
+    static T: Mutex<()> = Mutex::new(());
+    T.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+struct Case {
+    pyr: Pyramid,
+    con: Connectivity,
+}
+
+fn case() -> Case {
+    let mut r = Pcg64::seed_from_u64(41);
+    let (pts, gs) = workload::uniform_square(2_000, &mut r);
+    let pyr = Pyramid::build(&pts, &gs, 3).expect("3 levels fit 2000 points");
+    let con = Connectivity::build(&pyr, 0.5);
+    Case { pyr, con }
+}
+
+fn opts(threads: usize) -> FmmOptions {
+    FmmOptions {
+        cfg: FmmConfig {
+            p: 8,
+            levels_override: Some(3),
+            ..FmmConfig::default()
+        },
+        threads: Some(threads),
+        ..FmmOptions::default()
+    }
+}
+
+fn assert_bitwise(a: &[C64], b: &[C64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.re.to_bits(), y.re.to_bits(), "{what}: re diverged at {i}");
+        assert_eq!(x.im.to_bits(), y.im.to_bits(), "{what}: im diverged at {i}");
+    }
+}
+
+/// Tracing must be *invisible*: the recorder only observes timestamps,
+/// so every engine's potentials are bitwise-identical with the recorder
+/// armed and disarmed.
+#[test]
+fn tracing_does_not_change_any_engine_output() {
+    let _g = lock();
+    let c = case();
+    let pool = WorkerPool::new(2, false);
+    let o = opts(2);
+
+    obs::disable();
+    let serial_off = fmm::evaluate_on_tree_serial(&c.pyr, &c.con, &o).0;
+    let pooled_off = evaluate_on_tree_pool(&c.pyr, &c.con, &o, &pool).0;
+    let tg_off = evaluate_on_tree_taskgraph_stats(&c.pyr, &c.con, &o, &pool, None).0;
+
+    obs::enable(&obs::ObsOptions::default());
+    let serial_on = fmm::evaluate_on_tree_serial(&c.pyr, &c.con, &o).0;
+    let pooled_on = evaluate_on_tree_pool(&c.pyr, &c.con, &o, &pool).0;
+    let tg_on = evaluate_on_tree_taskgraph_stats(&c.pyr, &c.con, &o, &pool, None).0;
+    obs::disable();
+    let tr = obs::drain();
+
+    assert_bitwise(&serial_off, &serial_on, "serial");
+    assert_bitwise(&pooled_off, &pooled_on, "pooled");
+    assert_bitwise(&tg_off, &tg_on, "taskgraph");
+
+    // and the armed window actually recorded the engines running
+    assert!(
+        tr.spans.iter().any(|s| s.cat == "phase" && s.name == "P2P"),
+        "barrier engines record phase spans"
+    );
+    assert!(
+        tr.spans.iter().any(|s| s.cat == "task"),
+        "task-graph engine records task spans"
+    );
+    assert!(
+        tr.spans.iter().any(|s| s.cat == "worker"),
+        "worker pool records occupancy spans"
+    );
+}
+
+/// A full ring overwrites oldest-first and counts every casualty.
+#[test]
+fn ring_wraparound_drops_oldest_and_counts() {
+    let _g = lock();
+    obs::enable(&obs::ObsOptions { capacity: 8 });
+    for i in 0..20 {
+        obs::event("wraptest", "seq", &[("i", i as f64)]);
+    }
+    obs::disable();
+    let tr = obs::drain();
+    let seqs: Vec<f64> = tr
+        .spans
+        .iter()
+        .filter(|s| s.cat == "wraptest")
+        .map(|s| s.args[0].1)
+        .collect();
+    let want: Vec<f64> = (12..20).map(|i| i as f64).collect();
+    assert_eq!(seqs, want, "newest 8 survive, in chronological order");
+    assert!(tr.dropped >= 12, "dropped {} < 12", tr.dropped);
+}
+
+/// A traced task-graph run exports as strict Chrome trace-event JSON —
+/// parseable by the in-tree parser, timestamps non-negative and sorted —
+/// and `trace-report` renders per-phase, occupancy and critical-path
+/// sections from the file.
+#[test]
+fn chrome_export_roundtrips_and_feeds_trace_report() {
+    let _g = lock();
+    let c = case();
+    let pool = WorkerPool::new(2, false);
+
+    obs::enable(&obs::ObsOptions::default());
+    let _ = evaluate_on_tree_taskgraph_stats(&c.pyr, &c.con, &opts(2), &pool, None);
+    obs::disable();
+
+    let path = std::env::temp_dir().join(format!("fmm2d-obs-test-{}.json", std::process::id()));
+    let trace = obs::write_chrome_file(&path).expect("trace written");
+    assert!(!trace.spans.is_empty(), "traced run produced spans");
+
+    // round-trip through the strict parser with sane timestamps
+    let text = std::fs::read_to_string(&path).unwrap();
+    let back = Json::parse(&text).expect("strict JSON");
+    let events = back.get("traceEvents").and_then(Json::as_arr).unwrap();
+    let mut last_ts = -1.0;
+    let mut complete = 0usize;
+    for e in events {
+        if e.get("ph").and_then(Json::as_str) == Some("X") {
+            let ts = e.get("ts").and_then(Json::as_f64).unwrap();
+            let dur = e.get("dur").and_then(Json::as_f64).unwrap();
+            assert!(ts >= 0.0 && dur >= 0.0, "non-negative timestamps");
+            assert!(ts >= last_ts, "X events sorted by ts");
+            last_ts = ts;
+            complete += 1;
+        }
+    }
+    assert_eq!(complete, trace.spans.len(), "one X event per span");
+
+    // the report renders the sections the issue promises
+    let report = fmm2d::obs::report::render_file(&path).expect("report renders");
+    assert!(report.contains("task-graph tasks"), "{report}");
+    assert!(report.contains("worker occupancy"), "{report}");
+    assert!(report.contains("critical path"), "{report}");
+    assert!(report.contains("mean busy workers"), "{report}");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The span ledger and the task-graph engine's own `OverlapStats` measure
+/// the same busy time: Σ task-span durations ≈ `busy_s` (they bracket the
+/// same intervals, so they agree within recording overhead).
+#[test]
+fn task_spans_agree_with_overlap_stats() {
+    let _g = lock();
+    let c = case();
+    let pool = WorkerPool::new(2, false);
+
+    obs::enable(&obs::ObsOptions::default());
+    let (_, _, _, stats) = evaluate_on_tree_taskgraph_stats(&c.pyr, &c.con, &opts(2), &pool, None);
+    obs::disable();
+    let tr = obs::drain();
+
+    let busy = obs::busy_seconds(&tr.spans, "task");
+    assert!(stats.busy_s > 0.0 && busy > 0.0, "both ledgers saw work");
+    let tol = (0.10 * stats.busy_s).max(0.010);
+    assert!(
+        (busy - stats.busy_s).abs() <= tol,
+        "span busy {busy:.6}s vs OverlapStats busy {:.6}s (tol {tol:.6}s)",
+        stats.busy_s
+    );
+}
+
+/// Run one full serve session over an in-memory transport.
+fn run_session(input: &str) -> (Vec<Json>, ServeOutcome) {
+    let opts = ServeOptions {
+        fmm: FmmOptions {
+            threads: Some(2),
+            ..FmmOptions::default()
+        },
+        ..ServeOptions::default()
+    };
+    let mut out: Vec<u8> = Vec::new();
+    let outcome = serve_lines(Cursor::new(input.to_string()), &mut out, opts).unwrap();
+    let replies = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Json::parse(l).unwrap())
+        .collect();
+    (replies, outcome)
+}
+
+/// The daemon answers `{"op":"stats"}` inline with a registry snapshot
+/// whose admission counters reconcile exactly with the reply stream, and
+/// rejects the op when it smuggles extra fields.
+#[test]
+fn serve_answers_the_stats_op_and_counters_reconcile() {
+    let _g = lock();
+    let input = concat!(
+        "{\"id\":1,\"n\":300,\"seed\":5}\n",
+        "{\"id\":2,\"n\":400,\"seed\":6}\n",
+        "{\"op\":\"stats\"}\n",
+        "{\"op\":\"stats\",\"id\":9}\n", // op takes no other fields
+    );
+    let (replies, outcome) = run_session(input);
+    assert_eq!(replies.len(), 4, "{replies:?}");
+    assert_eq!(outcome.stats.ok, 2);
+
+    let stats = replies
+        .iter()
+        .find(|r| r.get("status").and_then(Json::as_str) == Some("stats"))
+        .expect("stats reply present");
+    let counter = |name: &str| -> f64 {
+        stats
+            .get("stats")
+            .and_then(|s| s.get("counters"))
+            .and_then(|c| c.get(&format!("serve.{name}")))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
+    // the reader admits eval lines in order before answering the op, so
+    // admission counters are exact at snapshot time; completions may
+    // still be in flight, so `ok` is bounded, not pinned
+    assert_eq!(counter("accepted") + counter("shed"), 2.0);
+    assert_eq!(counter("shed"), 0.0);
+    assert!(counter("ok") <= 2.0);
+    assert!(
+        stats
+            .get("stats")
+            .and_then(|s| s.get("histograms"))
+            .is_some(),
+        "snapshot carries histogram section: {stats:?}"
+    );
+
+    let err = replies
+        .iter()
+        .find(|r| r.get("status").and_then(Json::as_str) == Some("error"))
+        .expect("malformed op gets an error reply");
+    assert_eq!(
+        err.get("id").and_then(Json::as_f64),
+        Some(9.0),
+        "id salvaged from the bad op line: {err:?}"
+    );
+    assert_eq!(outcome.stats.rejected, 1, "bad op rejected at decode time");
+    assert_eq!(outcome.stats.errors, 0);
+}

@@ -1,0 +1,25 @@
+// Planted violations for the `no-adhoc-log` lint: raw stderr prints in a
+// production module. Two before #[cfg(test)], one inside it (the in-test
+// one must NOT be flagged). (Fixture — never compiled.)
+
+pub fn load_profile(path: &str) -> Option<Profile> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        eprintln!("warning: could not read {path}");
+        return None;
+    };
+    match Profile::parse(&text) {
+        Ok(p) => Some(p),
+        Err(e) => {
+            eprintln!("warning: malformed profile {path}: {e}");
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn debug_prints_are_fine_in_tests() {
+        eprintln!("tests may print freely");
+    }
+}

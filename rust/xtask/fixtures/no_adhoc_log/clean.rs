@@ -1,0 +1,19 @@
+// Clean twin of no_adhoc_log/bad.rs: the same diagnostics expressed via
+// the leveled structured logger. A string or comment mentioning eprintln!
+// must not trip the lint either. (Fixture — never compiled.)
+
+pub fn load_profile(path: &str) -> Option<Profile> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        // the logger is the sanctioned stderr channel, not eprintln!
+        crate::obs::log::warn("profile", "could not read file", &[("path", path.to_string())]);
+        return None;
+    };
+    match Profile::parse(&text) {
+        Ok(p) => Some(p),
+        Err(e) => {
+            let msg = "do not reach for eprintln! here";
+            crate::obs::log::warn("profile", msg, &[("error", e.to_string())]);
+            None
+        }
+    }
+}

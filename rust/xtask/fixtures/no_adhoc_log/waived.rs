@@ -1,0 +1,12 @@
+// Waiver demonstration: deliberate raw stderr prints carrying the
+// documented waiver syntax, both preceding-comment and same-line forms.
+// (Fixture — never compiled.)
+
+pub fn report_fatal(msg: &str) {
+    // xtask: allow(no-adhoc-log) — fatal path runs before the logger exists
+    eprintln!("fatal: {msg}");
+}
+
+pub fn banner() {
+    eprintln!("fmm2d starting"); // xtask: allow(no-adhoc-log) — fixture same-line form
+}

@@ -1,6 +1,6 @@
 //! The repo-specific lint catalog (see DESIGN.md §8).
 //!
-//! Five lints, each enforcing an invariant the codebase promises
+//! Six lints, each enforcing an invariant the codebase promises
 //! informally and the test suite checks only by example:
 //!
 //! * `no-spawn` — no `thread::spawn` / `thread::scope` / `thread::Builder`
@@ -16,7 +16,10 @@
 //!   reproducibility requires the explicit worker-order `merge` loops;
 //! * `no-new-deps` — the `[dependencies]` sections of every manifest stay
 //!   empty except the in-tree optional `xla` stub; `dev-`/`build-`
-//!   dependencies are denied everywhere.
+//!   dependencies are denied everywhere;
+//! * `no-adhoc-log` — no raw `eprintln!` in `src/` outside `obs/` and
+//!   `main.rs`, outside `#[cfg(test)]` (diagnostics go through the
+//!   leveled `crate::obs::log` facility so `--log-level` governs them).
 //!
 //! Waiver syntax (same line or in the comment/attribute block immediately
 //! above the flagged line):
@@ -61,6 +64,12 @@ const NO_PANIC_DIRS: [&str; 4] = [
     "rust/src/dispatch/",
     "rust/src/serve/",
 ];
+/// Locations where a raw `eprintln!` is sanctioned: the logging facility
+/// itself (its single sink) and `main.rs` (usage text, fatal-error exit,
+/// and the post-run trace summary — all emitted before/after the logger's
+/// jurisdiction). Everything else routes stderr through `crate::obs::log`.
+const ADHOC_LOG_ALLOW_DIR: &str = "rust/src/obs/";
+const ADHOC_LOG_ALLOW_FILE: &str = "rust/src/main.rs";
 /// Parallel-engine files where iterator float reductions are denied.
 const FLOAT_REDUCTION_FILES: [&str; 7] = [
     "rust/src/fmm/parallel.rs",
@@ -131,13 +140,14 @@ fn test_section_start(lines: &[Line]) -> usize {
         .unwrap_or(lines.len())
 }
 
-/// Run the four source lints over one lexed `.rs` file.
+/// Run the five source lints over one lexed `.rs` file.
 pub fn lint_source(rel: &str, lines: &[Line]) -> Vec<Finding> {
     let mut out = Vec::new();
     let spawn_allowed = SPAWN_ALLOWLIST.iter().any(|f| rel == *f);
     let unsafe_allowed = UNSAFE_ALLOWLIST.iter().any(|f| rel == *f);
     let panic_scoped = NO_PANIC_DIRS.iter().any(|d| rel.starts_with(d));
     let float_scoped = FLOAT_REDUCTION_FILES.iter().any(|f| rel == *f);
+    let log_allowed = rel.starts_with(ADHOC_LOG_ALLOW_DIR) || rel == ADHOC_LOG_ALLOW_FILE;
     let tests_from = test_section_start(lines);
 
     for (i, l) in lines.iter().enumerate() {
@@ -208,6 +218,21 @@ pub fn lint_source(rel: &str, lines: &[Line]) -> Vec<Finding> {
                     break;
                 }
             }
+        }
+
+        // no-adhoc-log (everywhere outside obs/ and main.rs, outside tests)
+        if !log_allowed && i < tests_from && code.contains("eprintln!")
+            && !waived(lines, i, "no-adhoc-log")
+        {
+            out.push(Finding {
+                lint: "no-adhoc-log",
+                file: rel.to_string(),
+                line: lineno,
+                message: "raw `eprintln!` outside obs/ and main.rs — route \
+                          diagnostics through the leveled structured logger \
+                          (`crate::obs::log::{error,warn,info,debug}`)"
+                    .to_string(),
+            });
         }
 
         // float-reduction (parallel-engine files)
@@ -476,6 +501,43 @@ mod tests {
         let src = include_str!("../fixtures/float_reduction/bad.rs");
         let f = lint_source("rust/src/harness/fixture.rs", &lex(src));
         assert!(!lints_of(&f).contains(&"float-reduction"), "{f:?}");
+    }
+
+    // -- no-adhoc-log -----------------------------------------------------
+
+    #[test]
+    fn no_adhoc_log_flags_bad_fixture_outside_tests_only() {
+        let src = include_str!("../fixtures/no_adhoc_log/bad.rs");
+        let f = lint_source("rust/src/harness/fixture.rs", &lex(src));
+        // two planted violations before #[cfg(test)], none after
+        assert_eq!(
+            f.iter().filter(|f| f.lint == "no-adhoc-log").count(),
+            2,
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn no_adhoc_log_passes_clean_fixture() {
+        let src = include_str!("../fixtures/no_adhoc_log/clean.rs");
+        let f = lint_source("rust/src/harness/fixture.rs", &lex(src));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn no_adhoc_log_honours_waivers() {
+        let src = include_str!("../fixtures/no_adhoc_log/waived.rs");
+        let f = lint_source("rust/src/harness/fixture.rs", &lex(src));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn no_adhoc_log_allowlists_obs_and_main() {
+        let src = include_str!("../fixtures/no_adhoc_log/bad.rs");
+        for rel in ["rust/src/obs/log.rs", "rust/src/main.rs"] {
+            let f = lint_source(rel, &lex(src));
+            assert!(!lints_of(&f).contains(&"no-adhoc-log"), "{rel}: {f:?}");
+        }
     }
 
     // -- no-new-deps ------------------------------------------------------
